@@ -1,0 +1,16 @@
+//! Bench: Fig. 12 (multi-core vs single-core) and Fig. 13 (octa-core
+//! extension speed-ups), plus Fig. 15/16 (power & efficiency).
+
+use std::time::Instant;
+
+fn main() {
+    for (name, f) in [
+        ("figure12", snitch_sim::coordinator::figure12 as fn() -> String),
+        ("figure13", || snitch_sim::coordinator::figure_speedups(8)),
+        ("figure15_16", snitch_sim::coordinator::figure15_16),
+    ] {
+        let t = Instant::now();
+        println!("{}", f());
+        println!("[bench] {name}: {:.2}s\n", t.elapsed().as_secs_f64());
+    }
+}

@@ -1,0 +1,9 @@
+//! Bench: Fig. 9 — single-core speed-ups for every kernel × variant.
+
+use std::time::Instant;
+
+fn main() {
+    let t = Instant::now();
+    println!("{}", snitch_sim::coordinator::figure_speedups(1));
+    println!("[bench] fig9: {:.2}s", t.elapsed().as_secs_f64());
+}

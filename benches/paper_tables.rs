@@ -1,0 +1,21 @@
+//! Bench: regenerate Table 1 (utilizations) and Table 4 (figures of
+//! merit) end-to-end, reporting wall-clock per table. `cargo bench`
+//! prints the same rows the paper reports.
+
+use std::time::Instant;
+
+fn main() {
+    for (name, f) in [
+        ("table1", snitch_sim::coordinator::table1 as fn() -> String),
+        ("table4", snitch_sim::coordinator::table4),
+        ("figure1", snitch_sim::coordinator::figure1),
+        ("figure10", snitch_sim::coordinator::figure10),
+        ("figure11", snitch_sim::coordinator::figure11),
+        ("figure14", snitch_sim::coordinator::figure14),
+    ] {
+        let t = Instant::now();
+        let out = f();
+        println!("{out}");
+        println!("[bench] {name}: {:.2}s\n", t.elapsed().as_secs_f64());
+    }
+}

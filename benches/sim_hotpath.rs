@@ -1,0 +1,33 @@
+//! Bench: simulator hot-path throughput (Mcycles/s of simulated time) —
+//! the metric the §Perf optimization pass tracks.
+
+use std::time::Instant;
+
+use snitch_sim::kernels::{self, Params, Variant};
+
+fn main() {
+    for (name, v, n, cores) in [
+        ("dgemm/frep/8c", Variant::SsrFrep, 64usize, 8usize),
+        ("dgemm/base/8c", Variant::Baseline, 64, 8),
+        ("fft/frep/8c", Variant::SsrFrep, 1024, 8),
+        ("montecarlo/frep/8c", Variant::SsrFrep, 8192, 8),
+    ] {
+        let k = kernels::kernel_by_name(name.split('/').next().unwrap()).unwrap();
+        let t = Instant::now();
+        let mut sim_cycles = 0u64;
+        let mut host_cycles = 0u64;
+        let reps = 5;
+        for _ in 0..reps {
+            let r = kernels::run_kernel(k, v, &Params::new(n, cores)).unwrap();
+            sim_cycles += r.stats.cycles;
+            host_cycles += 1;
+        }
+        let dt = t.elapsed().as_secs_f64();
+        let _ = host_cycles;
+        println!(
+            "[bench] {name}: {:.2} Msimcycles/s ({} sim cycles x{reps} in {dt:.2}s)",
+            sim_cycles as f64 / dt / 1e6,
+            sim_cycles / reps
+        );
+    }
+}

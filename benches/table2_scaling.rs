@@ -1,0 +1,9 @@
+//! Bench: Table 2 — DGEMM 32×32 scaling from 1 to 32 cores.
+
+use std::time::Instant;
+
+fn main() {
+    let t = Instant::now();
+    println!("{}", snitch_sim::coordinator::table2());
+    println!("[bench] table2: {:.2}s", t.elapsed().as_secs_f64());
+}

@@ -1,0 +1,10 @@
+//! Bench: Table 3 — Snitch vs the vector-lane model vs published
+//! Ara/Hwacha numbers on DGEMM.
+
+use std::time::Instant;
+
+fn main() {
+    let t = Instant::now();
+    println!("{}", snitch_sim::coordinator::table3());
+    println!("[bench] table3: {:.2}s", t.elapsed().as_secs_f64());
+}

@@ -1,0 +1,13 @@
+//! Full energy/area report: Figs. 10, 11, 14, 15/16 from the calibrated
+//! models over simulated event counts.
+//!
+//! Run with: `cargo run --release --example energy_report`
+
+use snitch_sim::coordinator;
+
+fn main() {
+    println!("{}", coordinator::figure10());
+    println!("{}", coordinator::figure11());
+    println!("{}", coordinator::figure14());
+    println!("{}", coordinator::figure15_16());
+}

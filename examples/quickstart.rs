@@ -1,0 +1,30 @@
+//! Quickstart: the paper's running example (Fig. 6) — a dot product in
+//! all three variants on one Snitch core, with the dual-issue trace.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use snitch_sim::coordinator;
+use snitch_sim::kernels::{self, Params, Variant};
+
+fn main() {
+    println!("=== Snitch quickstart: dot product, n = 256, 1 core ===\n");
+    let k = kernels::kernel_by_name("dot").unwrap();
+    let mut base = 0u64;
+    for v in [Variant::Baseline, Variant::Ssr, Variant::SsrFrep] {
+        let r = kernels::run_kernel(k, v, &Params::new(256, 1)).unwrap();
+        if v == Variant::Baseline {
+            base = r.cycles;
+        }
+        let (fpu, fpss, snitch, ipc) = r.stats.region_utils();
+        println!(
+            "{:10} {:6} cycles  speed-up {:.2}x  FPU {fpu:.2} FPSS {fpss:.2} Snitch {snitch:.2} IPC {ipc:.2}  (max err {:.1e})",
+            v.label(),
+            r.cycles,
+            base as f64 / r.cycles as f64,
+            r.max_err
+        );
+    }
+    println!("\npaper (Fig. 6): SSR 2x, SSR+FREP 6x.\n");
+    // Fig. 6(f)-style pseudo-dual-issue trace.
+    println!("{}", coordinator::trace_kernel("dot", Variant::SsrFrep, 32));
+}

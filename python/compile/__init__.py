@@ -1,0 +1,10 @@
+"""Build-time compile package: L1 Pallas kernels, L2 JAX golden models,
+and the AOT lowering to HLO text. Never imported at simulation time.
+
+The Snitch system is a double-precision machine: enable x64 before any
+jax import user code runs.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,69 @@
+"""AOT lowering: jax golden models -> HLO *text* artifacts for the rust
+PJRT runtime.
+
+HLO text (not `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids, which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage: python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F64 = jnp.float64
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F64)
+
+
+def artifacts():
+    """(name, fn, example-arg specs) for every golden model the rust
+    harness validates against. Shapes match the benchmark defaults."""
+    out = []
+    for n in (256, 1024, 4096):
+        out.append((f"dot_n{n}", model.dot, (spec(n), spec(n))))
+        out.append((f"relu_n{n}", model.relu, (spec(n),)))
+        out.append((f"axpy_n{n}", model.axpy, (spec(1), spec(n), spec(n))))
+    for n in (16, 32, 64, 128):
+        out.append((f"dgemm_n{n}", model.dgemm, (spec(n, n), spec(n, n))))
+    for n in (16, 32):
+        out.append((f"conv2d_n{n}", model.conv2d, (spec(n, n), spec(7, 7))))
+    for n in (64, 256, 1024):
+        out.append((f"knn_n{n}", model.knn, (spec(n, 4), spec(4))))
+        out.append((f"fft_n{n}", model.fft, (spec(2 * n),)))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    for name, fn, specs in artifacts():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""L1 Pallas kernel: valid 2-D convolution (7×7 taps, the paper's LeNet
+first-layer configuration).
+
+Hardware adaptation: Snitch expresses the 4-D (kx, ky, ox, oy) access
+pattern as one SSR stream; on TPU the same schedule becomes a grid over
+output row-blocks whose `BlockSpec` stages a (block+6) × W image slab in
+VMEM, with the 49-tap reduction unrolled as shifted slab multiplies that
+map onto the VPU/MXU. `interpret=True` for CPU-PJRT execution.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+KDIM = 7
+
+
+def _conv_kernel(img_ref, w_ref, o_ref, *, ow):
+    """One block of output rows: unrolled shifted multiply-accumulate over
+    the 49 taps (data-oblivious, like the FREP body)."""
+    oh = o_ref.shape[0]
+    acc = jnp.zeros((oh, ow), img_ref.dtype)
+    for ky in range(KDIM):
+        for kx in range(KDIM):
+            acc += img_ref[ky : ky + oh, kx : kx + ow] * w_ref[ky, kx]
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def conv2d(img, w, *, block=0):
+    """Valid conv of an n×n image with a 7×7 kernel → (n-6)×(n-6)."""
+    n = img.shape[0]
+    oh = n - (KDIM - 1)
+    ow = img.shape[1] - (KDIM - 1)
+    # Overlapping (halo) input slabs cannot be expressed with a plain
+    # BlockSpec index map, so the whole image slab stages into VMEM at
+    # once — at the paper's 32×32 image this is 8 KiB, far below any VMEM
+    # budget. (`block` is kept for future true-TPU halo tiling via
+    # dynamic slices.)
+    block = oh
+    grid = (oh // block,)
+    return pl.pallas_call(
+        functools.partial(_conv_kernel, ow=ow),
+        grid=grid,
+        in_specs=[
+            # A (block + 6)-row slab of the image per output row-block.
+            pl.BlockSpec((block + KDIM - 1, img.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec((KDIM, KDIM), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, ow), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((oh, ow), img.dtype),
+        interpret=True,
+    )(img, w)

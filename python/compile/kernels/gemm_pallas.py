@@ -1,0 +1,51 @@
+"""L1 Pallas kernel: tiled double-precision matrix multiply.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the Snitch paper
+blocks its DGEMM into TCDM-resident tiles walked by SSR streams; the
+TPU-idiomatic equivalent is a `BlockSpec` grid that stages (bm × bk) and
+(bk × bn) tiles through VMEM and accumulates through the MXU-shaped
+`jnp.dot`. `interpret=True` everywhere — the CPU PJRT plugin cannot run
+Mosaic custom calls; real-TPU performance is estimated from the VMEM
+footprint in DESIGN.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One (bm, bn) output tile; k is the innermost grid axis and the
+    output block index map ignores it, so o_ref is revisited across k
+    steps and can serve as the accumulator."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[...], b_ref[...], precision="highest")
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(a, b, *, bm=8, bn=8, bk=8):
+    """Tiled C = A @ B for float64 inputs."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,54 @@
+"""Pure-jnp correctness oracles for the Pallas kernels and the golden
+models (L1 reference layer).
+
+Everything runs in float64 (the paper's system is a double-precision
+machine); `jax_enable_x64` is set in `python/compile/__init__.py`.
+"""
+
+import jax.numpy as jnp
+
+
+def dot_ref(a, b):
+    """Dot product z = a . b."""
+    return jnp.dot(a, b)
+
+
+def relu_ref(x):
+    """ReLU y = max(x, 0)."""
+    return jnp.maximum(x, 0.0)
+
+
+def axpy_ref(a, x, y):
+    """AXPY y' = a*x + y (a is a scalar array of shape (1,))."""
+    return a[0] * x + y
+
+
+def dgemm_ref(a, b):
+    """C = A @ B."""
+    return jnp.dot(a, b)
+
+
+def conv2d_ref(img, w):
+    """Valid 2-D convolution (cross-correlation, as the kernel computes):
+    out[y, x] = sum_{ky,kx} img[y+ky, x+kx] * w[ky, kx]."""
+    kh, kw = w.shape
+    oh = img.shape[0] - kh + 1
+    ow = img.shape[1] - kw + 1
+    out = jnp.zeros((oh, ow), dtype=img.dtype)
+    for ky in range(kh):
+        for kx in range(kw):
+            out = out + img[ky : ky + oh, kx : kx + ow] * w[ky, kx]
+    return out
+
+
+def knn_ref(points, query):
+    """Squared Euclidean distances of n x d points to a d query."""
+    d = points - query[None, :]
+    return jnp.sum(d * d, axis=1)
+
+
+def fft_ref(x_interleaved):
+    """FFT over interleaved re/im doubles; returns interleaved output."""
+    z = x_interleaved[0::2] + 1j * x_interleaved[1::2]
+    out = jnp.fft.fft(z)
+    return jnp.stack([out.real, out.imag], axis=1).reshape(-1)

@@ -1,0 +1,45 @@
+"""L2: the golden compute graphs for every microkernel, calling the L1
+Pallas kernels for the FPU hot-spots (DGEMM, conv2d) and jnp elsewhere.
+
+These are the functions `aot.py` lowers once to HLO text; the rust
+coordinator executes the compiled artifacts through PJRT to validate
+every simulated kernel run (python never executes at simulation time).
+"""
+
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.conv2d_pallas import conv2d as conv2d_pallas
+from .kernels.gemm_pallas import matmul as matmul_pallas
+
+
+def dot(a, b):
+    """z = a . b (returned as a 1-element array)."""
+    return (jnp.dot(a, b).reshape(1),)
+
+
+def relu(x):
+    return (ref.relu_ref(x),)
+
+
+def axpy(a, x, y):
+    return (ref.axpy_ref(a, x, y),)
+
+
+def dgemm(a, b):
+    """C = A @ B through the tiled Pallas kernel (flattened row-major to
+    match the simulator's TCDM layout)."""
+    return (matmul_pallas(a, b).reshape(-1),)
+
+
+def conv2d(img, w):
+    """Valid 7x7 convolution through the Pallas kernel (flattened)."""
+    return (conv2d_pallas(img, w).reshape(-1),)
+
+
+def knn(points, query):
+    return (ref.knn_ref(points, query),)
+
+
+def fft(x):
+    return (ref.fft_ref(x),)

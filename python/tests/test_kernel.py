@@ -1,0 +1,105 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle, swept over
+shapes and magnitudes with hypothesis. This is the build-time gate for
+the artifacts the rust coordinator validates against."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import compile  # noqa: F401  (enables x64)
+from compile.kernels import ref
+from compile.kernels.conv2d_pallas import conv2d as conv2d_pallas
+from compile.kernels.gemm_pallas import matmul as matmul_pallas
+
+
+def rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return (rng.random(shape) * 2.0 - 1.0) * scale
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.sampled_from([8, 16, 32, 64]),
+    n=st.sampled_from([8, 16, 32]),
+    k=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31),
+    scale=st.sampled_from([1.0, 1e6, 1e-6]),
+)
+def test_pallas_matmul_matches_ref(m, n, k, seed, scale):
+    a = rand((m, k), seed, scale)
+    b = rand((k, n), seed + 1, scale)
+    got = np.asarray(matmul_pallas(a, b))
+    want = np.asarray(ref.dgemm_ref(a, b))
+    # Tiled accumulation reassociates; bound the error by k ulps of the
+    # largest partial product (catastrophic cancellation makes a pure
+    # rtol insufficient at small scales).
+    atol = k * np.finfo(np.float64).eps * scale * scale
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=atol)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    bm=st.sampled_from([4, 8, 16]),
+    bk=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31),
+)
+def test_pallas_matmul_tile_shapes(bm, bk, seed):
+    """Block-shape sweep: tiling must never change the result beyond
+    accumulation-order tolerance."""
+    a = rand((32, 32), seed)
+    b = rand((32, 32), seed + 7)
+    got = np.asarray(matmul_pallas(a, b, bm=bm, bk=bk))
+    want = np.asarray(ref.dgemm_ref(a, b))
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-13)
+
+
+def test_pallas_matmul_dtype_f32():
+    a = rand((16, 16), 3).astype(np.float32)
+    b = rand((16, 16), 4).astype(np.float32)
+    got = np.asarray(matmul_pallas(a, b))
+    assert got.dtype == np.float32
+    np.testing.assert_allclose(got, a @ b, rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([16, 24, 32, 48]),
+    seed=st.integers(0, 2**31),
+    scale=st.sampled_from([1.0, 1e3]),
+)
+def test_pallas_conv2d_matches_ref(n, seed, scale):
+    img = rand((n, n), seed, scale)
+    w = rand((7, 7), seed + 1)
+    got = np.asarray(conv2d_pallas(img, w))
+    want = np.asarray(ref.conv2d_ref(img, w))
+    assert got.shape == (n - 6, n - 6)
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+def test_refs_against_numpy():
+    """The jnp oracles themselves vs numpy."""
+    a, b = rand(64, 1), rand(64, 2)
+    np.testing.assert_allclose(np.asarray(ref.dot_ref(a, b)), np.dot(a, b), rtol=1e-13)
+    x = rand(64, 3)
+    np.testing.assert_allclose(np.asarray(ref.relu_ref(x)), np.maximum(x, 0))
+    pts, q = rand((32, 4), 4), rand(4, 5)
+    np.testing.assert_allclose(
+        np.asarray(ref.knn_ref(pts, q)), ((pts - q) ** 2).sum(1), rtol=1e-13
+    )
+    z = rand(128, 6)
+    want = np.fft.fft(z[0::2] + 1j * z[1::2])
+    got = np.asarray(ref.fft_ref(z))
+    np.testing.assert_allclose(got[0::2] + 1j * got[1::2], want, rtol=1e-10, atol=1e-12)
+
+
+def test_model_shapes():
+    """L2 golden models produce the shapes the rust runtime expects."""
+    from compile import model
+
+    a = rand((16, 16), 9)
+    (c,) = model.dgemm(a, a)
+    assert c.shape == (256,)
+    (o,) = model.conv2d(rand((32, 32), 10), rand((7, 7), 11))
+    assert o.shape == (26 * 26,)
+    (d,) = model.dot(rand(256, 12), rand(256, 13))
+    assert d.shape == (1,)

@@ -1,0 +1,216 @@
+//! Two-pass assembler for RV32IMAFD + Zicsr + the Snitch `frep`/SSR
+//! extensions.
+//!
+//! The paper's kernels are hand-tuned assembly (§3: "a set of hand-tuned
+//! library routines", partially inline assembly). Rather than gating the
+//! reproduction on an external RISC-V GCC/LLVM, this module assembles the
+//! kernel sources (see [`crate::kernels`]) directly into loadable segments.
+//!
+//! Supported surface:
+//! * all instructions of [`crate::isa`], in standard syntax;
+//! * pseudo-instructions: `nop`, `li`, `la`, `mv`, `not`, `neg`, `seqz`,
+//!   `snez`, `beqz`, `bnez`, `blez`, `bgez`, `bltz`, `bgtz`, `bgt`, `ble`,
+//!   `bgtu`, `bleu`, `j`, `jr`, `call`, `ret`, `csrr`, `csrw`, `csrwi`,
+//!   `csrs`, `csrsi`, `csrc`, `fmv.d`, `fabs.d`, `fneg.d`, `fmv.s`;
+//! * directives: `.text [addr]`, `.data [addr]`, `.org addr`, `.align n`,
+//!   `.word v[, v]*`, `.double v[, v]*`, `.space n`, `.equ name, value`,
+//!   `.global` (accepted, ignored);
+//! * labels, `%hi(expr)` / `%lo(expr)`, `sym+const` expressions,
+//!   symbolic CSR names (`mhartid`, `ssr`, `ssr0_bound1`, ...);
+//! * comments with `#`, `//` or `;`.
+//!
+//! `frep` syntax (paper Fig. 5): `frep.o rs1, n_instr[, stagger_mask,
+//! stagger_count]` — `n_instr` is the *count* of sequenced instructions
+//! (1..=16); the architectural `max_inst` field stores `n_instr - 1`.
+
+mod parser;
+
+pub use parser::{assemble, AsmError, Program, Segment};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::decode::decode;
+    use crate::isa::{AluOp, BranchOp, FpOp, Instr, Reg};
+
+    fn asm_words(src: &str) -> Vec<u32> {
+        let p = assemble(src).expect("assembly failed");
+        let seg = &p.segments[0];
+        seg.bytes
+            .chunks(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+
+    #[test]
+    fn basic_arithmetic() {
+        let w = asm_words("addi a0, a0, 1\nadd a1, a2, a3\nsub t0, t1, t2\n");
+        assert_eq!(decode(w[0]).unwrap(), Instr::OpImm {
+            op: AluOp::Add,
+            rd: Reg::from_name("a0").unwrap(),
+            rs1: Reg::from_name("a0").unwrap(),
+            imm: 1
+        });
+        assert!(matches!(decode(w[1]).unwrap(), Instr::Op { op: AluOp::Add, .. }));
+        assert!(matches!(decode(w[2]).unwrap(), Instr::Op { op: AluOp::Sub, .. }));
+    }
+
+    #[test]
+    fn labels_and_branches() {
+        let w = asm_words("loop:\naddi a0, a0, -1\nbnez a0, loop\n");
+        // bnez expands to bne a0, x0, -4
+        assert_eq!(
+            decode(w[1]).unwrap(),
+            Instr::Branch {
+                op: BranchOp::Bne,
+                rs1: Reg::from_name("a0").unwrap(),
+                rs2: Reg::ZERO,
+                offset: -4
+            }
+        );
+    }
+
+    #[test]
+    fn forward_labels() {
+        let w = asm_words("beqz a0, done\nnop\ndone:\nret\n");
+        assert_eq!(
+            decode(w[0]).unwrap(),
+            Instr::Branch {
+                op: BranchOp::Beq,
+                rs1: Reg::from_name("a0").unwrap(),
+                rs2: Reg::ZERO,
+                offset: 8
+            }
+        );
+    }
+
+    #[test]
+    fn li_small_and_large() {
+        let w = asm_words("li a0, 42\nli a1, 0x12345678\n");
+        assert_eq!(w.len(), 3, "large li expands to lui+addi");
+        assert!(matches!(decode(w[0]).unwrap(), Instr::OpImm { imm: 42, .. }));
+        assert!(matches!(decode(w[1]).unwrap(), Instr::Lui { .. }));
+    }
+
+    #[test]
+    fn li_negative_edge() {
+        // 0xFFFFF800 == -2048 fits addi; -2049 needs lui+addi
+        let w = asm_words("li a0, -2048\n");
+        assert_eq!(w.len(), 1);
+        let w = asm_words("li a0, -2049\n");
+        assert_eq!(w.len(), 2);
+    }
+
+    #[test]
+    fn la_and_data() {
+        let p = assemble(
+            ".equ TCDM, 0x10000000\n.text 0x0\nla a0, buf\nlw a1, 0(a0)\necall\n.data 0x10000100\nbuf: .word 7, 8\n",
+        )
+        .unwrap();
+        assert_eq!(p.symbols["buf"], 0x1000_0100);
+        let data = p.segments.iter().find(|s| s.base == 0x1000_0100).unwrap();
+        assert_eq!(&data.bytes[..4], &7u32.to_le_bytes());
+    }
+
+    #[test]
+    fn doubles_in_data() {
+        let p = assemble(".data 0x10000000\nv: .double 1.5, -2.25\n").unwrap();
+        let seg = &p.segments[0];
+        assert_eq!(&seg.bytes[..8], &1.5f64.to_le_bytes());
+        assert_eq!(&seg.bytes[8..16], &(-2.25f64).to_le_bytes());
+    }
+
+    #[test]
+    fn fp_and_frep() {
+        let w = asm_words(
+            "fld ft0, 0(a0)\nfmadd.d ft3, ft0, ft1, ft3\nfrep.o t0, 1, 0, 0\nfrep.i t1, 2, 0x9, 3\n",
+        );
+        assert!(matches!(decode(w[0]).unwrap(), Instr::FpLoad { .. }));
+        assert!(matches!(decode(w[1]).unwrap(), Instr::FpOp { op: FpOp::Fmadd, .. }));
+        assert_eq!(
+            decode(w[2]).unwrap(),
+            Instr::Frep {
+                is_outer: true,
+                max_rep: Reg::from_name("t0").unwrap(),
+                max_inst: 0,
+                stagger_mask: 0,
+                stagger_count: 0
+            }
+        );
+        assert_eq!(
+            decode(w[3]).unwrap(),
+            Instr::Frep {
+                is_outer: false,
+                max_rep: Reg::from_name("t1").unwrap(),
+                max_inst: 1,
+                stagger_mask: 9,
+                stagger_count: 3
+            }
+        );
+    }
+
+    #[test]
+    fn csr_symbolic_names() {
+        let w = asm_words("csrr a0, mhartid\ncsrwi ssr, 1\ncsrw ssr0_bound0, a1\n");
+        assert!(matches!(decode(w[0]).unwrap(), Instr::Csr { csr: 0xF14, .. }));
+        assert!(matches!(decode(w[1]).unwrap(), Instr::Csr { csr: 0x7C0, .. }));
+    }
+
+    #[test]
+    fn hi_lo_relocation() {
+        let p = assemble(".text 0\nlui a0, %hi(buf)\naddi a0, a0, %lo(buf)\n.data 0x10000800\nbuf: .word 1\n").unwrap();
+        let w: Vec<u32> = p.segments[0]
+            .bytes
+            .chunks(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        // Reconstructed address must equal the symbol.
+        let (Instr::Lui { imm: hi, .. }, Instr::OpImm { imm: lo, .. }) =
+            (decode(w[0]).unwrap(), decode(w[1]).unwrap())
+        else {
+            panic!()
+        };
+        assert_eq!((hi as u32).wrapping_add(lo as u32), 0x1000_0800);
+    }
+
+    #[test]
+    fn equ_expressions() {
+        let p = assemble(".equ N, 16\n.equ N2, N*N\nli a0, N2\n").unwrap();
+        assert_eq!(p.symbols["N2"], 256);
+    }
+
+    #[test]
+    fn errors_have_line_numbers() {
+        let e = assemble("nop\nbogus_instr a0\n").unwrap_err();
+        assert!(e.to_string().contains("line 2"), "{e}");
+        let e = assemble("lw a0, 0(undefined_sym)\n").unwrap_err();
+        assert!(e.to_string().contains("line 1"), "{e}");
+    }
+
+    #[test]
+    fn duplicate_label_rejected() {
+        let e = assemble("x:\nnop\nx:\nnop\n").unwrap_err();
+        assert!(e.to_string().contains("duplicate"), "{e}");
+    }
+
+    #[test]
+    fn align_and_space() {
+        let p = assemble(".data 0x10000000\na: .space 3\n.align 3\nb: .double 1.0\n").unwrap();
+        assert_eq!(p.symbols["b"] % 8, 0);
+        assert_eq!(p.symbols["b"], 0x1000_0008);
+    }
+
+    #[test]
+    fn all_pseudo_instructions_assemble() {
+        let src = "\
+            nop\n mv a0, a1\n not a0, a1\n neg a0, a1\n seqz a0, a1\n snez a0, a1\n \
+            j next\n next: jr ra\n call next\n ret\n \
+            beqz a0, next\n bnez a0, next\n blez a0, next\n bgez a0, next\n \
+            bltz a0, next\n bgtz a0, next\n bgt a0, a1, next\n ble a0, a1, next\n \
+            bgtu a0, a1, next\n bleu a0, a1, next\n \
+            csrr a0, cycle\n csrw mcycle, a0\n csrwi ssr, 0\n csrs ssr, a0\n csrsi ssr, 1\n csrc ssr, a0\n \
+            fmv.d ft2, ft3\n fabs.d ft2, ft3\n fneg.d ft2, ft3\n fmv.s ft2, ft3\n";
+        let p = assemble(src).expect("pseudo instructions must assemble");
+        assert!(!p.segments[0].bytes.is_empty());
+    }
+}

@@ -1,0 +1,983 @@
+//! The assembler implementation: lexing, expression evaluation, two-pass
+//! layout and encoding.
+
+use std::collections::HashMap;
+
+use crate::isa::csr::csr_from_name;
+use crate::isa::encode::encode;
+use crate::isa::{
+    AluOp, AmoOp, BranchOp, CsrOp, CsrSrc, FReg, FpCmpOp, FpOp, FpWidth, Instr, LoadOp, MulDivOp,
+    Reg, StoreOp,
+};
+
+/// A contiguous, loadable chunk of assembled bytes.
+#[derive(Debug, Clone)]
+pub struct Segment {
+    /// Load address of the first byte.
+    pub base: u32,
+    pub bytes: Vec<u8>,
+}
+
+/// The output of [`assemble`]: loadable segments plus the symbol table.
+#[derive(Debug, Clone, Default)]
+pub struct Program {
+    pub segments: Vec<Segment>,
+    pub symbols: HashMap<String, u32>,
+    /// Entry point (address of the first `.text` byte unless a `_start`
+    /// label exists).
+    pub entry: u32,
+}
+
+impl Program {
+    /// Read back an assembled 32-bit word (for tests/inspection).
+    pub fn word_at(&self, addr: u32) -> Option<u32> {
+        for s in &self.segments {
+            if addr >= s.base && (addr + 4) as u64 <= s.base as u64 + s.bytes.len() as u64 {
+                let o = (addr - s.base) as usize;
+                return Some(u32::from_le_bytes([
+                    s.bytes[o],
+                    s.bytes[o + 1],
+                    s.bytes[o + 2],
+                    s.bytes[o + 3],
+                ]));
+            }
+        }
+        None
+    }
+}
+
+/// Assembly error with source line attribution.
+#[derive(Debug)]
+pub struct AsmError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for AsmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "asm error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for AsmError {}
+
+fn err<T>(line: usize, msg: impl Into<String>) -> Result<T, AsmError> {
+    Err(AsmError { line, msg: msg.into() })
+}
+
+/// Strip comments (`#`, `//`, `;`) and surrounding whitespace.
+fn clean_line(line: &str) -> &str {
+    let mut s = line;
+    for pat in ["#", "//", ";"] {
+        if let Some(i) = s.find(pat) {
+            s = &s[..i];
+        }
+    }
+    s.trim()
+}
+
+/// Split operands at top-level commas (parentheses protected).
+fn split_operands(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut depth = 0i32;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '(' => {
+                depth += 1;
+                cur.push(c);
+            }
+            ')' => {
+                depth -= 1;
+                cur.push(c);
+            }
+            ',' if depth == 0 => {
+                out.push(cur.trim().to_string());
+                cur.clear();
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur.trim().to_string());
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Expression evaluation
+// ---------------------------------------------------------------------------
+
+struct ExprParser<'a> {
+    s: &'a [u8],
+    pos: usize,
+    symbols: &'a HashMap<String, u32>,
+    line: usize,
+}
+
+impl<'a> ExprParser<'a> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.s.len() && (self.s[self.pos] as char).is_whitespace() {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Option<char> {
+        self.skip_ws();
+        self.s.get(self.pos).map(|&b| b as char)
+    }
+
+    fn expr(&mut self) -> Result<i64, AsmError> {
+        let mut v = self.term()?;
+        loop {
+            match self.peek() {
+                Some('+') => {
+                    self.pos += 1;
+                    v += self.term()?;
+                }
+                Some('-') => {
+                    self.pos += 1;
+                    v -= self.term()?;
+                }
+                _ => return Ok(v),
+            }
+        }
+    }
+
+    fn term(&mut self) -> Result<i64, AsmError> {
+        let mut v = self.factor()?;
+        loop {
+            match self.peek() {
+                Some('*') => {
+                    self.pos += 1;
+                    v *= self.factor()?;
+                }
+                Some('/') => {
+                    self.pos += 1;
+                    let d = self.factor()?;
+                    if d == 0 {
+                        return err(self.line, "division by zero in expression");
+                    }
+                    v /= d;
+                }
+                _ => return Ok(v),
+            }
+        }
+    }
+
+    fn factor(&mut self) -> Result<i64, AsmError> {
+        match self.peek() {
+            Some('-') => {
+                self.pos += 1;
+                Ok(-self.factor()?)
+            }
+            Some('(') => {
+                self.pos += 1;
+                let v = self.expr()?;
+                if self.peek() != Some(')') {
+                    return err(self.line, "expected ')' in expression");
+                }
+                self.pos += 1;
+                Ok(v)
+            }
+            Some(c) if c.is_ascii_digit() => {
+                let start = self.pos;
+                if c == '0'
+                    && self.s.get(self.pos + 1).map(|&b| b as char) == Some('x')
+                {
+                    self.pos += 2;
+                    while self.pos < self.s.len() && (self.s[self.pos] as char).is_ascii_hexdigit() {
+                        self.pos += 1;
+                    }
+                    let t = std::str::from_utf8(&self.s[start + 2..self.pos]).unwrap();
+                    return i64::from_str_radix(t, 16)
+                        .map_err(|e| AsmError { line: self.line, msg: format!("bad hex literal: {e}") });
+                }
+                if c == '0'
+                    && self.s.get(self.pos + 1).map(|&b| b as char) == Some('b')
+                {
+                    self.pos += 2;
+                    while self.pos < self.s.len()
+                        && matches!(self.s[self.pos] as char, '0' | '1')
+                    {
+                        self.pos += 1;
+                    }
+                    let t = std::str::from_utf8(&self.s[start + 2..self.pos]).unwrap();
+                    return i64::from_str_radix(t, 2)
+                        .map_err(|e| AsmError { line: self.line, msg: format!("bad binary literal: {e}") });
+                }
+                while self.pos < self.s.len() && (self.s[self.pos] as char).is_ascii_digit() {
+                    self.pos += 1;
+                }
+                let t = std::str::from_utf8(&self.s[start..self.pos]).unwrap();
+                t.parse()
+                    .map_err(|e| AsmError { line: self.line, msg: format!("bad int literal: {e}") })
+            }
+            Some(c) if c.is_ascii_alphabetic() || c == '_' || c == '.' => {
+                let start = self.pos;
+                while self.pos < self.s.len() {
+                    let ch = self.s[self.pos] as char;
+                    if ch.is_ascii_alphanumeric() || ch == '_' || ch == '.' {
+                        self.pos += 1;
+                    } else {
+                        break;
+                    }
+                }
+                let name = std::str::from_utf8(&self.s[start..self.pos]).unwrap();
+                match self.symbols.get(name) {
+                    Some(&v) => Ok(v as i64),
+                    None => err(self.line, format!("undefined symbol `{name}`")),
+                }
+            }
+            other => err(self.line, format!("unexpected token {other:?} in expression")),
+        }
+    }
+}
+
+fn eval_expr(s: &str, symbols: &HashMap<String, u32>, line: usize) -> Result<i64, AsmError> {
+    let mut p = ExprParser { s: s.as_bytes(), pos: 0, symbols, line };
+    let v = p.expr()?;
+    p.skip_ws();
+    if p.pos != p.s.len() {
+        return err(line, format!("trailing junk in expression `{s}`"));
+    }
+    Ok(v)
+}
+
+// ---------------------------------------------------------------------------
+// Operand parsing helpers
+// ---------------------------------------------------------------------------
+
+struct Ctx<'a> {
+    symbols: &'a HashMap<String, u32>,
+    line: usize,
+}
+
+impl<'a> Ctx<'a> {
+    fn reg(&self, s: &str) -> Result<Reg, AsmError> {
+        Reg::from_name(s).ok_or_else(|| AsmError {
+            line: self.line,
+            msg: format!("expected integer register, got `{s}`"),
+        })
+    }
+
+    fn freg(&self, s: &str) -> Result<FReg, AsmError> {
+        FReg::from_name(s).ok_or_else(|| AsmError {
+            line: self.line,
+            msg: format!("expected fp register, got `{s}`"),
+        })
+    }
+
+    /// Immediate, possibly `%hi(e)` / `%lo(e)`.
+    fn imm(&self, s: &str) -> Result<i64, AsmError> {
+        if let Some(inner) = s.strip_prefix("%hi(").and_then(|r| r.strip_suffix(')')) {
+            let v = eval_expr(inner, self.symbols, self.line)? as u32;
+            return Ok((v.wrapping_add(0x800) & 0xFFFF_F000) as i64);
+        }
+        if let Some(inner) = s.strip_prefix("%lo(").and_then(|r| r.strip_suffix(')')) {
+            let v = eval_expr(inner, self.symbols, self.line)? as u32;
+            let lo = (v & 0xFFF) as i32;
+            return Ok(if lo >= 0x800 { (lo - 0x1000) as i64 } else { lo as i64 });
+        }
+        eval_expr(s, self.symbols, self.line)
+    }
+
+    fn imm32(&self, s: &str) -> Result<i32, AsmError> {
+        let v = self.imm(s)?;
+        if v < i32::MIN as i64 || v > u32::MAX as i64 {
+            return err(self.line, format!("immediate {v} out of 32-bit range"));
+        }
+        Ok(v as u32 as i32)
+    }
+
+    fn imm12(&self, s: &str) -> Result<i32, AsmError> {
+        let v = self.imm(s)?;
+        if !(-2048..=2047).contains(&v) {
+            return err(self.line, format!("immediate {v} out of 12-bit range"));
+        }
+        Ok(v as i32)
+    }
+
+    /// `offset(reg)` memory operand; a bare `(reg)` means offset 0.
+    fn mem(&self, s: &str) -> Result<(i32, Reg), AsmError> {
+        let open = s
+            .rfind('(')
+            .ok_or_else(|| AsmError { line: self.line, msg: format!("expected mem operand, got `{s}`") })?;
+        if !s.ends_with(')') {
+            return err(self.line, format!("expected mem operand, got `{s}`"));
+        }
+        let off_s = s[..open].trim();
+        let reg_s = &s[open + 1..s.len() - 1];
+        let off = if off_s.is_empty() { 0 } else { self.imm12(off_s)? };
+        Ok((off, self.reg(reg_s.trim())?))
+    }
+
+    fn csr(&self, s: &str) -> Result<u16, AsmError> {
+        if let Some(c) = csr_from_name(s) {
+            return Ok(c);
+        }
+        let v = eval_expr(s, self.symbols, self.line)?;
+        if !(0..=0xFFF).contains(&v) {
+            return err(self.line, format!("CSR address {v} out of range"));
+        }
+        Ok(v as u16)
+    }
+
+    /// Branch/jump target → pc-relative offset.
+    fn target(&self, s: &str, pc: u32) -> Result<i32, AsmError> {
+        let v = self.imm(s)? as i64;
+        Ok((v - pc as i64) as i32)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Line model
+// ---------------------------------------------------------------------------
+
+enum LineItem {
+    Instr { mnemonic: String, operands: Vec<String>, addr: u32, line: usize },
+    Word { exprs: Vec<String>, addr: u32, line: usize },
+    Double { values: Vec<f64>, addr: u32 },
+}
+
+/// Size in bytes an instruction occupies, including pseudo expansion.
+fn instr_size(
+    mnemonic: &str,
+    operands: &[String],
+    symbols: &HashMap<String, u32>,
+    line: usize,
+) -> Result<u32, AsmError> {
+    Ok(match mnemonic {
+        "li" => {
+            let ops = operands;
+            if ops.len() != 2 {
+                return err(line, "li takes 2 operands");
+            }
+            // Constant must be evaluable in pass 1 (no forward label refs).
+            let v = eval_expr(&ops[1], symbols, line)?;
+            if (-2048..=2047).contains(&v) {
+                4
+            } else {
+                8
+            }
+        }
+        "la" => 8,
+        _ => 4,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Main entry
+// ---------------------------------------------------------------------------
+
+/// Assemble source text into a [`Program`].
+pub fn assemble(src: &str) -> Result<Program, AsmError> {
+    let mut symbols: HashMap<String, u32> = HashMap::new();
+    let mut items: Vec<LineItem> = Vec::new();
+    // (base, size) per segment in order; current segment is the last.
+    let mut segments_layout: Vec<(u32, u32)> = Vec::new();
+    let mut entry: Option<u32> = None;
+
+    let cur_addr = |segs: &Vec<(u32, u32)>| -> Option<u32> { segs.last().map(|&(b, s)| b + s) };
+
+    // ----- pass 1: layout + symbol collection -----
+    for (lineno0, raw) in src.lines().enumerate() {
+        let line = lineno0 + 1;
+        let mut text = clean_line(raw);
+        // labels (possibly several on one line)
+        while let Some(colon) = text.find(':') {
+            let (label, rest) = text.split_at(colon);
+            let label = label.trim();
+            if label.is_empty()
+                || !label.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '.')
+            {
+                break;
+            }
+            let addr = match cur_addr(&segments_layout) {
+                Some(a) => a,
+                None => {
+                    segments_layout.push((0, 0));
+                    0
+                }
+            };
+            if symbols.insert(label.to_string(), addr).is_some() {
+                return err(line, format!("duplicate label `{label}`"));
+            }
+            text = rest[1..].trim();
+        }
+        if text.is_empty() {
+            continue;
+        }
+
+        let (head, rest) = match text.find(char::is_whitespace) {
+            Some(i) => (&text[..i], text[i..].trim()),
+            None => (text, ""),
+        };
+
+        if let Some(directive) = head.strip_prefix('.') {
+            let ops = split_operands(rest);
+            match directive {
+                "text" | "data" | "org" => {
+                    let base = if ops.is_empty() {
+                        if directive == "org" {
+                            return err(line, ".org requires an address");
+                        }
+                        0
+                    } else {
+                        eval_expr(&ops[0], &symbols, line)? as u32
+                    };
+                    segments_layout.push((base, 0));
+                    if directive == "text" && entry.is_none() {
+                        entry = Some(base);
+                    }
+                }
+                "align" => {
+                    let n: u32 =
+                        eval_expr(ops.first().map(String::as_str).unwrap_or("2"), &symbols, line)?
+                            as u32;
+                    let align = 1u32 << n;
+                    if let Some((base, size)) = segments_layout.last_mut() {
+                        let addr = *base + *size;
+                        *size += (align - (addr % align)) % align;
+                    }
+                }
+                "space" => {
+                    let n = eval_expr(&ops[0], &symbols, line)? as u32;
+                    if segments_layout.is_empty() {
+                        segments_layout.push((0, 0));
+                    }
+                    segments_layout.last_mut().unwrap().1 += n;
+                }
+                "word" => {
+                    if segments_layout.is_empty() {
+                        segments_layout.push((0, 0));
+                    }
+                    let addr = cur_addr(&segments_layout).unwrap();
+                    segments_layout.last_mut().unwrap().1 += 4 * ops.len() as u32;
+                    items.push(LineItem::Word { exprs: ops, addr, line });
+                }
+                "double" => {
+                    if segments_layout.is_empty() {
+                        segments_layout.push((0, 0));
+                    }
+                    let addr = cur_addr(&segments_layout).unwrap();
+                    let mut values = Vec::new();
+                    for o in &ops {
+                        values.push(o.parse::<f64>().map_err(|e| AsmError {
+                            line,
+                            msg: format!("bad double literal `{o}`: {e}"),
+                        })?);
+                    }
+                    segments_layout.last_mut().unwrap().1 += 8 * values.len() as u32;
+                    items.push(LineItem::Double { values, addr });
+                }
+                "equ" => {
+                    if ops.len() != 2 {
+                        return err(line, ".equ takes `name, value`");
+                    }
+                    let v = eval_expr(&ops[1], &symbols, line)? as u32;
+                    if symbols.insert(ops[0].clone(), v).is_some() {
+                        return err(line, format!("duplicate symbol `{}`", ops[0]));
+                    }
+                }
+                "global" | "globl" | "section" | "type" | "size" | "option" | "p2align" => {}
+                other => return err(line, format!("unknown directive `.{other}`")),
+            }
+            continue;
+        }
+
+        // instruction
+        if segments_layout.is_empty() {
+            segments_layout.push((0, 0));
+            if entry.is_none() {
+                entry = Some(0);
+            }
+        }
+        let addr = cur_addr(&segments_layout).unwrap();
+        let operands = split_operands(rest);
+        let size = instr_size(head, &operands, &symbols, line)?;
+        segments_layout.last_mut().unwrap().1 += size;
+        items.push(LineItem::Instr { mnemonic: head.to_string(), operands, addr, line });
+    }
+
+    if let Some(&start) = symbols.get("_start") {
+        entry = Some(start);
+    }
+
+    // ----- pass 2: encode -----
+    let layout: Vec<(u32, u32)> =
+        segments_layout.iter().copied().filter(|&(_, size)| size > 0).collect();
+    let mut segs: Vec<Segment> = layout
+        .iter()
+        .map(|&(base, size)| Segment { base, bytes: Vec::with_capacity(size as usize) })
+        .collect();
+    // Map an address to the segment whose *layout* range contains it, then
+    // pad with zeros up to the emission point (covers .align/.space gaps).
+    let emit = |segs: &mut Vec<Segment>, addr: u32, bytes: &[u8]| {
+        let i = layout
+            .iter()
+            .position(|&(base, size)| addr >= base && (addr as u64) < base as u64 + size as u64)
+            .unwrap_or_else(|| panic!("internal assembler error: no segment for {addr:#x}"));
+        let fill = segs[i].base + segs[i].bytes.len() as u32;
+        for _ in fill..addr {
+            segs[i].bytes.push(0);
+        }
+        segs[i].bytes.extend_from_slice(bytes);
+    };
+
+    for item in &items {
+        match item {
+            LineItem::Word { exprs, addr, line } => {
+                let mut a = *addr;
+                for e in exprs {
+                    let v = eval_expr(e, &symbols, *line)? as u32;
+                    emit(&mut segs, a, &v.to_le_bytes());
+                    a += 4;
+                }
+            }
+            LineItem::Double { values, addr } => {
+                let mut a = *addr;
+                for v in values {
+                    emit(&mut segs, a, &v.to_le_bytes());
+                    a += 8;
+                }
+            }
+            LineItem::Instr { mnemonic, operands, addr, line } => {
+                let ctx = Ctx { symbols: &symbols, line: *line };
+                let instrs = encode_one(mnemonic, operands, *addr, &ctx)?;
+                let mut a = *addr;
+                for i in &instrs {
+                    emit(&mut segs, a, &encode(i).to_le_bytes());
+                    a += 4;
+                }
+            }
+        }
+    }
+
+    // Pad trailing .space/.align.
+    for (i, &(_, size)) in layout.iter().enumerate() {
+        while (segs[i].bytes.len() as u32) < size {
+            segs[i].bytes.push(0);
+        }
+    }
+
+    Ok(Program { segments: segs, symbols, entry: entry.unwrap_or(0) })
+}
+
+/// Encode one source instruction (possibly expanding a pseudo-instruction).
+fn encode_one(
+    mnemonic: &str,
+    ops: &[String],
+    pc: u32,
+    c: &Ctx,
+) -> Result<Vec<Instr>, AsmError> {
+    let line = c.line;
+    let n = ops.len();
+    let need = |k: usize| -> Result<(), AsmError> {
+        if n != k {
+            err(line, format!("`{mnemonic}` takes {k} operands, got {n}"))
+        } else {
+            Ok(())
+        }
+    };
+    let o = |i: usize| ops[i].as_str();
+
+    // ALU register-register / register-immediate families.
+    let alu = |m: &str| -> Option<AluOp> {
+        Some(match m {
+            "add" | "addi" => AluOp::Add,
+            "sub" => AluOp::Sub,
+            "sll" | "slli" => AluOp::Sll,
+            "slt" | "slti" => AluOp::Slt,
+            "sltu" | "sltiu" => AluOp::Sltu,
+            "xor" | "xori" => AluOp::Xor,
+            "srl" | "srli" => AluOp::Srl,
+            "sra" | "srai" => AluOp::Sra,
+            "or" | "ori" => AluOp::Or,
+            "and" | "andi" => AluOp::And,
+            _ => return None,
+        })
+    };
+
+    Ok(match mnemonic {
+        // ----- pseudo-instructions -----
+        "nop" => vec![Instr::OpImm { op: AluOp::Add, rd: Reg::ZERO, rs1: Reg::ZERO, imm: 0 }],
+        "li" => {
+            need(2)?;
+            let rd = c.reg(o(0))?;
+            let v = c.imm32(o(1))?;
+            if (-2048..=2047).contains(&(v as i64)) {
+                vec![Instr::OpImm { op: AluOp::Add, rd, rs1: Reg::ZERO, imm: v }]
+            } else {
+                let hi = ((v as u32).wrapping_add(0x800) & 0xFFFF_F000) as i32;
+                let lo = v.wrapping_sub(hi);
+                vec![
+                    Instr::Lui { rd, imm: hi },
+                    Instr::OpImm { op: AluOp::Add, rd, rs1: rd, imm: lo },
+                ]
+            }
+        }
+        "la" => {
+            need(2)?;
+            let rd = c.reg(o(0))?;
+            let v = eval_expr(o(1), c.symbols, line)? as u32;
+            let hi = (v.wrapping_add(0x800) & 0xFFFF_F000) as i32;
+            let lo = (v as i32).wrapping_sub(hi);
+            vec![Instr::Lui { rd, imm: hi }, Instr::OpImm { op: AluOp::Add, rd, rs1: rd, imm: lo }]
+        }
+        "mv" => {
+            need(2)?;
+            vec![Instr::OpImm { op: AluOp::Add, rd: c.reg(o(0))?, rs1: c.reg(o(1))?, imm: 0 }]
+        }
+        "not" => {
+            need(2)?;
+            vec![Instr::OpImm { op: AluOp::Xor, rd: c.reg(o(0))?, rs1: c.reg(o(1))?, imm: -1 }]
+        }
+        "neg" => {
+            need(2)?;
+            vec![Instr::Op { op: AluOp::Sub, rd: c.reg(o(0))?, rs1: Reg::ZERO, rs2: c.reg(o(1))? }]
+        }
+        "seqz" => {
+            need(2)?;
+            vec![Instr::OpImm { op: AluOp::Sltu, rd: c.reg(o(0))?, rs1: c.reg(o(1))?, imm: 1 }]
+        }
+        "snez" => {
+            need(2)?;
+            vec![Instr::Op { op: AluOp::Sltu, rd: c.reg(o(0))?, rs1: Reg::ZERO, rs2: c.reg(o(1))? }]
+        }
+        "j" => {
+            need(1)?;
+            vec![Instr::Jal { rd: Reg::ZERO, offset: c.target(o(0), pc)? }]
+        }
+        "jr" => {
+            need(1)?;
+            vec![Instr::Jalr { rd: Reg::ZERO, rs1: c.reg(o(0))?, offset: 0 }]
+        }
+        "call" => {
+            need(1)?;
+            vec![Instr::Jal { rd: Reg::RA, offset: c.target(o(0), pc)? }]
+        }
+        "ret" => vec![Instr::Jalr { rd: Reg::ZERO, rs1: Reg::RA, offset: 0 }],
+        "beqz" | "bnez" | "blez" | "bgez" | "bltz" | "bgtz" => {
+            need(2)?;
+            let rs = c.reg(o(0))?;
+            let off = c.target(o(1), pc)?;
+            let (op, rs1, rs2) = match mnemonic {
+                "beqz" => (BranchOp::Beq, rs, Reg::ZERO),
+                "bnez" => (BranchOp::Bne, rs, Reg::ZERO),
+                "blez" => (BranchOp::Bge, Reg::ZERO, rs),
+                "bgez" => (BranchOp::Bge, rs, Reg::ZERO),
+                "bltz" => (BranchOp::Blt, rs, Reg::ZERO),
+                _ => (BranchOp::Blt, Reg::ZERO, rs),
+            };
+            vec![Instr::Branch { op, rs1, rs2, offset: off }]
+        }
+        "bgt" | "ble" | "bgtu" | "bleu" => {
+            need(3)?;
+            let (a, b) = (c.reg(o(0))?, c.reg(o(1))?);
+            let off = c.target(o(2), pc)?;
+            let (op, rs1, rs2) = match mnemonic {
+                "bgt" => (BranchOp::Blt, b, a),
+                "ble" => (BranchOp::Bge, b, a),
+                "bgtu" => (BranchOp::Bltu, b, a),
+                _ => (BranchOp::Bgeu, b, a),
+            };
+            vec![Instr::Branch { op, rs1, rs2, offset: off }]
+        }
+        "csrr" => {
+            need(2)?;
+            vec![Instr::Csr { op: CsrOp::Rs, rd: c.reg(o(0))?, csr: c.csr(o(1))?, src: CsrSrc::Reg(Reg::ZERO) }]
+        }
+        "csrw" => {
+            need(2)?;
+            vec![Instr::Csr { op: CsrOp::Rw, rd: Reg::ZERO, csr: c.csr(o(0))?, src: CsrSrc::Reg(c.reg(o(1))?) }]
+        }
+        "csrwi" => {
+            need(2)?;
+            vec![Instr::Csr { op: CsrOp::Rw, rd: Reg::ZERO, csr: c.csr(o(0))?, src: CsrSrc::Imm(c.imm(o(1))? as u8) }]
+        }
+        "csrs" => {
+            need(2)?;
+            vec![Instr::Csr { op: CsrOp::Rs, rd: Reg::ZERO, csr: c.csr(o(0))?, src: CsrSrc::Reg(c.reg(o(1))?) }]
+        }
+        "csrsi" => {
+            need(2)?;
+            vec![Instr::Csr { op: CsrOp::Rs, rd: Reg::ZERO, csr: c.csr(o(0))?, src: CsrSrc::Imm(c.imm(o(1))? as u8) }]
+        }
+        "csrc" => {
+            need(2)?;
+            vec![Instr::Csr { op: CsrOp::Rc, rd: Reg::ZERO, csr: c.csr(o(0))?, src: CsrSrc::Reg(c.reg(o(1))?) }]
+        }
+        "csrci" => {
+            need(2)?;
+            vec![Instr::Csr { op: CsrOp::Rc, rd: Reg::ZERO, csr: c.csr(o(0))?, src: CsrSrc::Imm(c.imm(o(1))? as u8) }]
+        }
+        "fmv.d" | "fmv.s" => {
+            need(2)?;
+            let w = if mnemonic.ends_with('d') { FpWidth::D } else { FpWidth::S };
+            let (rd, rs) = (c.freg(o(0))?, c.freg(o(1))?);
+            vec![Instr::FpOp { op: FpOp::Fsgnj, width: w, frd: rd, frs1: rs, frs2: rs, frs3: FReg::new(0) }]
+        }
+        "fabs.d" | "fabs.s" => {
+            need(2)?;
+            let w = if mnemonic.ends_with('d') { FpWidth::D } else { FpWidth::S };
+            let (rd, rs) = (c.freg(o(0))?, c.freg(o(1))?);
+            vec![Instr::FpOp { op: FpOp::Fsgnjx, width: w, frd: rd, frs1: rs, frs2: rs, frs3: FReg::new(0) }]
+        }
+        "fneg.d" | "fneg.s" => {
+            need(2)?;
+            let w = if mnemonic.ends_with('d') { FpWidth::D } else { FpWidth::S };
+            let (rd, rs) = (c.freg(o(0))?, c.freg(o(1))?);
+            vec![Instr::FpOp { op: FpOp::Fsgnjn, width: w, frd: rd, frs1: rs, frs2: rs, frs3: FReg::new(0) }]
+        }
+
+        // ----- real instructions -----
+        "lui" => {
+            need(2)?;
+            let v = c.imm(o(1))?;
+            // Accept either a pre-shifted 20-bit value or %hi() output.
+            let imm = if v.unsigned_abs() <= 0xF_FFFF && v >= 0 { (v as i32) << 12 } else { v as i32 };
+            vec![Instr::Lui { rd: c.reg(o(0))?, imm }]
+        }
+        "auipc" => {
+            need(2)?;
+            let v = c.imm(o(1))?;
+            let imm = if v.unsigned_abs() <= 0xF_FFFF && v >= 0 { (v as i32) << 12 } else { v as i32 };
+            vec![Instr::Auipc { rd: c.reg(o(0))?, imm }]
+        }
+        "jal" => match n {
+            1 => vec![Instr::Jal { rd: Reg::RA, offset: c.target(o(0), pc)? }],
+            2 => vec![Instr::Jal { rd: c.reg(o(0))?, offset: c.target(o(1), pc)? }],
+            _ => return err(line, "jal takes 1 or 2 operands"),
+        },
+        "jalr" => match n {
+            1 => vec![Instr::Jalr { rd: Reg::RA, rs1: c.reg(o(0))?, offset: 0 }],
+            2 => {
+                let (off, rs1) = c.mem(o(1))?;
+                vec![Instr::Jalr { rd: c.reg(o(0))?, rs1, offset: off }]
+            }
+            _ => return err(line, "jalr takes 1 or 2 operands"),
+        },
+        "beq" | "bne" | "blt" | "bge" | "bltu" | "bgeu" => {
+            need(3)?;
+            let op = match mnemonic {
+                "beq" => BranchOp::Beq,
+                "bne" => BranchOp::Bne,
+                "blt" => BranchOp::Blt,
+                "bge" => BranchOp::Bge,
+                "bltu" => BranchOp::Bltu,
+                _ => BranchOp::Bgeu,
+            };
+            vec![Instr::Branch { op, rs1: c.reg(o(0))?, rs2: c.reg(o(1))?, offset: c.target(o(2), pc)? }]
+        }
+        "lb" | "lh" | "lw" | "lbu" | "lhu" => {
+            need(2)?;
+            let op = match mnemonic {
+                "lb" => LoadOp::Lb,
+                "lh" => LoadOp::Lh,
+                "lw" => LoadOp::Lw,
+                "lbu" => LoadOp::Lbu,
+                _ => LoadOp::Lhu,
+            };
+            let (off, rs1) = c.mem(o(1))?;
+            vec![Instr::Load { op, rd: c.reg(o(0))?, rs1, offset: off }]
+        }
+        "sb" | "sh" | "sw" => {
+            need(2)?;
+            let op = match mnemonic {
+                "sb" => StoreOp::Sb,
+                "sh" => StoreOp::Sh,
+                _ => StoreOp::Sw,
+            };
+            let (off, rs1) = c.mem(o(1))?;
+            vec![Instr::Store { op, rs1, rs2: c.reg(o(0))?, offset: off }]
+        }
+        "addi" | "slti" | "sltiu" | "xori" | "ori" | "andi" | "slli" | "srli" | "srai" => {
+            need(3)?;
+            let op = alu(mnemonic).unwrap();
+            vec![Instr::OpImm { op, rd: c.reg(o(0))?, rs1: c.reg(o(1))?, imm: c.imm12(o(2))? }]
+        }
+        "add" | "sub" | "sll" | "slt" | "sltu" | "xor" | "srl" | "sra" | "or" | "and" => {
+            need(3)?;
+            let op = alu(mnemonic).unwrap();
+            vec![Instr::Op { op, rd: c.reg(o(0))?, rs1: c.reg(o(1))?, rs2: c.reg(o(2))? }]
+        }
+        "fence" => vec![Instr::Fence],
+        "ecall" => vec![Instr::Ecall],
+        "ebreak" => vec![Instr::Ebreak],
+        "wfi" => vec![Instr::Wfi],
+        "csrrw" | "csrrs" | "csrrc" => {
+            need(3)?;
+            let op = match mnemonic {
+                "csrrw" => CsrOp::Rw,
+                "csrrs" => CsrOp::Rs,
+                _ => CsrOp::Rc,
+            };
+            vec![Instr::Csr { op, rd: c.reg(o(0))?, csr: c.csr(o(1))?, src: CsrSrc::Reg(c.reg(o(2))?) }]
+        }
+        "csrrwi" | "csrrsi" | "csrrci" => {
+            need(3)?;
+            let op = match mnemonic {
+                "csrrwi" => CsrOp::Rw,
+                "csrrsi" => CsrOp::Rs,
+                _ => CsrOp::Rc,
+            };
+            vec![Instr::Csr { op, rd: c.reg(o(0))?, csr: c.csr(o(1))?, src: CsrSrc::Imm(c.imm(o(2))? as u8) }]
+        }
+        "mul" | "mulh" | "mulhsu" | "mulhu" | "div" | "divu" | "rem" | "remu" => {
+            need(3)?;
+            let op = match mnemonic {
+                "mul" => MulDivOp::Mul,
+                "mulh" => MulDivOp::Mulh,
+                "mulhsu" => MulDivOp::Mulhsu,
+                "mulhu" => MulDivOp::Mulhu,
+                "div" => MulDivOp::Div,
+                "divu" => MulDivOp::Divu,
+                "rem" => MulDivOp::Rem,
+                _ => MulDivOp::Remu,
+            };
+            vec![Instr::MulDiv { op, rd: c.reg(o(0))?, rs1: c.reg(o(1))?, rs2: c.reg(o(2))? }]
+        }
+        "lr.w" => {
+            need(2)?;
+            let (off, rs1) = c.mem(o(1))?;
+            if off != 0 {
+                return err(line, "lr.w requires zero offset");
+            }
+            vec![Instr::Amo { op: AmoOp::LrW, rd: c.reg(o(0))?, rs1, rs2: Reg::ZERO }]
+        }
+        "sc.w" | "amoswap.w" | "amoadd.w" | "amoxor.w" | "amoand.w" | "amoor.w" | "amomin.w"
+        | "amomax.w" | "amominu.w" | "amomaxu.w" => {
+            need(3)?;
+            let op = match mnemonic {
+                "sc.w" => AmoOp::ScW,
+                "amoswap.w" => AmoOp::AmoSwapW,
+                "amoadd.w" => AmoOp::AmoAddW,
+                "amoxor.w" => AmoOp::AmoXorW,
+                "amoand.w" => AmoOp::AmoAndW,
+                "amoor.w" => AmoOp::AmoOrW,
+                "amomin.w" => AmoOp::AmoMinW,
+                "amomax.w" => AmoOp::AmoMaxW,
+                "amominu.w" => AmoOp::AmoMinuW,
+                _ => AmoOp::AmoMaxuW,
+            };
+            let (off, rs1) = c.mem(o(2))?;
+            if off != 0 {
+                return err(line, "amo requires zero offset");
+            }
+            vec![Instr::Amo { op, rd: c.reg(o(0))?, rs1, rs2: c.reg(o(1))? }]
+        }
+        "flw" | "fld" => {
+            need(2)?;
+            let width = if mnemonic == "flw" { FpWidth::S } else { FpWidth::D };
+            let (off, rs1) = c.mem(o(1))?;
+            vec![Instr::FpLoad { width, frd: c.freg(o(0))?, rs1, offset: off }]
+        }
+        "fsw" | "fsd" => {
+            need(2)?;
+            let width = if mnemonic == "fsw" { FpWidth::S } else { FpWidth::D };
+            let (off, rs1) = c.mem(o(1))?;
+            vec![Instr::FpStore { width, frs2: c.freg(o(0))?, rs1, offset: off }]
+        }
+        m if m.starts_with("frep.") => {
+            let is_outer = match &m[5..] {
+                "o" => true,
+                "i" => false,
+                _ => return err(line, format!("unknown frep variant `{m}`")),
+            };
+            if !(2..=4).contains(&n) {
+                return err(line, "frep takes rs1, n_instr[, stagger_mask, stagger_count]");
+            }
+            let max_rep = c.reg(o(0))?;
+            let count = c.imm(o(1))?;
+            if !(1..=16).contains(&count) {
+                return err(line, format!("frep n_instr {count} out of range 1..=16"));
+            }
+            let stagger_mask = if n > 2 { c.imm(o(2))? as u8 } else { 0 };
+            let stagger_count = if n > 3 { c.imm(o(3))? as u8 } else { 0 };
+            vec![Instr::Frep {
+                is_outer,
+                max_rep,
+                max_inst: (count - 1) as u8,
+                stagger_mask,
+                stagger_count,
+            }]
+        }
+        m if m.starts_with('f') && (m.ends_with(".s") || m.ends_with(".d")) => {
+            let width = if m.ends_with(".s") { FpWidth::S } else { FpWidth::D };
+            let base = &m[..m.len() - 2];
+            let f0 = FReg::new(0);
+            match base {
+                "fadd" | "fsub" | "fmul" | "fdiv" | "fsgnj" | "fsgnjn" | "fsgnjx" | "fmin"
+                | "fmax" => {
+                    need(3)?;
+                    let op = match base {
+                        "fadd" => FpOp::Fadd,
+                        "fsub" => FpOp::Fsub,
+                        "fmul" => FpOp::Fmul,
+                        "fdiv" => FpOp::Fdiv,
+                        "fsgnj" => FpOp::Fsgnj,
+                        "fsgnjn" => FpOp::Fsgnjn,
+                        "fsgnjx" => FpOp::Fsgnjx,
+                        "fmin" => FpOp::Fmin,
+                        _ => FpOp::Fmax,
+                    };
+                    vec![Instr::FpOp { op, width, frd: c.freg(o(0))?, frs1: c.freg(o(1))?, frs2: c.freg(o(2))?, frs3: f0 }]
+                }
+                "fsqrt" => {
+                    need(2)?;
+                    vec![Instr::FpOp { op: FpOp::Fsqrt, width, frd: c.freg(o(0))?, frs1: c.freg(o(1))?, frs2: f0, frs3: f0 }]
+                }
+                "fmadd" | "fmsub" | "fnmsub" | "fnmadd" => {
+                    need(4)?;
+                    let op = match base {
+                        "fmadd" => FpOp::Fmadd,
+                        "fmsub" => FpOp::Fmsub,
+                        "fnmsub" => FpOp::Fnmsub,
+                        _ => FpOp::Fnmadd,
+                    };
+                    vec![Instr::FpOp { op, width, frd: c.freg(o(0))?, frs1: c.freg(o(1))?, frs2: c.freg(o(2))?, frs3: c.freg(o(3))? }]
+                }
+                "feq" | "flt" | "fle" => {
+                    need(3)?;
+                    let op = match base {
+                        "feq" => FpCmpOp::Feq,
+                        "flt" => FpCmpOp::Flt,
+                        _ => FpCmpOp::Fle,
+                    };
+                    vec![Instr::FpCmp { op, width, rd: c.reg(o(0))?, frs1: c.freg(o(1))?, frs2: c.freg(o(2))? }]
+                }
+                "fclass" => {
+                    need(2)?;
+                    vec![Instr::FpClass { width, rd: c.reg(o(0))?, frs1: c.freg(o(1))? }]
+                }
+                "fcvt.w" | "fcvt.wu" => {
+                    need(2)?;
+                    vec![Instr::FpCvtToInt { width, signed: base == "fcvt.w", rd: c.reg(o(0))?, frs1: c.freg(o(1))? }]
+                }
+                "fcvt.s" | "fcvt.d" if m == "fcvt.s.d" || m == "fcvt.d.s" => {
+                    need(2)?;
+                    let to = if m == "fcvt.s.d" { FpWidth::S } else { FpWidth::D };
+                    vec![Instr::FpCvtFF { to, frd: c.freg(o(0))?, frs1: c.freg(o(1))? }]
+                }
+                _ => return err(line, format!("unknown instruction `{m}`")),
+            }
+        }
+        // fcvt.{s,d}.w[u] — suffix is .w/.wu so not caught above
+        "fcvt.s.w" | "fcvt.d.w" | "fcvt.s.wu" | "fcvt.d.wu" => {
+            need(2)?;
+            let width = if mnemonic.starts_with("fcvt.s") { FpWidth::S } else { FpWidth::D };
+            let signed = !mnemonic.ends_with("wu");
+            vec![Instr::FpCvtFromInt { width, signed, frd: c.freg(o(0))?, rs1: c.reg(o(1))? }]
+        }
+        "fmv.x.w" => {
+            need(2)?;
+            vec![Instr::FpMvToInt { rd: c.reg(o(0))?, frs1: c.freg(o(1))? }]
+        }
+        "fmv.w.x" => {
+            need(2)?;
+            vec![Instr::FpMvFromInt { frd: c.freg(o(0))?, rs1: c.reg(o(1))? }]
+        }
+        other => return err(line, format!("unknown instruction `{other}`")),
+    })
+}

@@ -1,0 +1,687 @@
+//! The Snitch core complex (paper Fig. 2 ④): integer core + FP subsystem +
+//! two SSR streamer lanes + FREP sequencer, and the per-cycle orchestration
+//! of fetch, execute, offload, memory ports and write-back arbitration.
+//!
+//! Port wiring (matching "each core has two ports into the TCDM"):
+//! * port 0: integer LSU (highest priority), FP LSU, SSR lane 0;
+//! * port 1: SSR lane 1.
+//!
+//! Register-file write-port arbitration (§2.1.1.3): a single-cycle
+//! instruction that writes the RF wins the port; otherwise one queued
+//! write-back (LSU responses before accelerator responses — the queue
+//! preserves that order) retires per cycle.
+
+use std::collections::VecDeque;
+
+use crate::core::{alu, branch_taken, load_extend, SnitchCore, Stall};
+use crate::fpss::{FpIssue, FpSubsystem};
+use crate::frep::{FpssOp, FrepConfig, Offer, Sequencer};
+use crate::icache::Fetch;
+use crate::isa::csr::{self, decode_ssr_csr};
+use crate::isa::disasm::disasm;
+use crate::isa::{CsrOp, CsrSrc, FReg, FpWidth, Instr, LoadOp, Reg};
+use crate::mem::{periph, region, MemOp, Region, TcdmRequest};
+use crate::ssr::SsrLane;
+
+use super::config::ClusterConfig;
+use super::stats::{CounterSet, RegionStats, StallCounters};
+use super::{Cluster, TraceEvent};
+
+/// Who owns the single outstanding request of a TCDM port.
+#[derive(Debug, Clone, Copy)]
+pub enum PortOwner {
+    IntLoad { rd: Reg, op: LoadOp },
+    IntStore,
+    Amo { rd: Reg },
+    FpLoad { frd: FReg, width: FpWidth },
+    FpStore,
+    SsrRead(usize),
+    SsrWrite(usize),
+}
+
+/// Owner of an outstanding external-memory access.
+#[derive(Debug, Clone, Copy)]
+pub enum ExtOwner {
+    IntLoad { rd: Reg, op: LoadOp },
+    IntStore,
+    FpLoad { frd: FReg, width: FpWidth },
+    FpStore,
+}
+
+/// One core complex.
+pub struct CoreComplex {
+    pub core: SnitchCore,
+    pub fpss: FpSubsystem,
+    pub lanes: [SsrLane; 2],
+    pub seq: Sequencer,
+    pub port_owner: [Option<PortOwner>; 2],
+    pub ext_owner: Option<ExtOwner>,
+    /// Pending integer RF write-backs (LSU and accelerator responses),
+    /// drained one per cycle when the write port is free.
+    pub wb_queue: VecDeque<(Reg, u32)>,
+    /// Parked on the hardware barrier (holds the destination register).
+    pub barrier_wait: Option<Reg>,
+    /// Latched wake-up IPI (arrived before `wfi`).
+    pub wake_pending: bool,
+    pub stalls: StallCounters,
+    pub int_loads: u64,
+    pub int_stores: u64,
+    /// Open measurement region: (start cycle, counter snapshot).
+    pub region_start: Option<(u64, CounterSet)>,
+    /// Closed (accumulated) measurement region.
+    pub region: Option<RegionStats>,
+}
+
+impl CoreComplex {
+    pub fn new(hartid: usize, cfg: &ClusterConfig) -> CoreComplex {
+        CoreComplex {
+            core: SnitchCore::new(hartid as u32, 0),
+            fpss: FpSubsystem::new(cfg.fpu_latency),
+            lanes: [SsrLane::new(), SsrLane::new()],
+            seq: Sequencer::new(),
+            port_owner: [None, None],
+            ext_owner: None,
+            wb_queue: VecDeque::new(),
+            barrier_wait: None,
+            wake_pending: false,
+            stalls: StallCounters::default(),
+            int_loads: 0,
+            int_stores: 0,
+            region_start: None,
+            region: None,
+        }
+    }
+
+    fn lanes_idle(&self) -> bool {
+        self.lanes[0].idle() && self.lanes[1].idle()
+    }
+
+    /// Everything drained: used by `fence` and the run-exit check.
+    pub fn quiet(&self) -> bool {
+        self.seq.idle()
+            && self.fpss.quiesced()
+            && self.lanes_idle()
+            && self.wb_queue.is_empty()
+            && self.port_owner[0].is_none()
+            && self.port_owner[1].is_none()
+            && self.ext_owner.is_none()
+    }
+}
+
+/// Outcome of the integer core's execute phase.
+enum Action {
+    Retire { next_pc: u32, wrote_rf: bool },
+    Stall(Stall),
+}
+
+/// Advance core complex `idx` by one cycle.
+pub fn step(cl: &mut Cluster, idx: usize) {
+    let Cluster { cfg, ccs, tcdm, ext, muldivs, icaches, periph, program, now, trace, .. } = cl;
+    let now = *now;
+    let hive = idx / cfg.cores_per_hive;
+    let local = idx % cfg.cores_per_hive;
+    let cc = &mut ccs[idx];
+
+    // ------------------------------------------------------------------
+    // 1. Collect memory responses from the previous cycle.
+    // ------------------------------------------------------------------
+    for p in 0..2 {
+        if let Some(resp) = tcdm.take_response(2 * idx + p, now) {
+            match cc.port_owner[p].take().expect("response without owner") {
+                PortOwner::IntLoad { rd, op } => {
+                    cc.wb_queue.push_back((rd, load_extend(op, resp.data)));
+                }
+                PortOwner::IntStore | PortOwner::FpStore | PortOwner::SsrWrite(_) => {}
+                PortOwner::Amo { rd } => cc.wb_queue.push_back((rd, resp.data as u32)),
+                PortOwner::FpLoad { frd, width } => cc.fpss.load_response(frd, width, resp.data),
+                PortOwner::SsrRead(l) => cc.lanes[l].on_read_data(f64::from_bits(resp.data)),
+            }
+        }
+    }
+    if let Some(resp) = ext.take_response(idx) {
+        match cc.ext_owner.take().expect("ext response without owner") {
+            ExtOwner::IntLoad { rd, op } => {
+                cc.wb_queue.push_back((rd, load_extend(op, resp.data)));
+            }
+            ExtOwner::IntStore | ExtOwner::FpStore => {}
+            ExtOwner::FpLoad { frd, width } => cc.fpss.load_response(frd, width, resp.data),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // 2. FP-SS retire + accelerator write-backs toward the integer core.
+    // ------------------------------------------------------------------
+    cc.fpss.retire(now, &mut cc.lanes);
+    if let Some((rd, v)) = cc.fpss.take_int_result(now) {
+        cc.wb_queue.push_back((Reg::new(rd), v));
+    }
+    if let Some(r) = muldivs[hive].take_response(local, now) {
+        cc.wb_queue.push_back((Reg::new(r.rd), r.value));
+    }
+
+    // ------------------------------------------------------------------
+    // 3. Integer core: fetch + execute one instruction (phase A).
+    // ------------------------------------------------------------------
+    let mut wrote_rf = false;
+    if !cc.core.halted && cc.barrier_wait.is_none() {
+        if cc.core.sleeping {
+            if cc.wake_pending {
+                cc.wake_pending = false;
+                cc.core.sleeping = false;
+            } else {
+                cc.stalls.wfi += 1;
+            }
+        }
+        if !cc.core.sleeping {
+            match icaches[hive].fetch(local, cc.core.pc, now) {
+                Fetch::Miss => cc.stalls.fetch += 1,
+                Fetch::Hit => {
+                    let pc = cc.core.pc;
+                    let instr = program
+                        .instr_at(pc)
+                        .unwrap_or_else(|| panic!("illegal instruction fetch at {pc:#x}"));
+                    let action = execute(
+                        cc, &instr, idx, now, cfg, tcdm, ext, muldivs, periph, hive, local,
+                    );
+                    match action {
+                        Action::Retire { next_pc, wrote_rf: w } => {
+                            if cfg.trace {
+                                trace.push(TraceEvent {
+                                    cycle: now,
+                                    core: idx,
+                                    unit: "snitch",
+                                    text: format!("{pc:#06x} {}", disasm(&instr)),
+                                });
+                            }
+                            cc.core.pc = next_pc;
+                            wrote_rf = w;
+                        }
+                        Action::Stall(s) => {
+                            let b = &mut cc.stalls;
+                            match s {
+                                Stall::Fetch => b.fetch += 1,
+                                Stall::Scoreboard => b.scoreboard += 1,
+                                Stall::MemPort => b.mem_port += 1,
+                                Stall::Offload => b.offload += 1,
+                                Stall::MulDiv => b.muldiv += 1,
+                                Stall::SsrConfig => b.ssr_config += 1,
+                                Stall::Barrier => b.barrier += 1,
+                                Stall::Drain => b.drain += 1,
+                                Stall::Wfi => b.wfi += 1,
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // 4. Write-back arbitration (phase B): single RF write port.
+    // ------------------------------------------------------------------
+    if !wrote_rf {
+        if let Some((rd, v)) = cc.wb_queue.pop_front() {
+            cc.core.writeback(rd, v);
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // 5. FP-SS issue (one instruction per cycle from the sequencer head).
+    // ------------------------------------------------------------------
+    if let Some(op) = cc.seq.peek().copied() {
+        let port0_free = cc.port_owner[0].is_none() && tcdm.port_free(2 * idx);
+        let mem_target = matches!(op.instr, Instr::FpLoad { .. } | Instr::FpStore { .. })
+            .then(|| region(op.int_payload, cfg.tcdm_size));
+        // External FP accesses need the ext port instead.
+        let port_free = match mem_target {
+            Some(Region::Ext) => cc.ext_owner.is_none(),
+            _ => port0_free,
+        };
+        let issued = cc.fpss.try_issue(&op, &mut cc.lanes, now, port_free);
+        match issued {
+            FpIssue::Stall => {}
+            FpIssue::Done => {
+                cc.seq.pop();
+                trace_fpss(cfg, trace, now, idx, &op);
+            }
+            FpIssue::Load { addr, frd, width } => {
+                match region(addr, cfg.tcdm_size) {
+                    Region::Tcdm => {
+                        tcdm.submit(
+                            2 * idx,
+                            TcdmRequest { addr, op: MemOp::Read { size: width.size() as u8 } },
+                        );
+                        cc.port_owner[0] = Some(PortOwner::FpLoad { frd, width });
+                    }
+                    Region::Ext => {
+                        ext.submit(idx, addr, MemOp::Read { size: width.size() as u8 }, now);
+                        cc.ext_owner = Some(ExtOwner::FpLoad { frd, width });
+                    }
+                    other => panic!("fp load to {other:?} at {addr:#x}"),
+                }
+                cc.seq.pop();
+                trace_fpss(cfg, trace, now, idx, &op);
+            }
+            FpIssue::Store { addr, value, size } => {
+                match region(addr, cfg.tcdm_size) {
+                    Region::Tcdm => {
+                        tcdm.submit(2 * idx, TcdmRequest { addr, op: MemOp::Write { data: value, size } });
+                        cc.port_owner[0] = Some(PortOwner::FpStore);
+                    }
+                    Region::Ext => {
+                        ext.submit(idx, addr, MemOp::Write { data: value, size }, now);
+                        cc.ext_owner = Some(ExtOwner::FpStore);
+                    }
+                    other => panic!("fp store to {other:?} at {addr:#x}"),
+                }
+                cc.seq.pop();
+                trace_fpss(cfg, trace, now, idx, &op);
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // 6. SSR streamers use their TCDM ports (lane 0 → port 0 leftover,
+    //    lane 1 → port 1).
+    // ------------------------------------------------------------------
+    for l in 0..2 {
+        let port = 2 * idx + l;
+        if cc.port_owner[l].is_some() || !tcdm.port_free(port) {
+            continue;
+        }
+        if let Some((addr, wr)) = cc.lanes[l].mem_request() {
+            debug_assert!(
+                region(addr, cfg.tcdm_size) == Region::Tcdm,
+                "SSR stream outside TCDM at {addr:#x}"
+            );
+            match wr {
+                None => {
+                    tcdm.submit(port, TcdmRequest { addr, op: MemOp::Read { size: 8 } });
+                    cc.port_owner[l] = Some(PortOwner::SsrRead(l));
+                }
+                Some(v) => {
+                    tcdm.submit(
+                        port,
+                        TcdmRequest { addr, op: MemOp::Write { data: v.to_bits(), size: 8 } },
+                    );
+                    cc.port_owner[l] = Some(PortOwner::SsrWrite(l));
+                }
+            }
+            cc.lanes[l].on_grant();
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // 7. Sequencer emits the next buffered instruction.
+    // ------------------------------------------------------------------
+    cc.seq.step();
+}
+
+fn trace_fpss(cfg: &ClusterConfig, trace: &mut Vec<TraceEvent>, now: u64, idx: usize, op: &FpssOp) {
+    if cfg.trace {
+        let tag = if op.from_sequencer { " (seq)" } else { "" };
+        trace.push(TraceEvent {
+            cycle: now,
+            core: idx,
+            unit: "fpss",
+            text: format!("{}{tag}", disasm(&op.instr)),
+        });
+    }
+}
+
+/// Execute one integer-core instruction (phase A decision).
+#[allow(clippy::too_many_arguments)]
+fn execute(
+    cc: &mut CoreComplex,
+    instr: &Instr,
+    idx: usize,
+    now: u64,
+    cfg: &ClusterConfig,
+    tcdm: &mut crate::mem::Tcdm,
+    ext: &mut crate::mem::ExtMemory,
+    muldivs: &mut [crate::muldiv::MulDivUnit],
+    periph: &mut super::Peripherals,
+    hive: usize,
+    local: usize,
+) -> Action {
+    let pc = cc.core.pc;
+    let next = pc.wrapping_add(4);
+    let port0_free = cc.port_owner[0].is_none() && tcdm.port_free(2 * idx);
+
+    macro_rules! need_ready {
+        ($($r:expr),+) => {
+            if $(!cc.core.ready($r))||+ {
+                return Action::Stall(Stall::Scoreboard);
+            }
+        };
+    }
+
+    let retire_int = |cc: &mut CoreComplex, next_pc: u32, wrote_rf: bool| {
+        cc.core.instret += 1;
+        Action::Retire { next_pc, wrote_rf }
+    };
+    let retire_offload = |cc: &mut CoreComplex, next_pc: u32| {
+        cc.core.offloaded += 1;
+        Action::Retire { next_pc, wrote_rf: false }
+    };
+
+    match *instr {
+        Instr::Lui { rd, imm } => {
+            need_ready!(rd);
+            cc.core.set_reg(rd, imm as u32);
+            retire_int(cc, next, true)
+        }
+        Instr::Auipc { rd, imm } => {
+            need_ready!(rd);
+            cc.core.set_reg(rd, pc.wrapping_add(imm as u32));
+            retire_int(cc, next, true)
+        }
+        Instr::Jal { rd, offset } => {
+            need_ready!(rd);
+            cc.core.set_reg(rd, next);
+            retire_int(cc, pc.wrapping_add(offset as u32), !rd.is_zero())
+        }
+        Instr::Jalr { rd, rs1, offset } => {
+            need_ready!(rs1, rd);
+            let target = cc.core.reg(rs1).wrapping_add(offset as u32) & !1;
+            cc.core.set_reg(rd, next);
+            retire_int(cc, target, !rd.is_zero())
+        }
+        Instr::Branch { op, rs1, rs2, offset } => {
+            need_ready!(rs1, rs2);
+            let taken = branch_taken(op, cc.core.reg(rs1), cc.core.reg(rs2));
+            retire_int(cc, if taken { pc.wrapping_add(offset as u32) } else { next }, false)
+        }
+        Instr::OpImm { op, rd, rs1, imm } => {
+            need_ready!(rs1, rd);
+            let v = alu(op, cc.core.reg(rs1), imm as u32);
+            cc.core.set_reg(rd, v);
+            retire_int(cc, next, true)
+        }
+        Instr::Op { op, rd, rs1, rs2 } => {
+            need_ready!(rs1, rs2, rd);
+            let v = alu(op, cc.core.reg(rs1), cc.core.reg(rs2));
+            cc.core.set_reg(rd, v);
+            retire_int(cc, next, true)
+        }
+        Instr::Load { op, rd, rs1, offset } => {
+            need_ready!(rs1, rd);
+            let addr = cc.core.reg(rs1).wrapping_add(offset as u32);
+            match region(addr, cfg.tcdm_size) {
+                Region::Tcdm => {
+                    if !port0_free {
+                        return Action::Stall(Stall::MemPort);
+                    }
+                    tcdm.submit(
+                        2 * idx,
+                        TcdmRequest { addr, op: MemOp::Read { size: op.size() as u8 } },
+                    );
+                    cc.port_owner[0] = Some(PortOwner::IntLoad { rd, op });
+                    cc.core.mark_busy(rd);
+                    cc.int_loads += 1;
+                    retire_int(cc, next, false)
+                }
+                Region::Ext => {
+                    if cc.ext_owner.is_some() {
+                        return Action::Stall(Stall::MemPort);
+                    }
+                    ext.submit(idx, addr, MemOp::Read { size: op.size() as u8 }, now);
+                    cc.ext_owner = Some(ExtOwner::IntLoad { rd, op });
+                    cc.core.mark_busy(rd);
+                    cc.int_loads += 1;
+                    retire_int(cc, next, false)
+                }
+                Region::Periph => {
+                    let off = addr - crate::mem::PERIPH_BASE;
+                    if off == periph::BARRIER {
+                        cc.barrier_wait = Some(rd);
+                        cc.core.mark_busy(rd);
+                        return retire_int(cc, next, false);
+                    }
+                    let v = periph.read(off, now, cfg.tcdm_size, tcdm.conflict_cycles);
+                    cc.core.mark_busy(rd);
+                    cc.wb_queue.push_back((rd, v));
+                    cc.int_loads += 1;
+                    retire_int(cc, next, false)
+                }
+                other => panic!("load from {other:?} at {addr:#x} (pc={pc:#x})"),
+            }
+        }
+        Instr::Store { op, rs1, rs2, offset } => {
+            need_ready!(rs1, rs2);
+            let addr = cc.core.reg(rs1).wrapping_add(offset as u32);
+            let data = u64::from(cc.core.reg(rs2));
+            match region(addr, cfg.tcdm_size) {
+                Region::Tcdm => {
+                    if !port0_free {
+                        return Action::Stall(Stall::MemPort);
+                    }
+                    tcdm.submit(
+                        2 * idx,
+                        TcdmRequest { addr, op: MemOp::Write { data, size: op.size() as u8 } },
+                    );
+                    cc.port_owner[0] = Some(PortOwner::IntStore);
+                    cc.int_stores += 1;
+                    retire_int(cc, next, false)
+                }
+                Region::Ext => {
+                    if cc.ext_owner.is_some() {
+                        return Action::Stall(Stall::MemPort);
+                    }
+                    ext.submit(idx, addr, MemOp::Write { data, size: op.size() as u8 }, now);
+                    cc.ext_owner = Some(ExtOwner::IntStore);
+                    cc.int_stores += 1;
+                    retire_int(cc, next, false)
+                }
+                Region::Periph => {
+                    let off = addr - crate::mem::PERIPH_BASE;
+                    match off {
+                        periph::WAKEUP => periph.pending_wake |= data as u32,
+                        periph::PERF_REGION => {
+                            if data != 0 {
+                                cc.region_start = Some((now, CounterSet::from_cc(cc)));
+                            } else if let Some((start, snap)) = cc.region_start.take() {
+                                let delta = CounterSet::from_cc(cc).delta(&snap);
+                                let mut r = cc.region.unwrap_or_default();
+                                if r.cycles == 0 {
+                                    r.start = start;
+                                }
+                                r.cycles += now - start;
+                                r.counters.add(&delta);
+                                cc.region = Some(r);
+                            }
+                        }
+                        periph::EOC => {
+                            cc.core.halted = true;
+                        }
+                        0x30 => periph.scratch[0] = data as u32,
+                        0x34 => periph.scratch[1] = data as u32,
+                        _ => {}
+                    }
+                    retire_int(cc, next, false)
+                }
+                other => panic!("store to {other:?} at {addr:#x} (pc={pc:#x})"),
+            }
+        }
+        Instr::MulDiv { op, rd, rs1, rs2 } => {
+            need_ready!(rs1, rs2, rd);
+            if !muldivs[hive].can_accept(local) {
+                return Action::Stall(Stall::MulDiv);
+            }
+            muldivs[hive].submit(
+                local,
+                crate::muldiv::MulDivReq {
+                    op,
+                    rs1: cc.core.reg(rs1),
+                    rs2: cc.core.reg(rs2),
+                    rd: rd.index() as u8,
+                },
+            );
+            cc.core.mark_busy(rd);
+            retire_offload(cc, next)
+        }
+        Instr::Amo { op, rd, rs1, rs2 } => {
+            need_ready!(rs1, rs2, rd);
+            let addr = cc.core.reg(rs1);
+            if region(addr, cfg.tcdm_size) != Region::Tcdm {
+                panic!("AMO outside TCDM at {addr:#x}");
+            }
+            if !port0_free {
+                return Action::Stall(Stall::MemPort);
+            }
+            tcdm.submit(
+                2 * idx,
+                TcdmRequest { addr, op: MemOp::Amo { op, data: cc.core.reg(rs2) } },
+            );
+            cc.port_owner[0] = Some(PortOwner::Amo { rd });
+            cc.core.mark_busy(rd);
+            cc.int_loads += 1;
+            retire_int(cc, next, false)
+        }
+        Instr::Csr { op, rd, csr: addr, src } => {
+            need_ready!(rd);
+            let src_val = match src {
+                CsrSrc::Reg(r) => {
+                    need_ready!(r);
+                    cc.core.reg(r)
+                }
+                CsrSrc::Imm(i) => u32::from(i),
+            };
+            let writes = match (op, src) {
+                (CsrOp::Rw, _) => true,
+                (_, CsrSrc::Reg(r)) => !r.is_zero(),
+                (_, CsrSrc::Imm(i)) => i != 0,
+            };
+            // Read old value.
+            let old = match addr {
+                csr::MHARTID => cc.core.hartid,
+                csr::MCYCLE | csr::CYCLE => now as u32,
+                csr::MINSTRET | csr::INSTRET => cc.core.instret as u32,
+                csr::SSR_ENABLE => u32::from(cc.fpss.ssr_enabled),
+                a => match decode_ssr_csr(a) {
+                    Some(which) => {
+                        let lane = match which {
+                            csr::SsrCsr::Repeat { lane }
+                            | csr::SsrCsr::Bound { lane, .. }
+                            | csr::SsrCsr::Stride { lane, .. }
+                            | csr::SsrCsr::ReadPtr { lane, .. }
+                            | csr::SsrCsr::WritePtr { lane, .. } => lane,
+                        };
+                        cc.lanes[lane].csr_read(which)
+                    }
+                    None => 0,
+                },
+            };
+            if writes {
+                let new = match op {
+                    CsrOp::Rw => src_val,
+                    CsrOp::Rs => old | src_val,
+                    CsrOp::Rc => old & !src_val,
+                };
+                match addr {
+                    csr::SSR_ENABLE => {
+                        if new & 1 != 0 {
+                            cc.fpss.ssr_enabled = true;
+                        } else {
+                            // Disabling waits for all streams to drain so
+                            // results are architecturally visible.
+                            if !(cc.lanes_idle() && cc.seq.idle() && cc.fpss.quiesced()) {
+                                return Action::Stall(Stall::Drain);
+                            }
+                            cc.fpss.ssr_enabled = false;
+                        }
+                    }
+                    a => {
+                        if let Some(which) = decode_ssr_csr(a) {
+                            let lane = match which {
+                                csr::SsrCsr::Repeat { lane }
+                                | csr::SsrCsr::Bound { lane, .. }
+                                | csr::SsrCsr::Stride { lane, .. }
+                                | csr::SsrCsr::ReadPtr { lane, .. }
+                                | csr::SsrCsr::WritePtr { lane, .. } => lane,
+                            };
+                            if !cc.lanes[lane].csr_write(which, new) {
+                                return Action::Stall(Stall::SsrConfig);
+                            }
+                        }
+                        // Other CSRs: writes ignored (read-only counters).
+                    }
+                }
+            }
+            let wrote = !rd.is_zero();
+            cc.core.set_reg(rd, old);
+            retire_int(cc, next, wrote)
+        }
+        Instr::Fence => {
+            if cc.quiet() {
+                retire_int(cc, next, false)
+            } else {
+                Action::Stall(Stall::Drain)
+            }
+        }
+        Instr::Ecall | Instr::Ebreak => {
+            cc.core.halted = true;
+            retire_int(cc, next, false)
+        }
+        Instr::Wfi => {
+            if cc.wake_pending {
+                cc.wake_pending = false;
+            } else {
+                cc.core.sleeping = true;
+            }
+            retire_int(cc, next, false)
+        }
+        Instr::Frep { is_outer, max_rep, max_inst, stagger_mask, stagger_count } => {
+            need_ready!(max_rep);
+            let cfg_f = FrepConfig {
+                is_outer,
+                max_inst,
+                max_rep: cc.core.reg(max_rep),
+                stagger_mask,
+                stagger_count,
+            };
+            match cc.seq.offer_frep(cfg_f) {
+                Offer::Accepted => retire_offload(cc, next),
+                Offer::Stall => Action::Stall(Stall::Offload),
+            }
+        }
+        // ----- all FP instructions: offload over the accelerator port -----
+        ref fp_instr if fp_instr.is_fp() => {
+            let mut payload = 0u32;
+            match *fp_instr {
+                Instr::FpLoad { rs1, offset, .. } | Instr::FpStore { rs1, offset, .. } => {
+                    need_ready!(rs1);
+                    payload = cc.core.reg(rs1).wrapping_add(offset as u32);
+                }
+                Instr::FpCvtFromInt { rs1, .. } | Instr::FpMvFromInt { rs1, .. } => {
+                    need_ready!(rs1);
+                    payload = cc.core.reg(rs1);
+                }
+                Instr::FpCmp { rd, .. }
+                | Instr::FpCvtToInt { rd, .. }
+                | Instr::FpMvToInt { rd, .. }
+                | Instr::FpClass { rd, .. } => {
+                    need_ready!(rd);
+                    payload = rd.index() as u32;
+                }
+                _ => {}
+            }
+            let op = FpssOp { instr: *fp_instr, int_payload: payload, from_sequencer: false };
+            match cc.seq.offer(op) {
+                Offer::Accepted => {
+                    // Results that come back to the integer RF scoreboard rd.
+                    if let Instr::FpCmp { rd, .. }
+                    | Instr::FpCvtToInt { rd, .. }
+                    | Instr::FpMvToInt { rd, .. }
+                    | Instr::FpClass { rd, .. } = *fp_instr
+                    {
+                        cc.core.mark_busy(rd);
+                    }
+                    retire_offload(cc, next)
+                }
+                Offer::Stall => Action::Stall(Stall::Offload),
+            }
+        }
+        ref other => panic!("unhandled instruction {other:?} at {pc:#x}"),
+    }
+}

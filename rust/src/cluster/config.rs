@@ -1,0 +1,116 @@
+//! Cluster configuration knobs (paper §2: "All the parameters can be
+//! freely adjusted").
+
+use crate::fpss::FpuLatency;
+
+/// Integer-core implementation options. These do not change timing — they
+//  change the area/energy models exactly as the paper's Fig. 11 explores.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IsaVariant {
+    /// RV32I: 31 general-purpose registers.
+    Rv32I,
+    /// RV32E: 15 general-purpose registers (smaller RF).
+    Rv32E,
+}
+
+/// Register-file implementation choice (area/energy model input).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RfImpl {
+    /// D-latch based: ~50 % smaller.
+    Latch,
+    /// D-flip-flop based: for libraries without latch support.
+    FlipFlop,
+}
+
+/// Full cluster configuration. Default = the paper's evaluated octa-core
+/// cluster: 2 hives × 4 cores, 128 KiB TCDM in 32 banks (banking factor 2),
+/// 8 KiB shared instruction cache.
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterConfig {
+    pub num_hives: usize,
+    pub cores_per_hive: usize,
+    /// TCDM capacity in bytes.
+    pub tcdm_size: u32,
+    pub tcdm_banks: usize,
+    /// Shared L1 I$ capacity in bytes.
+    pub l1i_size: u32,
+    pub fpu_latency: FpuLatency,
+    /// Record a per-cycle execution trace (Fig. 6-style).
+    pub trace: bool,
+    // ---- area/energy model inputs (no timing impact) ----
+    pub isa: IsaVariant,
+    pub rf: RfImpl,
+    /// Performance monitoring counters present (adds ~2 kGE).
+    pub pmcs: bool,
+    /// SSR hardware present.
+    pub has_ssr: bool,
+    /// FREP sequence buffer present.
+    pub has_frep: bool,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            num_hives: 2,
+            cores_per_hive: 4,
+            tcdm_size: 128 << 10,
+            tcdm_banks: 32,
+            l1i_size: 8 << 10,
+            fpu_latency: FpuLatency::default(),
+            trace: false,
+            isa: IsaVariant::Rv32I,
+            rf: RfImpl::FlipFlop,
+            pmcs: true,
+            has_ssr: true,
+            has_frep: true,
+        }
+    }
+}
+
+impl ClusterConfig {
+    pub fn num_cores(&self) -> usize {
+        self.num_hives * self.cores_per_hive
+    }
+
+    /// A cluster with `n` cores, keeping the paper's 4-cores-per-hive
+    /// grouping (1 core → 1 hive of 1, like the paper's "a Hive can just
+    /// contain one core").
+    pub fn with_cores(n: usize) -> ClusterConfig {
+        let mut c = ClusterConfig::default();
+        if n <= 4 {
+            c.num_hives = 1;
+            c.cores_per_hive = n;
+        } else {
+            assert!(n % 4 == 0, "core counts above 4 must be multiples of 4");
+            c.num_hives = n / 4;
+            c.cores_per_hive = 4;
+        }
+        // Keep banking factor 2 (two banks per initiator port, two ports
+        // per core), as in §2.3.1.
+        c.tcdm_banks = (4 * n).next_power_of_two();
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_paper() {
+        let c = ClusterConfig::default();
+        assert_eq!(c.num_cores(), 8);
+        assert_eq!(c.tcdm_size, 128 << 10);
+        assert_eq!(c.tcdm_banks, 32);
+        assert_eq!(c.l1i_size, 8 << 10);
+    }
+
+    #[test]
+    fn with_cores_scales_banks() {
+        assert_eq!(ClusterConfig::with_cores(1).tcdm_banks, 4);
+        assert_eq!(ClusterConfig::with_cores(8).tcdm_banks, 32);
+        assert_eq!(ClusterConfig::with_cores(16).tcdm_banks, 64);
+        assert_eq!(ClusterConfig::with_cores(32).tcdm_banks, 128);
+        assert_eq!(ClusterConfig::with_cores(2).num_cores(), 2);
+    }
+}

@@ -1,0 +1,664 @@
+//! Cluster assembly: core complexes, hives, peripherals, and the
+//! cycle-accurate orchestration (paper Fig. 2).
+//!
+//! A [`Cluster`] owns `num_hives × cores_per_hive` core complexes (Snitch
+//! core + FP-SS + 2 SSR lanes + FREP sequencer), one shared mul/div unit
+//! and L0/L1 instruction cache system per hive, the banked TCDM, the
+//! cluster peripherals, and the external memory behind the AXI crossbar.
+//!
+//! ## Cycle ordering
+//!
+//! Each [`Cluster::cycle`] advances one clock:
+//! 1. instruction caches, external memory and mul/div units settle;
+//! 2. every core complex steps ([`cc`] module): collect memory responses,
+//!    retire FPU results, execute at most one integer instruction
+//!    (possibly offloading), issue from the FP-SS, let the streamers use
+//!    free TCDM ports, advance the sequencer;
+//! 3. the TCDM arbitrates all submitted requests (responses visible next
+//!    cycle);
+//! 4. the peripherals resolve the hardware barrier and wake-up IPIs.
+
+pub mod cc;
+pub mod config;
+pub mod periph;
+pub mod stats;
+
+use crate::asm::Program;
+use crate::icache::ICacheSystem;
+use crate::isa::decode::decode;
+use crate::isa::Instr;
+use crate::mem::{ExtMemory, Tcdm, IMEM_BASE, IMEM_SIZE, TCDM_BASE};
+use crate::muldiv::MulDivUnit;
+
+pub use cc::CoreComplex;
+pub use config::ClusterConfig;
+pub use periph::Peripherals;
+pub use stats::{ClusterStats, CounterSet, RegionStats};
+
+/// The program image: raw bytes (for the I$ model) plus the pre-decoded
+/// instruction array the single-stage core executes from.
+pub struct LoadedProgram {
+    pub imem: Vec<u8>,
+    pub decoded: Vec<Option<Instr>>,
+    pub entry: u32,
+}
+
+impl LoadedProgram {
+    fn empty() -> LoadedProgram {
+        LoadedProgram {
+            imem: vec![0; IMEM_SIZE as usize],
+            decoded: vec![None; (IMEM_SIZE / 4) as usize],
+            entry: 0,
+        }
+    }
+
+    /// Decoded instruction at `pc` (None = not yet decoded / data).
+    pub fn instr_at(&self, pc: u32) -> Option<Instr> {
+        let idx = ((pc - IMEM_BASE) / 4) as usize;
+        self.decoded.get(idx).copied().flatten()
+    }
+}
+
+/// A cycle-stamped trace event (paper Fig. 6-style dual-lane trace).
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub cycle: u64,
+    pub core: usize,
+    /// "snitch" (integer pipeline) or "fpss" (FP subsystem issue).
+    pub unit: &'static str,
+    pub text: String,
+}
+
+/// The Snitch cluster.
+pub struct Cluster {
+    pub cfg: ClusterConfig,
+    pub ccs: Vec<CoreComplex>,
+    pub tcdm: Tcdm,
+    pub ext: ExtMemory,
+    /// One shared mul/div unit per hive.
+    pub muldivs: Vec<MulDivUnit>,
+    /// One L0/L1 I$ system per hive.
+    pub icaches: Vec<ICacheSystem>,
+    pub periph: Peripherals,
+    pub program: LoadedProgram,
+    pub now: u64,
+    /// Optional execution trace (enable via `cfg.trace`).
+    pub trace: Vec<TraceEvent>,
+}
+
+impl Cluster {
+    pub fn new(cfg: ClusterConfig) -> Cluster {
+        let n = cfg.num_cores();
+        Cluster {
+            ccs: (0..n).map(|i| CoreComplex::new(i, &cfg)).collect(),
+            tcdm: Tcdm::new(TCDM_BASE, cfg.tcdm_size, cfg.tcdm_banks, 2 * n),
+            ext: ExtMemory::new(n),
+            muldivs: (0..cfg.num_hives).map(|_| MulDivUnit::new(cfg.cores_per_hive)).collect(),
+            icaches: (0..cfg.num_hives)
+                .map(|_| ICacheSystem::new(cfg.cores_per_hive, cfg.l1i_size))
+                .collect(),
+            periph: Peripherals::new(n),
+            program: LoadedProgram::empty(),
+            now: 0,
+            trace: Vec::new(),
+            cfg,
+        }
+    }
+
+    /// Load an assembled program: code into instruction memory, data
+    /// segments into the TCDM / external memory. All cores start at the
+    /// program entry.
+    pub fn load(&mut self, prog: &Program) {
+        for seg in &prog.segments {
+            let region = crate::mem::region(seg.base, self.tcdm.size());
+            match region {
+                crate::mem::Region::Imem => {
+                    let o = (seg.base - IMEM_BASE) as usize;
+                    self.program.imem[o..o + seg.bytes.len()].copy_from_slice(&seg.bytes);
+                    for (i, w) in seg.bytes.chunks_exact(4).enumerate() {
+                        let word = u32::from_le_bytes([w[0], w[1], w[2], w[3]]);
+                        self.program.decoded[o / 4 + i] = decode(word).ok();
+                    }
+                }
+                crate::mem::Region::Tcdm => {
+                    for (i, b) in seg.bytes.iter().enumerate() {
+                        self.tcdm.write(seg.base + i as u32, u64::from(*b), 1);
+                    }
+                }
+                crate::mem::Region::Ext => self.ext.load(seg.base, &seg.bytes),
+                other => panic!("segment at {:#x} loads into {:?}", seg.base, other),
+            }
+        }
+        self.program.entry = prog.entry;
+        for cc in &mut self.ccs {
+            cc.core.pc = prog.entry;
+        }
+    }
+
+    /// Put cores `active..` directly into the halted state (e.g. to run a
+    /// single-core experiment on a one-core configuration the paper style
+    /// is to *instantiate* a smaller cluster; this is for tests).
+    pub fn halt_cores_from(&mut self, active: usize) {
+        for cc in self.ccs.iter_mut().skip(active) {
+            cc.core.halted = true;
+        }
+    }
+
+    /// Advance one clock cycle.
+    pub fn cycle(&mut self) {
+        let now = self.now;
+        for ic in &mut self.icaches {
+            ic.step(now);
+        }
+        self.ext.step(now);
+        for cc_idx in 0..self.ccs.len() {
+            cc::step(self, cc_idx);
+        }
+        for md in &mut self.muldivs {
+            md.step(now);
+        }
+        self.tcdm.step(now);
+        periph::settle(self);
+        self.now += 1;
+    }
+
+    /// True when every core has halted *and* all in-flight traffic
+    /// (stores, streams, FPU pipeline) has drained — results are only
+    /// architecturally visible then.
+    pub fn done(&self) -> bool {
+        self.ccs.iter().all(|cc| cc.core.halted && cc.quiet())
+    }
+
+    /// Run until completion or `max_cycles`. Returns the cycle count.
+    pub fn run(&mut self, max_cycles: u64) -> Result<u64, String> {
+        while !self.done() {
+            if self.now >= max_cycles {
+                let stuck: Vec<String> = self
+                    .ccs
+                    .iter()
+                    .filter(|cc| !cc.core.halted)
+                    .map(|cc| format!("core{} pc={:#x}", cc.core.hartid, cc.core.pc))
+                    .collect();
+                return Err(format!(
+                    "cluster did not finish within {max_cycles} cycles; running: {}",
+                    stuck.join(", ")
+                ));
+            }
+            self.cycle();
+        }
+        Ok(self.now)
+    }
+
+    /// Aggregate statistics (Table 1 metrics, energy-model event counts).
+    pub fn stats(&self) -> ClusterStats {
+        ClusterStats::gather(self)
+    }
+
+    /// Hive index of a core.
+    pub fn hive_of(&self, core: usize) -> usize {
+        core / self.cfg.cores_per_hive
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::assemble;
+
+    fn run_asm(src: &str, cores: usize, max: u64) -> Cluster {
+        let prog = assemble(src).expect("asm");
+        let mut cfg = ClusterConfig::default();
+        cfg.num_hives = 1;
+        cfg.cores_per_hive = cores;
+        let mut cl = Cluster::new(cfg);
+        cl.load(&prog);
+        cl.run(max).expect("run");
+        cl
+    }
+
+    #[test]
+    fn arithmetic_loop_runs() {
+        // sum = 0; for i in 0..10 { sum += i } -> 45, stored to TCDM.
+        let cl = run_asm(
+            r#"
+            li   a0, 0        # sum
+            li   a1, 0        # i
+            li   a2, 10
+        loop:
+            add  a0, a0, a1
+            addi a1, a1, 1
+            blt  a1, a2, loop
+            li   t0, 0x10000000
+            sw   a0, 0(t0)
+            ecall
+            "#,
+            1,
+            10_000,
+        );
+        assert_eq!(cl.tcdm.read(0x1000_0000, 4), 45);
+    }
+
+    #[test]
+    fn load_store_roundtrip_and_bytes() {
+        let cl = run_asm(
+            r#"
+            li   t0, 0x10000100
+            li   t1, 0x12345678
+            sw   t1, 0(t0)
+            lw   t2, 0(t0)
+            sb   t2, 8(t0)         # 0x78
+            lbu  t3, 8(t0)
+            sh   t2, 12(t0)        # 0x5678
+            lhu  t4, 12(t0)
+            sw   t3, 16(t0)
+            sw   t4, 20(t0)
+            ecall
+            "#,
+            1,
+            10_000,
+        );
+        assert_eq!(cl.tcdm.read(0x1000_0110, 4), 0x78);
+        assert_eq!(cl.tcdm.read(0x1000_0114, 4), 0x5678);
+    }
+
+    #[test]
+    fn load_use_dependency_costs_one_bubble() {
+        // Timed microbench: back-to-back dependent load chain vs
+        // independent loads. The dependent chain must be slower.
+        let dep = run_asm(
+            r#"
+            li   t0, 0x10000000
+            sw   t0, 0(t0)      # mem[t0] = t0 (pointer to itself)
+            lw   t1, 0(t0)
+            lw   t2, 0(t1)
+            lw   t3, 0(t2)
+            lw   t4, 0(t3)
+            ecall
+            "#,
+            1,
+            10_000,
+        )
+        .now;
+        let indep = run_asm(
+            r#"
+            li   t0, 0x10000000
+            sw   t0, 0(t0)
+            lw   t1, 0(t0)
+            lw   t2, 0(t0)
+            lw   t3, 0(t0)
+            lw   t4, 0(t0)
+            ecall
+            "#,
+            1,
+            10_000,
+        )
+        .now;
+        assert!(dep > indep, "dependent chain {dep} vs independent {indep}");
+    }
+
+    #[test]
+    fn muldiv_offload() {
+        let cl = run_asm(
+            r#"
+            li   a0, 7
+            li   a1, 6
+            mul  a2, a0, a1
+            li   a3, 100
+            li   a4, 7
+            divu a5, a3, a4
+            remu a6, a3, a4
+            li   t0, 0x10000000
+            sw   a2, 0(t0)
+            sw   a5, 4(t0)
+            sw   a6, 8(t0)
+            ecall
+            "#,
+            1,
+            10_000,
+        );
+        assert_eq!(cl.tcdm.read(0x1000_0000, 4), 42);
+        assert_eq!(cl.tcdm.read(0x1000_0004, 4), 14);
+        assert_eq!(cl.tcdm.read(0x1000_0008, 4), 2);
+    }
+
+    #[test]
+    fn fp_fma_and_store() {
+        let cl = run_asm(
+            r#"
+            .text 0
+            la   a0, vals
+            fld  ft2, 0(a0)
+            fld  ft3, 8(a0)
+            fld  ft4, 16(a0)
+            fmadd.d ft5, ft2, ft3, ft4
+            li   t0, 0x10000100
+            fsd  ft5, 0(t0)
+            fence
+            ecall
+            .data 0x10000000
+            vals: .double 3.0, 4.0, 5.0
+            "#,
+            1,
+            10_000,
+        );
+        assert_eq!(f64::from_bits(cl.tcdm.read(0x1000_0100, 8)), 17.0);
+    }
+
+    #[test]
+    fn fp_compare_to_int_reg() {
+        let cl = run_asm(
+            r#"
+            .text 0
+            la   a0, vals
+            fld  ft2, 0(a0)
+            fld  ft3, 8(a0)
+            flt.d t1, ft2, ft3
+            li   t0, 0x10000100
+            sw   t1, 0(t0)
+            ecall
+            .data 0x10000000
+            vals: .double 1.0, 2.0
+            "#,
+            1,
+            10_000,
+        );
+        assert_eq!(cl.tcdm.read(0x1000_0100, 4), 1);
+    }
+
+    #[test]
+    fn mhartid_distinguishes_cores() {
+        // Each core stores its hart id to TCDM[4*id].
+        let cl = run_asm(
+            r#"
+            csrr a0, mhartid
+            slli a1, a0, 2
+            li   t0, 0x10000000
+            add  t0, t0, a1
+            sw   a0, 0(t0)
+            ecall
+            "#,
+            4,
+            10_000,
+        );
+        for i in 0..4 {
+            assert_eq!(cl.tcdm.read(0x1000_0000 + 4 * i, 4), u64::from(i));
+        }
+    }
+
+    #[test]
+    fn amoadd_accumulates_across_cores() {
+        let cl = run_asm(
+            r#"
+            li   t0, 0x10000000
+            csrr a0, mhartid
+            addi a0, a0, 1
+            amoadd.w zero, a0, (t0)
+            ecall
+            "#,
+            4,
+            10_000,
+        );
+        assert_eq!(cl.tcdm.read(0x1000_0000, 4), 1 + 2 + 3 + 4);
+    }
+
+    #[test]
+    fn hardware_barrier_synchronizes() {
+        // Core 0 writes a flag *after* the barrier; other cores read the
+        // flag *after* the barrier and must see it... inverted: cores
+        // write before, read after.
+        let cl = run_asm(
+            r#"
+            .equ PERIPH, 0x20000000
+            csrr a0, mhartid
+            slli a1, a0, 2
+            li   t0, 0x10000100
+            add  t0, t0, a1
+            li   t1, 1
+            sw   t1, 0(t0)          # flag[id] = 1
+            li   t2, PERIPH
+            lw   zero, 12(t2)       # hardware barrier
+            # after barrier: check all four flags
+            li   t3, 0x10000100
+            lw   s0, 0(t3)
+            lw   s1, 4(t3)
+            lw   s2, 8(t3)
+            lw   s3, 12(t3)
+            add  s0, s0, s1
+            add  s0, s0, s2
+            add  s0, s0, s3
+            li   t4, 0x10000200
+            add  t4, t4, a1
+            sw   s0, 0(t4)          # sum[id] = flags seen
+            ecall
+            "#,
+            4,
+            100_000,
+        );
+        for i in 0..4 {
+            assert_eq!(cl.tcdm.read(0x1000_0200 + 4 * i, 4), 4, "core {i} saw all flags");
+        }
+    }
+
+    #[test]
+    fn wfi_and_wakeup() {
+        let cl = run_asm(
+            r#"
+            .equ PERIPH, 0x20000000
+            csrr a0, mhartid
+            bnez a0, sleeper
+            # core 0: spin a while, then wake everyone
+            li   t0, 64
+        spin:
+            addi t0, t0, -1
+            bnez t0, spin
+            li   t1, PERIPH
+            li   t2, 0xE         # wake cores 1..3
+            sw   t2, 16(t1)
+            j    out
+        sleeper:
+            wfi
+        out:
+            li   t3, 0x10000000
+            slli a1, a0, 2
+            add  t3, t3, a1
+            li   t4, 1
+            sw   t4, 0(t3)
+            ecall
+            "#,
+            4,
+            100_000,
+        );
+        for i in 0..4 {
+            assert_eq!(cl.tcdm.read(0x1000_0000 + 4 * i, 4), 1, "core {i} finished");
+        }
+    }
+
+    #[test]
+    fn ssr_dot_product_streams() {
+        // 8-element dot product with both operands streamed via SSR.
+        let cl = run_asm(
+            r#"
+            .equ A, 0x10000000
+            .equ B, 0x10000100
+            li   t0, 7            # bound = n-1
+            csrw ssr0_bound0, t0
+            csrw ssr1_bound0, t0
+            li   t1, 8
+            csrw ssr0_stride0, t1
+            csrw ssr1_stride0, t1
+            li   t2, A
+            csrw ssr0_rptr0, t2
+            li   t3, B
+            csrw ssr1_rptr0, t3
+            csrwi ssr, 1
+            fcvt.d.w ft3, zero
+            li   t4, 8
+        dl: fmadd.d ft3, ft0, ft1, ft3
+            addi t4, t4, -1
+            bnez t4, dl
+            csrwi ssr, 0
+            li   t5, 0x10000200
+            fsd  ft3, 0(t5)
+            fence
+            ecall
+            .data 0x10000000
+            .double 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0
+            .data 0x10000100
+            .double 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 2.0
+            "#,
+            1,
+            100_000,
+        );
+        // dot = 1+2+...+7 + 8*2 = 28 + 16 = 44
+        assert_eq!(f64::from_bits(cl.tcdm.read(0x1000_0200, 8)), 44.0);
+    }
+
+    #[test]
+    fn frep_dot_product_with_stagger() {
+        // FREP-sequenced dot product: one fmadd sequenced n times with
+        // 4-way accumulator staggering (rd+rs3, count 3), then reduced.
+        let cl = run_asm(
+            r#"
+            .equ A, 0x10000000
+            .equ B, 0x10000100
+            li   t0, 15
+            csrw ssr0_bound0, t0
+            csrw ssr1_bound0, t0
+            li   t1, 8
+            csrw ssr0_stride0, t1
+            csrw ssr1_stride0, t1
+            li   t2, A
+            csrw ssr0_rptr0, t2
+            li   t3, B
+            csrw ssr1_rptr0, t3
+            csrwi ssr, 1
+            fcvt.d.w ft3, zero
+            fmv.d ft4, ft3
+            fmv.d ft5, ft3
+            fmv.d ft6, ft3
+            li   t4, 15           # iterations-1
+            frep.o t4, 1, 0b1100, 3   # stagger rs3+rd over 4 regs
+            fmadd.d ft3, ft0, ft1, ft3
+            fadd.d ft3, ft3, ft4
+            fadd.d ft5, ft5, ft6
+            fadd.d ft3, ft3, ft5
+            csrwi ssr, 0
+            li   t5, 0x10000200
+            fsd  ft3, 0(t5)
+            fence
+            ecall
+            .data 0x10000000
+            .double 1,2,3,4,5,6,7,8,9,10,11,12,13,14,15,16
+            .data 0x10000100
+            .double 1,1,1,1,1,1,1,1,1,1,1,1,1,1,1,1
+            "#,
+            1,
+            100_000,
+        );
+        assert_eq!(f64::from_bits(cl.tcdm.read(0x1000_0200, 8)), 136.0);
+    }
+
+    #[test]
+    fn frep_is_faster_than_plain_ssr() {
+        let common_data = r#"
+            .data 0x10000000
+            .double 1,2,3,4,5,6,7,8,9,10,11,12,13,14,15,16,1,2,3,4,5,6,7,8,9,10,11,12,13,14,15,16
+            .data 0x10000100
+            .double 1,1,1,1,1,1,1,1,1,1,1,1,1,1,1,1,2,2,2,2,2,2,2,2,2,2,2,2,2,2,2,2
+        "#;
+        let ssr_src = format!(
+            r#"
+            li   t0, 31
+            csrw ssr0_bound0, t0
+            csrw ssr1_bound0, t0
+            li   t1, 8
+            csrw ssr0_stride0, t1
+            csrw ssr1_stride0, t1
+            li   t2, 0x10000000
+            csrw ssr0_rptr0, t2
+            li   t3, 0x10000100
+            csrw ssr1_rptr0, t3
+            csrwi ssr, 1
+            fcvt.d.w ft3, zero
+            li   t4, 32
+        l:  fmadd.d ft3, ft0, ft1, ft3
+            addi t4, t4, -1
+            bnez t4, l
+            csrwi ssr, 0
+            li   t5, 0x10000200
+            fsd  ft3, 0(t5)
+            fence
+            ecall
+            {common_data}
+            "#
+        );
+        let frep_src = format!(
+            r#"
+            li   t0, 31
+            csrw ssr0_bound0, t0
+            csrw ssr1_bound0, t0
+            li   t1, 8
+            csrw ssr0_stride0, t1
+            csrw ssr1_stride0, t1
+            li   t2, 0x10000000
+            csrw ssr0_rptr0, t2
+            li   t3, 0x10000100
+            csrw ssr1_rptr0, t3
+            csrwi ssr, 1
+            fcvt.d.w ft3, zero
+            fmv.d ft4, ft3
+            fmv.d ft5, ft3
+            fmv.d ft6, ft3
+            li   t4, 31
+            frep.o t4, 1, 0b1100, 3
+            fmadd.d ft3, ft0, ft1, ft3
+            fadd.d ft3, ft3, ft4
+            fadd.d ft5, ft5, ft6
+            fadd.d ft3, ft3, ft5
+            csrwi ssr, 0
+            li   t5, 0x10000200
+            fsd  ft3, 0(t5)
+            fence
+            ecall
+            {common_data}
+            "#
+        );
+        let ssr = run_asm(&ssr_src, 1, 100_000);
+        let frep = run_asm(&frep_src, 1, 100_000);
+        let expect = (1..=16).sum::<i32>() as f64 + 2.0 * (1..=16).sum::<i32>() as f64;
+        assert_eq!(f64::from_bits(ssr.tcdm.read(0x1000_0200, 8)), expect);
+        assert_eq!(f64::from_bits(frep.tcdm.read(0x1000_0200, 8)), expect);
+        // n=32 with ~50 cycles of shared setup: the asymptotic 3× win is
+        // damped; still expect a clear gap (larger n is covered by the
+        // kernel-level benchmarks).
+        assert!(
+            (frep.now as f64) < ssr.now as f64 * 0.8,
+            "frep {f} should beat ssr {s} clearly",
+            f = frep.now,
+            s = ssr.now
+        );
+    }
+
+    #[test]
+    fn perf_region_measured() {
+        let cl = run_asm(
+            r#"
+            .equ PERIPH, 0x20000000
+            li   t0, PERIPH
+            li   t1, 1
+            sw   t1, 24(t0)      # region start
+            li   t2, 100
+        l:  addi t2, t2, -1
+            bnez t2, l
+            sw   zero, 24(t0)    # region stop
+            ecall
+            "#,
+            1,
+            100_000,
+        );
+        let st = cl.stats();
+        let r = &st.regions[0];
+        assert!(r.cycles >= 200 && r.cycles <= 230, "region cycles {}", r.cycles);
+        assert!(r.counters.snitch_instrs >= 200);
+    }
+}

@@ -1,0 +1,71 @@
+//! Cluster peripherals (paper §2.3.2): read-only hardware-information
+//! registers, performance counters, scratch, the wake-up register (IPI),
+//! and the hardware barrier.
+
+use crate::mem::{periph, TCDM_BASE};
+
+use super::Cluster;
+
+/// Cluster peripheral state.
+pub struct Peripherals {
+    pub num_cores: usize,
+    /// Wake-up IPIs raised this cycle (bit per core), consumed in
+    /// [`settle`].
+    pub pending_wake: u32,
+    /// Two scratch registers (software use).
+    pub scratch: [u32; 2],
+}
+
+impl Peripherals {
+    pub fn new(num_cores: usize) -> Peripherals {
+        Peripherals { num_cores, pending_wake: 0, scratch: [0; 2] }
+    }
+
+    /// Read a peripheral register (zero-latency combinational read; the
+    /// response is still delivered with load latency by the caller).
+    /// The BARRIER register is handled separately by the core complex.
+    pub fn read(&self, offset: u32, now: u64, tcdm_size: u32, tcdm_conflicts: u64) -> u32 {
+        match offset {
+            periph::NUM_CORES => self.num_cores as u32,
+            periph::TCDM_START => TCDM_BASE,
+            periph::TCDM_END => TCDM_BASE + tcdm_size,
+            periph::CYCLE => now as u32,
+            periph::PMC_TCDM_CONFLICTS => tcdm_conflicts as u32,
+            0x30 => self.scratch[0],
+            0x34 => self.scratch[1],
+            _ => 0,
+        }
+    }
+}
+
+/// End-of-cycle peripheral settlement: resolve the hardware barrier and
+/// deliver wake-up IPIs. Runs after every core complex has stepped.
+pub fn settle(cl: &mut Cluster) {
+    // ---- hardware barrier ----
+    // A load from the BARRIER register parks the core; when every
+    // non-halted core is parked, all loads return simultaneously.
+    let active = cl.ccs.iter().filter(|cc| !cc.core.halted).count();
+    let waiting = cl.ccs.iter().filter(|cc| cc.barrier_wait.is_some()).count();
+    if active > 0 && waiting == active {
+        for cc in &mut cl.ccs {
+            if let Some(rd) = cc.barrier_wait.take() {
+                cc.wb_queue.push_back((rd, 0));
+            }
+        }
+    }
+    // ---- wake-up IPIs ----
+    if cl.periph.pending_wake != 0 {
+        let mask = cl.periph.pending_wake;
+        cl.periph.pending_wake = 0;
+        for (i, cc) in cl.ccs.iter_mut().enumerate() {
+            if mask & (1 << i) != 0 {
+                if cc.core.sleeping {
+                    cc.core.sleeping = false;
+                } else {
+                    // IPI before the core reaches wfi: latch it.
+                    cc.wake_pending = true;
+                }
+            }
+        }
+    }
+}

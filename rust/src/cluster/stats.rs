@@ -1,0 +1,203 @@
+//! Performance counters and Table-1-style metrics.
+
+use super::cc::CoreComplex;
+use super::Cluster;
+
+/// A snapshot of the per-core utilization counters (the paper's Table 1
+//  metrics are ratios of deltas of these over region cycles).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CounterSet {
+    /// Instructions retired by the integer core and *not* offloaded
+    /// ("Snitch utilization" numerator).
+    pub snitch_instrs: u64,
+    /// Instructions executed by the FP-SS, including sequencer-generated
+    /// ones ("FP-SS utilization" numerator).
+    pub fpss_instrs: u64,
+    /// Arithmetic FP instructions (fused ops, casts, comparisons) —
+    /// "FPU utilization" numerator.
+    pub fpu_instrs: u64,
+    /// Double-precision flops (FMA = 2).
+    pub flops: u64,
+    /// Instructions issued out of the FREP sequence buffer.
+    pub seq_instrs: u64,
+    /// SSR lane memory traffic.
+    pub ssr_mem_reads: u64,
+    pub ssr_mem_writes: u64,
+    /// Integer-core LSU traffic.
+    pub int_loads: u64,
+    pub int_stores: u64,
+}
+
+impl CounterSet {
+    /// Gather the current counter values from a core complex.
+    pub fn from_cc(cc: &CoreComplex) -> CounterSet {
+        CounterSet {
+            snitch_instrs: cc.core.instret,
+            fpss_instrs: cc.fpss.issued,
+            fpu_instrs: cc.fpss.fpu_arith,
+            flops: cc.fpss.flops,
+            seq_instrs: cc.seq.sequenced_ops,
+            ssr_mem_reads: cc.lanes[0].mem_reads + cc.lanes[1].mem_reads,
+            ssr_mem_writes: cc.lanes[0].mem_writes + cc.lanes[1].mem_writes,
+            int_loads: cc.int_loads,
+            int_stores: cc.int_stores,
+        }
+    }
+
+    pub fn delta(&self, earlier: &CounterSet) -> CounterSet {
+        CounterSet {
+            snitch_instrs: self.snitch_instrs - earlier.snitch_instrs,
+            fpss_instrs: self.fpss_instrs - earlier.fpss_instrs,
+            fpu_instrs: self.fpu_instrs - earlier.fpu_instrs,
+            flops: self.flops - earlier.flops,
+            seq_instrs: self.seq_instrs - earlier.seq_instrs,
+            ssr_mem_reads: self.ssr_mem_reads - earlier.ssr_mem_reads,
+            ssr_mem_writes: self.ssr_mem_writes - earlier.ssr_mem_writes,
+            int_loads: self.int_loads - earlier.int_loads,
+            int_stores: self.int_stores - earlier.int_stores,
+        }
+    }
+
+    pub fn add(&mut self, other: &CounterSet) {
+        self.snitch_instrs += other.snitch_instrs;
+        self.fpss_instrs += other.fpss_instrs;
+        self.fpu_instrs += other.fpu_instrs;
+        self.flops += other.flops;
+        self.seq_instrs += other.seq_instrs;
+        self.ssr_mem_reads += other.ssr_mem_reads;
+        self.ssr_mem_writes += other.ssr_mem_writes;
+        self.int_loads += other.int_loads;
+        self.int_stores += other.int_stores;
+    }
+}
+
+/// A closed measurement region of one core (between the two PERF_REGION
+/// peripheral writes).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RegionStats {
+    pub start: u64,
+    pub cycles: u64,
+    pub counters: CounterSet,
+}
+
+impl RegionStats {
+    /// Table 1 ratios for this region.
+    pub fn fpu_util(&self) -> f64 {
+        self.counters.fpu_instrs as f64 / self.cycles.max(1) as f64
+    }
+    pub fn fpss_util(&self) -> f64 {
+        self.counters.fpss_instrs as f64 / self.cycles.max(1) as f64
+    }
+    pub fn snitch_util(&self) -> f64 {
+        self.counters.snitch_instrs as f64 / self.cycles.max(1) as f64
+    }
+    pub fn ipc(&self) -> f64 {
+        self.fpss_util() + self.snitch_util()
+    }
+}
+
+/// Per-core stall-cycle buckets.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StallCounters {
+    pub fetch: u64,
+    pub scoreboard: u64,
+    pub mem_port: u64,
+    pub offload: u64,
+    pub muldiv: u64,
+    pub ssr_config: u64,
+    pub barrier: u64,
+    pub drain: u64,
+    pub wfi: u64,
+}
+
+/// Cluster-wide statistics bundle handed to the harness/energy model.
+#[derive(Debug, Clone)]
+pub struct ClusterStats {
+    pub cycles: u64,
+    /// Per-core *total* counters (full run).
+    pub cores: Vec<CounterSet>,
+    /// Per-core closed measurement regions.
+    pub regions: Vec<RegionStats>,
+    /// Per-core stall buckets.
+    pub stalls: Vec<StallCounters>,
+    pub tcdm_accesses: u64,
+    pub tcdm_conflicts: u64,
+    pub icache_l0_hits: u64,
+    pub icache_l0_misses: u64,
+    pub icache_l1_hits: u64,
+    pub icache_l1_misses: u64,
+    pub muldiv_muls: u64,
+    pub muldiv_divs: u64,
+    pub ext_accesses: u64,
+}
+
+impl ClusterStats {
+    pub fn gather(cl: &Cluster) -> ClusterStats {
+        let mut l0h = 0;
+        let mut l0m = 0;
+        for (h, ic) in cl.icaches.iter().enumerate() {
+            for c in 0..cl.cfg.cores_per_hive {
+                let _ = h;
+                let (hits, misses) = ic.l0_stats(c);
+                l0h += hits;
+                l0m += misses;
+            }
+        }
+        let (l1h, l1m) = cl.icaches.iter().map(|ic| ic.l1_stats()).fold((0, 0), |a, b| {
+            (a.0 + b.0, a.1 + b.1)
+        });
+        ClusterStats {
+            cycles: cl.now,
+            cores: cl.ccs.iter().map(CounterSet::from_cc).collect(),
+            regions: cl.ccs.iter().map(|cc| cc.region.unwrap_or_default()).collect(),
+            stalls: cl.ccs.iter().map(|cc| cc.stalls).collect(),
+            tcdm_accesses: cl.tcdm.accesses,
+            tcdm_conflicts: cl.tcdm.conflict_cycles,
+            icache_l0_hits: l0h,
+            icache_l0_misses: l0m,
+            icache_l1_hits: l1h,
+            icache_l1_misses: l1m,
+            muldiv_muls: cl.muldivs.iter().map(|m| m.mul_count).sum(),
+            muldiv_divs: cl.muldivs.iter().map(|m| m.div_count).sum(),
+            ext_accesses: cl.ext.accesses,
+        }
+    }
+
+    /// The cluster-level measured region: from the earliest region start to
+    /// the latest region end among cores that closed a region.
+    pub fn cluster_region_cycles(&self) -> u64 {
+        let starts: Vec<u64> =
+            self.regions.iter().filter(|r| r.cycles > 0).map(|r| r.start).collect();
+        let ends: Vec<u64> = self
+            .regions
+            .iter()
+            .filter(|r| r.cycles > 0)
+            .map(|r| r.start + r.cycles)
+            .collect();
+        match (starts.iter().min(), ends.iter().max()) {
+            (Some(&s), Some(&e)) => e - s,
+            _ => self.cycles,
+        }
+    }
+
+    /// Sum of region counters across cores.
+    pub fn region_counters(&self) -> CounterSet {
+        let mut t = CounterSet::default();
+        for r in &self.regions {
+            t.add(&r.counters);
+        }
+        t
+    }
+
+    /// Cluster-level utilizations over the measured region (Table 1's
+    /// multi-core columns): mean across participating cores.
+    pub fn region_utils(&self) -> (f64, f64, f64, f64) {
+        let cyc = self.cluster_region_cycles().max(1) as f64;
+        let n = self.regions.iter().filter(|r| r.cycles > 0).count().max(1) as f64;
+        let t = self.region_counters();
+        let fpu = t.fpu_instrs as f64 / cyc / n;
+        let fpss = t.fpss_instrs as f64 / cyc / n;
+        let snitch = t.snitch_instrs as f64 / cyc / n;
+        (fpu, fpss, snitch, fpss + snitch)
+    }
+}

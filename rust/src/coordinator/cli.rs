@@ -1,0 +1,102 @@
+//! Minimal in-tree CLI (the offline build environment has no clap; the
+//! surface is small and stable).
+
+use super::*;
+
+const USAGE: &str = "\
+repro — Snitch (IEEE TC 2020) reproduction harness
+
+USAGE:
+    repro <COMMAND> [ARGS]
+
+COMMANDS:
+    all                     regenerate every table and figure
+    table <1|2|3|4>         regenerate a paper table
+    figure <1|9|10|11|12|13|14|15|16>
+                            regenerate a paper figure
+    trace <kernel> [variant] [n]
+                            Fig. 6-style dual-issue trace (variant:
+                            baseline|ssr|frep; default frep, n=64)
+    validate                run the PJRT golden-model validation sweep
+    run <kernel> <variant> <n> <cores>
+                            run one kernel and print its stats
+    help                    this text
+";
+
+/// Entry point for the `repro` binary.
+pub fn main_cli() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "all" => {
+            println!("{}", figure1());
+            println!("{}", table1());
+            println!("{}", figure_speedups(1));
+            println!("{}", figure10());
+            println!("{}", figure11());
+            println!("{}", figure12());
+            println!("{}", figure_speedups(8));
+            println!("{}", figure14());
+            println!("{}", figure15_16());
+            println!("{}", table2());
+            println!("{}", table3());
+            println!("{}", table4());
+            println!("{}", validate_goldens()?);
+        }
+        "table" => match args.get(1).map(String::as_str) {
+            Some("1") => println!("{}", table1()),
+            Some("2") => println!("{}", table2()),
+            Some("3") => println!("{}", table3()),
+            Some("4") => println!("{}", table4()),
+            other => anyhow::bail!("unknown table {other:?}"),
+        },
+        "figure" => match args.get(1).map(String::as_str) {
+            Some("1") => println!("{}", figure1()),
+            Some("9") => println!("{}", figure_speedups(1)),
+            Some("10") => println!("{}", figure10()),
+            Some("11") => println!("{}", figure11()),
+            Some("12") => println!("{}", figure12()),
+            Some("13") => println!("{}", figure_speedups(8)),
+            Some("14") => println!("{}", figure14()),
+            Some("15") | Some("16") => println!("{}", figure15_16()),
+            other => anyhow::bail!("unknown figure {other:?}"),
+        },
+        "trace" => {
+            let kernel = args.get(1).map(String::as_str).unwrap_or("dot");
+            let v = match args.get(2).map(String::as_str) {
+                Some("baseline") => Variant::Baseline,
+                Some("ssr") => Variant::Ssr,
+                _ => Variant::SsrFrep,
+            };
+            let n: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(64);
+            println!("{}", trace_kernel(kernel, v, n));
+        }
+        "validate" => println!("{}", validate_goldens()?),
+        "run" => {
+            let name = args.get(1).map(String::as_str).unwrap_or("dot");
+            let v = match args.get(2).map(String::as_str) {
+                Some("baseline") => Variant::Baseline,
+                Some("ssr") => Variant::Ssr,
+                _ => Variant::SsrFrep,
+            };
+            let n: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(256);
+            let cores: usize = args.get(4).and_then(|s| s.parse().ok()).unwrap_or(1);
+            let k = kernels::kernel_by_name(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown kernel {name}"))?;
+            let r = run(k, v, n, cores);
+            let (fpu, fpss, snitch, ipc) = r.stats.region_utils();
+            println!(
+                "{name} {} n={n} cores={cores}: {} region cycles, max_err {:.2e}\n\
+                 FPU {fpu:.2}  FPSS {fpss:.2}  Snitch {snitch:.2}  IPC {ipc:.2}\n\
+                 tcdm accesses {} conflicts {}",
+                v.label(),
+                r.cycles,
+                r.max_err,
+                r.stats.tcdm_accesses,
+                r.stats.tcdm_conflicts,
+            );
+        }
+        _ => print!("{USAGE}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,421 @@
+//! Experiment coordinator: regenerates every table and figure of the
+//! paper's evaluation (§4) from simulated runs + the calibrated models,
+//! and validates results against the AOT golden models.
+//!
+//! Each `table_*` / `figure_*` function returns a rendered markdown block
+//! whose rows mirror the paper's presentation; the `repro` CLI and the
+//! criterion-style benches print them. Runs fan out over std::threads
+//! (the L3 event loop owns process topology; simulations are independent).
+
+pub mod cli;
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::cluster::ClusterConfig;
+use crate::energy::{cluster_area, core_area, model};
+use crate::kernels::{self, KernelDef, Params, RunResult, Variant};
+use crate::vector;
+
+/// The benchmark sizes used for the per-kernel figures (problem sizes are
+/// chosen, like the paper's, so that all working sets fit the TCDM).
+pub fn default_size(kernel: &str) -> usize {
+    match kernel {
+        "dgemm" => 32,
+        "conv2d" => 32, // 32×32 image, 7×7 taps (paper's configuration)
+        "fft" => 256,
+        "montecarlo" => 2048,
+        "knn" => 1024,
+        _ => 1024, // dot / relu / axpy vectors
+    }
+}
+
+/// Run one kernel/variant/size/cores (panics on simulation or validation
+/// failure — every number in a table is a *checked* run).
+pub fn run(k: &'static KernelDef, v: Variant, n: usize, cores: usize) -> RunResult {
+    let r = kernels::run_kernel(k, v, &Params::new(n, cores))
+        .unwrap_or_else(|e| panic!("{e}"));
+    r
+}
+
+/// Run the full kernel × variant matrix for a core count, in parallel.
+/// Returns (kernel, variant) → result.
+pub fn run_matrix(cores: usize) -> HashMap<(&'static str, Variant), RunResult> {
+    let out = Mutex::new(HashMap::new());
+    std::thread::scope(|scope| {
+        for k in kernels::all_kernels() {
+            for &v in k.variants {
+                let out = &out;
+                scope.spawn(move || {
+                    let r = run(k, v, default_size(k.name), cores);
+                    out.lock().unwrap().insert((k.name, v), r);
+                });
+            }
+        }
+    });
+    out.into_inner().unwrap()
+}
+
+/// Fig. 1: energy per instruction of an application-class core (Ariane
+/// [8]) on the dot-product loop — the motivation numbers.
+pub fn figure1() -> String {
+    let rows = [
+        ("fld (L1 hit)", 59.0),
+        ("fmadd.d", 28.0),
+        ("addi", 20.0),
+        ("bne", 31.0),
+    ];
+    let mut s = String::from(
+        "## Fig. 1 — energy/instruction, application-class core (pJ, from [8])\n\n\
+         | instruction | pJ |\n|---|---|\n",
+    );
+    let mut loop_total = 0.0;
+    for (i, e) in rows {
+        s += &format!("| {i} | {e:.0} |\n");
+        loop_total += e;
+    }
+    // 2 loads + fma + 2 addi + branch ≈ the 6-instr loop of Fig. 6(a).
+    let total = 2.0 * 59.0 + 28.0 + 2.0 * 20.0 + 31.0 + 80.0; // + iF/RF overheads
+    s += &format!(
+        "\nLoop iteration ≈ {total:.0} pJ of which 28 pJ (≈{:.0}%) is the FMA — \
+         the paper's 317 pJ vs 28 pJ motivation.\n",
+        100.0 * 28.0 / total
+    );
+    let _ = loop_total;
+    s
+}
+
+/// Table 1: FPU / FP-SS / Snitch utilization and IPC, single- and 8-core.
+pub fn table1() -> String {
+    let sizes: Vec<(&str, usize)> = vec![
+        ("dot", 256),
+        ("dot", 4096),
+        ("relu", 1024),
+        ("dgemm", 16),
+        ("dgemm", 32),
+        ("fft", 256),
+        ("axpy", 1024),
+        ("conv2d", 32),
+        ("knn", 1024),
+        ("montecarlo", 2048),
+    ];
+    let mut s = String::from(
+        "## Table 1 — utilization and IPC (single-core | 8-core)\n\n\
+         | kernel | FPU | FPSS | Snitch | IPC | FPU | FPSS | Snitch | IPC |\n\
+         |---|---|---|---|---|---|---|---|---|\n",
+    );
+    let results = Mutex::new(Vec::new());
+    std::thread::scope(|scope| {
+        for &(name, n) in &sizes {
+            let k = kernels::kernel_by_name(name).unwrap();
+            for &v in k.variants {
+                let results = &results;
+                scope.spawn(move || {
+                    let single = run(k, v, n, 1);
+                    let multi = run(k, v, n, 8);
+                    results.lock().unwrap().push((name, n, v, single, multi));
+                });
+            }
+        }
+    });
+    let mut results = results.into_inner().unwrap();
+    results.sort_by_key(|(name, n, v, _, _)| {
+        (
+            sizes.iter().position(|&(s2, n2)| s2 == *name && n2 == *n).unwrap(),
+            match v {
+                Variant::Baseline => 0,
+                Variant::Ssr => 1,
+                Variant::SsrFrep => 2,
+            },
+        )
+    });
+    for (name, n, v, single, multi) in results {
+        let u1 = single.stats.region_utils();
+        let u8_ = multi.stats.region_utils();
+        s += &format!(
+            "| {name} {n} {} | {:.2} | {:.2} | {:.2} | {:.2} | {:.2} | {:.2} | {:.2} | {:.2} |\n",
+            v.label(),
+            u1.0, u1.1, u1.2, u1.3, u8_.0, u8_.1, u8_.2, u8_.3
+        );
+    }
+    s
+}
+
+/// Table 2: DGEMM 32² FPU utilization and scaling from 1 to 32 cores.
+pub fn table2() -> String {
+    let k = kernels::kernel_by_name("dgemm").unwrap();
+    let counts = [1usize, 2, 4, 8, 16, 32];
+    let runs: Vec<RunResult> = {
+        let out = Mutex::new(HashMap::new());
+        std::thread::scope(|scope| {
+            for &c in &counts {
+                let out = &out;
+                scope.spawn(move || {
+                    out.lock().unwrap().insert(c, run(k, Variant::SsrFrep, 32, c));
+                });
+            }
+        });
+        let mut m = out.into_inner().unwrap();
+        counts.iter().map(|c| m.remove(c).unwrap()).collect()
+    };
+    let base = runs[0].cycles as f64;
+    let mut s = String::from(
+        "## Table 2 — DGEMM 32×32 multi-core scaling (SSR+FREP)\n\n\
+         | cores | η (FPU util) | δ (vs half) | Δ (vs 1 core) |\n|---|---|---|---|\n",
+    );
+    for (i, r) in runs.iter().enumerate() {
+        let (fpu, _, _, _) = r.stats.region_utils();
+        let delta = base / r.cycles as f64;
+        let half = if i == 0 { 1.0 } else { runs[i - 1].cycles as f64 / r.cycles as f64 };
+        s += &format!(
+            "| {} | {fpu:.2} | {half:.2} | {delta:.2} |\n",
+            counts[i]
+        );
+    }
+    s += "\npaper: η 0.81–0.90, δ ≈ 1.9–2.0, Δ = 7.80 @ 8 cores, 27.61 @ 32.\n";
+    s
+}
+
+/// Table 3: normalized DGEMM performance, Snitch (measured) vs the vector
+/// lane model vs the published Ara/Hwacha numbers.
+pub fn table3() -> String {
+    let k = kernels::kernel_by_name("dgemm").unwrap();
+    let mut s = String::from(
+        "## Table 3 — normalized DGEMM performance [% of peak]\n\n\
+         | n | FPUs | Snitch (sim) | Ara (model) | Ara (paper) | Hwacha (paper) |\n\
+         |---|---|---|---|---|---|\n",
+    );
+    for fpus in [4usize, 8, 16] {
+        for n in [16usize, 32, 64, 128] {
+            if n % fpus != 0 {
+                s += &format!("| {n} | {fpus} | — | | | |\n");
+                continue;
+            }
+            let r = run(k, Variant::SsrFrep, n, fpus);
+            let flops: u64 = r.stats.cores.iter().map(|c| c.flops).sum();
+            let snitch = 100.0 * flops as f64 / r.cycles as f64 / (2.0 * fpus as f64);
+            let model = vector::dgemm_norm_perf(&vector::VectorConfig::ara(fpus as u64), n as u64);
+            let ara = vector::ara_published(fpus as u64, n as u64)
+                .map(|v| format!("{v:.1}"))
+                .unwrap_or_default();
+            let hw = vector::hwacha_published(fpus as u64, n as u64)
+                .map(|v| format!("{v:.1}"))
+                .unwrap_or_else(|| "—".into());
+            s += &format!("| {n} | {fpus} | {snitch:.1} | {model:.1} | {ara} | {hw} |\n");
+        }
+    }
+    s += "\npaper: Snitch 58–96 across the grid, beating Ara by up to 4.5× at n=16.\n";
+    s
+}
+
+/// Table 4: figures of merit vs Ara / Volta SM / Carmel.
+pub fn table4() -> String {
+    let k = kernels::kernel_by_name("dgemm").unwrap();
+    let r = run(k, Variant::SsrFrep, 32, 8);
+    let cfg = ClusterConfig::default();
+    let em = model::EnergyModel::default();
+    let p = model::power_report(&r.stats, &cfg, &em);
+    let flops: u64 = r.stats.cores.iter().map(|c| c.flops).sum();
+    let sustained = flops as f64 / r.cycles as f64; // Gflop/s @ 1GHz
+    let util = 100.0 * sustained / 16.0;
+    let eff = model::efficiency_gflops_w(flops, r.stats.cycles, p.total());
+    let area_mm2 = cluster_area(&cfg).total() / 3300.0 * 0.89; // paper: 0.89 mm²
+    format!(
+        "## Table 4 — comparison on n×n DGEMM (DP)\n\n\
+         | metric | unit | Snitch (this repro) | Snitch (paper) | Ara [14] | Volta SM [31] | Carmel [31] |\n\
+         |---|---|---|---|---|---|---|\n\
+         | problem size | n | 32 | 32 | 32 | 256 | 256 |\n\
+         | peak DP | Gflop/s | 16.0 | 16.96 | 18.72 | — | 18.13 |\n\
+         | sustained DP | Gflop/s | {sustained:.2} | 14.38 | 10.00 | — | 9.27 |\n\
+         | utilization DP | % | {util:.1} | 84.8 | 53.4 | — | 51.2 |\n\
+         | impl. area | mm² | {area_mm2:.2} | 0.89 | 1.07 | 11.03 | 7.37 |\n\
+         | total power DP | W | {:.3} | 0.17 | 0.46 | — | 1.85 |\n\
+         | energy eff. DP | Gflop/s/W | {eff:.1} | 79.4 | 39.9 | — | 5.0 |\n\
+         | leakage | mW | {:.0} | 12 | 21.1 | — | — |\n",
+        p.total() / 1000.0,
+        p.leakage,
+    )
+}
+
+/// Fig. 9 / Fig. 13: speed-up from the ISA extensions (single / 8 cores).
+pub fn figure_speedups(cores: usize) -> String {
+    let matrix = run_matrix(cores);
+    let title = if cores == 1 { "Fig. 9 — single-core" } else { "Fig. 13 — octa-core" };
+    let mut s = format!(
+        "## {title} speed-up over baseline\n\n| kernel | variant | cycles | speed-up |\n|---|---|---|---|\n"
+    );
+    for k in kernels::all_kernels() {
+        let base = matrix[&(k.name, Variant::Baseline)].cycles as f64;
+        for &v in k.variants {
+            let r = &matrix[&(k.name, v)];
+            s += &format!(
+                "| {} | {} | {} | {:.2}× |\n",
+                k.name,
+                v.label(),
+                r.cycles,
+                base / r.cycles as f64
+            );
+        }
+    }
+    s += if cores == 1 {
+        "\npaper: 1.7× to >6× from SSR+FREP.\n"
+    } else {
+        "\npaper: 1.29× to 6.45× from SSR+FREP.\n"
+    };
+    s
+}
+
+/// Fig. 12: octa-core vs single-core speed-up per kernel × variant.
+pub fn figure12() -> String {
+    let single = run_matrix(1);
+    let multi = run_matrix(8);
+    let mut s = String::from(
+        "## Fig. 12 — multi-core (8) speed-up over single core\n\n\
+         | kernel | variant | 1-core cycles | 8-core cycles | speed-up |\n|---|---|---|---|---|\n",
+    );
+    for k in kernels::all_kernels() {
+        for &v in k.variants {
+            let a = single[&(k.name, v)].cycles;
+            let b = multi[&(k.name, v)].cycles;
+            s += &format!(
+                "| {} | {} | {a} | {b} | {:.2}× |\n",
+                k.name,
+                v.label(),
+                a as f64 / b as f64
+            );
+        }
+    }
+    s += "\npaper: 3× to 8× depending on kernel (ideal 8 for conv2d+SSR, kNN).\n";
+    s
+}
+
+/// Fig. 10: hierarchical area distribution.
+pub fn figure10() -> String {
+    let a = cluster_area(&ClusterConfig::default());
+    format!(
+        "## Fig. 10 — cluster area distribution (model)\n\n{}\n\
+         paper: 3.3 MGE total; TCDM 34 %, I$ 10 %, integer cores 5 %, FPUs 23 %.\n",
+        a.render()
+    )
+}
+
+/// Fig. 11: integer-core configuration area sweep.
+pub fn figure11() -> String {
+    use crate::cluster::config::{IsaVariant, RfImpl};
+    let mut s = String::from(
+        "## Fig. 11 — integer core area by configuration (kGE)\n\n\
+         | ISA | RF | PMCs | kGE |\n|---|---|---|---|\n",
+    );
+    for isa in [IsaVariant::Rv32E, IsaVariant::Rv32I] {
+        for rf in [RfImpl::Latch, RfImpl::FlipFlop] {
+            for pmc in [false, true] {
+                s += &format!(
+                    "| {isa:?} | {rf:?} | {pmc} | {:.1} |\n",
+                    core_area(isa, rf, pmc)
+                );
+            }
+        }
+    }
+    s += "\npaper: 9 kGE (RV32E, latch, no PMC) to 21 kGE (RV32I, FF, PMC).\n";
+    s
+}
+
+/// Fig. 14: power breakdown of DGEMM 32² SSR+FREP on 8 cores.
+pub fn figure14() -> String {
+    let k = kernels::kernel_by_name("dgemm").unwrap();
+    let r = run(k, Variant::SsrFrep, 32, 8);
+    let p = model::power_report(&r.stats, &ClusterConfig::default(), &model::EnergyModel::default());
+    format!(
+        "## Fig. 14 — power breakdown, DGEMM 32×32 + SSR + FREP (8 cores)\n\n{}\n\
+         paper: 171 mW total; FPU 42 %, integer cores 1 %, SSR <4 %, FREP <1 %, I$ 4.8 mW.\n",
+        p.render()
+    )
+}
+
+/// Fig. 15 + Fig. 16: per-kernel power and energy efficiency (8 cores).
+pub fn figure15_16() -> String {
+    let matrix = run_matrix(8);
+    let cfg = ClusterConfig::default();
+    let em = model::EnergyModel::default();
+    let mut s = String::from(
+        "## Fig. 15/16 — power and energy efficiency (8 cores)\n\n\
+         | kernel variant | power [mW] | DPGflop/s | DPGflop/s/W | gain vs baseline |\n\
+         |---|---|---|---|---|\n",
+    );
+    for k in kernels::all_kernels() {
+        let base_eff = {
+            let r = &matrix[&(k.name, Variant::Baseline)];
+            let p = model::power_report(&r.stats, &cfg, &em).total();
+            let fl: u64 = r.stats.cores.iter().map(|c| c.flops).sum();
+            model::efficiency_gflops_w(fl, r.stats.cycles, p)
+        };
+        for &v in k.variants {
+            let r = &matrix[&(k.name, v)];
+            let p = model::power_report(&r.stats, &cfg, &em).total();
+            let fl: u64 = r.stats.cores.iter().map(|c| c.flops).sum();
+            let gf = fl as f64 / r.stats.cycles as f64;
+            let eff = model::efficiency_gflops_w(fl, r.stats.cycles, p);
+            s += &format!(
+                "| {} {} | {p:.0} | {gf:.2} | {eff:.1} | {:.2}× |\n",
+                k.name,
+                v.label(),
+                eff / base_eff
+            );
+        }
+    }
+    s += "\npaper: up to ~80 DPGflop/s/W peak; efficiency gains 1.5–4.9×.\n";
+    s
+}
+
+/// Fig. 6-style dual-issue trace of the dot-product kernel.
+pub fn trace_kernel(name: &str, v: Variant, n: usize) -> String {
+    let k = kernels::kernel_by_name(name).unwrap_or_else(|| panic!("unknown kernel {name}"));
+    let p = Params::new(n, 1);
+    let asm_src = (k.gen)(v, &p);
+    let prog = crate::asm::assemble(&asm_src).unwrap();
+    let mut cfg = ClusterConfig::with_cores(1);
+    cfg.trace = true;
+    let mut cl = crate::cluster::Cluster::new(cfg);
+    cl.load(&prog);
+    (k.setup)(&mut cl, &p);
+    cl.run(10_000_000).unwrap();
+    let mut s = format!("## trace: {name} {} n={n} ({} cycles)\n\n", v.label(), cl.now);
+    s += "```\ncycle  unit    instruction\n";
+    for e in cl.trace.iter().take(400) {
+        s += &format!("{:5}  {:6}  {}\n", e.cycle, e.unit, e.text);
+    }
+    if cl.trace.len() > 400 {
+        s += &format!("... ({} more events)\n", cl.trace.len() - 400);
+    }
+    s += "```\n";
+    s
+}
+
+/// Golden-model validation sweep over the PJRT artifacts.
+pub fn validate_goldens() -> anyhow::Result<String> {
+    let rt = crate::runtime::GoldenRuntime::new()?;
+    let mut s = String::from("## golden validation (simulated vs AOT JAX/Pallas via PJRT)\n\n");
+    let cases: Vec<(&str, usize, Variant)> = vec![
+        ("dot", 256, Variant::SsrFrep),
+        ("dot", 1024, Variant::Ssr),
+        ("relu", 1024, Variant::SsrFrep),
+        ("axpy", 1024, Variant::Ssr),
+        ("dgemm", 16, Variant::SsrFrep),
+        ("dgemm", 32, Variant::SsrFrep),
+        ("conv2d", 32, Variant::SsrFrep),
+        ("knn", 1024, Variant::SsrFrep),
+        ("fft", 256, Variant::SsrFrep),
+    ];
+    for (name, n, v) in cases {
+        let k = kernels::kernel_by_name(name).unwrap();
+        let p = Params::new(n, 8);
+        let r = kernels::run_kernel(k, v, &p).map_err(|e| anyhow::anyhow!(e))?;
+        let mut io = (k.io)(&r.cluster, &p);
+        if name == "fft" {
+            io.inputs.truncate(1);
+        }
+        let err = rt.validate(name, n, &io, 1e-8, 1e-9)?;
+        s += &format!("| {name} n={n} {} | max err {err:.2e} | OK |\n", v.label());
+    }
+    Ok(s)
+}

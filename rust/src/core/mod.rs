@@ -1,0 +1,191 @@
+//! The Snitch integer core (paper §2.1.1): architectural state and the
+//! combinational ALU.
+//!
+//! Snitch is a single-stage, single-issue, in-order RV32 core. An integer
+//! instruction with all operands available is fetched, decoded, executed
+//! and written back in the same cycle. The core tracks every register with
+//! a single scoreboard bit; the register file has a single write port for
+//! which single-cycle instructions, LSU responses, and accelerator
+//! write-backs contend with that priority order.
+//!
+//! The cycle-level behaviour (fetch, stalls, offloading, write-back
+//! arbitration) is orchestrated by [`crate::cluster`]; this module owns
+//! the architectural state and the pure evaluation functions so they can be
+//! unit-tested in isolation.
+
+use crate::isa::{AluOp, BranchOp, Reg};
+
+/// Why the core could not retire an instruction this cycle (PMC buckets).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stall {
+    /// L0 instruction-cache miss.
+    Fetch,
+    /// A source or destination register is scoreboarded busy.
+    Scoreboard,
+    /// The data port (or external memory port) cannot accept a request.
+    MemPort,
+    /// The accelerator offload path (sequencer / FP-SS queue) is full or
+    /// blocked.
+    Offload,
+    /// The shared multiply/divide unit cannot accept.
+    MulDiv,
+    /// SSR configuration shadow registers are full.
+    SsrConfig,
+    /// Waiting on the hardware barrier.
+    Barrier,
+    /// Draining (fence / SSR disable waiting for streams to finish).
+    Drain,
+    /// Sleeping in `wfi`.
+    Wfi,
+}
+
+/// Architectural + microarchitectural state of one Snitch core.
+pub struct SnitchCore {
+    pub pc: u32,
+    pub regs: [u32; 32],
+    /// Scoreboard: register has an in-flight producer (load / mul-div /
+    /// FP→int result).
+    pub busy: [bool; 32],
+    pub halted: bool,
+    /// Sleeping in `wfi` until an IPI arrives.
+    pub sleeping: bool,
+    /// Hart id (mhartid CSR).
+    pub hartid: u32,
+    /// Retired instructions that were *not* offloaded (Snitch utilization).
+    pub instret: u64,
+    /// Instructions handed to the FP-SS / mul-div over the accelerator
+    /// interface (counted again at execution for FP-SS utilization).
+    pub offloaded: u64,
+}
+
+impl SnitchCore {
+    pub fn new(hartid: u32, entry: u32) -> SnitchCore {
+        SnitchCore {
+            pc: entry,
+            regs: [0; 32],
+            busy: [false; 32],
+            halted: false,
+            sleeping: false,
+            hartid,
+            instret: 0,
+            offloaded: 0,
+        }
+    }
+
+    /// Read a register (x0 is hard-wired zero).
+    pub fn reg(&self, r: Reg) -> u32 {
+        self.regs[r.index()]
+    }
+
+    /// Write a register (writes to x0 are discarded).
+    pub fn set_reg(&mut self, r: Reg, v: u32) {
+        if !r.is_zero() {
+            self.regs[r.index()] = v;
+        }
+    }
+
+    /// True if `r` has no in-flight producer.
+    pub fn ready(&self, r: Reg) -> bool {
+        !self.busy[r.index()]
+    }
+
+    /// Mark `r` as having an in-flight producer.
+    pub fn mark_busy(&mut self, r: Reg) {
+        if !r.is_zero() {
+            self.busy[r.index()] = true;
+        }
+    }
+
+    /// Clear the in-flight marker and write the produced value.
+    pub fn writeback(&mut self, r: Reg, v: u32) {
+        self.busy[r.index()] = false;
+        self.set_reg(r, v);
+    }
+}
+
+/// The combinational ALU (also used for branch comparisons and address
+/// calculation, as in the paper).
+pub fn alu(op: AluOp, a: u32, b: u32) -> u32 {
+    match op {
+        AluOp::Add => a.wrapping_add(b),
+        AluOp::Sub => a.wrapping_sub(b),
+        AluOp::Sll => a.wrapping_shl(b & 0x1F),
+        AluOp::Slt => u32::from((a as i32) < (b as i32)),
+        AluOp::Sltu => u32::from(a < b),
+        AluOp::Xor => a ^ b,
+        AluOp::Srl => a.wrapping_shr(b & 0x1F),
+        AluOp::Sra => ((a as i32).wrapping_shr(b & 0x1F)) as u32,
+        AluOp::Or => a | b,
+        AluOp::And => a & b,
+    }
+}
+
+/// Branch comparison.
+pub fn branch_taken(op: BranchOp, a: u32, b: u32) -> bool {
+    match op {
+        BranchOp::Beq => a == b,
+        BranchOp::Bne => a != b,
+        BranchOp::Blt => (a as i32) < (b as i32),
+        BranchOp::Bge => (a as i32) >= (b as i32),
+        BranchOp::Bltu => a < b,
+        BranchOp::Bgeu => a >= b,
+    }
+}
+
+/// Extend a loaded value per the load width/signedness (the LSU's
+/// realignment + sign-extension, §2.1.1.2). The memory model already
+/// returns the bytes starting at the access address.
+pub fn load_extend(op: crate::isa::LoadOp, raw: u64) -> u32 {
+    use crate::isa::LoadOp::*;
+    match op {
+        Lb => raw as u8 as i8 as i32 as u32,
+        Lbu => raw as u8 as u32,
+        Lh => raw as u16 as i16 as i32 as u32,
+        Lhu => raw as u16 as u32,
+        Lw => raw as u32,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::LoadOp;
+
+    #[test]
+    fn alu_reference_semantics() {
+        assert_eq!(alu(AluOp::Add, 2, u32::MAX), 1);
+        assert_eq!(alu(AluOp::Sub, 0, 1), u32::MAX);
+        assert_eq!(alu(AluOp::Sll, 1, 31), 0x8000_0000);
+        assert_eq!(alu(AluOp::Sll, 1, 33), 2, "shift amount masked to 5 bits");
+        assert_eq!(alu(AluOp::Srl, 0x8000_0000, 31), 1);
+        assert_eq!(alu(AluOp::Sra, 0x8000_0000, 31), u32::MAX);
+        assert_eq!(alu(AluOp::Slt, u32::MAX, 0), 1, "-1 < 0 signed");
+        assert_eq!(alu(AluOp::Sltu, u32::MAX, 0), 0, "unsigned max not < 0");
+    }
+
+    #[test]
+    fn branch_semantics() {
+        assert!(branch_taken(BranchOp::Beq, 5, 5));
+        assert!(branch_taken(BranchOp::Blt, u32::MAX, 0));
+        assert!(!branch_taken(BranchOp::Bltu, u32::MAX, 0));
+        assert!(branch_taken(BranchOp::Bgeu, u32::MAX, 0));
+    }
+
+    #[test]
+    fn load_extension() {
+        assert_eq!(load_extend(LoadOp::Lb, 0x80), 0xFFFF_FF80);
+        assert_eq!(load_extend(LoadOp::Lbu, 0x80), 0x80);
+        assert_eq!(load_extend(LoadOp::Lh, 0x8000), 0xFFFF_8000);
+        assert_eq!(load_extend(LoadOp::Lhu, 0x8000), 0x8000);
+        assert_eq!(load_extend(LoadOp::Lw, 0xDEAD_BEEF), 0xDEAD_BEEF);
+    }
+
+    #[test]
+    fn x0_is_immutable() {
+        let mut c = SnitchCore::new(0, 0);
+        c.set_reg(Reg::ZERO, 42);
+        assert_eq!(c.reg(Reg::ZERO), 0);
+        c.mark_busy(Reg::ZERO);
+        assert!(c.ready(Reg::ZERO), "x0 never scoreboarded");
+    }
+}

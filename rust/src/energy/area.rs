@@ -1,0 +1,188 @@
+//! kGE area model (paper Figs. 10/11, §4.2.2, §4.3.2).
+//!
+//! Constants are reconstructed from the paper's own numbers:
+//! * integer core 9 kGE (RV32E, latch RF, no PMCs) … 21 kGE (RV32I,
+//!   flip-flop RF, PMCs) — Fig. 11;
+//! * SSR hardware 16 kGE (= 12 % of the FP-SS, 8.5 % of the CC);
+//! * FREP sequencer (16 entries) 13 kGE (= 7 % of the FP-SS, 3.2 % of the
+//!   cluster CC share);
+//! * cluster total ≈ 3.3 MGE with TCDM 34 %, I$ 10 %, all integer cores
+//!   5 %, all FPUs 23 % — Fig. 10;
+//! * TCDM interconnect 155 kGE at 16 ports × 32 banks, estimated 630 kGE
+//!   at 32×64 and 2.5 MGE at 64×128 (§4.3.2) → 0.303 kGE per port·bank
+//!   (complexity ∝ ports × banks, as stated).
+
+use crate::cluster::config::{ClusterConfig, IsaVariant, RfImpl};
+
+/// Integer-core base logic (decoder, ALU, LSU, CSR) excluding the RF.
+pub const CORE_BASE_KGE: f64 = 6.0;
+/// Register-file area per configuration.
+pub fn rf_kge(isa: IsaVariant, rf: RfImpl) -> f64 {
+    match (isa, rf) {
+        (IsaVariant::Rv32E, RfImpl::Latch) => 3.0,
+        (IsaVariant::Rv32E, RfImpl::FlipFlop) => 6.5,
+        (IsaVariant::Rv32I, RfImpl::Latch) => 6.5,
+        (IsaVariant::Rv32I, RfImpl::FlipFlop) => 13.0,
+    }
+}
+/// Performance monitoring counters.
+pub const PMC_KGE: f64 = 2.0;
+/// Double-precision FPU [24].
+pub const FPU_KGE: f64 = 95.0;
+/// FP register file (32×64 bit) + scoreboard.
+pub const FP_RF_KGE: f64 = 12.0;
+/// FP LSU (address from the integer core keeps it small, §2.1.2).
+pub const FP_LSU_KGE: f64 = 6.0;
+/// Both SSR data movers (address gen, control, load buffering).
+pub const SSR_KGE: f64 = 16.0;
+/// FREP sequencer with a 16-entry buffer.
+pub const FREP_KGE: f64 = 13.0;
+/// L0 I$ + interface decoupling per core complex.
+pub const CC_MISC_KGE: f64 = 24.0;
+/// TCDM SRAM macros per KiB.
+pub const TCDM_KGE_PER_KIB: f64 = 8.77;
+/// TCDM crossbar per initiator-port × bank.
+pub const TCDM_XBAR_KGE_PER_PORT_BANK: f64 = 0.303;
+/// Per-bank atomic unit (FSM + ALU, §2.3.1).
+pub const ATOMIC_UNIT_KGE: f64 = 1.5;
+/// Shared L1 I$ per KiB (data + tags + coalescing).
+pub const L1I_KGE_PER_KIB: f64 = 41.0;
+/// Per-hive shared multiply/divide unit.
+pub const MULDIV_KGE: f64 = 12.0;
+/// Cluster fixed overhead: AXI crossbar, peripherals, wiring.
+pub const CLUSTER_MISC_KGE: f64 = 150.0;
+
+/// Integer-core area for a configuration (Fig. 11).
+pub fn core_area(isa: IsaVariant, rf: RfImpl, pmcs: bool) -> f64 {
+    CORE_BASE_KGE + rf_kge(isa, rf) + if pmcs { PMC_KGE } else { 0.0 }
+}
+
+/// Hierarchical cluster area breakdown (Fig. 10).
+#[derive(Debug, Clone)]
+pub struct AreaBreakdown {
+    pub int_cores: f64,
+    pub fpus: f64,
+    pub fp_ss_other: f64,
+    pub ssr: f64,
+    pub frep: f64,
+    pub cc_misc: f64,
+    pub tcdm_sram: f64,
+    pub tcdm_xbar: f64,
+    pub atomics: f64,
+    pub l1i: f64,
+    pub muldiv: f64,
+    pub misc: f64,
+}
+
+impl AreaBreakdown {
+    pub fn total(&self) -> f64 {
+        self.int_cores
+            + self.fpus
+            + self.fp_ss_other
+            + self.ssr
+            + self.frep
+            + self.cc_misc
+            + self.tcdm_sram
+            + self.tcdm_xbar
+            + self.atomics
+            + self.l1i
+            + self.muldiv
+            + self.misc
+    }
+
+    /// One core complex (integer core + FP-SS + extensions + L0).
+    pub fn cc_each(&self, n_cores: f64) -> f64 {
+        (self.int_cores + self.fpus + self.fp_ss_other + self.ssr + self.frep + self.cc_misc)
+            / n_cores
+    }
+
+    /// Markdown table of the hierarchy with percentages (Fig. 10).
+    pub fn render(&self) -> String {
+        let t = self.total();
+        let row = |name: &str, v: f64| format!("| {name} | {v:8.0} | {:5.1}% |\n", 100.0 * v / t);
+        let mut s = String::from("| component | kGE | share |\n|---|---|---|\n");
+        s += &row("integer cores (all)", self.int_cores);
+        s += &row("FPUs (all)", self.fpus);
+        s += &row("FP-SS other (RF+LSU)", self.fp_ss_other);
+        s += &row("SSR streamers", self.ssr);
+        s += &row("FREP sequencers", self.frep);
+        s += &row("CC misc (L0 I$, ifaces)", self.cc_misc);
+        s += &row("TCDM SRAM", self.tcdm_sram);
+        s += &row("TCDM interconnect", self.tcdm_xbar);
+        s += &row("atomic units", self.atomics);
+        s += &row("L1 I$", self.l1i);
+        s += &row("mul/div units", self.muldiv);
+        s += &row("cluster misc (AXI, periph)", self.misc);
+        s += &format!("| **total** | {t:8.0} | 100% |\n");
+        s
+    }
+}
+
+/// Compute the cluster area for a configuration.
+pub fn cluster_area(cfg: &ClusterConfig) -> AreaBreakdown {
+    let n = cfg.num_cores() as f64;
+    AreaBreakdown {
+        int_cores: n * core_area(cfg.isa, cfg.rf, cfg.pmcs),
+        fpus: n * FPU_KGE,
+        fp_ss_other: n * (FP_RF_KGE + FP_LSU_KGE),
+        ssr: if cfg.has_ssr { n * SSR_KGE } else { 0.0 },
+        frep: if cfg.has_frep { n * FREP_KGE } else { 0.0 },
+        cc_misc: n * CC_MISC_KGE,
+        tcdm_sram: (cfg.tcdm_size as f64 / 1024.0) * TCDM_KGE_PER_KIB,
+        tcdm_xbar: (2.0 * n) * (cfg.tcdm_banks as f64) * TCDM_XBAR_KGE_PER_PORT_BANK,
+        atomics: cfg.tcdm_banks as f64 * ATOMIC_UNIT_KGE,
+        l1i: (cfg.l1i_size as f64 / 1024.0) * L1I_KGE_PER_KIB,
+        muldiv: cfg.num_hives as f64 * MULDIV_KGE,
+        misc: CLUSTER_MISC_KGE,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn core_config_range_matches_fig11() {
+        let lo = core_area(IsaVariant::Rv32E, RfImpl::Latch, false);
+        let hi = core_area(IsaVariant::Rv32I, RfImpl::FlipFlop, true);
+        assert!((8.5..=9.5).contains(&lo), "low config {lo} (paper: 9 kGE)");
+        assert!((20.0..=22.0).contains(&hi), "high config {hi} (paper: 21 kGE)");
+        // latch RF halves the RF area
+        assert!(rf_kge(IsaVariant::Rv32I, RfImpl::Latch) * 2.0 == rf_kge(IsaVariant::Rv32I, RfImpl::FlipFlop));
+    }
+
+    #[test]
+    fn cluster_total_matches_fig10() {
+        let a = cluster_area(&ClusterConfig::default());
+        let t = a.total();
+        assert!((3000.0..=3600.0).contains(&t), "cluster {t} kGE (paper: ~3.3 MGE)");
+        // Component shares (paper Fig. 10).
+        assert!((0.30..0.40).contains(&(a.tcdm_sram / t)), "TCDM ~34%");
+        assert!((0.08..0.12).contains(&(a.l1i / t)), "I$ ~10%");
+        assert!((0.04..0.06).contains(&(a.int_cores / t)), "int cores ~5%");
+        assert!((0.20..0.26).contains(&(a.fpus / t)), "FPUs ~23%");
+    }
+
+    #[test]
+    fn xbar_scaling_matches_s432() {
+        // §4.3.2: 16×32 → 155 kGE; 32×64 → ~630 kGE; 64×128 → ~2.5 MGE.
+        let x = |p: f64, b: f64| p * b * TCDM_XBAR_KGE_PER_PORT_BANK;
+        assert!((x(16.0, 32.0) - 155.0).abs() < 5.0);
+        assert!((x(32.0, 64.0) - 630.0).abs() < 20.0);
+        assert!((x(64.0, 128.0) - 2500.0).abs() < 50.0);
+    }
+
+    #[test]
+    fn frep_overhead_is_small() {
+        // Paper: FREP is 7 % of FP-SS, 3.2 % at cluster level.
+        let with = cluster_area(&ClusterConfig::default());
+        let mut cfg = ClusterConfig::default();
+        cfg.has_frep = false;
+        let without = cluster_area(&cfg);
+        let rel = (with.total() - without.total()) / with.total();
+        assert!((0.02..0.045).contains(&rel), "FREP cluster overhead {rel} (paper: 3.2%)");
+        let fp_ss = FPU_KGE + FP_RF_KGE + FP_LSU_KGE + SSR_KGE + FREP_KGE;
+        assert!((FREP_KGE / fp_ss - 0.07).abs() < 0.03, "FREP ~7% of FP-SS");
+        assert!((SSR_KGE / fp_ss - 0.12).abs() < 0.03, "SSR ~12% of FP-SS");
+    }
+}

@@ -1,0 +1,13 @@
+//! Area (kGE) and energy/power models (paper §4.2.2, §4.3.2, §4.3.3).
+//!
+//! The paper's absolute numbers come from GF 22 nm synthesis/post-layout
+//! runs we cannot reproduce; per DESIGN.md the substitution is a
+//! *component model calibrated on the paper's own published anchors*,
+//! driven by simulated event counts. All constants below cite their
+//! anchor.
+
+pub mod area;
+pub mod model;
+
+pub use area::{cluster_area, core_area, AreaBreakdown};
+pub use model::{power_report, EnergyModel, PowerBreakdown};

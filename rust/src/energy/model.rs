@@ -1,0 +1,225 @@
+//! Event-energy model: simulated event counts × per-event energies →
+//! power @ 1 GHz and energy efficiency (paper Figs. 14/15/16, Table 4).
+//!
+//! ## Calibration (see DESIGN.md §5)
+//!
+//! Anchors from the paper, all at 1 GHz / 0.8 V / 25 °C in GF 22 nm:
+//! * DGEMM 32² with SSR+FREP on the octa-core cluster: **171 mW** total,
+//!   of which FPU 42 %, integer cores 1 %, SSR < 4 %, FREP < 1 %,
+//!   I$ 4.8 mW, TCDM SRAM 22 %, interconnect 5 % (Fig. 14);
+//! * leakage 12 mW (Table 4);
+//! * peak energy efficiency ≈ 80 DPGflop/s/W (Fig. 16), against a
+//!   120 DPGflop/s/W theoretical bound (§4.3.3).
+//!
+//! Holding these constants fixed, the per-kernel powers (Fig. 15) and
+//! efficiencies (Fig. 16) follow from the simulated event counts alone —
+//! the same methodology as the paper's activity-based post-layout power
+//! estimation.
+
+use crate::cluster::ClusterStats;
+use crate::energy::area::cluster_area;
+use crate::cluster::config::ClusterConfig;
+
+/// Per-event energies in pJ.
+#[derive(Debug, Clone, Copy)]
+pub struct EnergyModel {
+    /// Double-precision FPU arithmetic op (FMA-class).
+    pub fpu_op: f64,
+    /// FP-SS overhead per executed instruction (FP RF access, issue, LSU).
+    pub fpss_op: f64,
+    /// Integer-core instruction (decode + ALU + RF).
+    pub int_op: f64,
+    /// SSR per streamed element (address generation + queue).
+    pub ssr_elem: f64,
+    /// FREP per sequenced instruction.
+    pub frep_op: f64,
+    /// TCDM SRAM access (64-bit).
+    pub tcdm_sram: f64,
+    /// TCDM interconnect traversal per access.
+    pub tcdm_xbar: f64,
+    /// L0 I$ fetch (flip-flop array, cheap — §4.3.3).
+    pub l0_fetch: f64,
+    /// L1 I$ access (SRAM).
+    pub l1_access: f64,
+    /// Shared mul/div operation.
+    pub muldiv_op: f64,
+    /// Per-core clock-tree / idle power in pJ per cycle.
+    pub idle_cc: f64,
+    /// Cluster leakage in mW (Table 4: 12 mW).
+    pub leakage_mw: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        EnergyModel {
+            fpu_op: 10.5,
+            fpss_op: 3.4,
+            int_op: 2.0,
+            ssr_elem: 0.6,
+            frep_op: 0.22,
+            tcdm_sram: 3.6,
+            tcdm_xbar: 0.85,
+            l0_fetch: 0.45,
+            l1_access: 3.0,
+            muldiv_op: 4.0,
+            idle_cc: 1.2,
+            leakage_mw: 12.0,
+        }
+    }
+}
+
+/// Power breakdown in mW @ 1 GHz (Fig. 14 structure).
+#[derive(Debug, Clone, Default)]
+pub struct PowerBreakdown {
+    pub fpu: f64,
+    pub fpss_other: f64,
+    pub int_cores: f64,
+    pub ssr: f64,
+    pub frep: f64,
+    pub icache: f64,
+    pub tcdm_sram: f64,
+    pub interconnect: f64,
+    pub muldiv: f64,
+    pub idle: f64,
+    pub leakage: f64,
+}
+
+impl PowerBreakdown {
+    pub fn total(&self) -> f64 {
+        self.fpu
+            + self.fpss_other
+            + self.int_cores
+            + self.ssr
+            + self.frep
+            + self.icache
+            + self.tcdm_sram
+            + self.interconnect
+            + self.muldiv
+            + self.idle
+            + self.leakage
+    }
+
+    /// Energy in the core complexes (paper: 63 %).
+    pub fn cc_share(&self) -> f64 {
+        (self.fpu + self.fpss_other + self.int_cores + self.ssr + self.frep + self.idle)
+            / self.total()
+    }
+
+    pub fn render(&self) -> String {
+        let t = self.total();
+        let row = |name: &str, v: f64| format!("| {name} | {v:7.1} | {:5.1}% |\n", 100.0 * v / t);
+        let mut s = String::from("| component | mW | share |\n|---|---|---|\n");
+        s += &row("FPUs", self.fpu);
+        s += &row("FP-SS other", self.fpss_other);
+        s += &row("integer cores", self.int_cores);
+        s += &row("SSR", self.ssr);
+        s += &row("FREP", self.frep);
+        s += &row("I$ (L0+L1)", self.icache);
+        s += &row("TCDM SRAM", self.tcdm_sram);
+        s += &row("TCDM interconnect", self.interconnect);
+        s += &row("mul/div", self.muldiv);
+        s += &row("clock tree / idle", self.idle);
+        s += &row("leakage", self.leakage);
+        s += &format!("| **total** | {t:7.1} | 100% |\n");
+        s
+    }
+}
+
+/// Compute the average power (mW @ 1 GHz) of a finished run from its
+/// statistics. Event counts over the full run divided by total cycles
+/// (the kernel region dominates by construction).
+pub fn power_report(stats: &ClusterStats, cfg: &ClusterConfig, m: &EnergyModel) -> PowerBreakdown {
+    let cycles = stats.cycles.max(1) as f64;
+    // pJ/cycle == mW @ 1 GHz.
+    let per_cycle = |events: u64, pj: f64| events as f64 * pj / cycles;
+    let mut fpu_ops = 0u64;
+    let mut fpss_ops = 0u64;
+    let mut int_ops = 0u64;
+    let mut ssr_elems = 0u64;
+    let mut frep_ops = 0u64;
+    for c in &stats.cores {
+        fpu_ops += c.fpu_instrs;
+        fpss_ops += c.fpss_instrs;
+        int_ops += c.snitch_instrs;
+        ssr_elems += c.ssr_mem_reads + c.ssr_mem_writes;
+        frep_ops += c.seq_instrs;
+    }
+    // Leakage scales with area relative to the paper's 3.3 MGE cluster.
+    let area_ratio = cluster_area(cfg).total() / 3300.0;
+    PowerBreakdown {
+        fpu: per_cycle(fpu_ops, m.fpu_op),
+        fpss_other: per_cycle(fpss_ops, m.fpss_op),
+        int_cores: per_cycle(int_ops, m.int_op),
+        ssr: per_cycle(ssr_elems, m.ssr_elem),
+        frep: per_cycle(frep_ops, m.frep_op),
+        icache: per_cycle(stats.icache_l0_hits, m.l0_fetch)
+            + per_cycle(stats.icache_l1_hits + stats.icache_l1_misses, m.l1_access),
+        tcdm_sram: per_cycle(stats.tcdm_accesses, m.tcdm_sram),
+        interconnect: per_cycle(stats.tcdm_accesses, m.tcdm_xbar),
+        muldiv: per_cycle(stats.muldiv_muls + stats.muldiv_divs, m.muldiv_op),
+        idle: cfg.num_cores() as f64 * m.idle_cc,
+        leakage: m.leakage_mw * area_ratio,
+    }
+}
+
+/// Energy efficiency in DPGflop/s/W at 1 GHz: flops/cycle ÷ (pJ/cycle).
+pub fn efficiency_gflops_w(flops: u64, cycles: u64, power_mw: f64) -> f64 {
+    let gflops = flops as f64 / cycles.max(1) as f64; // flop/cycle == Gflop/s @1GHz
+    1000.0 * gflops / power_mw
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{self, Params, Variant};
+
+    /// The headline calibration: DGEMM 32² + SSR + FREP on the octa-core
+    /// cluster must land near the paper's 171 mW / ~80 DPGflop/s/W with
+    /// the paper's component shares.
+    #[test]
+    fn dgemm32_frep_matches_fig14() {
+        let k = kernels::kernel_by_name("dgemm").unwrap();
+        let r = kernels::run_kernel(k, Variant::SsrFrep, &Params::new(32, 8)).unwrap();
+        let cfg = ClusterConfig::default();
+        let p = power_report(&r.stats, &cfg, &EnergyModel::default());
+        let total = p.total();
+        assert!(
+            (120.0..=220.0).contains(&total),
+            "total {total:.1} mW (paper: 171 mW)"
+        );
+        let fpu_share = p.fpu / total;
+        assert!((0.30..=0.52).contains(&fpu_share), "FPU share {fpu_share} (paper: 42%)");
+        assert!(p.int_cores / total < 0.05, "int cores tiny (paper: 1%)");
+        assert!(p.ssr / total < 0.06, "SSR < 4%: {}", p.ssr / total);
+        assert!(p.frep / total < 0.02, "FREP < 1%: {}", p.frep / total);
+        let eff = efficiency_gflops_w(
+            r.stats.cores.iter().map(|c| c.flops).sum(),
+            r.stats.cycles,
+            total,
+        );
+        assert!((55.0..=110.0).contains(&eff), "efficiency {eff} (paper: ~80 DPGflop/s/W)");
+    }
+
+    #[test]
+    fn frep_improves_efficiency_over_baseline() {
+        let k = kernels::kernel_by_name("dgemm").unwrap();
+        let cfg = ClusterConfig::default();
+        let m = EnergyModel::default();
+        let eff = |v: Variant| {
+            let r = kernels::run_kernel(k, v, &Params::new(32, 8)).unwrap();
+            let p = power_report(&r.stats, &cfg, &m).total();
+            efficiency_gflops_w(
+                r.stats.cores.iter().map(|c| c.flops).sum(),
+                r.stats.cycles,
+                p,
+            )
+        };
+        let base = eff(Variant::Baseline);
+        let frep = eff(Variant::SsrFrep);
+        let gain = frep / base;
+        assert!(
+            (1.3..=5.5).contains(&gain),
+            "efficiency gain {gain} (paper range: 1.5–4.9)"
+        );
+    }
+}

@@ -1,0 +1,783 @@
+//! The floating-point subsystem (paper §2.1.2): an IEEE-754 FPU with a
+//! 32×64-bit register file, its own scoreboard, a dedicated FP LSU (the
+//! address is computed by the integer core), and the SSR intercept on
+//! `ft0`/`ft1`.
+//!
+//! The FPU is parameterizable in operation latency and fully pipelined
+//! (one operation may issue per cycle); divide/square-root are iterative
+//! and non-pipelined. Results that target the integer register file
+//! (comparisons, casts, moves) are returned to the core over the
+//! accelerator write-back channel.
+
+use std::collections::VecDeque;
+
+use crate::frep::FpssOp;
+use crate::isa::{FReg, FpCmpOp, FpOp, FpWidth, Instr};
+use crate::ssr::SsrLane;
+
+/// FPU latency configuration (cycles). Defaults follow the paper's
+/// "between two and six pipeline stages for floating-point multiply-add";
+/// we model the mid-point used by the 1 GHz implementation.
+#[derive(Debug, Clone, Copy)]
+pub struct FpuLatency {
+    /// add/sub/mul/fma latency.
+    pub fma: u64,
+    /// sign-injection / min / max / moves.
+    pub simple: u64,
+    /// comparisons and conversions.
+    pub cmp: u64,
+    /// divide / square root (iterative, non-pipelined).
+    pub div: u64,
+}
+
+impl Default for FpuLatency {
+    fn default() -> Self {
+        FpuLatency { fma: 3, simple: 1, cmp: 1, div: 11 }
+    }
+}
+
+/// Destination of an in-flight FPU result.
+#[derive(Debug, Clone, Copy)]
+enum Dest {
+    Freg(FReg),
+    /// SSR write-stream slot (lane, slot id).
+    SsrSlot(usize, u64),
+}
+
+struct PipeEntry {
+    ready_at: u64,
+    dest: Dest,
+    bits: u64,
+}
+
+/// Outcome of attempting to issue the head instruction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FpIssue {
+    /// Cannot issue this cycle (operand/structural hazard).
+    Stall,
+    /// Issued fully inside the FP-SS.
+    Done,
+    /// Caller must submit a memory read for the FP load (already
+    /// committed: the destination is marked busy).
+    Load { addr: u32, frd: FReg, width: FpWidth },
+    /// Caller must submit a memory write for the FP store (value resolved).
+    Store { addr: u32, value: u64, size: u8 },
+}
+
+/// The FP subsystem of one core complex.
+pub struct FpSubsystem {
+    pub regs: [u64; 32],
+    pub busy: [bool; 32],
+    pub ssr_enabled: bool,
+    lat: FpuLatency,
+    pipeline: Vec<PipeEntry>,
+    /// FP→integer results heading back to the core: (ready_at, rd, value).
+    int_results: VecDeque<(u64, u8, u32)>,
+    div_busy_until: u64,
+    /// In-flight FP loads (for drain checks).
+    loads_in_flight: u32,
+    // ---- PMCs (Table 1 accounting) ----
+    /// All instructions executed by the FP-SS (FP-SS utilization).
+    pub issued: u64,
+    /// Arithmetic FP operations (FPU utilization: fused ops, casts,
+    /// comparisons — not loads/stores/moves).
+    pub fpu_arith: u64,
+    /// Double-precision-equivalent flops (FMA = 2).
+    pub flops: u64,
+    pub loads: u64,
+    pub stores: u64,
+}
+
+impl FpSubsystem {
+    pub fn new(lat: FpuLatency) -> FpSubsystem {
+        FpSubsystem {
+            regs: [0; 32],
+            busy: [false; 32],
+            ssr_enabled: false,
+            lat,
+            pipeline: Vec::new(),
+            int_results: VecDeque::new(),
+            div_busy_until: 0,
+            loads_in_flight: 0,
+            issued: 0,
+            fpu_arith: 0,
+            flops: 0,
+            loads: 0,
+            stores: 0,
+        }
+    }
+
+    /// True when nothing is in flight (fence / region boundaries).
+    pub fn quiesced(&self) -> bool {
+        self.pipeline.is_empty() && self.int_results.is_empty() && self.loads_in_flight == 0
+    }
+
+    fn ssr_lane_for(&self, r: FReg, lanes: &[SsrLane; 2]) -> Option<usize> {
+        if !self.ssr_enabled {
+            return None;
+        }
+        let idx = r.index();
+        if idx < 2 && !lanes[idx].idle() {
+            Some(idx)
+        } else {
+            None
+        }
+    }
+
+    fn src_ready(&self, r: FReg, lanes: &[SsrLane; 2]) -> bool {
+        match self.ssr_lane_for(r, lanes) {
+            Some(l) if lanes[l].is_read() => lanes[l].can_read(),
+            _ => !self.busy[r.index()],
+        }
+    }
+
+    /// Consume/read a source operand. Must only be called once per operand
+    /// and only after `src_ready` returned true for *all* operands.
+    fn src_value(&self, r: FReg, lanes: &mut [SsrLane; 2]) -> u64 {
+        match self.ssr_lane_for(r, lanes) {
+            Some(l) if lanes[l].is_read() => lanes[l].read().to_bits(),
+            _ => self.regs[r.index()],
+        }
+    }
+
+    fn dest_ready(&self, r: FReg, lanes: &[SsrLane; 2]) -> bool {
+        match self.ssr_lane_for(r, lanes) {
+            Some(l) if lanes[l].is_write() => lanes[l].can_write(),
+            _ => !self.busy[r.index()],
+        }
+    }
+
+    /// Try to issue one offloaded instruction. `port_free` tells whether
+    /// the FP LSU could submit a memory request this cycle (loads/stores
+    /// must not consume SSR operands if they cannot fire).
+    pub fn try_issue(
+        &mut self,
+        op: &FpssOp,
+        lanes: &mut [SsrLane; 2],
+        now: u64,
+        port_free: bool,
+    ) -> FpIssue {
+        match op.instr {
+            Instr::FpOp { op: fop, width, frd, frs1, frs2, frs3 } => {
+                let needs_div = matches!(fop, FpOp::Fdiv | FpOp::Fsqrt);
+                if needs_div && now < self.div_busy_until {
+                    return FpIssue::Stall;
+                }
+                if !self.src_ready(frs1, lanes)
+                    || (fop.has_rs2() && !self.src_ready(frs2, lanes))
+                    || (fop.has_rs3() && !self.src_ready(frs3, lanes))
+                    || !self.dest_ready(frd, lanes)
+                {
+                    return FpIssue::Stall;
+                }
+                // An instruction may read the same stream register on more
+                // than one operand port; every port read pops one element.
+                for l in 0..2 {
+                    let mut needed = 0u64;
+                    let mut count = |r: FReg| {
+                        if self.ssr_lane_for(r, lanes) == Some(l) && lanes[l].is_read() {
+                            needed += 1;
+                        }
+                    };
+                    count(frs1);
+                    if fop.has_rs2() {
+                        count(frs2);
+                    }
+                    if fop.has_rs3() {
+                        count(frs3);
+                    }
+                    if needed > 0 && lanes[l].reads_available() < needed {
+                        return FpIssue::Stall;
+                    }
+                }
+                let a = self.src_value(frs1, lanes);
+                let b = if fop.has_rs2() { self.src_value(frs2, lanes) } else { 0 };
+                let c = if fop.has_rs3() { self.src_value(frs3, lanes) } else { 0 };
+                let bits = eval_fpop(fop, width, a, b, c);
+                let lat = match fop {
+                    FpOp::Fdiv | FpOp::Fsqrt => {
+                        self.div_busy_until = now + self.lat.div;
+                        self.lat.div
+                    }
+                    FpOp::Fsgnj | FpOp::Fsgnjn | FpOp::Fsgnjx | FpOp::Fmin | FpOp::Fmax => {
+                        self.lat.simple
+                    }
+                    _ => self.lat.fma,
+                };
+                let dest = match self.ssr_lane_for(frd, lanes) {
+                    Some(l) if lanes[l].is_write() => {
+                        let slot = lanes[l].alloc_write();
+                        Dest::SsrSlot(l, slot)
+                    }
+                    _ => {
+                        self.busy[frd.index()] = true;
+                        Dest::Freg(frd)
+                    }
+                };
+                self.pipeline.push(PipeEntry { ready_at: now + lat, dest, bits });
+                self.issued += 1;
+                self.fpu_arith += 1;
+                self.flops += op.instr.flops();
+                FpIssue::Done
+            }
+            Instr::FpLoad { width, frd, .. } => {
+                if !port_free || self.busy[frd.index()] {
+                    return FpIssue::Stall;
+                }
+                self.busy[frd.index()] = true;
+                self.loads_in_flight += 1;
+                self.issued += 1;
+                self.loads += 1;
+                FpIssue::Load { addr: op.int_payload, frd, width }
+            }
+            Instr::FpStore { width, frs2, .. } => {
+                if !port_free || !self.src_ready(frs2, lanes) {
+                    return FpIssue::Stall;
+                }
+                let v = self.src_value(frs2, lanes);
+                let value = match width {
+                    FpWidth::D => v,
+                    FpWidth::S => v & 0xFFFF_FFFF,
+                };
+                self.issued += 1;
+                self.stores += 1;
+                FpIssue::Store { addr: op.int_payload, value, size: width.size() as u8 }
+            }
+            Instr::FpCmp { op: cop, width, frs1, frs2, .. } => {
+                if !self.src_ready(frs1, lanes) || !self.src_ready(frs2, lanes) {
+                    return FpIssue::Stall;
+                }
+                let a = self.src_value(frs1, lanes);
+                let b = self.src_value(frs2, lanes);
+                let r = eval_fcmp(cop, width, a, b);
+                self.int_results.push_back((now + self.lat.cmp, op.int_payload as u8, r));
+                self.issued += 1;
+                self.fpu_arith += 1;
+                FpIssue::Done
+            }
+            Instr::FpCvtToInt { width, signed, frs1, .. } => {
+                if !self.src_ready(frs1, lanes) {
+                    return FpIssue::Stall;
+                }
+                let a = self.src_value(frs1, lanes);
+                let r = eval_cvt_to_int(width, signed, a);
+                self.int_results.push_back((now + self.lat.cmp, op.int_payload as u8, r));
+                self.issued += 1;
+                self.fpu_arith += 1;
+                FpIssue::Done
+            }
+            Instr::FpMvToInt { frs1, .. } => {
+                if !self.src_ready(frs1, lanes) {
+                    return FpIssue::Stall;
+                }
+                let a = self.src_value(frs1, lanes);
+                self.int_results.push_back((now + self.lat.simple, op.int_payload as u8, a as u32));
+                self.issued += 1;
+                FpIssue::Done
+            }
+            Instr::FpClass { width, frs1, .. } => {
+                if !self.src_ready(frs1, lanes) {
+                    return FpIssue::Stall;
+                }
+                let a = self.src_value(frs1, lanes);
+                let r = eval_fclass(width, a);
+                self.int_results.push_back((now + self.lat.cmp, op.int_payload as u8, r));
+                self.issued += 1;
+                FpIssue::Done
+            }
+            Instr::FpCvtFromInt { width, signed, frd, .. } => {
+                if !self.dest_ready(frd, lanes) {
+                    return FpIssue::Stall;
+                }
+                let v = op.int_payload;
+                let bits = match (width, signed) {
+                    (FpWidth::D, true) => f64::from(v as i32).to_bits(),
+                    (FpWidth::D, false) => f64::from(v).to_bits(),
+                    (FpWidth::S, true) => nan_box(f32::to_bits(v as i32 as f32)),
+                    (FpWidth::S, false) => nan_box(f32::to_bits(v as f32)),
+                };
+                self.push_result(frd, bits, now + self.lat.cmp, lanes);
+                self.issued += 1;
+                self.fpu_arith += 1;
+                FpIssue::Done
+            }
+            Instr::FpMvFromInt { frd, .. } => {
+                if !self.dest_ready(frd, lanes) {
+                    return FpIssue::Stall;
+                }
+                let bits = nan_box(op.int_payload);
+                self.push_result(frd, bits, now + self.lat.simple, lanes);
+                self.issued += 1;
+                FpIssue::Done
+            }
+            Instr::FpCvtFF { to, frd, frs1 } => {
+                if !self.src_ready(frs1, lanes) || !self.dest_ready(frd, lanes) {
+                    return FpIssue::Stall;
+                }
+                let a = self.src_value(frs1, lanes);
+                let bits = match to {
+                    FpWidth::D => (f64::from(f32::from_bits(a as u32))).to_bits(),
+                    FpWidth::S => nan_box((f64::from_bits(a) as f32).to_bits()),
+                };
+                self.push_result(frd, bits, now + self.lat.cmp, lanes);
+                self.issued += 1;
+                self.fpu_arith += 1;
+                FpIssue::Done
+            }
+            _ => unreachable!("non-FP instruction offloaded to FP-SS: {:?}", op.instr),
+        }
+    }
+
+    fn push_result(&mut self, frd: FReg, bits: u64, ready_at: u64, lanes: &mut [SsrLane; 2]) {
+        let dest = match self.ssr_lane_for(frd, lanes) {
+            Some(l) if lanes[l].is_write() => Dest::SsrSlot(l, lanes[l].alloc_write()),
+            _ => {
+                self.busy[frd.index()] = true;
+                Dest::Freg(frd)
+            }
+        };
+        self.pipeline.push(PipeEntry { ready_at, dest, bits });
+    }
+
+    /// Retire pipeline results that are ready this cycle.
+    pub fn retire(&mut self, now: u64, lanes: &mut [SsrLane; 2]) {
+        let mut i = 0;
+        while i < self.pipeline.len() {
+            if self.pipeline[i].ready_at <= now {
+                let e = self.pipeline.swap_remove(i);
+                match e.dest {
+                    Dest::Freg(r) => {
+                        self.regs[r.index()] = e.bits;
+                        self.busy[r.index()] = false;
+                    }
+                    Dest::SsrSlot(l, slot) => lanes[l].fill(slot, f64::from_bits(e.bits)),
+                }
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// FP load data returned from memory.
+    pub fn load_response(&mut self, frd: FReg, width: FpWidth, raw: u64) {
+        let bits = match width {
+            FpWidth::D => raw,
+            FpWidth::S => nan_box(raw as u32),
+        };
+        self.regs[frd.index()] = bits;
+        self.busy[frd.index()] = false;
+        self.loads_in_flight -= 1;
+    }
+
+    /// Take a ready FP→integer result (accelerator write-back channel).
+    pub fn take_int_result(&mut self, now: u64) -> Option<(u8, u32)> {
+        match self.int_results.front() {
+            Some(&(ready, rd, v)) if ready <= now => {
+                self.int_results.pop_front();
+                Some((rd, v))
+            }
+            _ => None,
+        }
+    }
+
+    /// Host-side helper: read an FP register as f64.
+    pub fn reg_f64(&self, r: FReg) -> f64 {
+        f64::from_bits(self.regs[r.index()])
+    }
+}
+
+/// NaN-box a single-precision value into a 64-bit register.
+pub fn nan_box(bits32: u32) -> u64 {
+    0xFFFF_FFFF_0000_0000 | u64::from(bits32)
+}
+
+/// Evaluate an FP compute operation on raw register bits.
+pub fn eval_fpop(op: FpOp, width: FpWidth, a: u64, b: u64, c: u64) -> u64 {
+    match width {
+        FpWidth::D => {
+            let (x, y, z) = (f64::from_bits(a), f64::from_bits(b), f64::from_bits(c));
+            let r = match op {
+                FpOp::Fadd => x + y,
+                FpOp::Fsub => x - y,
+                FpOp::Fmul => x * y,
+                FpOp::Fdiv => x / y,
+                FpOp::Fsqrt => x.sqrt(),
+                FpOp::Fmin => ieee_min(x, y),
+                FpOp::Fmax => ieee_max(x, y),
+                FpOp::Fmadd => x.mul_add(y, z),
+                FpOp::Fmsub => x.mul_add(y, -z),
+                FpOp::Fnmsub => (-x).mul_add(y, z),
+                FpOp::Fnmadd => (-x).mul_add(y, -z),
+                FpOp::Fsgnj => return (a & !SIGN64) | (b & SIGN64),
+                FpOp::Fsgnjn => return (a & !SIGN64) | (!b & SIGN64),
+                FpOp::Fsgnjx => return a ^ (b & SIGN64),
+            };
+            r.to_bits()
+        }
+        FpWidth::S => {
+            let (x, y, z) =
+                (f32::from_bits(a as u32), f32::from_bits(b as u32), f32::from_bits(c as u32));
+            let r = match op {
+                FpOp::Fadd => x + y,
+                FpOp::Fsub => x - y,
+                FpOp::Fmul => x * y,
+                FpOp::Fdiv => x / y,
+                FpOp::Fsqrt => x.sqrt(),
+                FpOp::Fmin => ieee_min_f32(x, y),
+                FpOp::Fmax => ieee_max_f32(x, y),
+                FpOp::Fmadd => x.mul_add(y, z),
+                FpOp::Fmsub => x.mul_add(y, -z),
+                FpOp::Fnmsub => (-x).mul_add(y, z),
+                FpOp::Fnmadd => (-x).mul_add(y, -z),
+                FpOp::Fsgnj => {
+                    return nan_box(((a as u32) & !SIGN32) | ((b as u32) & SIGN32));
+                }
+                FpOp::Fsgnjn => {
+                    return nan_box(((a as u32) & !SIGN32) | (!(b as u32) & SIGN32));
+                }
+                FpOp::Fsgnjx => return nan_box((a as u32) ^ ((b as u32) & SIGN32)),
+            };
+            nan_box(r.to_bits())
+        }
+    }
+}
+
+const SIGN64: u64 = 1 << 63;
+const SIGN32: u32 = 1 << 31;
+
+/// RISC-V fmin: minNum semantics (NaN loses unless both NaN).
+fn ieee_min(x: f64, y: f64) -> f64 {
+    if x.is_nan() {
+        y
+    } else if y.is_nan() {
+        x
+    } else if x == 0.0 && y == 0.0 {
+        if x.is_sign_negative() { x } else { y }
+    } else {
+        x.min(y)
+    }
+}
+
+fn ieee_max(x: f64, y: f64) -> f64 {
+    if x.is_nan() {
+        y
+    } else if y.is_nan() {
+        x
+    } else if x == 0.0 && y == 0.0 {
+        if x.is_sign_positive() { x } else { y }
+    } else {
+        x.max(y)
+    }
+}
+
+fn ieee_min_f32(x: f32, y: f32) -> f32 {
+    if x.is_nan() {
+        y
+    } else if y.is_nan() {
+        x
+    } else {
+        x.min(y)
+    }
+}
+
+fn ieee_max_f32(x: f32, y: f32) -> f32 {
+    if x.is_nan() {
+        y
+    } else if y.is_nan() {
+        x
+    } else {
+        x.max(y)
+    }
+}
+
+/// FP comparison (result 0/1 into the integer RF).
+pub fn eval_fcmp(op: FpCmpOp, width: FpWidth, a: u64, b: u64) -> u32 {
+    let (x, y) = match width {
+        FpWidth::D => (f64::from_bits(a), f64::from_bits(b)),
+        FpWidth::S => (f64::from(f32::from_bits(a as u32)), f64::from(f32::from_bits(b as u32))),
+    };
+    u32::from(match op {
+        FpCmpOp::Feq => x == y,
+        FpCmpOp::Flt => x < y,
+        FpCmpOp::Fle => x <= y,
+    })
+}
+
+/// RISC-V saturating float→int conversion.
+pub fn eval_cvt_to_int(width: FpWidth, signed: bool, a: u64) -> u32 {
+    let x = match width {
+        FpWidth::D => f64::from_bits(a),
+        FpWidth::S => f64::from(f32::from_bits(a as u32)),
+    };
+    if signed {
+        if x.is_nan() {
+            i32::MAX as u32
+        } else {
+            (x as i64).clamp(i64::from(i32::MIN), i64::from(i32::MAX)) as i32 as u32
+        }
+    } else if x.is_nan() {
+        u32::MAX
+    } else if x <= -1.0 {
+        0
+    } else {
+        (x as u64).min(u64::from(u32::MAX)) as u32
+    }
+}
+
+/// RISC-V fclass bit vector.
+pub fn eval_fclass(width: FpWidth, a: u64) -> u32 {
+    let (sign, is_inf, is_nan, is_snan, is_sub, is_zero) = match width {
+        FpWidth::D => {
+            let x = f64::from_bits(a);
+            (
+                x.is_sign_negative(),
+                x.is_infinite(),
+                x.is_nan(),
+                x.is_nan() && (a >> 51) & 1 == 0,
+                x.is_subnormal(),
+                x == 0.0,
+            )
+        }
+        FpWidth::S => {
+            let x = f32::from_bits(a as u32);
+            (
+                x.is_sign_negative(),
+                x.is_infinite(),
+                x.is_nan(),
+                x.is_nan() && (a >> 22) & 1 == 0,
+                x.is_subnormal(),
+                x == 0.0,
+            )
+        }
+    };
+    if is_nan {
+        return if is_snan { 1 << 8 } else { 1 << 9 };
+    }
+    let bit = match (sign, is_inf, is_sub, is_zero) {
+        (true, true, _, _) => 0,
+        (true, _, false, false) => 1,
+        (true, _, true, _) => 2,
+        (true, _, _, true) => 3,
+        (false, _, _, true) => 4,
+        (false, _, true, _) => 5,
+        (false, false, _, _) => 6,
+        (false, true, _, _) => 7,
+    };
+    1 << bit
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::proptest::Rng;
+
+    fn op(instr: Instr) -> FpssOp {
+        FpssOp { instr, int_payload: 0, from_sequencer: false }
+    }
+
+    fn fp(oper: FpOp, rd: u8, rs1: u8, rs2: u8, rs3: u8) -> FpssOp {
+        op(Instr::FpOp {
+            op: oper,
+            width: FpWidth::D,
+            frd: FReg::new(rd),
+            frs1: FReg::new(rs1),
+            frs2: FReg::new(rs2),
+            frs3: FReg::new(rs3),
+        })
+    }
+
+    fn mk() -> (FpSubsystem, [SsrLane; 2]) {
+        (FpSubsystem::new(FpuLatency::default()), [SsrLane::new(), SsrLane::new()])
+    }
+
+    #[test]
+    fn fma_latency_and_result() {
+        let (mut f, mut lanes) = mk();
+        f.regs[2] = 3.0f64.to_bits();
+        f.regs[3] = 4.0f64.to_bits();
+        f.regs[4] = 5.0f64.to_bits();
+        assert_eq!(f.try_issue(&fp(FpOp::Fmadd, 5, 2, 3, 4), &mut lanes, 0, true), FpIssue::Done);
+        assert!(f.busy[5]);
+        f.retire(2, &mut lanes);
+        assert!(f.busy[5], "not ready before fma latency");
+        f.retire(3, &mut lanes);
+        assert!(!f.busy[5]);
+        assert_eq!(f.reg_f64(FReg::new(5)), 17.0);
+        assert_eq!(f.flops, 2);
+        assert_eq!(f.fpu_arith, 1);
+    }
+
+    #[test]
+    fn raw_dependency_stalls_issue() {
+        let (mut f, mut lanes) = mk();
+        f.regs[2] = 1.0f64.to_bits();
+        assert_eq!(f.try_issue(&fp(FpOp::Fadd, 3, 2, 2, 0), &mut lanes, 0, true), FpIssue::Done);
+        // fadd writes f3 at cycle 3; a use of f3 stalls until then.
+        assert_eq!(f.try_issue(&fp(FpOp::Fadd, 4, 3, 3, 0), &mut lanes, 1, true), FpIssue::Stall);
+        f.retire(3, &mut lanes);
+        assert_eq!(f.try_issue(&fp(FpOp::Fadd, 4, 3, 3, 0), &mut lanes, 3, true), FpIssue::Done);
+    }
+
+    #[test]
+    fn div_is_non_pipelined() {
+        let (mut f, mut lanes) = mk();
+        f.regs[1] = 8.0f64.to_bits();
+        f.regs[2] = 2.0f64.to_bits();
+        assert_eq!(f.try_issue(&fp(FpOp::Fdiv, 3, 1, 2, 0), &mut lanes, 0, true), FpIssue::Done);
+        assert_eq!(
+            f.try_issue(&fp(FpOp::Fdiv, 4, 1, 2, 0), &mut lanes, 1, true),
+            FpIssue::Stall,
+            "second divide blocked"
+        );
+        // An independent fma can still issue (separate pipeline).
+        assert_eq!(f.try_issue(&fp(FpOp::Fmul, 5, 1, 2, 0), &mut lanes, 1, true), FpIssue::Done);
+        f.retire(11, &mut lanes);
+        assert_eq!(f.reg_f64(FReg::new(3)), 4.0);
+        assert_eq!(f.try_issue(&fp(FpOp::Fdiv, 4, 1, 2, 0), &mut lanes, 11, true), FpIssue::Done);
+    }
+
+    #[test]
+    fn store_resolves_value_and_respects_port() {
+        let (mut f, mut lanes) = mk();
+        f.regs[7] = 2.5f64.to_bits();
+        let st = op(Instr::FpStore {
+            width: FpWidth::D,
+            frs2: FReg::new(7),
+            rs1: crate::isa::Reg::new(10),
+            offset: 0,
+        });
+        let st = FpssOp { int_payload: 0x1000_0040, ..st };
+        assert_eq!(f.try_issue(&st, &mut lanes, 0, false), FpIssue::Stall, "port busy");
+        assert_eq!(
+            f.try_issue(&st, &mut lanes, 0, true),
+            FpIssue::Store { addr: 0x1000_0040, value: 2.5f64.to_bits(), size: 8 }
+        );
+    }
+
+    #[test]
+    fn compare_returns_int_result() {
+        let (mut f, mut lanes) = mk();
+        f.regs[1] = 1.0f64.to_bits();
+        f.regs[2] = 2.0f64.to_bits();
+        let cmp = FpssOp {
+            instr: Instr::FpCmp {
+                op: FpCmpOp::Flt,
+                width: FpWidth::D,
+                rd: crate::isa::Reg::new(10),
+                frs1: FReg::new(1),
+                frs2: FReg::new(2),
+            },
+            int_payload: 10,
+            from_sequencer: false,
+        };
+        assert_eq!(f.try_issue(&cmp, &mut lanes, 5, true), FpIssue::Done);
+        assert_eq!(f.take_int_result(5), None);
+        assert_eq!(f.take_int_result(6), Some((10, 1)));
+    }
+
+    #[test]
+    fn ssr_read_operand_consumed_from_lane() {
+        let (mut f, mut lanes) = mk();
+        f.ssr_enabled = true;
+        // Arm lane 0 as a 2-element read stream and feed it data.
+        lanes[0].stage_bounds[0] = 1;
+        lanes[0].stage_strides[0] = 8;
+        assert!(lanes[0].csr_write(crate::isa::csr::SsrCsr::ReadPtr { lane: 0, dims: 1 }, 0));
+        lanes[0].mem_request().unwrap();
+        lanes[0].on_grant();
+        lanes[0].on_read_data(6.0);
+        f.regs[3] = 7.0f64.to_bits();
+        // fmadd f5, ft0, f3, f5 — ft0 comes from the stream.
+        assert_eq!(f.try_issue(&fp(FpOp::Fmadd, 5, 0, 3, 5), &mut lanes, 0, true), FpIssue::Done);
+        f.retire(3, &mut lanes);
+        assert_eq!(f.reg_f64(FReg::new(5)), 42.0);
+        // Next read stalls until more data arrives.
+        assert_eq!(f.try_issue(&fp(FpOp::Fmadd, 6, 0, 3, 6), &mut lanes, 4, true), FpIssue::Stall);
+    }
+
+    #[test]
+    fn ssr_write_dest_fills_lane_in_order() {
+        let (mut f, mut lanes) = mk();
+        f.ssr_enabled = true;
+        lanes[1].stage_bounds[0] = 1;
+        lanes[1].stage_strides[0] = 8;
+        assert!(lanes[1].csr_write(crate::isa::csr::SsrCsr::WritePtr { lane: 1, dims: 1 }, 0x80));
+        f.regs[2] = 1.5f64.to_bits();
+        f.regs[3] = 2.0f64.to_bits();
+        // ft1 = f2 + f3 → goes to the write stream.
+        assert_eq!(f.try_issue(&fp(FpOp::Fadd, 1, 2, 3, 0), &mut lanes, 0, true), FpIssue::Done);
+        assert!(lanes[1].mem_request().is_none(), "value not retired yet");
+        f.retire(3, &mut lanes);
+        let (addr, v) = lanes[1].mem_request().unwrap();
+        assert_eq!((addr, v), (0x80, Some(3.5)));
+    }
+
+    #[test]
+    fn nan_boxing_single_precision() {
+        let (mut f, mut lanes) = mk();
+        f.regs[1] = nan_box(2.0f32.to_bits());
+        f.regs[2] = nan_box(3.0f32.to_bits());
+        let add = op(Instr::FpOp {
+            op: FpOp::Fadd,
+            width: FpWidth::S,
+            frd: FReg::new(3),
+            frs1: FReg::new(1),
+            frs2: FReg::new(2),
+            frs3: FReg::new(0),
+        });
+        assert_eq!(f.try_issue(&add, &mut lanes, 0, true), FpIssue::Done);
+        f.retire(3, &mut lanes);
+        let bits = f.regs[3];
+        assert_eq!(bits >> 32, 0xFFFF_FFFF, "NaN-boxed");
+        assert_eq!(f32::from_bits(bits as u32), 5.0);
+    }
+
+    #[test]
+    fn eval_matches_host_arithmetic_randomized() {
+        let mut rng = Rng::new(2024);
+        for _ in 0..50_000 {
+            let a = rng.f64_sym(1e6);
+            let b = rng.f64_sym(1e6);
+            let c = rng.f64_sym(1e6);
+            let fma = f64::from_bits(eval_fpop(
+                FpOp::Fmadd,
+                FpWidth::D,
+                a.to_bits(),
+                b.to_bits(),
+                c.to_bits(),
+            ));
+            assert_eq!(fma, a.mul_add(b, c));
+            let sub = f64::from_bits(eval_fpop(FpOp::Fsub, FpWidth::D, a.to_bits(), b.to_bits(), 0));
+            assert_eq!(sub, a - b);
+        }
+    }
+
+    #[test]
+    fn cvt_saturation() {
+        assert_eq!(eval_cvt_to_int(FpWidth::D, true, 1e300f64.to_bits()), i32::MAX as u32);
+        assert_eq!(eval_cvt_to_int(FpWidth::D, true, (-1e300f64).to_bits()), i32::MIN as u32);
+        assert_eq!(eval_cvt_to_int(FpWidth::D, true, f64::NAN.to_bits()), i32::MAX as u32);
+        assert_eq!(eval_cvt_to_int(FpWidth::D, false, (-3.0f64).to_bits()), 0);
+        assert_eq!(eval_cvt_to_int(FpWidth::D, true, 42.7f64.to_bits()), 42);
+    }
+
+    #[test]
+    fn fclass_buckets() {
+        assert_eq!(eval_fclass(FpWidth::D, f64::NEG_INFINITY.to_bits()), 1 << 0);
+        assert_eq!(eval_fclass(FpWidth::D, (-1.5f64).to_bits()), 1 << 1);
+        assert_eq!(eval_fclass(FpWidth::D, (-0.0f64).to_bits()), 1 << 3);
+        assert_eq!(eval_fclass(FpWidth::D, 0.0f64.to_bits()), 1 << 4);
+        assert_eq!(eval_fclass(FpWidth::D, 1.5f64.to_bits()), 1 << 6);
+        assert_eq!(eval_fclass(FpWidth::D, f64::INFINITY.to_bits()), 1 << 7);
+        assert_eq!(eval_fclass(FpWidth::D, f64::NAN.to_bits()), 1 << 9);
+    }
+
+    #[test]
+    fn sgnj_bit_semantics() {
+        let a = 3.0f64.to_bits();
+        let negb = (-1.0f64).to_bits();
+        assert_eq!(f64::from_bits(eval_fpop(FpOp::Fsgnj, FpWidth::D, a, negb, 0)), -3.0);
+        assert_eq!(f64::from_bits(eval_fpop(FpOp::Fsgnjn, FpWidth::D, a, negb, 0)), 3.0);
+        assert_eq!(f64::from_bits(eval_fpop(FpOp::Fsgnjx, FpWidth::D, (-3.0f64).to_bits(), negb, 0)), 3.0);
+    }
+}

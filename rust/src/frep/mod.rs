@@ -1,0 +1,461 @@
+//! The FPU sequence buffer configured by the `frep` instruction
+//! (paper §2.5, Fig. 4/5).
+//!
+//! The sequencer sits on the offloading path between the integer core and
+//! the FP subsystem. A `frep` instruction stores a configuration; the next
+//! `max_inst + 1` *sequenceable* floating-point instructions are captured
+//! into the sequence buffer and then issued to the FP-SS autonomously for
+//! `max_rep + 1` iterations — freeing the integer core (pseudo dual-issue)
+//! and eliding the loop from the instruction stream entirely.
+//!
+//! Supported features (all from the paper):
+//! * outer (`frep.o`, repeat the whole block) and inner (`frep.i`, repeat
+//!   each instruction) sequencing;
+//! * operand staggering: a 4-bit mask (rs1, rs2, rs3, rd) plus a 3-bit
+//!   wrap count implement software-defined register renaming to hide FPU
+//!   pipeline latency;
+//! * a configuration queue so a subsequent `frep` can be pushed while the
+//!   current one is still sequencing;
+//! * a bypass lane for non-sequenceable instructions when the sequencer is
+//!   idle.
+
+use std::collections::VecDeque;
+
+use crate::isa::{FReg, Instr};
+
+/// Maximum number of instructions in the sequence buffer (4-bit max_inst).
+pub const SEQ_BUFFER_DEPTH: usize = 16;
+/// Depth of the configuration queue (a shadow configuration can be pushed
+/// while one is active).
+pub const CONFIG_QUEUE_DEPTH: usize = 2;
+
+/// A decoded `frep` configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrepConfig {
+    pub is_outer: bool,
+    /// Number of buffered instructions minus 1.
+    pub max_inst: u8,
+    /// Number of iterations minus 1 (read from `rs1` at offload time).
+    pub max_rep: u32,
+    /// Stagger mask: bit0=rs1, bit1=rs2, bit2=rs3, bit3=rd.
+    pub stagger_mask: u8,
+    /// Stagger increments for `stagger_count + 1` iterations, then wraps.
+    pub stagger_count: u8,
+}
+
+/// An instruction offloaded to the FP-SS, with any integer-side operand
+/// already resolved by the core (e.g. the address of an `fld`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FpssOp {
+    pub instr: Instr,
+    /// Integer payload: memory address for FP loads/stores, source value
+    /// for `fmv.w.x` / `fcvt.d.w`, destination integer register index for
+    /// comparisons/casts to int.
+    pub int_payload: u32,
+    /// Set when this op was issued by the sequencer (for PMC attribution).
+    pub from_sequencer: bool,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum State {
+    Idle,
+    /// Capturing `max_inst + 1` instructions of the active config.
+    Filling,
+    /// Autonomously issuing from the buffer.
+    Sequencing,
+}
+
+/// Outcome of offering a core-side instruction to the sequencer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Offer {
+    /// Instruction accepted (captured or passed through).
+    Accepted,
+    /// Sequencer cannot take it this cycle — core must stall and retry.
+    Stall,
+}
+
+/// The FPU sequencer.
+pub struct Sequencer {
+    state: State,
+    configs: VecDeque<FrepConfig>,
+    buffer: Vec<Instr>,
+    /// Position in the buffer during sequencing.
+    inst_idx: usize,
+    /// Current iteration (outer: block iteration; inner: per-instruction).
+    iter: u32,
+    /// Output queue toward the FP-SS (models the issue register; depth 1 —
+    /// the FP-SS pulls one instruction per cycle).
+    out: VecDeque<FpssOp>,
+    out_capacity: usize,
+    /// PMC: instructions issued out of the sequence buffer (beyond their
+    /// first, core-issued occurrence).
+    pub sequenced_ops: u64,
+    /// PMC: configurations executed.
+    pub freps_run: u64,
+}
+
+impl Default for Sequencer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Sequencer {
+    pub fn new() -> Sequencer {
+        Sequencer {
+            state: State::Idle,
+            configs: VecDeque::new(),
+            buffer: Vec::with_capacity(SEQ_BUFFER_DEPTH),
+            inst_idx: 0,
+            iter: 0,
+            out: VecDeque::new(),
+            out_capacity: 2,
+            sequenced_ops: 0,
+            freps_run: 0,
+        }
+    }
+
+    /// Offer a `frep` configuration (core side).
+    pub fn offer_frep(&mut self, cfg: FrepConfig) -> Offer {
+        if self.configs.len() >= CONFIG_QUEUE_DEPTH {
+            return Offer::Stall;
+        }
+        self.configs.push_back(cfg);
+        if self.state == State::Idle {
+            self.begin_fill();
+        }
+        Offer::Accepted
+    }
+
+    fn begin_fill(&mut self) {
+        debug_assert!(!self.configs.is_empty());
+        self.state = State::Filling;
+        self.buffer.clear();
+        self.inst_idx = 0;
+        self.iter = 0;
+        self.freps_run += 1;
+    }
+
+    /// Offer an FP instruction from the core.
+    ///
+    /// * Idle: pass through to the FP-SS (bypass lane) if there is space.
+    /// * Filling: sequenceable instructions are captured (and issued as
+    ///   part of iteration 0 by the sequencer itself).
+    /// * Sequencing/Filling with a non-sequenceable instruction: stall —
+    ///   the bypass lane waits for the sequence to finish, preserving
+    ///   program order on the FP-SS.
+    pub fn offer(&mut self, op: FpssOp) -> Offer {
+        match self.state {
+            State::Idle => {
+                if self.out.len() < self.out_capacity {
+                    self.out.push_back(op);
+                    Offer::Accepted
+                } else {
+                    Offer::Stall
+                }
+            }
+            State::Filling => {
+                if !op.instr.is_sequenceable() {
+                    return Offer::Stall;
+                }
+                let cfg = self.configs.front().unwrap();
+                self.buffer.push(op.instr);
+                if self.buffer.len() == usize::from(cfg.max_inst) + 1 {
+                    self.state = State::Sequencing;
+                    self.inst_idx = 0;
+                    self.iter = 0;
+                }
+                Offer::Accepted
+            }
+            State::Sequencing => Offer::Stall,
+        }
+    }
+
+    /// True if the sequencer is completely idle (used by `fence`/region
+    /// boundaries).
+    pub fn idle(&self) -> bool {
+        self.state == State::Idle && self.out.is_empty() && self.configs.is_empty()
+    }
+
+    /// Apply the stagger transform for iteration `iter` to an instruction.
+    fn stagger(instr: Instr, cfg: &FrepConfig, iter: u32) -> Instr {
+        if cfg.stagger_mask == 0 {
+            return instr;
+        }
+        let amount = (iter % (u32::from(cfg.stagger_count) + 1)) as u8;
+        if amount == 0 {
+            return instr;
+        }
+        let adj = |r: FReg, bit: u8| -> FReg {
+            if cfg.stagger_mask & (1 << bit) != 0 {
+                r.staggered(amount)
+            } else {
+                r
+            }
+        };
+        match instr {
+            Instr::FpOp { op, width, frd, frs1, frs2, frs3 } => Instr::FpOp {
+                op,
+                width,
+                frd: adj(frd, 3),
+                frs1: adj(frs1, 0),
+                frs2: adj(frs2, 1),
+                frs3: adj(frs3, 2),
+            },
+            other => other,
+        }
+    }
+
+    /// Advance one cycle: move one buffered instruction into the output
+    /// register if sequencing and there is space.
+    pub fn step(&mut self) {
+        if self.state != State::Sequencing || self.out.len() >= self.out_capacity {
+            return;
+        }
+        let cfg = *self.configs.front().unwrap();
+        let n = self.buffer.len();
+        let reps = cfg.max_rep + 1;
+        // Current (inst, iter) position → emit.
+        let instr = Sequencer::stagger(self.buffer[self.inst_idx], &cfg, self.iter);
+        self.out.push_back(FpssOp { instr, int_payload: 0, from_sequencer: true });
+        self.sequenced_ops += 1;
+        // Advance position.
+        if cfg.is_outer {
+            // block-major: all instructions, then next iteration
+            self.inst_idx += 1;
+            if self.inst_idx == n {
+                self.inst_idx = 0;
+                self.iter += 1;
+            }
+        } else {
+            // instruction-major: all iterations of one instruction first
+            self.iter += 1;
+            if self.iter == reps {
+                self.iter = 0;
+                self.inst_idx += 1;
+            }
+        }
+        let done = if cfg.is_outer { self.iter == reps } else { self.inst_idx == n };
+        if done {
+            self.configs.pop_front();
+            self.state = State::Idle;
+            if !self.configs.is_empty() {
+                self.begin_fill();
+            }
+        }
+    }
+
+    /// FP-SS side: peek the next op to issue.
+    pub fn peek(&self) -> Option<&FpssOp> {
+        self.out.front()
+    }
+
+    /// FP-SS side: consume the op returned by [`Self::peek`].
+    pub fn pop(&mut self) -> FpssOp {
+        self.out.pop_front().expect("pop without peek")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{FpOp, FpWidth};
+
+    fn fma(rd: u8, rs1: u8, rs2: u8, rs3: u8) -> Instr {
+        Instr::FpOp {
+            op: FpOp::Fmadd,
+            width: FpWidth::D,
+            frd: FReg::new(rd),
+            frs1: FReg::new(rs1),
+            frs2: FReg::new(rs2),
+            frs3: FReg::new(rs3),
+        }
+    }
+
+    fn op(i: Instr) -> FpssOp {
+        FpssOp { instr: i, int_payload: 0, from_sequencer: false }
+    }
+
+    fn drain(s: &mut Sequencer) -> Vec<Instr> {
+        let mut v = Vec::new();
+        for _ in 0..1000 {
+            s.step();
+            while s.peek().is_some() {
+                v.push(s.pop().instr);
+            }
+            if s.idle() {
+                break;
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn bypass_when_idle() {
+        let mut s = Sequencer::new();
+        assert_eq!(s.offer(op(fma(2, 0, 1, 2))), Offer::Accepted);
+        assert_eq!(s.pop().instr, fma(2, 0, 1, 2));
+    }
+
+    #[test]
+    fn outer_repetition_order() {
+        // Paper Fig. 5(b): frep.o with 2 instructions, 4 iterations →
+        // I1 I2 I1 I2 I1 I2 I1 I2.
+        let mut s = Sequencer::new();
+        s.offer_frep(FrepConfig {
+            is_outer: true,
+            max_inst: 1,
+            max_rep: 3,
+            stagger_mask: 0,
+            stagger_count: 0,
+        });
+        assert_eq!(s.offer(op(fma(2, 0, 1, 2))), Offer::Accepted);
+        assert_eq!(s.offer(op(fma(3, 0, 1, 3))), Offer::Accepted);
+        let seq = drain(&mut s);
+        assert_eq!(seq.len(), 8);
+        for k in 0..4 {
+            assert_eq!(seq[2 * k], fma(2, 0, 1, 2));
+            assert_eq!(seq[2 * k + 1], fma(3, 0, 1, 3));
+        }
+        assert_eq!(s.sequenced_ops, 8);
+    }
+
+    #[test]
+    fn inner_repetition_order() {
+        // Paper Fig. 5(d): frep.i with 2 instructions, 3 iterations →
+        // I1 I1 I1 I2 I2 I2.
+        let mut s = Sequencer::new();
+        s.offer_frep(FrepConfig {
+            is_outer: false,
+            max_inst: 1,
+            max_rep: 2,
+            stagger_mask: 0,
+            stagger_count: 0,
+        });
+        s.offer(op(fma(2, 0, 1, 2)));
+        s.offer(op(fma(3, 0, 1, 3)));
+        let seq = drain(&mut s);
+        assert_eq!(seq.len(), 6);
+        assert_eq!(&seq[..3], &[fma(2, 0, 1, 2); 3]);
+        assert_eq!(&seq[3..], &[fma(3, 0, 1, 3); 3]);
+    }
+
+    #[test]
+    fn stagger_renames_rd_and_wraps() {
+        // Stagger rd (bit 3) with count 1 → amount alternates 0,1,0,1.
+        let mut s = Sequencer::new();
+        s.offer_frep(FrepConfig {
+            is_outer: true,
+            max_inst: 0,
+            max_rep: 3,
+            stagger_mask: 0b1000,
+            stagger_count: 1,
+        });
+        s.offer(op(fma(4, 0, 1, 4)));
+        let seq = drain(&mut s);
+        let rds: Vec<usize> = seq
+            .iter()
+            .map(|i| match i {
+                Instr::FpOp { frd, .. } => frd.index(),
+                _ => panic!(),
+            })
+            .collect();
+        assert_eq!(rds, vec![4, 5, 4, 5]);
+    }
+
+    #[test]
+    fn stagger_sources_mask() {
+        // Stagger rs2 (bit 1) and rd (bit 3), count 2 → amounts 0,1,2,0.
+        let mut s = Sequencer::new();
+        s.offer_frep(FrepConfig {
+            is_outer: true,
+            max_inst: 0,
+            max_rep: 3,
+            stagger_mask: 0b1010,
+            stagger_count: 2,
+        });
+        s.offer(op(fma(4, 0, 1, 4)));
+        let seq = drain(&mut s);
+        let ops: Vec<(usize, usize, usize, usize)> = seq
+            .iter()
+            .map(|i| match i {
+                Instr::FpOp { frd, frs1, frs2, frs3, .. } => {
+                    (frd.index(), frs1.index(), frs2.index(), frs3.index())
+                }
+                _ => panic!(),
+            })
+            .collect();
+        assert_eq!(ops, vec![(4, 0, 1, 4), (5, 0, 2, 4), (6, 0, 3, 4), (4, 0, 1, 4)]);
+    }
+
+    #[test]
+    fn nonsequenceable_stalls_while_active() {
+        let mut s = Sequencer::new();
+        s.offer_frep(FrepConfig {
+            is_outer: true,
+            max_inst: 0,
+            max_rep: 10,
+            stagger_mask: 0,
+            stagger_count: 0,
+        });
+        let fld = Instr::FpLoad {
+            width: FpWidth::D,
+            frd: FReg::new(3),
+            rs1: crate::isa::Reg::new(10),
+            offset: 0,
+        };
+        assert_eq!(s.offer(op(fld)), Offer::Stall, "loads are not sequenceable");
+        s.offer(op(fma(2, 0, 1, 2)));
+        assert_eq!(s.offer(op(fld)), Offer::Stall, "bypass waits while sequencing");
+        drain(&mut s);
+        assert_eq!(s.offer(op(fld)), Offer::Accepted, "bypass after completion");
+    }
+
+    #[test]
+    fn config_queue_chains_two_freps() {
+        let mut s = Sequencer::new();
+        let cfg = FrepConfig {
+            is_outer: true,
+            max_inst: 0,
+            max_rep: 1,
+            stagger_mask: 0,
+            stagger_count: 0,
+        };
+        assert_eq!(s.offer_frep(cfg), Offer::Accepted);
+        s.offer(op(fma(2, 0, 1, 2)));
+        // Second frep while the first is sequencing.
+        assert_eq!(s.offer_frep(cfg), Offer::Accepted);
+        // Its body can only be captured once the first finished; drive it.
+        let mut all = Vec::new();
+        let mut offered = false;
+        for _ in 0..100 {
+            s.step();
+            while s.peek().is_some() {
+                all.push(s.pop().instr);
+            }
+            if !offered && s.offer(op(fma(3, 0, 1, 3))) == Offer::Accepted {
+                offered = true;
+            }
+            if offered && s.idle() {
+                break;
+            }
+        }
+        assert_eq!(all.len(), 4, "two blocks of two iterations each");
+        assert_eq!(s.freps_run, 2);
+    }
+
+    #[test]
+    fn config_queue_overflow_stalls() {
+        let mut s = Sequencer::new();
+        let cfg = FrepConfig {
+            is_outer: true,
+            max_inst: 0,
+            max_rep: 100,
+            stagger_mask: 0,
+            stagger_count: 0,
+        };
+        assert_eq!(s.offer_frep(cfg), Offer::Accepted);
+        assert_eq!(s.offer_frep(cfg), Offer::Accepted);
+        assert_eq!(s.offer_frep(cfg), Offer::Stall);
+    }
+}

@@ -1,0 +1,238 @@
+//! Instruction caches: per-core L0 and the hive-shared L1 (paper §2.2).
+//!
+//! * Each core has a small, private, fully set-associative L0 from which it
+//!   fetches in a single cycle.
+//! * A miss files a refill with the shared L1; multiple requests to the
+//!   same line coalesce into one refill that serves all pending requesters.
+//! * An L1 miss refills from backing memory (the instruction memory region)
+//!   with an AXI-burst-like latency.
+
+/// Line size in bytes (8 RV32 instructions).
+pub const LINE_BYTES: u32 = 32;
+/// L0: fully associative line count (FIFO replacement).
+pub const L0_LINES: usize = 8;
+/// L1 hit latency in cycles (shared array lookup + return).
+pub const L1_HIT_LATENCY: u64 = 2;
+/// L1 miss refill latency in cycles (burst from backing memory).
+pub const L1_MISS_LATENCY: u64 = 10;
+
+#[derive(Clone, Copy)]
+struct L0Line {
+    tag: u32,
+    valid: bool,
+}
+
+/// Per-core L0 cache (tags only — instruction bytes come from the decoded
+/// program image; the cache models *timing*, not storage).
+struct L0 {
+    lines: [L0Line; L0_LINES],
+    fifo: usize,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl L0 {
+    fn new() -> L0 {
+        L0 { lines: [L0Line { tag: 0, valid: false }; L0_LINES], fifo: 0, hits: 0, misses: 0 }
+    }
+
+    fn lookup(&self, line_addr: u32) -> bool {
+        self.lines.iter().any(|l| l.valid && l.tag == line_addr)
+    }
+
+    fn install(&mut self, line_addr: u32) {
+        if self.lookup(line_addr) {
+            return;
+        }
+        self.lines[self.fifo] = L0Line { tag: line_addr, valid: true };
+        self.fifo = (self.fifo + 1) % L0_LINES;
+    }
+}
+
+/// Shared L1 state: direct-mapped tag array plus in-flight refills.
+struct L1 {
+    tags: Vec<Option<u32>>,
+    num_lines: usize,
+    /// In-flight refills: (line_addr, ready_at).
+    inflight: Vec<(u32, u64)>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl L1 {
+    fn new(size_bytes: u32) -> L1 {
+        let num_lines = (size_bytes / LINE_BYTES) as usize;
+        L1 { tags: vec![None; num_lines], num_lines, inflight: Vec::new(), hits: 0, misses: 0 }
+    }
+
+    fn index(&self, line_addr: u32) -> usize {
+        ((line_addr / LINE_BYTES) as usize) % self.num_lines
+    }
+
+    /// File a request; returns the cycle at which the line is available.
+    fn request(&mut self, line_addr: u32, now: u64) -> u64 {
+        // Coalesce with an in-flight refill of the same line.
+        if let Some(&(_, ready)) = self.inflight.iter().find(|&&(a, _)| a == line_addr) {
+            return ready;
+        }
+        let idx = self.index(line_addr);
+        if self.tags[idx] == Some(line_addr) {
+            self.hits += 1;
+            now + L1_HIT_LATENCY
+        } else {
+            self.misses += 1;
+            let ready = now + L1_MISS_LATENCY;
+            self.inflight.push((line_addr, ready));
+            ready
+        }
+    }
+
+    fn step(&mut self, now: u64) {
+        let mut i = 0;
+        while i < self.inflight.len() {
+            if self.inflight[i].1 <= now {
+                let (line_addr, _) = self.inflight.swap_remove(i);
+                let idx = self.index(line_addr);
+                self.tags[idx] = Some(line_addr);
+            } else {
+                i += 1;
+            }
+        }
+    }
+}
+
+/// Per-core fetch outcome.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fetch {
+    /// L0 hit: instruction available this cycle.
+    Hit,
+    /// Miss in flight: stall.
+    Miss,
+}
+
+/// The two-level instruction cache system for one hive.
+pub struct ICacheSystem {
+    l0: Vec<L0>,
+    l1: L1,
+    /// Per-core outstanding L0 refill: (line_addr, ready_at).
+    refill_ready: Vec<Option<(u32, u64)>>,
+}
+
+impl ICacheSystem {
+    pub fn new(num_cores: usize, l1_size_bytes: u32) -> ICacheSystem {
+        ICacheSystem {
+            l0: (0..num_cores).map(|_| L0::new()).collect(),
+            l1: L1::new(l1_size_bytes),
+            refill_ready: vec![None; num_cores],
+        }
+    }
+
+    /// Attempt to fetch the instruction at `addr` for `core`.
+    pub fn fetch(&mut self, core: usize, addr: u32, now: u64) -> Fetch {
+        let line_addr = addr & !(LINE_BYTES - 1);
+        if self.l0[core].lookup(line_addr) {
+            self.l0[core].hits += 1;
+            return Fetch::Hit;
+        }
+        self.l0[core].misses += 1;
+        match self.refill_ready[core] {
+            Some((pending, _)) if pending == line_addr => Fetch::Miss,
+            Some(_) | None => {
+                let ready = self.l1.request(line_addr, now);
+                self.refill_ready[core] = Some((line_addr, ready));
+                Fetch::Miss
+            }
+        }
+    }
+
+    /// Advance refills; installs completed lines into L0s.
+    pub fn step(&mut self, now: u64) {
+        self.l1.step(now);
+        for (core, slot) in self.refill_ready.iter_mut().enumerate() {
+            if let Some((line_addr, ready)) = *slot {
+                if ready <= now {
+                    self.l0[core].install(line_addr);
+                    *slot = None;
+                }
+            }
+        }
+    }
+
+    /// PMCs: (l0_hits, l0_misses) for `core`.
+    pub fn l0_stats(&self, core: usize) -> (u64, u64) {
+        (self.l0[core].hits, self.l0[core].misses)
+    }
+
+    /// PMCs: (l1_hits, l1_misses).
+    pub fn l1_stats(&self) -> (u64, u64) {
+        (self.l1.hits, self.l1.misses)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cold_miss_then_hit() {
+        let mut ic = ICacheSystem::new(1, 8 << 10);
+        assert_eq!(ic.fetch(0, 0x100, 0), Fetch::Miss);
+        let mut hit_at = None;
+        for c in 1..=2 * L1_MISS_LATENCY {
+            ic.step(c);
+            if ic.fetch(0, 0x104, c) == Fetch::Hit {
+                hit_at = Some(c);
+                break;
+            }
+        }
+        let c = hit_at.expect("line must arrive");
+        assert!(c >= L1_MISS_LATENCY, "hit at {c}");
+        assert_eq!(ic.fetch(0, 0x11C, c), Fetch::Hit);
+        assert_eq!(ic.fetch(0, 0x120, c), Fetch::Miss);
+    }
+
+    #[test]
+    fn l1_hit_is_faster_than_miss() {
+        let mut ic = ICacheSystem::new(2, 8 << 10);
+        assert_eq!(ic.fetch(0, 0x200, 0), Fetch::Miss);
+        for c in 1..=L1_MISS_LATENCY {
+            ic.step(c);
+        }
+        assert_eq!(ic.fetch(0, 0x200, L1_MISS_LATENCY), Fetch::Hit);
+        let t0 = L1_MISS_LATENCY;
+        assert_eq!(ic.fetch(1, 0x200, t0), Fetch::Miss);
+        ic.step(t0 + L1_HIT_LATENCY);
+        assert_eq!(ic.fetch(1, 0x200, t0 + L1_HIT_LATENCY), Fetch::Hit);
+    }
+
+    #[test]
+    fn coalescing_same_line() {
+        let mut ic = ICacheSystem::new(2, 8 << 10);
+        assert_eq!(ic.fetch(0, 0x300, 0), Fetch::Miss);
+        assert_eq!(ic.fetch(1, 0x304, 0), Fetch::Miss);
+        let (_, l1_misses) = ic.l1_stats();
+        assert_eq!(l1_misses, 1, "second request coalesces");
+        for c in 1..=L1_MISS_LATENCY {
+            ic.step(c);
+        }
+        assert_eq!(ic.fetch(0, 0x300, L1_MISS_LATENCY), Fetch::Hit);
+        assert_eq!(ic.fetch(1, 0x304, L1_MISS_LATENCY), Fetch::Hit);
+    }
+
+    #[test]
+    fn l0_fifo_eviction() {
+        let mut ic = ICacheSystem::new(1, 64 << 10);
+        let mut now = 0;
+        for i in 0..=(L0_LINES as u32) {
+            let addr = i * LINE_BYTES;
+            if ic.fetch(0, addr, now) == Fetch::Miss {
+                for _ in 0..L1_MISS_LATENCY + 1 {
+                    now += 1;
+                    ic.step(now);
+                }
+            }
+            assert_eq!(ic.fetch(0, addr, now), Fetch::Hit);
+        }
+        assert_eq!(ic.fetch(0, 0, now), Fetch::Miss);
+    }
+}

@@ -1,0 +1,177 @@
+//! Control-and-status register map, including the SSR configuration space.
+//!
+//! The paper configures streamers "using memory-mapped IO … only
+//! configurable by the integer core controlling the FP-SS". We expose that
+//! core-private configuration window through the CSR space (as the RTL
+//! implementation of Snitch does via `scfgw`/CSR aliases): each lane has a
+//! `repeat` register, four `bounds`, four `strides`, and arming pointers.
+//! Writing `RPTR`/`WPTR` of dimension *d* arms the lane as a read/write
+//! stream of dimensionality *d + 1* — exactly the semantics of the
+//! header-only C library described in §3.1 of the paper.
+
+/// `mhartid` — hart (core) id within the cluster.
+pub const MHARTID: u16 = 0xF14;
+/// `mcycle` — cycle counter (also readable as `cycle`).
+pub const MCYCLE: u16 = 0xB00;
+/// `cycle` (read-only shadow).
+pub const CYCLE: u16 = 0xC00;
+/// `minstret` — retired instruction counter.
+pub const MINSTRET: u16 = 0xB02;
+/// `instret` (read-only shadow).
+pub const INSTRET: u16 = 0xC02;
+
+/// SSR enable bit. Writing 1 activates stream semantics on `ft0`/`ft1`
+/// (register reads/writes are intercepted); writing 0 deactivates them.
+pub const SSR_ENABLE: u16 = 0x7C0;
+
+/// Number of SSR data movers per core (the paper's configuration has two:
+/// lanes mapped on `ft0` and `ft1`).
+pub const NUM_SSR_LANES: usize = 2;
+/// Maximum affine loop nest dimensionality (paper: "up to 4 access
+/// dimensions in their current implementation").
+pub const SSR_DIMS: usize = 4;
+
+/// Base CSR address of SSR lane `lane`'s configuration window.
+pub fn ssr_lane_base(lane: usize) -> u16 {
+    debug_assert!(lane < NUM_SSR_LANES);
+    0x7D0 + (lane as u16) * 0x20
+}
+
+/// Offsets within a lane's configuration window.
+pub mod ssr_off {
+    /// Element repetition count (each stream element is served `repeat + 1`
+    /// times; used e.g. to broadcast a matrix row).
+    pub const REPEAT: u16 = 0x00;
+    /// Loop bound for dimension d (iterations minus one), d in 0..4.
+    pub const BOUND: u16 = 0x01; // .. 0x04
+    /// Byte stride for dimension d, d in 0..4.
+    pub const STRIDE: u16 = 0x05; // .. 0x08
+    /// Arming read pointer for a (d+1)-dimensional stream.
+    pub const RPTR: u16 = 0x09; // .. 0x0C
+    /// Arming write pointer for a (d+1)-dimensional stream.
+    pub const WPTR: u16 = 0x0D; // .. 0x10
+}
+
+/// What a CSR address means to the SSR configuration logic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SsrCsr {
+    Repeat { lane: usize },
+    Bound { lane: usize, dim: usize },
+    Stride { lane: usize, dim: usize },
+    /// Arms the lane as a read stream of dimensionality `dims`.
+    ReadPtr { lane: usize, dims: usize },
+    /// Arms the lane as a write stream of dimensionality `dims`.
+    WritePtr { lane: usize, dims: usize },
+}
+
+/// Decode a CSR address into its SSR meaning, if it falls in the SSR
+/// configuration window.
+pub fn decode_ssr_csr(addr: u16) -> Option<SsrCsr> {
+    for lane in 0..NUM_SSR_LANES {
+        let base = ssr_lane_base(lane);
+        if addr < base || addr > base + 0x10 {
+            continue;
+        }
+        let off = addr - base;
+        return Some(match off {
+            ssr_off::REPEAT => SsrCsr::Repeat { lane },
+            o if (ssr_off::BOUND..ssr_off::BOUND + 4).contains(&o) => {
+                SsrCsr::Bound { lane, dim: (o - ssr_off::BOUND) as usize }
+            }
+            o if (ssr_off::STRIDE..ssr_off::STRIDE + 4).contains(&o) => {
+                SsrCsr::Stride { lane, dim: (o - ssr_off::STRIDE) as usize }
+            }
+            o if (ssr_off::RPTR..ssr_off::RPTR + 4).contains(&o) => {
+                SsrCsr::ReadPtr { lane, dims: (o - ssr_off::RPTR) as usize + 1 }
+            }
+            o if (ssr_off::WPTR..ssr_off::WPTR + 4).contains(&o) => {
+                SsrCsr::WritePtr { lane, dims: (o - ssr_off::WPTR) as usize + 1 }
+            }
+            _ => unreachable!(),
+        });
+    }
+    None
+}
+
+/// Symbolic CSR names accepted by the assembler.
+pub fn csr_from_name(name: &str) -> Option<u16> {
+    Some(match name {
+        "mhartid" => MHARTID,
+        "mcycle" => MCYCLE,
+        "cycle" => CYCLE,
+        "minstret" => MINSTRET,
+        "instret" => INSTRET,
+        "ssr" | "ssr_enable" => SSR_ENABLE,
+        _ => {
+            // ssr<lane>_<field>[<dim>] e.g. ssr0_bound1, ssr1_rptr2
+            let rest = name.strip_prefix("ssr")?;
+            let (lane_s, field) = rest.split_once('_')?;
+            let lane: usize = lane_s.parse().ok()?;
+            if lane >= NUM_SSR_LANES {
+                return None;
+            }
+            let base = ssr_lane_base(lane);
+            if field == "repeat" {
+                return Some(base + ssr_off::REPEAT);
+            }
+            let (fname, dim_s) = field.split_at(field.len() - 1);
+            let dim: u16 = dim_s.parse().ok()?;
+            if dim >= SSR_DIMS as u16 {
+                return None;
+            }
+            match fname {
+                "bound" => base + ssr_off::BOUND + dim,
+                "stride" => base + ssr_off::STRIDE + dim,
+                "rptr" => base + ssr_off::RPTR + dim,
+                "wptr" => base + ssr_off::WPTR + dim,
+                _ => return None,
+            }
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ssr_csr_decoding() {
+        assert_eq!(decode_ssr_csr(ssr_lane_base(0)), Some(SsrCsr::Repeat { lane: 0 }));
+        assert_eq!(
+            decode_ssr_csr(ssr_lane_base(1) + ssr_off::BOUND + 2),
+            Some(SsrCsr::Bound { lane: 1, dim: 2 })
+        );
+        assert_eq!(
+            decode_ssr_csr(ssr_lane_base(0) + ssr_off::RPTR),
+            Some(SsrCsr::ReadPtr { lane: 0, dims: 1 })
+        );
+        assert_eq!(
+            decode_ssr_csr(ssr_lane_base(1) + ssr_off::WPTR + 3),
+            Some(SsrCsr::WritePtr { lane: 1, dims: 4 })
+        );
+        assert_eq!(decode_ssr_csr(MHARTID), None);
+        assert_eq!(decode_ssr_csr(SSR_ENABLE), None);
+    }
+
+    #[test]
+    fn csr_names() {
+        assert_eq!(csr_from_name("mhartid"), Some(MHARTID));
+        assert_eq!(csr_from_name("ssr"), Some(SSR_ENABLE));
+        assert_eq!(csr_from_name("ssr0_bound0"), Some(ssr_lane_base(0) + ssr_off::BOUND));
+        assert_eq!(csr_from_name("ssr1_stride3"), Some(ssr_lane_base(1) + ssr_off::STRIDE + 3));
+        assert_eq!(csr_from_name("ssr0_rptr1"), Some(ssr_lane_base(0) + ssr_off::RPTR + 1));
+        assert_eq!(csr_from_name("ssr0_repeat"), Some(ssr_lane_base(0) + ssr_off::REPEAT));
+        assert_eq!(csr_from_name("ssr2_bound0"), None);
+        assert_eq!(csr_from_name("ssr0_bound4"), None);
+        assert_eq!(csr_from_name("bogus"), None);
+    }
+
+    #[test]
+    fn lanes_do_not_overlap() {
+        let l0: Vec<u16> = (0..=0x10).map(|o| ssr_lane_base(0) + o).collect();
+        let l1: Vec<u16> = (0..=0x10).map(|o| ssr_lane_base(1) + o).collect();
+        for a in &l0 {
+            assert!(!l1.contains(a));
+        }
+    }
+}

@@ -1,0 +1,473 @@
+//! Instruction decoding: architectural 32-bit word → [`Instr`].
+
+use super::*;
+
+/// Decoding error: the word is not a recognized RV32IMAFD/Zicsr/Snitch
+/// instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DecodeError(pub u32);
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "illegal instruction {:#010x}", self.0)
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+fn rd(w: u32) -> Reg {
+    Reg::new(((w >> 7) & 0x1F) as u8)
+}
+fn rs1(w: u32) -> Reg {
+    Reg::new(((w >> 15) & 0x1F) as u8)
+}
+fn rs2(w: u32) -> Reg {
+    Reg::new(((w >> 20) & 0x1F) as u8)
+}
+fn frd(w: u32) -> FReg {
+    FReg::new(((w >> 7) & 0x1F) as u8)
+}
+fn frs1(w: u32) -> FReg {
+    FReg::new(((w >> 15) & 0x1F) as u8)
+}
+fn frs2(w: u32) -> FReg {
+    FReg::new(((w >> 20) & 0x1F) as u8)
+}
+fn frs3(w: u32) -> FReg {
+    FReg::new(((w >> 27) & 0x1F) as u8)
+}
+fn funct3(w: u32) -> u32 {
+    (w >> 12) & 0x7
+}
+fn funct7(w: u32) -> u32 {
+    w >> 25
+}
+
+fn imm_i(w: u32) -> i32 {
+    (w as i32) >> 20
+}
+
+fn imm_s(w: u32) -> i32 {
+    (((w as i32) >> 25) << 5) | (((w >> 7) & 0x1F) as i32)
+}
+
+fn imm_b(w: u32) -> i32 {
+    let sign = (w as i32) >> 31; // bit 12, sign-extended
+    ((sign << 12)
+        | ((((w >> 7) & 1) as i32) << 11)
+        | ((((w >> 25) & 0x3F) as i32) << 5)
+        | ((((w >> 8) & 0xF) as i32) << 1)) as i32
+}
+
+fn imm_u(w: u32) -> i32 {
+    (w & 0xFFFF_F000) as i32
+}
+
+fn imm_j(w: u32) -> i32 {
+    let sign = (w as i32) >> 31; // bit 20, sign-extended
+    (sign << 20)
+        | ((((w >> 12) & 0xFF) as i32) << 12)
+        | ((((w >> 20) & 1) as i32) << 11)
+        | ((((w >> 21) & 0x3FF) as i32) << 1)
+}
+
+fn fp_width(fmt: u32, w: u32) -> Result<FpWidth, DecodeError> {
+    match fmt {
+        0b00 => Ok(FpWidth::S),
+        0b01 => Ok(FpWidth::D),
+        _ => Err(DecodeError(w)),
+    }
+}
+
+/// Decode an architectural word. Returns `Err` on anything the Snitch core
+/// would trap on as an illegal instruction.
+pub fn decode(w: u32) -> Result<Instr, DecodeError> {
+    let opcode = w & 0x7F;
+    Ok(match opcode {
+        0x37 => Instr::Lui { rd: rd(w), imm: imm_u(w) },
+        0x17 => Instr::Auipc { rd: rd(w), imm: imm_u(w) },
+        0x6F => Instr::Jal { rd: rd(w), offset: imm_j(w) },
+        0x67 => {
+            if funct3(w) != 0 {
+                return Err(DecodeError(w));
+            }
+            Instr::Jalr { rd: rd(w), rs1: rs1(w), offset: imm_i(w) }
+        }
+        0x63 => {
+            let op = match funct3(w) {
+                0b000 => BranchOp::Beq,
+                0b001 => BranchOp::Bne,
+                0b100 => BranchOp::Blt,
+                0b101 => BranchOp::Bge,
+                0b110 => BranchOp::Bltu,
+                0b111 => BranchOp::Bgeu,
+                _ => return Err(DecodeError(w)),
+            };
+            Instr::Branch { op, rs1: rs1(w), rs2: rs2(w), offset: imm_b(w) }
+        }
+        0x03 => {
+            let op = match funct3(w) {
+                0b000 => LoadOp::Lb,
+                0b001 => LoadOp::Lh,
+                0b010 => LoadOp::Lw,
+                0b100 => LoadOp::Lbu,
+                0b101 => LoadOp::Lhu,
+                _ => return Err(DecodeError(w)),
+            };
+            Instr::Load { op, rd: rd(w), rs1: rs1(w), offset: imm_i(w) }
+        }
+        0x23 => {
+            let op = match funct3(w) {
+                0b000 => StoreOp::Sb,
+                0b001 => StoreOp::Sh,
+                0b010 => StoreOp::Sw,
+                _ => return Err(DecodeError(w)),
+            };
+            Instr::Store { op, rs1: rs1(w), rs2: rs2(w), offset: imm_s(w) }
+        }
+        0x13 => {
+            let (op, imm) = match funct3(w) {
+                0b000 => (AluOp::Add, imm_i(w)),
+                0b010 => (AluOp::Slt, imm_i(w)),
+                0b011 => (AluOp::Sltu, imm_i(w)),
+                0b100 => (AluOp::Xor, imm_i(w)),
+                0b110 => (AluOp::Or, imm_i(w)),
+                0b111 => (AluOp::And, imm_i(w)),
+                0b001 => {
+                    if funct7(w) != 0 {
+                        return Err(DecodeError(w));
+                    }
+                    (AluOp::Sll, ((w >> 20) & 0x1F) as i32)
+                }
+                0b101 => match funct7(w) {
+                    0x00 => (AluOp::Srl, ((w >> 20) & 0x1F) as i32),
+                    0x20 => (AluOp::Sra, ((w >> 20) & 0x1F) as i32),
+                    _ => return Err(DecodeError(w)),
+                },
+                _ => unreachable!(),
+            };
+            Instr::OpImm { op, rd: rd(w), rs1: rs1(w), imm }
+        }
+        0x33 => {
+            if funct7(w) == 0x01 {
+                let op = match funct3(w) {
+                    0b000 => MulDivOp::Mul,
+                    0b001 => MulDivOp::Mulh,
+                    0b010 => MulDivOp::Mulhsu,
+                    0b011 => MulDivOp::Mulhu,
+                    0b100 => MulDivOp::Div,
+                    0b101 => MulDivOp::Divu,
+                    0b110 => MulDivOp::Rem,
+                    0b111 => MulDivOp::Remu,
+                    _ => unreachable!(),
+                };
+                return Ok(Instr::MulDiv { op, rd: rd(w), rs1: rs1(w), rs2: rs2(w) });
+            }
+            let op = match (funct7(w), funct3(w)) {
+                (0x00, 0b000) => AluOp::Add,
+                (0x20, 0b000) => AluOp::Sub,
+                (0x00, 0b001) => AluOp::Sll,
+                (0x00, 0b010) => AluOp::Slt,
+                (0x00, 0b011) => AluOp::Sltu,
+                (0x00, 0b100) => AluOp::Xor,
+                (0x00, 0b101) => AluOp::Srl,
+                (0x20, 0b101) => AluOp::Sra,
+                (0x00, 0b110) => AluOp::Or,
+                (0x00, 0b111) => AluOp::And,
+                _ => return Err(DecodeError(w)),
+            };
+            Instr::Op { op, rd: rd(w), rs1: rs1(w), rs2: rs2(w) }
+        }
+        0x0F => Instr::Fence,
+        0x73 => {
+            let f3 = funct3(w);
+            if f3 == 0 {
+                match w >> 20 {
+                    0x000 if rd(w).is_zero() && rs1(w).is_zero() => Instr::Ecall,
+                    0x001 if rd(w).is_zero() && rs1(w).is_zero() => Instr::Ebreak,
+                    0x105 if rd(w).is_zero() && rs1(w).is_zero() => Instr::Wfi,
+                    _ => return Err(DecodeError(w)),
+                }
+            } else {
+                let op = match f3 & 0b011 {
+                    0b001 => CsrOp::Rw,
+                    0b010 => CsrOp::Rs,
+                    0b011 => CsrOp::Rc,
+                    _ => return Err(DecodeError(w)),
+                };
+                let field = ((w >> 15) & 0x1F) as u8;
+                let src = if f3 & 0b100 != 0 { CsrSrc::Imm(field) } else { CsrSrc::Reg(Reg::new(field)) };
+                Instr::Csr { op, rd: rd(w), csr: (w >> 20) as u16, src }
+            }
+        }
+        0x2F => {
+            if funct3(w) != 0b010 {
+                return Err(DecodeError(w));
+            }
+            let op = match funct7(w) >> 2 {
+                0x00 => AmoOp::AmoAddW,
+                0x01 => AmoOp::AmoSwapW,
+                0x02 => AmoOp::LrW,
+                0x03 => AmoOp::ScW,
+                0x04 => AmoOp::AmoXorW,
+                0x08 => AmoOp::AmoOrW,
+                0x0C => AmoOp::AmoAndW,
+                0x10 => AmoOp::AmoMinW,
+                0x14 => AmoOp::AmoMaxW,
+                0x18 => AmoOp::AmoMinuW,
+                0x1C => AmoOp::AmoMaxuW,
+                _ => return Err(DecodeError(w)),
+            };
+            Instr::Amo { op, rd: rd(w), rs1: rs1(w), rs2: rs2(w) }
+        }
+        0x07 => {
+            let width = match funct3(w) {
+                0b010 => FpWidth::S,
+                0b011 => FpWidth::D,
+                _ => return Err(DecodeError(w)),
+            };
+            Instr::FpLoad { width, frd: frd(w), rs1: rs1(w), offset: imm_i(w) }
+        }
+        0x27 => {
+            let width = match funct3(w) {
+                0b010 => FpWidth::S,
+                0b011 => FpWidth::D,
+                _ => return Err(DecodeError(w)),
+            };
+            Instr::FpStore { width, frs2: frs2(w), rs1: rs1(w), offset: imm_s(w) }
+        }
+        0x43 | 0x47 | 0x4B | 0x4F => {
+            let width = fp_width((w >> 25) & 0b11, w)?;
+            let op = match opcode {
+                0x43 => FpOp::Fmadd,
+                0x47 => FpOp::Fmsub,
+                0x4B => FpOp::Fnmsub,
+                _ => FpOp::Fnmadd,
+            };
+            Instr::FpOp { op, width, frd: frd(w), frs1: frs1(w), frs2: frs2(w), frs3: frs3(w) }
+        }
+        0x53 => {
+            let f7 = funct7(w);
+            let f5 = f7 >> 2;
+            let fmt = f7 & 0b11;
+            match f5 {
+                0x00 | 0x01 | 0x02 | 0x03 | 0x0B => {
+                    let width = fp_width(fmt, w)?;
+                    let op = match f5 {
+                        0x00 => FpOp::Fadd,
+                        0x01 => FpOp::Fsub,
+                        0x02 => FpOp::Fmul,
+                        0x03 => FpOp::Fdiv,
+                        _ => FpOp::Fsqrt,
+                    };
+                    // fsqrt's rs2 field is unused — canonicalize to f0 so
+                    // encode∘decode is idempotent.
+                    let frs2 = if op == FpOp::Fsqrt { FReg::new(0) } else { frs2(w) };
+                    Instr::FpOp { op, width, frd: frd(w), frs1: frs1(w), frs2, frs3: FReg::new(0) }
+                }
+                0x04 => {
+                    let width = fp_width(fmt, w)?;
+                    let op = match funct3(w) {
+                        0b000 => FpOp::Fsgnj,
+                        0b001 => FpOp::Fsgnjn,
+                        0b010 => FpOp::Fsgnjx,
+                        _ => return Err(DecodeError(w)),
+                    };
+                    Instr::FpOp { op, width, frd: frd(w), frs1: frs1(w), frs2: frs2(w), frs3: FReg::new(0) }
+                }
+                0x05 => {
+                    let width = fp_width(fmt, w)?;
+                    let op = match funct3(w) {
+                        0b000 => FpOp::Fmin,
+                        0b001 => FpOp::Fmax,
+                        _ => return Err(DecodeError(w)),
+                    };
+                    Instr::FpOp { op, width, frd: frd(w), frs1: frs1(w), frs2: frs2(w), frs3: FReg::new(0) }
+                }
+                0x08 => {
+                    // fcvt.s.d (fmt=S, rs2=D) / fcvt.d.s (fmt=D, rs2=S)
+                    let to = fp_width(fmt, w)?;
+                    Instr::FpCvtFF { to, frd: frd(w), frs1: frs1(w) }
+                }
+                0x14 => {
+                    let width = fp_width(fmt, w)?;
+                    let op = match funct3(w) {
+                        0b000 => FpCmpOp::Fle,
+                        0b001 => FpCmpOp::Flt,
+                        0b010 => FpCmpOp::Feq,
+                        _ => return Err(DecodeError(w)),
+                    };
+                    Instr::FpCmp { op, width, rd: rd(w), frs1: frs1(w), frs2: frs2(w) }
+                }
+                0x18 => {
+                    let width = fp_width(fmt, w)?;
+                    let signed = match (w >> 20) & 0x1F {
+                        0 => true,
+                        1 => false,
+                        _ => return Err(DecodeError(w)),
+                    };
+                    Instr::FpCvtToInt { width, signed, rd: rd(w), frs1: frs1(w) }
+                }
+                0x1A => {
+                    let width = fp_width(fmt, w)?;
+                    let signed = match (w >> 20) & 0x1F {
+                        0 => true,
+                        1 => false,
+                        _ => return Err(DecodeError(w)),
+                    };
+                    Instr::FpCvtFromInt { width, signed, frd: frd(w), rs1: rs1(w) }
+                }
+                0x1C => match (fmt, funct3(w)) {
+                    (0b00, 0b000) => Instr::FpMvToInt { rd: rd(w), frs1: frs1(w) },
+                    (_, 0b001) => {
+                        Instr::FpClass { width: fp_width(fmt, w)?, rd: rd(w), frs1: frs1(w) }
+                    }
+                    _ => return Err(DecodeError(w)),
+                },
+                0x1E => {
+                    if fmt != 0b00 || funct3(w) != 0 {
+                        return Err(DecodeError(w));
+                    }
+                    Instr::FpMvFromInt { frd: frd(w), rs1: rs1(w) }
+                }
+                _ => return Err(DecodeError(w)),
+            }
+        }
+        0x2B => {
+            // Snitch FREP (custom-1).
+            let imm = w >> 20;
+            Instr::Frep {
+                is_outer: imm & 0x800 != 0,
+                max_rep: rs1(w),
+                max_inst: (imm & 0xF) as u8,
+                stagger_mask: ((imm >> 4) & 0xF) as u8,
+                stagger_count: ((imm >> 8) & 0x7) as u8,
+            }
+        }
+        _ => return Err(DecodeError(w)),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::encode::encode;
+    use super::*;
+
+    /// Exhaustive-ish corpus of every instruction variant for round-tripping.
+    fn corpus() -> Vec<Instr> {
+        let r = |n| Reg::new(n);
+        let f = |n| FReg::new(n);
+        let mut v = vec![
+            Instr::Lui { rd: r(1), imm: 0x7FFF_F000u32 as i32 },
+            Instr::Auipc { rd: r(31), imm: -4096 },
+            Instr::Jal { rd: r(0), offset: -1048576 },
+            Instr::Jal { rd: r(1), offset: 1048574 },
+            Instr::Jalr { rd: r(1), rs1: r(2), offset: -2048 },
+            Instr::Fence,
+            Instr::Ecall,
+            Instr::Ebreak,
+            Instr::Wfi,
+            Instr::Csr { op: CsrOp::Rw, rd: r(3), csr: 0x7C0, src: CsrSrc::Imm(1) },
+            Instr::Csr { op: CsrOp::Rs, rd: r(0), csr: 0xF14, src: CsrSrc::Reg(r(9)) },
+            Instr::Csr { op: CsrOp::Rc, rd: r(4), csr: 0xB00, src: CsrSrc::Imm(31) },
+            Instr::FpMvToInt { rd: r(8), frs1: f(9) },
+            Instr::FpMvFromInt { frd: f(10), rs1: r(11) },
+            Instr::Frep { is_outer: true, max_rep: r(7), max_inst: 15, stagger_mask: 0xF, stagger_count: 7 },
+            Instr::Frep { is_outer: false, max_rep: r(30), max_inst: 0, stagger_mask: 0, stagger_count: 0 },
+        ];
+        for op in [BranchOp::Beq, BranchOp::Bne, BranchOp::Blt, BranchOp::Bge, BranchOp::Bltu, BranchOp::Bgeu] {
+            v.push(Instr::Branch { op, rs1: r(5), rs2: r(6), offset: -4096 });
+            v.push(Instr::Branch { op, rs1: r(6), rs2: r(5), offset: 4094 });
+        }
+        for op in [LoadOp::Lb, LoadOp::Lh, LoadOp::Lw, LoadOp::Lbu, LoadOp::Lhu] {
+            v.push(Instr::Load { op, rd: r(12), rs1: r(13), offset: -1 });
+        }
+        for op in [StoreOp::Sb, StoreOp::Sh, StoreOp::Sw] {
+            v.push(Instr::Store { op, rs1: r(14), rs2: r(15), offset: 2047 });
+        }
+        for op in [AluOp::Add, AluOp::Slt, AluOp::Sltu, AluOp::Xor, AluOp::Or, AluOp::And] {
+            v.push(Instr::OpImm { op, rd: r(16), rs1: r(17), imm: -2048 });
+        }
+        for op in [AluOp::Sll, AluOp::Srl, AluOp::Sra] {
+            v.push(Instr::OpImm { op, rd: r(16), rs1: r(17), imm: 31 });
+        }
+        for op in [
+            AluOp::Add, AluOp::Sub, AluOp::Sll, AluOp::Slt, AluOp::Sltu, AluOp::Xor, AluOp::Srl,
+            AluOp::Sra, AluOp::Or, AluOp::And,
+        ] {
+            v.push(Instr::Op { op, rd: r(18), rs1: r(19), rs2: r(20) });
+        }
+        for op in [
+            MulDivOp::Mul, MulDivOp::Mulh, MulDivOp::Mulhsu, MulDivOp::Mulhu, MulDivOp::Div,
+            MulDivOp::Divu, MulDivOp::Rem, MulDivOp::Remu,
+        ] {
+            v.push(Instr::MulDiv { op, rd: r(21), rs1: r(22), rs2: r(23) });
+        }
+        for op in [
+            AmoOp::LrW, AmoOp::ScW, AmoOp::AmoSwapW, AmoOp::AmoAddW, AmoOp::AmoXorW, AmoOp::AmoAndW,
+            AmoOp::AmoOrW, AmoOp::AmoMinW, AmoOp::AmoMaxW, AmoOp::AmoMinuW, AmoOp::AmoMaxuW,
+        ] {
+            v.push(Instr::Amo { op, rd: r(24), rs1: r(25), rs2: r(26) });
+        }
+        for width in [FpWidth::S, FpWidth::D] {
+            v.push(Instr::FpLoad { width, frd: f(0), rs1: r(10), offset: 8 });
+            v.push(Instr::FpStore { width, frs2: f(1), rs1: r(10), offset: -8 });
+            for op in [
+                FpOp::Fadd, FpOp::Fsub, FpOp::Fmul, FpOp::Fdiv, FpOp::Fsqrt, FpOp::Fsgnj,
+                FpOp::Fsgnjn, FpOp::Fsgnjx, FpOp::Fmin, FpOp::Fmax,
+            ] {
+                v.push(Instr::FpOp { op, width, frd: f(2), frs1: f(3), frs2: if op == FpOp::Fsqrt { f(0) } else { f(4) }, frs3: f(0) });
+            }
+            for op in [FpOp::Fmadd, FpOp::Fmsub, FpOp::Fnmsub, FpOp::Fnmadd] {
+                v.push(Instr::FpOp { op, width, frd: f(5), frs1: f(6), frs2: f(7), frs3: f(8) });
+            }
+            for op in [FpCmpOp::Feq, FpCmpOp::Flt, FpCmpOp::Fle] {
+                v.push(Instr::FpCmp { op, width, rd: r(27), frs1: f(11), frs2: f(12) });
+            }
+            for signed in [true, false] {
+                v.push(Instr::FpCvtToInt { width, signed, rd: r(28), frs1: f(13) });
+                v.push(Instr::FpCvtFromInt { width, signed, frd: f(14), rs1: r(29) });
+            }
+            v.push(Instr::FpCvtFF { to: width, frd: f(15), frs1: f(16) });
+            v.push(Instr::FpClass { width, rd: r(30), frs1: f(17) });
+        }
+        v
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_corpus() {
+        for i in corpus() {
+            let w = encode(&i);
+            let d = decode(w).unwrap_or_else(|e| panic!("decode failed for {i:?}: {e}"));
+            assert_eq!(d, i, "word {w:#010x}");
+        }
+    }
+
+    #[test]
+    fn illegal_instructions_rejected() {
+        assert!(decode(0x0000_0000).is_err());
+        assert!(decode(0xFFFF_FFFF).is_err());
+        // unknown opcode 0x5B
+        assert!(decode(0x0000_005B).is_err());
+    }
+
+    /// Property: for random words, decode(w) succeeding implies
+    /// encode(decode(w)) is decodable to the same instruction
+    /// (canonicalization may change the word, e.g. rounding-mode bits,
+    /// but not the semantics).
+    #[test]
+    fn decode_encode_idempotent_random() {
+        let mut rng = crate::sim::proptest::Rng::new(0xC0FFEE);
+        let mut decoded = 0u32;
+        for _ in 0..200_000 {
+            let w = rng.next_u32();
+            if let Ok(i) = decode(w) {
+                decoded += 1;
+                let w2 = encode(&i);
+                let i2 = decode(w2).unwrap_or_else(|e| panic!("re-encode of {i:?} failed: {e}"));
+                assert_eq!(i, i2, "word {w:#010x}");
+            }
+        }
+        assert!(decoded > 1000, "random sampling should hit many valid encodings ({decoded})");
+    }
+}

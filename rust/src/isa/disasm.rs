@@ -1,0 +1,222 @@
+//! Disassembly of decoded instructions, used by the trace output (the
+//! paper's Fig. 6-style execution traces) and by assembler error messages.
+
+use super::*;
+
+fn width_suffix(w: FpWidth) -> &'static str {
+    match w {
+        FpWidth::S => "s",
+        FpWidth::D => "d",
+    }
+}
+
+/// Render an instruction in conventional assembly syntax.
+pub fn disasm(i: &Instr) -> String {
+    use Instr::*;
+    match *i {
+        Lui { rd, imm } => format!("lui {rd}, {:#x}", (imm as u32) >> 12),
+        Auipc { rd, imm } => format!("auipc {rd}, {:#x}", (imm as u32) >> 12),
+        Jal { rd, offset } => format!("jal {rd}, {offset}"),
+        Jalr { rd, rs1, offset } => format!("jalr {rd}, {offset}({rs1})"),
+        Branch { op, rs1, rs2, offset } => {
+            let m = match op {
+                BranchOp::Beq => "beq",
+                BranchOp::Bne => "bne",
+                BranchOp::Blt => "blt",
+                BranchOp::Bge => "bge",
+                BranchOp::Bltu => "bltu",
+                BranchOp::Bgeu => "bgeu",
+            };
+            format!("{m} {rs1}, {rs2}, {offset}")
+        }
+        Load { op, rd, rs1, offset } => {
+            let m = match op {
+                LoadOp::Lb => "lb",
+                LoadOp::Lh => "lh",
+                LoadOp::Lw => "lw",
+                LoadOp::Lbu => "lbu",
+                LoadOp::Lhu => "lhu",
+            };
+            format!("{m} {rd}, {offset}({rs1})")
+        }
+        Store { op, rs1, rs2, offset } => {
+            let m = match op {
+                StoreOp::Sb => "sb",
+                StoreOp::Sh => "sh",
+                StoreOp::Sw => "sw",
+            };
+            format!("{m} {rs2}, {offset}({rs1})")
+        }
+        OpImm { op, rd, rs1, imm } => {
+            let m = match op {
+                AluOp::Add => "addi",
+                AluOp::Slt => "slti",
+                AluOp::Sltu => "sltiu",
+                AluOp::Xor => "xori",
+                AluOp::Or => "ori",
+                AluOp::And => "andi",
+                AluOp::Sll => "slli",
+                AluOp::Srl => "srli",
+                AluOp::Sra => "srai",
+                AluOp::Sub => "subi?",
+            };
+            format!("{m} {rd}, {rs1}, {imm}")
+        }
+        Op { op, rd, rs1, rs2 } => {
+            let m = match op {
+                AluOp::Add => "add",
+                AluOp::Sub => "sub",
+                AluOp::Sll => "sll",
+                AluOp::Slt => "slt",
+                AluOp::Sltu => "sltu",
+                AluOp::Xor => "xor",
+                AluOp::Srl => "srl",
+                AluOp::Sra => "sra",
+                AluOp::Or => "or",
+                AluOp::And => "and",
+            };
+            format!("{m} {rd}, {rs1}, {rs2}")
+        }
+        Fence => "fence".into(),
+        Ecall => "ecall".into(),
+        Ebreak => "ebreak".into(),
+        Wfi => "wfi".into(),
+        Csr { op, rd, csr, src } => {
+            let m = match (op, matches!(src, CsrSrc::Imm(_))) {
+                (CsrOp::Rw, false) => "csrrw",
+                (CsrOp::Rs, false) => "csrrs",
+                (CsrOp::Rc, false) => "csrrc",
+                (CsrOp::Rw, true) => "csrrwi",
+                (CsrOp::Rs, true) => "csrrsi",
+                (CsrOp::Rc, true) => "csrrci",
+            };
+            let s = match src {
+                CsrSrc::Reg(r) => r.to_string(),
+                CsrSrc::Imm(v) => v.to_string(),
+            };
+            format!("{m} {rd}, {csr:#x}, {s}")
+        }
+        MulDiv { op, rd, rs1, rs2 } => {
+            let m = match op {
+                MulDivOp::Mul => "mul",
+                MulDivOp::Mulh => "mulh",
+                MulDivOp::Mulhsu => "mulhsu",
+                MulDivOp::Mulhu => "mulhu",
+                MulDivOp::Div => "div",
+                MulDivOp::Divu => "divu",
+                MulDivOp::Rem => "rem",
+                MulDivOp::Remu => "remu",
+            };
+            format!("{m} {rd}, {rs1}, {rs2}")
+        }
+        Amo { op, rd, rs1, rs2 } => {
+            let m = match op {
+                AmoOp::LrW => return format!("lr.w {rd}, ({rs1})"),
+                AmoOp::ScW => "sc.w",
+                AmoOp::AmoSwapW => "amoswap.w",
+                AmoOp::AmoAddW => "amoadd.w",
+                AmoOp::AmoXorW => "amoxor.w",
+                AmoOp::AmoAndW => "amoand.w",
+                AmoOp::AmoOrW => "amoor.w",
+                AmoOp::AmoMinW => "amomin.w",
+                AmoOp::AmoMaxW => "amomax.w",
+                AmoOp::AmoMinuW => "amominu.w",
+                AmoOp::AmoMaxuW => "amomaxu.w",
+            };
+            format!("{m} {rd}, {rs2}, ({rs1})")
+        }
+        FpLoad { width, frd, rs1, offset } => {
+            format!("fl{} {frd}, {offset}({rs1})", if width == FpWidth::S { "w" } else { "d" })
+        }
+        FpStore { width, frs2, rs1, offset } => {
+            format!("fs{} {frs2}, {offset}({rs1})", if width == FpWidth::S { "w" } else { "d" })
+        }
+        FpOp { op, width, frd, frs1, frs2, frs3 } => {
+            use crate::isa::FpOp as F;
+            let s = width_suffix(width);
+            match op {
+                F::Fadd => format!("fadd.{s} {frd}, {frs1}, {frs2}"),
+                F::Fsub => format!("fsub.{s} {frd}, {frs1}, {frs2}"),
+                F::Fmul => format!("fmul.{s} {frd}, {frs1}, {frs2}"),
+                F::Fdiv => format!("fdiv.{s} {frd}, {frs1}, {frs2}"),
+                F::Fsqrt => format!("fsqrt.{s} {frd}, {frs1}"),
+                F::Fsgnj => format!("fsgnj.{s} {frd}, {frs1}, {frs2}"),
+                F::Fsgnjn => format!("fsgnjn.{s} {frd}, {frs1}, {frs2}"),
+                F::Fsgnjx => format!("fsgnjx.{s} {frd}, {frs1}, {frs2}"),
+                F::Fmin => format!("fmin.{s} {frd}, {frs1}, {frs2}"),
+                F::Fmax => format!("fmax.{s} {frd}, {frs1}, {frs2}"),
+                F::Fmadd => format!("fmadd.{s} {frd}, {frs1}, {frs2}, {frs3}"),
+                F::Fmsub => format!("fmsub.{s} {frd}, {frs1}, {frs2}, {frs3}"),
+                F::Fnmsub => format!("fnmsub.{s} {frd}, {frs1}, {frs2}, {frs3}"),
+                F::Fnmadd => format!("fnmadd.{s} {frd}, {frs1}, {frs2}, {frs3}"),
+            }
+        }
+        FpCmp { op, width, rd, frs1, frs2 } => {
+            let m = match op {
+                FpCmpOp::Feq => "feq",
+                FpCmpOp::Flt => "flt",
+                FpCmpOp::Fle => "fle",
+            };
+            format!("{m}.{} {rd}, {frs1}, {frs2}", width_suffix(width))
+        }
+        FpCvtToInt { width, signed, rd, frs1 } => {
+            format!("fcvt.w{}.{} {rd}, {frs1}", if signed { "" } else { "u" }, width_suffix(width))
+        }
+        FpCvtFromInt { width, signed, frd, rs1 } => {
+            format!("fcvt.{}.w{} {frd}, {rs1}", width_suffix(width), if signed { "" } else { "u" })
+        }
+        FpCvtFF { to, frd, frs1 } => {
+            let from = match to {
+                FpWidth::S => "d",
+                FpWidth::D => "s",
+            };
+            format!("fcvt.{}.{from} {frd}, {frs1}", width_suffix(to))
+        }
+        FpMvToInt { rd, frs1 } => format!("fmv.x.w {rd}, {frs1}"),
+        FpMvFromInt { frd, rs1 } => format!("fmv.w.x {frd}, {rs1}"),
+        FpClass { width, rd, frs1 } => format!("fclass.{} {rd}, {frs1}", width_suffix(width)),
+        Frep { is_outer, max_rep, max_inst, stagger_mask, stagger_count } => format!(
+            "frep.{} {max_rep}, {}, {stagger_mask:#x}, {stagger_count}",
+            if is_outer { "o" } else { "i" },
+            max_inst as u32 + 1,
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn representative_strings() {
+        assert_eq!(
+            disasm(&Instr::OpImm { op: AluOp::Add, rd: Reg::new(10), rs1: Reg::new(10), imm: -1 }),
+            "addi a0, a0, -1"
+        );
+        assert_eq!(
+            disasm(&Instr::FpOp {
+                op: FpOp::Fmadd,
+                width: FpWidth::D,
+                frd: FReg::new(2),
+                frs1: FReg::new(0),
+                frs2: FReg::new(1),
+                frs3: FReg::new(2),
+            }),
+            "fmadd.d ft2, ft0, ft1, ft2"
+        );
+        assert_eq!(
+            disasm(&Instr::Frep {
+                is_outer: true,
+                max_rep: Reg::new(5),
+                max_inst: 1,
+                stagger_mask: 0,
+                stagger_count: 0
+            }),
+            "frep.o t0, 2, 0x0, 0"
+        );
+        assert_eq!(
+            disasm(&Instr::Amo { op: AmoOp::AmoAddW, rd: Reg::new(10), rs1: Reg::new(11), rs2: Reg::new(12) }),
+            "amoadd.w a0, a2, (a1)"
+        );
+    }
+}

@@ -1,0 +1,382 @@
+//! Instruction encoding: [`Instr`] → architectural 32-bit word.
+
+use super::*;
+
+const OPC_LOAD: u32 = 0x03;
+const OPC_LOAD_FP: u32 = 0x07;
+const OPC_MISC_MEM: u32 = 0x0F;
+const OPC_OP_IMM: u32 = 0x13;
+const OPC_AUIPC: u32 = 0x17;
+const OPC_STORE: u32 = 0x23;
+const OPC_STORE_FP: u32 = 0x27;
+/// Snitch `frep` lives in the custom-1 opcode.
+const OPC_CUSTOM1: u32 = 0x2B;
+const OPC_AMO: u32 = 0x2F;
+const OPC_OP: u32 = 0x33;
+const OPC_LUI: u32 = 0x37;
+const OPC_MADD: u32 = 0x43;
+const OPC_MSUB: u32 = 0x47;
+const OPC_NMSUB: u32 = 0x4B;
+const OPC_NMADD: u32 = 0x4F;
+const OPC_OP_FP: u32 = 0x53;
+const OPC_BRANCH: u32 = 0x63;
+const OPC_JALR: u32 = 0x67;
+const OPC_JAL: u32 = 0x6F;
+const OPC_SYSTEM: u32 = 0x73;
+
+fn r_type(funct7: u32, rs2: u32, rs1: u32, funct3: u32, rd: u32, opcode: u32) -> u32 {
+    (funct7 << 25) | (rs2 << 20) | (rs1 << 15) | (funct3 << 12) | (rd << 7) | opcode
+}
+
+fn i_type(imm: i32, rs1: u32, funct3: u32, rd: u32, opcode: u32) -> u32 {
+    (((imm as u32) & 0xFFF) << 20) | (rs1 << 15) | (funct3 << 12) | (rd << 7) | opcode
+}
+
+fn s_type(imm: i32, rs2: u32, rs1: u32, funct3: u32, opcode: u32) -> u32 {
+    let imm = imm as u32;
+    (((imm >> 5) & 0x7F) << 25)
+        | (rs2 << 20)
+        | (rs1 << 15)
+        | (funct3 << 12)
+        | ((imm & 0x1F) << 7)
+        | opcode
+}
+
+fn b_type(imm: i32, rs2: u32, rs1: u32, funct3: u32, opcode: u32) -> u32 {
+    let imm = imm as u32;
+    (((imm >> 12) & 1) << 31)
+        | (((imm >> 5) & 0x3F) << 25)
+        | (rs2 << 20)
+        | (rs1 << 15)
+        | (funct3 << 12)
+        | (((imm >> 1) & 0xF) << 8)
+        | (((imm >> 11) & 1) << 7)
+        | opcode
+}
+
+fn u_type(imm: i32, rd: u32, opcode: u32) -> u32 {
+    ((imm as u32) & 0xFFFF_F000) | (rd << 7) | opcode
+}
+
+fn j_type(imm: i32, rd: u32, opcode: u32) -> u32 {
+    let imm = imm as u32;
+    (((imm >> 20) & 1) << 31)
+        | (((imm >> 1) & 0x3FF) << 21)
+        | (((imm >> 11) & 1) << 20)
+        | (((imm >> 12) & 0xFF) << 12)
+        | (rd << 7)
+        | opcode
+}
+
+fn r4_type(rs3: u32, fmt: u32, rs2: u32, rs1: u32, rm: u32, rd: u32, opcode: u32) -> u32 {
+    (rs3 << 27) | (fmt << 25) | (rs2 << 20) | (rs1 << 15) | (rm << 12) | (rd << 7) | opcode
+}
+
+/// Default dynamic rounding mode field.
+const RM_DYN: u32 = 0b111;
+
+/// Encode a decoded instruction into its architectural 32-bit word.
+pub fn encode(instr: &Instr) -> u32 {
+    use Instr::*;
+    match *instr {
+        Lui { rd, imm } => u_type(imm, rd.index() as u32, OPC_LUI),
+        Auipc { rd, imm } => u_type(imm, rd.index() as u32, OPC_AUIPC),
+        Jal { rd, offset } => j_type(offset, rd.index() as u32, OPC_JAL),
+        Jalr { rd, rs1, offset } => {
+            i_type(offset, rs1.index() as u32, 0, rd.index() as u32, OPC_JALR)
+        }
+        Branch { op, rs1, rs2, offset } => {
+            let f3 = match op {
+                BranchOp::Beq => 0b000,
+                BranchOp::Bne => 0b001,
+                BranchOp::Blt => 0b100,
+                BranchOp::Bge => 0b101,
+                BranchOp::Bltu => 0b110,
+                BranchOp::Bgeu => 0b111,
+            };
+            b_type(offset, rs2.index() as u32, rs1.index() as u32, f3, OPC_BRANCH)
+        }
+        Load { op, rd, rs1, offset } => {
+            let f3 = match op {
+                LoadOp::Lb => 0b000,
+                LoadOp::Lh => 0b001,
+                LoadOp::Lw => 0b010,
+                LoadOp::Lbu => 0b100,
+                LoadOp::Lhu => 0b101,
+            };
+            i_type(offset, rs1.index() as u32, f3, rd.index() as u32, OPC_LOAD)
+        }
+        Store { op, rs1, rs2, offset } => {
+            let f3 = match op {
+                StoreOp::Sb => 0b000,
+                StoreOp::Sh => 0b001,
+                StoreOp::Sw => 0b010,
+            };
+            s_type(offset, rs2.index() as u32, rs1.index() as u32, f3, OPC_STORE)
+        }
+        OpImm { op, rd, rs1, imm } => {
+            let (f3, imm) = match op {
+                AluOp::Add => (0b000, imm),
+                AluOp::Slt => (0b010, imm),
+                AluOp::Sltu => (0b011, imm),
+                AluOp::Xor => (0b100, imm),
+                AluOp::Or => (0b110, imm),
+                AluOp::And => (0b111, imm),
+                AluOp::Sll => (0b001, imm & 0x1F),
+                AluOp::Srl => (0b101, imm & 0x1F),
+                AluOp::Sra => (0b101, (imm & 0x1F) | 0x400),
+                AluOp::Sub => panic!("subi does not exist; use addi with negated imm"),
+            };
+            i_type(imm, rs1.index() as u32, f3, rd.index() as u32, OPC_OP_IMM)
+        }
+        Op { op, rd, rs1, rs2 } => {
+            let (f7, f3) = match op {
+                AluOp::Add => (0x00, 0b000),
+                AluOp::Sub => (0x20, 0b000),
+                AluOp::Sll => (0x00, 0b001),
+                AluOp::Slt => (0x00, 0b010),
+                AluOp::Sltu => (0x00, 0b011),
+                AluOp::Xor => (0x00, 0b100),
+                AluOp::Srl => (0x00, 0b101),
+                AluOp::Sra => (0x20, 0b101),
+                AluOp::Or => (0x00, 0b110),
+                AluOp::And => (0x00, 0b111),
+            };
+            r_type(f7, rs2.index() as u32, rs1.index() as u32, f3, rd.index() as u32, OPC_OP)
+        }
+        Fence => i_type(0, 0, 0b000, 0, OPC_MISC_MEM),
+        Ecall => i_type(0, 0, 0, 0, OPC_SYSTEM),
+        Ebreak => i_type(1, 0, 0, 0, OPC_SYSTEM),
+        Wfi => i_type(0x105, 0, 0, 0, OPC_SYSTEM),
+        Csr { op, rd, csr, src } => {
+            let base = match op {
+                CsrOp::Rw => 0b001,
+                CsrOp::Rs => 0b010,
+                CsrOp::Rc => 0b011,
+            };
+            let (f3, field) = match src {
+                CsrSrc::Reg(r) => (base, r.index() as u32),
+                CsrSrc::Imm(i) => (base | 0b100, (i & 0x1F) as u32),
+            };
+            (u32::from(csr) << 20) | (field << 15) | (f3 << 12) | ((rd.index() as u32) << 7) | OPC_SYSTEM
+        }
+        MulDiv { op, rd, rs1, rs2 } => {
+            let f3 = match op {
+                MulDivOp::Mul => 0b000,
+                MulDivOp::Mulh => 0b001,
+                MulDivOp::Mulhsu => 0b010,
+                MulDivOp::Mulhu => 0b011,
+                MulDivOp::Div => 0b100,
+                MulDivOp::Divu => 0b101,
+                MulDivOp::Rem => 0b110,
+                MulDivOp::Remu => 0b111,
+            };
+            r_type(0x01, rs2.index() as u32, rs1.index() as u32, f3, rd.index() as u32, OPC_OP)
+        }
+        Amo { op, rd, rs1, rs2 } => {
+            let f5 = match op {
+                AmoOp::AmoAddW => 0x00,
+                AmoOp::AmoSwapW => 0x01,
+                AmoOp::LrW => 0x02,
+                AmoOp::ScW => 0x03,
+                AmoOp::AmoXorW => 0x04,
+                AmoOp::AmoOrW => 0x08,
+                AmoOp::AmoAndW => 0x0C,
+                AmoOp::AmoMinW => 0x10,
+                AmoOp::AmoMaxW => 0x14,
+                AmoOp::AmoMinuW => 0x18,
+                AmoOp::AmoMaxuW => 0x1C,
+            };
+            r_type(f5 << 2, rs2.index() as u32, rs1.index() as u32, 0b010, rd.index() as u32, OPC_AMO)
+        }
+        FpLoad { width, frd, rs1, offset } => {
+            let f3 = match width {
+                FpWidth::S => 0b010,
+                FpWidth::D => 0b011,
+            };
+            i_type(offset, rs1.index() as u32, f3, frd.index() as u32, OPC_LOAD_FP)
+        }
+        FpStore { width, frs2, rs1, offset } => {
+            let f3 = match width {
+                FpWidth::S => 0b010,
+                FpWidth::D => 0b011,
+            };
+            s_type(offset, frs2.index() as u32, rs1.index() as u32, f3, OPC_STORE_FP)
+        }
+        FpOp { op, width, frd, frs1, frs2, frs3 } => {
+            use crate::isa::FpOp as F;
+            let fmt = width.fmt();
+            let (rd, rs1, rs2, rs3) =
+                (frd.index() as u32, frs1.index() as u32, frs2.index() as u32, frs3.index() as u32);
+            match op {
+                F::Fmadd => r4_type(rs3, fmt, rs2, rs1, RM_DYN, rd, OPC_MADD),
+                F::Fmsub => r4_type(rs3, fmt, rs2, rs1, RM_DYN, rd, OPC_MSUB),
+                F::Fnmsub => r4_type(rs3, fmt, rs2, rs1, RM_DYN, rd, OPC_NMSUB),
+                F::Fnmadd => r4_type(rs3, fmt, rs2, rs1, RM_DYN, rd, OPC_NMADD),
+                F::Fadd => r_type(fmt, rs2, rs1, RM_DYN, rd, OPC_OP_FP),
+                F::Fsub => r_type(0x04 | fmt, rs2, rs1, RM_DYN, rd, OPC_OP_FP),
+                F::Fmul => r_type(0x08 | fmt, rs2, rs1, RM_DYN, rd, OPC_OP_FP),
+                F::Fdiv => r_type(0x0C | fmt, rs2, rs1, RM_DYN, rd, OPC_OP_FP),
+                F::Fsqrt => r_type(0x2C | fmt, 0, rs1, RM_DYN, rd, OPC_OP_FP),
+                F::Fsgnj => r_type(0x10 | fmt, rs2, rs1, 0b000, rd, OPC_OP_FP),
+                F::Fsgnjn => r_type(0x10 | fmt, rs2, rs1, 0b001, rd, OPC_OP_FP),
+                F::Fsgnjx => r_type(0x10 | fmt, rs2, rs1, 0b010, rd, OPC_OP_FP),
+                F::Fmin => r_type(0x14 | fmt, rs2, rs1, 0b000, rd, OPC_OP_FP),
+                F::Fmax => r_type(0x14 | fmt, rs2, rs1, 0b001, rd, OPC_OP_FP),
+            }
+        }
+        FpCmp { op, width, rd, frs1, frs2 } => {
+            let f3 = match op {
+                FpCmpOp::Fle => 0b000,
+                FpCmpOp::Flt => 0b001,
+                FpCmpOp::Feq => 0b010,
+            };
+            r_type(
+                0x50 | width.fmt(),
+                frs2.index() as u32,
+                frs1.index() as u32,
+                f3,
+                rd.index() as u32,
+                OPC_OP_FP,
+            )
+        }
+        FpCvtToInt { width, signed, rd, frs1 } => r_type(
+            0x60 | width.fmt(),
+            if signed { 0 } else { 1 },
+            frs1.index() as u32,
+            RM_DYN,
+            rd.index() as u32,
+            OPC_OP_FP,
+        ),
+        FpCvtFromInt { width, signed, frd, rs1 } => r_type(
+            0x68 | width.fmt(),
+            if signed { 0 } else { 1 },
+            rs1.index() as u32,
+            RM_DYN,
+            frd.index() as u32,
+            OPC_OP_FP,
+        ),
+        FpCvtFF { to, frd, frs1 } => {
+            let from = match to {
+                FpWidth::S => FpWidth::D,
+                FpWidth::D => FpWidth::S,
+            };
+            r_type(
+                0x20 | to.fmt(),
+                from.fmt(),
+                frs1.index() as u32,
+                RM_DYN,
+                frd.index() as u32,
+                OPC_OP_FP,
+            )
+        }
+        FpMvToInt { rd, frs1 } => {
+            r_type(0x70, 0, frs1.index() as u32, 0b000, rd.index() as u32, OPC_OP_FP)
+        }
+        FpMvFromInt { frd, rs1 } => {
+            r_type(0x78, 0, rs1.index() as u32, 0b000, frd.index() as u32, OPC_OP_FP)
+        }
+        FpClass { width, rd, frs1 } => r_type(
+            0x70 | width.fmt(),
+            0,
+            frs1.index() as u32,
+            0b001,
+            rd.index() as u32,
+            OPC_OP_FP,
+        ),
+        Frep { is_outer, max_rep, max_inst, stagger_mask, stagger_count } => {
+            assert!(max_inst < 16, "frep max_inst must fit 4 bits");
+            assert!(stagger_mask < 16, "frep stagger_mask must fit 4 bits");
+            assert!(stagger_count < 8, "frep stagger_count must fit 3 bits");
+            let imm = (u32::from(is_outer) << 11)
+                | (u32::from(stagger_count) << 8)
+                | (u32::from(stagger_mask) << 4)
+                | u32::from(max_inst);
+            (imm << 20) | ((max_rep.index() as u32) << 15) | OPC_CUSTOM1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_encodings() {
+        // Cross-checked against riscv-gnu-toolchain output.
+        // addi a0, a0, 1  -> 0x00150513
+        assert_eq!(
+            encode(&Instr::OpImm { op: AluOp::Add, rd: Reg::from_name("a0").unwrap(), rs1: Reg::from_name("a0").unwrap(), imm: 1 }),
+            0x0015_0513
+        );
+        // add a0, a1, a2 -> 0x00c58533
+        assert_eq!(
+            encode(&Instr::Op {
+                op: AluOp::Add,
+                rd: Reg::from_name("a0").unwrap(),
+                rs1: Reg::from_name("a1").unwrap(),
+                rs2: Reg::from_name("a2").unwrap()
+            }),
+            0x00C5_8533
+        );
+        // lw t0, 8(sp) -> 0x00812283
+        assert_eq!(
+            encode(&Instr::Load { op: LoadOp::Lw, rd: Reg::from_name("t0").unwrap(), rs1: Reg::SP, offset: 8 }),
+            0x0081_2283
+        );
+        // sw t0, 8(sp) -> 0x00512423
+        assert_eq!(
+            encode(&Instr::Store { op: StoreOp::Sw, rs1: Reg::SP, rs2: Reg::from_name("t0").unwrap(), offset: 8 }),
+            0x0051_2423
+        );
+        // ecall -> 0x00000073
+        assert_eq!(encode(&Instr::Ecall), 0x0000_0073);
+        // lui a0, 0x12345 -> 0x12345537
+        assert_eq!(encode(&Instr::Lui { rd: Reg::from_name("a0").unwrap(), imm: 0x12345 << 12 }), 0x1234_5537);
+        // fld ft0, 0(a0) -> 0x00053007
+        assert_eq!(
+            encode(&Instr::FpLoad { width: FpWidth::D, frd: FReg::FT0, rs1: Reg::from_name("a0").unwrap(), offset: 0 }),
+            0x0005_3007
+        );
+        // fmadd.d ft2, ft0, ft1, ft2 -> 0x121071c3 (rm=dyn 0b111)
+        assert_eq!(
+            encode(&Instr::FpOp {
+                op: FpOp::Fmadd,
+                width: FpWidth::D,
+                frd: FReg::new(2),
+                frs1: FReg::new(0),
+                frs2: FReg::new(1),
+                frs3: FReg::new(2)
+            }),
+            0x1210_7143 | (0b111 << 12)
+        );
+    }
+
+    #[test]
+    fn branch_offset_bits() {
+        // beq x0, x0, -4 -> 0xfe000ee3
+        assert_eq!(
+            encode(&Instr::Branch { op: BranchOp::Beq, rs1: Reg::ZERO, rs2: Reg::ZERO, offset: -4 }),
+            0xFE00_0EE3
+        );
+        // jal ra, 8 -> 0x008000ef
+        assert_eq!(encode(&Instr::Jal { rd: Reg::RA, offset: 8 }), 0x0080_00EF);
+    }
+
+    #[test]
+    fn frep_fields_roundtrip_bits() {
+        let w = encode(&Instr::Frep {
+            is_outer: true,
+            max_rep: Reg::from_name("t0").unwrap(),
+            max_inst: 1,
+            stagger_mask: 0b1001,
+            stagger_count: 3,
+        });
+        assert_eq!(w & 0x7F, 0x2B);
+        assert_eq!((w >> 15) & 0x1F, 5); // t0
+        assert_eq!((w >> 20) & 0xF, 1); // max_inst
+        assert_eq!((w >> 24) & 0xF, 0b1001); // stagger_mask
+        assert_eq!((w >> 28) & 0x7, 3); // stagger_count
+        assert_eq!((w >> 31) & 1, 1); // is_outer
+    }
+}

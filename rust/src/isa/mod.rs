@@ -1,0 +1,369 @@
+//! Instruction-set architecture: RV32IMAFD + Zicsr + Snitch extensions.
+//!
+//! The simulator keeps instructions in their architectural 32-bit encoding
+//! in instruction memory (so the I-cache models fetch of real bytes) and
+//! decodes them with [`decode::decode`]. The assembler produces encodings
+//! with [`encode::encode`]; `encode(decode(w)) == w` is property-tested.
+//!
+//! Snitch-specific pieces:
+//! * the `frep.o` / `frep.i` instructions live in the *custom-1* opcode
+//!   (`0b010_1011`), matching the paper's Figure 5 field layout
+//!   (`max_inst`, `stagger_mask`, `stagger_count` in the immediate,
+//!   `max_rep` in `rs1`);
+//! * SSR configuration and activation are CSR-mapped (see [`csr`]).
+
+pub mod csr;
+pub mod decode;
+pub mod disasm;
+pub mod encode;
+pub mod regs;
+
+pub use regs::{FReg, Reg};
+
+/// Branch comparison operations (RV32I `BRANCH` major opcode).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BranchOp {
+    Beq,
+    Bne,
+    Blt,
+    Bge,
+    Bltu,
+    Bgeu,
+}
+
+/// Integer load widths/signedness.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LoadOp {
+    Lb,
+    Lh,
+    Lw,
+    Lbu,
+    Lhu,
+}
+
+impl LoadOp {
+    /// Number of bytes accessed.
+    pub fn size(self) -> u32 {
+        match self {
+            LoadOp::Lb | LoadOp::Lbu => 1,
+            LoadOp::Lh | LoadOp::Lhu => 2,
+            LoadOp::Lw => 4,
+        }
+    }
+}
+
+/// Integer store widths.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StoreOp {
+    Sb,
+    Sh,
+    Sw,
+}
+
+impl StoreOp {
+    /// Number of bytes accessed.
+    pub fn size(self) -> u32 {
+        match self {
+            StoreOp::Sb => 1,
+            StoreOp::Sh => 2,
+            StoreOp::Sw => 4,
+        }
+    }
+}
+
+/// ALU operations shared between `OP` and `OP-IMM` forms.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AluOp {
+    Add,
+    Sub,
+    Sll,
+    Slt,
+    Sltu,
+    Xor,
+    Srl,
+    Sra,
+    Or,
+    And,
+}
+
+/// RV32M multiply/divide operations (offloaded to the shared unit).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MulDivOp {
+    Mul,
+    Mulh,
+    Mulhsu,
+    Mulhu,
+    Div,
+    Divu,
+    Rem,
+    Remu,
+}
+
+impl MulDivOp {
+    /// True for the 2-cycle pipelined multiplier, false for the bit-serial
+    /// divider.
+    pub fn is_mul(self) -> bool {
+        matches!(self, MulDivOp::Mul | MulDivOp::Mulh | MulDivOp::Mulhsu | MulDivOp::Mulhu)
+    }
+}
+
+/// RV32A atomic memory operations, resolved by the per-bank atomic unit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AmoOp {
+    LrW,
+    ScW,
+    AmoSwapW,
+    AmoAddW,
+    AmoXorW,
+    AmoAndW,
+    AmoOrW,
+    AmoMinW,
+    AmoMaxW,
+    AmoMinuW,
+    AmoMaxuW,
+}
+
+/// CSR access operations (Zicsr).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CsrOp {
+    Rw,
+    Rs,
+    Rc,
+}
+
+/// CSR source operand: register or 5-bit zero-extended immediate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CsrSrc {
+    Reg(Reg),
+    Imm(u8),
+}
+
+/// Floating-point operand width (RV32F single / RV32D double).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FpWidth {
+    S,
+    D,
+}
+
+impl FpWidth {
+    /// fmt field encoding (bits 26:25 of FP instructions).
+    pub fn fmt(self) -> u32 {
+        match self {
+            FpWidth::S => 0b00,
+            FpWidth::D => 0b01,
+        }
+    }
+
+    /// Access size in bytes for loads/stores of this width.
+    pub fn size(self) -> u32 {
+        match self {
+            FpWidth::S => 4,
+            FpWidth::D => 8,
+        }
+    }
+}
+
+/// Register-register FP compute operations executed by the FPU.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FpOp {
+    Fadd,
+    Fsub,
+    Fmul,
+    Fdiv,
+    Fsqrt,
+    Fsgnj,
+    Fsgnjn,
+    Fsgnjx,
+    Fmin,
+    Fmax,
+    /// rd = rs1 * rs2 + rs3
+    Fmadd,
+    /// rd = rs1 * rs2 - rs3
+    Fmsub,
+    /// rd = -(rs1 * rs2) + rs3
+    Fnmsub,
+    /// rd = -(rs1 * rs2) - rs3
+    Fnmadd,
+}
+
+impl FpOp {
+    /// True if the op reads a third source operand (fused multiply-add
+    /// family).
+    pub fn has_rs3(self) -> bool {
+        matches!(self, FpOp::Fmadd | FpOp::Fmsub | FpOp::Fnmsub | FpOp::Fnmadd)
+    }
+
+    /// True if the op reads a second source operand.
+    pub fn has_rs2(self) -> bool {
+        !matches!(self, FpOp::Fsqrt)
+    }
+}
+
+/// FP comparisons writing an integer register.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FpCmpOp {
+    Feq,
+    Flt,
+    Fle,
+}
+
+/// A fully decoded instruction.
+///
+/// The enum is deliberately flat and structured (no raw funct fields) so the
+/// execution units can match on semantics; [`encode::encode`] reconstructs
+/// the architectural word.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Instr {
+    // ----- RV32I -----
+    Lui { rd: Reg, imm: i32 },
+    Auipc { rd: Reg, imm: i32 },
+    Jal { rd: Reg, offset: i32 },
+    Jalr { rd: Reg, rs1: Reg, offset: i32 },
+    Branch { op: BranchOp, rs1: Reg, rs2: Reg, offset: i32 },
+    Load { op: LoadOp, rd: Reg, rs1: Reg, offset: i32 },
+    Store { op: StoreOp, rs1: Reg, rs2: Reg, offset: i32 },
+    OpImm { op: AluOp, rd: Reg, rs1: Reg, imm: i32 },
+    Op { op: AluOp, rd: Reg, rs1: Reg, rs2: Reg },
+    Fence,
+    Ecall,
+    Ebreak,
+    /// Wait-for-interrupt: core sleeps until the cluster wake-up register
+    /// fires an IPI (used by the barrier runtime).
+    Wfi,
+    Csr { op: CsrOp, rd: Reg, csr: u16, src: CsrSrc },
+
+    // ----- RV32M (offloaded to shared mul/div) -----
+    MulDiv { op: MulDivOp, rd: Reg, rs1: Reg, rs2: Reg },
+
+    // ----- RV32A (resolved at the TCDM bank) -----
+    Amo { op: AmoOp, rd: Reg, rs1: Reg, rs2: Reg },
+
+    // ----- RV32F/D loads & stores (FP LSU; address from integer core) -----
+    FpLoad { width: FpWidth, frd: FReg, rs1: Reg, offset: i32 },
+    FpStore { width: FpWidth, frs2: FReg, rs1: Reg, offset: i32 },
+
+    // ----- RV32F/D compute (offloaded to the FP-SS) -----
+    FpOp { op: FpOp, width: FpWidth, frd: FReg, frs1: FReg, frs2: FReg, frs3: FReg },
+    FpCmp { op: FpCmpOp, width: FpWidth, rd: Reg, frs1: FReg, frs2: FReg },
+    /// fcvt.w[u].{s,d}: FP → integer register.
+    FpCvtToInt { width: FpWidth, signed: bool, rd: Reg, frs1: FReg },
+    /// fcvt.{s,d}.w[u]: integer register → FP.
+    FpCvtFromInt { width: FpWidth, signed: bool, frd: FReg, rs1: Reg },
+    /// fcvt.s.d / fcvt.d.s.
+    FpCvtFF { to: FpWidth, frd: FReg, frs1: FReg },
+    /// fmv.x.w: bit-move low 32 bits of FP reg to integer reg.
+    FpMvToInt { rd: Reg, frs1: FReg },
+    /// fmv.w.x: bit-move integer reg into low 32 bits of FP reg.
+    FpMvFromInt { frd: FReg, rs1: Reg },
+    FpClass { width: FpWidth, rd: Reg, frs1: FReg },
+
+    // ----- Snitch FREP extension (custom-1 opcode) -----
+    /// `frep.o`/`frep.i rs1, max_inst, stagger_mask, stagger_count`
+    ///
+    /// Sequences the next `max_inst + 1` FP instructions `rs1 + 1` times
+    /// from the FPU sequence buffer. `is_outer` repeats the whole block,
+    /// otherwise each instruction individually (paper Fig. 5).
+    Frep {
+        is_outer: bool,
+        /// Register holding the iteration count minus one.
+        max_rep: Reg,
+        /// Number of subsequent instructions to sequence, minus one (0..16).
+        max_inst: u8,
+        /// One bit per operand `[rd, rs3, rs2, rs1]`: stagger that operand.
+        stagger_mask: u8,
+        /// Stagger wraps after this many iterations (0..8).
+        stagger_count: u8,
+    },
+}
+
+impl Instr {
+    /// True if the instruction is executed by the FP subsystem (i.e. is
+    /// offloaded over the accelerator interface and, when a FREP
+    /// configuration is active, eligible for the sequence buffer).
+    pub fn is_fp(&self) -> bool {
+        matches!(
+            self,
+            Instr::FpLoad { .. }
+                | Instr::FpStore { .. }
+                | Instr::FpOp { .. }
+                | Instr::FpCmp { .. }
+                | Instr::FpCvtToInt { .. }
+                | Instr::FpCvtFromInt { .. }
+                | Instr::FpCvtFF { .. }
+                | Instr::FpMvToInt { .. }
+                | Instr::FpMvFromInt { .. }
+                | Instr::FpClass { .. }
+        )
+    }
+
+    /// True if the instruction is an *arithmetic* floating-point operation
+    /// for the purposes of the paper's "FPU utilization" metric (Table 1:
+    /// fused arithmetic, casts and comparisons count; loads/stores and
+    /// moves do not).
+    pub fn is_fpu_arith(&self) -> bool {
+        matches!(
+            self,
+            Instr::FpOp { .. }
+                | Instr::FpCmp { .. }
+                | Instr::FpCvtToInt { .. }
+                | Instr::FpCvtFromInt { .. }
+                | Instr::FpCvtFF { .. }
+        )
+    }
+
+    /// Number of double-precision flops this instruction contributes to the
+    /// Gflop/s accounting (FMA counts as 2, per the paper's peak numbers).
+    pub fn flops(&self) -> u64 {
+        match self {
+            Instr::FpOp { op, .. } => match op {
+                FpOp::Fmadd | FpOp::Fmsub | FpOp::Fnmsub | FpOp::Fnmadd => 2,
+                FpOp::Fsgnj | FpOp::Fsgnjn | FpOp::Fsgnjx => 0,
+                _ => 1,
+            },
+            _ => 0,
+        }
+    }
+
+    /// True if the instruction is *sequenceable* by the FPU sequencer.
+    /// Only FP compute on the FP register file qualifies; anything touching
+    /// the integer register file or memory uses the bypass lane (paper
+    /// Fig. 4).
+    pub fn is_sequenceable(&self) -> bool {
+        matches!(self, Instr::FpOp { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fma_counts_two_flops() {
+        let i = Instr::FpOp {
+            op: FpOp::Fmadd,
+            width: FpWidth::D,
+            frd: FReg::new(0),
+            frs1: FReg::new(1),
+            frs2: FReg::new(2),
+            frs3: FReg::new(3),
+        };
+        assert_eq!(i.flops(), 2);
+        assert!(i.is_fpu_arith());
+        assert!(i.is_sequenceable());
+    }
+
+    #[test]
+    fn loads_are_fp_but_not_arith() {
+        let i = Instr::FpLoad { width: FpWidth::D, frd: FReg::new(5), rs1: Reg::new(2), offset: 8 };
+        assert!(i.is_fp());
+        assert!(!i.is_fpu_arith());
+        assert!(!i.is_sequenceable());
+        assert_eq!(i.flops(), 0);
+    }
+
+    #[test]
+    fn muldiv_classification() {
+        assert!(MulDivOp::Mulhu.is_mul());
+        assert!(!MulDivOp::Rem.is_mul());
+    }
+}

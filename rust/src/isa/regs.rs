@@ -1,0 +1,224 @@
+//! Architectural register names for the integer and floating-point files.
+
+use std::fmt;
+
+/// An integer register `x0..x31`. `x0` is hard-wired zero.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Reg(u8);
+
+impl Reg {
+    /// The hard-wired zero register.
+    pub const ZERO: Reg = Reg(0);
+    /// Return address (`x1`).
+    pub const RA: Reg = Reg(1);
+    /// Stack pointer (`x2`).
+    pub const SP: Reg = Reg(2);
+
+    /// Construct `xN`; panics if `n > 31`.
+    pub fn new(n: u8) -> Reg {
+        assert!(n < 32, "integer register index {n} out of range");
+        Reg(n)
+    }
+
+    /// Register index 0..31.
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+
+    /// True for `x0`.
+    pub fn is_zero(self) -> bool {
+        self.0 == 0
+    }
+
+    /// Look up an integer register by its assembly name (`x7`, `t0`, `a1`,
+    /// `s3`, `ra`, ...).
+    pub fn from_name(name: &str) -> Option<Reg> {
+        let n = match name {
+            "zero" => 0,
+            "ra" => 1,
+            "sp" => 2,
+            "gp" => 3,
+            "tp" => 4,
+            "t0" => 5,
+            "t1" => 6,
+            "t2" => 7,
+            "s0" | "fp" => 8,
+            "s1" => 9,
+            "a0" => 10,
+            "a1" => 11,
+            "a2" => 12,
+            "a3" => 13,
+            "a4" => 14,
+            "a5" => 15,
+            "a6" => 16,
+            "a7" => 17,
+            "s2" => 18,
+            "s3" => 19,
+            "s4" => 20,
+            "s5" => 21,
+            "s6" => 22,
+            "s7" => 23,
+            "s8" => 24,
+            "s9" => 25,
+            "s10" => 26,
+            "s11" => 27,
+            "t3" => 28,
+            "t4" => 29,
+            "t5" => 30,
+            "t6" => 31,
+            _ => {
+                let rest = name.strip_prefix('x')?;
+                let n: u8 = rest.parse().ok()?;
+                if n < 32 {
+                    n
+                } else {
+                    return None;
+                }
+            }
+        };
+        Some(Reg(n))
+    }
+
+    /// Canonical ABI name.
+    pub fn name(self) -> &'static str {
+        const NAMES: [&str; 32] = [
+            "zero", "ra", "sp", "gp", "tp", "t0", "t1", "t2", "s0", "s1", "a0", "a1", "a2", "a3",
+            "a4", "a5", "a6", "a7", "s2", "s3", "s4", "s5", "s6", "s7", "s8", "s9", "s10", "s11",
+            "t3", "t4", "t5", "t6",
+        ];
+        NAMES[self.0 as usize]
+    }
+}
+
+impl fmt::Display for Reg {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A floating-point register `f0..f31`.
+///
+/// `ft0` (= `f0`) and `ft1` (= `f1`) are the two registers the SSR
+/// extension intercepts when stream semantics are enabled.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct FReg(u8);
+
+impl FReg {
+    /// `ft0`, SSR lane 0 when streaming is active.
+    pub const FT0: FReg = FReg(0);
+    /// `ft1`, SSR lane 1 when streaming is active.
+    pub const FT1: FReg = FReg(1);
+
+    /// Construct `fN`; panics if `n > 31`.
+    pub fn new(n: u8) -> FReg {
+        assert!(n < 32, "fp register index {n} out of range");
+        FReg(n)
+    }
+
+    /// Register index 0..31.
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+
+    /// Stagger this operand name by `amount` (wrapping within 0..31), as the
+    /// FREP sequencer does for software-defined operand renaming.
+    pub fn staggered(self, amount: u8) -> FReg {
+        FReg((self.0 + amount) % 32)
+    }
+
+    /// Look up an FP register by assembly name (`f9`, `ft3`, `fa0`, `fs5`).
+    pub fn from_name(name: &str) -> Option<FReg> {
+        let n: u8 = if let Some(rest) = name.strip_prefix("ft") {
+            let i: u8 = rest.parse().ok()?;
+            match i {
+                0..=7 => i,
+                8..=11 => 20 + i, // ft8..ft11 -> f28..f31
+                _ => return None,
+            }
+        } else if let Some(rest) = name.strip_prefix("fs") {
+            let i: u8 = rest.parse().ok()?;
+            match i {
+                0..=1 => 8 + i,   // fs0..fs1 -> f8..f9
+                2..=11 => 16 + i, // fs2..fs11 -> f18..f27
+                _ => return None,
+            }
+        } else if let Some(rest) = name.strip_prefix("fa") {
+            let i: u8 = rest.parse().ok()?;
+            if i < 8 {
+                10 + i // fa0..fa7 -> f10..f17
+            } else {
+                return None;
+            }
+        } else {
+            let rest = name.strip_prefix('f')?;
+            let i: u8 = rest.parse().ok()?;
+            if i < 32 {
+                i
+            } else {
+                return None;
+            }
+        };
+        Some(FReg(n))
+    }
+
+    /// Canonical ABI name.
+    pub fn name(self) -> &'static str {
+        const NAMES: [&str; 32] = [
+            "ft0", "ft1", "ft2", "ft3", "ft4", "ft5", "ft6", "ft7", "fs0", "fs1", "fa0", "fa1",
+            "fa2", "fa3", "fa4", "fa5", "fa6", "fa7", "fs2", "fs3", "fs4", "fs5", "fs6", "fs7",
+            "fs8", "fs9", "fs10", "fs11", "ft8", "ft9", "ft10", "ft11",
+        ];
+        NAMES[self.0 as usize]
+    }
+}
+
+impl fmt::Display for FReg {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn int_reg_roundtrip_all_names() {
+        for n in 0..32u8 {
+            let r = Reg::new(n);
+            assert_eq!(Reg::from_name(r.name()), Some(r));
+            assert_eq!(Reg::from_name(&format!("x{n}")), Some(r));
+        }
+    }
+
+    #[test]
+    fn fp_reg_roundtrip_all_names() {
+        for n in 0..32u8 {
+            let r = FReg::new(n);
+            assert_eq!(FReg::from_name(r.name()), Some(r), "name {}", r.name());
+            assert_eq!(FReg::from_name(&format!("f{n}")), Some(r));
+        }
+    }
+
+    #[test]
+    fn abi_aliases() {
+        assert_eq!(Reg::from_name("fp"), Reg::from_name("s0"));
+        assert_eq!(FReg::from_name("ft8").unwrap().index(), 28);
+        assert_eq!(FReg::from_name("fs2").unwrap().index(), 18);
+        assert_eq!(FReg::from_name("fa0").unwrap().index(), 10);
+    }
+
+    #[test]
+    fn out_of_range_rejected() {
+        assert_eq!(Reg::from_name("x32"), None);
+        assert_eq!(FReg::from_name("f32"), None);
+        assert_eq!(FReg::from_name("ft12"), None);
+        assert_eq!(FReg::from_name("fa8"), None);
+    }
+
+    #[test]
+    fn stagger_wraps() {
+        assert_eq!(FReg::new(31).staggered(1).index(), 0);
+        assert_eq!(FReg::new(2).staggered(3).index(), 5);
+    }
+}

@@ -1,0 +1,131 @@
+//! AXPY `y = a·x + y` (paper §4.1: "included as a memory-bound kernel").
+//!
+//! The kernel needs three memory streams (read x, read y, write y) but the
+//! architecture provides only two SSRs, so the store stays explicit and —
+//! exactly as the paper notes — **no FREP variant exists**: the `fsd` in
+//! the loop body is not sequenceable. Each core can sustain only two
+//! memory operations per cycle through its two TCDM ports, making the
+//! kernel memory-bound (three accesses per two flops).
+
+use super::runtime as rt;
+use super::{allclose, rng_for, KernelDef, KernelIo, Params, Variant};
+use crate::cluster::Cluster;
+
+const X: u32 = rt::DATA;
+
+fn y_addr(n: usize) -> u32 {
+    X + 8 * n as u32
+}
+
+/// The scalar `a` parks in the result area so the kernel can `fld` it.
+const A_SCALAR: u32 = rt::RESULT + 8;
+
+fn gen(v: Variant, p: &Params) -> String {
+    let y = y_addr(p.n);
+    let mut s = rt::prologue();
+    s.push_str(&rt::load_bounds("a3", "a4"));
+    s.push_str(&format!(
+        r#"
+        li   t0, {A_SCALAR}
+        fld  fa0, 0(t0)              # a
+        slli t0, a3, 3
+        li   a1, {y}
+        add  a1, a1, t0              # y pointer (store target)
+"#
+    ));
+    match v {
+        Variant::Baseline => s.push_str(&format!(
+            r#"
+        li   a0, {X}
+        add  a0, a0, t0
+        slli t1, a4, 3
+        add  a2, a0, t1
+axpy_loop:
+        fld  ft0, 0(a0)
+        fld  ft1, 0(a1)
+        fmadd.d ft2, fa0, ft0, ft1
+        fsd  ft2, 0(a1)
+        addi a0, a0, 8
+        addi a1, a1, 8
+        bne  a0, a2, axpy_loop
+"#
+        )),
+        Variant::Ssr => {
+            // lane0 reads x, lane1 reads y; the y store stays explicit.
+            s.push_str(&format!(
+                r#"
+        addi t5, a4, -1
+        csrw ssr0_bound0, t5
+        csrw ssr1_bound0, t5
+        li   t5, 8
+        csrw ssr0_stride0, t5
+        csrw ssr1_stride0, t5
+        slli t6, a3, 3
+        li   t5, {X}
+        add  t5, t5, t6
+        csrw ssr0_rptr0, t5
+        mv   t5, a1
+        csrw ssr1_rptr0, t5
+        csrwi ssr, 1
+        mv   t0, a4
+axpy_loop:
+        fmadd.d ft2, fa0, ft0, ft1
+        fsd  ft2, 0(a1)
+        addi a1, a1, 8
+        addi t0, t0, -1
+        bnez t0, axpy_loop
+        csrwi ssr, 0
+"#
+            ));
+        }
+        Variant::SsrFrep => unreachable!("axpy has no FREP variant (needs 3 streamers)"),
+    }
+    s.push_str(&rt::barrier());
+    s.push_str(&rt::epilogue());
+    s
+}
+
+fn inputs(p: &Params) -> (f64, Vec<f64>, Vec<f64>) {
+    let mut rng = rng_for(p);
+    let a = 1.0 + rng.f64();
+    let x: Vec<f64> = (0..p.n).map(|_| rng.f64_sym(1.0)).collect();
+    let y: Vec<f64> = (0..p.n).map(|_| rng.f64_sym(1.0)).collect();
+    (a, x, y)
+}
+
+fn setup(cl: &mut Cluster, p: &Params) {
+    let (a, x, y) = inputs(p);
+    cl.tcdm.write_f64_slice(X, &x);
+    cl.tcdm.write_f64_slice(y_addr(p.n), &y);
+    cl.tcdm.write_f64_slice(A_SCALAR, &[a]);
+    rt::write_bounds(cl, p.cores, p.n);
+}
+
+fn check(cl: &Cluster, p: &Params) -> Result<f64, String> {
+    let (a, x, y) = inputs(p);
+    let want: Vec<f64> = x.iter().zip(&y).map(|(xi, yi)| a.mul_add(*xi, *yi)).collect();
+    let got = cl.tcdm.read_f64_slice(y_addr(p.n), p.n);
+    allclose(&got, &want, 1e-12, 0.0)
+}
+
+fn flops(p: &Params) -> u64 {
+    2 * p.n as u64
+}
+
+fn io(cl: &Cluster, p: &Params) -> KernelIo {
+    let (a, x, y) = inputs(p);
+    KernelIo {
+        inputs: vec![("a", vec![a]), ("x", x), ("y", y)],
+        output: cl.tcdm.read_f64_slice(y_addr(p.n), p.n),
+    }
+}
+
+pub static KERNEL: KernelDef = KernelDef {
+    name: "axpy",
+    variants: &[Variant::Baseline, Variant::Ssr],
+    gen,
+    setup,
+    check,
+    flops,
+    io,
+};

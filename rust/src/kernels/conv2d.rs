@@ -1,0 +1,242 @@
+//! 2-D convolution of an n×n image with a 7×7 kernel (paper §4.1: "kernel
+//! size is from the first layer of Google LeNet, the input image size has
+//! been truncated" to 32×32; "the high data-reuse and affine access
+//! pattern make it an ideal candidate for enhancement with SSRs and
+//! FREP"). Valid convolution: output is (n-6)×(n-6).
+//!
+//! * +SSR: a genuine **4-D** input stream — (kx, ky, ox, oy) — plus a 4-D
+//!   weight stream with zero strides on the output dims (the weights are
+//!   re-walked for every output pixel);
+//! * +SSR+FREP: the 49-tap reduction is a single sequenced `fmadd` with
+//!   4-way accumulator staggering.
+//!
+//! Output rows are chunked across cores.
+
+use super::runtime as rt;
+use super::{allclose, rng_for, KernelDef, KernelIo, Params, Variant};
+use crate::cluster::Cluster;
+
+const KDIM: usize = 7;
+const IMG: u32 = rt::DATA;
+
+fn w_addr(n: usize) -> u32 {
+    IMG + 8 * (n * n) as u32
+}
+fn out_addr(n: usize) -> u32 {
+    w_addr(n) + 8 * (KDIM * KDIM) as u32
+}
+fn out_dim(n: usize) -> usize {
+    n - (KDIM - 1)
+}
+
+fn gen(v: Variant, p: &Params) -> String {
+    let n = p.n as u32;
+    let od = out_dim(p.n) as u32;
+    let (w, out) = (w_addr(p.n), out_addr(p.n));
+    let irow = 8 * n;
+    let orow = 8 * od;
+    let mut s = rt::prologue();
+    s.push_str(&rt::load_bounds("a3", "a4")); // a3 = first out row, a4 = rows
+    s.push_str(&format!(
+        r#"
+        beqz a4, conv_skip
+        # a0 = &IMG[lo][0], a5 = &OUT[lo][0]
+        li   t0, {irow}
+        mul  t1, a3, t0
+        li   a0, {IMG}
+        add  a0, a0, t1
+        li   t0, {orow}
+        mul  t1, a3, t0
+        li   a5, {out}
+        add  a5, a5, t1
+"#
+    ));
+    match v {
+        Variant::Baseline => s.push_str(&format!(
+            r#"
+        mv   a6, a4
+conv_row:
+        li   a7, 0                   # output column
+conv_col:
+        slli t1, a7, 3
+        add  t2, a0, t1              # patch origin
+        li   t3, {w}                 # weight pointer
+        li   t4, {kdim}              # ky
+        fcvt.d.w ft3, zero
+conv_ky:
+        li   t6, {kdim}              # kx (t5/t6 free inside body)
+conv_kx:
+        fld  ft0, 0(t2)
+        fld  ft1, 0(t3)
+        fmadd.d ft3, ft0, ft1, ft3
+        addi t2, t2, 8
+        addi t3, t3, 8
+        addi t6, t6, -1
+        bnez t6, conv_kx
+        addi t2, t2, {skip}          # next image row of the patch
+        addi t4, t4, -1
+        bnez t4, conv_ky
+        fsd  ft3, 0(a5)
+        addi a5, a5, 8
+        addi a7, a7, 1
+        li   t1, {od}
+        bne  a7, t1, conv_col
+        addi a0, a0, {irow}
+        addi a6, a6, -1
+        bnez a6, conv_row
+"#,
+            kdim = KDIM,
+            skip = irow as i64 - 8 * KDIM as i64,
+        )),
+        Variant::Ssr | Variant::SsrFrep => {
+            // lane0 (image): (kx: 7,8), (ky: 7,irow), (ox: od,8), (oy: cnt,irow)
+            // lane1 (weights): (kx: 7,8), (ky: 7,56), (ox: od,0), (oy: cnt,0)
+            s.push_str(&format!(
+                r#"
+        li   t5, {km1}
+        csrw ssr0_bound0, t5
+        csrw ssr0_bound1, t5
+        csrw ssr1_bound0, t5
+        csrw ssr1_bound1, t5
+        li   t5, {odm1}
+        csrw ssr0_bound2, t5
+        csrw ssr1_bound2, t5
+        addi t5, a4, -1
+        csrw ssr0_bound3, t5
+        csrw ssr1_bound3, t5
+        li   t5, 8
+        csrw ssr0_stride0, t5
+        csrw ssr0_stride2, t5
+        csrw ssr1_stride0, t5
+        li   t5, {irow}
+        csrw ssr0_stride1, t5
+        csrw ssr0_stride3, t5
+        li   t5, 56
+        csrw ssr1_stride1, t5
+        li   t5, 0
+        csrw ssr1_stride2, t5
+        csrw ssr1_stride3, t5
+        mv   t5, a0
+        csrw ssr0_rptr3, t5
+        li   t5, {w}
+        csrw ssr1_rptr3, t5
+        csrwi ssr, 1
+        li   t5, {od}
+        mul  a6, a4, t5          # total outputs
+"#,
+                km1 = KDIM - 1,
+                odm1 = od - 1,
+            ));
+            if v == Variant::Ssr {
+                s.push_str(&format!(
+                    r#"
+conv_out:
+        fcvt.d.w ft3, zero
+        li   t0, {taps}
+conv_tap:
+        fmadd.d ft3, ft0, ft1, ft3
+        addi t0, t0, -1
+        bnez t0, conv_tap
+        fsd  ft3, 0(a5)
+        addi a5, a5, 8
+        addi a6, a6, -1
+        bnez a6, conv_out
+        csrwi ssr, 0
+"#,
+                    taps = KDIM * KDIM,
+                ));
+            } else {
+                s.push_str(&format!(
+                    r#"
+        li   a7, {tapsm1}
+conv_out:
+        fcvt.d.w ft3, zero
+        fcvt.d.w ft4, zero
+        fcvt.d.w ft5, zero
+        fcvt.d.w ft6, zero
+        frep.o a7, 1, 0b1100, 3
+        fmadd.d ft3, ft0, ft1, ft3
+        fadd.d ft3, ft3, ft4
+        fadd.d ft5, ft5, ft6
+        fadd.d ft3, ft3, ft5
+        fsd  ft3, 0(a5)
+        addi a5, a5, 8
+        addi a6, a6, -1
+        bnez a6, conv_out
+        csrwi ssr, 0
+"#,
+                    tapsm1 = KDIM * KDIM - 1,
+                ));
+            }
+        }
+    }
+    s.push_str("conv_skip:\n");
+    s.push_str(&rt::barrier());
+    s.push_str(&rt::epilogue());
+    s
+}
+
+fn inputs(p: &Params) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = rng_for(p);
+    let img: Vec<f64> = (0..p.n * p.n).map(|_| rng.f64_sym(1.0)).collect();
+    let w: Vec<f64> = (0..KDIM * KDIM).map(|_| rng.f64_sym(1.0)).collect();
+    (img, w)
+}
+
+/// Host reference with sequential fused accumulation (matches baseline and
+/// SSR; the FREP staggered reduction reassociates — covered by tolerance).
+pub fn reference(n: usize, img: &[f64], w: &[f64]) -> Vec<f64> {
+    let od = out_dim(n);
+    let mut out = vec![0.0; od * od];
+    for oy in 0..od {
+        for ox in 0..od {
+            let mut acc = 0.0f64;
+            for ky in 0..KDIM {
+                for kx in 0..KDIM {
+                    acc = img[(oy + ky) * n + ox + kx].mul_add(w[ky * KDIM + kx], acc);
+                }
+            }
+            out[oy * od + ox] = acc;
+        }
+    }
+    out
+}
+
+fn setup(cl: &mut Cluster, p: &Params) {
+    let (img, w) = inputs(p);
+    cl.tcdm.write_f64_slice(IMG, &img);
+    cl.tcdm.write_f64_slice(w_addr(p.n), &w);
+    rt::write_bounds(cl, p.cores, out_dim(p.n));
+}
+
+fn check(cl: &Cluster, p: &Params) -> Result<f64, String> {
+    let (img, w) = inputs(p);
+    let want = reference(p.n, &img, &w);
+    let od = out_dim(p.n);
+    let got = cl.tcdm.read_f64_slice(out_addr(p.n), od * od);
+    allclose(&got, &want, 1e-9, 1e-12)
+}
+
+fn flops(p: &Params) -> u64 {
+    let od = out_dim(p.n) as u64;
+    2 * od * od * (KDIM * KDIM) as u64
+}
+
+fn io(cl: &Cluster, p: &Params) -> KernelIo {
+    let (img, w) = inputs(p);
+    let od = out_dim(p.n);
+    KernelIo {
+        inputs: vec![("img", img), ("w", w)],
+        output: cl.tcdm.read_f64_slice(out_addr(p.n), od * od),
+    }
+}
+
+pub static KERNEL: KernelDef = KernelDef {
+    name: "conv2d",
+    variants: &[Variant::Baseline, Variant::Ssr, Variant::SsrFrep],
+    gen,
+    setup,
+    check,
+    flops,
+    io,
+};

@@ -1,0 +1,308 @@
+//! Matrix multiplication `C = A × B`, n×n doubles (paper §4.1: "matrix
+//! multiplication using the dot product method … the output matrix is
+//! chunked across the cores"; evaluated at 16² and 32², and at 16–128 for
+//! Table 3).
+//!
+//! * baseline: classic m/j/k triple loop, 2 `fld` + `fmadd` inner body;
+//! * +SSR: 3-D streams — lane 0 walks the A row once per output column,
+//!   lane 1 walks B column-major; the inner loop is `fmadd` + counter;
+//! * +SSR+FREP: 4-column output blocks — lane 0 serves each A element four
+//!   times (`repeat` = 3), lane 1 walks 4 B columns k-major (4-D stream);
+//!   a sequenced block of 4 independent `fmadd`s fills the FPU every cycle
+//!   with no staggering needed.
+
+use super::runtime as rt;
+use super::{allclose, rng_for, KernelDef, KernelIo, Params, Variant};
+use crate::cluster::Cluster;
+
+const A: u32 = rt::DATA;
+
+fn b_addr(n: usize) -> u32 {
+    A + 8 * (n * n) as u32
+}
+fn c_addr(n: usize) -> u32 {
+    b_addr(n) + 8 * (n * n) as u32
+}
+
+fn gen(v: Variant, p: &Params) -> String {
+    let n = p.n as u32;
+    assert!(p.n % p.cores == 0, "dgemm needs n divisible by cores");
+    let cnt = p.n / p.cores; // columns per core
+    // FREP/SSR column-block width: widest of 4/2/1 dividing the chunk.
+    let w = [4usize, 2, 1].into_iter().find(|w| cnt % w == 0).unwrap();
+    let (b, c) = (b_addr(p.n), c_addr(p.n));
+    let row = 8 * n; // row stride in bytes
+    let mut s = rt::prologue();
+    // Columns are chunked across cores (each core owns a contiguous column
+    // stripe) so the per-core B walks hit disjoint TCDM banks — row
+    // chunking would make all cores hammer the same banks in lock-step.
+    s.push_str(&rt::load_bounds("a3", "a4")); // a3 = first column, a4 = count
+    s.push_str(&format!(
+        r#"
+        beqz a4, gemm_skip
+        li   a0, {A}                 # &A[0][0]
+        slli t1, a3, 3
+        li   a5, {c}
+        add  a5, a5, t1              # &C[0][col_lo]
+        li   a2, {b}
+        add  a2, a2, t1              # &B[0][col_lo]
+"#
+    ));
+    match v {
+        Variant::Baseline => s.push_str(&format!(
+            r#"
+        li   a6, {n}                 # remaining rows
+gemm_row:
+        mv   a7, a4                  # remaining columns
+        mv   t2, a2                  # &B[0][j]
+        mv   s2, a5                  # &C[m][j]
+gemm_col:
+        mv   t3, a0                  # &A[m][0]
+        mv   t6, t2
+        addi t4, zero, {n}
+        fcvt.d.w ft3, zero
+gemm_k:
+        fld  ft0, 0(t3)
+        fld  ft1, 0(t6)
+        fmadd.d ft3, ft0, ft1, ft3
+        addi t3, t3, 8
+        addi t6, t6, {row}
+        addi t4, t4, -1
+        bnez t4, gemm_k
+        fsd  ft3, 0(s2)
+        addi s2, s2, 8
+        addi t2, t2, 8
+        addi a7, a7, -1
+        bnez a7, gemm_col
+        addi a0, a0, {row}
+        addi a5, a5, {row}
+        addi a6, a6, -1
+        bnez a6, gemm_row
+"#
+        )),
+        Variant::Ssr => {
+            // lane0: A — (k: n,8), (j: cnt,0), (m: n,row); base A
+            // lane1: B — (k: n,row), (j: cnt,8), (m: n,0); base &B[0][col_lo]
+            s.push_str(&format!(
+                r#"
+        li   t5, {nm1}
+        csrw ssr0_bound0, t5
+        csrw ssr0_bound2, t5
+        csrw ssr1_bound0, t5
+        addi t5, a4, -1
+        csrw ssr0_bound1, t5
+        csrw ssr1_bound1, t5
+        li   t5, {nm1}
+        csrw ssr1_bound2, t5
+        li   t5, 8
+        csrw ssr0_stride0, t5
+        csrw ssr1_stride1, t5
+        li   t5, 0
+        csrw ssr0_stride1, t5
+        csrw ssr1_stride2, t5
+        li   t5, {row}
+        csrw ssr0_stride2, t5
+        csrw ssr1_stride0, t5
+        mv   t5, a0
+        csrw ssr0_rptr2, t5
+        mv   t5, a2
+        csrw ssr1_rptr2, t5
+        csrwi ssr, 1
+        li   a6, {n}                 # rows
+        li   t1, {cback}             # row advance minus written columns
+gemm_row:
+        mv   a7, a4
+gemm_out:
+        fcvt.d.w ft3, zero
+        addi t0, zero, {n}
+gemm_k:
+        fmadd.d ft3, ft0, ft1, ft3
+        addi t0, t0, -1
+        bnez t0, gemm_k
+        fsd  ft3, 0(a5)
+        addi a5, a5, 8
+        addi a7, a7, -1
+        bnez a7, gemm_out
+        add  a5, a5, t1
+        addi a6, a6, -1
+        bnez a6, gemm_row
+        csrwi ssr, 0
+"#,
+                nm1 = n - 1,
+                cback = row as i64 - 8 * cnt as i64,
+            ));
+        }
+        Variant::SsrFrep if w > 1 => {
+            // lane0: A, repeat w — (k: n,8), (jb: cnt/w,0), (m: n,row)
+            // lane1: B — (j: w,8), (k: n,row), (jb: cnt/w,8w), (m: n,0)
+            let inits: String = (0..w)
+                .map(|i| format!("        fcvt.d.w ft{r}, zero\n", r = 3 + i))
+                .collect();
+            let fmas: String = (0..w)
+                .map(|i| {
+                    format!("        fmadd.d ft{r}, ft0, ft1, ft{r}\n", r = 3 + i)
+                })
+                .collect();
+            let stores: String = (0..w)
+                .map(|i| format!("        fsd  ft{r}, {o}(a5)\n", r = 3 + i, o = 8 * i))
+                .collect();
+            s.push_str(&format!(
+                r#"
+        li   t5, {wm1}
+        csrw ssr0_repeat, t5
+        csrw ssr1_bound0, t5
+        li   t5, {nm1}
+        csrw ssr0_bound0, t5
+        csrw ssr0_bound2, t5
+        csrw ssr1_bound1, t5
+        li   t5, {nbwm1}
+        csrw ssr0_bound1, t5
+        csrw ssr1_bound2, t5
+        li   t5, {nm1}
+        csrw ssr1_bound3, t5
+        li   t5, 8
+        csrw ssr0_stride0, t5
+        csrw ssr1_stride0, t5
+        li   t5, 0
+        csrw ssr0_stride1, t5
+        csrw ssr1_stride3, t5
+        li   t5, {row}
+        csrw ssr0_stride2, t5
+        csrw ssr1_stride1, t5
+        li   t5, {w8}
+        csrw ssr1_stride2, t5
+        mv   t5, a0
+        csrw ssr0_rptr2, t5
+        mv   t5, a2
+        csrw ssr1_rptr3, t5
+        csrwi ssr, 1
+        li   a6, {n}                 # rows
+        li   t1, {cback}
+        li   s2, {nm1}               # frep count (k iterations - 1)
+gemm_row:
+        li   a7, {nbw}               # blocks in this row
+gemm_blk:
+{inits}        frep.o s2, {w}, 0, 0
+{fmas}{stores}        addi a5, a5, {w8}
+        addi a7, a7, -1
+        bnez a7, gemm_blk
+        add  a5, a5, t1
+        addi a6, a6, -1
+        bnez a6, gemm_row
+        csrwi ssr, 0
+"#,
+                wm1 = w - 1,
+                nm1 = n - 1,
+                nbw = cnt / w,
+                nbwm1 = cnt / w - 1,
+                w8 = 8 * w,
+                cback = row as i64 - 8 * cnt as i64,
+            ));
+        }
+        Variant::SsrFrep => {
+            // Single-column chunk (e.g. 32 cores on 32×32): sequence one
+            // fmadd with 4-way accumulator staggering, reduce per output.
+            s.push_str(&format!(
+                r#"
+        li   t5, {nm1}
+        csrw ssr0_bound0, t5
+        csrw ssr0_bound1, t5
+        csrw ssr1_bound0, t5
+        csrw ssr1_bound1, t5
+        li   t5, 8
+        csrw ssr0_stride0, t5
+        li   t5, {row}
+        csrw ssr0_stride1, t5
+        csrw ssr1_stride0, t5
+        li   t5, 0
+        csrw ssr1_stride1, t5
+        mv   t5, a0
+        csrw ssr0_rptr1, t5
+        mv   t5, a2
+        csrw ssr1_rptr1, t5
+        csrwi ssr, 1
+        li   a6, {n}
+        li   s2, {nm1}
+gemm_out:
+        fcvt.d.w ft3, zero
+        fcvt.d.w ft4, zero
+        fcvt.d.w ft5, zero
+        fcvt.d.w ft6, zero
+        frep.o s2, 1, 0b1100, 3
+        fmadd.d ft3, ft0, ft1, ft3
+        fadd.d ft3, ft3, ft4
+        fadd.d ft5, ft5, ft6
+        fadd.d ft3, ft3, ft5
+        fsd  ft3, 0(a5)
+        addi a5, a5, {row}
+        addi a6, a6, -1
+        bnez a6, gemm_out
+        csrwi ssr, 0
+"#,
+                nm1 = n - 1,
+            ));
+        }
+    }
+    s.push_str("gemm_skip:\n");
+    s.push_str(&rt::barrier());
+    s.push_str(&rt::epilogue());
+    s
+}
+
+fn inputs(p: &Params) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = rng_for(p);
+    let a: Vec<f64> = (0..p.n * p.n).map(|_| rng.f64_sym(1.0)).collect();
+    let b: Vec<f64> = (0..p.n * p.n).map(|_| rng.f64_sym(1.0)).collect();
+    (a, b)
+}
+
+/// Host reference: same per-output fused accumulation order as the kernel.
+pub fn reference(n: usize, a: &[f64], b: &[f64]) -> Vec<f64> {
+    let mut c = vec![0.0; n * n];
+    for m in 0..n {
+        for j in 0..n {
+            let mut acc = 0.0f64;
+            for k in 0..n {
+                acc = a[m * n + k].mul_add(b[k * n + j], acc);
+            }
+            c[m * n + j] = acc;
+        }
+    }
+    c
+}
+
+fn setup(cl: &mut Cluster, p: &Params) {
+    let (a, b) = inputs(p);
+    cl.tcdm.write_f64_slice(A, &a);
+    cl.tcdm.write_f64_slice(b_addr(p.n), &b);
+    rt::write_bounds(cl, p.cores, p.n);
+}
+
+fn check(cl: &Cluster, p: &Params) -> Result<f64, String> {
+    let (a, b) = inputs(p);
+    let want = reference(p.n, &a, &b);
+    let got = cl.tcdm.read_f64_slice(c_addr(p.n), p.n * p.n);
+    allclose(&got, &want, 1e-12, 1e-14)
+}
+
+fn flops(p: &Params) -> u64 {
+    2 * (p.n * p.n * p.n) as u64
+}
+
+fn io(cl: &Cluster, p: &Params) -> KernelIo {
+    let (a, b) = inputs(p);
+    KernelIo {
+        inputs: vec![("a", a), ("b", b)],
+        output: cl.tcdm.read_f64_slice(c_addr(p.n), p.n * p.n),
+    }
+}
+
+pub static KERNEL: KernelDef = KernelDef {
+    name: "dgemm",
+    variants: &[Variant::Baseline, Variant::Ssr, Variant::SsrFrep],
+    gen,
+    setup,
+    check,
+    flops,
+    io,
+};

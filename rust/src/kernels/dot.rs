@@ -1,0 +1,162 @@
+//! Dot product `z = a · b` (paper §4.1: "a fundamental vector-vector
+//! operation", evaluated at n = 256 and n = 4096; Fig. 6 uses it as the
+//! running example for all three variants).
+//!
+//! * baseline: the 6-instruction inner loop of Fig. 6(a) — 2 `fld`,
+//!   `fmadd`, 2 pointer bumps, branch;
+//! * +SSR: both operands streamed; 3-instruction loop of Fig. 6(c);
+//! * +SSR+FREP: a single sequenced `fmadd` with 4-way accumulator
+//!   staggering (Fig. 6(e)), then a 4-term reduction.
+//!
+//! Multi-core: each core reduces its chunk into a partial; core 0 sums the
+//! partials after the barrier (§4.3.1.1).
+
+use super::runtime as rt;
+use super::{allclose, rng_for, KernelDef, KernelIo, Params, Variant};
+use crate::cluster::Cluster;
+
+const A: u32 = rt::DATA;
+
+fn b_addr(n: usize) -> u32 {
+    A + 8 * n as u32
+}
+
+fn gen(v: Variant, p: &Params) -> String {
+    let n = p.n;
+    let b = b_addr(n);
+    let mut s = rt::prologue();
+    s.push_str(&rt::load_bounds("a3", "a4")); // a3 = lo element, a4 = count
+    match v {
+        Variant::Baseline => {
+            s.push_str(&format!(
+                r#"
+        # pointers: a0 = &A[lo], a1 = &B[lo], a2 = end
+        slli t0, a3, 3
+        li   a0, {A}
+        add  a0, a0, t0
+        li   a1, {b}
+        add  a1, a1, t0
+        slli t1, a4, 3
+        add  a2, a0, t1
+        fcvt.d.w ft3, zero
+dot_loop:
+        fld  ft0, 0(a0)
+        fld  ft1, 0(a1)
+        fmadd.d ft3, ft0, ft1, ft3
+        addi a0, a0, 8
+        addi a1, a1, 8
+        bne  a0, a2, dot_loop
+"#
+            ));
+        }
+        Variant::Ssr => {
+            s.push_str(&cfg_streams(b));
+            s.push_str(
+                r#"
+        csrwi ssr, 1
+        fcvt.d.w ft3, zero
+        mv   t0, a4
+dot_loop:
+        fmadd.d ft3, ft0, ft1, ft3
+        addi t0, t0, -1
+        bnez t0, dot_loop
+        csrwi ssr, 0
+"#,
+            );
+        }
+        Variant::SsrFrep => {
+            s.push_str(&cfg_streams(b));
+            s.push_str(
+                r#"
+        csrwi ssr, 1
+        fcvt.d.w ft3, zero
+        fmv.d ft4, ft3
+        fmv.d ft5, ft3
+        fmv.d ft6, ft3
+        addi t0, a4, -1
+        frep.o t0, 1, 0b1100, 3      # stagger rs3+rd over 4 accumulators
+        fmadd.d ft3, ft0, ft1, ft3
+        fadd.d ft3, ft3, ft4
+        fadd.d ft5, ft5, ft6
+        fadd.d ft3, ft3, ft5
+        csrwi ssr, 0
+"#,
+            );
+        }
+    }
+    // partial store + reduction
+    s.push_str(
+        r#"
+        li   t2, PARTIALS
+        slli t3, s0, 3
+        add  t2, t2, t3
+        fsd  ft3, 0(t2)
+"#,
+    );
+    s.push_str(&rt::barrier());
+    s.push_str(&rt::reduce_partials(p.cores));
+    s.push_str(&rt::epilogue());
+    s
+}
+
+/// Both lanes: 1-D streams over this core's chunk (bound/base computed at
+/// run time from the work bounds in a3/a4).
+fn cfg_streams(b: u32) -> String {
+    format!(
+        r#"
+        addi t5, a4, -1
+        csrw ssr0_bound0, t5
+        csrw ssr1_bound0, t5
+        li   t5, 8
+        csrw ssr0_stride0, t5
+        csrw ssr1_stride0, t5
+        slli t6, a3, 3
+        li   t5, {A}
+        add  t5, t5, t6
+        csrw ssr0_rptr0, t5
+        li   t5, {b}
+        add  t5, t5, t6
+        csrw ssr1_rptr0, t5
+"#
+    )
+}
+
+fn inputs(p: &Params) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = rng_for(p);
+    let a: Vec<f64> = (0..p.n).map(|_| rng.f64_sym(1.0)).collect();
+    let b: Vec<f64> = (0..p.n).map(|_| rng.f64_sym(1.0)).collect();
+    (a, b)
+}
+
+fn setup(cl: &mut Cluster, p: &Params) {
+    let (a, b) = inputs(p);
+    cl.tcdm.write_f64_slice(A, &a);
+    cl.tcdm.write_f64_slice(b_addr(p.n), &b);
+    rt::write_bounds(cl, p.cores, p.n);
+}
+
+fn check(cl: &Cluster, p: &Params) -> Result<f64, String> {
+    let (a, b) = inputs(p);
+    let want: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+    let got = cl.tcdm.read_f64_slice(rt::RESULT, 1)[0];
+    allclose(&[got], &[want], 1e-9, 1e-9)
+}
+
+fn flops(p: &Params) -> u64 {
+    2 * p.n as u64
+}
+
+fn io(cl: &Cluster, p: &Params) -> KernelIo {
+    let (a, b) = inputs(p);
+    KernelIo { inputs: vec![("a", a), ("b", b)], output: cl.tcdm.read_f64_slice(rt::RESULT, 1) }
+}
+
+pub static KERNEL: KernelDef = KernelDef {
+    name: "dot",
+    variants: &[Variant::Baseline, Variant::Ssr, Variant::SsrFrep],
+    gen,
+    setup,
+    check,
+    flops,
+    io,
+};

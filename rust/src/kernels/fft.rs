@@ -1,0 +1,353 @@
+//! Radix-2 Cooley–Tukey FFT over n complex doubles (paper §4.1:
+//! "included to show the versatility of the tightly coupled core and the
+//! proposed extensions"; the SSR shadow registers were added precisely to
+//! make "more irregular kernels such as FFT" profitable, §1.3).
+//!
+//! Decimation-in-time over a bit-reverse-permuted input (the host performs
+//! the permutation when writing the input, as is standard for in-place
+//! DIT). The twiddle table `w^j = exp(-2πi j / n)`, j < n/2, is
+//! precomputed by the host.
+//!
+//! Stage structure (stage s, m = 2^(s+1), half = 2^s):
+//! `for k in 0..half { w = tw[k·n/m]; for i in 0..n/m { butterfly(a[k+i·m], a[k+i·m+half], w) } }`
+//!
+//! The butterfly access pattern is a perfect **4-D affine stream**:
+//! (re/im, a/b, i, k) — one SSR configuration covers an entire stage for
+//! both the read (lane 0) and write (lane 1) streams. The generated code
+//! unrolls the log2(n) stages with baked constants; cores split the (k, i)
+//! space and resynchronize at a barrier per stage (the paper attributes
+//! the FFT's reduced multi-core FPU utilization to exactly this
+//! per-stage resynchronization).
+//!
+//! The 14-op butterfly body is fully sequenceable: stream copies use
+//! `fmul ×1.0` (exact), the complex product uses separate mul/sub/add so
+//! the host reference is bit-exact.
+
+use super::runtime as rt;
+use super::{allclose, rng_for, KernelDef, KernelIo, Params, Variant};
+use crate::cluster::Cluster;
+
+const DATA_V: u32 = rt::DATA;
+
+fn tw_addr(n: usize) -> u32 {
+    DATA_V + 16 * n as u32
+}
+
+/// The 14-instruction butterfly body (reads ft0 ×4, writes ft1 ×4).
+/// Preconditions: fs2 = w.re, fs3 = w.im, fs4 = 1.0.
+const BODY: &str = r#"
+        fmul.d fa0, ft0, fs4      # a.re
+        fmul.d fa1, ft0, fs4      # a.im
+        fmul.d fa2, ft0, fs4      # b.re
+        fmul.d fa3, ft0, fs4      # b.im
+        fmul.d fa4, fa2, fs2      # b.re*w.re
+        fmul.d fa5, fa3, fs3      # b.im*w.im
+        fsub.d fa4, fa4, fa5      # t.re
+        fmul.d fa5, fa3, fs2      # b.im*w.re
+        fmul.d ft2, fa2, fs3      # b.re*w.im
+        fadd.d fa5, fa5, ft2      # t.im
+        fadd.d ft1, fa0, fa4      # a'.re
+        fadd.d ft1, fa1, fa5      # a'.im
+        fsub.d ft1, fa0, fa4      # b'.re
+        fsub.d ft1, fa1, fa5      # b'.im
+"#;
+
+/// Baseline butterfly: explicit loads/stores (a at 0(t2), b at 0(t3)).
+const BODY_MEM: &str = r#"
+        fld  fa0, 0(t2)
+        fld  fa1, 8(t2)
+        fld  fa2, 0(t3)
+        fld  fa3, 8(t3)
+        fmul.d fa4, fa2, fs2
+        fmul.d fa5, fa3, fs3
+        fsub.d fa4, fa4, fa5
+        fmul.d fa5, fa3, fs2
+        fmul.d ft2, fa2, fs3
+        fadd.d fa5, fa5, ft2
+        fadd.d ft3, fa0, fa4
+        fsd  ft3, 0(t2)
+        fadd.d ft3, fa1, fa5
+        fsd  ft3, 8(t2)
+        fsub.d ft3, fa0, fa4
+        fsd  ft3, 0(t3)
+        fsub.d ft3, fa1, fa5
+        fsd  ft3, 8(t3)
+"#;
+
+fn gen(v: Variant, p: &Params) -> String {
+    let n = p.n;
+    assert!(n.is_power_of_two() && n >= 2 * p.cores.max(2), "fft size constraint");
+    assert!(p.cores.is_power_of_two());
+    let stages = n.ilog2();
+    let tw = tw_addr(n);
+    let mut s = rt::prologue();
+    s.push_str(
+        r#"
+        li   t0, 1
+        fcvt.d.w fs4, t0          # 1.0 for exact stream copies
+"#,
+    );
+    for st in 0..stages {
+        let half = 1usize << st; // butterflies-per-group dimension
+        let m = half * 2;
+        let groups = half; // twiddle groups G = 2^s
+        let bf_per_group = n / m; // i extent M
+        let tw_stride = 16 * (n / m) as u32; // twiddle table step per k
+        let p_cores = p.cores;
+        // Work split for this stage (constants baked per stage):
+        // G >= P: each core takes G/P k-groups, full i range.
+        // G <  P: Q = P/G cores per group; each takes M/Q i's.
+        let (kcnt, icnt, per_core_code) = if groups >= p_cores {
+            let kcnt = groups / p_cores;
+            (
+                kcnt,
+                bf_per_group,
+                format!(
+                    r#"
+        # stage {st}: k0 = hart * {kcnt}, i0 = 0
+        li   t0, {kcnt}
+        mul  a0, s0, t0           # k0
+        li   a1, 0                # i0
+"#
+                ),
+            )
+        } else {
+            let q = p_cores / groups;
+            let icnt = bf_per_group / q;
+            (
+                1,
+                icnt,
+                format!(
+                    r#"
+        # stage {st}: k0 = hart / {q}, i0 = (hart % {q}) * {icnt}
+        srli a0, s0, {qlog}
+        andi t0, s0, {qm1}
+        li   t1, {icnt}
+        mul  a1, t0, t1
+"#,
+                    qlog = q.ilog2(),
+                    qm1 = q - 1,
+                ),
+            )
+        };
+        s.push_str(&per_core_code);
+        // Common address math: base = DATA + 16*k0 + i0*16*m;
+        // twiddle pointer = TW + k0*tw_stride.
+        s.push_str(&format!(
+            r#"
+        slli t0, a0, 4
+        li   a2, {DATA_V}
+        add  a2, a2, t0
+        slli t0, a1, {mlog4}
+        add  a2, a2, t0           # data base for this core
+        li   a3, {tw}
+        li   t0, {tw_stride}
+        mul  t1, a0, t0
+        add  a3, a3, t1           # twiddle pointer
+"#,
+            mlog4 = m.ilog2() + 4,
+        ));
+        match v {
+            Variant::Baseline => {
+                // Explicit loops: k (kcnt), i (icnt).
+                s.push_str(&format!(
+                    r#"
+        li   s3, {tw_stride}
+        li   s4, {half16}
+        li   s5, {m16}
+        li   a4, {kcnt}
+fft_s{st}_k:
+        fld  fs2, 0(a3)
+        fld  fs3, 8(a3)
+        mv   t2, a2
+        li   a5, {icnt}
+fft_s{st}_i:
+        add  t3, t2, s4
+{BODY_MEM}
+        add  t2, t2, s5
+        addi a5, a5, -1
+        bnez a5, fft_s{st}_i
+        add  a3, a3, s3
+        addi a2, a2, 16           # next k group
+        addi a4, a4, -1
+        bnez a4, fft_s{st}_k
+"#,
+                    half16 = 16 * half,
+                    m16 = 16 * m,
+                ));
+            }
+            Variant::Ssr | Variant::SsrFrep => {
+                // 4-D streams covering the whole per-core stage share:
+                // (re/im: 2,8), (a/b: 2,16*half), (i: icnt,16*m), (k: kcnt,16)
+                s.push_str(&format!(
+                    r#"
+        li   t5, 1
+        csrw ssr0_bound0, t5
+        csrw ssr0_bound1, t5
+        csrw ssr1_bound0, t5
+        csrw ssr1_bound1, t5
+        li   t5, {icnt_m1}
+        csrw ssr0_bound2, t5
+        csrw ssr1_bound2, t5
+        li   t5, {kcnt_m1}
+        csrw ssr0_bound3, t5
+        csrw ssr1_bound3, t5
+        li   t5, 8
+        csrw ssr0_stride0, t5
+        csrw ssr1_stride0, t5
+        li   t5, {half16}
+        csrw ssr0_stride1, t5
+        csrw ssr1_stride1, t5
+        li   t5, {m16}
+        csrw ssr0_stride2, t5
+        csrw ssr1_stride2, t5
+        li   t5, 16
+        csrw ssr0_stride3, t5
+        csrw ssr1_stride3, t5
+        mv   t5, a2
+        csrw ssr0_rptr3, t5
+        mv   t5, a2
+        csrw ssr1_wptr3, t5
+        csrwi ssr, 1
+        li   s3, {tw_stride}
+        li   a4, {kcnt}
+fft_s{st}_k:
+        fld  fs2, 0(a3)
+        fld  fs3, 8(a3)
+"#,
+                    icnt_m1 = icnt - 1,
+                    kcnt_m1 = kcnt - 1,
+                    half16 = 16 * half,
+                    m16 = 16 * m,
+                ));
+                if v == Variant::Ssr {
+                    s.push_str(&format!(
+                        r#"
+        li   a5, {icnt}
+fft_s{st}_i:{BODY}
+        addi a5, a5, -1
+        bnez a5, fft_s{st}_i
+"#
+                    ));
+                } else {
+                    s.push_str(&format!(
+                        r#"
+        li   t0, {icnt_m1}
+        frep.o t0, 14, 0, 0{BODY}
+"#,
+                        icnt_m1 = icnt - 1,
+                    ));
+                }
+                s.push_str(&format!(
+                    r#"
+        add  a3, a3, s3
+        addi a4, a4, -1
+        bnez a4, fft_s{st}_k
+        csrwi ssr, 0
+"#
+                ));
+            }
+        }
+        // Per-stage resynchronization.
+        s.push_str(&rt::barrier());
+    }
+    s.push_str(&rt::epilogue());
+    s
+}
+
+fn bit_reverse(i: usize, bits: u32) -> usize {
+    i.reverse_bits() >> (usize::BITS - bits)
+}
+
+/// Host inputs: complex data (interleaved) and twiddles.
+fn inputs(p: &Params) -> (Vec<f64>, Vec<f64>) {
+    let n = p.n;
+    let mut rng = rng_for(p);
+    let data: Vec<f64> = (0..2 * n).map(|_| rng.f64_sym(1.0)).collect();
+    let mut tw = Vec::with_capacity(n);
+    for j in 0..n / 2 {
+        let ang = -2.0 * std::f64::consts::PI * j as f64 / n as f64;
+        tw.push(ang.cos());
+        tw.push(ang.sin());
+    }
+    (data, tw)
+}
+
+/// Host reference: identical stage/butterfly arithmetic (plain mul/add,
+/// same rounding as the kernel body) over the bit-reversed input.
+pub fn reference(n: usize, data: &[f64], tw: &[f64]) -> Vec<f64> {
+    let bits = n.ilog2();
+    let mut a = vec![0.0f64; 2 * n];
+    for i in 0..n {
+        let j = bit_reverse(i, bits);
+        a[2 * j] = data[2 * i];
+        a[2 * j + 1] = data[2 * i + 1];
+    }
+    for st in 0..bits {
+        let half = 1usize << st;
+        let m = 2 * half;
+        for k in 0..half {
+            let wre = tw[2 * (k * (n / m))];
+            let wim = tw[2 * (k * (n / m)) + 1];
+            let mut i = k;
+            while i < n {
+                let (are, aim) = (a[2 * i], a[2 * i + 1]);
+                let (bre, bim) = (a[2 * (i + half)], a[2 * (i + half) + 1]);
+                let tre = bre * wre - bim * wim;
+                let tim = bim * wre + bre * wim;
+                a[2 * i] = are + tre;
+                a[2 * i + 1] = aim + tim;
+                a[2 * (i + half)] = are - tre;
+                a[2 * (i + half) + 1] = aim - tim;
+                i += m;
+            }
+        }
+    }
+    a
+}
+
+fn setup(cl: &mut Cluster, p: &Params) {
+    let n = p.n;
+    let (data, tw) = inputs(p);
+    let bits = n.ilog2();
+    // Write the input bit-reverse-permuted (standard for in-place DIT).
+    let mut permuted = vec![0.0f64; 2 * n];
+    for i in 0..n {
+        let j = bit_reverse(i, bits);
+        permuted[2 * j] = data[2 * i];
+        permuted[2 * j + 1] = data[2 * i + 1];
+    }
+    cl.tcdm.write_f64_slice(DATA_V, &permuted);
+    cl.tcdm.write_f64_slice(tw_addr(n), &tw);
+    rt::write_bounds(cl, p.cores, n / 2);
+}
+
+fn check(cl: &Cluster, p: &Params) -> Result<f64, String> {
+    let (data, tw) = inputs(p);
+    let want = reference(p.n, &data, &tw);
+    let got = cl.tcdm.read_f64_slice(DATA_V, 2 * p.n);
+    allclose(&got, &want, 0.0, 0.0)
+}
+
+fn flops(p: &Params) -> u64 {
+    // 10 real flops per butterfly, n/2 · log2(n) butterflies.
+    10 * (p.n as u64 / 2) * u64::from(p.n.ilog2())
+}
+
+fn io(cl: &Cluster, p: &Params) -> KernelIo {
+    let (data, tw) = inputs(p);
+    KernelIo {
+        inputs: vec![("x", data), ("tw", tw)],
+        output: cl.tcdm.read_f64_slice(DATA_V, 2 * p.n),
+    }
+}
+
+pub static KERNEL: KernelDef = KernelDef {
+    name: "fft",
+    variants: &[Variant::Baseline, Variant::Ssr, Variant::SsrFrep],
+    gen,
+    setup,
+    check,
+    flops,
+    io,
+};

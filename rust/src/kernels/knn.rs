@@ -1,0 +1,189 @@
+//! kNN distance phase (paper §4.1: "point-wise Euclidean distance
+//! calculation between all points (n) in the system and a sample …
+//! To provide maximum insight into the achievable improvement, we focused
+//! our measurements on the distance calculation").
+//!
+//! Points are D=4-dimensional; the kernel computes the squared Euclidean
+//! distance of every point to the query. Points are chunked across cores.
+//!
+//! * +SSR: lane 0 streams the point coordinates, lane 1 writes distances;
+//! * +SSR+FREP: the whole 9-op per-point body (init, 4×(sub, fma) with the
+//!   last fma targeting the write stream) is sequenced.
+
+use super::runtime as rt;
+use super::{allclose, rng_for, KernelDef, KernelIo, Params, Variant};
+use crate::cluster::Cluster;
+
+const D: usize = 4;
+const P: u32 = rt::DATA;
+
+fn dist_addr(n: usize) -> u32 {
+    P + 8 * (n * D) as u32
+}
+/// Query point parked after RESULT.
+const QUERY: u32 = rt::RESULT + 0x20;
+
+fn gen(v: Variant, p: &Params) -> String {
+    let dist = dist_addr(p.n);
+    let mut s = rt::prologue();
+    s.push_str(&rt::load_bounds("a3", "a4"));
+    s.push_str(&format!(
+        r#"
+        beqz a4, knn_skip
+        li   t0, {QUERY}
+        fld  fs2, 0(t0)
+        fld  fs3, 8(t0)
+        fld  fs4, 16(t0)
+        fld  fs5, 24(t0)
+        # a0 = &P[lo][0], a1 = &dist[lo]
+        slli t1, a3, {lp}
+        li   a0, {P}
+        add  a0, a0, t1
+        slli t1, a3, 3
+        li   a1, {dist}
+        add  a1, a1, t1
+"#,
+        lp = 3 + D.ilog2(),
+    ));
+    match v {
+        Variant::Baseline => s.push_str(
+            r#"
+        mv   a6, a4
+knn_loop:
+        fcvt.d.w fa0, zero
+        fld  ft0, 0(a0)
+        fsub.d fa1, ft0, fs2
+        fmadd.d fa0, fa1, fa1, fa0
+        fld  ft0, 8(a0)
+        fsub.d fa2, ft0, fs3
+        fmadd.d fa0, fa2, fa2, fa0
+        fld  ft0, 16(a0)
+        fsub.d fa3, ft0, fs4
+        fmadd.d fa0, fa3, fa3, fa0
+        fld  ft0, 24(a0)
+        fsub.d fa4, ft0, fs5
+        fmadd.d fa0, fa4, fa4, fa0
+        fsd  fa0, 0(a1)
+        addi a0, a0, 32
+        addi a1, a1, 8
+        addi a6, a6, -1
+        bnez a6, knn_loop
+"#,
+        ),
+        Variant::Ssr | Variant::SsrFrep => {
+            s.push_str(
+                r#"
+        # lane0: points — (d: 4,8), (i: cnt,32); lane1: distances (i: cnt,8)
+        li   t5, 3
+        csrw ssr0_bound0, t5
+        addi t5, a4, -1
+        csrw ssr0_bound1, t5
+        csrw ssr1_bound0, t5
+        li   t5, 8
+        csrw ssr0_stride0, t5
+        csrw ssr1_stride0, t5
+        li   t5, 32
+        csrw ssr0_stride1, t5
+        mv   t5, a0
+        csrw ssr0_rptr1, t5
+        mv   t5, a1
+        csrw ssr1_wptr0, t5
+        csrwi ssr, 1
+"#,
+            );
+            // All 8 ops are sequenceable FP compute (the first distance
+            // term uses fmul instead of an accumulator init — identical
+            // rounding to fma(d,d,0)).
+            let body = r#"
+        fsub.d fa1, ft0, fs2
+        fmul.d fa0, fa1, fa1
+        fsub.d fa2, ft0, fs3
+        fmadd.d fa0, fa2, fa2, fa0
+        fsub.d fa3, ft0, fs4
+        fmadd.d fa0, fa3, fa3, fa0
+        fsub.d fa4, ft0, fs5
+        fmadd.d ft1, fa4, fa4, fa0
+"#;
+            if v == Variant::Ssr {
+                s.push_str(&format!(
+                    r#"
+        mv   a6, a4
+knn_loop:{body}
+        addi a6, a6, -1
+        bnez a6, knn_loop
+        csrwi ssr, 0
+"#
+                ));
+            } else {
+                s.push_str(&format!(
+                    r#"
+        addi t0, a4, -1
+        frep.o t0, 8, 0, 0{body}
+        csrwi ssr, 0
+"#
+                ));
+            }
+        }
+    }
+    s.push_str("knn_skip:\n");
+    s.push_str(&rt::barrier());
+    s.push_str(&rt::epilogue());
+    s
+}
+
+fn inputs(p: &Params) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = rng_for(p);
+    let pts: Vec<f64> = (0..p.n * D).map(|_| rng.f64_sym(4.0)).collect();
+    let q: Vec<f64> = (0..D).map(|_| rng.f64_sym(4.0)).collect();
+    (pts, q)
+}
+
+/// Host reference: identical op order/fusion as every variant.
+pub fn reference(n: usize, pts: &[f64], q: &[f64]) -> Vec<f64> {
+    (0..n)
+        .map(|i| {
+            let mut acc = 0.0f64;
+            for d in 0..D {
+                let diff = pts[i * D + d] - q[d];
+                acc = diff.mul_add(diff, acc);
+            }
+            acc
+        })
+        .collect()
+}
+
+fn setup(cl: &mut Cluster, p: &Params) {
+    let (pts, q) = inputs(p);
+    cl.tcdm.write_f64_slice(P, &pts);
+    cl.tcdm.write_f64_slice(QUERY, &q);
+    rt::write_bounds(cl, p.cores, p.n);
+}
+
+fn check(cl: &Cluster, p: &Params) -> Result<f64, String> {
+    let (pts, q) = inputs(p);
+    let want = reference(p.n, &pts, &q);
+    let got = cl.tcdm.read_f64_slice(dist_addr(p.n), p.n);
+    allclose(&got, &want, 0.0, 0.0)
+}
+
+fn flops(p: &Params) -> u64 {
+    (3 * D * p.n) as u64
+}
+
+fn io(cl: &Cluster, p: &Params) -> KernelIo {
+    let (pts, q) = inputs(p);
+    KernelIo {
+        inputs: vec![("points", pts), ("query", q)],
+        output: cl.tcdm.read_f64_slice(dist_addr(p.n), p.n),
+    }
+}
+
+pub static KERNEL: KernelDef = KernelDef {
+    name: "knn",
+    variants: &[Variant::Baseline, Variant::Ssr, Variant::SsrFrep],
+    gen,
+    setup,
+    check,
+    flops,
+    io,
+};

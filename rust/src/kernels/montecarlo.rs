@@ -1,0 +1,364 @@
+//! Monte-Carlo π estimation (paper §4.1: "the integer core generates
+//! random numbers while the floating-point subsystem evaluates the
+//! function to be integrated … the pseudo-dual issue allows the two tasks
+//! to entirely overlap"). The RNG is xoshiro128++ (Blackman & Vigna [30]),
+//! implemented in integer assembly and mirrored bit-exactly by the host
+//! reference ([`crate::sim::proptest::Rng`]).
+//!
+//! Coordinates are built with the classic exponent trick: the integer core
+//! assembles `0x3FF00000_00000000 | (u >> 12) << 32 | (u << 20)` — a double
+//! in [1, 2) — so no float conversion is needed on the integer side.
+//! x' = x - 1 ∈ [0, 1). A sample is inside the quarter circle iff
+//! t = 1 - x'² - y'² > 0, evaluated with two fused `fnmsub` so every
+//! variant (and the host) computes bit-identical indicators.
+//!
+//! * baseline: per sample, generate + store + reload both coordinates,
+//!   evaluate, compare (`flt`), accumulate in an integer register;
+//! * +SSR: generate a whole block first, then stream it — as the paper
+//!   notes this *loses* the int/FP overlap ("the pure SSR version is
+//!   slower than the baseline");
+//! * +SSR+FREP: double-buffered blocks — the sequencer evaluates block k
+//!   (clamp trick, FP accumulator) while the integer core generates block
+//!   k+1: full pseudo-dual-issue overlap.
+
+use super::runtime as rt;
+use super::{rng_for, KernelDef, KernelIo, Params, Variant};
+use crate::cluster::Cluster;
+use crate::sim::proptest::Rng;
+
+const BUF: u32 = rt::DATA;
+
+/// Samples per FREP block (shrinks for tiny per-core chunks).
+fn block_size(per_core: usize) -> usize {
+    per_core.min(32)
+}
+
+/// xoshiro128++ step in assembly. State in s2..s5; result left in `out`.
+/// Clobbers t0, t1. Mirrors [`Rng::next_u32`] exactly.
+fn rng_asm(out: &str) -> String {
+    format!(
+        r#"
+        add  t0, s2, s5
+        slli t1, t0, 7
+        srli t0, t0, 25
+        or   t0, t0, t1
+        add  {out}, t0, s2
+        slli t1, s3, 9
+        xor  s4, s4, s2
+        xor  s5, s5, s3
+        xor  s3, s3, s4
+        xor  s2, s2, s5
+        xor  s4, s4, t1
+        slli t1, s5, 11
+        srli s5, s5, 21
+        or   s5, s5, t1
+"#
+    )
+}
+
+/// Build one [1,2) double from a fresh random and store it at `0(ptr)`;
+/// advances `ptr` by 8. Clobbers t0-t2, a7.
+fn gen_coord(ptr: &str) -> String {
+    let mut s = rng_asm("a7");
+    s.push_str(&format!(
+        r#"
+        slli t0, a7, 20          # low word: u << 20
+        sw   t0, 0({ptr})
+        srli t1, a7, 12          # high word mantissa bits
+        li   t2, 0x3FF00000
+        or   t1, t1, t2
+        sw   t1, 4({ptr})
+        addi {ptr}, {ptr}, 8
+"#
+    ));
+    s
+}
+
+fn gen(v: Variant, p: &Params) -> String {
+    assert!(p.n % p.cores == 0, "montecarlo needs n divisible by cores");
+    let per_core = p.n / p.cores;
+    let mut s = rt::prologue();
+    // Load per-core RNG seeds.
+    s.push_str(
+        r#"
+        li   t0, SEEDS
+        slli t1, s0, 4
+        add  t0, t0, t1
+        lw   s2, 0(t0)
+        lw   s3, 4(t0)
+        lw   s4, 8(t0)
+        lw   s5, 12(t0)
+"#,
+    );
+    match v {
+        Variant::Baseline => {
+            // fs4 = 1.0; scratch slot for the coordinate round-trip.
+            s.push_str(&format!(
+                r#"
+        li   t0, 1
+        fcvt.d.w fs4, t0
+        fcvt.d.w fs6, zero        # 0.0 for the compare
+        # reuse this core's 16-byte seed slot as coordinate scratch
+        # (the seeds are already in s2..s5)
+        li   a5, SEEDS
+        slli t0, s0, 4
+        add  a5, a5, t0
+        li   a6, {per_core}
+        li   a2, 0                # inside count
+mc_loop:
+        mv   a0, a5
+{gx}
+{gy}
+        fld  fa0, 0(a5)           # x
+        fld  fa1, 8(a5)           # y
+        fsub.d fa0, fa0, fs4      # x'
+        fsub.d fa1, fa1, fs4      # y'
+        fnmsub.d fa2, fa1, fa1, fs4   # 1 - y'^2
+        fnmsub.d fa2, fa0, fa0, fa2   # t
+        flt.d t3, fs6, fa2        # inside = (0 < t)
+        add  a2, a2, t3
+        addi a6, a6, -1
+        bnez a6, mc_loop
+        li   t0, COUNTS
+        slli t1, s0, 2
+        add  t0, t0, t1
+        sw   a2, 0(t0)
+"#,
+                gx = gen_coord("a0"),
+                gy = gen_coord("a0"),
+            ));
+        }
+        Variant::Ssr | Variant::SsrFrep => {
+            // FP constants: fs4 = 1.0, fs5 = 2^60 (clamp scale),
+            // fs6 = 0.0 (clamp floor).
+            s.push_str(
+                r#"
+        li   t0, 1
+        fcvt.d.w fs4, t0
+        li   t0, 0x40000000
+        fcvt.d.w fs5, t0
+        fmul.d fs5, fs5, fs5      # 2^60
+        fcvt.d.w fs6, zero
+        fcvt.d.w fa0, zero        # FP inside-count accumulator
+"#,
+            );
+            if v == Variant::Ssr {
+                let buf = "BIGBUF"; // patched below per hart via register math
+                let _ = buf;
+                s.push_str(&format!(
+                    r#"
+        # whole-chunk buffer: base + hart * per_core*16
+        li   a0, {base}
+        li   t0, {chunk_bytes}
+        mul  t1, s0, t0
+        add  a0, a0, t1
+        mv   a1, a0               # fill pointer
+        li   a6, {per_core}
+mc_fill:
+{gx}{gy}
+        addi a6, a6, -1
+        bnez a6, mc_fill
+        # stream the block
+        li   t5, {elems_m1}
+        csrw ssr0_bound0, t5
+        li   t5, 8
+        csrw ssr0_stride0, t5
+        mv   t5, a0
+        csrw ssr0_rptr0, t5
+        csrwi ssr, 1
+        li   a6, {per_core}
+mc_eval:
+        fsub.d fa1, ft0, fs4
+        fsub.d fa2, ft0, fs4
+        fnmsub.d fa3, fa2, fa2, fs4
+        fnmsub.d fa3, fa1, fa1, fa3
+        fmul.d fa3, fa3, fs5
+        fmax.d fa3, fa3, fs6
+        fmin.d fa3, fa3, fs4
+        fadd.d fa0, fa0, fa3
+        addi a6, a6, -1
+        bnez a6, mc_eval
+        csrwi ssr, 0
+"#,
+                    base = BUF,
+                    chunk_bytes = per_core * 16,
+                    elems_m1 = 2 * per_core - 1,
+                    gx = gen_coord("a1"),
+                    gy = gen_coord("a1"),
+                ));
+            } else {
+                let block = block_size(per_core);
+                assert!(per_core % block == 0, "montecarlo FREP needs n/cores % {block} == 0");
+                let nblocks = per_core / block;
+                s.push_str(&format!(
+                    r#"
+        # double buffer: a0 = buf0, a2 = buf1
+        li   a0, {base}
+        li   t0, {dbuf}
+        mul  t1, s0, t0
+        add  a0, a0, t1
+        addi a2, a0, {half}
+        # stream geometry is constant: 2*BLOCK doubles, stride 8
+        li   t5, {elems_m1}
+        csrw ssr0_bound0, t5
+        li   t5, 8
+        csrw ssr0_stride0, t5
+        # fill block 0 into buf0
+        mv   a1, a0
+        li   a6, {block}
+mc_fill0:
+{gx0}{gy0}
+        addi a6, a6, -1
+        bnez a6, mc_fill0
+        csrwi ssr, 1
+        li   s6, {nblocks}        # remaining blocks
+        mv   s7, a0               # current buffer
+        mv   s8, a2               # next buffer
+        li   s9, {blk_m1}
+mc_block:
+        # arm the stream for the current buffer (shadow regs make this
+        # safe while the previous stream is still draining)
+        mv   t5, s7
+        csrw ssr0_rptr0, t5
+        frep.o s9, 8, 0, 0
+        fsub.d fa1, ft0, fs4
+        fsub.d fa2, ft0, fs4
+        fnmsub.d fa3, fa2, fa2, fs4
+        fnmsub.d fa3, fa1, fa1, fa3
+        fmul.d fa3, fa3, fs5
+        fmax.d fa3, fa3, fs6
+        fmin.d fa3, fa3, fs4
+        fadd.d fa0, fa0, fa3
+        # pseudo-dual issue: while the sequencer evaluates, fill the next
+        # block with the integer core
+        addi s6, s6, -1
+        beqz s6, mc_lastblock
+        mv   a1, s8
+        li   a6, {block}
+mc_fillN:
+{gxn}{gyn}
+        addi a6, a6, -1
+        bnez a6, mc_fillN
+        # swap buffers
+        mv   t0, s7
+        mv   s7, s8
+        mv   s8, t0
+        j    mc_block
+mc_lastblock:
+        csrwi ssr, 0
+"#,
+                    base = BUF,
+                    dbuf = 2 * block * 16,
+                    half = block * 16,
+                    elems_m1 = 2 * block - 1,
+                    block = block,
+                    blk_m1 = block - 1,
+                    nblocks = nblocks,
+                    gx0 = gen_coord("a1"),
+                    gy0 = gen_coord("a1"),
+                    gxn = gen_coord("a1"),
+                    gyn = gen_coord("a1"),
+                ));
+            }
+            // FP accumulator → integer count.
+            s.push_str(
+                r#"
+        fcvt.w.d t3, fa0
+        li   t0, COUNTS
+        slli t1, s0, 2
+        add  t0, t0, t1
+        sw   t3, 0(t0)
+"#,
+            );
+        }
+    }
+    s.push_str(&rt::barrier());
+    s.push_str(&rt::epilogue());
+    s
+}
+
+/// Per-core RNG seeds (written to TCDM and replayed by the reference).
+fn seeds(p: &Params) -> Vec<[u32; 4]> {
+    let mut rng = rng_for(p);
+    (0..p.cores)
+        .map(|_| [rng.next_u32(), rng.next_u32(), rng.next_u32(), rng.next_u32()])
+        .collect()
+}
+
+fn setup(cl: &mut Cluster, p: &Params) {
+    for (c, s) in seeds(p).iter().enumerate() {
+        cl.tcdm.write_u32_slice(rt::SEEDS + 16 * c as u32, s);
+    }
+    rt::write_bounds(cl, p.cores, p.n);
+}
+
+/// Host reference: replay each core's RNG stream and indicator evaluation
+/// bit-exactly; returns per-core inside counts.
+pub fn reference(p: &Params) -> Vec<u32> {
+    let per_core = p.n / p.cores;
+    seeds(p)
+        .iter()
+        .map(|s| {
+            let mut rng = Rng::from_state(*s);
+            let mut count = 0u32;
+            for _ in 0..per_core {
+                let x = coord(rng.next_u32());
+                let y = coord(rng.next_u32());
+                let xp = x - 1.0;
+                let yp = y - 1.0;
+                let t = (-xp).mul_add(xp, (-yp).mul_add(yp, 1.0));
+                if t > 0.0 {
+                    count += 1;
+                }
+            }
+            count
+        })
+        .collect()
+}
+
+/// The [1,2) coordinate construction, mirroring the assembly bit ops.
+fn coord(u: u32) -> f64 {
+    let lo = (u << 20) as u64;
+    let hi = (u64::from(u >> 12) | 0x3FF0_0000) << 32;
+    f64::from_bits(hi | lo)
+}
+
+fn check(cl: &Cluster, p: &Params) -> Result<f64, String> {
+    let want = reference(p);
+    for (c, w) in want.iter().enumerate() {
+        let got = cl.tcdm.read(rt::COUNTS + 4 * c as u32, 4) as u32;
+        if got != *w {
+            return Err(format!("core {c}: count {got} != expected {w}"));
+        }
+    }
+    Ok(0.0)
+}
+
+fn flops(p: &Params) -> u64 {
+    // Per sample: 2 sub + 2 fnmsub (2 each) + clamp ops ≈ 8 dp-flops.
+    8 * p.n as u64
+}
+
+fn io(cl: &Cluster, p: &Params) -> KernelIo {
+    let want = reference(p);
+    let got: Vec<f64> =
+        (0..p.cores).map(|c| cl.tcdm.read(rt::COUNTS + 4 * c as u32, 4) as f64).collect();
+    let _ = want;
+    KernelIo {
+        inputs: vec![(
+            "seeds",
+            seeds(p).iter().flatten().map(|&x| f64::from(x)).collect(),
+        )],
+        output: got,
+    }
+}
+
+pub static KERNEL: KernelDef = KernelDef {
+    name: "montecarlo",
+    variants: &[Variant::Baseline, Variant::Ssr, Variant::SsrFrep],
+    gen,
+    setup,
+    check,
+    flops,
+    io,
+};

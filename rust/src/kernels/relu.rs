@@ -1,0 +1,132 @@
+//! ReLU `y[i] = max(x[i], 0)` (paper §4.1: the common neural-network
+//! activation, "blas 1"-like).
+//!
+//! * baseline: `fld` / `fmax` / `fsd` / bump / branch;
+//! * +SSR: read stream on `ft0`, write stream on `ft1`, 3-instruction loop;
+//! * +SSR+FREP: single sequenced `fmax` (no staggering needed — every
+//!   element is independent).
+
+use super::runtime as rt;
+use super::{allclose, rng_for, KernelDef, KernelIo, Params, Variant};
+use crate::cluster::Cluster;
+
+const X: u32 = rt::DATA;
+
+fn y_addr(n: usize) -> u32 {
+    X + 8 * n as u32
+}
+
+fn gen(v: Variant, p: &Params) -> String {
+    let y = y_addr(p.n);
+    let mut s = rt::prologue();
+    s.push_str(&rt::load_bounds("a3", "a4"));
+    match v {
+        Variant::Baseline => s.push_str(&format!(
+            r#"
+        slli t0, a3, 3
+        li   a0, {X}
+        add  a0, a0, t0
+        li   a1, {y}
+        add  a1, a1, t0
+        slli t1, a4, 3
+        add  a2, a0, t1
+        fcvt.d.w ft2, zero
+relu_loop:
+        fld  ft0, 0(a0)
+        fmax.d ft1, ft0, ft2
+        fsd  ft1, 0(a1)
+        addi a0, a0, 8
+        addi a1, a1, 8
+        bne  a0, a2, relu_loop
+"#
+        )),
+        Variant::Ssr => {
+            s.push_str(&cfg_streams(y));
+            s.push_str(
+                r#"
+        csrwi ssr, 1
+        fcvt.d.w ft2, zero
+        mv   t0, a4
+relu_loop:
+        fmax.d ft1, ft0, ft2
+        addi t0, t0, -1
+        bnez t0, relu_loop
+        csrwi ssr, 0
+"#,
+            );
+        }
+        Variant::SsrFrep => {
+            s.push_str(&cfg_streams(y));
+            s.push_str(
+                r#"
+        csrwi ssr, 1
+        fcvt.d.w ft2, zero
+        addi t0, a4, -1
+        frep.o t0, 1, 0, 0
+        fmax.d ft1, ft0, ft2
+        csrwi ssr, 0
+"#,
+            );
+        }
+    }
+    s.push_str(&rt::barrier());
+    s.push_str(&rt::epilogue());
+    s
+}
+
+fn cfg_streams(y: u32) -> String {
+    format!(
+        r#"
+        addi t5, a4, -1
+        csrw ssr0_bound0, t5
+        csrw ssr1_bound0, t5
+        li   t5, 8
+        csrw ssr0_stride0, t5
+        csrw ssr1_stride0, t5
+        slli t6, a3, 3
+        li   t5, {X}
+        add  t5, t5, t6
+        csrw ssr0_rptr0, t5
+        li   t5, {y}
+        add  t5, t5, t6
+        csrw ssr1_wptr0, t5
+"#
+    )
+}
+
+fn inputs(p: &Params) -> Vec<f64> {
+    let mut rng = rng_for(p);
+    (0..p.n).map(|_| rng.f64_sym(2.0)).collect()
+}
+
+fn setup(cl: &mut Cluster, p: &Params) {
+    cl.tcdm.write_f64_slice(X, &inputs(p));
+    rt::write_bounds(cl, p.cores, p.n);
+}
+
+fn check(cl: &Cluster, p: &Params) -> Result<f64, String> {
+    let want: Vec<f64> = inputs(p).iter().map(|&x| x.max(0.0)).collect();
+    let got = cl.tcdm.read_f64_slice(y_addr(p.n), p.n);
+    allclose(&got, &want, 0.0, 0.0)
+}
+
+fn flops(p: &Params) -> u64 {
+    p.n as u64
+}
+
+fn io(cl: &Cluster, p: &Params) -> KernelIo {
+    KernelIo {
+        inputs: vec![("x", inputs(p))],
+        output: cl.tcdm.read_f64_slice(y_addr(p.n), p.n),
+    }
+}
+
+pub static KERNEL: KernelDef = KernelDef {
+    name: "relu",
+    variants: &[Variant::Baseline, Variant::Ssr, Variant::SsrFrep],
+    gen,
+    setup,
+    check,
+    flops,
+    io,
+};

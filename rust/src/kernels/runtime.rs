@@ -1,0 +1,170 @@
+//! Shared software runtime for the kernel programs: program prologue and
+//! epilogue (measurement region markers), the hardware-barrier snippet,
+//! and the TCDM data layout conventions.
+//!
+//! Register conventions across all kernels:
+//! * `s0` — hart id (set by the prologue, never clobbered);
+//! * `s1` — peripheral base (set by the prologue, never clobbered).
+//!
+//! TCDM layout:
+//! ```text
+//! SCRATCH + 0x000 .. 0x100   per-core work bounds: {lo: u32, cnt: u32} × 32
+//! SCRATCH + 0x100 .. 0x200   per-core f64 partials
+//! SCRATCH + 0x200 .. 0x300   per-core RNG seeds (montecarlo)
+//! SCRATCH + 0x300 .. 0x380   per-core u32 outputs (montecarlo counts)
+//! SCRATCH + 0x380 .. 0x400   final result area
+//! DATA    = SCRATCH + 0x400  kernel arrays
+//! ```
+
+use crate::cluster::Cluster;
+use crate::mem::{PERIPH_BASE, TCDM_BASE};
+
+pub const SCRATCH: u32 = TCDM_BASE;
+pub const BOUNDS: u32 = SCRATCH;
+pub const PARTIALS: u32 = SCRATCH + 0x100;
+pub const SEEDS: u32 = SCRATCH + 0x200;
+pub const COUNTS: u32 = SCRATCH + 0x300;
+pub const RESULT: u32 = SCRATCH + 0x380;
+pub const DATA: u32 = SCRATCH + 0x400;
+
+/// Program prologue: constants, hart id, measurement-region start.
+pub fn prologue() -> String {
+    format!(
+        r#"
+        .equ PERIPH, {PERIPH_BASE:#x}
+        .equ SCRATCH, {SCRATCH:#x}
+        .equ BOUNDS, {BOUNDS:#x}
+        .equ PARTIALS, {PARTIALS:#x}
+        .equ SEEDS, {SEEDS:#x}
+        .equ COUNTS, {COUNTS:#x}
+        .equ RESULT, {RESULT:#x}
+        .equ DATA, {DATA:#x}
+        .text 0
+_start:
+        csrr s0, mhartid
+        li   s1, PERIPH
+        li   t0, 1
+        sw   t0, 24(s1)          # measurement region start
+"#
+    )
+}
+
+/// Program epilogue: drain everything, close the region, halt.
+pub fn epilogue() -> String {
+    r#"
+        fence
+        sw   zero, 24(s1)        # measurement region stop
+        ecall
+"#
+    .to_string()
+}
+
+/// Hardware barrier: all cores park on the BARRIER register load.
+/// A `fence` first makes each core's stores visible before the barrier.
+pub fn barrier() -> String {
+    r#"
+        fence
+        lw   zero, 12(s1)        # hardware barrier
+"#
+    .to_string()
+}
+
+/// Load this core's `(lo, cnt)` work bounds into the named registers.
+pub fn load_bounds(lo_reg: &str, cnt_reg: &str) -> String {
+    format!(
+        r#"
+        slli t6, s0, 3
+        li   t5, BOUNDS
+        add  t5, t5, t6
+        lw   {lo_reg}, 0(t5)
+        lw   {cnt_reg}, 4(t5)
+"#
+    )
+}
+
+/// Host side: write per-core `(lo, cnt)` element bounds, splitting `total`
+/// as evenly as possible across `cores` (the paper distributes work
+/// evenly, §4.3.1.1).
+pub fn write_bounds(cl: &mut Cluster, cores: usize, total: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let base = total / cores;
+    let rem = total % cores;
+    let mut lo = 0usize;
+    for c in 0..cores {
+        let cnt = base + usize::from(c < rem);
+        cl.tcdm.write_u32_slice(BOUNDS + 8 * c as u32, &[lo as u32, cnt as u32]);
+        out.push((lo, cnt));
+        lo += cnt;
+    }
+    out
+}
+
+/// Emit the `P-1` reduction adds core 0 performs over the per-core f64
+/// partials after the barrier, leaving the sum in `ft3` and storing it to
+/// RESULT.
+pub fn reduce_partials(cores: usize) -> String {
+    let mut s = String::from(
+        r#"
+        bnez s0, reduce_done
+        li   t0, PARTIALS
+        fld  ft3, 0(t0)
+"#,
+    );
+    for c in 1..cores {
+        s.push_str(&format!(
+            r#"
+        fld  ft4, {off}(t0)
+        fadd.d ft3, ft3, ft4
+"#,
+            off = 8 * c
+        ));
+    }
+    s.push_str(
+        r#"
+        li   t1, RESULT
+        fsd  ft3, 0(t1)
+reduce_done:
+"#,
+    );
+    s
+}
+
+/// SSR lane configuration snippet: program `lane` with up to 4 dims from
+/// `(bounds, strides)` (iteration counts, byte strides) and arm it with a
+/// read/write pointer. Bounds entries are element counts (>=1).
+pub fn cfg_ssr(lane: usize, dims: &[(u32, i32)], ptr_expr: &str, write: bool) -> String {
+    assert!((1..=4).contains(&dims.len()));
+    let mut s = String::new();
+    for (d, &(count, stride)) in dims.iter().enumerate() {
+        assert!(count >= 1);
+        s.push_str(&format!(
+            r#"
+        li   t5, {bound}
+        csrw ssr{lane}_bound{d}, t5
+        li   t5, {stride}
+        csrw ssr{lane}_stride{d}, t5
+"#,
+            bound = count - 1,
+        ));
+    }
+    let ptr_kind = if write { "wptr" } else { "rptr" };
+    s.push_str(&format!(
+        r#"
+        {ptr_expr}
+        csrw ssr{lane}_{ptr_kind}{top}, t5
+"#,
+        top = dims.len() - 1,
+    ));
+    s
+}
+
+/// SSR repeat setting (each element served `count` times).
+pub fn cfg_ssr_repeat(lane: usize, count: u32) -> String {
+    format!(
+        r#"
+        li   t5, {rep}
+        csrw ssr{lane}_repeat, t5
+"#,
+        rep = count - 1
+    )
+}

@@ -1,0 +1,56 @@
+//! # snitch-sim — reproduction of the Snitch pseudo dual-issue processor
+//!
+//! Library reproduction of Zaruba et al., *"Snitch: A tiny Pseudo Dual-Issue
+//! Processor for Area and Energy Efficient Execution of Floating-Point
+//! Intensive Workloads"* (IEEE Transactions on Computers, 2020).
+//!
+//! The crate provides, bottom-up:
+//!
+//! * [`isa`] — RV32IMAFD + Zicsr + the paper's custom `frep` encoding and
+//!   SSR configuration CSR space: decode, encode, disassembly.
+//! * [`asm`] — a two-pass assembler so the paper's hand-tuned kernels can be
+//!   written as assembly text without an external RISC-V toolchain.
+//! * [`core`] — the Snitch integer core: single-stage, single-issue,
+//!   scoreboarded, with an accelerator offload interface.
+//! * [`fpss`] — the decoupled floating-point subsystem: 32×64-bit FP
+//!   register file, pipelined FPU, dedicated FP LSU.
+//! * [`ssr`] — stream semantic registers: two streamer lanes with 4-D
+//!   affine address generation, credit-based queues and shadow
+//!   configuration registers.
+//! * [`frep`] — the FPU sequence buffer configured by the `frep`
+//!   instruction (inner/outer repetition, operand staggering).
+//! * [`muldiv`] — the per-hive shared integer multiply/divide unit.
+//! * [`mem`] — banked TCDM with conflict arbitration and per-bank atomic
+//!   units, plus the cluster-external memory.
+//! * [`icache`] — per-core L0 and shared L1 instruction caches.
+//! * [`cluster`] — core complex / hive / cluster assembly and the cluster
+//!   peripherals (performance counters, wake-up).
+//! * [`sim`] — the cycle engine and instruction-level trace.
+//! * [`energy`] — calibrated event-energy, power, and kGE area models.
+//! * [`vector`] — an Ara-like vector-lane timing model (Table 3 comparator).
+//! * [`kernels`] — the paper's eight microkernels in three variants
+//!   (baseline / +SSR / +SSR+FREP) as assembly program builders.
+//! * [`runtime`] — PJRT golden-model execution of the AOT-lowered JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) used to validate simulated results.
+//! * [`coordinator`] — experiment registry and sweep driver regenerating
+//!   every table and figure of the paper's evaluation.
+//!
+//! See `DESIGN.md` for the per-experiment index and the hardware→simulation
+//! substitution rationale.
+
+pub mod asm;
+pub mod cluster;
+pub mod coordinator;
+pub mod core;
+pub mod energy;
+pub mod fpss;
+pub mod frep;
+pub mod icache;
+pub mod isa;
+pub mod kernels;
+pub mod mem;
+pub mod muldiv;
+pub mod runtime;
+pub mod sim;
+pub mod ssr;
+pub mod vector;

@@ -1,0 +1,8 @@
+//! `repro` — the leader binary: CLI over the experiment coordinator.
+//!
+//! Everything runs from the self-contained rust binary; python only ever
+//! executes at build time (`make artifacts`).
+
+fn main() -> anyhow::Result<()> {
+    snitch_sim::coordinator::cli::main_cli()
+}

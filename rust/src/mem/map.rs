@@ -1,0 +1,96 @@
+//! Cluster address map.
+//!
+//! ```text
+//! 0x0000_0000 .. 0x0001_0000   instruction memory (behind L0/L1 I$)
+//! 0x1000_0000 .. +tcdm_size    TCDM (banked, software-managed L1)
+//! 0x2000_0000 .. +0x1000       cluster peripherals
+//! 0x8000_0000 .. +8 MiB        cluster-external memory (via AXI crossbar)
+//! ```
+
+/// Base of the instruction memory region.
+pub const IMEM_BASE: u32 = 0x0000_0000;
+/// Size of the instruction memory region.
+pub const IMEM_SIZE: u32 = 0x0001_0000;
+
+/// Base of the TCDM (paper: byte-wise addressable, banked scratchpad).
+pub const TCDM_BASE: u32 = 0x1000_0000;
+
+/// Base of the cluster peripheral window (§2.3.2).
+pub const PERIPH_BASE: u32 = 0x2000_0000;
+/// Size of the peripheral window.
+pub const PERIPH_SIZE: u32 = 0x1000;
+
+/// Cluster-external memory (DRAM behind the AXI crossbar).
+pub const EXT_BASE: u32 = 0x8000_0000;
+/// Size of the external memory model.
+pub const EXT_SIZE: u32 = 8 << 20;
+
+/// Peripheral register offsets (word addressed).
+pub mod periph {
+    /// RO: number of cores in the cluster.
+    pub const NUM_CORES: u32 = 0x00;
+    /// RO: TCDM start address.
+    pub const TCDM_START: u32 = 0x04;
+    /// RO: TCDM end address.
+    pub const TCDM_END: u32 = 0x08;
+    /// Hardware barrier: a load from this address stalls until every
+    /// participating core has an outstanding barrier load, then all return
+    /// simultaneously (modelled after the Snitch cluster's `hw_barrier`).
+    pub const BARRIER: u32 = 0x0C;
+    /// WO: wake-up register; writing a core bit-mask raises an IPI that
+    /// wakes those cores from `wfi` (§2.3.2).
+    pub const WAKEUP: u32 = 0x10;
+    /// RO: cluster cycle counter (low 32 bits).
+    pub const CYCLE: u32 = 0x14;
+    /// WO: per-core "kernel region" marker — writing 1 starts the measured
+    /// region for the writing core, 0 ends it. The harness reads the
+    /// per-core region cycle/instruction counters from the host side.
+    pub const PERF_REGION: u32 = 0x18;
+    /// RO: TCDM bank-conflict PMC (cluster-wide, cumulative).
+    pub const PMC_TCDM_CONFLICTS: u32 = 0x1C;
+    /// WO: end-of-computation; writing any value halts the writing core
+    /// (equivalent to `ecall`), used by the runtime epilogue.
+    pub const EOC: u32 = 0x20;
+}
+
+/// Which region an address falls into.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Region {
+    Imem,
+    Tcdm,
+    Periph,
+    Ext,
+    Unmapped,
+}
+
+/// Decode an address into its region. `tcdm_size` is the configured TCDM
+/// capacity in bytes.
+pub fn region(addr: u32, tcdm_size: u32) -> Region {
+    if (IMEM_BASE..IMEM_BASE + IMEM_SIZE).contains(&addr) {
+        Region::Imem
+    } else if (TCDM_BASE..TCDM_BASE + tcdm_size).contains(&addr) {
+        Region::Tcdm
+    } else if (PERIPH_BASE..PERIPH_BASE + PERIPH_SIZE).contains(&addr) {
+        Region::Periph
+    } else if (EXT_BASE..).contains(&addr) && addr - EXT_BASE < EXT_SIZE {
+        Region::Ext
+    } else {
+        Region::Unmapped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn region_decoding() {
+        assert_eq!(region(0x0, 128 << 10), Region::Imem);
+        assert_eq!(region(0x1000_0000, 128 << 10), Region::Tcdm);
+        assert_eq!(region(0x1000_0000 + (128 << 10) - 1, 128 << 10), Region::Tcdm);
+        assert_eq!(region(0x1000_0000 + (128 << 10), 128 << 10), Region::Unmapped);
+        assert_eq!(region(0x2000_0000, 128 << 10), Region::Periph);
+        assert_eq!(region(0x8000_0000, 128 << 10), Region::Ext);
+        assert_eq!(region(0x7000_0000, 128 << 10), Region::Unmapped);
+    }
+}

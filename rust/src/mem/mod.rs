@@ -1,0 +1,10 @@
+//! Memory subsystem: address map, banked TCDM with per-bank atomic units,
+//! and the cluster-external (AXI-attached) memory.
+
+pub mod ext;
+pub mod map;
+pub mod tcdm;
+
+pub use ext::ExtMemory;
+pub use map::*;
+pub use tcdm::{MemOp, Tcdm, TcdmRequest, TcdmResponse};

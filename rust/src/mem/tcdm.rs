@@ -1,0 +1,437 @@
+//! Tightly-coupled data memory: banked SRAM with a fully-connected,
+//! single-cycle crossbar and per-bank atomic units (paper §2.3.1).
+//!
+//! Timing model:
+//! * Each initiator *port* can hold one outstanding request.
+//! * Every cycle, each bank grants one pending request (round-robin over
+//!   ports); the data response becomes visible to the initiator on the
+//!   *next* cycle (single-cycle SRAM access).
+//! * Requests to a busy bank stay pending and are counted as conflict
+//!   cycles (the PMC exposed in the cluster peripherals and Table 1's
+//!   multi-core utilization drop).
+//! * Atomic operations occupy their bank for [`AMO_BANK_CYCLES`] cycles
+//!   (read, ALU, write back — the FSM of §2.3.1) and block other grants.
+
+use crate::isa::AmoOp;
+
+/// Cycles an atomic FSM occupies its bank (read-out, local ALU, write).
+pub const AMO_BANK_CYCLES: u32 = 3;
+
+/// A memory operation as seen by the TCDM.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MemOp {
+    /// Read `size` bytes (1, 2, 4 or 8).
+    Read { size: u8 },
+    /// Write the low `size` bytes of `data`.
+    Write { data: u64, size: u8 },
+    /// 32-bit atomic read-modify-write; returns the old value.
+    Amo { op: AmoOp, data: u32 },
+}
+
+/// A request submitted by an initiator port.
+#[derive(Debug, Clone, Copy)]
+pub struct TcdmRequest {
+    pub addr: u32,
+    pub op: MemOp,
+}
+
+/// A response delivered one cycle after the grant.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TcdmResponse {
+    /// Loaded data (zero for writes); for AMOs the *old* memory value, and
+    /// for `sc.w` the success code (0 = success, 1 = failure).
+    pub data: u64,
+    /// The request was a write (no register writeback needed).
+    pub is_write: bool,
+}
+
+/// Per-port pending slot.
+#[derive(Debug, Clone, Copy)]
+struct Pending {
+    req: TcdmRequest,
+    /// Set while an AMO holds the bank (response released when it ends).
+    amo_busy_until: Option<u64>,
+}
+
+/// The banked TCDM.
+pub struct Tcdm {
+    mem: Vec<u8>,
+    base: u32,
+    num_banks: usize,
+    /// log2 of bank word width in bytes (64-bit banks → 3).
+    bank_word_shift: u32,
+    pending: Vec<Option<Pending>>,
+    /// Responses that become visible at cycle `ready_at`.
+    resp: Vec<Option<(u64, TcdmResponse)>>,
+    /// Per-bank: cycle until which the bank is held by an atomic FSM.
+    bank_busy_until: Vec<u64>,
+    /// Round-robin pointer per bank.
+    rr: Vec<usize>,
+    /// Reservation set for LR/SC: one reservation per port (address).
+    reservations: Vec<Option<u32>>,
+    /// PMC: cycles a pending request could not be granted (bank conflict).
+    pub conflict_cycles: u64,
+    /// PMC: total granted accesses.
+    pub accesses: u64,
+    /// PMC: granted accesses per bank (for conflict analysis).
+    pub bank_accesses: Vec<u64>,
+    now: u64,
+    // ---- arbiter scratch (perf: avoids per-cycle allocation) ----
+    grant_best: Vec<Option<(usize, usize)>>,
+    grant_contenders: Vec<u32>,
+}
+
+impl Tcdm {
+    /// `size` bytes of storage in `num_banks` 64-bit banks serving
+    /// `num_ports` initiator ports.
+    pub fn new(base: u32, size: u32, num_banks: usize, num_ports: usize) -> Tcdm {
+        assert!(num_banks.is_power_of_two(), "bank count must be a power of two");
+        Tcdm {
+            mem: vec![0; size as usize],
+            base,
+            num_banks,
+            bank_word_shift: 3,
+            pending: vec![None; num_ports],
+            resp: vec![None; num_ports],
+            bank_busy_until: vec![0; num_banks],
+            rr: vec![0; num_banks],
+            reservations: vec![None; num_ports],
+            conflict_cycles: 0,
+            accesses: 0,
+            bank_accesses: vec![0; num_banks],
+            now: 0,
+            grant_best: vec![None; num_banks],
+            grant_contenders: vec![0; num_banks],
+        }
+    }
+
+    pub fn size(&self) -> u32 {
+        self.mem.len() as u32
+    }
+
+    pub fn num_ports(&self) -> usize {
+        self.pending.len()
+    }
+
+    fn bank_of(&self, addr: u32) -> usize {
+        (((addr - self.base) >> self.bank_word_shift) as usize) & (self.num_banks - 1)
+    }
+
+    /// True if `port` can accept a new request this cycle.
+    pub fn port_free(&self, port: usize) -> bool {
+        self.pending[port].is_none() && self.resp[port].is_none()
+    }
+
+    /// Submit a request on `port`. Panics if the port is busy (callers must
+    /// check [`Tcdm::port_free`]).
+    pub fn submit(&mut self, port: usize, req: TcdmRequest) {
+        debug_assert!(self.port_free(port), "port {port} busy");
+        debug_assert!(
+            req.addr >= self.base && req.addr - self.base < self.mem.len() as u32,
+            "TCDM address {:#x} out of range",
+            req.addr
+        );
+        self.pending[port] = Some(Pending { req, amo_busy_until: None });
+    }
+
+    /// Take the response for `port` if one is visible at cycle `now`.
+    pub fn take_response(&mut self, port: usize, now: u64) -> Option<TcdmResponse> {
+        match self.resp[port] {
+            Some((ready_at, r)) if ready_at <= now => {
+                self.resp[port] = None;
+                Some(r)
+            }
+            _ => None,
+        }
+    }
+
+    /// Advance one cycle: arbitrate banks and perform granted accesses.
+    ///
+    /// Perf note (§Perf): a single O(ports) sweep groups contenders by
+    /// bank and picks the round-robin winner by rr-distance, instead of
+    /// the original O(banks × ports) scan — the TCDM arbiter is the
+    /// hottest loop of the whole-cluster cycle.
+    pub fn step(&mut self, now: u64) {
+        self.now = now;
+        let nports = self.pending.len();
+        // Per-bank best contender (by round-robin distance) + count.
+        // Reused scratch to avoid per-cycle allocation.
+        if self.grant_best.len() != self.num_banks {
+            self.grant_best = vec![None; self.num_banks];
+            self.grant_contenders = vec![0; self.num_banks];
+        }
+        // At most one bank per port can be touched per cycle.
+        debug_assert!(nports <= 128);
+        let mut touched: [usize; 128] = [0; 128];
+        let mut ntouched = 0usize;
+        for p in 0..nports {
+            let Some(pd) = &self.pending[p] else { continue };
+            if pd.amo_busy_until.is_some() {
+                continue;
+            }
+            let bank = self.bank_of(pd.req.addr);
+            if self.bank_busy_until[bank] > now {
+                // Bank held by an AMO FSM: request conflicts this cycle.
+                self.conflict_cycles += 1;
+                continue;
+            }
+            if self.grant_contenders[bank] == 0 {
+                touched[ntouched] = bank;
+                ntouched += 1;
+            }
+            self.grant_contenders[bank] += 1;
+            let dist = (p + nports - self.rr[bank]) % nports;
+            match self.grant_best[bank] {
+                Some((_, best_dist)) if best_dist <= dist => {}
+                _ => self.grant_best[bank] = Some((p, dist)),
+            }
+        }
+        for &bank in &touched[..ntouched] {
+            let contenders = std::mem::take(&mut self.grant_contenders[bank]);
+            let Some((p, _)) = self.grant_best[bank].take() else { continue };
+            {
+                self.rr[bank] = (p + 1) % nports;
+                self.conflict_cycles += (contenders - 1) as u64;
+                self.accesses += 1;
+                self.bank_accesses[bank] += 1;
+                let req = self.pending[p].as_ref().unwrap().req;
+                match req.op {
+                    MemOp::Read { size } => {
+                        let data = self.read(req.addr, size);
+                        self.resp[p] = Some((now + 1, TcdmResponse { data, is_write: false }));
+                        self.pending[p] = None;
+                    }
+                    MemOp::Write { data, size } => {
+                        self.write(req.addr, data, size);
+                        // Stores are fire-and-forget from the core's view,
+                        // but the port frees only after the grant.
+                        self.resp[p] = Some((now + 1, TcdmResponse { data: 0, is_write: true }));
+                        self.pending[p] = None;
+                        // A plain store to a reserved address kills
+                        // other ports' reservations.
+                        self.clobber_reservations(req.addr, p);
+                    }
+                    MemOp::Amo { op, data } => {
+                        // The FSM performs the access over AMO_BANK_CYCLES;
+                        // the response is released when it finishes.
+                        let old = self.amo_execute(p, req.addr, op, data);
+                        let done = now + u64::from(AMO_BANK_CYCLES);
+                        self.bank_busy_until[bank] = done;
+                        self.resp[p] =
+                            Some((done, TcdmResponse { data: u64::from(old), is_write: false }));
+                        self.pending[p] = None;
+                    }
+                }
+            }
+        }
+    }
+
+    fn amo_execute(&mut self, port: usize, addr: u32, op: AmoOp, data: u32) -> u32 {
+        let old = self.read(addr, 4) as u32;
+        let new = match op {
+            AmoOp::LrW => {
+                self.reservations[port] = Some(addr);
+                return old;
+            }
+            AmoOp::ScW => {
+                if self.reservations[port] == Some(addr) {
+                    self.reservations[port] = None;
+                    self.write(addr, u64::from(data), 4);
+                    self.clobber_reservations(addr, port);
+                    return 0; // success
+                }
+                return 1; // failure
+            }
+            AmoOp::AmoSwapW => data,
+            AmoOp::AmoAddW => old.wrapping_add(data),
+            AmoOp::AmoXorW => old ^ data,
+            AmoOp::AmoAndW => old & data,
+            AmoOp::AmoOrW => old | data,
+            AmoOp::AmoMinW => (old as i32).min(data as i32) as u32,
+            AmoOp::AmoMaxW => (old as i32).max(data as i32) as u32,
+            AmoOp::AmoMinuW => old.min(data),
+            AmoOp::AmoMaxuW => old.max(data),
+        };
+        self.write(addr, u64::from(new), 4);
+        self.clobber_reservations(addr, port);
+        old
+    }
+
+    fn clobber_reservations(&mut self, addr: u32, except_port: usize) {
+        for (p, r) in self.reservations.iter_mut().enumerate() {
+            if p != except_port && *r == Some(addr) {
+                *r = None;
+            }
+        }
+    }
+
+    // ----- direct (host-side / zero-time) access, used for program load
+    // and golden-model comparison -----
+
+    /// Zero-time read of `size` bytes (little-endian).
+    pub fn read(&self, addr: u32, size: u8) -> u64 {
+        let o = (addr - self.base) as usize;
+        let mut v = 0u64;
+        for i in (0..size as usize).rev() {
+            v = (v << 8) | u64::from(self.mem[o + i]);
+        }
+        v
+    }
+
+    /// Zero-time write of the low `size` bytes of `data`.
+    pub fn write(&mut self, addr: u32, data: u64, size: u8) {
+        let o = (addr - self.base) as usize;
+        for i in 0..size as usize {
+            self.mem[o + i] = (data >> (8 * i)) as u8;
+        }
+    }
+
+    /// Host-side helper: read an `f64` array.
+    pub fn read_f64_slice(&self, addr: u32, n: usize) -> Vec<f64> {
+        (0..n).map(|i| f64::from_bits(self.read(addr + 8 * i as u32, 8))).collect()
+    }
+
+    /// Host-side helper: write an `f64` array.
+    pub fn write_f64_slice(&mut self, addr: u32, data: &[f64]) {
+        for (i, v) in data.iter().enumerate() {
+            self.write(addr + 8 * i as u32, v.to_bits(), 8);
+        }
+    }
+
+    /// Host-side helper: write a `u32` array.
+    pub fn write_u32_slice(&mut self, addr: u32, data: &[u32]) {
+        for (i, v) in data.iter().enumerate() {
+            self.write(addr + 4 * i as u32, u64::from(*v), 4);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk() -> Tcdm {
+        Tcdm::new(0x1000_0000, 128 << 10, 32, 4)
+    }
+
+    #[test]
+    fn read_after_write_roundtrip() {
+        let mut t = mk();
+        t.write(0x1000_0010, 0x1122_3344_5566_7788, 8);
+        assert_eq!(t.read(0x1000_0010, 8), 0x1122_3344_5566_7788);
+        assert_eq!(t.read(0x1000_0010, 4), 0x5566_7788);
+        assert_eq!(t.read(0x1000_0014, 4), 0x1122_3344);
+        assert_eq!(t.read(0x1000_0011, 1), 0x77);
+    }
+
+    #[test]
+    fn single_request_latency_one() {
+        let mut t = mk();
+        t.write(0x1000_0000, 42, 8);
+        t.submit(0, TcdmRequest { addr: 0x1000_0000, op: MemOp::Read { size: 8 } });
+        t.step(0);
+        assert_eq!(t.take_response(0, 0), None, "data not visible in grant cycle");
+        t.step(1);
+        assert_eq!(t.take_response(0, 1), Some(TcdmResponse { data: 42, is_write: false }));
+    }
+
+    #[test]
+    fn bank_conflict_serializes() {
+        let mut t = mk();
+        // Same bank: same word-aligned address from two ports.
+        t.submit(0, TcdmRequest { addr: 0x1000_0000, op: MemOp::Read { size: 8 } });
+        t.submit(1, TcdmRequest { addr: 0x1000_0000 + 32 * 8, op: MemOp::Read { size: 8 } });
+        t.step(0);
+        t.step(1);
+        let r0 = t.take_response(0, 1).is_some();
+        let r1 = t.take_response(1, 1).is_some();
+        assert!(r0 ^ r1, "exactly one granted in first cycle");
+        assert_eq!(t.conflict_cycles, 1);
+        t.step(2);
+        assert!(t.take_response(0, 2).is_some() || t.take_response(1, 2).is_some());
+    }
+
+    #[test]
+    fn different_banks_parallel() {
+        let mut t = mk();
+        t.submit(0, TcdmRequest { addr: 0x1000_0000, op: MemOp::Read { size: 8 } });
+        t.submit(1, TcdmRequest { addr: 0x1000_0008, op: MemOp::Read { size: 8 } });
+        t.step(0);
+        t.step(1);
+        assert!(t.take_response(0, 1).is_some());
+        assert!(t.take_response(1, 1).is_some());
+        assert_eq!(t.conflict_cycles, 0);
+    }
+
+    #[test]
+    fn amo_add_and_bank_blocking() {
+        let mut t = mk();
+        t.write(0x1000_0000, 5, 4);
+        t.submit(0, TcdmRequest { addr: 0x1000_0000, op: MemOp::Amo { op: AmoOp::AmoAddW, data: 7 } });
+        t.step(0);
+        // Bank is held for AMO_BANK_CYCLES; a read to the same bank waits.
+        t.submit(1, TcdmRequest { addr: 0x1000_0000, op: MemOp::Read { size: 4 } });
+        t.step(1);
+        assert!(t.take_response(1, 1).is_none());
+        t.step(2);
+        t.step(3);
+        assert_eq!(t.take_response(0, 3).unwrap().data, 5, "AMO returns old value");
+        t.step(4);
+        assert_eq!(t.take_response(1, 4).unwrap().data, 12, "read sees updated value");
+    }
+
+    #[test]
+    fn lr_sc_success_and_failure() {
+        let mut t = mk();
+        t.write(0x1000_0040, 1, 4);
+        // LR on port 0.
+        t.submit(0, TcdmRequest { addr: 0x1000_0040, op: MemOp::Amo { op: AmoOp::LrW, data: 0 } });
+        for c in 0..4 {
+            t.step(c);
+        }
+        assert_eq!(t.take_response(0, 3).unwrap().data, 1);
+        // SC succeeds.
+        t.submit(0, TcdmRequest { addr: 0x1000_0040, op: MemOp::Amo { op: AmoOp::ScW, data: 9 } });
+        for c in 4..8 {
+            t.step(c);
+        }
+        assert_eq!(t.take_response(0, 7).unwrap().data, 0, "sc success code");
+        assert_eq!(t.read(0x1000_0040, 4), 9);
+        // SC without reservation fails.
+        t.submit(0, TcdmRequest { addr: 0x1000_0040, op: MemOp::Amo { op: AmoOp::ScW, data: 11 } });
+        for c in 8..12 {
+            t.step(c);
+        }
+        assert_eq!(t.take_response(0, 11).unwrap().data, 1, "sc failure code");
+        assert_eq!(t.read(0x1000_0040, 4), 9, "failed sc does not write");
+    }
+
+    #[test]
+    fn sc_broken_by_other_port_write() {
+        let mut t = mk();
+        t.submit(0, TcdmRequest { addr: 0x1000_0040, op: MemOp::Amo { op: AmoOp::LrW, data: 0 } });
+        for c in 0..4 {
+            t.step(c);
+        }
+        t.take_response(0, 3);
+        // Port 1 stores to the reserved address.
+        t.submit(1, TcdmRequest { addr: 0x1000_0040, op: MemOp::Write { data: 3, size: 4 } });
+        for c in 4..6 {
+            t.step(c);
+        }
+        t.take_response(1, 5);
+        t.submit(0, TcdmRequest { addr: 0x1000_0040, op: MemOp::Amo { op: AmoOp::ScW, data: 9 } });
+        for c in 6..10 {
+            t.step(c);
+        }
+        assert_eq!(t.take_response(0, 9).unwrap().data, 1, "reservation was clobbered");
+    }
+
+    #[test]
+    fn f64_slice_helpers() {
+        let mut t = mk();
+        let data = [1.0, -2.5, 3.25];
+        t.write_f64_slice(0x1000_0100, &data);
+        assert_eq!(t.read_f64_slice(0x1000_0100, 3), data);
+    }
+}

@@ -1,0 +1,255 @@
+//! Shared integer multiply/divide unit (paper §2.1.1.3).
+//!
+//! All cores of a hive share one unit over the accelerator interface:
+//! * a fully pipelined 32-bit multiplier — 2-cycle latency, 1/cycle
+//!   throughput;
+//! * a bit-serial divider with preliminary operand shifting for early-out —
+//!   up to 32 cycles, non-pipelined.
+//!
+//! Requests are arbitrated round-robin among the hive's cores.
+
+use crate::isa::MulDivOp;
+
+/// A multiply/divide request from a core.
+#[derive(Debug, Clone, Copy)]
+pub struct MulDivReq {
+    pub op: MulDivOp,
+    pub rs1: u32,
+    pub rs2: u32,
+    /// Destination register index, passed back with the response.
+    pub rd: u8,
+}
+
+/// Completed response to be written back over the accelerator interface.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MulDivResp {
+    pub rd: u8,
+    pub value: u32,
+}
+
+/// Architectural result of a mul/div operation.
+pub fn muldiv_result(op: MulDivOp, a: u32, b: u32) -> u32 {
+    match op {
+        MulDivOp::Mul => a.wrapping_mul(b),
+        MulDivOp::Mulh => ((i64::from(a as i32) * i64::from(b as i32)) >> 32) as u32,
+        MulDivOp::Mulhsu => ((i64::from(a as i32) * i64::from(b)) >> 32) as u32,
+        MulDivOp::Mulhu => ((u64::from(a) * u64::from(b)) >> 32) as u32,
+        MulDivOp::Div => {
+            if b == 0 {
+                u32::MAX
+            } else if a == 0x8000_0000 && b == u32::MAX {
+                0x8000_0000
+            } else {
+                ((a as i32).wrapping_div(b as i32)) as u32
+            }
+        }
+        MulDivOp::Divu => {
+            if b == 0 {
+                u32::MAX
+            } else {
+                a / b
+            }
+        }
+        MulDivOp::Rem => {
+            if b == 0 {
+                a
+            } else if a == 0x8000_0000 && b == u32::MAX {
+                0
+            } else {
+                ((a as i32).wrapping_rem(b as i32)) as u32
+            }
+        }
+        MulDivOp::Remu => {
+            if b == 0 {
+                a
+            } else {
+                a % b
+            }
+        }
+    }
+}
+
+/// Cycle count of the bit-serial divider for the given operands: the
+/// preliminary operand shift skips leading zero bits of the dividend
+/// (early-out), capped to the full 32-cycle worst case.
+pub fn div_cycles(a: u32, b: u32) -> u64 {
+    let _ = b;
+    let significant = 32 - a.leading_zeros();
+    u64::from(significant.max(1)) + 2 // +2: unpack/pack stages
+}
+
+struct InFlight {
+    core: usize,
+    resp: MulDivResp,
+    ready_at: u64,
+}
+
+/// The shared unit.
+pub struct MulDivUnit {
+    num_cores: usize,
+    rr: usize,
+    /// Requests waiting per core (one slot each — the core stalls at
+    /// offload until accepted).
+    waiting: Vec<Option<MulDivReq>>,
+    inflight: Vec<InFlight>,
+    /// Divider busy until this cycle (non-pipelined).
+    div_busy_until: u64,
+    /// PMCs.
+    pub mul_count: u64,
+    pub div_count: u64,
+    pub contention_cycles: u64,
+}
+
+impl MulDivUnit {
+    pub fn new(num_cores: usize) -> MulDivUnit {
+        MulDivUnit {
+            num_cores,
+            rr: 0,
+            waiting: (0..num_cores).map(|_| None).collect(),
+            inflight: Vec::new(),
+            div_busy_until: 0,
+            mul_count: 0,
+            div_count: 0,
+            contention_cycles: 0,
+        }
+    }
+
+    /// True if `core` can place a request this cycle.
+    pub fn can_accept(&self, core: usize) -> bool {
+        self.waiting[core].is_none()
+    }
+
+    /// Place a request (the core's offload fires once accepted).
+    pub fn submit(&mut self, core: usize, req: MulDivReq) {
+        debug_assert!(self.can_accept(core));
+        self.waiting[core] = Some(req);
+    }
+
+    /// Advance one cycle: arbitrate one waiting request into execution.
+    pub fn step(&mut self, now: u64) {
+        // Count contention: more than one waiting request this cycle.
+        let waiting = self.waiting.iter().filter(|w| w.is_some()).count();
+        if waiting > 1 {
+            self.contention_cycles += (waiting - 1) as u64;
+        }
+        // Round-robin pick. Multiplier accepts every cycle (pipelined);
+        // divider only when idle.
+        for i in 0..self.num_cores {
+            let c = (self.rr + i) % self.num_cores;
+            let Some(req) = self.waiting[c] else { continue };
+            let is_mul = req.op.is_mul();
+            if !is_mul && self.div_busy_until > now {
+                continue; // divider busy; try another core's mul
+            }
+            let value = muldiv_result(req.op, req.rs1, req.rs2);
+            let ready_at = if is_mul {
+                self.mul_count += 1;
+                now + 2
+            } else {
+                self.div_count += 1;
+                let lat = div_cycles(req.rs1, req.rs2);
+                self.div_busy_until = now + lat;
+                now + lat
+            };
+            self.inflight.push(InFlight { core: c, resp: MulDivResp { rd: req.rd, value }, ready_at });
+            self.waiting[c] = None;
+            self.rr = (c + 1) % self.num_cores;
+            if !is_mul {
+                break; // only one grant into the divider
+            }
+            break; // one grant per cycle over the shared request path
+        }
+    }
+
+    /// Take a completed response for `core`, if any.
+    pub fn take_response(&mut self, core: usize, now: u64) -> Option<MulDivResp> {
+        let idx = self
+            .inflight
+            .iter()
+            .position(|f| f.core == core && f.ready_at <= now)?;
+        Some(self.inflight.swap_remove(idx).resp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::proptest::Rng;
+
+    #[test]
+    fn results_match_reference() {
+        let mut rng = Rng::new(123);
+        for _ in 0..20_000 {
+            let a = rng.next_u32();
+            let b = if rng.below(8) == 0 { 0 } else { rng.next_u32() };
+            assert_eq!(muldiv_result(MulDivOp::Mul, a, b), a.wrapping_mul(b));
+            assert_eq!(
+                muldiv_result(MulDivOp::Mulhu, a, b),
+                ((u64::from(a) * u64::from(b)) >> 32) as u32
+            );
+            if b != 0 {
+                assert_eq!(muldiv_result(MulDivOp::Divu, a, b), a / b);
+                assert_eq!(muldiv_result(MulDivOp::Remu, a, b), a % b);
+            } else {
+                assert_eq!(muldiv_result(MulDivOp::Divu, a, b), u32::MAX);
+                assert_eq!(muldiv_result(MulDivOp::Remu, a, b), a);
+            }
+        }
+    }
+
+    #[test]
+    fn riscv_division_edge_cases() {
+        // Spec-mandated: div by zero → -1; overflow → MIN.
+        assert_eq!(muldiv_result(MulDivOp::Div, 7, 0), u32::MAX);
+        assert_eq!(muldiv_result(MulDivOp::Rem, 7, 0), 7);
+        assert_eq!(muldiv_result(MulDivOp::Div, 0x8000_0000, u32::MAX), 0x8000_0000);
+        assert_eq!(muldiv_result(MulDivOp::Rem, 0x8000_0000, u32::MAX), 0);
+    }
+
+    #[test]
+    fn mul_two_cycle_latency() {
+        let mut u = MulDivUnit::new(2);
+        u.submit(0, MulDivReq { op: MulDivOp::Mul, rs1: 6, rs2: 7, rd: 5 });
+        u.step(0);
+        assert_eq!(u.take_response(0, 0), None);
+        assert_eq!(u.take_response(0, 1), None);
+        assert_eq!(u.take_response(0, 2), Some(MulDivResp { rd: 5, value: 42 }));
+    }
+
+    #[test]
+    fn div_early_out_depends_on_magnitude() {
+        assert!(div_cycles(3, 1) < div_cycles(0x8000_0000, 1));
+        assert!(div_cycles(0xFFFF_FFFF, 3) <= 34);
+    }
+
+    #[test]
+    fn divider_blocks_second_division() {
+        let mut u = MulDivUnit::new(2);
+        u.submit(0, MulDivReq { op: MulDivOp::Divu, rs1: u32::MAX, rs2: 3, rd: 1 });
+        u.step(0);
+        u.submit(1, MulDivReq { op: MulDivOp::Divu, rs1: 10, rs2: 2, rd: 2 });
+        u.step(1);
+        // Core 1's division cannot start while the divider is busy.
+        assert!(u.take_response(1, 5).is_none());
+        // After the first division retires, the second proceeds.
+        let lat = div_cycles(u32::MAX, 3);
+        assert!(u.take_response(0, lat).is_some());
+        for c in 2..=lat + 1 {
+            u.step(c);
+        }
+        let lat2 = div_cycles(10, 2);
+        assert!(u.take_response(1, lat + 1 + lat2).is_some());
+    }
+
+    #[test]
+    fn round_robin_fairness() {
+        let mut u = MulDivUnit::new(2);
+        u.submit(0, MulDivReq { op: MulDivOp::Mul, rs1: 1, rs2: 1, rd: 1 });
+        u.submit(1, MulDivReq { op: MulDivOp::Mul, rs1: 2, rs2: 2, rd: 2 });
+        u.step(0); // grants one (say core 0), rr moves past it
+        u.step(1); // grants the other
+        assert!(u.take_response(0, 3).is_some());
+        assert!(u.take_response(1, 3).is_some());
+        assert!(u.contention_cycles >= 1);
+    }
+}

@@ -1,0 +1,3 @@
+//! Cycle engine, trace infrastructure, and in-tree test utilities.
+
+pub mod proptest;

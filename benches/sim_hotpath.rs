@@ -1,11 +1,15 @@
 //! Bench: simulator hot-path throughput (Mcycles/s of simulated time) —
-//! the metric the §Perf optimization pass tracks.
+//! the metric the §Perf optimization pass tracks — plus sweep-driver
+//! throughput (serial vs multi-worker coordinator execution over the
+//! Table 2 experiment set), the metric the `--jobs` parallelization
+//! improves.
 
 use std::time::Instant;
 
+use snitch_sim::coordinator::{self, Experiment};
 use snitch_sim::kernels::{self, Params, Variant};
 
-fn main() {
+fn hotpath() {
     for (name, v, n, cores) in [
         ("dgemm/frep/8c", Variant::SsrFrep, 64usize, 8usize),
         ("dgemm/base/8c", Variant::Baseline, 64, 8),
@@ -30,4 +34,44 @@ fn main() {
             sim_cycles / reps
         );
     }
+}
+
+/// Sweep throughput: the Table 2 experiment set through the coordinator's
+/// bounded worker pool at increasing widths. Simulated work is identical
+/// in every row (run_sweep results are order- and content-deterministic),
+/// so wall-clock differences are pure scheduling win.
+fn sweep_throughput() {
+    let exps: Vec<Experiment> = coordinator::table2_experiments();
+    let auto = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut widths = vec![1usize, 2, 4];
+    // run_sweep caps the pool at one worker per experiment; dedup on the
+    // effective width so every printed row names the pool that really ran.
+    let auto = coordinator::effective_workers(&exps, auto);
+    if !widths.contains(&auto) {
+        widths.push(auto);
+    }
+    let mut serial_dt = None;
+    for &jobs in &widths {
+        let t = Instant::now();
+        let runs = coordinator::run_sweep(&exps, jobs);
+        let dt = t.elapsed().as_secs_f64();
+        let sim_cycles: u64 = runs.iter().map(|r| r.stats.cycles).sum();
+        let speedup = match serial_dt {
+            None => {
+                serial_dt = Some(dt);
+                1.0
+            }
+            Some(s) => s / dt,
+        };
+        println!(
+            "[bench] sweep/table2 --jobs {jobs}: {dt:.2}s wall, {:.2} Msimcycles/s, {speedup:.2}x vs serial ({} experiments, {sim_cycles} sim cycles)",
+            sim_cycles as f64 / dt / 1e6,
+            exps.len(),
+        );
+    }
+}
+
+fn main() {
+    hotpath();
+    sweep_throughput();
 }

@@ -14,8 +14,17 @@ use snitch_sim::energy::model::{self, EnergyModel};
 use snitch_sim::kernels::{self, Params, Variant};
 use snitch_sim::runtime::GoldenRuntime;
 
-fn main() -> anyhow::Result<()> {
-    let rt = GoldenRuntime::new()?;
+fn main() -> snitch_sim::Result<()> {
+    // PJRT is optional (the `golden` feature): without it, the simulated
+    // runs still execute and are checked against the host reference —
+    // only the cross-check against the compiled HLO is skipped.
+    let rt = match GoldenRuntime::new() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            println!("note: golden validation skipped ({e})\n");
+            None
+        }
+    };
     let cfg = ClusterConfig::default();
     let em = EnergyModel::default();
     let k = kernels::kernel_by_name("dgemm").unwrap();
@@ -23,20 +32,25 @@ fn main() -> anyhow::Result<()> {
     let mut base_cycles = 0u64;
     for v in [Variant::Baseline, Variant::Ssr, Variant::SsrFrep] {
         let p = Params::new(32, 8);
-        let r = kernels::run_kernel(k, v, &p).map_err(anyhow::Error::msg)?;
+        let r = kernels::run_kernel(k, v, &p)?;
         if v == Variant::Baseline {
             base_cycles = r.cycles;
         }
         // Golden validation: feed the simulator's inputs to the PJRT
         // executable compiled from the Pallas kernel, compare outputs.
-        let io = (k.io)(&r.cluster, &p);
-        let golden_err = rt.validate("dgemm", 32, &io, 1e-11, 1e-12)?;
+        let golden = match &rt {
+            Some(rt) => {
+                let io = (k.io)(&r.cluster, &p);
+                format!("golden err {:.1e}", rt.validate("dgemm", 32, &io, 1e-11, 1e-12)?)
+            }
+            None => format!("host err {:.1e}", r.max_err),
+        };
         let power = model::power_report(&r.stats, &cfg, &em);
         let flops: u64 = r.stats.cores.iter().map(|c| c.flops).sum();
         let eff = model::efficiency_gflops_w(flops, r.stats.cycles, power.total());
         let (fpu, _, _, _) = r.stats.region_utils();
         println!(
-            "{:10} {:7} cycles  speed-up {:.2}x  FPU util {fpu:.2}  {:6.1} mW  {:5.1} DPGflop/s/W  golden err {golden_err:.1e}",
+            "{:10} {:7} cycles  speed-up {:.2}x  FPU util {fpu:.2}  {:6.1} mW  {:5.1} DPGflop/s/W  {golden}",
             v.label(),
             r.cycles,
             base_cycles as f64 / r.cycles as f64,

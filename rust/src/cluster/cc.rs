@@ -25,7 +25,7 @@ use crate::ssr::SsrLane;
 
 use super::config::ClusterConfig;
 use super::stats::{CounterSet, RegionStats, StallCounters};
-use super::{Cluster, TraceEvent};
+use super::{Cluster, TraceEvent, TraceSink, TraceUnit};
 
 /// Who owns the single outstanding request of a TCDM port.
 #[derive(Debug, Clone, Copy)]
@@ -114,8 +114,10 @@ enum Action {
     Stall(Stall),
 }
 
-/// Advance core complex `idx` by one cycle.
-pub fn step(cl: &mut Cluster, idx: usize) {
+/// Advance core complex `idx` by one cycle (the `cores` phase body of the
+/// cluster's [`crate::sim::ClockDomain`] schedule runs this for every
+/// complex in hart-id order).
+pub fn tick(cl: &mut Cluster, idx: usize) {
     let Cluster { cfg, ccs, tcdm, ext, muldivs, icaches, periph, program, now, trace, .. } = cl;
     let now = *now;
     let hive = idx / cfg.cores_per_hive;
@@ -185,11 +187,11 @@ pub fn step(cl: &mut Cluster, idx: usize) {
                     );
                     match action {
                         Action::Retire { next_pc, wrote_rf: w } => {
-                            if cfg.trace {
-                                trace.push(TraceEvent {
+                            if trace.enabled() {
+                                trace.record(TraceEvent {
                                     cycle: now,
                                     core: idx,
-                                    unit: "snitch",
+                                    unit: TraceUnit::Snitch,
                                     text: format!("{pc:#06x} {}", disasm(&instr)),
                                 });
                             }
@@ -242,7 +244,7 @@ pub fn step(cl: &mut Cluster, idx: usize) {
             FpIssue::Stall => {}
             FpIssue::Done => {
                 cc.seq.pop();
-                trace_fpss(cfg, trace, now, idx, &op);
+                trace_fpss(trace, now, idx, &op);
             }
             FpIssue::Load { addr, frd, width } => {
                 match region(addr, cfg.tcdm_size) {
@@ -260,7 +262,7 @@ pub fn step(cl: &mut Cluster, idx: usize) {
                     other => panic!("fp load to {other:?} at {addr:#x}"),
                 }
                 cc.seq.pop();
-                trace_fpss(cfg, trace, now, idx, &op);
+                trace_fpss(trace, now, idx, &op);
             }
             FpIssue::Store { addr, value, size } => {
                 match region(addr, cfg.tcdm_size) {
@@ -275,7 +277,7 @@ pub fn step(cl: &mut Cluster, idx: usize) {
                     other => panic!("fp store to {other:?} at {addr:#x}"),
                 }
                 cc.seq.pop();
-                trace_fpss(cfg, trace, now, idx, &op);
+                trace_fpss(trace, now, idx, &op);
             }
         }
     }
@@ -317,13 +319,13 @@ pub fn step(cl: &mut Cluster, idx: usize) {
     cc.seq.step();
 }
 
-fn trace_fpss(cfg: &ClusterConfig, trace: &mut Vec<TraceEvent>, now: u64, idx: usize, op: &FpssOp) {
-    if cfg.trace {
+fn trace_fpss(trace: &mut TraceSink, now: u64, idx: usize, op: &FpssOp) {
+    if trace.enabled() {
         let tag = if op.from_sequencer { " (seq)" } else { "" };
-        trace.push(TraceEvent {
+        trace.record(TraceEvent {
             cycle: now,
             core: idx,
-            unit: "fpss",
+            unit: TraceUnit::Fpss,
             text: format!("{}{tag}", disasm(&op.instr)),
         });
     }

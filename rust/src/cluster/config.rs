@@ -37,6 +37,9 @@ pub struct ClusterConfig {
     pub fpu_latency: FpuLatency,
     /// Record a per-cycle execution trace (Fig. 6-style).
     pub trace: bool,
+    /// When tracing: keep only the most recent N events (ring buffer)
+    /// instead of the full unbounded trace. `None` = unbounded.
+    pub trace_capacity: Option<usize>,
     // ---- area/energy model inputs (no timing impact) ----
     pub isa: IsaVariant,
     pub rf: RfImpl,
@@ -58,6 +61,7 @@ impl Default for ClusterConfig {
             l1i_size: 8 << 10,
             fpu_latency: FpuLatency::default(),
             trace: false,
+            trace_capacity: None,
             isa: IsaVariant::Rv32I,
             rf: RfImpl::FlipFlop,
             pmcs: true,
@@ -70,6 +74,16 @@ impl Default for ClusterConfig {
 impl ClusterConfig {
     pub fn num_cores(&self) -> usize {
         self.num_hives * self.cores_per_hive
+    }
+
+    /// The trace sink this configuration asks for.
+    pub fn trace_sink(&self) -> crate::sim::TraceSink {
+        use crate::sim::TraceSink;
+        match (self.trace, self.trace_capacity) {
+            (false, _) => TraceSink::disabled(),
+            (true, None) => TraceSink::unbounded(),
+            (true, Some(cap)) => TraceSink::ring(cap),
+        }
     }
 
     /// A cluster with `n` cores, keeping the paper's 4-cores-per-hive

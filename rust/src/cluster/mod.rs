@@ -8,15 +8,20 @@
 //!
 //! ## Cycle ordering
 //!
-//! Each [`Cluster::cycle`] advances one clock:
-//! 1. instruction caches, external memory and mul/div units settle;
-//! 2. every core complex steps ([`cc`] module): collect memory responses,
-//!    retire FPU results, execute at most one integer instruction
-//!    (possibly offloading), issue from the FP-SS, let the streamers use
-//!    free TCDM ports, advance the sequencer;
-//! 3. the TCDM arbitrates all submitted requests (responses visible next
-//!    cycle);
-//! 4. the peripherals resolve the hardware barrier and wake-up IPIs.
+//! The per-cycle orchestration is a phase schedule in a
+//! [`crate::sim::ClockDomain`] (see [`Cluster::default_schedule`] and
+//! `DESIGN.md` §"Cycle engine"). Each cycle runs, in order:
+//! 1. `icache` — instruction caches settle ([`crate::sim::Tick`]);
+//! 2. `ext-mem` — external memory delivers responses ([`crate::sim::Tick`]);
+//! 3. `cores` — every core complex advances ([`cc::tick`]): collect memory
+//!    responses, retire FPU results, execute at most one integer
+//!    instruction (possibly offloading), issue from the FP-SS, let the
+//!    streamers use free TCDM ports, advance the sequencer;
+//! 4. `muldiv` — the shared mul/div units arbitrate ([`crate::sim::Tick`]);
+//! 5. `tcdm` — the TCDM arbitrates all submitted requests (responses
+//!    visible next cycle; [`crate::sim::Tick`]);
+//! 6. `periph` — the peripherals resolve the hardware barrier and wake-up
+//!    IPIs ([`periph::settle`]).
 
 pub mod cc;
 pub mod config;
@@ -29,11 +34,14 @@ use crate::isa::decode::decode;
 use crate::isa::Instr;
 use crate::mem::{ExtMemory, Tcdm, IMEM_BASE, IMEM_SIZE, TCDM_BASE};
 use crate::muldiv::MulDivUnit;
+use crate::sim::engine::tick_all;
+use crate::sim::{ClockDomain, Cycle, Tick};
 
 pub use cc::CoreComplex;
 pub use config::ClusterConfig;
 pub use periph::Peripherals;
 pub use stats::{ClusterStats, CounterSet, RegionStats};
+pub use crate::sim::trace::{TraceEvent, TraceMode, TraceSink, TraceUnit};
 
 /// The program image: raw bytes (for the I$ model) plus the pre-decoded
 /// instruction array the single-stage core executes from.
@@ -59,16 +67,6 @@ impl LoadedProgram {
     }
 }
 
-/// A cycle-stamped trace event (paper Fig. 6-style dual-lane trace).
-#[derive(Debug, Clone)]
-pub struct TraceEvent {
-    pub cycle: u64,
-    pub core: usize,
-    /// "snitch" (integer pipeline) or "fpss" (FP subsystem issue).
-    pub unit: &'static str,
-    pub text: String,
-}
-
 /// The Snitch cluster.
 pub struct Cluster {
     pub cfg: ClusterConfig,
@@ -81,9 +79,43 @@ pub struct Cluster {
     pub icaches: Vec<ICacheSystem>,
     pub periph: Peripherals,
     pub program: LoadedProgram,
+    /// Mirror of the engine clock ([`ClockDomain::now`]), kept in sync by
+    /// [`Cluster::cycle`] for the many read-only users of `cl.now`.
     pub now: u64,
-    /// Optional execution trace (enable via `cfg.trace`).
-    pub trace: Vec<TraceEvent>,
+    /// Execution trace sink (off / unbounded / ring — see
+    /// [`Cluster::set_trace`] and `cfg.trace`).
+    pub trace: TraceSink,
+    /// The cycle engine: the ordered phase schedule plus the clock.
+    pub engine: ClockDomain<Cluster>,
+}
+
+// ---- phase bodies of the default schedule (free functions so the
+// schedule stays `fn`-pointer data; see `sim::engine::Phase`) ----
+
+fn phase_icache(cl: &mut Cluster, now: Cycle) {
+    tick_all(&mut cl.icaches, now);
+}
+
+fn phase_ext_mem(cl: &mut Cluster, now: Cycle) {
+    cl.ext.tick(now);
+}
+
+fn phase_cores(cl: &mut Cluster, _now: Cycle) {
+    for idx in 0..cl.ccs.len() {
+        cc::tick(cl, idx);
+    }
+}
+
+fn phase_muldiv(cl: &mut Cluster, now: Cycle) {
+    tick_all(&mut cl.muldivs, now);
+}
+
+fn phase_tcdm(cl: &mut Cluster, now: Cycle) {
+    cl.tcdm.tick(now);
+}
+
+fn phase_periph(cl: &mut Cluster, _now: Cycle) {
+    periph::settle(cl);
 }
 
 impl Cluster {
@@ -100,9 +132,29 @@ impl Cluster {
             periph: Peripherals::new(n),
             program: LoadedProgram::empty(),
             now: 0,
-            trace: Vec::new(),
+            trace: cfg.trace_sink(),
+            engine: Cluster::default_schedule(),
             cfg,
         }
+    }
+
+    /// The canonical phase schedule (the cycle-ordering contract at the
+    /// top of this module). Registration order is execution order.
+    pub fn default_schedule() -> ClockDomain<Cluster> {
+        let mut d = ClockDomain::new();
+        d.register("icache", phase_icache);
+        d.register("ext-mem", phase_ext_mem);
+        d.register("cores", phase_cores);
+        d.register("muldiv", phase_muldiv);
+        d.register("tcdm", phase_tcdm);
+        d.register("periph", phase_periph);
+        d
+    }
+
+    /// Install a trace sink for this run (per-experiment tracing without
+    /// recompiling; overrides what `cfg.trace` selected at construction).
+    pub fn set_trace(&mut self, sink: TraceSink) {
+        self.trace = sink;
     }
 
     /// Load an assembled program: code into instruction memory, data
@@ -144,22 +196,44 @@ impl Cluster {
         }
     }
 
-    /// Advance one clock cycle.
+    /// Advance one clock cycle: run every phase of the engine schedule in
+    /// order, then advance the engine clock.
+    ///
+    /// The engine is embedded in the cluster it schedules, so this drives
+    /// phases by index (each [`crate::sim::Phase`] is a `Copy` function
+    /// pointer — no borrow of the engine is held across a phase call).
     pub fn cycle(&mut self) {
+        let now = self.engine.now();
+        debug_assert_eq!(self.now, now, "cluster clock out of sync with engine");
+        for i in 0..self.engine.num_phases() {
+            let phase = self.engine.phase(i);
+            (phase.run)(self, now);
+        }
+        self.engine.advance();
+        self.now = self.engine.now();
+    }
+
+    /// Reference implementation of one cycle: the hand-ordered component
+    /// sequence the engine schedule replaced. Kept (and exercised by the
+    /// engine-determinism test) as an executable specification that the
+    /// [`ClockDomain`] pass is a pure refactor of the original loop.
+    pub fn cycle_direct(&mut self) {
         let now = self.now;
         for ic in &mut self.icaches {
-            ic.step(now);
+            ic.tick(now);
         }
-        self.ext.step(now);
+        self.ext.tick(now);
         for cc_idx in 0..self.ccs.len() {
-            cc::step(self, cc_idx);
+            cc::tick(self, cc_idx);
         }
         for md in &mut self.muldivs {
-            md.step(now);
+            md.tick(now);
         }
-        self.tcdm.step(now);
+        self.tcdm.tick(now);
         periph::settle(self);
+        self.engine.advance();
         self.now += 1;
+        debug_assert_eq!(self.now, self.engine.now());
     }
 
     /// True when every core has halted *and* all in-flight traffic

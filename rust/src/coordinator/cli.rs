@@ -7,13 +7,20 @@ const USAGE: &str = "\
 repro — Snitch (IEEE TC 2020) reproduction harness
 
 USAGE:
-    repro <COMMAND> [ARGS]
+    repro [--jobs N] <COMMAND> [ARGS]
+
+OPTIONS:
+    --jobs N                worker-pool width for experiment sweeps
+                            (default: machine parallelism; results are
+                            byte-identical for every N)
 
 COMMANDS:
     all                     regenerate every table and figure
     table <1|2|3|4>         regenerate a paper table
     figure <1|9|10|11|12|13|14|15|16>
                             regenerate a paper figure
+    sweep                   run the Table 2 experiment set and report
+                            per-experiment cycles (sweep-driver smoke test)
     trace <kernel> [variant] [n]
                             Fig. 6-style dual-issue trace (variant:
                             baseline|ssr|frep; default frep, n=64)
@@ -23,9 +30,37 @@ COMMANDS:
     help                    this text
 ";
 
+/// Strip every `--jobs N` / `--jobs=N` from the argument list (the last
+/// occurrence wins), applying it via [`set_jobs`]. Returns the remaining
+/// positional arguments.
+fn parse_jobs(mut args: Vec<String>) -> crate::Result<Vec<String>> {
+    while let Some(i) = args.iter().position(|a| a == "--jobs" || a.starts_with("--jobs=")) {
+        let value = if args[i] == "--jobs" {
+            if i + 1 >= args.len() {
+                return Err("--jobs requires a value".into());
+            }
+            let v = args[i + 1].clone();
+            args.drain(i..=i + 1);
+            v
+        } else {
+            let v = args[i]["--jobs=".len()..].to_string();
+            args.remove(i);
+            v
+        };
+        let n: usize = value
+            .parse()
+            .map_err(|_| format!("--jobs expects a positive integer, got {value:?}"))?;
+        if n == 0 {
+            return Err("--jobs must be at least 1".into());
+        }
+        set_jobs(n);
+    }
+    Ok(args)
+}
+
 /// Entry point for the `repro` binary.
-pub fn main_cli() -> anyhow::Result<()> {
-    let args: Vec<String> = std::env::args().skip(1).collect();
+pub fn main_cli() -> crate::Result<()> {
+    let args = parse_jobs(std::env::args().skip(1).collect())?;
     let cmd = args.first().map(String::as_str).unwrap_or("help");
     match cmd {
         "all" => {
@@ -41,14 +76,19 @@ pub fn main_cli() -> anyhow::Result<()> {
             println!("{}", table2());
             println!("{}", table3());
             println!("{}", table4());
-            println!("{}", validate_goldens()?);
+            // Skip only when the PJRT backend is unavailable; a mismatch
+            // from an available backend is a real failure and propagates.
+            match crate::runtime::GoldenRuntime::new() {
+                Ok(rt) => println!("{}", validate_goldens_with(&rt)?),
+                Err(e) => println!("golden validation skipped: {e}"),
+            }
         }
         "table" => match args.get(1).map(String::as_str) {
             Some("1") => println!("{}", table1()),
             Some("2") => println!("{}", table2()),
             Some("3") => println!("{}", table3()),
             Some("4") => println!("{}", table4()),
-            other => anyhow::bail!("unknown table {other:?}"),
+            other => return Err(format!("unknown table {other:?}").into()),
         },
         "figure" => match args.get(1).map(String::as_str) {
             Some("1") => println!("{}", figure1()),
@@ -59,8 +99,24 @@ pub fn main_cli() -> anyhow::Result<()> {
             Some("13") => println!("{}", figure_speedups(8)),
             Some("14") => println!("{}", figure14()),
             Some("15") | Some("16") => println!("{}", figure15_16()),
-            other => anyhow::bail!("unknown figure {other:?}"),
+            other => return Err(format!("unknown figure {other:?}").into()),
         },
+        "sweep" => {
+            let exps = table2_experiments();
+            let workers = effective_workers(&exps, jobs());
+            let runs = run_sweep(&exps, workers);
+            println!("# sweep: {} experiments over {workers} workers\n", exps.len());
+            for (e, r) in exps.iter().zip(&runs) {
+                println!(
+                    "{} {} n={} cores={}: {} region cycles",
+                    e.kernel,
+                    e.variant.label(),
+                    e.n,
+                    e.cores,
+                    r.cycles
+                );
+            }
+        }
         "trace" => {
             let kernel = args.get(1).map(String::as_str).unwrap_or("dot");
             let v = match args.get(2).map(String::as_str) {
@@ -82,7 +138,7 @@ pub fn main_cli() -> anyhow::Result<()> {
             let n: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(256);
             let cores: usize = args.get(4).and_then(|s| s.parse().ok()).unwrap_or(1);
             let k = kernels::kernel_by_name(name)
-                .ok_or_else(|| anyhow::anyhow!("unknown kernel {name}"))?;
+                .ok_or_else(|| format!("unknown kernel {name}"))?;
             let r = run(k, v, n, cores);
             let (fpu, fpss, snitch, ipc) = r.stats.region_utils();
             println!(
@@ -99,4 +155,33 @@ pub fn main_cli() -> anyhow::Result<()> {
         _ => print!("{USAGE}"),
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::parse_jobs;
+
+    fn v(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn jobs_flag_forms() {
+        assert_eq!(parse_jobs(v(&["--jobs", "4", "table", "2"])).unwrap(), v(&["table", "2"]));
+        assert_eq!(parse_jobs(v(&["table", "--jobs=2", "2"])).unwrap(), v(&["table", "2"]));
+        assert_eq!(parse_jobs(v(&["run", "dot"])).unwrap(), v(&["run", "dot"]));
+        // Repeated flag: every occurrence is stripped, the last one wins.
+        assert_eq!(
+            parse_jobs(v(&["--jobs", "2", "--jobs=8", "table", "2"])).unwrap(),
+            v(&["table", "2"])
+        );
+        assert_eq!(super::super::jobs(), 8);
+    }
+
+    #[test]
+    fn jobs_flag_rejects_bad_values() {
+        assert!(parse_jobs(v(&["--jobs"])).is_err());
+        assert!(parse_jobs(v(&["--jobs", "zero"])).is_err());
+        assert!(parse_jobs(v(&["--jobs", "0"])).is_err());
+    }
 }

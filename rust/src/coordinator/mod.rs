@@ -4,12 +4,25 @@
 //!
 //! Each `table_*` / `figure_*` function returns a rendered markdown block
 //! whose rows mirror the paper's presentation; the `repro` CLI and the
-//! criterion-style benches print them. Runs fan out over std::threads
-//! (the L3 event loop owns process topology; simulations are independent).
+//! criterion-style benches print them.
+//!
+//! ## Sweep execution
+//!
+//! Experiments are independent (one [`crate::cluster::Cluster`] each, no
+//! shared state), so every sweep fans its [`Experiment`] list out over a
+//! **bounded** pool of std threads ([`run_sweep`]): workers pull the next
+//! experiment index from an atomic counter and write the result into that
+//! experiment's slot. Results therefore come back in *input order*
+//! regardless of worker count or scheduling — a `--jobs 8` sweep renders
+//! byte-identical tables to a `--jobs 1` sweep (enforced by
+//! `tests/determinism.rs`). The pool width defaults to the machine's
+//! available parallelism and is overridden with the CLI `--jobs N` flag
+//! ([`set_jobs`]).
 
 pub mod cli;
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::cluster::ClusterConfig;
@@ -38,22 +51,101 @@ pub fn run(k: &'static KernelDef, v: Variant, n: usize, cores: usize) -> RunResu
     r
 }
 
-/// Run the full kernel × variant matrix for a core count, in parallel.
-/// Returns (kernel, variant) → result.
-pub fn run_matrix(cores: usize) -> HashMap<(&'static str, Variant), RunResult> {
-    let out = Mutex::new(HashMap::new());
+/// One independent sweep experiment: kernel × variant × size × cores.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Experiment {
+    pub kernel: &'static str,
+    pub variant: Variant,
+    pub n: usize,
+    pub cores: usize,
+}
+
+impl Experiment {
+    pub fn new(kernel: &'static str, variant: Variant, n: usize, cores: usize) -> Experiment {
+        Experiment { kernel, variant, n, cores }
+    }
+
+    /// Execute this experiment on a fresh cluster (checked run).
+    pub fn run(&self) -> RunResult {
+        let k = kernels::kernel_by_name(self.kernel)
+            .unwrap_or_else(|| panic!("unknown kernel {}", self.kernel));
+        run(k, self.variant, self.n, self.cores)
+    }
+}
+
+/// Pool width override set by the CLI's `--jobs N` (0 = auto).
+static JOBS: AtomicUsize = AtomicUsize::new(0);
+
+/// Set the sweep worker-pool width (the CLI `--jobs N` flag). 0 restores
+/// the default (machine parallelism).
+pub fn set_jobs(n: usize) {
+    JOBS.store(n, Ordering::Relaxed);
+}
+
+/// Current sweep worker-pool width.
+pub fn jobs() -> usize {
+    match JOBS.load(Ordering::Relaxed) {
+        0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        n => n,
+    }
+}
+
+/// The pool width [`run_sweep`] actually uses for `experiments` when
+/// asked for `workers`: at least 1, at most one worker per experiment.
+pub fn effective_workers(experiments: &[Experiment], workers: usize) -> usize {
+    workers.max(1).min(experiments.len().max(1))
+}
+
+/// Run `experiments` across a bounded pool of `workers` std threads (one
+/// fresh `Cluster` per experiment — workers share nothing but the work
+/// queue). Results are returned **in input order**, so any rendering over
+/// them is byte-identical for every worker count.
+pub fn run_sweep(experiments: &[Experiment], workers: usize) -> Vec<RunResult> {
+    let workers = effective_workers(experiments, workers);
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<RunResult>>> =
+        experiments.iter().map(|_| Mutex::new(None)).collect();
     std::thread::scope(|scope| {
-        for k in kernels::all_kernels() {
-            for &v in k.variants {
-                let out = &out;
-                scope.spawn(move || {
-                    let r = run(k, v, default_size(k.name), cores);
-                    out.lock().unwrap().insert((k.name, v), r);
-                });
-            }
+        for _ in 0..workers {
+            let next = &next;
+            let slots = &slots;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= experiments.len() {
+                    break;
+                }
+                let r = experiments[i].run();
+                *slots[i].lock().unwrap() = Some(r);
+            });
         }
     });
-    out.into_inner().unwrap()
+    slots
+        .into_iter()
+        .map(|slot| slot.into_inner().unwrap().expect("worker filled every slot"))
+        .collect()
+}
+
+/// The kernel × variant matrix for a core count, as an experiment list
+/// (paper presentation order).
+pub fn matrix_experiments(cores: usize) -> Vec<Experiment> {
+    let mut exps = Vec::new();
+    for k in kernels::all_kernels() {
+        for &v in k.variants {
+            exps.push(Experiment::new(k.name, v, default_size(k.name), cores));
+        }
+    }
+    exps
+}
+
+/// Run the full kernel × variant matrix for a core count over the worker
+/// pool. Returns (kernel, variant) → result.
+pub fn run_matrix(cores: usize) -> HashMap<(&'static str, Variant), RunResult> {
+    let exps = matrix_experiments(cores);
+    let runs = run_sweep(&exps, jobs());
+    exps.iter()
+        .zip(runs)
+        .map(|(e, r)| ((e.kernel, e.variant), r))
+        .collect()
 }
 
 /// Fig. 1: energy per instruction of an application-class core (Ariane
@@ -104,60 +196,44 @@ pub fn table1() -> String {
          | kernel | FPU | FPSS | Snitch | IPC | FPU | FPSS | Snitch | IPC |\n\
          |---|---|---|---|---|---|---|---|---|\n",
     );
-    let results = Mutex::new(Vec::new());
-    std::thread::scope(|scope| {
-        for &(name, n) in &sizes {
-            let k = kernels::kernel_by_name(name).unwrap();
-            for &v in k.variants {
-                let results = &results;
-                scope.spawn(move || {
-                    let single = run(k, v, n, 1);
-                    let multi = run(k, v, n, 8);
-                    results.lock().unwrap().push((name, n, v, single, multi));
-                });
-            }
+    // Adjacent (1-core, 8-core) experiment pairs, in presentation order;
+    // run_sweep preserves input order so no post-sort is needed.
+    let mut exps = Vec::new();
+    for &(name, n) in &sizes {
+        let k = kernels::kernel_by_name(name).unwrap();
+        for &v in k.variants {
+            exps.push(Experiment::new(name, v, n, 1));
+            exps.push(Experiment::new(name, v, n, 8));
         }
-    });
-    let mut results = results.into_inner().unwrap();
-    results.sort_by_key(|(name, n, v, _, _)| {
-        (
-            sizes.iter().position(|&(s2, n2)| s2 == *name && n2 == *n).unwrap(),
-            match v {
-                Variant::Baseline => 0,
-                Variant::Ssr => 1,
-                Variant::SsrFrep => 2,
-            },
-        )
-    });
-    for (name, n, v, single, multi) in results {
-        let u1 = single.stats.region_utils();
-        let u8_ = multi.stats.region_utils();
+    }
+    let runs = run_sweep(&exps, jobs());
+    for (pair_e, pair_r) in exps.chunks_exact(2).zip(runs.chunks_exact(2)) {
+        let e = &pair_e[0];
+        let u1 = pair_r[0].stats.region_utils();
+        let u8_ = pair_r[1].stats.region_utils();
         s += &format!(
-            "| {name} {n} {} | {:.2} | {:.2} | {:.2} | {:.2} | {:.2} | {:.2} | {:.2} | {:.2} |\n",
-            v.label(),
+            "| {} {} {} | {:.2} | {:.2} | {:.2} | {:.2} | {:.2} | {:.2} | {:.2} | {:.2} |\n",
+            e.kernel,
+            e.n,
+            e.variant.label(),
             u1.0, u1.1, u1.2, u1.3, u8_.0, u8_.1, u8_.2, u8_.3
         );
     }
     s
 }
 
-/// Table 2: DGEMM 32² FPU utilization and scaling from 1 to 32 cores.
-pub fn table2() -> String {
-    let k = kernels::kernel_by_name("dgemm").unwrap();
-    let counts = [1usize, 2, 4, 8, 16, 32];
-    let runs: Vec<RunResult> = {
-        let out = Mutex::new(HashMap::new());
-        std::thread::scope(|scope| {
-            for &c in &counts {
-                let out = &out;
-                scope.spawn(move || {
-                    out.lock().unwrap().insert(c, run(k, Variant::SsrFrep, 32, c));
-                });
-            }
-        });
-        let mut m = out.into_inner().unwrap();
-        counts.iter().map(|c| m.remove(c).unwrap()).collect()
-    };
+/// The Table 2 experiment set: DGEMM 32² SSR+FREP from 1 to 32 cores (also
+/// the sweep-throughput benchmark workload in `benches/sim_hotpath.rs`).
+pub fn table2_experiments() -> Vec<Experiment> {
+    [1usize, 2, 4, 8, 16, 32]
+        .iter()
+        .map(|&c| Experiment::new("dgemm", Variant::SsrFrep, 32, c))
+        .collect()
+}
+
+/// Render Table 2 from its experiment results (input order of
+/// [`table2_experiments`]).
+pub fn render_table2(exps: &[Experiment], runs: &[RunResult]) -> String {
     let base = runs[0].cycles as f64;
     let mut s = String::from(
         "## Table 2 — DGEMM 32×32 multi-core scaling (SSR+FREP)\n\n\
@@ -169,40 +245,54 @@ pub fn table2() -> String {
         let half = if i == 0 { 1.0 } else { runs[i - 1].cycles as f64 / r.cycles as f64 };
         s += &format!(
             "| {} | {fpu:.2} | {half:.2} | {delta:.2} |\n",
-            counts[i]
+            exps[i].cores
         );
     }
     s += "\npaper: η 0.81–0.90, δ ≈ 1.9–2.0, Δ = 7.80 @ 8 cores, 27.61 @ 32.\n";
     s
 }
 
+/// Table 2: DGEMM 32² FPU utilization and scaling from 1 to 32 cores.
+pub fn table2() -> String {
+    let exps = table2_experiments();
+    let runs = run_sweep(&exps, jobs());
+    render_table2(&exps, &runs)
+}
+
 /// Table 3: normalized DGEMM performance, Snitch (measured) vs the vector
 /// lane model vs the published Ara/Hwacha numbers.
 pub fn table3() -> String {
-    let k = kernels::kernel_by_name("dgemm").unwrap();
     let mut s = String::from(
         "## Table 3 — normalized DGEMM performance [% of peak]\n\n\
          | n | FPUs | Snitch (sim) | Ara (model) | Ara (paper) | Hwacha (paper) |\n\
          |---|---|---|---|---|---|\n",
     );
-    for fpus in [4usize, 8, 16] {
-        for n in [16usize, 32, 64, 128] {
-            if n % fpus != 0 {
-                s += &format!("| {n} | {fpus} | — | | | |\n");
-                continue;
-            }
-            let r = run(k, Variant::SsrFrep, n, fpus);
-            let flops: u64 = r.stats.cores.iter().map(|c| c.flops).sum();
-            let snitch = 100.0 * flops as f64 / r.cycles as f64 / (2.0 * fpus as f64);
-            let model = vector::dgemm_norm_perf(&vector::VectorConfig::ara(fpus as u64), n as u64);
-            let ara = vector::ara_published(fpus as u64, n as u64)
-                .map(|v| format!("{v:.1}"))
-                .unwrap_or_default();
-            let hw = vector::hwacha_published(fpus as u64, n as u64)
-                .map(|v| format!("{v:.1}"))
-                .unwrap_or_else(|| "—".into());
-            s += &format!("| {n} | {fpus} | {snitch:.1} | {model:.1} | {ara} | {hw} |\n");
+    let grid: Vec<(usize, usize)> = [4usize, 8, 16]
+        .into_iter()
+        .flat_map(|fpus| [16usize, 32, 64, 128].into_iter().map(move |n| (fpus, n)))
+        .collect();
+    let exps: Vec<Experiment> = grid
+        .iter()
+        .filter(|&&(fpus, n)| n % fpus == 0)
+        .map(|&(fpus, n)| Experiment::new("dgemm", Variant::SsrFrep, n, fpus))
+        .collect();
+    let mut runs = run_sweep(&exps, jobs()).into_iter();
+    for (fpus, n) in grid {
+        if n % fpus != 0 {
+            s += &format!("| {n} | {fpus} | — | | | |\n");
+            continue;
         }
+        let r = runs.next().expect("one run per valid grid point");
+        let flops: u64 = r.stats.cores.iter().map(|c| c.flops).sum();
+        let snitch = 100.0 * flops as f64 / r.cycles as f64 / (2.0 * fpus as f64);
+        let model = vector::dgemm_norm_perf(&vector::VectorConfig::ara(fpus as u64), n as u64);
+        let ara = vector::ara_published(fpus as u64, n as u64)
+            .map(|v| format!("{v:.1}"))
+            .unwrap_or_default();
+        let hw = vector::hwacha_published(fpus as u64, n as u64)
+            .map(|v| format!("{v:.1}"))
+            .unwrap_or_else(|| "—".into());
+        s += &format!("| {n} | {fpus} | {snitch:.1} | {model:.1} | {ara} | {hw} |\n");
     }
     s += "\npaper: Snitch 58–96 across the grid, beating Ara by up to 4.5× at n=16.\n";
     s
@@ -382,7 +472,7 @@ pub fn trace_kernel(name: &str, v: Variant, n: usize) -> String {
     let mut s = format!("## trace: {name} {} n={n} ({} cycles)\n\n", v.label(), cl.now);
     s += "```\ncycle  unit    instruction\n";
     for e in cl.trace.iter().take(400) {
-        s += &format!("{:5}  {:6}  {}\n", e.cycle, e.unit, e.text);
+        s += &format!("{:5}  {:6}  {}\n", e.cycle, e.unit.as_str(), e.text);
     }
     if cl.trace.len() > 400 {
         s += &format!("... ({} more events)\n", cl.trace.len() - 400);
@@ -392,8 +482,16 @@ pub fn trace_kernel(name: &str, v: Variant, n: usize) -> String {
 }
 
 /// Golden-model validation sweep over the PJRT artifacts.
-pub fn validate_goldens() -> anyhow::Result<String> {
+pub fn validate_goldens() -> crate::Result<String> {
     let rt = crate::runtime::GoldenRuntime::new()?;
+    validate_goldens_with(&rt)
+}
+
+/// The validation sweep over an already-constructed runtime. Errors from
+/// here are real mismatches (or missing artifacts), never mere backend
+/// unavailability — callers that want to tolerate a missing PJRT backend
+/// catch the [`crate::runtime::GoldenRuntime::new`] error, not these.
+pub fn validate_goldens_with(rt: &crate::runtime::GoldenRuntime) -> crate::Result<String> {
     let mut s = String::from("## golden validation (simulated vs AOT JAX/Pallas via PJRT)\n\n");
     let cases: Vec<(&str, usize, Variant)> = vec![
         ("dot", 256, Variant::SsrFrep),
@@ -409,7 +507,7 @@ pub fn validate_goldens() -> anyhow::Result<String> {
     for (name, n, v) in cases {
         let k = kernels::kernel_by_name(name).unwrap();
         let p = Params::new(n, 8);
-        let r = kernels::run_kernel(k, v, &p).map_err(|e| anyhow::anyhow!(e))?;
+        let r = kernels::run_kernel(k, v, &p)?;
         let mut io = (k.io)(&r.cluster, &p);
         if name == "fft" {
             io.inputs.truncate(1);

@@ -7,6 +7,8 @@
 //! * An L1 miss refills from backing memory (the instruction memory region)
 //!   with an AXI-burst-like latency.
 
+use crate::sim::{Cycle, Tick};
+
 /// Line size in bytes (8 RV32 instructions).
 pub const LINE_BYTES: u32 = 32;
 /// L0: fully associative line count (FIFO replacement).
@@ -145,8 +147,20 @@ impl ICacheSystem {
         }
     }
 
+    /// PMCs: (l0_hits, l0_misses) for `core`.
+    pub fn l0_stats(&self, core: usize) -> (u64, u64) {
+        (self.l0[core].hits, self.l0[core].misses)
+    }
+
+    /// PMCs: (l1_hits, l1_misses).
+    pub fn l1_stats(&self) -> (u64, u64) {
+        (self.l1.hits, self.l1.misses)
+    }
+}
+
+impl Tick for ICacheSystem {
     /// Advance refills; installs completed lines into L0s.
-    pub fn step(&mut self, now: u64) {
+    fn tick(&mut self, now: Cycle) {
         self.l1.step(now);
         for (core, slot) in self.refill_ready.iter_mut().enumerate() {
             if let Some((line_addr, ready)) = *slot {
@@ -158,14 +172,8 @@ impl ICacheSystem {
         }
     }
 
-    /// PMCs: (l0_hits, l0_misses) for `core`.
-    pub fn l0_stats(&self, core: usize) -> (u64, u64) {
-        (self.l0[core].hits, self.l0[core].misses)
-    }
-
-    /// PMCs: (l1_hits, l1_misses).
-    pub fn l1_stats(&self) -> (u64, u64) {
-        (self.l1.hits, self.l1.misses)
+    fn name(&self) -> &'static str {
+        "icache"
     }
 }
 
@@ -179,7 +187,7 @@ mod tests {
         assert_eq!(ic.fetch(0, 0x100, 0), Fetch::Miss);
         let mut hit_at = None;
         for c in 1..=2 * L1_MISS_LATENCY {
-            ic.step(c);
+            ic.tick(c);
             if ic.fetch(0, 0x104, c) == Fetch::Hit {
                 hit_at = Some(c);
                 break;
@@ -196,12 +204,12 @@ mod tests {
         let mut ic = ICacheSystem::new(2, 8 << 10);
         assert_eq!(ic.fetch(0, 0x200, 0), Fetch::Miss);
         for c in 1..=L1_MISS_LATENCY {
-            ic.step(c);
+            ic.tick(c);
         }
         assert_eq!(ic.fetch(0, 0x200, L1_MISS_LATENCY), Fetch::Hit);
         let t0 = L1_MISS_LATENCY;
         assert_eq!(ic.fetch(1, 0x200, t0), Fetch::Miss);
-        ic.step(t0 + L1_HIT_LATENCY);
+        ic.tick(t0 + L1_HIT_LATENCY);
         assert_eq!(ic.fetch(1, 0x200, t0 + L1_HIT_LATENCY), Fetch::Hit);
     }
 
@@ -213,7 +221,7 @@ mod tests {
         let (_, l1_misses) = ic.l1_stats();
         assert_eq!(l1_misses, 1, "second request coalesces");
         for c in 1..=L1_MISS_LATENCY {
-            ic.step(c);
+            ic.tick(c);
         }
         assert_eq!(ic.fetch(0, 0x300, L1_MISS_LATENCY), Fetch::Hit);
         assert_eq!(ic.fetch(1, 0x304, L1_MISS_LATENCY), Fetch::Hit);
@@ -228,7 +236,7 @@ mod tests {
             if ic.fetch(0, addr, now) == Fetch::Miss {
                 for _ in 0..L1_MISS_LATENCY + 1 {
                     now += 1;
-                    ic.step(now);
+                    ic.tick(now);
                 }
             }
             assert_eq!(ic.fetch(0, addr, now), Fetch::Hit);

@@ -25,7 +25,10 @@
 //! * [`icache`] — per-core L0 and shared L1 instruction caches.
 //! * [`cluster`] — core complex / hive / cluster assembly and the cluster
 //!   peripherals (performance counters, wake-up).
-//! * [`sim`] — the cycle engine and instruction-level trace.
+//! * [`sim`] — the cycle engine ([`sim::Tick`] components scheduled by a
+//!   deterministic [`sim::ClockDomain`] phase pass) and the
+//!   instruction-level trace infrastructure ([`sim::TraceSink`]: off,
+//!   unbounded, or ring-buffered per experiment).
 //! * [`energy`] — calibrated event-energy, power, and kGE area models.
 //! * [`vector`] — an Ara-like vector-lane timing model (Table 3 comparator).
 //! * [`kernels`] — the paper's eight microkernels in three variants
@@ -33,10 +36,18 @@
 //! * [`runtime`] — PJRT golden-model execution of the AOT-lowered JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) used to validate simulated results.
 //! * [`coordinator`] — experiment registry and sweep driver regenerating
-//!   every table and figure of the paper's evaluation.
+//!   every table and figure of the paper's evaluation, fanning independent
+//!   experiments out over a bounded worker pool (`--jobs N`) with
+//!   deterministic result ordering.
 //!
-//! See `DESIGN.md` for the per-experiment index and the hardware→simulation
-//! substitution rationale.
+//! See `DESIGN.md` for the cycle-engine contract, the per-experiment
+//! index, and the hardware→simulation substitution rationale.
+
+/// Crate-wide boxed error (the offline build environment has no `anyhow`;
+/// `String` and `&str` convert into it via `?`/`.into()`).
+pub type Error = Box<dyn std::error::Error + Send + Sync + 'static>;
+/// Crate-wide result type.
+pub type Result<T> = std::result::Result<T, Error>;
 
 pub mod asm;
 pub mod cluster;

@@ -3,6 +3,6 @@
 //! Everything runs from the self-contained rust binary; python only ever
 //! executes at build time (`make artifacts`).
 
-fn main() -> anyhow::Result<()> {
+fn main() -> snitch_sim::Result<()> {
     snitch_sim::coordinator::cli::main_cli()
 }

@@ -10,6 +10,7 @@ use std::collections::VecDeque;
 
 use super::map::{EXT_BASE, EXT_SIZE};
 use super::tcdm::{MemOp, TcdmResponse};
+use crate::sim::{Cycle, Tick};
 
 /// Fixed single-beat access latency in cycles (AXI round trip + SRAM).
 pub const EXT_LATENCY: u64 = 15;
@@ -69,39 +70,6 @@ impl ExtMemory {
         self.burst_resp[port].take()
     }
 
-    pub fn step(&mut self, now: u64) {
-        while let Some(f) = self.inflight.front() {
-            if f.ready_at > now || self.resp[f.port].is_some() {
-                break;
-            }
-            let f = self.inflight.pop_front().unwrap();
-            let r = match f.op {
-                MemOp::Read { size } => {
-                    TcdmResponse { data: self.read(f.addr, size), is_write: false }
-                }
-                MemOp::Write { data, size } => {
-                    self.write(f.addr, data, size);
-                    TcdmResponse { data: 0, is_write: true }
-                }
-                MemOp::Amo { .. } => {
-                    // External AMOs go through the AXI atomic adapter [29];
-                    // modelled as sequentially-consistent RMW here.
-                    unimplemented!("AMOs outside the TCDM are not used by the kernels")
-                }
-            };
-            self.resp[f.port] = Some(r);
-        }
-        while let Some(&(port, addr, len, ready_at)) = self.bursts.front() {
-            if ready_at > now || self.burst_resp[port].is_some() {
-                break;
-            }
-            self.bursts.pop_front();
-            let o = (addr - EXT_BASE) as usize;
-            self.ensure(o + len as usize);
-            self.burst_resp[port] = Some(self.mem[o..o + len as usize].to_vec());
-        }
-    }
-
     fn ensure(&mut self, end: usize) {
         assert!(end <= EXT_SIZE as usize, "ext memory access beyond {EXT_SIZE:#x}");
         if self.mem.len() < end {
@@ -136,6 +104,47 @@ impl ExtMemory {
     }
 }
 
+impl Tick for ExtMemory {
+    /// Deliver every access whose latency has elapsed (single-beat data
+    /// accesses first, then bursts), oldest first, one response per port.
+    fn tick(&mut self, now: Cycle) {
+        while let Some(f) = self.inflight.front() {
+            if f.ready_at > now || self.resp[f.port].is_some() {
+                break;
+            }
+            let f = self.inflight.pop_front().unwrap();
+            let r = match f.op {
+                MemOp::Read { size } => {
+                    TcdmResponse { data: self.read(f.addr, size), is_write: false }
+                }
+                MemOp::Write { data, size } => {
+                    self.write(f.addr, data, size);
+                    TcdmResponse { data: 0, is_write: true }
+                }
+                MemOp::Amo { .. } => {
+                    // External AMOs go through the AXI atomic adapter [29];
+                    // modelled as sequentially-consistent RMW here.
+                    unimplemented!("AMOs outside the TCDM are not used by the kernels")
+                }
+            };
+            self.resp[f.port] = Some(r);
+        }
+        while let Some(&(port, addr, len, ready_at)) = self.bursts.front() {
+            if ready_at > now || self.burst_resp[port].is_some() {
+                break;
+            }
+            self.bursts.pop_front();
+            let o = (addr - EXT_BASE) as usize;
+            self.ensure(o + len as usize);
+            self.burst_resp[port] = Some(self.mem[o..o + len as usize].to_vec());
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "ext-mem"
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -146,10 +155,10 @@ mod tests {
         m.write(EXT_BASE + 8, 99, 8);
         m.submit(0, EXT_BASE + 8, MemOp::Read { size: 8 }, 0);
         for c in 0..EXT_LATENCY {
-            m.step(c);
+            m.tick(c);
             assert!(m.take_response(0).is_none(), "cycle {c}");
         }
-        m.step(EXT_LATENCY);
+        m.tick(EXT_LATENCY);
         assert_eq!(m.take_response(0).unwrap().data, 99);
     }
 
@@ -161,7 +170,7 @@ mod tests {
         m.submit_burst(0, EXT_BASE + 64, 32, 0);
         let mut got = None;
         for c in 0..64 {
-            m.step(c);
+            m.tick(c);
             if let Some(b) = m.take_burst(0) {
                 got = Some((c, b));
                 break;

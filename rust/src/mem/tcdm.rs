@@ -13,6 +13,7 @@
 //!   (read, ALU, write back — the FSM of §2.3.1) and block other grants.
 
 use crate::isa::AmoOp;
+use crate::sim::{Cycle, Tick};
 
 /// Cycles an atomic FSM occupies its bank (read-out, local ALU, write).
 pub const AMO_BANK_CYCLES: u32 = 3;
@@ -145,13 +146,13 @@ impl Tcdm {
         }
     }
 
-    /// Advance one cycle: arbitrate banks and perform granted accesses.
+    /// Arbitrate banks and perform granted accesses (the [`Tick`] body).
     ///
     /// Perf note (§Perf): a single O(ports) sweep groups contenders by
     /// bank and picks the round-robin winner by rr-distance, instead of
     /// the original O(banks × ports) scan — the TCDM arbiter is the
     /// hottest loop of the whole-cluster cycle.
-    pub fn step(&mut self, now: u64) {
+    fn arbitrate(&mut self, now: u64) {
         self.now = now;
         let nports = self.pending.len();
         // Per-bank best contender (by round-robin distance) + count.
@@ -306,6 +307,16 @@ impl Tcdm {
     }
 }
 
+impl Tick for Tcdm {
+    fn tick(&mut self, now: Cycle) {
+        self.arbitrate(now);
+    }
+
+    fn name(&self) -> &'static str {
+        "tcdm"
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -329,9 +340,9 @@ mod tests {
         let mut t = mk();
         t.write(0x1000_0000, 42, 8);
         t.submit(0, TcdmRequest { addr: 0x1000_0000, op: MemOp::Read { size: 8 } });
-        t.step(0);
+        t.tick(0);
         assert_eq!(t.take_response(0, 0), None, "data not visible in grant cycle");
-        t.step(1);
+        t.tick(1);
         assert_eq!(t.take_response(0, 1), Some(TcdmResponse { data: 42, is_write: false }));
     }
 
@@ -341,13 +352,13 @@ mod tests {
         // Same bank: same word-aligned address from two ports.
         t.submit(0, TcdmRequest { addr: 0x1000_0000, op: MemOp::Read { size: 8 } });
         t.submit(1, TcdmRequest { addr: 0x1000_0000 + 32 * 8, op: MemOp::Read { size: 8 } });
-        t.step(0);
-        t.step(1);
+        t.tick(0);
+        t.tick(1);
         let r0 = t.take_response(0, 1).is_some();
         let r1 = t.take_response(1, 1).is_some();
         assert!(r0 ^ r1, "exactly one granted in first cycle");
         assert_eq!(t.conflict_cycles, 1);
-        t.step(2);
+        t.tick(2);
         assert!(t.take_response(0, 2).is_some() || t.take_response(1, 2).is_some());
     }
 
@@ -356,8 +367,8 @@ mod tests {
         let mut t = mk();
         t.submit(0, TcdmRequest { addr: 0x1000_0000, op: MemOp::Read { size: 8 } });
         t.submit(1, TcdmRequest { addr: 0x1000_0008, op: MemOp::Read { size: 8 } });
-        t.step(0);
-        t.step(1);
+        t.tick(0);
+        t.tick(1);
         assert!(t.take_response(0, 1).is_some());
         assert!(t.take_response(1, 1).is_some());
         assert_eq!(t.conflict_cycles, 0);
@@ -368,15 +379,15 @@ mod tests {
         let mut t = mk();
         t.write(0x1000_0000, 5, 4);
         t.submit(0, TcdmRequest { addr: 0x1000_0000, op: MemOp::Amo { op: AmoOp::AmoAddW, data: 7 } });
-        t.step(0);
+        t.tick(0);
         // Bank is held for AMO_BANK_CYCLES; a read to the same bank waits.
         t.submit(1, TcdmRequest { addr: 0x1000_0000, op: MemOp::Read { size: 4 } });
-        t.step(1);
+        t.tick(1);
         assert!(t.take_response(1, 1).is_none());
-        t.step(2);
-        t.step(3);
+        t.tick(2);
+        t.tick(3);
         assert_eq!(t.take_response(0, 3).unwrap().data, 5, "AMO returns old value");
-        t.step(4);
+        t.tick(4);
         assert_eq!(t.take_response(1, 4).unwrap().data, 12, "read sees updated value");
     }
 
@@ -387,20 +398,20 @@ mod tests {
         // LR on port 0.
         t.submit(0, TcdmRequest { addr: 0x1000_0040, op: MemOp::Amo { op: AmoOp::LrW, data: 0 } });
         for c in 0..4 {
-            t.step(c);
+            t.tick(c);
         }
         assert_eq!(t.take_response(0, 3).unwrap().data, 1);
         // SC succeeds.
         t.submit(0, TcdmRequest { addr: 0x1000_0040, op: MemOp::Amo { op: AmoOp::ScW, data: 9 } });
         for c in 4..8 {
-            t.step(c);
+            t.tick(c);
         }
         assert_eq!(t.take_response(0, 7).unwrap().data, 0, "sc success code");
         assert_eq!(t.read(0x1000_0040, 4), 9);
         // SC without reservation fails.
         t.submit(0, TcdmRequest { addr: 0x1000_0040, op: MemOp::Amo { op: AmoOp::ScW, data: 11 } });
         for c in 8..12 {
-            t.step(c);
+            t.tick(c);
         }
         assert_eq!(t.take_response(0, 11).unwrap().data, 1, "sc failure code");
         assert_eq!(t.read(0x1000_0040, 4), 9, "failed sc does not write");
@@ -411,18 +422,18 @@ mod tests {
         let mut t = mk();
         t.submit(0, TcdmRequest { addr: 0x1000_0040, op: MemOp::Amo { op: AmoOp::LrW, data: 0 } });
         for c in 0..4 {
-            t.step(c);
+            t.tick(c);
         }
         t.take_response(0, 3);
         // Port 1 stores to the reserved address.
         t.submit(1, TcdmRequest { addr: 0x1000_0040, op: MemOp::Write { data: 3, size: 4 } });
         for c in 4..6 {
-            t.step(c);
+            t.tick(c);
         }
         t.take_response(1, 5);
         t.submit(0, TcdmRequest { addr: 0x1000_0040, op: MemOp::Amo { op: AmoOp::ScW, data: 9 } });
         for c in 6..10 {
-            t.step(c);
+            t.tick(c);
         }
         assert_eq!(t.take_response(0, 9).unwrap().data, 1, "reservation was clobbered");
     }

@@ -9,6 +9,7 @@
 //! Requests are arbitrated round-robin among the hive's cores.
 
 use crate::isa::MulDivOp;
+use crate::sim::{Cycle, Tick};
 
 /// A multiply/divide request from a core.
 #[derive(Debug, Clone, Copy)]
@@ -125,8 +126,19 @@ impl MulDivUnit {
         self.waiting[core] = Some(req);
     }
 
-    /// Advance one cycle: arbitrate one waiting request into execution.
-    pub fn step(&mut self, now: u64) {
+    /// Take a completed response for `core`, if any.
+    pub fn take_response(&mut self, core: usize, now: u64) -> Option<MulDivResp> {
+        let idx = self
+            .inflight
+            .iter()
+            .position(|f| f.core == core && f.ready_at <= now)?;
+        Some(self.inflight.swap_remove(idx).resp)
+    }
+}
+
+impl Tick for MulDivUnit {
+    /// Arbitrate one waiting request into execution.
+    fn tick(&mut self, now: Cycle) {
         // Count contention: more than one waiting request this cycle.
         let waiting = self.waiting.iter().filter(|w| w.is_some()).count();
         if waiting > 1 {
@@ -161,13 +173,8 @@ impl MulDivUnit {
         }
     }
 
-    /// Take a completed response for `core`, if any.
-    pub fn take_response(&mut self, core: usize, now: u64) -> Option<MulDivResp> {
-        let idx = self
-            .inflight
-            .iter()
-            .position(|f| f.core == core && f.ready_at <= now)?;
-        Some(self.inflight.swap_remove(idx).resp)
+    fn name(&self) -> &'static str {
+        "muldiv"
     }
 }
 
@@ -210,7 +217,7 @@ mod tests {
     fn mul_two_cycle_latency() {
         let mut u = MulDivUnit::new(2);
         u.submit(0, MulDivReq { op: MulDivOp::Mul, rs1: 6, rs2: 7, rd: 5 });
-        u.step(0);
+        u.tick(0);
         assert_eq!(u.take_response(0, 0), None);
         assert_eq!(u.take_response(0, 1), None);
         assert_eq!(u.take_response(0, 2), Some(MulDivResp { rd: 5, value: 42 }));
@@ -226,16 +233,16 @@ mod tests {
     fn divider_blocks_second_division() {
         let mut u = MulDivUnit::new(2);
         u.submit(0, MulDivReq { op: MulDivOp::Divu, rs1: u32::MAX, rs2: 3, rd: 1 });
-        u.step(0);
+        u.tick(0);
         u.submit(1, MulDivReq { op: MulDivOp::Divu, rs1: 10, rs2: 2, rd: 2 });
-        u.step(1);
+        u.tick(1);
         // Core 1's division cannot start while the divider is busy.
         assert!(u.take_response(1, 5).is_none());
         // After the first division retires, the second proceeds.
         let lat = div_cycles(u32::MAX, 3);
         assert!(u.take_response(0, lat).is_some());
         for c in 2..=lat + 1 {
-            u.step(c);
+            u.tick(c);
         }
         let lat2 = div_cycles(10, 2);
         assert!(u.take_response(1, lat + 1 + lat2).is_some());
@@ -246,8 +253,8 @@ mod tests {
         let mut u = MulDivUnit::new(2);
         u.submit(0, MulDivReq { op: MulDivOp::Mul, rs1: 1, rs2: 1, rd: 1 });
         u.submit(1, MulDivReq { op: MulDivOp::Mul, rs1: 2, rs2: 2, rd: 2 });
-        u.step(0); // grants one (say core 0), rr moves past it
-        u.step(1); // grants the other
+        u.tick(0); // grants one (say core 0), rr moves past it
+        u.tick(1); // grants the other
         assert!(u.take_response(0, 3).is_some());
         assert!(u.take_response(1, 3).is_some());
         assert!(u.contention_cycles >= 1);

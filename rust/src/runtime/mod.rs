@@ -2,15 +2,16 @@
 //! (`artifacts/*.hlo.txt`) and execute them from Rust — python never runs
 //! at simulation time.
 //!
-//! Flow (see /opt/xla-example/load_hlo/): `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
-//! Artifacts are compiled once and cached per process.
+//! The PJRT/XLA backend needs the `xla` crate, which the offline build
+//! image does not ship. It is therefore gated behind the `golden` cargo
+//! feature (see `Cargo.toml`); the default build compiles a stub with the
+//! same API whose constructor returns a descriptive error, so every
+//! consumer (coordinator `validate`, the dgemm example, the validation
+//! sweep) degrades gracefully instead of failing to build.
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::path::PathBuf;
 
-use anyhow::{anyhow, Context, Result};
+use crate::Result;
 
 /// Locate the artifacts directory (env override, then repo-relative).
 pub fn artifacts_dir() -> PathBuf {
@@ -22,148 +23,63 @@ pub fn artifacts_dir() -> PathBuf {
     p
 }
 
-/// A compiled golden model executable.
-pub struct Golden {
-    exe: xla::PjRtLoadedExecutable,
-}
+#[cfg(feature = "golden")]
+mod pjrt;
+#[cfg(feature = "golden")]
+pub use pjrt::{Golden, GoldenRuntime};
 
-impl Golden {
-    /// Execute with f64 array inputs; returns the flattened f64 outputs of
-    /// the (single-element) result tuple.
-    pub fn run(&self, inputs: &[Vec<f64>]) -> Result<Vec<f64>> {
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|v| xla::Literal::vec1(v.as_slice()))
-            .collect();
-        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<f64>()?)
-    }
-}
+#[cfg(not(feature = "golden"))]
+mod stub {
+    use std::path::Path;
 
-/// Process-wide runtime: one CPU PJRT client + compiled-executable cache.
-pub struct GoldenRuntime {
-    client: xla::PjRtClient,
-    cache: Mutex<HashMap<String, std::sync::Arc<Golden>>>,
-    dir: PathBuf,
-}
+    use crate::kernels::KernelIo;
+    use crate::Result;
 
-impl GoldenRuntime {
-    pub fn new() -> Result<GoldenRuntime> {
-        Ok(GoldenRuntime {
-            client: xla::PjRtClient::cpu().context("PJRT CPU client")?,
-            cache: Mutex::new(HashMap::new()),
-            dir: artifacts_dir(),
-        })
+    const UNAVAILABLE: &str = "golden runtime unavailable: built without the `golden` \
+         feature (requires the PJRT/XLA backend, absent in the offline image)";
+
+    /// Stub of the compiled golden-model executable.
+    pub struct Golden {
+        _private: (),
     }
 
-    pub fn with_dir(dir: &Path) -> Result<GoldenRuntime> {
-        let mut rt = GoldenRuntime::new()?;
-        rt.dir = dir.to_path_buf();
-        Ok(rt)
-    }
-
-    /// Load + compile (cached) the artifact `name` (e.g. "dgemm_n32").
-    pub fn get(&self, name: &str) -> Result<std::sync::Arc<Golden>> {
-        let mut cache = self.cache.lock().unwrap();
-        if let Some(g) = cache.get(name) {
-            return Ok(g.clone());
-        }
-        let path = self.dir.join(format!("{name}.hlo.txt"));
-        let path_s = path
-            .to_str()
-            .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
-        let proto = xla::HloModuleProto::from_text_file(path_s)
-            .with_context(|| format!("loading {path_s} (run `make artifacts`)"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).context("XLA compile")?;
-        let g = std::sync::Arc::new(Golden { exe });
-        cache.insert(name.to_string(), g.clone());
-        Ok(g)
-    }
-
-    /// Validate a finished kernel run against its golden model: feeds the
-    /// simulator's inputs to the compiled artifact and compares with the
-    /// simulator's output. Returns max |err|.
-    pub fn validate(
-        &self,
-        kernel: &str,
-        n: usize,
-        io: &crate::kernels::KernelIo,
-        rtol: f64,
-        atol: f64,
-    ) -> Result<f64> {
-        let name = format!("{kernel}_n{n}");
-        let golden = self.get(&name)?;
-        let inputs: Vec<Vec<f64>> = io.inputs.iter().map(|(_, v)| v.clone()).collect();
-        let want = golden.run(&inputs)?;
-        crate::kernels::allclose(&io.output, &want, rtol, atol)
-            .map_err(|e| anyhow!("golden mismatch for {name}: {e}"))
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::kernels::{self, Params, Variant};
-
-    fn runtime() -> GoldenRuntime {
-        GoldenRuntime::new().expect("PJRT client")
-    }
-
-    #[test]
-    fn dot_golden_validates_simulation() {
-        let rt = runtime();
-        let k = kernels::kernel_by_name("dot").unwrap();
-        let p = Params::new(256, 1);
-        let r = kernels::run_kernel(k, Variant::SsrFrep, &p).unwrap();
-        let io = (k.io)(&r.cluster, &p);
-        let err = rt.validate("dot", 256, &io, 1e-9, 1e-9).unwrap();
-        assert!(err < 1e-9, "err {err}");
-    }
-
-    #[test]
-    fn dgemm_golden_validates_simulation_all_variants() {
-        let rt = runtime();
-        let k = kernels::kernel_by_name("dgemm").unwrap();
-        for v in [Variant::Baseline, Variant::Ssr, Variant::SsrFrep] {
-            let p = Params::new(16, 8);
-            let r = kernels::run_kernel(k, v, &p).unwrap();
-            let io = (k.io)(&r.cluster, &p);
-            let err = rt.validate("dgemm", 16, &io, 1e-11, 1e-12).unwrap();
-            assert!(err < 1e-11, "{v:?}: err {err}");
+    impl Golden {
+        pub fn run(&self, _inputs: &[Vec<f64>]) -> Result<Vec<f64>> {
+            Err(UNAVAILABLE.into())
         }
     }
 
-    #[test]
-    fn conv2d_knn_relu_axpy_goldens() {
-        let rt = runtime();
-        for (name, n, v) in [
-            ("conv2d", 32usize, Variant::SsrFrep),
-            ("knn", 256, Variant::SsrFrep),
-            ("relu", 256, Variant::Ssr),
-            ("axpy", 256, Variant::Ssr),
-        ] {
-            let k = kernels::kernel_by_name(name).unwrap();
-            let p = Params::new(n, 8);
-            let r = kernels::run_kernel(k, v, &p).unwrap();
-            let io = (k.io)(&r.cluster, &p);
-            let err = rt.validate(name, n, &io, 1e-8, 1e-9).unwrap();
-            assert!(err < 1e-8, "{name}: err {err}");
-        }
+    /// Stub runtime: constructors fail with a descriptive error so callers
+    /// can skip validation rather than crash.
+    pub struct GoldenRuntime {
+        _private: (),
     }
 
-    #[test]
-    fn fft_golden_validates_simulation() {
-        let rt = runtime();
-        let k = kernels::kernel_by_name("fft").unwrap();
-        let p = Params::new(256, 8);
-        let r = kernels::run_kernel(k, Variant::SsrFrep, &p).unwrap();
-        let mut io = (k.io)(&r.cluster, &p);
-        // The golden takes only the input signal (twiddles are internal).
-        io.inputs.truncate(1);
-        let err = rt.validate("fft", 256, &io, 1e-9, 1e-9).unwrap();
-        assert!(err < 1e-9, "err {err}");
+    impl GoldenRuntime {
+        pub fn new() -> Result<GoldenRuntime> {
+            Err(UNAVAILABLE.into())
+        }
+
+        pub fn with_dir(_dir: &Path) -> Result<GoldenRuntime> {
+            Err(UNAVAILABLE.into())
+        }
+
+        pub fn get(&self, _name: &str) -> Result<std::sync::Arc<Golden>> {
+            Err(UNAVAILABLE.into())
+        }
+
+        pub fn validate(
+            &self,
+            _kernel: &str,
+            _n: usize,
+            _io: &KernelIo,
+            _rtol: f64,
+            _atol: f64,
+        ) -> Result<f64> {
+            Err(UNAVAILABLE.into())
+        }
     }
 }
+
+#[cfg(not(feature = "golden"))]
+pub use stub::{Golden, GoldenRuntime};

@@ -1,0 +1,156 @@
+//! The real PJRT/XLA golden-model backend (`--features golden`).
+//!
+//! Flow (see /opt/xla-example/load_hlo/): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Artifacts are compiled once and cached per process.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use super::artifacts_dir;
+use crate::Result;
+
+/// A compiled golden model executable.
+pub struct Golden {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Golden {
+    /// Execute with f64 array inputs; returns the flattened f64 outputs of
+    /// the (single-element) result tuple.
+    pub fn run(&self, inputs: &[Vec<f64>]) -> Result<Vec<f64>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|v| xla::Literal::vec1(v.as_slice()))
+            .collect();
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f64>()?)
+    }
+}
+
+/// Process-wide runtime: one CPU PJRT client + compiled-executable cache.
+pub struct GoldenRuntime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<Golden>>>,
+    dir: std::path::PathBuf,
+}
+
+impl GoldenRuntime {
+    pub fn new() -> Result<GoldenRuntime> {
+        Ok(GoldenRuntime {
+            client: xla::PjRtClient::cpu().map_err(|e| format!("PJRT CPU client: {e}"))?,
+            cache: Mutex::new(HashMap::new()),
+            dir: artifacts_dir(),
+        })
+    }
+
+    pub fn with_dir(dir: &Path) -> Result<GoldenRuntime> {
+        let mut rt = GoldenRuntime::new()?;
+        rt.dir = dir.to_path_buf();
+        Ok(rt)
+    }
+
+    /// Load + compile (cached) the artifact `name` (e.g. "dgemm_n32").
+    pub fn get(&self, name: &str) -> Result<std::sync::Arc<Golden>> {
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(g) = cache.get(name) {
+            return Ok(g.clone());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let path_s = path.to_str().ok_or("non-utf8 artifact path")?;
+        let proto = xla::HloModuleProto::from_text_file(path_s)
+            .map_err(|e| format!("loading {path_s} (run `make artifacts`): {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| format!("XLA compile: {e}"))?;
+        let g = std::sync::Arc::new(Golden { exe });
+        cache.insert(name.to_string(), g.clone());
+        Ok(g)
+    }
+
+    /// Validate a finished kernel run against its golden model: feeds the
+    /// simulator's inputs to the compiled artifact and compares with the
+    /// simulator's output. Returns max |err|.
+    pub fn validate(
+        &self,
+        kernel: &str,
+        n: usize,
+        io: &crate::kernels::KernelIo,
+        rtol: f64,
+        atol: f64,
+    ) -> Result<f64> {
+        let name = format!("{kernel}_n{n}");
+        let golden = self.get(&name)?;
+        let inputs: Vec<Vec<f64>> = io.inputs.iter().map(|(_, v)| v.clone()).collect();
+        let want = golden.run(&inputs)?;
+        crate::kernels::allclose(&io.output, &want, rtol, atol)
+            .map_err(|e| format!("golden mismatch for {name}: {e}").into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{self, Params, Variant};
+
+    fn runtime() -> GoldenRuntime {
+        GoldenRuntime::new().expect("PJRT client")
+    }
+
+    #[test]
+    fn dot_golden_validates_simulation() {
+        let rt = runtime();
+        let k = kernels::kernel_by_name("dot").unwrap();
+        let p = Params::new(256, 1);
+        let r = kernels::run_kernel(k, Variant::SsrFrep, &p).unwrap();
+        let io = (k.io)(&r.cluster, &p);
+        let err = rt.validate("dot", 256, &io, 1e-9, 1e-9).unwrap();
+        assert!(err < 1e-9, "err {err}");
+    }
+
+    #[test]
+    fn dgemm_golden_validates_simulation_all_variants() {
+        let rt = runtime();
+        let k = kernels::kernel_by_name("dgemm").unwrap();
+        for v in [Variant::Baseline, Variant::Ssr, Variant::SsrFrep] {
+            let p = Params::new(16, 8);
+            let r = kernels::run_kernel(k, v, &p).unwrap();
+            let io = (k.io)(&r.cluster, &p);
+            let err = rt.validate("dgemm", 16, &io, 1e-11, 1e-12).unwrap();
+            assert!(err < 1e-11, "{v:?}: err {err}");
+        }
+    }
+
+    #[test]
+    fn conv2d_knn_relu_axpy_goldens() {
+        let rt = runtime();
+        for (name, n, v) in [
+            ("conv2d", 32usize, Variant::SsrFrep),
+            ("knn", 256, Variant::SsrFrep),
+            ("relu", 256, Variant::Ssr),
+            ("axpy", 256, Variant::Ssr),
+        ] {
+            let k = kernels::kernel_by_name(name).unwrap();
+            let p = Params::new(n, 8);
+            let r = kernels::run_kernel(k, v, &p).unwrap();
+            let io = (k.io)(&r.cluster, &p);
+            let err = rt.validate(name, n, &io, 1e-8, 1e-9).unwrap();
+            assert!(err < 1e-8, "{name}: err {err}");
+        }
+    }
+
+    #[test]
+    fn fft_golden_validates_simulation() {
+        let rt = runtime();
+        let k = kernels::kernel_by_name("fft").unwrap();
+        let p = Params::new(256, 8);
+        let r = kernels::run_kernel(k, Variant::SsrFrep, &p).unwrap();
+        let mut io = (k.io)(&r.cluster, &p);
+        // The golden takes only the input signal (twiddles are internal).
+        io.inputs.truncate(1);
+        let err = rt.validate("fft", 256, &io, 1e-9, 1e-9).unwrap();
+        assert!(err < 1e-9, "err {err}");
+    }
+}

@@ -1,0 +1,253 @@
+//! The cycle engine: a deterministic, phase-ordered clock scheduler.
+//!
+//! Every clocked component of the cluster speaks one interface:
+//!
+//! * [`Tick`] — a self-contained component that advances one cycle when
+//!   handed the current cycle number (instruction caches, external memory,
+//!   TCDM, shared mul/div units).
+//! * [`ClockDomain`] — an ordered schedule of named *phases* over some
+//!   system state `S`. Components that need whole-system context (the core
+//!   complexes, which talk to memories owned by their siblings) advance
+//!   inside a phase rather than through `Tick`.
+//!
+//! ## Determinism contract
+//!
+//! Phases run in **registration order**, every cycle, with the same cycle
+//! number handed to each phase. There is no event queue, no reordering and
+//! no wall-clock input: two `ClockDomain`s with the same schedule driving
+//! the same initial state produce bit-identical histories. The cluster's
+//! canonical schedule and the per-phase ordering guarantees are documented
+//! in `DESIGN.md` §"Cycle engine".
+
+/// Simulation time, in clock cycles of the (single) cluster clock.
+pub type Cycle = u64;
+
+/// A self-contained clocked component.
+///
+/// `tick(now)` performs all state transitions of cycle `now`. Calls are
+/// made exactly once per cycle, with strictly increasing `now`, by the
+/// phase that owns the component. Implementations must be deterministic
+/// functions of their own state and `now`.
+pub trait Tick {
+    /// Advance one clock cycle.
+    fn tick(&mut self, now: Cycle);
+
+    /// Stable component name (for schedules, traces and diagnostics).
+    fn name(&self) -> &'static str {
+        "component"
+    }
+}
+
+/// Tick a homogeneous slice of components (a common phase body: "all I$
+/// systems settle", "all mul/div units arbitrate").
+pub fn tick_all<T: Tick>(components: &mut [T], now: Cycle) {
+    for c in components {
+        c.tick(now);
+    }
+}
+
+/// One named phase of the cycle schedule: a plain function over the system
+/// state. Function pointers (not closures) keep the schedule `Copy`-able,
+/// comparable and trivially `Send`, and make the schedule itself data —
+/// the determinism tests replay it phase by phase.
+pub struct Phase<S: ?Sized> {
+    pub name: &'static str,
+    pub run: fn(&mut S, Cycle),
+}
+
+impl<S: ?Sized> Clone for Phase<S> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+
+impl<S: ?Sized> Copy for Phase<S> {}
+
+/// A deterministic clock scheduler: an ordered list of phases plus the
+/// cycle counter they advance.
+///
+/// The domain may either own the drive loop ([`ClockDomain::cycle`]) when
+/// the state lives outside it, or be embedded *inside* the state it
+/// schedules (the [`crate::cluster::Cluster`] pattern), in which case the
+/// owner iterates [`ClockDomain::phase`] by index and then calls
+/// [`ClockDomain::advance`].
+pub struct ClockDomain<S: ?Sized> {
+    now: Cycle,
+    phases: Vec<Phase<S>>,
+}
+
+impl<S: ?Sized> Default for ClockDomain<S> {
+    fn default() -> Self {
+        ClockDomain::new()
+    }
+}
+
+impl<S: ?Sized> ClockDomain<S> {
+    pub fn new() -> Self {
+        ClockDomain { now: 0, phases: Vec::new() }
+    }
+
+    /// Append a phase to the schedule. Registration order is execution
+    /// order — forever (the determinism contract).
+    pub fn register(&mut self, name: &'static str, run: fn(&mut S, Cycle)) {
+        self.phases.push(Phase { name, run });
+    }
+
+    /// Current cycle (the cycle the *next* phase pass will simulate).
+    pub fn now(&self) -> Cycle {
+        self.now
+    }
+
+    /// Number of registered phases.
+    pub fn num_phases(&self) -> usize {
+        self.phases.len()
+    }
+
+    /// Phase `i` of the schedule (panics when out of range). Returned by
+    /// value so the caller holds no borrow while running it.
+    pub fn phase(&self, i: usize) -> Phase<S> {
+        self.phases[i]
+    }
+
+    /// The schedule's phase names, in execution order.
+    pub fn schedule(&self) -> Vec<&'static str> {
+        self.phases.iter().map(|p| p.name).collect()
+    }
+
+    /// Advance the clock by one cycle (used by embedded domains after the
+    /// owner has run every phase of the current cycle).
+    pub fn advance(&mut self) {
+        self.now += 1;
+    }
+
+    /// Run one full cycle against external state: every phase in order,
+    /// then advance the clock.
+    pub fn cycle(&mut self, state: &mut S) {
+        let now = self.now;
+        for p in &self.phases {
+            (p.run)(state, now);
+        }
+        self.now += 1;
+    }
+
+    /// Run cycles until `done(state)` or `max_cycles` is reached. Returns
+    /// the final cycle count, or `Err` with the cycle at which the budget
+    /// ran out.
+    pub fn run_until(
+        &mut self,
+        state: &mut S,
+        max_cycles: Cycle,
+        mut done: impl FnMut(&S) -> bool,
+    ) -> Result<Cycle, Cycle> {
+        while !done(state) {
+            if self.now >= max_cycles {
+                return Err(self.now);
+            }
+            self.cycle(state);
+        }
+        Ok(self.now)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A toy component: counts its ticks and records the cycle numbers.
+    struct Counter {
+        ticks: u64,
+        last_now: Option<Cycle>,
+    }
+
+    impl Tick for Counter {
+        fn tick(&mut self, now: Cycle) {
+            // `now` must be strictly increasing, one call per cycle.
+            if let Some(prev) = self.last_now {
+                assert_eq!(now, prev + 1);
+            } else {
+                assert_eq!(now, 0);
+            }
+            self.last_now = Some(now);
+            self.ticks += 1;
+        }
+
+        fn name(&self) -> &'static str {
+            "counter"
+        }
+    }
+
+    struct Sys {
+        counters: Vec<Counter>,
+        order_log: Vec<&'static str>,
+    }
+
+    fn phase_a(s: &mut Sys, now: Cycle) {
+        s.order_log.push("a");
+        tick_all(&mut s.counters, now);
+    }
+
+    fn phase_b(s: &mut Sys, _now: Cycle) {
+        s.order_log.push("b");
+    }
+
+    fn domain() -> ClockDomain<Sys> {
+        let mut d = ClockDomain::new();
+        d.register("a", phase_a);
+        d.register("b", phase_b);
+        d
+    }
+
+    #[test]
+    fn phases_run_in_registration_order() {
+        let mut sys = Sys {
+            counters: vec![Counter { ticks: 0, last_now: None }],
+            order_log: Vec::new(),
+        };
+        let mut d = domain();
+        assert_eq!(d.schedule(), ["a", "b"]);
+        d.cycle(&mut sys);
+        d.cycle(&mut sys);
+        assert_eq!(sys.order_log, ["a", "b", "a", "b"]);
+        assert_eq!(sys.counters[0].ticks, 2);
+        assert_eq!(d.now(), 2);
+    }
+
+    #[test]
+    fn embedded_iteration_matches_cycle() {
+        // Driving phases by index (the embedded-domain pattern) must be
+        // indistinguishable from ClockDomain::cycle.
+        let mut s1 = Sys { counters: vec![], order_log: Vec::new() };
+        let mut s2 = Sys { counters: vec![], order_log: Vec::new() };
+        let mut d1 = domain();
+        let mut d2 = domain();
+        for _ in 0..3 {
+            d1.cycle(&mut s1);
+        }
+        for _ in 0..3 {
+            let now = d2.now();
+            for i in 0..d2.num_phases() {
+                let p = d2.phase(i);
+                (p.run)(&mut s2, now);
+            }
+            d2.advance();
+        }
+        assert_eq!(s1.order_log, s2.order_log);
+        assert_eq!(d1.now(), d2.now());
+    }
+
+    #[test]
+    fn run_until_stops_and_reports_budget() {
+        struct S {
+            n: u64,
+        }
+        let mut d: ClockDomain<S> = ClockDomain::new();
+        d.register("inc", |s: &mut S, _| s.n += 1);
+        let mut s = S { n: 0 };
+        assert_eq!(d.run_until(&mut s, 100, |s| s.n >= 10), Ok(10));
+        assert_eq!(s.n, 10);
+        let mut d2: ClockDomain<S> = ClockDomain::new();
+        d2.register("inc", |s: &mut S, _| s.n += 1);
+        let mut s2 = S { n: 0 };
+        assert_eq!(d2.run_until(&mut s2, 5, |s| s.n >= 10), Err(5));
+    }
+}

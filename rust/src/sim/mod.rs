@@ -1,3 +1,15 @@
-//! Cycle engine, trace infrastructure, and in-tree test utilities.
+//! The simulation engine: cycle scheduling ([`engine`]), instruction-level
+//! trace infrastructure ([`trace`]), and in-tree randomized-test utilities
+//! ([`proptest`]).
+//!
+//! Every clocked component implements [`engine::Tick`]; the cluster's
+//! per-cycle orchestration is an ordered phase schedule in an
+//! [`engine::ClockDomain`] (see `DESIGN.md` §"Cycle engine" for the
+//! ordering contract).
 
+pub mod engine;
 pub mod proptest;
+pub mod trace;
+
+pub use engine::{Cycle, ClockDomain, Phase, Tick};
+pub use trace::{TraceEvent, TraceMode, TraceSink, TraceUnit};

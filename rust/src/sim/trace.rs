@@ -1,0 +1,225 @@
+//! Instruction-level trace infrastructure (paper Fig. 6-style dual-lane
+//! traces), decoupled from the cluster so tracing can be switched on per
+//! experiment — unbounded, ring-buffered, or off — without recompiling.
+
+use std::collections::VecDeque;
+
+/// The issuing unit of a trace event. Stable enum: renderers, filters and
+/// the determinism hash key off these variants, so they are append-only.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TraceUnit {
+    /// The Snitch integer pipeline retired an instruction.
+    Snitch,
+    /// The FP subsystem issued an instruction (possibly sequencer-fed).
+    Fpss,
+}
+
+impl TraceUnit {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TraceUnit::Snitch => "snitch",
+            TraceUnit::Fpss => "fpss",
+        }
+    }
+}
+
+/// A cycle-stamped trace event.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub cycle: u64,
+    pub core: usize,
+    pub unit: TraceUnit,
+    pub text: String,
+}
+
+/// How a [`TraceSink`] stores events.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceMode {
+    /// Recording disabled; `record` is a no-op.
+    Off,
+    /// Keep every event (the Fig. 6 replay path).
+    Unbounded,
+    /// Keep only the most recent `capacity` events (long multi-core runs:
+    /// bounded memory, still a useful tail for debugging).
+    Ring(usize),
+}
+
+/// Event sink attached to a cluster. All recording goes through here; the
+/// mode is plain runtime data, chosen per experiment.
+#[derive(Debug, Clone)]
+pub struct TraceSink {
+    mode: TraceMode,
+    events: VecDeque<TraceEvent>,
+    /// Events discarded by the ring (total recorded = len + dropped).
+    dropped: u64,
+}
+
+impl TraceSink {
+    pub fn new(mode: TraceMode) -> TraceSink {
+        let events = match mode {
+            TraceMode::Ring(cap) => VecDeque::with_capacity(cap.max(1)),
+            _ => VecDeque::new(),
+        };
+        TraceSink { mode, events, dropped: 0 }
+    }
+
+    pub fn disabled() -> TraceSink {
+        TraceSink::new(TraceMode::Off)
+    }
+
+    pub fn unbounded() -> TraceSink {
+        TraceSink::new(TraceMode::Unbounded)
+    }
+
+    pub fn ring(capacity: usize) -> TraceSink {
+        TraceSink::new(TraceMode::Ring(capacity))
+    }
+
+    pub fn mode(&self) -> TraceMode {
+        self.mode
+    }
+
+    /// True when events should be produced. Callers check this *before*
+    /// formatting event text, so a disabled sink costs one branch.
+    pub fn enabled(&self) -> bool {
+        self.mode != TraceMode::Off
+    }
+
+    /// Record one event according to the sink mode.
+    pub fn record(&mut self, ev: TraceEvent) {
+        match self.mode {
+            TraceMode::Off => {}
+            TraceMode::Unbounded => self.events.push_back(ev),
+            TraceMode::Ring(cap) => {
+                let cap = cap.max(1);
+                if self.events.len() == cap {
+                    self.events.pop_front();
+                    self.dropped += 1;
+                }
+                self.events.push_back(ev);
+            }
+        }
+    }
+
+    /// Retained events, oldest first.
+    pub fn iter(&self) -> impl Iterator<Item = &TraceEvent> {
+        self.events.iter()
+    }
+
+    /// Number of retained events.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Events discarded by a ring sink.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Total events ever recorded (retained + dropped).
+    pub fn total_recorded(&self) -> u64 {
+        self.dropped + self.events.len() as u64
+    }
+
+    /// Order-sensitive FNV-1a hash over every retained event — the compact
+    /// fingerprint the determinism tests compare across engine paths.
+    pub fn event_hash(&self) -> u64 {
+        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = FNV_OFFSET;
+        let mut eat = |bytes: &[u8]| {
+            for &b in bytes {
+                h ^= u64::from(b);
+                h = h.wrapping_mul(FNV_PRIME);
+            }
+        };
+        for ev in &self.events {
+            eat(&ev.cycle.to_le_bytes());
+            eat(&(ev.core as u64).to_le_bytes());
+            eat(&[match ev.unit {
+                TraceUnit::Snitch => 0u8,
+                TraceUnit::Fpss => 1u8,
+            }]);
+            eat(ev.text.as_bytes());
+            eat(&[0xFF]); // event separator
+        }
+        h
+    }
+
+    /// Drop all retained events (keeps the mode).
+    pub fn clear(&mut self) {
+        self.events.clear();
+        self.dropped = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(cycle: u64, text: &str) -> TraceEvent {
+        TraceEvent { cycle, core: 0, unit: TraceUnit::Snitch, text: text.to_string() }
+    }
+
+    #[test]
+    fn off_sink_records_nothing() {
+        let mut s = TraceSink::disabled();
+        assert!(!s.enabled());
+        s.record(ev(0, "addi"));
+        assert!(s.is_empty());
+        assert_eq!(s.total_recorded(), 0);
+    }
+
+    #[test]
+    fn unbounded_keeps_everything_in_order() {
+        let mut s = TraceSink::unbounded();
+        for c in 0..100 {
+            s.record(ev(c, "x"));
+        }
+        assert_eq!(s.len(), 100);
+        let cycles: Vec<u64> = s.iter().map(|e| e.cycle).collect();
+        assert_eq!(cycles, (0..100).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn ring_keeps_tail_and_counts_drops() {
+        let mut s = TraceSink::ring(4);
+        for c in 0..10 {
+            s.record(ev(c, "x"));
+        }
+        assert_eq!(s.len(), 4);
+        assert_eq!(s.dropped(), 6);
+        assert_eq!(s.total_recorded(), 10);
+        let cycles: Vec<u64> = s.iter().map(|e| e.cycle).collect();
+        assert_eq!(cycles, [6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn hash_is_order_and_content_sensitive() {
+        let mut a = TraceSink::unbounded();
+        let mut b = TraceSink::unbounded();
+        a.record(ev(1, "x"));
+        a.record(ev(2, "y"));
+        b.record(ev(1, "x"));
+        b.record(ev(2, "y"));
+        assert_eq!(a.event_hash(), b.event_hash());
+        let mut c = TraceSink::unbounded();
+        c.record(ev(2, "y"));
+        c.record(ev(1, "x"));
+        assert_ne!(a.event_hash(), c.event_hash());
+        let mut d = TraceSink::unbounded();
+        d.record(ev(1, "x"));
+        d.record(ev(2, "z"));
+        assert_ne!(a.event_hash(), d.event_hash());
+    }
+
+    #[test]
+    fn unit_labels_stable() {
+        assert_eq!(TraceUnit::Snitch.as_str(), "snitch");
+        assert_eq!(TraceUnit::Fpss.as_str(), "fpss");
+    }
+}

@@ -1,0 +1,191 @@
+//! Engine and sweep determinism (the ISSUE 1 acceptance criteria): the
+//! same assembled program yields identical final cycle count, stats, and
+//! trace-event hash whether driven by the hand-ordered reference loop
+//! (`Cluster::cycle_direct`), the `ClockDomain` schedule (`Cluster::cycle`),
+//! or inside a multi-worker coordinator sweep — and sweep *rendering* is
+//! byte-identical for every `--jobs` width.
+
+use snitch_sim::asm::assemble;
+use snitch_sim::cluster::{Cluster, ClusterConfig};
+use snitch_sim::coordinator::{render_table2, run_sweep, Experiment};
+use snitch_sim::kernels::{self, Params, Variant};
+use snitch_sim::sim::TraceSink;
+
+/// A 4-core program touching every clocked component: core 0 runs an
+/// SSR+FREP staggered dot product (I$, FP-SS, sequencer, both streamer
+/// lanes), the other cores do mul/div offloads and TCDM atomics, and all
+/// cores meet at the hardware barrier.
+const PROG: &str = r#"
+    .equ PERIPH, 0x20000000
+    csrr a0, mhartid
+    bnez a0, worker
+    li   t0, 15
+    csrw ssr0_bound0, t0
+    csrw ssr1_bound0, t0
+    li   t1, 8
+    csrw ssr0_stride0, t1
+    csrw ssr1_stride0, t1
+    li   t2, 0x10000000
+    csrw ssr0_rptr0, t2
+    li   t3, 0x10000100
+    csrw ssr1_rptr0, t3
+    csrwi ssr, 1
+    fcvt.d.w ft3, zero
+    fmv.d ft4, ft3
+    fmv.d ft5, ft3
+    fmv.d ft6, ft3
+    li   t4, 15
+    frep.o t4, 1, 0b1100, 3
+    fmadd.d ft3, ft0, ft1, ft3
+    fadd.d ft3, ft3, ft4
+    fadd.d ft5, ft5, ft6
+    fadd.d ft3, ft3, ft5
+    csrwi ssr, 0
+    li   t5, 0x10000200
+    fsd  ft3, 0(t5)
+    fence
+    j    join
+worker:
+    li   t0, 0x10000300
+    amoadd.w zero, a0, (t0)
+    mul  a1, a0, a0
+    li   t1, 0x10000400
+    slli a2, a0, 2
+    add  t1, t1, a2
+    sw   a1, 0(t1)
+join:
+    li   t2, PERIPH
+    lw   zero, 12(t2)
+    ecall
+    .data 0x10000000
+    .double 1,2,3,4,5,6,7,8,9,10,11,12,13,14,15,16
+    .data 0x10000100
+    .double 1,1,1,1,1,1,1,1,1,1,1,1,1,1,1,1
+"#;
+
+fn traced_cluster() -> Cluster {
+    let prog = assemble(PROG).expect("asm");
+    let mut cfg = ClusterConfig::with_cores(4);
+    cfg.trace = true;
+    let mut cl = Cluster::new(cfg);
+    cl.load(&prog);
+    cl
+}
+
+fn drive(cl: &mut Cluster, one_cycle: fn(&mut Cluster)) {
+    let mut budget = 1_000_000u64;
+    while !cl.done() {
+        assert!(budget > 0, "program did not finish");
+        budget -= 1;
+        one_cycle(cl);
+    }
+}
+
+fn check_results(cl: &Cluster) {
+    // dot = sum(1..=16) + staggered reduction = 136.
+    assert_eq!(f64::from_bits(cl.tcdm.read(0x1000_0200, 8)), 136.0);
+    // amoadd over harts 1..=3.
+    assert_eq!(cl.tcdm.read(0x1000_0300, 4), 1 + 2 + 3);
+    for i in 1..4u64 {
+        assert_eq!(cl.tcdm.read(0x1000_0400 + 4 * i as u32, 4), i * i);
+    }
+}
+
+#[test]
+fn engine_matches_direct_loop() {
+    let mut via_engine = traced_cluster();
+    drive(&mut via_engine, Cluster::cycle);
+    check_results(&via_engine);
+
+    let mut via_direct = traced_cluster();
+    drive(&mut via_direct, Cluster::cycle_direct);
+    check_results(&via_direct);
+
+    assert_eq!(via_engine.now, via_direct.now, "final cycle count");
+    assert_eq!(
+        via_engine.trace.len(),
+        via_direct.trace.len(),
+        "trace event count"
+    );
+    assert_eq!(
+        via_engine.trace.event_hash(),
+        via_direct.trace.event_hash(),
+        "trace event hash"
+    );
+    let se = via_engine.stats();
+    let sd = via_direct.stats();
+    assert_eq!(se.cycles, sd.cycles);
+    assert_eq!(se.cores, sd.cores, "per-core counters");
+    assert_eq!(se.tcdm_accesses, sd.tcdm_accesses);
+    assert_eq!(se.tcdm_conflicts, sd.tcdm_conflicts);
+    assert_eq!(se.icache_l0_misses, sd.icache_l0_misses);
+    assert_eq!(se.muldiv_muls, sd.muldiv_muls);
+}
+
+#[test]
+fn ring_trace_does_not_change_timing() {
+    let mut unbounded = traced_cluster();
+    drive(&mut unbounded, Cluster::cycle);
+
+    let mut ringed = traced_cluster();
+    ringed.set_trace(TraceSink::ring(64));
+    drive(&mut ringed, Cluster::cycle);
+
+    assert_eq!(unbounded.now, ringed.now);
+    assert!(ringed.trace.len() <= 64);
+    assert_eq!(
+        unbounded.trace.len() as u64,
+        ringed.trace.total_recorded(),
+        "ring saw every event"
+    );
+}
+
+fn sweep_experiments() -> Vec<Experiment> {
+    vec![
+        Experiment::new("dgemm", Variant::SsrFrep, 16, 1),
+        Experiment::new("dgemm", Variant::SsrFrep, 16, 2),
+        Experiment::new("dgemm", Variant::SsrFrep, 16, 4),
+        Experiment::new("dgemm", Variant::SsrFrep, 16, 8),
+        Experiment::new("dot", Variant::Ssr, 256, 1),
+        Experiment::new("relu", Variant::SsrFrep, 256, 8),
+    ]
+}
+
+#[test]
+fn sweep_results_independent_of_worker_count() {
+    let exps = sweep_experiments();
+    let serial = run_sweep(&exps, 1);
+    let jobs8 = run_sweep(&exps, 8);
+    for ((e, a), b) in exps.iter().zip(&serial).zip(&jobs8) {
+        assert_eq!(a.cycles, b.cycles, "{e:?}: cycles");
+        assert_eq!(a.stats.cycles, b.stats.cycles, "{e:?}: total cycles");
+        assert_eq!(a.stats.cores, b.stats.cores, "{e:?}: per-core counters");
+        assert_eq!(a.stats.tcdm_accesses, b.stats.tcdm_accesses, "{e:?}");
+        assert_eq!(a.stats.tcdm_conflicts, b.stats.tcdm_conflicts, "{e:?}");
+        assert_eq!(a.max_err.to_bits(), b.max_err.to_bits(), "{e:?}: max_err");
+    }
+    // The sweep path adds nothing over a standalone run of the same
+    // experiment (the third leg: direct loop ≡ engine ≡ sweep).
+    let standalone = kernels::run_kernel(
+        kernels::kernel_by_name("dgemm").unwrap(),
+        Variant::SsrFrep,
+        &Params::new(16, 8),
+    )
+    .unwrap();
+    assert_eq!(standalone.cycles, serial[3].cycles);
+    assert_eq!(standalone.stats.cores, serial[3].stats.cores);
+}
+
+#[test]
+fn table_rendering_byte_identical_across_jobs() {
+    // Table 2-style scaling set, trimmed to test-sized problems.
+    let exps: Vec<Experiment> = [1usize, 2, 4, 8]
+        .into_iter()
+        .map(|c| Experiment::new("dgemm", Variant::SsrFrep, 16, c))
+        .collect();
+    let serial = render_table2(&exps, &run_sweep(&exps, 1));
+    let jobs2 = render_table2(&exps, &run_sweep(&exps, 2));
+    let jobs8 = render_table2(&exps, &run_sweep(&exps, 8));
+    assert_eq!(serial, jobs2);
+    assert_eq!(serial, jobs8);
+}

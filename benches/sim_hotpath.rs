@@ -2,10 +2,14 @@
 //! the metric the §Perf optimization pass tracks — plus sweep-driver
 //! throughput (serial vs multi-worker coordinator execution over the
 //! Table 2 experiment set), the metric the `--jobs` parallelization
+//! improves, plus program-construction throughput (text assemble vs
+//! typed builder vs program cache), the metric the codegen-IR refactor
 //! improves.
 
+use std::hint::black_box;
 use std::time::Instant;
 
+use snitch_sim::asm::assemble;
 use snitch_sim::coordinator::{self, Experiment};
 use snitch_sim::kernels::{self, Params, Variant};
 
@@ -71,7 +75,57 @@ fn sweep_throughput() {
     }
 }
 
+/// Program-construction throughput: generating one kernel program via
+/// (a) the legacy text generator + two-pass assembler, (b) the typed
+/// `ProgramBuilder`, and (c) the per-sweep program cache. Identical
+/// output images (the equivalence test asserts it); the differences are
+/// pure codegen cost.
+fn codegen_throughput() {
+    let reps = 200u32;
+    for (name, v, n, cores) in [
+        ("dgemm", Variant::SsrFrep, 32usize, 8usize),
+        ("fft", Variant::SsrFrep, 256, 8),
+        ("montecarlo", Variant::SsrFrep, 2048, 8),
+    ] {
+        let k = kernels::kernel_by_name(name).unwrap();
+        let p = Params::new(n, cores);
+
+        let t = Instant::now();
+        for _ in 0..reps {
+            let src = (k.gen_text)(v, &p);
+            black_box(assemble(&src).expect("text path"));
+        }
+        let text_dt = t.elapsed().as_secs_f64();
+
+        let t = Instant::now();
+        for _ in 0..reps {
+            black_box((k.gen)(v, &p));
+        }
+        let builder_dt = t.elapsed().as_secs_f64();
+
+        // Warm the cache outside the timed region, then measure hits.
+        black_box(kernels::cached_program(k, v, &p));
+        let t = Instant::now();
+        for _ in 0..reps {
+            black_box(kernels::cached_program(k, v, &p));
+        }
+        let cached_dt = t.elapsed().as_secs_f64();
+
+        let us = |dt: f64| dt / f64::from(reps) * 1e6;
+        println!(
+            "[bench] codegen/{name}/{}x{cores}c: text {:.1} us/prog, builder {:.1} us/prog ({:.1}x), cached {:.2} us/prog ({:.0}x vs text)",
+            n,
+            us(text_dt),
+            us(builder_dt),
+            text_dt / builder_dt,
+            us(cached_dt),
+            text_dt / cached_dt,
+        );
+    }
+}
+
 fn main() {
     hotpath();
     sweep_throughput();
+    codegen_throughput();
 }

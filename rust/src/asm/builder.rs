@@ -1,0 +1,615 @@
+//! Typed kernel-codegen IR: build [`Program`]s directly from decoded
+//! [`Instr`]s — no assembly text, no re-parsing.
+//!
+//! The kernel generators originally `format!`-ed assembly source that the
+//! two-pass text assembler re-tokenized on every experiment. The
+//! [`ProgramBuilder`] replaces that string round-trip: one method per
+//! instruction form, [`Label`]s for control flow (offsets are fixed up at
+//! [`ProgramBuilder::finish`]), pseudo-instruction expansion identical to
+//! the text assembler's (`li`, `mv`, `fmv.d`, ...), and combinators for
+//! the recurring Snitch idioms (FREP micro-loops via
+//! [`ProgramBuilder::frep_outer`], whose sequence length is counted for
+//! you). The produced [`Program`] carries both the encoded words (for the
+//! I$ model, byte-identical to the text assembler's output) and the
+//! pre-decoded instruction list, so loading a program into a cluster
+//! performs no decode work at all.
+//!
+//! The text assembler ([`super::assemble`]) is retained as an alternate
+//! frontend that lowers onto this same builder; the two paths are checked
+//! instruction-for-instruction identical over every kernel × variant by
+//! the equivalence test in [`crate::kernels`].
+
+use std::collections::HashMap;
+
+use crate::isa::encode::encode;
+use crate::isa::{AluOp, BranchOp, CsrOp, CsrSrc, FReg, FpCmpOp, FpOp, FpWidth, Instr, Reg};
+
+use super::{Program, Segment};
+
+/// Flat ABI register names for builder-based codegen, so kernel sources
+/// read like the assembly they replace (`b.addi(T0, T0, -1)`).
+pub mod abi {
+    use crate::isa::{FReg, Reg};
+
+    pub const ZERO: Reg = Reg::ZERO;
+    pub const RA: Reg = Reg::RA;
+    pub const SP: Reg = Reg::SP;
+    pub const T0: Reg = Reg::T0;
+    pub const T1: Reg = Reg::T1;
+    pub const T2: Reg = Reg::T2;
+    pub const T3: Reg = Reg::T3;
+    pub const T4: Reg = Reg::T4;
+    pub const T5: Reg = Reg::T5;
+    pub const T6: Reg = Reg::T6;
+    pub const S0: Reg = Reg::S0;
+    pub const S1: Reg = Reg::S1;
+    pub const S2: Reg = Reg::S2;
+    pub const S3: Reg = Reg::S3;
+    pub const S4: Reg = Reg::S4;
+    pub const S5: Reg = Reg::S5;
+    pub const S6: Reg = Reg::S6;
+    pub const S7: Reg = Reg::S7;
+    pub const S8: Reg = Reg::S8;
+    pub const S9: Reg = Reg::S9;
+    pub const S10: Reg = Reg::S10;
+    pub const S11: Reg = Reg::S11;
+    pub const A0: Reg = Reg::A0;
+    pub const A1: Reg = Reg::A1;
+    pub const A2: Reg = Reg::A2;
+    pub const A3: Reg = Reg::A3;
+    pub const A4: Reg = Reg::A4;
+    pub const A5: Reg = Reg::A5;
+    pub const A6: Reg = Reg::A6;
+    pub const A7: Reg = Reg::A7;
+    pub const FT0: FReg = FReg::FT0;
+    pub const FT1: FReg = FReg::FT1;
+    pub const FT2: FReg = FReg::FT2;
+    pub const FT3: FReg = FReg::FT3;
+    pub const FT4: FReg = FReg::FT4;
+    pub const FT5: FReg = FReg::FT5;
+    pub const FT6: FReg = FReg::FT6;
+    pub const FT7: FReg = FReg::FT7;
+    pub const FS2: FReg = FReg::FS2;
+    pub const FS3: FReg = FReg::FS3;
+    pub const FS4: FReg = FReg::FS4;
+    pub const FS5: FReg = FReg::FS5;
+    pub const FS6: FReg = FReg::FS6;
+    pub const FA0: FReg = FReg::FA0;
+    pub const FA1: FReg = FReg::FA1;
+    pub const FA2: FReg = FReg::FA2;
+    pub const FA3: FReg = FReg::FA3;
+    pub const FA4: FReg = FReg::FA4;
+    pub const FA5: FReg = FReg::FA5;
+}
+
+/// A control-flow target. Created unbound with
+/// [`ProgramBuilder::new_label`], bound to an address with
+/// [`ProgramBuilder::bind`]; branches may reference it before or after
+/// binding (forward and backward branches alike are resolved at
+/// [`ProgramBuilder::finish`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Label(usize);
+
+#[derive(Debug)]
+struct BuildSeg {
+    base: u32,
+    bytes: Vec<u8>,
+    /// `(byte offset within the segment, decoded form)` per emitted
+    /// instruction, in emission order.
+    code: Vec<(u32, Instr)>,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Fixup {
+    seg: usize,
+    code_idx: usize,
+    label: Label,
+}
+
+/// Builds a [`Program`] from typed instructions. See the module docs.
+#[derive(Debug)]
+pub struct ProgramBuilder {
+    segs: Vec<BuildSeg>,
+    labels: Vec<Option<u32>>,
+    fixups: Vec<Fixup>,
+    symbols: HashMap<String, u32>,
+    entry: u32,
+}
+
+impl Default for ProgramBuilder {
+    fn default() -> ProgramBuilder {
+        ProgramBuilder::new()
+    }
+}
+
+impl ProgramBuilder {
+    /// A builder with one text segment starting at address 0 (the kernel
+    /// convention) and entry point 0.
+    pub fn new() -> ProgramBuilder {
+        let mut b = ProgramBuilder::empty();
+        b.org(0);
+        b
+    }
+
+    /// A builder with no segment yet; call [`ProgramBuilder::org`] before
+    /// emitting anything (used by the text frontend, which lays segments
+    /// out itself).
+    pub fn empty() -> ProgramBuilder {
+        ProgramBuilder {
+            segs: Vec::new(),
+            labels: Vec::new(),
+            fixups: Vec::new(),
+            symbols: HashMap::new(),
+            entry: 0,
+        }
+    }
+
+    // ---- low-level emission --------------------------------------------
+
+    /// Start a new segment at `base`. Subsequent emission appends there.
+    pub fn org(&mut self, base: u32) {
+        self.segs.push(BuildSeg { base, bytes: Vec::new(), code: Vec::new() });
+    }
+
+    /// The address the next instruction or byte will be emitted at.
+    pub fn here(&self) -> u32 {
+        let s = self.segs.last().expect("no segment: call org() first");
+        s.base + s.bytes.len() as u32
+    }
+
+    /// Zero-fill the current segment up to `addr` (alignment / reserved
+    /// space). `addr` must not lie behind the current emission point.
+    pub fn pad_to(&mut self, addr: u32) {
+        let here = self.here();
+        assert!(addr >= here, "pad_to({addr:#x}) behind current address {here:#x}");
+        let s = self.segs.last_mut().unwrap();
+        s.bytes.resize(s.bytes.len() + (addr - here) as usize, 0);
+    }
+
+    /// Append raw data bytes to the current segment.
+    pub fn raw(&mut self, bytes: &[u8]) {
+        self.segs.last_mut().expect("no segment: call org() first").bytes.extend_from_slice(bytes);
+    }
+
+    /// Append one instruction: encodes the architectural word and records
+    /// the decoded form for the pre-decoded program image.
+    pub fn instr(&mut self, i: Instr) {
+        let s = self.segs.last_mut().expect("no segment: call org() first");
+        let off = s.bytes.len() as u32;
+        s.bytes.extend_from_slice(&encode(&i).to_le_bytes());
+        s.code.push((off, i));
+    }
+
+    /// Entry point recorded in the produced [`Program`] (default 0).
+    pub fn set_entry(&mut self, entry: u32) {
+        self.entry = entry;
+    }
+
+    /// Record a symbol in the produced [`Program`]'s symbol table.
+    pub fn define(&mut self, name: &str, value: u32) {
+        self.symbols.insert(name.to_string(), value);
+    }
+
+    // ---- labels and control flow ---------------------------------------
+
+    /// A fresh, unbound label.
+    pub fn new_label(&mut self) -> Label {
+        self.labels.push(None);
+        Label(self.labels.len() - 1)
+    }
+
+    /// Bind `label` to the current address.
+    pub fn bind(&mut self, label: Label) {
+        let here = self.here();
+        let slot = &mut self.labels[label.0];
+        assert!(slot.is_none(), "label bound twice");
+        *slot = Some(here);
+    }
+
+    fn branch_fixup(&mut self, i: Instr, label: Label) {
+        let seg = self.segs.len() - 1;
+        self.instr(i);
+        let code_idx = self.segs[seg].code.len() - 1;
+        self.fixups.push(Fixup { seg, code_idx, label });
+    }
+
+    /// Conditional branch to a label.
+    pub fn branch(&mut self, op: BranchOp, rs1: Reg, rs2: Reg, target: Label) {
+        self.branch_fixup(Instr::Branch { op, rs1, rs2, offset: 0 }, target);
+    }
+
+    pub fn beq(&mut self, rs1: Reg, rs2: Reg, target: Label) {
+        self.branch(BranchOp::Beq, rs1, rs2, target);
+    }
+
+    pub fn bne(&mut self, rs1: Reg, rs2: Reg, target: Label) {
+        self.branch(BranchOp::Bne, rs1, rs2, target);
+    }
+
+    pub fn blt(&mut self, rs1: Reg, rs2: Reg, target: Label) {
+        self.branch(BranchOp::Blt, rs1, rs2, target);
+    }
+
+    pub fn bge(&mut self, rs1: Reg, rs2: Reg, target: Label) {
+        self.branch(BranchOp::Bge, rs1, rs2, target);
+    }
+
+    /// `beqz rs, target` (branch if zero).
+    pub fn beqz(&mut self, rs: Reg, target: Label) {
+        self.branch(BranchOp::Beq, rs, Reg::ZERO, target);
+    }
+
+    /// `bnez rs, target` (branch if non-zero).
+    pub fn bnez(&mut self, rs: Reg, target: Label) {
+        self.branch(BranchOp::Bne, rs, Reg::ZERO, target);
+    }
+
+    /// Unconditional jump (`j target`, i.e. `jal zero`).
+    pub fn j(&mut self, target: Label) {
+        self.branch_fixup(Instr::Jal { rd: Reg::ZERO, offset: 0 }, target);
+    }
+
+    // ---- RV32I ----------------------------------------------------------
+
+    /// Load immediate, with the same expansion rule as the text
+    /// assembler's `li`: one `addi` when the value fits 12 bits, else
+    /// `lui` + `addi`. Accepts any 32-bit value (signed or unsigned view).
+    pub fn li(&mut self, rd: Reg, imm: i64) {
+        assert!(
+            imm >= i64::from(i32::MIN) && imm <= i64::from(u32::MAX),
+            "li immediate {imm} out of 32-bit range"
+        );
+        let v = imm as u32 as i32;
+        if (-2048..=2047).contains(&i64::from(v)) {
+            self.instr(Instr::OpImm { op: AluOp::Add, rd, rs1: Reg::ZERO, imm: v });
+        } else {
+            let hi = ((v as u32).wrapping_add(0x800) & 0xFFFF_F000) as i32;
+            let lo = v.wrapping_sub(hi);
+            self.instr(Instr::Lui { rd, imm: hi });
+            self.instr(Instr::OpImm { op: AluOp::Add, rd, rs1: rd, imm: lo });
+        }
+    }
+
+    /// `mv rd, rs` (`addi rd, rs, 0`).
+    pub fn mv(&mut self, rd: Reg, rs: Reg) {
+        self.addi(rd, rs, 0);
+    }
+
+    pub fn addi(&mut self, rd: Reg, rs1: Reg, imm: i32) {
+        assert!((-2048..=2047).contains(&imm), "addi immediate {imm} out of 12-bit range");
+        self.instr(Instr::OpImm { op: AluOp::Add, rd, rs1, imm });
+    }
+
+    pub fn andi(&mut self, rd: Reg, rs1: Reg, imm: i32) {
+        assert!((-2048..=2047).contains(&imm), "andi immediate {imm} out of 12-bit range");
+        self.instr(Instr::OpImm { op: AluOp::And, rd, rs1, imm });
+    }
+
+    pub fn slli(&mut self, rd: Reg, rs1: Reg, shamt: i32) {
+        assert!((0..32).contains(&shamt), "shift amount {shamt} out of range");
+        self.instr(Instr::OpImm { op: AluOp::Sll, rd, rs1, imm: shamt });
+    }
+
+    pub fn srli(&mut self, rd: Reg, rs1: Reg, shamt: i32) {
+        assert!((0..32).contains(&shamt), "shift amount {shamt} out of range");
+        self.instr(Instr::OpImm { op: AluOp::Srl, rd, rs1, imm: shamt });
+    }
+
+    pub fn srai(&mut self, rd: Reg, rs1: Reg, shamt: i32) {
+        assert!((0..32).contains(&shamt), "shift amount {shamt} out of range");
+        self.instr(Instr::OpImm { op: AluOp::Sra, rd, rs1, imm: shamt });
+    }
+
+    pub fn add(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.instr(Instr::Op { op: AluOp::Add, rd, rs1, rs2 });
+    }
+
+    pub fn sub(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.instr(Instr::Op { op: AluOp::Sub, rd, rs1, rs2 });
+    }
+
+    pub fn and(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.instr(Instr::Op { op: AluOp::And, rd, rs1, rs2 });
+    }
+
+    pub fn or(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.instr(Instr::Op { op: AluOp::Or, rd, rs1, rs2 });
+    }
+
+    pub fn xor(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.instr(Instr::Op { op: AluOp::Xor, rd, rs1, rs2 });
+    }
+
+    pub fn mul(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.instr(Instr::MulDiv { op: crate::isa::MulDivOp::Mul, rd, rs1, rs2 });
+    }
+
+    /// `lw rd, offset(base)`.
+    pub fn lw(&mut self, rd: Reg, offset: i32, base: Reg) {
+        self.instr(Instr::Load { op: crate::isa::LoadOp::Lw, rd, rs1: base, offset });
+    }
+
+    /// `sw src, offset(base)`.
+    pub fn sw(&mut self, src: Reg, offset: i32, base: Reg) {
+        self.instr(Instr::Store { op: crate::isa::StoreOp::Sw, rs1: base, rs2: src, offset });
+    }
+
+    pub fn ecall(&mut self) {
+        self.instr(Instr::Ecall);
+    }
+
+    pub fn fence(&mut self) {
+        self.instr(Instr::Fence);
+    }
+
+    pub fn wfi(&mut self) {
+        self.instr(Instr::Wfi);
+    }
+
+    // ---- Zicsr ----------------------------------------------------------
+
+    /// `csrr rd, csr`.
+    pub fn csrr(&mut self, rd: Reg, csr: u16) {
+        self.instr(Instr::Csr { op: CsrOp::Rs, rd, csr, src: CsrSrc::Reg(Reg::ZERO) });
+    }
+
+    /// `csrw csr, rs`.
+    pub fn csrw(&mut self, csr: u16, rs: Reg) {
+        self.instr(Instr::Csr { op: CsrOp::Rw, rd: Reg::ZERO, csr, src: CsrSrc::Reg(rs) });
+    }
+
+    /// `csrwi csr, imm` (5-bit zero-extended immediate).
+    pub fn csrwi(&mut self, csr: u16, imm: u8) {
+        assert!(imm < 32, "csrwi immediate {imm} out of 5-bit range");
+        self.instr(Instr::Csr { op: CsrOp::Rw, rd: Reg::ZERO, csr, src: CsrSrc::Imm(imm) });
+    }
+
+    // ---- RV32D ----------------------------------------------------------
+
+    /// `fld frd, offset(base)`.
+    pub fn fld(&mut self, frd: FReg, offset: i32, base: Reg) {
+        self.instr(Instr::FpLoad { width: FpWidth::D, frd, rs1: base, offset });
+    }
+
+    /// `fsd src, offset(base)`.
+    pub fn fsd(&mut self, src: FReg, offset: i32, base: Reg) {
+        self.instr(Instr::FpStore { width: FpWidth::D, frs2: src, rs1: base, offset });
+    }
+
+    fn fp3(&mut self, op: FpOp, frd: FReg, frs1: FReg, frs2: FReg) {
+        self.instr(Instr::FpOp { op, width: FpWidth::D, frd, frs1, frs2, frs3: FReg::FT0 });
+    }
+
+    pub fn fadd_d(&mut self, frd: FReg, frs1: FReg, frs2: FReg) {
+        self.fp3(FpOp::Fadd, frd, frs1, frs2);
+    }
+
+    pub fn fsub_d(&mut self, frd: FReg, frs1: FReg, frs2: FReg) {
+        self.fp3(FpOp::Fsub, frd, frs1, frs2);
+    }
+
+    pub fn fmul_d(&mut self, frd: FReg, frs1: FReg, frs2: FReg) {
+        self.fp3(FpOp::Fmul, frd, frs1, frs2);
+    }
+
+    pub fn fmin_d(&mut self, frd: FReg, frs1: FReg, frs2: FReg) {
+        self.fp3(FpOp::Fmin, frd, frs1, frs2);
+    }
+
+    pub fn fmax_d(&mut self, frd: FReg, frs1: FReg, frs2: FReg) {
+        self.fp3(FpOp::Fmax, frd, frs1, frs2);
+    }
+
+    /// `fmadd.d frd, frs1, frs2, frs3` (frd = frs1 × frs2 + frs3).
+    pub fn fmadd_d(&mut self, frd: FReg, frs1: FReg, frs2: FReg, frs3: FReg) {
+        self.instr(Instr::FpOp { op: FpOp::Fmadd, width: FpWidth::D, frd, frs1, frs2, frs3 });
+    }
+
+    /// `fnmsub.d frd, frs1, frs2, frs3` (frd = −(frs1 × frs2) + frs3).
+    pub fn fnmsub_d(&mut self, frd: FReg, frs1: FReg, frs2: FReg, frs3: FReg) {
+        self.instr(Instr::FpOp { op: FpOp::Fnmsub, width: FpWidth::D, frd, frs1, frs2, frs3 });
+    }
+
+    /// `fmv.d frd, frs` — expands to `fsgnj.d frd, frs, frs` like the text
+    /// assembler's pseudo-instruction.
+    pub fn fmv_d(&mut self, frd: FReg, frs: FReg) {
+        self.instr(Instr::FpOp {
+            op: FpOp::Fsgnj,
+            width: FpWidth::D,
+            frd,
+            frs1: frs,
+            frs2: frs,
+            frs3: FReg::FT0,
+        });
+    }
+
+    /// `fcvt.d.w frd, rs1` (signed integer → double).
+    pub fn fcvt_d_w(&mut self, frd: FReg, rs1: Reg) {
+        self.instr(Instr::FpCvtFromInt { width: FpWidth::D, signed: true, frd, rs1 });
+    }
+
+    /// `fcvt.w.d rd, frs1` (double → signed integer).
+    pub fn fcvt_w_d(&mut self, rd: Reg, frs1: FReg) {
+        self.instr(Instr::FpCvtToInt { width: FpWidth::D, signed: true, rd, frs1 });
+    }
+
+    /// `flt.d rd, frs1, frs2`.
+    pub fn flt_d(&mut self, rd: Reg, frs1: FReg, frs2: FReg) {
+        self.instr(Instr::FpCmp { op: FpCmpOp::Flt, width: FpWidth::D, rd, frs1, frs2 });
+    }
+
+    // ---- Snitch FREP ----------------------------------------------------
+
+    /// FREP micro-loop combinator: emits `frep.o max_rep, N, stagger_mask,
+    /// stagger_count` where `N` is however many instructions `body` emits
+    /// (1..=16, counted for you — no hand-maintained sequence lengths).
+    pub fn frep_outer(
+        &mut self,
+        max_rep: Reg,
+        stagger_mask: u8,
+        stagger_count: u8,
+        body: impl FnOnce(&mut ProgramBuilder),
+    ) {
+        let seg = self.segs.len() - 1;
+        self.instr(Instr::Frep {
+            is_outer: true,
+            max_rep,
+            max_inst: 0,
+            stagger_mask,
+            stagger_count,
+        });
+        let frep_idx = self.segs[seg].code.len() - 1;
+        body(&mut *self);
+        assert_eq!(self.segs.len() - 1, seg, "frep body must stay in its segment");
+        let n = self.segs[seg].code.len() - 1 - frep_idx;
+        assert!((1..=16).contains(&n), "frep sequences 1..=16 instructions, body emitted {n}");
+        let (off, instr) = &mut self.segs[seg].code[frep_idx];
+        if let Instr::Frep { max_inst, .. } = instr {
+            *max_inst = (n - 1) as u8;
+        }
+        let o = *off as usize;
+        let w = encode(instr);
+        self.segs[seg].bytes[o..o + 4].copy_from_slice(&w.to_le_bytes());
+    }
+
+    // ---- finalization ---------------------------------------------------
+
+    /// Resolve all label fixups and produce the [`Program`]: encoded
+    /// segments plus the pre-decoded `(address, instruction)` list.
+    pub fn finish(mut self) -> Program {
+        for f in &self.fixups {
+            let target = self.labels[f.label.0].expect("branch to unbound label");
+            let seg = &mut self.segs[f.seg];
+            let (off, instr) = &mut seg.code[f.code_idx];
+            let pc = seg.base + *off;
+            let delta = i64::from(target) - i64::from(pc);
+            match instr {
+                Instr::Branch { offset, .. } => {
+                    assert!(
+                        (-4096..=4094).contains(&delta) && delta % 2 == 0,
+                        "branch offset {delta} unencodable"
+                    );
+                    *offset = delta as i32;
+                }
+                Instr::Jal { offset, .. } => {
+                    assert!(
+                        (-(1 << 20)..(1 << 20)).contains(&delta) && delta % 2 == 0,
+                        "jump offset {delta} unencodable"
+                    );
+                    *offset = delta as i32;
+                }
+                other => unreachable!("fixup on non-branch {other:?}"),
+            }
+            let o = *off as usize;
+            let w = encode(instr);
+            seg.bytes[o..o + 4].copy_from_slice(&w.to_le_bytes());
+        }
+        let mut segments = Vec::new();
+        let mut code = Vec::new();
+        for s in self.segs {
+            if s.bytes.is_empty() {
+                continue;
+            }
+            for &(off, i) in &s.code {
+                code.push((s.base + off, i));
+            }
+            segments.push(Segment { base: s.base, bytes: s.bytes });
+        }
+        Program { segments, symbols: self.symbols, entry: self.entry, code }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::abi::*;
+    use super::*;
+    use crate::asm::assemble;
+
+    fn words(p: &Program) -> Vec<u32> {
+        p.segments[0]
+            .bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+
+    #[test]
+    fn builder_matches_text_for_a_loop() {
+        // The canonical countdown loop, both frontends.
+        let text = assemble(
+            "li a0, 10\nloop:\naddi a0, a0, -1\nbnez a0, loop\nli t0, 0x10000000\nsw a0, 0(t0)\necall\n",
+        )
+        .unwrap();
+        let mut b = ProgramBuilder::new();
+        b.li(A0, 10);
+        let l = b.new_label();
+        b.bind(l);
+        b.addi(A0, A0, -1);
+        b.bnez(A0, l);
+        b.li(T0, 0x1000_0000);
+        b.sw(A0, 0, T0);
+        b.ecall();
+        let built = b.finish();
+        assert_eq!(words(&built), words(&text));
+        assert_eq!(built.entry, text.entry);
+    }
+
+    #[test]
+    fn forward_branch_fixup() {
+        let text = assemble("beqz a0, done\nnop\ndone:\nret\n").unwrap();
+        let mut b = ProgramBuilder::new();
+        let done = b.new_label();
+        b.beqz(A0, done);
+        b.addi(ZERO, ZERO, 0); // nop
+        b.bind(done);
+        b.instr(Instr::Jalr { rd: ZERO, rs1: RA, offset: 0 }); // ret
+        assert_eq!(words(&b.finish()), words(&text));
+    }
+
+    #[test]
+    fn li_expansion_matches_text() {
+        for v in [0i64, 42, -2048, 2047, -2049, 2048, 0x1234_5678, 0x1000_0100, -1] {
+            let text = assemble(&format!("li a0, {v}\n")).unwrap();
+            let mut b = ProgramBuilder::new();
+            b.li(A0, v);
+            assert_eq!(words(&b.finish()), words(&text), "li {v}");
+        }
+    }
+
+    #[test]
+    fn frep_combinator_counts_body() {
+        let text = assemble(
+            "frep.o t0, 2, 0xC, 3\nfmadd.d ft3, ft0, ft1, ft3\nfadd.d ft4, ft4, ft5\n",
+        )
+        .unwrap();
+        let mut b = ProgramBuilder::new();
+        b.frep_outer(T0, 0xC, 3, |b| {
+            b.fmadd_d(FT3, FT0, FT1, FT3);
+            b.fadd_d(FT4, FT4, FT5);
+        });
+        assert_eq!(words(&b.finish()), words(&text));
+    }
+
+    #[test]
+    fn program_carries_predecoded_code() {
+        let mut b = ProgramBuilder::new();
+        b.li(A0, 1);
+        b.ecall();
+        let p = b.finish();
+        assert_eq!(p.code.len(), 2);
+        assert_eq!(p.code[0].0, 0);
+        assert_eq!(p.code[1], (4, Instr::Ecall));
+        for &(addr, i) in &p.code {
+            assert_eq!(p.word_at(addr), Some(encode(&i)));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "unbound label")]
+    fn unbound_label_panics() {
+        let mut b = ProgramBuilder::new();
+        let l = b.new_label();
+        b.bnez(A0, l);
+        let _ = b.finish();
+    }
+}

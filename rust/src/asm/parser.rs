@@ -1,10 +1,13 @@
-//! The assembler implementation: lexing, expression evaluation, two-pass
-//! layout and encoding.
+//! The text-assembler frontend: lexing, expression evaluation, two-pass
+//! layout. Pass 2 lowers onto the typed [`crate::asm::builder::ProgramBuilder`],
+//! which performs all encoding — the text and builder frontends share one
+//! backend and produce identical [`Program`]s for identical instruction
+//! sequences.
 
 use std::collections::HashMap;
 
+use crate::asm::builder::ProgramBuilder;
 use crate::isa::csr::csr_from_name;
-use crate::isa::encode::encode;
 use crate::isa::{
     AluOp, AmoOp, BranchOp, CsrOp, CsrSrc, FReg, FpCmpOp, FpOp, FpWidth, Instr, LoadOp, MulDivOp,
     Reg, StoreOp,
@@ -18,7 +21,9 @@ pub struct Segment {
     pub bytes: Vec<u8>,
 }
 
-/// The output of [`assemble`]: loadable segments plus the symbol table.
+/// The output of [`assemble`] and of
+/// [`crate::asm::builder::ProgramBuilder::finish`]: loadable segments plus
+/// the symbol table and the pre-decoded instruction list.
 #[derive(Debug, Clone, Default)]
 pub struct Program {
     pub segments: Vec<Segment>,
@@ -26,6 +31,11 @@ pub struct Program {
     /// Entry point (address of the first `.text` byte unless a `_start`
     /// label exists).
     pub entry: u32,
+    /// Pre-decoded `(address, instruction)` pairs for every emitted
+    /// instruction word, in emission order. Loading a program into a
+    /// cluster consumes this instead of re-decoding the encoded bytes
+    /// (the bytes still back the I$ model).
+    pub code: Vec<(u32, Instr)>,
 }
 
 impl Program {
@@ -335,9 +345,20 @@ impl<'a> Ctx<'a> {
 // ---------------------------------------------------------------------------
 
 enum LineItem {
-    Instr { mnemonic: String, operands: Vec<String>, addr: u32, line: usize },
-    Word { exprs: Vec<String>, addr: u32, line: usize },
-    Double { values: Vec<f64>, addr: u32 },
+    Instr { mnemonic: String, operands: Vec<String>, addr: u32, line: usize, seg: usize },
+    Word { exprs: Vec<String>, addr: u32, line: usize, seg: usize },
+    Double { values: Vec<f64>, addr: u32, seg: usize },
+}
+
+impl LineItem {
+    /// Index of the layout segment this item was parsed into.
+    fn seg(&self) -> usize {
+        match *self {
+            LineItem::Instr { seg, .. }
+            | LineItem::Word { seg, .. }
+            | LineItem::Double { seg, .. } => seg,
+        }
+    }
 }
 
 /// Size in bytes an instruction occupies, including pseudo expansion.
@@ -453,14 +474,16 @@ pub fn assemble(src: &str) -> Result<Program, AsmError> {
                         segments_layout.push((0, 0));
                     }
                     let addr = cur_addr(&segments_layout).unwrap();
+                    let seg = segments_layout.len() - 1;
                     segments_layout.last_mut().unwrap().1 += 4 * ops.len() as u32;
-                    items.push(LineItem::Word { exprs: ops, addr, line });
+                    items.push(LineItem::Word { exprs: ops, addr, line, seg });
                 }
                 "double" => {
                     if segments_layout.is_empty() {
                         segments_layout.push((0, 0));
                     }
                     let addr = cur_addr(&segments_layout).unwrap();
+                    let seg = segments_layout.len() - 1;
                     let mut values = Vec::new();
                     for o in &ops {
                         values.push(o.parse::<f64>().map_err(|e| AsmError {
@@ -469,7 +492,7 @@ pub fn assemble(src: &str) -> Result<Program, AsmError> {
                         })?);
                     }
                     segments_layout.last_mut().unwrap().1 += 8 * values.len() as u32;
-                    items.push(LineItem::Double { values, addr });
+                    items.push(LineItem::Double { values, addr, seg });
                 }
                 "equ" => {
                     if ops.len() != 2 {
@@ -494,74 +517,59 @@ pub fn assemble(src: &str) -> Result<Program, AsmError> {
             }
         }
         let addr = cur_addr(&segments_layout).unwrap();
+        let seg = segments_layout.len() - 1;
         let operands = split_operands(rest);
         let size = instr_size(head, &operands, &symbols, line)?;
         segments_layout.last_mut().unwrap().1 += size;
-        items.push(LineItem::Instr { mnemonic: head.to_string(), operands, addr, line });
+        items.push(LineItem::Instr { mnemonic: head.to_string(), operands, addr, line, seg });
     }
 
     if let Some(&start) = symbols.get("_start") {
         entry = Some(start);
     }
 
-    // ----- pass 2: encode -----
-    let layout: Vec<(u32, u32)> =
-        segments_layout.iter().copied().filter(|&(_, size)| size > 0).collect();
-    let mut segs: Vec<Segment> = layout
-        .iter()
-        .map(|&(base, size)| Segment { base, bytes: Vec::with_capacity(size as usize) })
-        .collect();
-    // Map an address to the segment whose *layout* range contains it, then
-    // pad with zeros up to the emission point (covers .align/.space gaps).
-    let emit = |segs: &mut Vec<Segment>, addr: u32, bytes: &[u8]| {
-        let i = layout
-            .iter()
-            .position(|&(base, size)| addr >= base && (addr as u64) < base as u64 + size as u64)
-            .unwrap_or_else(|| panic!("internal assembler error: no segment for {addr:#x}"));
-        let fill = segs[i].base + segs[i].bytes.len() as u32;
-        for _ in fill..addr {
-            segs[i].bytes.push(0);
+    // ----- pass 2: lower onto the typed builder -----
+    // All addresses and symbols are resolved here (the text frontend's
+    // job); the builder encodes and collects the pre-decoded image.
+    // Zero-padding up to each item's address covers .align/.space gaps.
+    let mut b = ProgramBuilder::empty();
+    for (si, &(base, size)) in segments_layout.iter().enumerate() {
+        if size == 0 {
+            continue;
         }
-        segs[i].bytes.extend_from_slice(bytes);
-    };
-
-    for item in &items {
-        match item {
-            LineItem::Word { exprs, addr, line } => {
-                let mut a = *addr;
-                for e in exprs {
-                    let v = eval_expr(e, &symbols, *line)? as u32;
-                    emit(&mut segs, a, &v.to_le_bytes());
-                    a += 4;
+        b.org(base);
+        for item in items.iter().filter(|it| it.seg() == si) {
+            match item {
+                LineItem::Word { exprs, addr, line, .. } => {
+                    b.pad_to(*addr);
+                    for e in exprs {
+                        let v = eval_expr(e, &symbols, *line)? as u32;
+                        b.raw(&v.to_le_bytes());
+                    }
                 }
-            }
-            LineItem::Double { values, addr } => {
-                let mut a = *addr;
-                for v in values {
-                    emit(&mut segs, a, &v.to_le_bytes());
-                    a += 8;
+                LineItem::Double { values, addr, .. } => {
+                    b.pad_to(*addr);
+                    for v in values {
+                        b.raw(&v.to_le_bytes());
+                    }
                 }
-            }
-            LineItem::Instr { mnemonic, operands, addr, line } => {
-                let ctx = Ctx { symbols: &symbols, line: *line };
-                let instrs = encode_one(mnemonic, operands, *addr, &ctx)?;
-                let mut a = *addr;
-                for i in &instrs {
-                    emit(&mut segs, a, &encode(i).to_le_bytes());
-                    a += 4;
+                LineItem::Instr { mnemonic, operands, addr, line, .. } => {
+                    b.pad_to(*addr);
+                    let ctx = Ctx { symbols: &symbols, line: *line };
+                    for i in encode_one(mnemonic, operands, *addr, &ctx)? {
+                        b.instr(i);
+                    }
                 }
             }
         }
+        // Trailing .space/.align.
+        b.pad_to(base + size);
     }
-
-    // Pad trailing .space/.align.
-    for (i, &(_, size)) in layout.iter().enumerate() {
-        while (segs[i].bytes.len() as u32) < size {
-            segs[i].bytes.push(0);
-        }
+    for (name, &v) in &symbols {
+        b.define(name, v);
     }
-
-    Ok(Program { segments: segs, symbols, entry: entry.unwrap_or(0) })
+    b.set_entry(entry.unwrap_or(0));
+    Ok(b.finish())
 }
 
 /// Encode one source instruction (possibly expanding a pseudo-instruction).

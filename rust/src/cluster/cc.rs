@@ -561,16 +561,7 @@ fn execute(
                 csr::MINSTRET | csr::INSTRET => cc.core.instret as u32,
                 csr::SSR_ENABLE => u32::from(cc.fpss.ssr_enabled),
                 a => match decode_ssr_csr(a) {
-                    Some(which) => {
-                        let lane = match which {
-                            csr::SsrCsr::Repeat { lane }
-                            | csr::SsrCsr::Bound { lane, .. }
-                            | csr::SsrCsr::Stride { lane, .. }
-                            | csr::SsrCsr::ReadPtr { lane, .. }
-                            | csr::SsrCsr::WritePtr { lane, .. } => lane,
-                        };
-                        cc.lanes[lane].csr_read(which)
-                    }
+                    Some(which) => cc.lanes[which.lane()].csr_read(which),
                     None => 0,
                 },
             };
@@ -595,14 +586,7 @@ fn execute(
                     }
                     a => {
                         if let Some(which) = decode_ssr_csr(a) {
-                            let lane = match which {
-                                csr::SsrCsr::Repeat { lane }
-                                | csr::SsrCsr::Bound { lane, .. }
-                                | csr::SsrCsr::Stride { lane, .. }
-                                | csr::SsrCsr::ReadPtr { lane, .. }
-                                | csr::SsrCsr::WritePtr { lane, .. } => lane,
-                            };
-                            if !cc.lanes[lane].csr_write(which, new) {
+                            if !cc.lanes[which.lane()].csr_write(which, new) {
                                 return Action::Stall(Stall::SsrConfig);
                             }
                         }

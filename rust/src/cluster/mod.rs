@@ -157,9 +157,14 @@ impl Cluster {
         self.trace = sink;
     }
 
-    /// Load an assembled program: code into instruction memory, data
-    /// segments into the TCDM / external memory. All cores start at the
-    /// program entry.
+    /// Load a built program: code into instruction memory, data segments
+    /// into the TCDM / external memory. All cores start at the program
+    /// entry.
+    ///
+    /// Programs from either frontend (builder or text assembler) carry
+    /// their pre-decoded instruction list ([`Program::code`]); loading
+    /// installs it directly and performs no per-word decode. The encoded
+    /// bytes still populate the instruction memory for the I$ model.
     pub fn load(&mut self, prog: &Program) {
         for seg in &prog.segments {
             let region = crate::mem::region(seg.base, self.tcdm.size());
@@ -167,9 +172,13 @@ impl Cluster {
                 crate::mem::Region::Imem => {
                     let o = (seg.base - IMEM_BASE) as usize;
                     self.program.imem[o..o + seg.bytes.len()].copy_from_slice(&seg.bytes);
-                    for (i, w) in seg.bytes.chunks_exact(4).enumerate() {
-                        let word = u32::from_le_bytes([w[0], w[1], w[2], w[3]]);
-                        self.program.decoded[o / 4 + i] = decode(word).ok();
+                    if prog.code.is_empty() {
+                        // Hand-assembled byte image: fall back to decoding
+                        // every word.
+                        for (i, w) in seg.bytes.chunks_exact(4).enumerate() {
+                            let word = u32::from_le_bytes([w[0], w[1], w[2], w[3]]);
+                            self.program.decoded[o / 4 + i] = decode(word).ok();
+                        }
                     }
                 }
                 crate::mem::Region::Tcdm => {
@@ -179,6 +188,11 @@ impl Cluster {
                 }
                 crate::mem::Region::Ext => self.ext.load(seg.base, &seg.bytes),
                 other => panic!("segment at {:#x} loads into {:?}", seg.base, other),
+            }
+        }
+        for &(addr, instr) in &prog.code {
+            if (IMEM_BASE..IMEM_BASE + IMEM_SIZE).contains(&addr) {
+                self.program.decoded[((addr - IMEM_BASE) / 4) as usize] = Some(instr);
             }
         }
         self.program.entry = prog.entry;

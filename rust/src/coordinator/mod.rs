@@ -18,6 +18,12 @@
 //! `tests/determinism.rs`). The pool width defaults to the machine's
 //! available parallelism and is overridden with the CLI `--jobs N` flag
 //! ([`set_jobs`]).
+//!
+//! Program construction is not part of a sweep's per-experiment cost:
+//! kernels build typed, pre-decoded programs through
+//! [`crate::asm::builder::ProgramBuilder`], and
+//! [`crate::kernels::cached_program`] shares each distinct
+//! `(kernel, variant, n, cores)` image across all workers.
 
 pub mod cli;
 
@@ -461,8 +467,7 @@ pub fn figure15_16() -> String {
 pub fn trace_kernel(name: &str, v: Variant, n: usize) -> String {
     let k = kernels::kernel_by_name(name).unwrap_or_else(|| panic!("unknown kernel {name}"));
     let p = Params::new(n, 1);
-    let asm_src = (k.gen)(v, &p);
-    let prog = crate::asm::assemble(&asm_src).unwrap();
+    let prog = kernels::cached_program(k, v, &p);
     let mut cfg = ClusterConfig::with_cores(1);
     cfg.trace = true;
     let mut cl = crate::cluster::Cluster::new(cfg);

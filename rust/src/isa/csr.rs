@@ -64,6 +64,48 @@ pub enum SsrCsr {
     WritePtr { lane: usize, dims: usize },
 }
 
+impl SsrCsr {
+    /// The streamer lane this configuration register belongs to.
+    pub fn lane(self) -> usize {
+        match self {
+            SsrCsr::Repeat { lane }
+            | SsrCsr::Bound { lane, .. }
+            | SsrCsr::Stride { lane, .. }
+            | SsrCsr::ReadPtr { lane, .. }
+            | SsrCsr::WritePtr { lane, .. } => lane,
+        }
+    }
+}
+
+/// CSR address of `ssr<lane>_bound<dim>`.
+pub fn ssr_bound_csr(lane: usize, dim: usize) -> u16 {
+    debug_assert!(dim < SSR_DIMS);
+    ssr_lane_base(lane) + ssr_off::BOUND + dim as u16
+}
+
+/// CSR address of `ssr<lane>_stride<dim>`.
+pub fn ssr_stride_csr(lane: usize, dim: usize) -> u16 {
+    debug_assert!(dim < SSR_DIMS);
+    ssr_lane_base(lane) + ssr_off::STRIDE + dim as u16
+}
+
+/// CSR address of `ssr<lane>_rptr<dim>` (arms a `dim + 1`-D read stream).
+pub fn ssr_rptr_csr(lane: usize, dim: usize) -> u16 {
+    debug_assert!(dim < SSR_DIMS);
+    ssr_lane_base(lane) + ssr_off::RPTR + dim as u16
+}
+
+/// CSR address of `ssr<lane>_wptr<dim>` (arms a `dim + 1`-D write stream).
+pub fn ssr_wptr_csr(lane: usize, dim: usize) -> u16 {
+    debug_assert!(dim < SSR_DIMS);
+    ssr_lane_base(lane) + ssr_off::WPTR + dim as u16
+}
+
+/// CSR address of `ssr<lane>_repeat`.
+pub fn ssr_repeat_csr(lane: usize) -> u16 {
+    ssr_lane_base(lane) + ssr_off::REPEAT
+}
+
 /// Decode a CSR address into its SSR meaning, if it falls in the SSR
 /// configuration window.
 pub fn decode_ssr_csr(addr: u16) -> Option<SsrCsr> {
@@ -164,6 +206,35 @@ mod tests {
         assert_eq!(csr_from_name("ssr2_bound0"), None);
         assert_eq!(csr_from_name("ssr0_bound4"), None);
         assert_eq!(csr_from_name("bogus"), None);
+    }
+
+    #[test]
+    fn lane_extraction_and_address_helpers() {
+        for lane in 0..NUM_SSR_LANES {
+            assert_eq!(decode_ssr_csr(ssr_repeat_csr(lane)).unwrap().lane(), lane);
+            for dim in 0..SSR_DIMS {
+                assert_eq!(
+                    decode_ssr_csr(ssr_bound_csr(lane, dim)),
+                    Some(SsrCsr::Bound { lane, dim })
+                );
+                assert_eq!(
+                    decode_ssr_csr(ssr_stride_csr(lane, dim)),
+                    Some(SsrCsr::Stride { lane, dim })
+                );
+                assert_eq!(
+                    decode_ssr_csr(ssr_rptr_csr(lane, dim)),
+                    Some(SsrCsr::ReadPtr { lane, dims: dim + 1 })
+                );
+                assert_eq!(
+                    decode_ssr_csr(ssr_wptr_csr(lane, dim)),
+                    Some(SsrCsr::WritePtr { lane, dims: dim + 1 })
+                );
+                assert_eq!(decode_ssr_csr(ssr_rptr_csr(lane, dim)).unwrap().lane(), lane);
+            }
+        }
+        // Names and addresses agree.
+        assert_eq!(csr_from_name("ssr0_bound1"), Some(ssr_bound_csr(0, 1)));
+        assert_eq!(csr_from_name("ssr1_wptr3"), Some(ssr_wptr_csr(1, 3)));
     }
 
     #[test]

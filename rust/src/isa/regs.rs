@@ -13,10 +13,41 @@ impl Reg {
     pub const RA: Reg = Reg(1);
     /// Stack pointer (`x2`).
     pub const SP: Reg = Reg(2);
+    /// Global pointer (`x3`).
+    pub const GP: Reg = Reg(3);
+    /// Thread pointer (`x4`).
+    pub const TP: Reg = Reg(4);
+    pub const T0: Reg = Reg(5);
+    pub const T1: Reg = Reg(6);
+    pub const T2: Reg = Reg(7);
+    pub const S0: Reg = Reg(8);
+    pub const S1: Reg = Reg(9);
+    pub const A0: Reg = Reg(10);
+    pub const A1: Reg = Reg(11);
+    pub const A2: Reg = Reg(12);
+    pub const A3: Reg = Reg(13);
+    pub const A4: Reg = Reg(14);
+    pub const A5: Reg = Reg(15);
+    pub const A6: Reg = Reg(16);
+    pub const A7: Reg = Reg(17);
+    pub const S2: Reg = Reg(18);
+    pub const S3: Reg = Reg(19);
+    pub const S4: Reg = Reg(20);
+    pub const S5: Reg = Reg(21);
+    pub const S6: Reg = Reg(22);
+    pub const S7: Reg = Reg(23);
+    pub const S8: Reg = Reg(24);
+    pub const S9: Reg = Reg(25);
+    pub const S10: Reg = Reg(26);
+    pub const S11: Reg = Reg(27);
+    pub const T3: Reg = Reg(28);
+    pub const T4: Reg = Reg(29);
+    pub const T5: Reg = Reg(30);
+    pub const T6: Reg = Reg(31);
 
     /// Construct `xN`; panics if `n > 31`.
-    pub fn new(n: u8) -> Reg {
-        assert!(n < 32, "integer register index {n} out of range");
+    pub const fn new(n: u8) -> Reg {
+        assert!(n < 32, "integer register index out of range");
         Reg(n)
     }
 
@@ -108,10 +139,40 @@ impl FReg {
     pub const FT0: FReg = FReg(0);
     /// `ft1`, SSR lane 1 when streaming is active.
     pub const FT1: FReg = FReg(1);
+    pub const FT2: FReg = FReg(2);
+    pub const FT3: FReg = FReg(3);
+    pub const FT4: FReg = FReg(4);
+    pub const FT5: FReg = FReg(5);
+    pub const FT6: FReg = FReg(6);
+    pub const FT7: FReg = FReg(7);
+    pub const FS0: FReg = FReg(8);
+    pub const FS1: FReg = FReg(9);
+    pub const FA0: FReg = FReg(10);
+    pub const FA1: FReg = FReg(11);
+    pub const FA2: FReg = FReg(12);
+    pub const FA3: FReg = FReg(13);
+    pub const FA4: FReg = FReg(14);
+    pub const FA5: FReg = FReg(15);
+    pub const FA6: FReg = FReg(16);
+    pub const FA7: FReg = FReg(17);
+    pub const FS2: FReg = FReg(18);
+    pub const FS3: FReg = FReg(19);
+    pub const FS4: FReg = FReg(20);
+    pub const FS5: FReg = FReg(21);
+    pub const FS6: FReg = FReg(22);
+    pub const FS7: FReg = FReg(23);
+    pub const FS8: FReg = FReg(24);
+    pub const FS9: FReg = FReg(25);
+    pub const FS10: FReg = FReg(26);
+    pub const FS11: FReg = FReg(27);
+    pub const FT8: FReg = FReg(28);
+    pub const FT9: FReg = FReg(29);
+    pub const FT10: FReg = FReg(30);
+    pub const FT11: FReg = FReg(31);
 
     /// Construct `fN`; panics if `n > 31`.
-    pub fn new(n: u8) -> FReg {
-        assert!(n < 32, "fp register index {n} out of range");
+    pub const fn new(n: u8) -> FReg {
+        assert!(n < 32, "fp register index out of range");
         FReg(n)
     }
 

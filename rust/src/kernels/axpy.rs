@@ -9,7 +9,10 @@
 
 use super::runtime as rt;
 use super::{allclose, rng_for, KernelDef, KernelIo, Params, Variant};
+use crate::asm::builder::abi::*;
+use crate::asm::{Program, ProgramBuilder};
 use crate::cluster::Cluster;
+use crate::isa::csr::{ssr_bound_csr, ssr_rptr_csr, ssr_stride_csr, SSR_ENABLE};
 
 const X: u32 = rt::DATA;
 
@@ -20,10 +23,69 @@ fn y_addr(n: usize) -> u32 {
 /// The scalar `a` parks in the result area so the kernel can `fld` it.
 const A_SCALAR: u32 = rt::RESULT + 8;
 
-fn gen(v: Variant, p: &Params) -> String {
+fn gen(v: Variant, p: &Params) -> Program {
     let y = y_addr(p.n);
-    let mut s = rt::prologue();
-    s.push_str(&rt::load_bounds("a3", "a4"));
+    let mut b = ProgramBuilder::new();
+    rt::prologue(&mut b);
+    rt::load_bounds(&mut b, A3, A4);
+    b.li(T0, i64::from(A_SCALAR));
+    b.fld(FA0, 0, T0); // a
+    b.slli(T0, A3, 3);
+    b.li(A1, i64::from(y));
+    b.add(A1, A1, T0); // y pointer (store target)
+    match v {
+        Variant::Baseline => {
+            b.li(A0, i64::from(X));
+            b.add(A0, A0, T0);
+            b.slli(T1, A4, 3);
+            b.add(A2, A0, T1);
+            let l = b.new_label();
+            b.bind(l);
+            b.fld(FT0, 0, A0);
+            b.fld(FT1, 0, A1);
+            b.fmadd_d(FT2, FA0, FT0, FT1);
+            b.fsd(FT2, 0, A1);
+            b.addi(A0, A0, 8);
+            b.addi(A1, A1, 8);
+            b.bne(A0, A2, l);
+        }
+        Variant::Ssr => {
+            // lane0 reads x, lane1 reads y; the y store stays explicit.
+            b.addi(T5, A4, -1);
+            b.csrw(ssr_bound_csr(0, 0), T5);
+            b.csrw(ssr_bound_csr(1, 0), T5);
+            b.li(T5, 8);
+            b.csrw(ssr_stride_csr(0, 0), T5);
+            b.csrw(ssr_stride_csr(1, 0), T5);
+            b.slli(T6, A3, 3);
+            b.li(T5, i64::from(X));
+            b.add(T5, T5, T6);
+            b.csrw(ssr_rptr_csr(0, 0), T5);
+            b.mv(T5, A1);
+            b.csrw(ssr_rptr_csr(1, 0), T5);
+            b.csrwi(SSR_ENABLE, 1);
+            b.mv(T0, A4);
+            let l = b.new_label();
+            b.bind(l);
+            b.fmadd_d(FT2, FA0, FT0, FT1);
+            b.fsd(FT2, 0, A1);
+            b.addi(A1, A1, 8);
+            b.addi(T0, T0, -1);
+            b.bnez(T0, l);
+            b.csrwi(SSR_ENABLE, 0);
+        }
+        Variant::SsrFrep => unreachable!("axpy has no FREP variant (needs 3 streamers)"),
+    }
+    rt::barrier(&mut b);
+    rt::epilogue(&mut b);
+    b.finish()
+}
+
+/// Legacy text generator (equivalence-test reference / codegen bench).
+pub(crate) fn gen_text(v: Variant, p: &Params) -> String {
+    let y = y_addr(p.n);
+    let mut s = rt::prologue_text();
+    s.push_str(&rt::load_bounds_text("a3", "a4"));
     s.push_str(&format!(
         r#"
         li   t0, {A_SCALAR}
@@ -80,8 +142,8 @@ axpy_loop:
         }
         Variant::SsrFrep => unreachable!("axpy has no FREP variant (needs 3 streamers)"),
     }
-    s.push_str(&rt::barrier());
-    s.push_str(&rt::epilogue());
+    s.push_str(&rt::barrier_text());
+    s.push_str(&rt::epilogue_text());
     s
 }
 
@@ -124,6 +186,7 @@ pub static KERNEL: KernelDef = KernelDef {
     name: "axpy",
     variants: &[Variant::Baseline, Variant::Ssr],
     gen,
+    gen_text,
     setup,
     check,
     flops,

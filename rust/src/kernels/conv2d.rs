@@ -14,7 +14,10 @@
 
 use super::runtime as rt;
 use super::{allclose, rng_for, KernelDef, KernelIo, Params, Variant};
+use crate::asm::builder::abi::*;
+use crate::asm::{Program, ProgramBuilder};
 use crate::cluster::Cluster;
+use crate::isa::csr::{ssr_bound_csr, ssr_rptr_csr, ssr_stride_csr, SSR_ENABLE};
 
 const KDIM: usize = 7;
 const IMG: u32 = rt::DATA;
@@ -29,14 +32,146 @@ fn out_dim(n: usize) -> usize {
     n - (KDIM - 1)
 }
 
-fn gen(v: Variant, p: &Params) -> String {
+fn gen(v: Variant, p: &Params) -> Program {
+    let n = p.n as i64;
+    let od = out_dim(p.n) as i64;
+    let (w, out) = (w_addr(p.n), out_addr(p.n));
+    let irow = 8 * n;
+    let orow = 8 * od;
+    let mut b = ProgramBuilder::new();
+    rt::prologue(&mut b);
+    rt::load_bounds(&mut b, A3, A4); // a3 = first out row, a4 = rows
+    let skip = b.new_label();
+    b.beqz(A4, skip);
+    // a0 = &IMG[lo][0], a5 = &OUT[lo][0]
+    b.li(T0, irow);
+    b.mul(T1, A3, T0);
+    b.li(A0, i64::from(IMG));
+    b.add(A0, A0, T1);
+    b.li(T0, orow);
+    b.mul(T1, A3, T0);
+    b.li(A5, i64::from(out));
+    b.add(A5, A5, T1);
+    match v {
+        Variant::Baseline => {
+            b.mv(A6, A4);
+            let l_row = b.new_label();
+            b.bind(l_row);
+            b.li(A7, 0); // output column
+            let l_col = b.new_label();
+            b.bind(l_col);
+            b.slli(T1, A7, 3);
+            b.add(T2, A0, T1); // patch origin
+            b.li(T3, i64::from(w)); // weight pointer
+            b.li(T4, KDIM as i64); // ky
+            b.fcvt_d_w(FT3, ZERO);
+            let l_ky = b.new_label();
+            b.bind(l_ky);
+            b.li(T6, KDIM as i64); // kx (t5/t6 free inside body)
+            let l_kx = b.new_label();
+            b.bind(l_kx);
+            b.fld(FT0, 0, T2);
+            b.fld(FT1, 0, T3);
+            b.fmadd_d(FT3, FT0, FT1, FT3);
+            b.addi(T2, T2, 8);
+            b.addi(T3, T3, 8);
+            b.addi(T6, T6, -1);
+            b.bnez(T6, l_kx);
+            b.addi(T2, T2, (irow - 8 * KDIM as i64) as i32); // next image row of the patch
+            b.addi(T4, T4, -1);
+            b.bnez(T4, l_ky);
+            b.fsd(FT3, 0, A5);
+            b.addi(A5, A5, 8);
+            b.addi(A7, A7, 1);
+            b.li(T1, od);
+            b.bne(A7, T1, l_col);
+            b.addi(A0, A0, irow as i32);
+            b.addi(A6, A6, -1);
+            b.bnez(A6, l_row);
+        }
+        Variant::Ssr | Variant::SsrFrep => {
+            // lane0 (image): (kx: 7,8), (ky: 7,irow), (ox: od,8), (oy: cnt,irow)
+            // lane1 (weights): (kx: 7,8), (ky: 7,56), (ox: od,0), (oy: cnt,0)
+            b.li(T5, KDIM as i64 - 1);
+            b.csrw(ssr_bound_csr(0, 0), T5);
+            b.csrw(ssr_bound_csr(0, 1), T5);
+            b.csrw(ssr_bound_csr(1, 0), T5);
+            b.csrw(ssr_bound_csr(1, 1), T5);
+            b.li(T5, od - 1);
+            b.csrw(ssr_bound_csr(0, 2), T5);
+            b.csrw(ssr_bound_csr(1, 2), T5);
+            b.addi(T5, A4, -1);
+            b.csrw(ssr_bound_csr(0, 3), T5);
+            b.csrw(ssr_bound_csr(1, 3), T5);
+            b.li(T5, 8);
+            b.csrw(ssr_stride_csr(0, 0), T5);
+            b.csrw(ssr_stride_csr(0, 2), T5);
+            b.csrw(ssr_stride_csr(1, 0), T5);
+            b.li(T5, irow);
+            b.csrw(ssr_stride_csr(0, 1), T5);
+            b.csrw(ssr_stride_csr(0, 3), T5);
+            b.li(T5, 56);
+            b.csrw(ssr_stride_csr(1, 1), T5);
+            b.li(T5, 0);
+            b.csrw(ssr_stride_csr(1, 2), T5);
+            b.csrw(ssr_stride_csr(1, 3), T5);
+            b.mv(T5, A0);
+            b.csrw(ssr_rptr_csr(0, 3), T5);
+            b.li(T5, i64::from(w));
+            b.csrw(ssr_rptr_csr(1, 3), T5);
+            b.csrwi(SSR_ENABLE, 1);
+            b.li(T5, od);
+            b.mul(A6, A4, T5); // total outputs
+            if v == Variant::Ssr {
+                let l_out = b.new_label();
+                b.bind(l_out);
+                b.fcvt_d_w(FT3, ZERO);
+                b.li(T0, (KDIM * KDIM) as i64);
+                let l_tap = b.new_label();
+                b.bind(l_tap);
+                b.fmadd_d(FT3, FT0, FT1, FT3);
+                b.addi(T0, T0, -1);
+                b.bnez(T0, l_tap);
+                b.fsd(FT3, 0, A5);
+                b.addi(A5, A5, 8);
+                b.addi(A6, A6, -1);
+                b.bnez(A6, l_out);
+                b.csrwi(SSR_ENABLE, 0);
+            } else {
+                b.li(A7, (KDIM * KDIM) as i64 - 1);
+                let l_out = b.new_label();
+                b.bind(l_out);
+                b.fcvt_d_w(FT3, ZERO);
+                b.fcvt_d_w(FT4, ZERO);
+                b.fcvt_d_w(FT5, ZERO);
+                b.fcvt_d_w(FT6, ZERO);
+                b.frep_outer(A7, 0b1100, 3, |b| b.fmadd_d(FT3, FT0, FT1, FT3));
+                b.fadd_d(FT3, FT3, FT4);
+                b.fadd_d(FT5, FT5, FT6);
+                b.fadd_d(FT3, FT3, FT5);
+                b.fsd(FT3, 0, A5);
+                b.addi(A5, A5, 8);
+                b.addi(A6, A6, -1);
+                b.bnez(A6, l_out);
+                b.csrwi(SSR_ENABLE, 0);
+            }
+        }
+    }
+    b.bind(skip);
+    rt::barrier(&mut b);
+    rt::epilogue(&mut b);
+    b.finish()
+}
+
+/// Legacy text generator (equivalence-test reference / codegen bench).
+pub(crate) fn gen_text(v: Variant, p: &Params) -> String {
     let n = p.n as u32;
     let od = out_dim(p.n) as u32;
     let (w, out) = (w_addr(p.n), out_addr(p.n));
     let irow = 8 * n;
     let orow = 8 * od;
-    let mut s = rt::prologue();
-    s.push_str(&rt::load_bounds("a3", "a4")); // a3 = first out row, a4 = rows
+    let mut s = rt::prologue_text();
+    s.push_str(&rt::load_bounds_text("a3", "a4")); // a3 = first out row, a4 = rows
     s.push_str(&format!(
         r#"
         beqz a4, conv_skip
@@ -171,8 +306,8 @@ conv_out:
         }
     }
     s.push_str("conv_skip:\n");
-    s.push_str(&rt::barrier());
-    s.push_str(&rt::epilogue());
+    s.push_str(&rt::barrier_text());
+    s.push_str(&rt::epilogue_text());
     s
 }
 
@@ -235,6 +370,7 @@ pub static KERNEL: KernelDef = KernelDef {
     name: "conv2d",
     variants: &[Variant::Baseline, Variant::Ssr, Variant::SsrFrep],
     gen,
+    gen_text,
     setup,
     check,
     flops,

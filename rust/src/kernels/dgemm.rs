@@ -13,7 +13,13 @@
 
 use super::runtime as rt;
 use super::{allclose, rng_for, KernelDef, KernelIo, Params, Variant};
+use crate::asm::builder::abi::*;
+use crate::asm::{Program, ProgramBuilder};
 use crate::cluster::Cluster;
+use crate::isa::csr::{
+    ssr_bound_csr, ssr_repeat_csr, ssr_rptr_csr, ssr_stride_csr, SSR_ENABLE,
+};
+use crate::isa::FReg;
 
 const A: u32 = rt::DATA;
 
@@ -24,19 +30,229 @@ fn c_addr(n: usize) -> u32 {
     b_addr(n) + 8 * (n * n) as u32
 }
 
-fn gen(v: Variant, p: &Params) -> String {
-    let n = p.n as u32;
+/// FREP/SSR column-block width: widest of 4/2/1 dividing the chunk.
+fn block_width(cnt: usize) -> usize {
+    [4usize, 2, 1].into_iter().find(|w| cnt % w == 0).unwrap()
+}
+
+fn gen(v: Variant, p: &Params) -> Program {
+    let n = p.n as i64;
     assert!(p.n % p.cores == 0, "dgemm needs n divisible by cores");
     let cnt = p.n / p.cores; // columns per core
-    // FREP/SSR column-block width: widest of 4/2/1 dividing the chunk.
-    let w = [4usize, 2, 1].into_iter().find(|w| cnt % w == 0).unwrap();
-    let (b, c) = (b_addr(p.n), c_addr(p.n));
+    let w = block_width(cnt);
+    let (bm, cm) = (b_addr(p.n), c_addr(p.n));
     let row = 8 * n; // row stride in bytes
-    let mut s = rt::prologue();
+    let cback = row - 8 * cnt as i64; // row advance minus written columns
+    let mut b = ProgramBuilder::new();
+    rt::prologue(&mut b);
     // Columns are chunked across cores (each core owns a contiguous column
     // stripe) so the per-core B walks hit disjoint TCDM banks — row
     // chunking would make all cores hammer the same banks in lock-step.
-    s.push_str(&rt::load_bounds("a3", "a4")); // a3 = first column, a4 = count
+    rt::load_bounds(&mut b, A3, A4); // a3 = first column, a4 = count
+    let skip = b.new_label();
+    b.beqz(A4, skip);
+    b.li(A0, i64::from(A)); // &A[0][0]
+    b.slli(T1, A3, 3);
+    b.li(A5, i64::from(cm));
+    b.add(A5, A5, T1); // &C[0][col_lo]
+    b.li(A2, i64::from(bm));
+    b.add(A2, A2, T1); // &B[0][col_lo]
+    match v {
+        Variant::Baseline => {
+            b.li(A6, n); // remaining rows
+            let l_row = b.new_label();
+            b.bind(l_row);
+            b.mv(A7, A4); // remaining columns
+            b.mv(T2, A2); // &B[0][j]
+            b.mv(S2, A5); // &C[m][j]
+            let l_col = b.new_label();
+            b.bind(l_col);
+            b.mv(T3, A0); // &A[m][0]
+            b.mv(T6, T2);
+            b.addi(T4, ZERO, n as i32);
+            b.fcvt_d_w(FT3, ZERO);
+            let l_k = b.new_label();
+            b.bind(l_k);
+            b.fld(FT0, 0, T3);
+            b.fld(FT1, 0, T6);
+            b.fmadd_d(FT3, FT0, FT1, FT3);
+            b.addi(T3, T3, 8);
+            b.addi(T6, T6, row as i32);
+            b.addi(T4, T4, -1);
+            b.bnez(T4, l_k);
+            b.fsd(FT3, 0, S2);
+            b.addi(S2, S2, 8);
+            b.addi(T2, T2, 8);
+            b.addi(A7, A7, -1);
+            b.bnez(A7, l_col);
+            b.addi(A0, A0, row as i32);
+            b.addi(A5, A5, row as i32);
+            b.addi(A6, A6, -1);
+            b.bnez(A6, l_row);
+        }
+        Variant::Ssr => {
+            // lane0: A — (k: n,8), (j: cnt,0), (m: n,row); base A
+            // lane1: B — (k: n,row), (j: cnt,8), (m: n,0); base &B[0][col_lo]
+            b.li(T5, n - 1);
+            b.csrw(ssr_bound_csr(0, 0), T5);
+            b.csrw(ssr_bound_csr(0, 2), T5);
+            b.csrw(ssr_bound_csr(1, 0), T5);
+            b.addi(T5, A4, -1);
+            b.csrw(ssr_bound_csr(0, 1), T5);
+            b.csrw(ssr_bound_csr(1, 1), T5);
+            b.li(T5, n - 1);
+            b.csrw(ssr_bound_csr(1, 2), T5);
+            b.li(T5, 8);
+            b.csrw(ssr_stride_csr(0, 0), T5);
+            b.csrw(ssr_stride_csr(1, 1), T5);
+            b.li(T5, 0);
+            b.csrw(ssr_stride_csr(0, 1), T5);
+            b.csrw(ssr_stride_csr(1, 2), T5);
+            b.li(T5, row);
+            b.csrw(ssr_stride_csr(0, 2), T5);
+            b.csrw(ssr_stride_csr(1, 0), T5);
+            b.mv(T5, A0);
+            b.csrw(ssr_rptr_csr(0, 2), T5);
+            b.mv(T5, A2);
+            b.csrw(ssr_rptr_csr(1, 2), T5);
+            b.csrwi(SSR_ENABLE, 1);
+            b.li(A6, n); // rows
+            b.li(T1, cback); // row advance minus written columns
+            let l_row = b.new_label();
+            b.bind(l_row);
+            b.mv(A7, A4);
+            let l_out = b.new_label();
+            b.bind(l_out);
+            b.fcvt_d_w(FT3, ZERO);
+            b.addi(T0, ZERO, n as i32);
+            let l_k = b.new_label();
+            b.bind(l_k);
+            b.fmadd_d(FT3, FT0, FT1, FT3);
+            b.addi(T0, T0, -1);
+            b.bnez(T0, l_k);
+            b.fsd(FT3, 0, A5);
+            b.addi(A5, A5, 8);
+            b.addi(A7, A7, -1);
+            b.bnez(A7, l_out);
+            b.add(A5, A5, T1);
+            b.addi(A6, A6, -1);
+            b.bnez(A6, l_row);
+            b.csrwi(SSR_ENABLE, 0);
+        }
+        Variant::SsrFrep if w > 1 => {
+            // lane0: A, repeat w — (k: n,8), (jb: cnt/w,0), (m: n,row)
+            // lane1: B — (j: w,8), (k: n,row), (jb: cnt/w,8w), (m: n,0)
+            let acc = |i: usize| FReg::new(3 + i as u8);
+            b.li(T5, w as i64 - 1);
+            b.csrw(ssr_repeat_csr(0), T5);
+            b.csrw(ssr_bound_csr(1, 0), T5);
+            b.li(T5, n - 1);
+            b.csrw(ssr_bound_csr(0, 0), T5);
+            b.csrw(ssr_bound_csr(0, 2), T5);
+            b.csrw(ssr_bound_csr(1, 1), T5);
+            b.li(T5, (cnt / w) as i64 - 1);
+            b.csrw(ssr_bound_csr(0, 1), T5);
+            b.csrw(ssr_bound_csr(1, 2), T5);
+            b.li(T5, n - 1);
+            b.csrw(ssr_bound_csr(1, 3), T5);
+            b.li(T5, 8);
+            b.csrw(ssr_stride_csr(0, 0), T5);
+            b.csrw(ssr_stride_csr(1, 0), T5);
+            b.li(T5, 0);
+            b.csrw(ssr_stride_csr(0, 1), T5);
+            b.csrw(ssr_stride_csr(1, 3), T5);
+            b.li(T5, row);
+            b.csrw(ssr_stride_csr(0, 2), T5);
+            b.csrw(ssr_stride_csr(1, 1), T5);
+            b.li(T5, 8 * w as i64);
+            b.csrw(ssr_stride_csr(1, 2), T5);
+            b.mv(T5, A0);
+            b.csrw(ssr_rptr_csr(0, 2), T5);
+            b.mv(T5, A2);
+            b.csrw(ssr_rptr_csr(1, 3), T5);
+            b.csrwi(SSR_ENABLE, 1);
+            b.li(A6, n); // rows
+            b.li(T1, cback);
+            b.li(S2, n - 1); // frep count (k iterations - 1)
+            let l_row = b.new_label();
+            b.bind(l_row);
+            b.li(A7, (cnt / w) as i64); // blocks in this row
+            let l_blk = b.new_label();
+            b.bind(l_blk);
+            for i in 0..w {
+                b.fcvt_d_w(acc(i), ZERO);
+            }
+            b.frep_outer(S2, 0, 0, |b| {
+                for i in 0..w {
+                    b.fmadd_d(acc(i), FT0, FT1, acc(i));
+                }
+            });
+            for i in 0..w {
+                b.fsd(acc(i), 8 * i as i32, A5);
+            }
+            b.addi(A5, A5, 8 * w as i32);
+            b.addi(A7, A7, -1);
+            b.bnez(A7, l_blk);
+            b.add(A5, A5, T1);
+            b.addi(A6, A6, -1);
+            b.bnez(A6, l_row);
+            b.csrwi(SSR_ENABLE, 0);
+        }
+        Variant::SsrFrep => {
+            // Single-column chunk (e.g. 32 cores on 32×32): sequence one
+            // fmadd with 4-way accumulator staggering, reduce per output.
+            b.li(T5, n - 1);
+            b.csrw(ssr_bound_csr(0, 0), T5);
+            b.csrw(ssr_bound_csr(0, 1), T5);
+            b.csrw(ssr_bound_csr(1, 0), T5);
+            b.csrw(ssr_bound_csr(1, 1), T5);
+            b.li(T5, 8);
+            b.csrw(ssr_stride_csr(0, 0), T5);
+            b.li(T5, row);
+            b.csrw(ssr_stride_csr(0, 1), T5);
+            b.csrw(ssr_stride_csr(1, 0), T5);
+            b.li(T5, 0);
+            b.csrw(ssr_stride_csr(1, 1), T5);
+            b.mv(T5, A0);
+            b.csrw(ssr_rptr_csr(0, 1), T5);
+            b.mv(T5, A2);
+            b.csrw(ssr_rptr_csr(1, 1), T5);
+            b.csrwi(SSR_ENABLE, 1);
+            b.li(A6, n);
+            b.li(S2, n - 1);
+            let l_out = b.new_label();
+            b.bind(l_out);
+            b.fcvt_d_w(FT3, ZERO);
+            b.fcvt_d_w(FT4, ZERO);
+            b.fcvt_d_w(FT5, ZERO);
+            b.fcvt_d_w(FT6, ZERO);
+            b.frep_outer(S2, 0b1100, 3, |b| b.fmadd_d(FT3, FT0, FT1, FT3));
+            b.fadd_d(FT3, FT3, FT4);
+            b.fadd_d(FT5, FT5, FT6);
+            b.fadd_d(FT3, FT3, FT5);
+            b.fsd(FT3, 0, A5);
+            b.addi(A5, A5, row as i32);
+            b.addi(A6, A6, -1);
+            b.bnez(A6, l_out);
+            b.csrwi(SSR_ENABLE, 0);
+        }
+    }
+    b.bind(skip);
+    rt::barrier(&mut b);
+    rt::epilogue(&mut b);
+    b.finish()
+}
+
+/// Legacy text generator (equivalence-test reference / codegen bench).
+pub(crate) fn gen_text(v: Variant, p: &Params) -> String {
+    let n = p.n as u32;
+    assert!(p.n % p.cores == 0, "dgemm needs n divisible by cores");
+    let cnt = p.n / p.cores; // columns per core
+    let w = block_width(cnt);
+    let (b, c) = (b_addr(p.n), c_addr(p.n));
+    let row = 8 * n; // row stride in bytes
+    let mut s = rt::prologue_text();
+    s.push_str(&rt::load_bounds_text("a3", "a4")); // a3 = first column, a4 = count
     s.push_str(&format!(
         r#"
         beqz a4, gemm_skip
@@ -244,8 +460,8 @@ gemm_out:
         }
     }
     s.push_str("gemm_skip:\n");
-    s.push_str(&rt::barrier());
-    s.push_str(&rt::epilogue());
+    s.push_str(&rt::barrier_text());
+    s.push_str(&rt::epilogue_text());
     s
 }
 
@@ -301,6 +517,7 @@ pub static KERNEL: KernelDef = KernelDef {
     name: "dgemm",
     variants: &[Variant::Baseline, Variant::Ssr, Variant::SsrFrep],
     gen,
+    gen_text,
     setup,
     check,
     flops,

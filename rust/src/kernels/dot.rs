@@ -13,7 +13,10 @@
 
 use super::runtime as rt;
 use super::{allclose, rng_for, KernelDef, KernelIo, Params, Variant};
+use crate::asm::builder::abi::*;
+use crate::asm::{Program, ProgramBuilder};
 use crate::cluster::Cluster;
+use crate::isa::csr::{ssr_bound_csr, ssr_rptr_csr, ssr_stride_csr, SSR_ENABLE};
 
 const A: u32 = rt::DATA;
 
@@ -21,11 +24,94 @@ fn b_addr(n: usize) -> u32 {
     A + 8 * n as u32
 }
 
-fn gen(v: Variant, p: &Params) -> String {
+fn gen(v: Variant, p: &Params) -> Program {
+    let bv = b_addr(p.n);
+    let mut b = ProgramBuilder::new();
+    rt::prologue(&mut b);
+    rt::load_bounds(&mut b, A3, A4); // a3 = lo element, a4 = count
+    match v {
+        Variant::Baseline => {
+            // pointers: a0 = &A[lo], a1 = &B[lo], a2 = end
+            b.slli(T0, A3, 3);
+            b.li(A0, i64::from(A));
+            b.add(A0, A0, T0);
+            b.li(A1, i64::from(bv));
+            b.add(A1, A1, T0);
+            b.slli(T1, A4, 3);
+            b.add(A2, A0, T1);
+            b.fcvt_d_w(FT3, ZERO);
+            let l = b.new_label();
+            b.bind(l);
+            b.fld(FT0, 0, A0);
+            b.fld(FT1, 0, A1);
+            b.fmadd_d(FT3, FT0, FT1, FT3);
+            b.addi(A0, A0, 8);
+            b.addi(A1, A1, 8);
+            b.bne(A0, A2, l);
+        }
+        Variant::Ssr => {
+            cfg_streams(&mut b, bv);
+            b.csrwi(SSR_ENABLE, 1);
+            b.fcvt_d_w(FT3, ZERO);
+            b.mv(T0, A4);
+            let l = b.new_label();
+            b.bind(l);
+            b.fmadd_d(FT3, FT0, FT1, FT3);
+            b.addi(T0, T0, -1);
+            b.bnez(T0, l);
+            b.csrwi(SSR_ENABLE, 0);
+        }
+        Variant::SsrFrep => {
+            cfg_streams(&mut b, bv);
+            b.csrwi(SSR_ENABLE, 1);
+            b.fcvt_d_w(FT3, ZERO);
+            b.fmv_d(FT4, FT3);
+            b.fmv_d(FT5, FT3);
+            b.fmv_d(FT6, FT3);
+            b.addi(T0, A4, -1);
+            // stagger rs3+rd over 4 accumulators
+            b.frep_outer(T0, 0b1100, 3, |b| b.fmadd_d(FT3, FT0, FT1, FT3));
+            b.fadd_d(FT3, FT3, FT4);
+            b.fadd_d(FT5, FT5, FT6);
+            b.fadd_d(FT3, FT3, FT5);
+            b.csrwi(SSR_ENABLE, 0);
+        }
+    }
+    // partial store + reduction
+    b.li(T2, i64::from(rt::PARTIALS));
+    b.slli(T3, S0, 3);
+    b.add(T2, T2, T3);
+    b.fsd(FT3, 0, T2);
+    rt::barrier(&mut b);
+    rt::reduce_partials(&mut b, p.cores);
+    rt::epilogue(&mut b);
+    b.finish()
+}
+
+/// Both lanes: 1-D streams over this core's chunk (bound/base computed at
+/// run time from the work bounds in a3/a4).
+fn cfg_streams(b: &mut ProgramBuilder, bv: u32) {
+    b.addi(T5, A4, -1);
+    b.csrw(ssr_bound_csr(0, 0), T5);
+    b.csrw(ssr_bound_csr(1, 0), T5);
+    b.li(T5, 8);
+    b.csrw(ssr_stride_csr(0, 0), T5);
+    b.csrw(ssr_stride_csr(1, 0), T5);
+    b.slli(T6, A3, 3);
+    b.li(T5, i64::from(A));
+    b.add(T5, T5, T6);
+    b.csrw(ssr_rptr_csr(0, 0), T5);
+    b.li(T5, i64::from(bv));
+    b.add(T5, T5, T6);
+    b.csrw(ssr_rptr_csr(1, 0), T5);
+}
+
+/// Legacy text generator (equivalence-test reference / codegen bench).
+pub(crate) fn gen_text(v: Variant, p: &Params) -> String {
     let n = p.n;
     let b = b_addr(n);
-    let mut s = rt::prologue();
-    s.push_str(&rt::load_bounds("a3", "a4")); // a3 = lo element, a4 = count
+    let mut s = rt::prologue_text();
+    s.push_str(&rt::load_bounds_text("a3", "a4")); // a3 = lo element, a4 = count
     match v {
         Variant::Baseline => {
             s.push_str(&format!(
@@ -50,7 +136,7 @@ dot_loop:
             ));
         }
         Variant::Ssr => {
-            s.push_str(&cfg_streams(b));
+            s.push_str(&cfg_streams_text(b));
             s.push_str(
                 r#"
         csrwi ssr, 1
@@ -65,7 +151,7 @@ dot_loop:
             );
         }
         Variant::SsrFrep => {
-            s.push_str(&cfg_streams(b));
+            s.push_str(&cfg_streams_text(b));
             s.push_str(
                 r#"
         csrwi ssr, 1
@@ -93,15 +179,13 @@ dot_loop:
         fsd  ft3, 0(t2)
 "#,
     );
-    s.push_str(&rt::barrier());
-    s.push_str(&rt::reduce_partials(p.cores));
-    s.push_str(&rt::epilogue());
+    s.push_str(&rt::barrier_text());
+    s.push_str(&rt::reduce_partials_text(p.cores));
+    s.push_str(&rt::epilogue_text());
     s
 }
 
-/// Both lanes: 1-D streams over this core's chunk (bound/base computed at
-/// run time from the work bounds in a3/a4).
-fn cfg_streams(b: u32) -> String {
+fn cfg_streams_text(b: u32) -> String {
     format!(
         r#"
         addi t5, a4, -1
@@ -155,6 +239,7 @@ pub static KERNEL: KernelDef = KernelDef {
     name: "dot",
     variants: &[Variant::Baseline, Variant::Ssr, Variant::SsrFrep],
     gen,
+    gen_text,
     setup,
     check,
     flops,

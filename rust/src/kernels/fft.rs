@@ -25,7 +25,10 @@
 
 use super::runtime as rt;
 use super::{allclose, rng_for, KernelDef, KernelIo, Params, Variant};
+use crate::asm::builder::abi::*;
+use crate::asm::{Program, ProgramBuilder};
 use crate::cluster::Cluster;
+use crate::isa::csr::{ssr_bound_csr, ssr_rptr_csr, ssr_stride_csr, ssr_wptr_csr, SSR_ENABLE};
 
 const DATA_V: u32 = rt::DATA;
 
@@ -74,13 +77,192 @@ const BODY_MEM: &str = r#"
         fsd  ft3, 8(t3)
 "#;
 
-fn gen(v: Variant, p: &Params) -> String {
+/// Builder twin of [`BODY`].
+fn body(b: &mut ProgramBuilder) {
+    b.fmul_d(FA0, FT0, FS4); // a.re
+    b.fmul_d(FA1, FT0, FS4); // a.im
+    b.fmul_d(FA2, FT0, FS4); // b.re
+    b.fmul_d(FA3, FT0, FS4); // b.im
+    b.fmul_d(FA4, FA2, FS2); // b.re*w.re
+    b.fmul_d(FA5, FA3, FS3); // b.im*w.im
+    b.fsub_d(FA4, FA4, FA5); // t.re
+    b.fmul_d(FA5, FA3, FS2); // b.im*w.re
+    b.fmul_d(FT2, FA2, FS3); // b.re*w.im
+    b.fadd_d(FA5, FA5, FT2); // t.im
+    b.fadd_d(FT1, FA0, FA4); // a'.re
+    b.fadd_d(FT1, FA1, FA5); // a'.im
+    b.fsub_d(FT1, FA0, FA4); // b'.re
+    b.fsub_d(FT1, FA1, FA5); // b'.im
+}
+
+/// Builder twin of [`BODY_MEM`].
+fn body_mem(b: &mut ProgramBuilder) {
+    b.fld(FA0, 0, T2);
+    b.fld(FA1, 8, T2);
+    b.fld(FA2, 0, T3);
+    b.fld(FA3, 8, T3);
+    b.fmul_d(FA4, FA2, FS2);
+    b.fmul_d(FA5, FA3, FS3);
+    b.fsub_d(FA4, FA4, FA5);
+    b.fmul_d(FA5, FA3, FS2);
+    b.fmul_d(FT2, FA2, FS3);
+    b.fadd_d(FA5, FA5, FT2);
+    b.fadd_d(FT3, FA0, FA4);
+    b.fsd(FT3, 0, T2);
+    b.fadd_d(FT3, FA1, FA5);
+    b.fsd(FT3, 8, T2);
+    b.fsub_d(FT3, FA0, FA4);
+    b.fsd(FT3, 0, T3);
+    b.fsub_d(FT3, FA1, FA5);
+    b.fsd(FT3, 8, T3);
+}
+
+/// Per-stage work split: `(kcnt, icnt)` plus the code that computes this
+/// core's `(k0, i0)` into `a0`/`a1`.
+fn stage_split(p: &Params, groups: usize, bf_per_group: usize) -> (usize, usize) {
+    if groups >= p.cores {
+        (groups / p.cores, bf_per_group)
+    } else {
+        (1, bf_per_group / (p.cores / groups))
+    }
+}
+
+fn gen(v: Variant, p: &Params) -> Program {
     let n = p.n;
     assert!(n.is_power_of_two() && n >= 2 * p.cores.max(2), "fft size constraint");
     assert!(p.cores.is_power_of_two());
     let stages = n.ilog2();
     let tw = tw_addr(n);
-    let mut s = rt::prologue();
+    let mut b = ProgramBuilder::new();
+    rt::prologue(&mut b);
+    b.li(T0, 1);
+    b.fcvt_d_w(FS4, T0); // 1.0 for exact stream copies
+    for st in 0..stages {
+        let half = 1usize << st; // butterflies-per-group dimension
+        let m = half * 2;
+        let groups = half; // twiddle groups G = 2^s
+        let bf_per_group = n / m; // i extent M
+        let tw_stride = 16 * (n / m) as i64; // twiddle table step per k
+        let (kcnt, icnt) = stage_split(p, groups, bf_per_group);
+        // Work split for this stage (constants baked per stage):
+        // G >= P: each core takes G/P k-groups, full i range.
+        // G <  P: Q = P/G cores per group; each takes M/Q i's.
+        if groups >= p.cores {
+            b.li(T0, kcnt as i64);
+            b.mul(A0, S0, T0); // k0
+            b.li(A1, 0); // i0
+        } else {
+            let q = p.cores / groups;
+            b.srli(A0, S0, q.ilog2() as i32); // k0 = hart / q
+            b.andi(T0, S0, (q - 1) as i32);
+            b.li(T1, icnt as i64);
+            b.mul(A1, T0, T1); // i0 = (hart % q) * icnt
+        }
+        // Common address math: base = DATA + 16*k0 + i0*16*m;
+        // twiddle pointer = TW + k0*tw_stride.
+        b.slli(T0, A0, 4);
+        b.li(A2, i64::from(DATA_V));
+        b.add(A2, A2, T0);
+        b.slli(T0, A1, (m.ilog2() + 4) as i32);
+        b.add(A2, A2, T0); // data base for this core
+        b.li(A3, i64::from(tw));
+        b.li(T0, tw_stride);
+        b.mul(T1, A0, T0);
+        b.add(A3, A3, T1); // twiddle pointer
+        match v {
+            Variant::Baseline => {
+                // Explicit loops: k (kcnt), i (icnt).
+                b.li(S3, tw_stride);
+                b.li(S4, 16 * half as i64);
+                b.li(S5, 16 * m as i64);
+                b.li(A4, kcnt as i64);
+                let l_k = b.new_label();
+                b.bind(l_k);
+                b.fld(FS2, 0, A3);
+                b.fld(FS3, 8, A3);
+                b.mv(T2, A2);
+                b.li(A5, icnt as i64);
+                let l_i = b.new_label();
+                b.bind(l_i);
+                b.add(T3, T2, S4);
+                body_mem(&mut b);
+                b.add(T2, T2, S5);
+                b.addi(A5, A5, -1);
+                b.bnez(A5, l_i);
+                b.add(A3, A3, S3);
+                b.addi(A2, A2, 16); // next k group
+                b.addi(A4, A4, -1);
+                b.bnez(A4, l_k);
+            }
+            Variant::Ssr | Variant::SsrFrep => {
+                // 4-D streams covering the whole per-core stage share:
+                // (re/im: 2,8), (a/b: 2,16*half), (i: icnt,16*m), (k: kcnt,16)
+                b.li(T5, 1);
+                b.csrw(ssr_bound_csr(0, 0), T5);
+                b.csrw(ssr_bound_csr(0, 1), T5);
+                b.csrw(ssr_bound_csr(1, 0), T5);
+                b.csrw(ssr_bound_csr(1, 1), T5);
+                b.li(T5, icnt as i64 - 1);
+                b.csrw(ssr_bound_csr(0, 2), T5);
+                b.csrw(ssr_bound_csr(1, 2), T5);
+                b.li(T5, kcnt as i64 - 1);
+                b.csrw(ssr_bound_csr(0, 3), T5);
+                b.csrw(ssr_bound_csr(1, 3), T5);
+                b.li(T5, 8);
+                b.csrw(ssr_stride_csr(0, 0), T5);
+                b.csrw(ssr_stride_csr(1, 0), T5);
+                b.li(T5, 16 * half as i64);
+                b.csrw(ssr_stride_csr(0, 1), T5);
+                b.csrw(ssr_stride_csr(1, 1), T5);
+                b.li(T5, 16 * m as i64);
+                b.csrw(ssr_stride_csr(0, 2), T5);
+                b.csrw(ssr_stride_csr(1, 2), T5);
+                b.li(T5, 16);
+                b.csrw(ssr_stride_csr(0, 3), T5);
+                b.csrw(ssr_stride_csr(1, 3), T5);
+                b.mv(T5, A2);
+                b.csrw(ssr_rptr_csr(0, 3), T5);
+                b.mv(T5, A2);
+                b.csrw(ssr_wptr_csr(1, 3), T5);
+                b.csrwi(SSR_ENABLE, 1);
+                b.li(S3, tw_stride);
+                b.li(A4, kcnt as i64);
+                let l_k = b.new_label();
+                b.bind(l_k);
+                b.fld(FS2, 0, A3);
+                b.fld(FS3, 8, A3);
+                if v == Variant::Ssr {
+                    b.li(A5, icnt as i64);
+                    let l_i = b.new_label();
+                    b.bind(l_i);
+                    body(&mut b);
+                    b.addi(A5, A5, -1);
+                    b.bnez(A5, l_i);
+                } else {
+                    b.li(T0, icnt as i64 - 1);
+                    b.frep_outer(T0, 0, 0, body);
+                }
+                b.add(A3, A3, S3);
+                b.addi(A4, A4, -1);
+                b.bnez(A4, l_k);
+                b.csrwi(SSR_ENABLE, 0);
+            }
+        }
+        // Per-stage resynchronization.
+        rt::barrier(&mut b);
+    }
+    rt::epilogue(&mut b);
+    b.finish()
+}
+
+/// Legacy text generator (equivalence-test reference / codegen bench).
+pub(crate) fn gen_text(v: Variant, p: &Params) -> String {
+    let n = p.n;
+    assert!(n.is_power_of_two() && n >= 2 * p.cores.max(2), "fft size constraint");
+    assert!(p.cores.is_power_of_two());
+    let stages = n.ilog2();
+    let tw = tw_addr(n);
+    let mut s = rt::prologue_text();
     s.push_str(
         r#"
         li   t0, 1
@@ -94,40 +276,28 @@ fn gen(v: Variant, p: &Params) -> String {
         let bf_per_group = n / m; // i extent M
         let tw_stride = 16 * (n / m) as u32; // twiddle table step per k
         let p_cores = p.cores;
-        // Work split for this stage (constants baked per stage):
-        // G >= P: each core takes G/P k-groups, full i range.
-        // G <  P: Q = P/G cores per group; each takes M/Q i's.
-        let (kcnt, icnt, per_core_code) = if groups >= p_cores {
-            let kcnt = groups / p_cores;
-            (
-                kcnt,
-                bf_per_group,
-                format!(
-                    r#"
+        let (kcnt, icnt) = stage_split(p, groups, bf_per_group);
+        let per_core_code = if groups >= p_cores {
+            format!(
+                r#"
         # stage {st}: k0 = hart * {kcnt}, i0 = 0
         li   t0, {kcnt}
         mul  a0, s0, t0           # k0
         li   a1, 0                # i0
 "#
-                ),
             )
         } else {
             let q = p_cores / groups;
-            let icnt = bf_per_group / q;
-            (
-                1,
-                icnt,
-                format!(
-                    r#"
+            format!(
+                r#"
         # stage {st}: k0 = hart / {q}, i0 = (hart % {q}) * {icnt}
         srli a0, s0, {qlog}
         andi t0, s0, {qm1}
         li   t1, {icnt}
         mul  a1, t0, t1
 "#,
-                    qlog = q.ilog2(),
-                    qm1 = q - 1,
-                ),
+                qlog = q.ilog2(),
+                qm1 = q - 1,
             )
         };
         s.push_str(&per_core_code);
@@ -249,9 +419,9 @@ fft_s{st}_i:{BODY}
             }
         }
         // Per-stage resynchronization.
-        s.push_str(&rt::barrier());
+        s.push_str(&rt::barrier_text());
     }
-    s.push_str(&rt::epilogue());
+    s.push_str(&rt::epilogue_text());
     s
 }
 
@@ -346,6 +516,7 @@ pub static KERNEL: KernelDef = KernelDef {
     name: "fft",
     variants: &[Variant::Baseline, Variant::Ssr, Variant::SsrFrep],
     gen,
+    gen_text,
     setup,
     check,
     flops,

@@ -12,7 +12,10 @@
 
 use super::runtime as rt;
 use super::{allclose, rng_for, KernelDef, KernelIo, Params, Variant};
+use crate::asm::builder::abi::*;
+use crate::asm::{Program, ProgramBuilder};
 use crate::cluster::Cluster;
+use crate::isa::csr::{ssr_bound_csr, ssr_rptr_csr, ssr_stride_csr, ssr_wptr_csr, SSR_ENABLE};
 
 const D: usize = 4;
 const P: u32 = rt::DATA;
@@ -23,10 +26,106 @@ fn dist_addr(n: usize) -> u32 {
 /// Query point parked after RESULT.
 const QUERY: u32 = rt::RESULT + 0x20;
 
-fn gen(v: Variant, p: &Params) -> String {
+/// The 8-op squared-distance body (all sequenceable FP compute; the first
+/// distance term uses fmul instead of an accumulator init — identical
+/// rounding to fma(d,d,0)).
+fn dist_body(b: &mut ProgramBuilder) {
+    b.fsub_d(FA1, FT0, FS2);
+    b.fmul_d(FA0, FA1, FA1);
+    b.fsub_d(FA2, FT0, FS3);
+    b.fmadd_d(FA0, FA2, FA2, FA0);
+    b.fsub_d(FA3, FT0, FS4);
+    b.fmadd_d(FA0, FA3, FA3, FA0);
+    b.fsub_d(FA4, FT0, FS5);
+    b.fmadd_d(FT1, FA4, FA4, FA0);
+}
+
+fn gen(v: Variant, p: &Params) -> Program {
     let dist = dist_addr(p.n);
-    let mut s = rt::prologue();
-    s.push_str(&rt::load_bounds("a3", "a4"));
+    let mut b = ProgramBuilder::new();
+    rt::prologue(&mut b);
+    rt::load_bounds(&mut b, A3, A4);
+    let skip = b.new_label();
+    b.beqz(A4, skip);
+    b.li(T0, i64::from(QUERY));
+    b.fld(FS2, 0, T0);
+    b.fld(FS3, 8, T0);
+    b.fld(FS4, 16, T0);
+    b.fld(FS5, 24, T0);
+    // a0 = &P[lo][0], a1 = &dist[lo]
+    b.slli(T1, A3, (3 + D.ilog2()) as i32);
+    b.li(A0, i64::from(P));
+    b.add(A0, A0, T1);
+    b.slli(T1, A3, 3);
+    b.li(A1, i64::from(dist));
+    b.add(A1, A1, T1);
+    match v {
+        Variant::Baseline => {
+            b.mv(A6, A4);
+            let l = b.new_label();
+            b.bind(l);
+            b.fcvt_d_w(FA0, ZERO);
+            b.fld(FT0, 0, A0);
+            b.fsub_d(FA1, FT0, FS2);
+            b.fmadd_d(FA0, FA1, FA1, FA0);
+            b.fld(FT0, 8, A0);
+            b.fsub_d(FA2, FT0, FS3);
+            b.fmadd_d(FA0, FA2, FA2, FA0);
+            b.fld(FT0, 16, A0);
+            b.fsub_d(FA3, FT0, FS4);
+            b.fmadd_d(FA0, FA3, FA3, FA0);
+            b.fld(FT0, 24, A0);
+            b.fsub_d(FA4, FT0, FS5);
+            b.fmadd_d(FA0, FA4, FA4, FA0);
+            b.fsd(FA0, 0, A1);
+            b.addi(A0, A0, 32);
+            b.addi(A1, A1, 8);
+            b.addi(A6, A6, -1);
+            b.bnez(A6, l);
+        }
+        Variant::Ssr | Variant::SsrFrep => {
+            // lane0: points — (d: 4,8), (i: cnt,32); lane1: distances (i: cnt,8)
+            b.li(T5, 3);
+            b.csrw(ssr_bound_csr(0, 0), T5);
+            b.addi(T5, A4, -1);
+            b.csrw(ssr_bound_csr(0, 1), T5);
+            b.csrw(ssr_bound_csr(1, 0), T5);
+            b.li(T5, 8);
+            b.csrw(ssr_stride_csr(0, 0), T5);
+            b.csrw(ssr_stride_csr(1, 0), T5);
+            b.li(T5, 32);
+            b.csrw(ssr_stride_csr(0, 1), T5);
+            b.mv(T5, A0);
+            b.csrw(ssr_rptr_csr(0, 1), T5);
+            b.mv(T5, A1);
+            b.csrw(ssr_wptr_csr(1, 0), T5);
+            b.csrwi(SSR_ENABLE, 1);
+            if v == Variant::Ssr {
+                b.mv(A6, A4);
+                let l = b.new_label();
+                b.bind(l);
+                dist_body(&mut b);
+                b.addi(A6, A6, -1);
+                b.bnez(A6, l);
+                b.csrwi(SSR_ENABLE, 0);
+            } else {
+                b.addi(T0, A4, -1);
+                b.frep_outer(T0, 0, 0, dist_body);
+                b.csrwi(SSR_ENABLE, 0);
+            }
+        }
+    }
+    b.bind(skip);
+    rt::barrier(&mut b);
+    rt::epilogue(&mut b);
+    b.finish()
+}
+
+/// Legacy text generator (equivalence-test reference / codegen bench).
+pub(crate) fn gen_text(v: Variant, p: &Params) -> String {
+    let dist = dist_addr(p.n);
+    let mut s = rt::prologue_text();
+    s.push_str(&rt::load_bounds_text("a3", "a4"));
     s.push_str(&format!(
         r#"
         beqz a4, knn_skip
@@ -126,8 +225,8 @@ knn_loop:{body}
         }
     }
     s.push_str("knn_skip:\n");
-    s.push_str(&rt::barrier());
-    s.push_str(&rt::epilogue());
+    s.push_str(&rt::barrier_text());
+    s.push_str(&rt::epilogue_text());
     s
 }
 
@@ -182,6 +281,7 @@ pub static KERNEL: KernelDef = KernelDef {
     name: "knn",
     variants: &[Variant::Baseline, Variant::Ssr, Variant::SsrFrep],
     gen,
+    gen_text,
     setup,
     check,
     flops,

@@ -23,7 +23,11 @@
 
 use super::runtime as rt;
 use super::{rng_for, KernelDef, KernelIo, Params, Variant};
+use crate::asm::builder::abi::*;
+use crate::asm::{Program, ProgramBuilder};
 use crate::cluster::Cluster;
+use crate::isa::csr::{ssr_bound_csr, ssr_rptr_csr, ssr_stride_csr, SSR_ENABLE};
+use crate::isa::Reg;
 use crate::sim::proptest::Rng;
 
 const BUF: u32 = rt::DATA;
@@ -31,6 +35,205 @@ const BUF: u32 = rt::DATA;
 /// Samples per FREP block (shrinks for tiny per-core chunks).
 fn block_size(per_core: usize) -> usize {
     per_core.min(32)
+}
+
+/// xoshiro128++ step: state in s2..s5, result into `out`. Clobbers t0, t1.
+/// Mirrors [`Rng::next_u32`] exactly.
+fn rng_step(b: &mut ProgramBuilder, out: Reg) {
+    b.add(T0, S2, S5);
+    b.slli(T1, T0, 7);
+    b.srli(T0, T0, 25);
+    b.or(T0, T0, T1);
+    b.add(out, T0, S2);
+    b.slli(T1, S3, 9);
+    b.xor(S4, S4, S2);
+    b.xor(S5, S5, S3);
+    b.xor(S3, S3, S4);
+    b.xor(S2, S2, S5);
+    b.xor(S4, S4, T1);
+    b.slli(T1, S5, 11);
+    b.srli(S5, S5, 21);
+    b.or(S5, S5, T1);
+}
+
+/// Build one [1,2) double from a fresh random and store it at `0(ptr)`;
+/// advances `ptr` by 8. Clobbers t0-t2, a7.
+fn coord_step(b: &mut ProgramBuilder, ptr: Reg) {
+    rng_step(b, A7);
+    b.slli(T0, A7, 20); // low word: u << 20
+    b.sw(T0, 0, ptr);
+    b.srli(T1, A7, 12); // high word mantissa bits
+    b.li(T2, 0x3FF0_0000);
+    b.or(T1, T1, T2);
+    b.sw(T1, 4, ptr);
+    b.addi(ptr, ptr, 8);
+}
+
+/// The 8-op sequenceable indicator body (clamp trick, FP accumulator).
+fn eval_body(b: &mut ProgramBuilder) {
+    b.fsub_d(FA1, FT0, FS4);
+    b.fsub_d(FA2, FT0, FS4);
+    b.fnmsub_d(FA3, FA2, FA2, FS4);
+    b.fnmsub_d(FA3, FA1, FA1, FA3);
+    b.fmul_d(FA3, FA3, FS5);
+    b.fmax_d(FA3, FA3, FS6);
+    b.fmin_d(FA3, FA3, FS4);
+    b.fadd_d(FA0, FA0, FA3);
+}
+
+fn gen(v: Variant, p: &Params) -> Program {
+    assert!(p.n % p.cores == 0, "montecarlo needs n divisible by cores");
+    let per_core = p.n / p.cores;
+    let mut b = ProgramBuilder::new();
+    rt::prologue(&mut b);
+    // Load per-core RNG seeds.
+    b.li(T0, i64::from(rt::SEEDS));
+    b.slli(T1, S0, 4);
+    b.add(T0, T0, T1);
+    b.lw(S2, 0, T0);
+    b.lw(S3, 4, T0);
+    b.lw(S4, 8, T0);
+    b.lw(S5, 12, T0);
+    match v {
+        Variant::Baseline => {
+            // fs4 = 1.0; scratch slot for the coordinate round-trip.
+            b.li(T0, 1);
+            b.fcvt_d_w(FS4, T0);
+            b.fcvt_d_w(FS6, ZERO); // 0.0 for the compare
+            // reuse this core's 16-byte seed slot as coordinate scratch
+            // (the seeds are already in s2..s5)
+            b.li(A5, i64::from(rt::SEEDS));
+            b.slli(T0, S0, 4);
+            b.add(A5, A5, T0);
+            b.li(A6, per_core as i64);
+            b.li(A2, 0); // inside count
+            let l = b.new_label();
+            b.bind(l);
+            b.mv(A0, A5);
+            coord_step(&mut b, A0);
+            coord_step(&mut b, A0);
+            b.fld(FA0, 0, A5); // x
+            b.fld(FA1, 8, A5); // y
+            b.fsub_d(FA0, FA0, FS4); // x'
+            b.fsub_d(FA1, FA1, FS4); // y'
+            b.fnmsub_d(FA2, FA1, FA1, FS4); // 1 - y'^2
+            b.fnmsub_d(FA2, FA0, FA0, FA2); // t
+            b.flt_d(T3, FS6, FA2); // inside = (0 < t)
+            b.add(A2, A2, T3);
+            b.addi(A6, A6, -1);
+            b.bnez(A6, l);
+            b.li(T0, i64::from(rt::COUNTS));
+            b.slli(T1, S0, 2);
+            b.add(T0, T0, T1);
+            b.sw(A2, 0, T0);
+        }
+        Variant::Ssr | Variant::SsrFrep => {
+            // FP constants: fs4 = 1.0, fs5 = 2^60 (clamp scale),
+            // fs6 = 0.0 (clamp floor).
+            b.li(T0, 1);
+            b.fcvt_d_w(FS4, T0);
+            b.li(T0, 0x4000_0000);
+            b.fcvt_d_w(FS5, T0);
+            b.fmul_d(FS5, FS5, FS5); // 2^60
+            b.fcvt_d_w(FS6, ZERO);
+            b.fcvt_d_w(FA0, ZERO); // FP inside-count accumulator
+            if v == Variant::Ssr {
+                // whole-chunk buffer: base + hart * per_core*16
+                b.li(A0, i64::from(BUF));
+                b.li(T0, (per_core * 16) as i64);
+                b.mul(T1, S0, T0);
+                b.add(A0, A0, T1);
+                b.mv(A1, A0); // fill pointer
+                b.li(A6, per_core as i64);
+                let l_fill = b.new_label();
+                b.bind(l_fill);
+                coord_step(&mut b, A1);
+                coord_step(&mut b, A1);
+                b.addi(A6, A6, -1);
+                b.bnez(A6, l_fill);
+                // stream the block
+                b.li(T5, (2 * per_core) as i64 - 1);
+                b.csrw(ssr_bound_csr(0, 0), T5);
+                b.li(T5, 8);
+                b.csrw(ssr_stride_csr(0, 0), T5);
+                b.mv(T5, A0);
+                b.csrw(ssr_rptr_csr(0, 0), T5);
+                b.csrwi(SSR_ENABLE, 1);
+                b.li(A6, per_core as i64);
+                let l_eval = b.new_label();
+                b.bind(l_eval);
+                eval_body(&mut b);
+                b.addi(A6, A6, -1);
+                b.bnez(A6, l_eval);
+                b.csrwi(SSR_ENABLE, 0);
+            } else {
+                let block = block_size(per_core);
+                assert!(per_core % block == 0, "montecarlo FREP needs n/cores % {block} == 0");
+                let nblocks = per_core / block;
+                // double buffer: a0 = buf0, a2 = buf1
+                b.li(A0, i64::from(BUF));
+                b.li(T0, (2 * block * 16) as i64);
+                b.mul(T1, S0, T0);
+                b.add(A0, A0, T1);
+                b.addi(A2, A0, (block * 16) as i32);
+                // stream geometry is constant: 2*BLOCK doubles, stride 8
+                b.li(T5, (2 * block) as i64 - 1);
+                b.csrw(ssr_bound_csr(0, 0), T5);
+                b.li(T5, 8);
+                b.csrw(ssr_stride_csr(0, 0), T5);
+                // fill block 0 into buf0
+                b.mv(A1, A0);
+                b.li(A6, block as i64);
+                let l_fill0 = b.new_label();
+                b.bind(l_fill0);
+                coord_step(&mut b, A1);
+                coord_step(&mut b, A1);
+                b.addi(A6, A6, -1);
+                b.bnez(A6, l_fill0);
+                b.csrwi(SSR_ENABLE, 1);
+                b.li(S6, nblocks as i64); // remaining blocks
+                b.mv(S7, A0); // current buffer
+                b.mv(S8, A2); // next buffer
+                b.li(S9, block as i64 - 1);
+                let l_block = b.new_label();
+                b.bind(l_block);
+                // arm the stream for the current buffer (shadow regs make
+                // this safe while the previous stream is still draining)
+                b.mv(T5, S7);
+                b.csrw(ssr_rptr_csr(0, 0), T5);
+                b.frep_outer(S9, 0, 0, eval_body);
+                // pseudo-dual issue: while the sequencer evaluates, fill
+                // the next block with the integer core
+                let l_last = b.new_label();
+                b.addi(S6, S6, -1);
+                b.beqz(S6, l_last);
+                b.mv(A1, S8);
+                b.li(A6, block as i64);
+                let l_filln = b.new_label();
+                b.bind(l_filln);
+                coord_step(&mut b, A1);
+                coord_step(&mut b, A1);
+                b.addi(A6, A6, -1);
+                b.bnez(A6, l_filln);
+                // swap buffers
+                b.mv(T0, S7);
+                b.mv(S7, S8);
+                b.mv(S8, T0);
+                b.j(l_block);
+                b.bind(l_last);
+                b.csrwi(SSR_ENABLE, 0);
+            }
+            // FP accumulator → integer count.
+            b.fcvt_w_d(T3, FA0);
+            b.li(T0, i64::from(rt::COUNTS));
+            b.slli(T1, S0, 2);
+            b.add(T0, T0, T1);
+            b.sw(T3, 0, T0);
+        }
+    }
+    rt::barrier(&mut b);
+    rt::epilogue(&mut b);
+    b.finish()
 }
 
 /// xoshiro128++ step in assembly. State in s2..s5; result left in `out`.
@@ -74,10 +277,11 @@ fn gen_coord(ptr: &str) -> String {
     s
 }
 
-fn gen(v: Variant, p: &Params) -> String {
+/// Legacy text generator (equivalence-test reference / codegen bench).
+pub(crate) fn gen_text(v: Variant, p: &Params) -> String {
     assert!(p.n % p.cores == 0, "montecarlo needs n divisible by cores");
     let per_core = p.n / p.cores;
-    let mut s = rt::prologue();
+    let mut s = rt::prologue_text();
     // Load per-core RNG seeds.
     s.push_str(
         r#"
@@ -92,7 +296,6 @@ fn gen(v: Variant, p: &Params) -> String {
     );
     match v {
         Variant::Baseline => {
-            // fs4 = 1.0; scratch slot for the coordinate round-trip.
             s.push_str(&format!(
                 r#"
         li   t0, 1
@@ -143,8 +346,6 @@ mc_loop:
 "#,
             );
             if v == Variant::Ssr {
-                let buf = "BIGBUF"; // patched below per hart via register math
-                let _ = buf;
                 s.push_str(&format!(
                     r#"
         # whole-chunk buffer: base + hart * per_core*16
@@ -272,8 +473,8 @@ mc_lastblock:
             );
         }
     }
-    s.push_str(&rt::barrier());
-    s.push_str(&rt::epilogue());
+    s.push_str(&rt::barrier_text());
+    s.push_str(&rt::epilogue_text());
     s
 }
 
@@ -357,6 +558,7 @@ pub static KERNEL: KernelDef = KernelDef {
     name: "montecarlo",
     variants: &[Variant::Baseline, Variant::Ssr, Variant::SsrFrep],
     gen,
+    gen_text,
     setup,
     check,
     flops,

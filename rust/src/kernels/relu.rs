@@ -8,7 +8,10 @@
 
 use super::runtime as rt;
 use super::{allclose, rng_for, KernelDef, KernelIo, Params, Variant};
+use crate::asm::builder::abi::*;
+use crate::asm::{Program, ProgramBuilder};
 use crate::cluster::Cluster;
+use crate::isa::csr::{ssr_bound_csr, ssr_rptr_csr, ssr_stride_csr, ssr_wptr_csr, SSR_ENABLE};
 
 const X: u32 = rt::DATA;
 
@@ -16,10 +19,78 @@ fn y_addr(n: usize) -> u32 {
     X + 8 * n as u32
 }
 
-fn gen(v: Variant, p: &Params) -> String {
+fn gen(v: Variant, p: &Params) -> Program {
     let y = y_addr(p.n);
-    let mut s = rt::prologue();
-    s.push_str(&rt::load_bounds("a3", "a4"));
+    let mut b = ProgramBuilder::new();
+    rt::prologue(&mut b);
+    rt::load_bounds(&mut b, A3, A4);
+    match v {
+        Variant::Baseline => {
+            b.slli(T0, A3, 3);
+            b.li(A0, i64::from(X));
+            b.add(A0, A0, T0);
+            b.li(A1, i64::from(y));
+            b.add(A1, A1, T0);
+            b.slli(T1, A4, 3);
+            b.add(A2, A0, T1);
+            b.fcvt_d_w(FT2, ZERO);
+            let l = b.new_label();
+            b.bind(l);
+            b.fld(FT0, 0, A0);
+            b.fmax_d(FT1, FT0, FT2);
+            b.fsd(FT1, 0, A1);
+            b.addi(A0, A0, 8);
+            b.addi(A1, A1, 8);
+            b.bne(A0, A2, l);
+        }
+        Variant::Ssr => {
+            cfg_streams(&mut b, y);
+            b.csrwi(SSR_ENABLE, 1);
+            b.fcvt_d_w(FT2, ZERO);
+            b.mv(T0, A4);
+            let l = b.new_label();
+            b.bind(l);
+            b.fmax_d(FT1, FT0, FT2);
+            b.addi(T0, T0, -1);
+            b.bnez(T0, l);
+            b.csrwi(SSR_ENABLE, 0);
+        }
+        Variant::SsrFrep => {
+            cfg_streams(&mut b, y);
+            b.csrwi(SSR_ENABLE, 1);
+            b.fcvt_d_w(FT2, ZERO);
+            b.addi(T0, A4, -1);
+            b.frep_outer(T0, 0, 0, |b| b.fmax_d(FT1, FT0, FT2));
+            b.csrwi(SSR_ENABLE, 0);
+        }
+    }
+    rt::barrier(&mut b);
+    rt::epilogue(&mut b);
+    b.finish()
+}
+
+/// lane 0 reads x, lane 1 writes y, both 1-D over this core's chunk.
+fn cfg_streams(b: &mut ProgramBuilder, y: u32) {
+    b.addi(T5, A4, -1);
+    b.csrw(ssr_bound_csr(0, 0), T5);
+    b.csrw(ssr_bound_csr(1, 0), T5);
+    b.li(T5, 8);
+    b.csrw(ssr_stride_csr(0, 0), T5);
+    b.csrw(ssr_stride_csr(1, 0), T5);
+    b.slli(T6, A3, 3);
+    b.li(T5, i64::from(X));
+    b.add(T5, T5, T6);
+    b.csrw(ssr_rptr_csr(0, 0), T5);
+    b.li(T5, i64::from(y));
+    b.add(T5, T5, T6);
+    b.csrw(ssr_wptr_csr(1, 0), T5);
+}
+
+/// Legacy text generator (equivalence-test reference / codegen bench).
+pub(crate) fn gen_text(v: Variant, p: &Params) -> String {
+    let y = y_addr(p.n);
+    let mut s = rt::prologue_text();
+    s.push_str(&rt::load_bounds_text("a3", "a4"));
     match v {
         Variant::Baseline => s.push_str(&format!(
             r#"
@@ -41,7 +112,7 @@ relu_loop:
 "#
         )),
         Variant::Ssr => {
-            s.push_str(&cfg_streams(y));
+            s.push_str(&cfg_streams_text(y));
             s.push_str(
                 r#"
         csrwi ssr, 1
@@ -56,7 +127,7 @@ relu_loop:
             );
         }
         Variant::SsrFrep => {
-            s.push_str(&cfg_streams(y));
+            s.push_str(&cfg_streams_text(y));
             s.push_str(
                 r#"
         csrwi ssr, 1
@@ -69,12 +140,12 @@ relu_loop:
             );
         }
     }
-    s.push_str(&rt::barrier());
-    s.push_str(&rt::epilogue());
+    s.push_str(&rt::barrier_text());
+    s.push_str(&rt::epilogue_text());
     s
 }
 
-fn cfg_streams(y: u32) -> String {
+fn cfg_streams_text(y: u32) -> String {
     format!(
         r#"
         addi t5, a4, -1
@@ -125,6 +196,7 @@ pub static KERNEL: KernelDef = KernelDef {
     name: "relu",
     variants: &[Variant::Baseline, Variant::Ssr, Variant::SsrFrep],
     gen,
+    gen_text,
     setup,
     check,
     flops,

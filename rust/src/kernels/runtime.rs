@@ -1,10 +1,19 @@
 //! Shared software runtime for the kernel programs: program prologue and
 //! epilogue (measurement region markers), the hardware-barrier snippet,
-//! and the TCDM data layout conventions.
+//! the `mhartid` work-split, the partial-reduction idiom, and the TCDM
+//! data layout conventions.
+//!
+//! Each idiom exists as a [`crate::asm::ProgramBuilder`] combinator (the
+//! primary path every kernel generator composes) and as a `*_text`
+//! assembly-source twin. The text twins back the legacy string generators
+//! (`KernelDef::gen_text`) that the builder-vs-text equivalence test in
+//! [`crate::kernels`] checks the typed ports against, instruction for
+//! instruction.
 //!
 //! Register conventions across all kernels:
 //! * `s0` — hart id (set by the prologue, never clobbered);
-//! * `s1` — peripheral base (set by the prologue, never clobbered).
+//! * `s1` — peripheral base (set by the prologue, never clobbered);
+//! * `t5`/`t6` — scratch for the SSR-configuration idioms.
 //!
 //! TCDM layout:
 //! ```text
@@ -16,7 +25,13 @@
 //! DATA    = SCRATCH + 0x400  kernel arrays
 //! ```
 
+use crate::asm::builder::abi::*;
+use crate::asm::ProgramBuilder;
 use crate::cluster::Cluster;
+use crate::isa::csr::{
+    self, ssr_bound_csr, ssr_repeat_csr, ssr_rptr_csr, ssr_stride_csr, ssr_wptr_csr,
+};
+use crate::isa::Reg;
 use crate::mem::{PERIPH_BASE, TCDM_BASE};
 
 pub const SCRATCH: u32 = TCDM_BASE;
@@ -27,8 +42,107 @@ pub const COUNTS: u32 = SCRATCH + 0x300;
 pub const RESULT: u32 = SCRATCH + 0x380;
 pub const DATA: u32 = SCRATCH + 0x400;
 
-/// Program prologue: constants, hart id, measurement-region start.
-pub fn prologue() -> String {
+/// Peripheral register byte offsets (relative to `s1` = `PERIPH_BASE`).
+const PERIPH_BARRIER: i32 = 12;
+const PERIPH_REGION: i32 = 24;
+
+// ---------------------------------------------------------------------------
+// Builder combinators (the primary codegen path)
+// ---------------------------------------------------------------------------
+
+/// Program prologue: hart id into `s0`, peripheral base into `s1`,
+/// measurement-region start.
+pub fn prologue(b: &mut ProgramBuilder) {
+    b.csrr(S0, csr::MHARTID);
+    b.li(S1, i64::from(PERIPH_BASE));
+    b.li(T0, 1);
+    b.sw(T0, PERIPH_REGION, S1);
+}
+
+/// Program epilogue: drain everything, close the region, halt.
+pub fn epilogue(b: &mut ProgramBuilder) {
+    b.fence();
+    b.sw(ZERO, PERIPH_REGION, S1);
+    b.ecall();
+}
+
+/// Hardware barrier: all cores park on the BARRIER register load.
+/// A `fence` first makes each core's stores visible before the barrier.
+pub fn barrier(b: &mut ProgramBuilder) {
+    b.fence();
+    b.lw(ZERO, PERIPH_BARRIER, S1);
+}
+
+/// `mhartid` work-split: load this core's `(lo, cnt)` work bounds into the
+/// given registers (clobbers `t5`/`t6`).
+pub fn load_bounds(b: &mut ProgramBuilder, lo: Reg, cnt: Reg) {
+    b.slli(T6, S0, 3);
+    b.li(T5, i64::from(BOUNDS));
+    b.add(T5, T5, T6);
+    b.lw(lo, 0, T5);
+    b.lw(cnt, 4, T5);
+}
+
+/// Partial-reduction idiom: the `P-1` adds core 0 performs over the
+/// per-core f64 partials after the barrier, leaving the sum in `ft3` and
+/// storing it to RESULT.
+pub fn reduce_partials(b: &mut ProgramBuilder, cores: usize) {
+    let done = b.new_label();
+    b.bnez(S0, done);
+    b.li(T0, i64::from(PARTIALS));
+    b.fld(FT3, 0, T0);
+    for c in 1..cores {
+        b.fld(FT4, 8 * c as i32, T0);
+        b.fadd_d(FT3, FT3, FT4);
+    }
+    b.li(T1, i64::from(RESULT));
+    b.fsd(FT3, 0, T1);
+    b.bind(done);
+}
+
+/// SSR lane configuration: program `lane` with up to 4 dims from
+/// `(bounds, strides)` (iteration counts, byte strides), then let `arm`
+/// compute the start pointer into `t5` and write the arming
+/// `rptr`/`wptr` CSR of the top dimension. Bounds entries are element
+/// counts (>= 1). Clobbers `t5`.
+///
+/// The eight ported kernels keep their hand-interleaved `li`/`csrw`
+/// sequences (instruction-identical to the paper-style text originals,
+/// pinned by the equivalence test); this combinator packages the idiom
+/// for kernels written fresh against the builder.
+pub fn cfg_ssr(
+    b: &mut ProgramBuilder,
+    lane: usize,
+    dims: &[(u32, i32)],
+    write: bool,
+    arm: impl FnOnce(&mut ProgramBuilder),
+) {
+    assert!((1..=4).contains(&dims.len()));
+    for (d, &(count, stride)) in dims.iter().enumerate() {
+        assert!(count >= 1);
+        b.li(T5, i64::from(count) - 1);
+        b.csrw(ssr_bound_csr(lane, d), T5);
+        b.li(T5, i64::from(stride));
+        b.csrw(ssr_stride_csr(lane, d), T5);
+    }
+    arm(&mut *b);
+    let top = dims.len() - 1;
+    let csr = if write { ssr_wptr_csr(lane, top) } else { ssr_rptr_csr(lane, top) };
+    b.csrw(csr, T5);
+}
+
+/// SSR repeat setting (each element served `count` times). Clobbers `t5`.
+pub fn cfg_ssr_repeat(b: &mut ProgramBuilder, lane: usize, count: u32) {
+    b.li(T5, i64::from(count) - 1);
+    b.csrw(ssr_repeat_csr(lane), T5);
+}
+
+// ---------------------------------------------------------------------------
+// Text twins (legacy frontend, exercised by the equivalence test)
+// ---------------------------------------------------------------------------
+
+/// Text twin of [`prologue`].
+pub fn prologue_text() -> String {
     format!(
         r#"
         .equ PERIPH, {PERIPH_BASE:#x}
@@ -49,8 +163,8 @@ _start:
     )
 }
 
-/// Program epilogue: drain everything, close the region, halt.
-pub fn epilogue() -> String {
+/// Text twin of [`epilogue`].
+pub fn epilogue_text() -> String {
     r#"
         fence
         sw   zero, 24(s1)        # measurement region stop
@@ -59,9 +173,8 @@ pub fn epilogue() -> String {
     .to_string()
 }
 
-/// Hardware barrier: all cores park on the BARRIER register load.
-/// A `fence` first makes each core's stores visible before the barrier.
-pub fn barrier() -> String {
+/// Text twin of [`barrier`].
+pub fn barrier_text() -> String {
     r#"
         fence
         lw   zero, 12(s1)        # hardware barrier
@@ -69,8 +182,8 @@ pub fn barrier() -> String {
     .to_string()
 }
 
-/// Load this core's `(lo, cnt)` work bounds into the named registers.
-pub fn load_bounds(lo_reg: &str, cnt_reg: &str) -> String {
+/// Text twin of [`load_bounds`].
+pub fn load_bounds_text(lo_reg: &str, cnt_reg: &str) -> String {
     format!(
         r#"
         slli t6, s0, 3
@@ -82,27 +195,8 @@ pub fn load_bounds(lo_reg: &str, cnt_reg: &str) -> String {
     )
 }
 
-/// Host side: write per-core `(lo, cnt)` element bounds, splitting `total`
-/// as evenly as possible across `cores` (the paper distributes work
-/// evenly, §4.3.1.1).
-pub fn write_bounds(cl: &mut Cluster, cores: usize, total: usize) -> Vec<(usize, usize)> {
-    let mut out = Vec::new();
-    let base = total / cores;
-    let rem = total % cores;
-    let mut lo = 0usize;
-    for c in 0..cores {
-        let cnt = base + usize::from(c < rem);
-        cl.tcdm.write_u32_slice(BOUNDS + 8 * c as u32, &[lo as u32, cnt as u32]);
-        out.push((lo, cnt));
-        lo += cnt;
-    }
-    out
-}
-
-/// Emit the `P-1` reduction adds core 0 performs over the per-core f64
-/// partials after the barrier, leaving the sum in `ft3` and storing it to
-/// RESULT.
-pub fn reduce_partials(cores: usize) -> String {
+/// Text twin of [`reduce_partials`].
+pub fn reduce_partials_text(cores: usize) -> String {
     let mut s = String::from(
         r#"
         bnez s0, reduce_done
@@ -129,10 +223,9 @@ reduce_done:
     s
 }
 
-/// SSR lane configuration snippet: program `lane` with up to 4 dims from
-/// `(bounds, strides)` (iteration counts, byte strides) and arm it with a
-/// read/write pointer. Bounds entries are element counts (>=1).
-pub fn cfg_ssr(lane: usize, dims: &[(u32, i32)], ptr_expr: &str, write: bool) -> String {
+/// Text twin of [`cfg_ssr`] (the arming pointer computation is free-form
+/// source that must leave the pointer in `t5`).
+pub fn cfg_ssr_text(lane: usize, dims: &[(u32, i32)], ptr_expr: &str, write: bool) -> String {
     assert!((1..=4).contains(&dims.len()));
     let mut s = String::new();
     for (d, &(count, stride)) in dims.iter().enumerate() {
@@ -158,8 +251,8 @@ pub fn cfg_ssr(lane: usize, dims: &[(u32, i32)], ptr_expr: &str, write: bool) ->
     s
 }
 
-/// SSR repeat setting (each element served `count` times).
-pub fn cfg_ssr_repeat(lane: usize, count: u32) -> String {
+/// Text twin of [`cfg_ssr_repeat`].
+pub fn cfg_ssr_repeat_text(lane: usize, count: u32) -> String {
     format!(
         r#"
         li   t5, {rep}
@@ -167,4 +260,64 @@ pub fn cfg_ssr_repeat(lane: usize, count: u32) -> String {
 "#,
         rep = count - 1
     )
+}
+
+// ---------------------------------------------------------------------------
+// Host side
+// ---------------------------------------------------------------------------
+
+/// Host side: write per-core `(lo, cnt)` element bounds, splitting `total`
+/// as evenly as possible across `cores` (the paper distributes work
+/// evenly, §4.3.1.1).
+pub fn write_bounds(cl: &mut Cluster, cores: usize, total: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let base = total / cores;
+    let rem = total % cores;
+    let mut lo = 0usize;
+    for c in 0..cores {
+        let cnt = base + usize::from(c < rem);
+        cl.tcdm.write_u32_slice(BOUNDS + 8 * c as u32, &[lo as u32, cnt as u32]);
+        out.push((lo, cnt));
+        lo += cnt;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::assemble;
+
+    fn words(p: &crate::asm::Program) -> Vec<u32> {
+        p.segments[0]
+            .bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+
+    /// Each builder combinator emits exactly its text twin's instructions.
+    #[test]
+    fn combinators_match_text_twins() {
+        let mut src = prologue_text();
+        src.push_str(&load_bounds_text("a3", "a4"));
+        src.push_str(&barrier_text());
+        src.push_str(&reduce_partials_text(8));
+        src.push_str(&cfg_ssr_text(1, &[(4, 8), (16, 32)], "li   t5, DATA", true));
+        src.push_str(&cfg_ssr_repeat_text(0, 4));
+        src.push_str(&epilogue_text());
+        let text = assemble(&src).unwrap();
+
+        let mut b = ProgramBuilder::new();
+        prologue(&mut b);
+        load_bounds(&mut b, A3, A4);
+        barrier(&mut b);
+        reduce_partials(&mut b, 8);
+        cfg_ssr(&mut b, 1, &[(4, 8), (16, 32)], true, |b| b.li(T5, i64::from(DATA)));
+        cfg_ssr_repeat(&mut b, 0, 4);
+        epilogue(&mut b);
+        let built = b.finish();
+
+        assert_eq!(words(&built), words(&text));
+    }
 }

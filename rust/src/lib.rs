@@ -8,8 +8,12 @@
 //!
 //! * [`isa`] — RV32IMAFD + Zicsr + the paper's custom `frep` encoding and
 //!   SSR configuration CSR space: decode, encode, disassembly.
-//! * [`asm`] — a two-pass assembler so the paper's hand-tuned kernels can be
-//!   written as assembly text without an external RISC-V toolchain.
+//! * [`asm`] — program construction: the typed
+//!   [`asm::builder::ProgramBuilder`] codegen IR (register/label types,
+//!   one method per instruction form, Snitch-idiom combinators) emitting
+//!   pre-decoded [`asm::Program`]s, plus a two-pass text assembler that
+//!   lowers onto the same builder — no external RISC-V toolchain either
+//!   way.
 //! * [`core`] — the Snitch integer core: single-stage, single-issue,
 //!   scoreboarded, with an accelerator offload interface.
 //! * [`fpss`] — the decoupled floating-point subsystem: 32×64-bit FP
@@ -32,7 +36,10 @@
 //! * [`energy`] — calibrated event-energy, power, and kGE area models.
 //! * [`vector`] — an Ara-like vector-lane timing model (Table 3 comparator).
 //! * [`kernels`] — the paper's eight microkernels in three variants
-//!   (baseline / +SSR / +SSR+FREP) as assembly program builders.
+//!   (baseline / +SSR / +SSR+FREP) as typed program generators over the
+//!   builder IR, with a sweep-level program cache
+//!   ([`kernels::cached_program`]) so each `(kernel, variant, n, cores)`
+//!   configuration assembles exactly once per process.
 //! * [`runtime`] — PJRT golden-model execution of the AOT-lowered JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) used to validate simulated results.
 //! * [`coordinator`] — experiment registry and sweep driver regenerating

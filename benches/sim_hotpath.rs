@@ -10,7 +10,7 @@ use std::hint::black_box;
 use std::time::Instant;
 
 use snitch_sim::asm::assemble;
-use snitch_sim::coordinator::{self, Experiment};
+use snitch_sim::coordinator::{self, Experiment, Sweep, SweepOptions};
 use snitch_sim::kernels::{self, Params, Variant};
 
 fn hotpath() {
@@ -40,15 +40,15 @@ fn hotpath() {
     }
 }
 
-/// Sweep throughput: the Table 2 experiment set through the coordinator's
-/// bounded worker pool at increasing widths. Simulated work is identical
-/// in every row (run_sweep results are order- and content-deterministic),
-/// so wall-clock differences are pure scheduling win.
+/// Sweep throughput: the Table 2 experiment set through per-width
+/// `Sweep` sessions. Simulated work is identical in every row
+/// (session results are order- and content-deterministic), so
+/// wall-clock differences are pure scheduling win.
 fn sweep_throughput() {
     let exps: Vec<Experiment> = coordinator::table2_experiments();
     let auto = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let mut widths = vec![1usize, 2, 4];
-    // run_sweep caps the pool at one worker per experiment; dedup on the
+    // A session caps the pool at one worker per experiment; dedup on the
     // effective width so every printed row names the pool that really ran.
     let auto = coordinator::effective_workers(&exps, auto);
     if !widths.contains(&auto) {
@@ -56,8 +56,9 @@ fn sweep_throughput() {
     }
     let mut serial_dt = None;
     for &jobs in &widths {
+        let sweep = Sweep::with_options(SweepOptions::new().jobs(jobs));
         let t = Instant::now();
-        let runs = coordinator::run_sweep(&exps, jobs);
+        let runs = sweep.run(&exps).expect("sweep session");
         let dt = t.elapsed().as_secs_f64();
         let sim_cycles: u64 = runs.iter().map(|r| r.stats.cycles).sum();
         let speedup = match serial_dt {

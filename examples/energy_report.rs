@@ -1,13 +1,25 @@
 //! Full energy/area report: Figs. 10, 11, 14, 15/16 from the calibrated
-//! models over simulated event counts.
+//! models over simulated event counts — driven through the artifact
+//! registry and a `Sweep` session, with a machine-readable CSV of the
+//! efficiency figure at the end (the typed-report layer's point: the
+//! same `Table` renders to markdown, CSV and JSON).
 //!
 //! Run with: `cargo run --release --example energy_report`
 
-use snitch_sim::coordinator;
+use snitch_sim::coordinator::{artifacts, ArtifactOptions, Sweep};
 
-fn main() {
-    println!("{}", coordinator::figure10());
-    println!("{}", coordinator::figure11());
-    println!("{}", coordinator::figure14());
-    println!("{}", coordinator::figure15_16());
+fn main() -> snitch_sim::Result<()> {
+    let sweep = Sweep::new();
+    let opts = ArtifactOptions::default();
+    for id in ["figure10", "figure11", "figure14"] {
+        let table = artifacts::by_id(id).expect("registered artifact").build(&sweep, &opts)?;
+        println!("{}", table.to_markdown());
+    }
+    // One sweep, two renderings: the typed table is data, not a string.
+    let fig = artifacts::by_id("figure15_16").expect("registered artifact");
+    let runs = sweep.run(&fig.experiments(&opts))?;
+    let table = fig.render(&runs)?;
+    println!("{}", table.to_markdown());
+    println!("figure15_16.csv:\n{}", table.to_csv());
+    Ok(())
 }

@@ -1,0 +1,793 @@
+//! The artifact registry: every table and figure of the paper's
+//! evaluation (§4) as a declarative [`Artifact`] spec.
+//!
+//! An artifact decouples the three things the legacy `table_*` /
+//! `figure_*` functions fused:
+//!
+//! 1. **experiment definition** — [`Artifact::experiments`] returns the
+//!    ordered [`Experiment`] list (possibly empty for pure-model
+//!    artifacts like the area figures), optionally reduced via
+//!    [`ArtifactOptions::size`] for smoke/CI runs;
+//! 2. **sweep execution** — any [`Sweep`] session runs the list
+//!    (callers can batch, parallelize, or reuse results across
+//!    artifacts);
+//! 3. **presentation** — [`Artifact::render`] turns the `RunResult`s
+//!    into a typed [`Table`], which renders to markdown (byte-identical
+//!    to the legacy strings), CSV or JSON.
+//!
+//! [`Artifact::build`] chains the three for the common case.
+//!
+//! The registry covers Fig. 1, Tables 1–4, Figs. 9–16 and the
+//! golden-validation report; [`by_id`] resolves the CLI spellings
+//! (including the `figure15`/`figure16` aliases of the combined
+//! `figure15_16` artifact).
+
+use std::collections::HashMap;
+
+use super::report::{Table, Value};
+use super::{default_size, Experiment, Sweep};
+use crate::cluster::config::{IsaVariant, RfImpl};
+use crate::cluster::ClusterConfig;
+use crate::energy::{cluster_area, core_area, model};
+use crate::kernels::{self, RunResult, Variant};
+use crate::runtime::GoldenRuntime;
+use crate::vector;
+
+/// Options applied when an artifact generates its experiment list.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ArtifactOptions {
+    /// Cap problem sizes at roughly this value (each kernel clamps to
+    /// its smallest valid configuration) — for smoke tests and CI,
+    /// where the paper-scale sweep is unnecessarily slow. `None` keeps
+    /// the paper's sizes. The golden-validation artifact ignores this:
+    /// its sizes are pinned to the available AOT artifacts.
+    pub size: Option<usize>,
+}
+
+impl ArtifactOptions {
+    /// The paper-scale defaults.
+    pub fn new() -> ArtifactOptions {
+        ArtifactOptions::default()
+    }
+
+    /// Cap problem sizes at roughly `size` (see [`ArtifactOptions::size`]).
+    pub fn with_size(mut self, size: usize) -> ArtifactOptions {
+        self.size = Some(size);
+        self
+    }
+}
+
+type ExperimentsFn = fn(&ArtifactOptions) -> Vec<Experiment>;
+type RenderFn = fn(&[RunResult]) -> crate::Result<Table>;
+type PreflightFn = fn() -> crate::Result<()>;
+
+/// One registered evaluation artifact (a paper table or figure).
+pub struct Artifact {
+    /// Stable id, the CLI spelling (`repro artifact <id>`).
+    pub id: &'static str,
+    /// Human title (also the rendered table's title).
+    pub title: &'static str,
+    exps: ExperimentsFn,
+    rend: RenderFn,
+    /// Checked by [`Artifact::build`] *before* any experiment runs, so
+    /// a missing prerequisite (the PJRT backend for `validate`) fails
+    /// in milliseconds instead of after the whole sweep.
+    pre: PreflightFn,
+}
+
+const fn sweep_artifact(
+    id: &'static str,
+    title: &'static str,
+    exps: ExperimentsFn,
+    rend: RenderFn,
+) -> Artifact {
+    Artifact { id, title, exps, rend, pre: no_preflight }
+}
+
+fn no_preflight() -> crate::Result<()> {
+    Ok(())
+}
+
+// Probing constructs (and drops) a runtime that `validate_render`
+// re-creates on success — accepted: backend init is trivial next to the
+// 9-experiment sweep the probe exists to avoid wasting on a missing
+// backend. Callers that already hold a runtime (the CLI's `validate` /
+// `all` arms) use `validate_render_with` and skip both constructions.
+fn validate_preflight() -> crate::Result<()> {
+    GoldenRuntime::new().map(|_| ())
+}
+
+impl Artifact {
+    /// The ordered experiment list this artifact renders from. Empty
+    /// for pure-model artifacts (Fig. 1, 10, 11).
+    pub fn experiments(&self, opts: &ArtifactOptions) -> Vec<Experiment> {
+        (self.exps)(opts)
+    }
+
+    /// Render the artifact from its experiments' results (input order
+    /// of [`Artifact::experiments`]). Infallible for sweep artifacts;
+    /// the golden-validation artifact errors when the PJRT backend is
+    /// unavailable or a result mismatches.
+    pub fn render(&self, runs: &[RunResult]) -> crate::Result<Table> {
+        (self.rend)(runs)
+    }
+
+    /// Cheap prerequisite check (no simulation): errors when the
+    /// artifact cannot possibly render — today only `validate` without
+    /// its PJRT backend.
+    pub fn preflight(&self) -> crate::Result<()> {
+        (self.pre)()
+    }
+
+    /// Define, execute (on `sweep`) and render in one call.
+    pub fn build(&self, sweep: &Sweep, opts: &ArtifactOptions) -> crate::Result<Table> {
+        self.preflight()?;
+        let exps = self.experiments(opts);
+        let runs = sweep.run(&exps)?;
+        self.render(&runs)
+    }
+}
+
+const TITLE_FIGURE1: &str = "Fig. 1 — energy/instruction, application-class core (pJ, from [8])";
+const TITLE_TABLE1: &str = "Table 1 — utilization and IPC (single-core | 8-core)";
+const TITLE_TABLE2: &str = "Table 2 — DGEMM 32×32 multi-core scaling (SSR+FREP)";
+const TITLE_TABLE3: &str = "Table 3 — normalized DGEMM performance [% of peak]";
+const TITLE_TABLE4: &str = "Table 4 — comparison on n×n DGEMM (DP)";
+const TITLE_FIGURE9: &str = "Fig. 9 — single-core speed-up over baseline";
+const TITLE_FIGURE10: &str = "Fig. 10 — cluster area distribution (model)";
+const TITLE_FIGURE11: &str = "Fig. 11 — integer core area by configuration (kGE)";
+const TITLE_FIGURE12: &str = "Fig. 12 — multi-core (8) speed-up over single core";
+const TITLE_FIGURE13: &str = "Fig. 13 — octa-core speed-up over baseline";
+const TITLE_FIGURE14: &str = "Fig. 14 — power breakdown, DGEMM 32×32 + SSR + FREP (8 cores)";
+const TITLE_FIGURE15_16: &str = "Fig. 15/16 — power and energy efficiency (8 cores)";
+const TITLE_VALIDATE: &str = "golden validation (simulated vs AOT JAX/Pallas via PJRT)";
+
+static REGISTRY: [Artifact; 13] = [
+    sweep_artifact("figure1", TITLE_FIGURE1, no_experiments, figure1_render),
+    sweep_artifact("table1", TITLE_TABLE1, table1_experiments, table1_render),
+    sweep_artifact("table2", TITLE_TABLE2, table2_experiments, table2_render),
+    sweep_artifact("table3", TITLE_TABLE3, table3_experiments, table3_render),
+    sweep_artifact("table4", TITLE_TABLE4, table4_experiments, table4_render),
+    sweep_artifact("figure9", TITLE_FIGURE9, figure9_experiments, figure9_render),
+    sweep_artifact("figure10", TITLE_FIGURE10, no_experiments, figure10_render),
+    sweep_artifact("figure11", TITLE_FIGURE11, no_experiments, figure11_render),
+    sweep_artifact("figure12", TITLE_FIGURE12, figure12_experiments, figure12_render),
+    sweep_artifact("figure13", TITLE_FIGURE13, figure13_experiments, figure13_render),
+    sweep_artifact("figure14", TITLE_FIGURE14, table4_experiments, figure14_render),
+    sweep_artifact("figure15_16", TITLE_FIGURE15_16, figure15_16_experiments, figure15_16_render),
+    Artifact {
+        id: "validate",
+        title: TITLE_VALIDATE,
+        exps: validate_exps,
+        rend: validate_render,
+        pre: validate_preflight,
+    },
+];
+
+/// All artifacts, in the paper's presentation order.
+pub fn all() -> &'static [Artifact] {
+    &REGISTRY
+}
+
+/// Resolve an artifact id (accepts the `figure15`/`figure16` aliases).
+pub fn by_id(id: &str) -> Option<&'static Artifact> {
+    let id = match id {
+        "figure15" | "figure16" => "figure15_16",
+        other => other,
+    };
+    all().iter().find(|a| a.id == id)
+}
+
+fn no_experiments(_opts: &ArtifactOptions) -> Vec<Experiment> {
+    Vec::new()
+}
+
+/// Clamp a kernel's paper-scale problem size `full` down towards
+/// [`ArtifactOptions::size`], respecting each kernel's smallest
+/// supported configuration (FFT stays a power of two, everything else
+/// a multiple of 8 so the 8-core work split stays exact).
+pub fn reduced_size(kernel: &str, full: usize, opts: &ArtifactOptions) -> usize {
+    let Some(s) = opts.size else { return full };
+    let cap = full.min(s.max(16));
+    let reduced = match kernel {
+        "conv2d" => {
+            if cap >= 32 {
+                32
+            } else {
+                16
+            }
+        }
+        "fft" => {
+            let c = cap.max(64);
+            1usize << (usize::BITS - 1 - c.leading_zeros())
+        }
+        "montecarlo" => cap.max(128) / 8 * 8,
+        "knn" => cap.max(64) / 8 * 8,
+        "dgemm" => cap.max(16) / 8 * 8,
+        _ => cap.max(256) / 8 * 8, // dot / relu / axpy vectors
+    };
+    // A per-kernel floor must never *grow* the problem past the caller's
+    // full size (a hypothetical fft at full = 32 would floor to 64).
+    reduced.min(full)
+}
+
+/// The kernel × variant matrix for a core count (paper presentation
+/// order), at paper or reduced sizes.
+pub fn matrix_experiments_opt(cores: usize, opts: &ArtifactOptions) -> Vec<Experiment> {
+    let mut exps = Vec::new();
+    for k in kernels::all_kernels() {
+        let n = reduced_size(k.name, default_size(k.name), opts);
+        for &v in k.variants {
+            exps.push(Experiment::new(k.name, v, n, cores));
+        }
+    }
+    exps
+}
+
+// ---------------------------------------------------------------- Fig. 1
+
+fn figure1_render(_runs: &[RunResult]) -> crate::Result<Table> {
+    let mut t = Table::new("figure1", TITLE_FIGURE1).with_columns(&["instruction", "pJ"]);
+    let rows = [("fld (L1 hit)", 59.0), ("fmadd.d", 28.0), ("addi", 20.0), ("bne", 31.0)];
+    let mut loop_total = 0.0;
+    for (i, e) in rows {
+        t.push_row(vec![Value::str(i), Value::float(e, 0)]);
+        loop_total += e;
+    }
+    // 2 loads + fma + 2 addi + branch ≈ the 6-instr loop of Fig. 6(a):
+    // the four tabled energies plus the second load, the second addi,
+    // and 80 pJ of iF/RF overheads.
+    let total = loop_total + 59.0 + 20.0 + 80.0;
+    Ok(t.with_notes(format!(
+        "Loop iteration ≈ {total:.0} pJ of which 28 pJ (≈{:.0}%) is the FMA — \
+         the paper's 317 pJ vs 28 pJ motivation.",
+        100.0 * 28.0 / total
+    )))
+}
+
+// --------------------------------------------------------------- Table 1
+
+/// The Table 1 benchmark list: (kernel, paper problem size), in
+/// presentation order (dot appears at two sizes).
+fn table1_sizes() -> Vec<(&'static str, usize)> {
+    vec![
+        ("dot", 256),
+        ("dot", 4096),
+        ("relu", 1024),
+        ("dgemm", 16),
+        ("dgemm", 32),
+        ("fft", 256),
+        ("axpy", 1024),
+        ("conv2d", 32),
+        ("knn", 1024),
+        ("montecarlo", 2048),
+    ]
+}
+
+fn table1_experiments(opts: &ArtifactOptions) -> Vec<Experiment> {
+    // Adjacent (1-core, 8-core) experiment pairs, in presentation
+    // order; sweeps preserve input order so the renderer pairs by
+    // position.
+    let mut exps = Vec::new();
+    for (name, n) in table1_sizes() {
+        let n = reduced_size(name, n, opts);
+        let k = kernels::kernel_by_name(name).expect("registered kernel");
+        for &v in k.variants {
+            exps.push(Experiment::new(name, v, n, 1));
+            exps.push(Experiment::new(name, v, n, 8));
+        }
+    }
+    exps
+}
+
+fn table1_render(runs: &[RunResult]) -> crate::Result<Table> {
+    let mut t = Table::new("table1", TITLE_TABLE1)
+        .with_columns(&["kernel", "FPU", "FPSS", "Snitch", "IPC", "FPU", "FPSS", "Snitch", "IPC"]);
+    for pair in runs.chunks_exact(2) {
+        let (single, multi) = (&pair[0], &pair[1]);
+        let u1 = single.stats.region_utils();
+        let u8_ = multi.stats.region_utils();
+        t.push_row(vec![
+            Value::str(format!(
+                "{} {} {}",
+                single.kernel,
+                single.params.n,
+                single.variant.label()
+            )),
+            Value::float(u1.0, 2),
+            Value::float(u1.1, 2),
+            Value::float(u1.2, 2),
+            Value::float(u1.3, 2),
+            Value::float(u8_.0, 2),
+            Value::float(u8_.1, 2),
+            Value::float(u8_.2, 2),
+            Value::float(u8_.3, 2),
+        ]);
+    }
+    Ok(t)
+}
+
+// --------------------------------------------------------------- Table 2
+
+fn table2_experiments(opts: &ArtifactOptions) -> Vec<Experiment> {
+    let n = reduced_size("dgemm", 32, opts);
+    [1usize, 2, 4, 8, 16, 32]
+        .iter()
+        .filter(|&&c| c <= n && n % c == 0)
+        .map(|&c| Experiment::new("dgemm", Variant::SsrFrep, n, c))
+        .collect()
+}
+
+fn table2_render(runs: &[RunResult]) -> crate::Result<Table> {
+    let base = runs.first().ok_or("table2: no runs")?.cycles as f64;
+    let mut t = Table::new("table2", TITLE_TABLE2)
+        .with_columns(&["cores", "η (FPU util)", "δ (vs half)", "Δ (vs 1 core)"]);
+    let mut prev: Option<u64> = None;
+    for r in runs {
+        let (fpu, _, _, _) = r.stats.region_utils();
+        let delta = base / r.cycles as f64;
+        let half = match prev {
+            None => 1.0,
+            Some(p) => p as f64 / r.cycles as f64,
+        };
+        t.push_row(vec![
+            Value::int(r.params.cores as i64),
+            Value::float(fpu, 2),
+            Value::float(half, 2),
+            Value::float(delta, 2),
+        ]);
+        prev = Some(r.cycles);
+    }
+    Ok(t.with_notes("paper: η 0.81–0.90, δ ≈ 1.9–2.0, Δ = 7.80 @ 8 cores, 27.61 @ 32."))
+}
+
+// --------------------------------------------------------------- Table 3
+
+fn table3_experiments(opts: &ArtifactOptions) -> Vec<Experiment> {
+    // The published grid tops out at n = 128; a size cap only trims it.
+    let limit = opts.size.map(|s| s.max(16)).unwrap_or(128);
+    let ns: Vec<usize> =
+        [16usize, 32, 64, 128].into_iter().filter(|&n| n <= limit).collect();
+    let mut exps = Vec::new();
+    for fpus in [4usize, 8, 16] {
+        for &n in &ns {
+            if fpus <= n && n % fpus == 0 {
+                exps.push(Experiment::new("dgemm", Variant::SsrFrep, n, fpus));
+            }
+        }
+    }
+    exps
+}
+
+fn table3_render(runs: &[RunResult]) -> crate::Result<Table> {
+    let mut t = Table::new("table3", TITLE_TABLE3).with_columns(&[
+        "n",
+        "FPUs",
+        "Snitch (sim)",
+        "Ara (model)",
+        "Ara (paper)",
+        "Hwacha (paper)",
+    ]);
+    for r in runs {
+        let (n, fpus) = (r.params.n, r.params.cores);
+        let flops: u64 = r.stats.cores.iter().map(|c| c.flops).sum();
+        let snitch = 100.0 * flops as f64 / r.cycles as f64 / (2.0 * fpus as f64);
+        let model = vector::dgemm_norm_perf(&vector::VectorConfig::ara(fpus as u64), n as u64);
+        let ara = vector::ara_published(fpus as u64, n as u64)
+            .map_or(Value::Missing, |v| Value::float(v, 1));
+        let hw = vector::hwacha_published(fpus as u64, n as u64)
+            .map_or(Value::Missing, |v| Value::float(v, 1));
+        t.push_row(vec![
+            Value::int(n as i64),
+            Value::int(fpus as i64),
+            Value::float(snitch, 1),
+            Value::float(model, 1),
+            ara,
+            hw,
+        ]);
+    }
+    Ok(t.with_notes("paper: Snitch 58–96 across the grid, beating Ara by up to 4.5× at n=16."))
+}
+
+// ------------------------------------------------------ Table 4 / Fig. 14
+
+fn table4_experiments(opts: &ArtifactOptions) -> Vec<Experiment> {
+    vec![Experiment::new("dgemm", Variant::SsrFrep, reduced_size("dgemm", 32, opts), 8)]
+}
+
+fn table4_render(runs: &[RunResult]) -> crate::Result<Table> {
+    let r = runs.first().ok_or("table4: no runs")?;
+    let cfg = ClusterConfig::default();
+    let em = model::EnergyModel::default();
+    let p = model::power_report(&r.stats, &cfg, &em);
+    let flops: u64 = r.stats.cores.iter().map(|c| c.flops).sum();
+    let sustained = flops as f64 / r.cycles as f64; // Gflop/s @ 1GHz
+    let peak = 2.0 * r.params.cores as f64;
+    let util = 100.0 * sustained / peak;
+    let eff = model::efficiency_gflops_w(flops, r.stats.cycles, p.total());
+    let area_mm2 = cluster_area(&cfg).total() / 3300.0 * 0.89; // paper: 0.89 mm²
+    let mut t = Table::new("table4", TITLE_TABLE4).with_columns(&[
+        "metric",
+        "unit",
+        "Snitch (this repro)",
+        "Snitch (paper)",
+        "Ara [14]",
+        "Volta SM [31]",
+        "Carmel [31]",
+    ]);
+    let row = |metric: &str, unit: &str, ours: Value, paper: [Value; 4]| {
+        let [a, b, c, d] = paper;
+        vec![Value::str(metric), Value::str(unit), ours, a, b, c, d]
+    };
+    let s = |text: &'static str| Value::str(text);
+    t.push_row(row(
+        "problem size",
+        "n",
+        Value::int(r.params.n as i64),
+        [s("32"), s("32"), s("256"), s("256")],
+    ));
+    t.push_row(row(
+        "peak DP",
+        "Gflop/s",
+        Value::float(peak, 1),
+        [s("16.96"), s("18.72"), Value::Missing, s("18.13")],
+    ));
+    t.push_row(row(
+        "sustained DP",
+        "Gflop/s",
+        Value::float(sustained, 2),
+        [s("14.38"), s("10.00"), Value::Missing, s("9.27")],
+    ));
+    t.push_row(row(
+        "utilization DP",
+        "%",
+        Value::float(util, 1),
+        [s("84.8"), s("53.4"), Value::Missing, s("51.2")],
+    ));
+    t.push_row(row(
+        "impl. area",
+        "mm²",
+        Value::float(area_mm2, 2),
+        [s("0.89"), s("1.07"), s("11.03"), s("7.37")],
+    ));
+    t.push_row(row(
+        "total power DP",
+        "W",
+        Value::float(p.total() / 1000.0, 3),
+        [s("0.17"), s("0.46"), Value::Missing, s("1.85")],
+    ));
+    t.push_row(row(
+        "energy eff. DP",
+        "Gflop/s/W",
+        Value::float(eff, 1),
+        [s("79.4"), s("39.9"), Value::Missing, s("5.0")],
+    ));
+    t.push_row(row(
+        "leakage",
+        "mW",
+        Value::float(p.leakage, 0),
+        [s("12"), s("21.1"), Value::Missing, Value::Missing],
+    ));
+    Ok(t)
+}
+
+// Rows come from `PowerBreakdown::components` (shared with the legacy
+// `render`, which the golden test compares against byte-for-byte).
+fn figure14_render(runs: &[RunResult]) -> crate::Result<Table> {
+    let r = runs.first().ok_or("figure14: no runs")?;
+    let p = model::power_report(&r.stats, &ClusterConfig::default(), &model::EnergyModel::default());
+    let mut t =
+        Table::new("figure14", TITLE_FIGURE14).with_columns(&["component", "mW", "share"]);
+    let total = p.total();
+    for (name, v) in p.components() {
+        t.push_row(vec![
+            Value::str(name),
+            Value::float_fmt(v, 1, 7, ""),
+            Value::float_fmt(100.0 * v / total, 1, 5, "%"),
+        ]);
+    }
+    t.push_row(vec![
+        Value::str("**total**"),
+        Value::float_fmt(total, 1, 7, ""),
+        Value::str("100%"),
+    ]);
+    Ok(t.with_notes(
+        "paper: 171 mW total; FPU 42 %, integer cores 1 %, SSR <4 %, FREP <1 %, I$ 4.8 mW.",
+    ))
+}
+
+// ------------------------------------------------- Figs. 9 / 12 / 13 / 15+16
+
+fn figure9_experiments(opts: &ArtifactOptions) -> Vec<Experiment> {
+    matrix_experiments_opt(1, opts)
+}
+
+fn figure13_experiments(opts: &ArtifactOptions) -> Vec<Experiment> {
+    matrix_experiments_opt(8, opts)
+}
+
+fn figure12_experiments(opts: &ArtifactOptions) -> Vec<Experiment> {
+    let mut exps = matrix_experiments_opt(1, opts);
+    exps.extend(matrix_experiments_opt(8, opts));
+    exps
+}
+
+fn figure15_16_experiments(opts: &ArtifactOptions) -> Vec<Experiment> {
+    matrix_experiments_opt(8, opts)
+}
+
+/// Index a matrix sweep's results by (kernel, variant).
+fn matrix_index(runs: &[RunResult]) -> HashMap<(&'static str, Variant), &RunResult> {
+    runs.iter().map(|r| ((r.kernel, r.variant), r)).collect()
+}
+
+fn speedup_table(
+    runs: &[RunResult],
+    id: &str,
+    title: &str,
+    notes: &str,
+) -> crate::Result<Table> {
+    let matrix = matrix_index(runs);
+    let mut t =
+        Table::new(id, title).with_columns(&["kernel", "variant", "cycles", "speed-up"]);
+    for k in kernels::all_kernels() {
+        let base = matrix
+            .get(&(k.name, Variant::Baseline))
+            .ok_or_else(|| format!("{id}: missing baseline run for {}", k.name))?
+            .cycles as f64;
+        for &v in k.variants {
+            let r = matrix
+                .get(&(k.name, v))
+                .ok_or_else(|| format!("{id}: missing {} {} run", k.name, v.label()))?;
+            t.push_row(vec![
+                Value::str(k.name),
+                Value::str(v.label()),
+                Value::int(r.cycles as i64),
+                Value::float_fmt(base / r.cycles as f64, 2, 0, "×"),
+            ]);
+        }
+    }
+    Ok(t.with_notes(notes))
+}
+
+fn figure9_render(runs: &[RunResult]) -> crate::Result<Table> {
+    speedup_table(runs, "figure9", TITLE_FIGURE9, "paper: 1.7× to >6× from SSR+FREP.")
+}
+
+fn figure13_render(runs: &[RunResult]) -> crate::Result<Table> {
+    speedup_table(runs, "figure13", TITLE_FIGURE13, "paper: 1.29× to 6.45× from SSR+FREP.")
+}
+
+fn figure12_render(runs: &[RunResult]) -> crate::Result<Table> {
+    let mut by_cores: HashMap<(&'static str, Variant, usize), &RunResult> = HashMap::new();
+    for r in runs {
+        by_cores.insert((r.kernel, r.variant, r.params.cores), r);
+    }
+    let mut t = Table::new("figure12", TITLE_FIGURE12).with_columns(&[
+        "kernel",
+        "variant",
+        "1-core cycles",
+        "8-core cycles",
+        "speed-up",
+    ]);
+    for k in kernels::all_kernels() {
+        for &v in k.variants {
+            let a = by_cores
+                .get(&(k.name, v, 1))
+                .ok_or_else(|| format!("figure12: missing 1-core {} {} run", k.name, v.label()))?
+                .cycles;
+            let b = by_cores
+                .get(&(k.name, v, 8))
+                .ok_or_else(|| format!("figure12: missing 8-core {} {} run", k.name, v.label()))?
+                .cycles;
+            t.push_row(vec![
+                Value::str(k.name),
+                Value::str(v.label()),
+                Value::int(a as i64),
+                Value::int(b as i64),
+                Value::float_fmt(a as f64 / b as f64, 2, 0, "×"),
+            ]);
+        }
+    }
+    Ok(t.with_notes("paper: 3× to 8× depending on kernel (ideal 8 for conv2d+SSR, kNN)."))
+}
+
+fn figure15_16_render(runs: &[RunResult]) -> crate::Result<Table> {
+    let matrix = matrix_index(runs);
+    let cfg = ClusterConfig::default();
+    let em = model::EnergyModel::default();
+    let eff_of = |r: &RunResult| {
+        let p = model::power_report(&r.stats, &cfg, &em).total();
+        let fl: u64 = r.stats.cores.iter().map(|c| c.flops).sum();
+        (p, fl, model::efficiency_gflops_w(fl, r.stats.cycles, p))
+    };
+    let mut t = Table::new("figure15_16", TITLE_FIGURE15_16).with_columns(&[
+        "kernel variant",
+        "power [mW]",
+        "DPGflop/s",
+        "DPGflop/s/W",
+        "gain vs baseline",
+    ]);
+    for k in kernels::all_kernels() {
+        let base = matrix
+            .get(&(k.name, Variant::Baseline))
+            .ok_or_else(|| format!("figure15_16: missing baseline run for {}", k.name))?;
+        let (_, _, base_eff) = eff_of(base);
+        for &v in k.variants {
+            let r = matrix
+                .get(&(k.name, v))
+                .ok_or_else(|| format!("figure15_16: missing {} {} run", k.name, v.label()))?;
+            let (p, fl, eff) = eff_of(r);
+            let gf = fl as f64 / r.stats.cycles as f64;
+            t.push_row(vec![
+                Value::str(format!("{} {}", k.name, v.label())),
+                Value::float(p, 0),
+                Value::float(gf, 2),
+                Value::float(eff, 1),
+                Value::float_fmt(eff / base_eff, 2, 0, "×"),
+            ]);
+        }
+    }
+    Ok(t.with_notes("paper: up to ~80 DPGflop/s/W peak; efficiency gains 1.5–4.9×."))
+}
+
+// --------------------------------------------------------- Figs. 10 / 11
+
+// Rows come from `AreaBreakdown::components` (shared with the legacy
+// `render`, which the golden test compares against byte-for-byte).
+fn figure10_render(_runs: &[RunResult]) -> crate::Result<Table> {
+    let a = cluster_area(&ClusterConfig::default());
+    let total = a.total();
+    let mut t =
+        Table::new("figure10", TITLE_FIGURE10).with_columns(&["component", "kGE", "share"]);
+    for (name, v) in a.components() {
+        t.push_row(vec![
+            Value::str(name),
+            Value::float_fmt(v, 0, 8, ""),
+            Value::float_fmt(100.0 * v / total, 1, 5, "%"),
+        ]);
+    }
+    t.push_row(vec![
+        Value::str("**total**"),
+        Value::float_fmt(total, 0, 8, ""),
+        Value::str("100%"),
+    ]);
+    Ok(t.with_notes("paper: 3.3 MGE total; TCDM 34 %, I$ 10 %, integer cores 5 %, FPUs 23 %."))
+}
+
+fn figure11_render(_runs: &[RunResult]) -> crate::Result<Table> {
+    let mut t =
+        Table::new("figure11", TITLE_FIGURE11).with_columns(&["ISA", "RF", "PMCs", "kGE"]);
+    for isa in [IsaVariant::Rv32E, IsaVariant::Rv32I] {
+        for rf in [RfImpl::Latch, RfImpl::FlipFlop] {
+            for pmc in [false, true] {
+                t.push_row(vec![
+                    Value::str(format!("{isa:?}")),
+                    Value::str(format!("{rf:?}")),
+                    Value::str(pmc.to_string()),
+                    Value::float(core_area(isa, rf, pmc), 1),
+                ]);
+            }
+        }
+    }
+    Ok(t.with_notes("paper: 9 kGE (RV32E, latch, no PMC) to 21 kGE (RV32I, FF, PMC)."))
+}
+
+// ------------------------------------------------------ golden validation
+
+/// The golden-validation experiment set: one run per AOT artifact, all
+/// on 8 cores, keeping the final cluster state so the validator can
+/// extract the kernel's I/O arrays. Sizes are pinned to the available
+/// artifacts, so [`ArtifactOptions::size`] does not apply.
+pub fn validate_experiments() -> Vec<Experiment> {
+    let cases: [(&'static str, usize, Variant); 9] = [
+        ("dot", 256, Variant::SsrFrep),
+        ("dot", 1024, Variant::Ssr),
+        ("relu", 1024, Variant::SsrFrep),
+        ("axpy", 1024, Variant::Ssr),
+        ("dgemm", 16, Variant::SsrFrep),
+        ("dgemm", 32, Variant::SsrFrep),
+        ("conv2d", 32, Variant::SsrFrep),
+        ("knn", 1024, Variant::SsrFrep),
+        ("fft", 256, Variant::SsrFrep),
+    ];
+    cases.iter().map(|&(k, n, v)| Experiment::new(k, v, n, 8).with_cluster()).collect()
+}
+
+fn validate_exps(_opts: &ArtifactOptions) -> Vec<Experiment> {
+    validate_experiments()
+}
+
+fn validate_render(runs: &[RunResult]) -> crate::Result<Table> {
+    let rt = GoldenRuntime::new()?;
+    validate_render_with(&rt, runs)
+}
+
+/// Render the golden-validation report against an already-constructed
+/// runtime. Errors from here are real mismatches (or missing
+/// artifacts), never mere backend unavailability — callers that want to
+/// tolerate a missing PJRT backend catch the
+/// [`crate::runtime::GoldenRuntime::new`] error, not these.
+pub fn validate_render_with(rt: &GoldenRuntime, runs: &[RunResult]) -> crate::Result<Table> {
+    let mut t = Table::new("validate", TITLE_VALIDATE);
+    for r in runs {
+        let k = kernels::kernel_by_name(r.kernel)
+            .ok_or_else(|| format!("unknown kernel {}", r.kernel))?;
+        let cl = r.cluster.as_deref().ok_or(
+            "golden validation needs the final cluster state — run the experiment with \
+             `Params::with_cluster` (`Experiment::with_cluster`)",
+        )?;
+        let mut io = (k.io)(cl, &r.params);
+        if r.kernel == "fft" {
+            // The golden takes only the input signal (twiddles are
+            // internal).
+            io.inputs.truncate(1);
+        }
+        let err = rt.validate(r.kernel, r.params.n, &io, 1e-8, 1e-9)?;
+        t.push_row(vec![
+            Value::str(format!("{} n={} {}", r.kernel, r.params.n, r.variant.label())),
+            Value::str(format!("max err {err:.2e}")),
+            Value::str("OK"),
+        ]);
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_ids_are_unique_and_resolvable() {
+        let mut seen = std::collections::HashSet::new();
+        for a in all() {
+            assert!(seen.insert(a.id), "duplicate artifact id {}", a.id);
+            assert!(by_id(a.id).is_some(), "{} must resolve", a.id);
+        }
+        assert_eq!(by_id("figure15").unwrap().id, "figure15_16");
+        assert_eq!(by_id("figure16").unwrap().id, "figure15_16");
+        assert!(by_id("figure2").is_none());
+    }
+
+    #[test]
+    fn default_experiment_sets_match_the_paper() {
+        let o = ArtifactOptions::default();
+        // Table 2: DGEMM 32² from 1 to 32 cores.
+        let t2 = by_id("table2").unwrap().experiments(&o);
+        assert_eq!(t2.len(), 6);
+        assert!(t2.iter().all(|e| e.kernel == "dgemm" && e.n == 32));
+        assert_eq!(t2.iter().map(|e| e.cores).collect::<Vec<_>>(), vec![1, 2, 4, 8, 16, 32]);
+        // Table 3: the full published grid is valid, nothing filtered.
+        let t3 = by_id("table3").unwrap().experiments(&o);
+        assert_eq!(t3.len(), 12);
+        // Fig. 12 concatenates the single- and octa-core matrices.
+        let f12 = by_id("figure12").unwrap().experiments(&o);
+        let f9 = by_id("figure9").unwrap().experiments(&o);
+        assert_eq!(f12.len(), 2 * f9.len());
+        // Pure-model artifacts run nothing.
+        assert!(by_id("figure10").unwrap().experiments(&o).is_empty());
+        // Validation keeps the cluster for I/O extraction.
+        assert!(validate_experiments().iter().all(|e| e.keep_cluster));
+    }
+
+    #[test]
+    fn reduced_sizes_stay_valid() {
+        let o = ArtifactOptions::default().with_size(16);
+        assert_eq!(reduced_size("dgemm", 32, &o), 16);
+        assert_eq!(reduced_size("fft", 256, &o), 64); // power of two floor
+        assert_eq!(reduced_size("montecarlo", 2048, &o), 128);
+        assert_eq!(reduced_size("conv2d", 32, &o), 16);
+        assert_eq!(reduced_size("dot", 4096, &o), 256);
+        // No size option: paper scale untouched.
+        assert_eq!(reduced_size("dgemm", 32, &ArtifactOptions::default()), 32);
+        // Reduced Table 2 drops core counts that exceed the size.
+        let t2 = table2_experiments(&o);
+        assert_eq!(t2.iter().map(|e| e.cores).collect::<Vec<_>>(), vec![1, 2, 4, 8, 16]);
+        // fft power-of-two arithmetic for a non-power-of-two cap.
+        let o100 = ArtifactOptions::default().with_size(100);
+        assert_eq!(reduced_size("fft", 256, &o100), 64);
+        // A floor never grows a size beyond the declared full size.
+        assert_eq!(reduced_size("fft", 32, &o), 32);
+        assert_eq!(reduced_size("dot", 128, &o), 128);
+    }
+}

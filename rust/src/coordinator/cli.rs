@@ -1,5 +1,12 @@
 //! Minimal in-tree CLI (the offline build environment has no clap; the
-//! surface is small and stable).
+//! surface is small and stable), rebuilt on the artifact registry.
+//!
+//! `repro list` names every artifact; `repro artifact <id>` defines,
+//! sweeps and renders one of them in `--format md|csv|json`, to stdout
+//! or `--out FILE`. The pre-registry spellings (`all`, `table N`,
+//! `figure N`, `sweep`, `trace`, `validate`, `run`) are preserved and
+//! print byte-identical markdown. Flags configure a per-invocation
+//! [`Sweep`] session — nothing is stored in process globals.
 
 use super::*;
 
@@ -7,14 +14,24 @@ const USAGE: &str = "\
 repro — Snitch (IEEE TC 2020) reproduction harness
 
 USAGE:
-    repro [--jobs N] <COMMAND> [ARGS]
+    repro [OPTIONS] <COMMAND> [ARGS]
 
 OPTIONS:
     --jobs N                worker-pool width for experiment sweeps
                             (default: machine parallelism; results are
                             byte-identical for every N)
+    --format F              artifact output format: md (default), csv, json
+                            (table-rendering commands; `all` emits one
+                            markdown stream or one JSON array, not CSV)
+    --out FILE              write the rendered artifact(s) to FILE
+                            instead of stdout
+    --size N                cap experiment problem sizes at ~N (smoke/CI
+                            runs; clamped to each kernel's minimum)
+    --progress              report per-experiment completion on stderr
 
 COMMANDS:
+    list                    list every registered artifact id
+    artifact <ID>           define, sweep and render one artifact
     all                     regenerate every table and figure
     table <1|2|3|4>         regenerate a paper table
     figure <1|9|10|11|12|13|14|15|16>
@@ -30,81 +47,330 @@ COMMANDS:
     help                    this text
 ";
 
-/// Strip every `--jobs N` / `--jobs=N` from the argument list (the last
-/// occurrence wins), applying it via [`set_jobs`]. Returns the remaining
-/// positional arguments.
-fn parse_jobs(mut args: Vec<String>) -> crate::Result<Vec<String>> {
-    while let Some(i) = args.iter().position(|a| a == "--jobs" || a.starts_with("--jobs=")) {
-        let value = if args[i] == "--jobs" {
-            if i + 1 >= args.len() {
-                return Err("--jobs requires a value".into());
-            }
-            let v = args[i + 1].clone();
-            args.drain(i..=i + 1);
-            v
-        } else {
-            let v = args[i]["--jobs=".len()..].to_string();
-            args.remove(i);
-            v
-        };
-        let n: usize = value
-            .parse()
-            .map_err(|_| format!("--jobs expects a positive integer, got {value:?}"))?;
-        if n == 0 {
-            return Err("--jobs must be at least 1".into());
-        }
-        set_jobs(n);
-    }
-    Ok(args)
+/// Parsed global flags. Purely per-invocation: building the [`Sweep`]
+/// session from these is the only place the values are consumed.
+#[derive(Debug, Clone, Default, PartialEq)]
+struct CliOpts {
+    /// `--jobs N` (0 = auto).
+    jobs: usize,
+    /// `--format F`; `None` = not given (markdown).
+    format: Option<Format>,
+    out: Option<String>,
+    size: Option<usize>,
+    progress: bool,
 }
+
+impl CliOpts {
+    /// The sweep session this invocation runs on.
+    fn session(&self) -> Sweep {
+        let mut o = SweepOptions::new().jobs(self.jobs);
+        if self.progress {
+            o = o.on_progress(|p| {
+                eprintln!(
+                    "[{}/{}] {} {} n={} cores={}",
+                    p.completed,
+                    p.total,
+                    p.experiment.kernel,
+                    p.experiment.variant.label(),
+                    p.experiment.n,
+                    p.experiment.cores
+                );
+            });
+        }
+        Sweep::with_options(o)
+    }
+
+    fn artifact_options(&self) -> ArtifactOptions {
+        ArtifactOptions { size: self.size }
+    }
+
+    fn format(&self) -> Format {
+        self.format.unwrap_or_default()
+    }
+
+    /// Commands that don't render a table must refuse `--format`/`--out`
+    /// rather than accept and ignore them (same rationale as rejecting
+    /// unknown flags: no silent degradation to default behavior).
+    fn reject_render_flags(&self, cmd: &str) -> crate::Result<()> {
+        if self.format.is_some() || self.out.is_some() {
+            return Err(format!(
+                "--format/--out don't apply to `{cmd}` — they render artifact tables \
+                 (artifact, all, table, figure, validate)"
+            )
+            .into());
+        }
+        Ok(())
+    }
+
+    /// Commands that run no sweep must refuse `--size`/`--progress`
+    /// rather than accept and ignore them. (`--jobs` stays accepted
+    /// everywhere for legacy-spelling compatibility; it is harmless
+    /// where no pool runs.)
+    fn reject_sweep_flags(&self, cmd: &str) -> crate::Result<()> {
+        if self.size.is_some() || self.progress {
+            return Err(format!(
+                "--size/--progress don't apply to `{cmd}` — no experiment sweep runs"
+            )
+            .into());
+        }
+        Ok(())
+    }
+}
+
+fn parse_positive(flag: &str, value: &str) -> crate::Result<usize> {
+    let n: usize = value
+        .parse()
+        .map_err(|_| format!("{flag} expects a positive integer, got {value:?}"))?;
+    if n == 0 {
+        return Err(format!("{flag} must be at least 1").into());
+    }
+    Ok(n)
+}
+
+/// Strip every global flag (`--jobs`, `--format`, `--out`, `--size`,
+/// `--progress`, `=`-joined or space-separated; the last occurrence
+/// wins) from the argument list. Returns the parsed options and the
+/// remaining positional arguments. Pure: no process state is touched.
+fn parse_flags(args: Vec<String>) -> crate::Result<(CliOpts, Vec<String>)> {
+    let mut opts = CliOpts::default();
+    let mut rest = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        let (name, inline) = match args[i].split_once('=') {
+            Some((n, v)) if n.starts_with("--") => (n.to_string(), Some(v.to_string())),
+            _ => (args[i].clone(), None),
+        };
+        match name.as_str() {
+            "--jobs" | "--format" | "--out" | "--size" => {
+                let value = match inline {
+                    Some(v) => v,
+                    None => {
+                        i += 1;
+                        args.get(i)
+                            .cloned()
+                            .ok_or_else(|| format!("{name} requires a value"))?
+                    }
+                };
+                match name.as_str() {
+                    "--jobs" => opts.jobs = parse_positive("--jobs", &value)?,
+                    "--size" => opts.size = Some(parse_positive("--size", &value)?),
+                    "--out" => opts.out = Some(value),
+                    _ => {
+                        opts.format = Some(Format::parse(&value).ok_or_else(|| {
+                            format!("--format expects md|csv|json, got {value:?}")
+                        })?)
+                    }
+                }
+            }
+            "--progress" => {
+                if inline.is_some() {
+                    return Err("--progress takes no value".into());
+                }
+                opts.progress = true;
+            }
+            // A typo'd flag must not silently degrade into a positional
+            // (e.g. `--fromat json` running with the default format).
+            other if other.starts_with("--") => {
+                return Err(format!("unknown option {other} (see `repro help`)").into())
+            }
+            _ => rest.push(args[i].clone()),
+        }
+        i += 1;
+    }
+    Ok((opts, rest))
+}
+
+/// Write `content` to `--out FILE`, or to stdout.
+fn write_out(opts: &CliOpts, content: &str) -> crate::Result<()> {
+    match &opts.out {
+        Some(path) => {
+            std::fs::write(path, content).map_err(|e| format!("writing {path}: {e}"))?
+        }
+        None => print!("{content}"),
+    }
+    Ok(())
+}
+
+/// Render one table in the selected format. On stdout, markdown keeps
+/// the legacy `println!` blank line after each artifact.
+fn emit(opts: &CliOpts, table: &Table) -> crate::Result<()> {
+    let mut rendered = table.render(opts.format());
+    if opts.out.is_none() && opts.format() == Format::Markdown {
+        rendered.push('\n');
+    }
+    write_out(opts, &rendered)
+}
+
+/// The `all` command's artifact order (the paper's presentation order,
+/// as the legacy CLI printed it).
+const ALL_ORDER: [&str; 12] = [
+    "figure1",
+    "table1",
+    "figure9",
+    "figure10",
+    "figure11",
+    "figure12",
+    "figure13",
+    "figure14",
+    "figure15_16",
+    "table2",
+    "table3",
+    "table4",
+];
 
 /// Entry point for the `repro` binary.
 pub fn main_cli() -> crate::Result<()> {
-    let args = parse_jobs(std::env::args().skip(1).collect())?;
+    let (opts, args) = parse_flags(std::env::args().skip(1).collect())?;
+    run_command(&opts, &args)
+}
+
+fn run_command(opts: &CliOpts, args: &[String]) -> crate::Result<()> {
+    let sweep = opts.session();
+    let aopts = opts.artifact_options();
     let cmd = args.first().map(String::as_str).unwrap_or("help");
     match cmd {
-        "all" => {
-            println!("{}", figure1());
-            println!("{}", table1());
-            println!("{}", figure_speedups(1));
-            println!("{}", figure10());
-            println!("{}", figure11());
-            println!("{}", figure12());
-            println!("{}", figure_speedups(8));
-            println!("{}", figure14());
-            println!("{}", figure15_16());
-            println!("{}", table2());
-            println!("{}", table3());
-            println!("{}", table4());
-            // Skip only when the PJRT backend is unavailable; a mismatch
-            // from an available backend is a real failure and propagates.
-            match crate::runtime::GoldenRuntime::new() {
-                Ok(rt) => println!("{}", validate_goldens_with(&rt)?),
-                Err(e) => println!("golden validation skipped: {e}"),
+        "list" => {
+            opts.reject_render_flags(cmd)?;
+            opts.reject_sweep_flags(cmd)?;
+            for a in artifacts::all() {
+                println!("{:12} {}", a.id, a.title);
             }
         }
-        "table" => match args.get(1).map(String::as_str) {
-            Some("1") => println!("{}", table1()),
-            Some("2") => println!("{}", table2()),
-            Some("3") => println!("{}", table3()),
-            Some("4") => println!("{}", table4()),
-            other => return Err(format!("unknown table {other:?}").into()),
-        },
-        "figure" => match args.get(1).map(String::as_str) {
-            Some("1") => println!("{}", figure1()),
-            Some("9") => println!("{}", figure_speedups(1)),
-            Some("10") => println!("{}", figure10()),
-            Some("11") => println!("{}", figure11()),
-            Some("12") => println!("{}", figure12()),
-            Some("13") => println!("{}", figure_speedups(8)),
-            Some("14") => println!("{}", figure14()),
-            Some("15") | Some("16") => println!("{}", figure15_16()),
-            other => return Err(format!("unknown figure {other:?}").into()),
-        },
+        "artifact" => {
+            let id = args
+                .get(1)
+                .map(String::as_str)
+                .ok_or("artifact requires an id (see `repro list`)")?;
+            emit(opts, &sweep.artifact(id, &aopts)?)?;
+        }
+        "all" => {
+            if opts.format() == Format::Csv {
+                return Err("`all` cannot render CSV (one table per file) — render \
+                            artifacts individually: `repro artifact <id> --format csv`"
+                    .into());
+            }
+            // Markdown to stdout streams each table as it completes (the
+            // legacy behavior — partial output survives a late failure);
+            // `--out` and JSON (one document) buffer instead.
+            let stream = opts.out.is_none() && opts.format() == Format::Markdown;
+            let mut tables = Vec::new();
+            // The four matrix figures share experiment lists: run
+            // figure12's (1-core matrix ++ 8-core matrix) once and
+            // render all of them from slices of it.
+            let mut matrix_runs: Option<Vec<RunResult>> = None;
+            for id in ALL_ORDER {
+                let t = match id {
+                    "figure9" | "figure12" | "figure13" | "figure15_16" => {
+                        if matrix_runs.is_none() {
+                            let exps = artifacts::by_id("figure12")
+                                .expect("registered")
+                                .experiments(&aopts);
+                            matrix_runs = Some(sweep.run(&exps)?);
+                        }
+                        let runs = matrix_runs.as_deref().expect("just filled");
+                        // figure12's list is the 1-core matrix followed
+                        // by the 8-core matrix; verify that before
+                        // slicing, and fall back to the artifact's own
+                        // sweep if its layout ever changes.
+                        let (single, multi) = runs.split_at(runs.len() / 2);
+                        let layout_holds = single.iter().all(|r| r.params.cores == 1)
+                            && multi.iter().all(|r| r.params.cores == 8);
+                        let a = artifacts::by_id(id).expect("registered");
+                        match (id, layout_holds) {
+                            (_, false) => sweep.artifact(id, &aopts)?,
+                            ("figure9", _) => a.render(single)?,
+                            ("figure12", _) => a.render(runs)?,
+                            _ => a.render(multi)?,
+                        }
+                    }
+                    id => sweep.artifact(id, &aopts)?,
+                };
+                if stream {
+                    println!("{}", t.to_markdown());
+                } else {
+                    tables.push(t);
+                }
+            }
+            // Skip only when the PJRT backend is unavailable; a mismatch
+            // from an available backend is a real failure and propagates.
+            let skipped = match crate::runtime::GoldenRuntime::new() {
+                Ok(rt) => {
+                    let runs = sweep.run(&artifacts::validate_experiments())?;
+                    let t = artifacts::validate_render_with(&rt, &runs)?;
+                    if stream {
+                        println!("{}", t.to_markdown());
+                    } else {
+                        tables.push(t);
+                    }
+                    None
+                }
+                Err(e) => Some(e),
+            };
+            if stream {
+                if let Some(e) = &skipped {
+                    println!("golden validation skipped: {e}");
+                }
+            } else {
+                let buf = match opts.format() {
+                    Format::Markdown => {
+                        let mut b = String::new();
+                        for t in &tables {
+                            b += &t.to_markdown();
+                            b.push('\n');
+                        }
+                        if let Some(e) = &skipped {
+                            b += &format!("golden validation skipped: {e}\n");
+                        }
+                        b
+                    }
+                    _ => {
+                        // One well-formed JSON document: an array of
+                        // table objects. The skip note must not corrupt
+                        // the stream, so it goes to stderr.
+                        if let Some(e) = &skipped {
+                            eprintln!("golden validation skipped: {e}");
+                        }
+                        let mut b = String::from("[\n");
+                        for (i, t) in tables.iter().enumerate() {
+                            b += t.to_json().trim_end();
+                            b += if i + 1 == tables.len() { "\n" } else { ",\n" };
+                        }
+                        b += "]\n";
+                        b
+                    }
+                };
+                write_out(opts, &buf)?;
+            }
+        }
+        "table" => {
+            let id = match args.get(1).map(String::as_str) {
+                Some("1") => "table1",
+                Some("2") => "table2",
+                Some("3") => "table3",
+                Some("4") => "table4",
+                other => return Err(format!("unknown table {other:?}").into()),
+            };
+            emit(opts, &sweep.artifact(id, &aopts)?)?;
+        }
+        "figure" => {
+            let id = match args.get(1).map(String::as_str) {
+                Some("1") => "figure1",
+                Some("9") => "figure9",
+                Some("10") => "figure10",
+                Some("11") => "figure11",
+                Some("12") => "figure12",
+                Some("13") => "figure13",
+                Some("14") => "figure14",
+                Some("15") | Some("16") => "figure15_16",
+                other => return Err(format!("unknown figure {other:?}").into()),
+            };
+            emit(opts, &sweep.artifact(id, &aopts)?)?;
+        }
         "sweep" => {
-            let exps = table2_experiments();
-            let workers = effective_workers(&exps, jobs());
-            let runs = run_sweep(&exps, workers);
+            opts.reject_render_flags(cmd)?;
+            let exps = artifacts::by_id("table2").expect("registered").experiments(&aopts);
+            let workers = effective_workers(&exps, sweep.jobs());
+            let runs = sweep.run(&exps)?;
             println!("# sweep: {} experiments over {workers} workers\n", exps.len());
             for (e, r) in exps.iter().zip(&runs) {
                 println!(
@@ -118,6 +384,8 @@ pub fn main_cli() -> crate::Result<()> {
             }
         }
         "trace" => {
+            opts.reject_render_flags(cmd)?;
+            opts.reject_sweep_flags(cmd)?;
             let kernel = args.get(1).map(String::as_str).unwrap_or("dot");
             let v = match args.get(2).map(String::as_str) {
                 Some("baseline") => Variant::Baseline,
@@ -127,8 +395,21 @@ pub fn main_cli() -> crate::Result<()> {
             let n: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(64);
             println!("{}", trace_kernel(kernel, v, n));
         }
-        "validate" => println!("{}", validate_goldens()?),
+        "validate" => {
+            // Probe the backend before simulating anything, and run the
+            // validation sweep on *this* invocation's session so
+            // `--jobs` / `--progress` apply (the legacy global is gone).
+            let rt = crate::runtime::GoldenRuntime::new()?;
+            let runs = sweep.run(&artifacts::validate_experiments())?;
+            emit(opts, &artifacts::validate_render_with(&rt, &runs)?)?;
+        }
         "run" => {
+            opts.reject_render_flags(cmd)?;
+            if opts.size.is_some() {
+                return Err(
+                    "--size doesn't apply to `run` — pass the problem size as <n>".into()
+                );
+            }
             let name = args.get(1).map(String::as_str).unwrap_or("dot");
             let v = match args.get(2).map(String::as_str) {
                 Some("baseline") => Variant::Baseline,
@@ -139,7 +420,9 @@ pub fn main_cli() -> crate::Result<()> {
             let cores: usize = args.get(4).and_then(|s| s.parse().ok()).unwrap_or(1);
             let k = kernels::kernel_by_name(name)
                 .ok_or_else(|| format!("unknown kernel {name}"))?;
-            let r = run(k, v, n, cores);
+            // Through the session so --progress applies even here.
+            let mut runs = sweep.run(&[Experiment::new(k.name, v, n, cores)])?;
+            let r = runs.pop().expect("one result");
             let (fpu, fpss, snitch, ipc) = r.stats.region_utils();
             println!(
                 "{name} {} n={n} cores={cores}: {} region cycles, max_err {:.2e}\n\
@@ -159,29 +442,75 @@ pub fn main_cli() -> crate::Result<()> {
 
 #[cfg(test)]
 mod tests {
-    use super::parse_jobs;
+    use super::{parse_flags, CliOpts, Format};
 
     fn v(args: &[&str]) -> Vec<String> {
         args.iter().map(|s| s.to_string()).collect()
     }
 
+    /// Both `--jobs` spellings parse, anywhere in the argument list, and
+    /// a repeated flag's last occurrence wins — into the returned
+    /// options only: parsing touches no process-global state, so
+    /// concurrent invocations (or tests) cannot interfere.
     #[test]
     fn jobs_flag_forms() {
-        assert_eq!(parse_jobs(v(&["--jobs", "4", "table", "2"])).unwrap(), v(&["table", "2"]));
-        assert_eq!(parse_jobs(v(&["table", "--jobs=2", "2"])).unwrap(), v(&["table", "2"]));
-        assert_eq!(parse_jobs(v(&["run", "dot"])).unwrap(), v(&["run", "dot"]));
+        let (o, rest) = parse_flags(v(&["--jobs", "4", "table", "2"])).unwrap();
+        assert_eq!((o.jobs, rest), (4, v(&["table", "2"])));
+        let (o, rest) = parse_flags(v(&["table", "--jobs=2", "2"])).unwrap();
+        assert_eq!((o.jobs, rest), (2, v(&["table", "2"])));
+        let (o, rest) = parse_flags(v(&["run", "dot"])).unwrap();
+        assert_eq!((o.jobs, rest), (0, v(&["run", "dot"])));
         // Repeated flag: every occurrence is stripped, the last one wins.
-        assert_eq!(
-            parse_jobs(v(&["--jobs", "2", "--jobs=8", "table", "2"])).unwrap(),
-            v(&["table", "2"])
-        );
-        assert_eq!(super::super::jobs(), 8);
+        let (o, rest) = parse_flags(v(&["--jobs", "2", "--jobs=8", "table", "2"])).unwrap();
+        assert_eq!((o.jobs, rest), (8, v(&["table", "2"])));
+        // Two parses never observe each other (no `set_jobs` global).
+        let (a, _) = parse_flags(v(&["--jobs", "3"])).unwrap();
+        let (b, _) = parse_flags(v(&["list"])).unwrap();
+        assert_eq!(a.jobs, 3);
+        assert_eq!(b.jobs, 0);
     }
 
     #[test]
     fn jobs_flag_rejects_bad_values() {
-        assert!(parse_jobs(v(&["--jobs"])).is_err());
-        assert!(parse_jobs(v(&["--jobs", "zero"])).is_err());
-        assert!(parse_jobs(v(&["--jobs", "0"])).is_err());
+        assert!(parse_flags(v(&["--jobs"])).is_err());
+        assert!(parse_flags(v(&["--jobs", "zero"])).is_err());
+        assert!(parse_flags(v(&["--jobs", "0"])).is_err());
+    }
+
+    #[test]
+    fn format_out_size_progress_flags() {
+        let (o, rest) =
+            parse_flags(v(&["artifact", "table2", "--format", "json", "--size=16"])).unwrap();
+        assert_eq!(o.format, Some(Format::Json));
+        assert_eq!(o.size, Some(16));
+        assert_eq!(rest, v(&["artifact", "table2"]));
+        let (o, _) = parse_flags(v(&["--format=csv", "--out", "t.csv", "--progress"])).unwrap();
+        assert_eq!(o.format, Some(Format::Csv));
+        assert_eq!(o.out.as_deref(), Some("t.csv"));
+        assert!(o.progress);
+        assert!(parse_flags(v(&["--format", "yaml"])).is_err());
+        assert!(parse_flags(v(&["--size", "0"])).is_err());
+        assert!(parse_flags(v(&["--out"])).is_err());
+    }
+
+    /// A typo'd flag must error, not silently become a positional arg
+    /// (which commands ignore) and run with default options.
+    #[test]
+    fn unknown_flags_are_rejected() {
+        assert!(parse_flags(v(&["artifact", "table2", "--fromat", "json"])).is_err());
+        assert!(parse_flags(v(&["--progess"])).is_err());
+        assert!(parse_flags(v(&["--progress=false"])).is_err());
+        // Positional words are still passed through untouched.
+        let (_, rest) = parse_flags(v(&["run", "dot", "frep", "256", "1"])).unwrap();
+        assert_eq!(rest, v(&["run", "dot", "frep", "256", "1"]));
+    }
+
+    #[test]
+    fn defaults_are_markdown_auto_width() {
+        let (o, rest) = parse_flags(v(&["list"])).unwrap();
+        assert_eq!(o, CliOpts::default());
+        assert_eq!(o.format(), Format::Markdown);
+        assert!(o.format.is_none(), "an un-passed flag must be distinguishable");
+        assert_eq!(rest, v(&["list"]));
     }
 }

@@ -1,23 +1,40 @@
-//! Experiment coordinator: regenerates every table and figure of the
-//! paper's evaluation (§4) from simulated runs + the calibrated models,
-//! and validates results against the AOT golden models.
+//! Experiment coordinator: the typed evaluation API regenerating every
+//! table and figure of the paper's evaluation (§4) from simulated runs
+//! + the calibrated models, and validating results against the AOT
+//! golden models.
 //!
-//! Each `table_*` / `figure_*` function returns a rendered markdown block
-//! whose rows mirror the paper's presentation; the `repro` CLI and the
-//! criterion-style benches print them.
+//! ## Three decoupled layers
+//!
+//! * [`report`] — typed [`report::Value`] cells in a [`report::Table`]
+//!   with hand-rolled markdown / CSV / JSON renderers. Markdown output
+//!   is byte-identical to the legacy pre-rendered strings.
+//! * [`artifacts`] — the registry of [`artifacts::Artifact`] specs
+//!   (experiment list + renderer per paper table/figure), so experiment
+//!   definitions and presentation are independently reusable.
+//! * [`Sweep`] / [`SweepOptions`] — an execution *session*: worker-pool
+//!   width, per-run cycle budget and an optional progress callback are
+//!   per-session state, not process globals. The old [`set_jobs`] /
+//!   [`jobs`] globals survive only as deprecated shims for legacy
+//!   library callers (auto-width sessions still honor them); the CLI
+//!   `--jobs` flag now configures its invocation's session directly.
+//!
+//! The legacy `table_*` / `figure_*` functions remain as thin wrappers
+//! (`registry lookup → default session → markdown`), so existing
+//! callers and the `repro` CLI's old spellings keep producing the same
+//! bytes.
 //!
 //! ## Sweep execution
 //!
-//! Experiments are independent (one [`crate::cluster::Cluster`] each, no
-//! shared state), so every sweep fans its [`Experiment`] list out over a
-//! **bounded** pool of std threads ([`run_sweep`]): workers pull the next
-//! experiment index from an atomic counter and write the result into that
-//! experiment's slot. Results therefore come back in *input order*
-//! regardless of worker count or scheduling — a `--jobs 8` sweep renders
-//! byte-identical tables to a `--jobs 1` sweep (enforced by
-//! `tests/determinism.rs`). The pool width defaults to the machine's
-//! available parallelism and is overridden with the CLI `--jobs N` flag
-//! ([`set_jobs`]).
+//! Experiments are independent (one [`crate::cluster::Cluster`] each,
+//! no shared state), so [`Sweep::run`] fans its [`Experiment`] list out
+//! over a **bounded** pool of std threads: workers pull the next
+//! experiment index from an atomic counter and write the result into
+//! that experiment's slot. Results therefore come back in *input
+//! order* regardless of worker count or scheduling — a `jobs: 8` sweep
+//! renders byte-identical tables to a `jobs: 1` sweep (enforced by
+//! `tests/determinism.rs`). Failures don't kill the pool: every
+//! experiment runs, and the first failure (in input order) is reported
+//! with its `(kernel, variant, n, cores)` context.
 //!
 //! Program construction is not part of a sweep's per-experiment cost:
 //! kernels build typed, pre-decoded programs through
@@ -25,16 +42,18 @@
 //! [`crate::kernels::cached_program`] shares each distinct
 //! `(kernel, variant, n, cores)` image across all workers.
 
+pub mod artifacts;
 pub mod cli;
+pub mod report;
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use crate::cluster::ClusterConfig;
-use crate::energy::{cluster_area, core_area, model};
-use crate::kernels::{self, KernelDef, Params, RunResult, Variant};
-use crate::vector;
+use crate::kernels::{self, KernelDef, Params, RunResult, Variant, DEFAULT_MAX_CYCLES};
+
+pub use artifacts::{Artifact, ArtifactOptions};
+pub use report::{Format, Table, Value};
 
 /// The benchmark sizes used for the per-kernel figures (problem sizes are
 /// chosen, like the paper's, so that all working sets fit the TCDM).
@@ -50,11 +69,9 @@ pub fn default_size(kernel: &str) -> usize {
 }
 
 /// Run one kernel/variant/size/cores (panics on simulation or validation
-/// failure — every number in a table is a *checked* run).
+/// failure — prefer [`Experiment::try_run`] for error reporting).
 pub fn run(k: &'static KernelDef, v: Variant, n: usize, cores: usize) -> RunResult {
-    let r = kernels::run_kernel(k, v, &Params::new(n, cores))
-        .unwrap_or_else(|e| panic!("{e}"));
-    r
+    kernels::run_kernel(k, v, &Params::new(n, cores)).unwrap_or_else(|e| panic!("{e}"))
 }
 
 /// One independent sweep experiment: kernel × variant × size × cores.
@@ -64,403 +81,385 @@ pub struct Experiment {
     pub variant: Variant,
     pub n: usize,
     pub cores: usize,
+    /// Keep the final [`crate::cluster::Cluster`] in the result
+    /// ([`RunResult::cluster`]) — off by default so wide sweeps don't
+    /// retain every TCDM image (see [`Params::keep_cluster`]).
+    pub keep_cluster: bool,
 }
 
 impl Experiment {
     pub fn new(kernel: &'static str, variant: Variant, n: usize, cores: usize) -> Experiment {
-        Experiment { kernel, variant, n, cores }
+        Experiment { kernel, variant, n, cores, keep_cluster: false }
     }
 
-    /// Execute this experiment on a fresh cluster (checked run).
+    /// Request the final cluster state in this experiment's result.
+    pub fn with_cluster(mut self) -> Experiment {
+        self.keep_cluster = true;
+        self
+    }
+
+    /// The [`Params`] this experiment runs with (default cycle budget).
+    pub fn params(&self) -> Params {
+        let p = Params::new(self.n, self.cores);
+        if self.keep_cluster {
+            p.with_cluster()
+        } else {
+            p
+        }
+    }
+
+    /// Execute this experiment on a fresh cluster (checked run); panics
+    /// on failure — the non-panicking form is [`Experiment::try_run`].
     pub fn run(&self) -> RunResult {
+        self.try_run().unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Execute this experiment on a fresh cluster. Simulation or
+    /// validation failures come back as errors carrying the
+    /// `(kernel, variant, n, cores)` context.
+    pub fn try_run(&self) -> crate::Result<RunResult> {
+        self.try_run_budgeted(DEFAULT_MAX_CYCLES)
+    }
+
+    /// [`Experiment::try_run`] with an explicit per-run cycle budget
+    /// (what [`Sweep`] applies from `SweepOptions::max_cycles`).
+    pub fn try_run_budgeted(&self, max_cycles: u64) -> crate::Result<RunResult> {
         let k = kernels::kernel_by_name(self.kernel)
-            .unwrap_or_else(|| panic!("unknown kernel {}", self.kernel));
-        run(k, self.variant, self.n, self.cores)
+            .ok_or_else(|| format!("unknown kernel {}", self.kernel))?;
+        let p = self.params().with_max_cycles(max_cycles);
+        kernels::run_kernel(k, self.variant, &p).map_err(|e| {
+            format!(
+                "experiment {} {} n={} cores={} failed: {e}",
+                self.kernel,
+                self.variant.label(),
+                self.n,
+                self.cores
+            )
+            .into()
+        })
     }
 }
 
-/// Pool width override set by the CLI's `--jobs N` (0 = auto).
+/// Legacy process-global pool-width override (0 = auto). Kept only as
+/// a shim for pre-session callers: sessions with
+/// `SweepOptions::jobs == 0` fall back to this, then to the machine
+/// parallelism.
 static JOBS: AtomicUsize = AtomicUsize::new(0);
 
-/// Set the sweep worker-pool width (the CLI `--jobs N` flag). 0 restores
-/// the default (machine parallelism).
+/// Set the process-global sweep worker-pool width. 0 restores the
+/// default (machine parallelism).
+#[deprecated(
+    since = "0.2.0",
+    note = "pool width is per-session now: pass `SweepOptions { jobs, .. }` to `Sweep`"
+)]
 pub fn set_jobs(n: usize) {
     JOBS.store(n, Ordering::Relaxed);
 }
 
-/// Current sweep worker-pool width.
+/// Current process-global sweep worker-pool width.
+#[deprecated(since = "0.2.0", note = "use `Sweep::jobs` — the resolved per-session width")]
 pub fn jobs() -> usize {
+    default_jobs()
+}
+
+/// Session-default pool width: the global shim if set, else the
+/// machine parallelism.
+fn default_jobs() -> usize {
     match JOBS.load(Ordering::Relaxed) {
         0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
         n => n,
     }
 }
 
-/// The pool width [`run_sweep`] actually uses for `experiments` when
-/// asked for `workers`: at least 1, at most one worker per experiment.
+/// The pool width a sweep actually uses for `experiments` when asked
+/// for `workers`: at least 1, at most one worker per experiment.
 pub fn effective_workers(experiments: &[Experiment], workers: usize) -> usize {
     workers.max(1).min(experiments.len().max(1))
 }
 
-/// Run `experiments` across a bounded pool of `workers` std threads (one
-/// fresh `Cluster` per experiment — workers share nothing but the work
-/// queue). Results are returned **in input order**, so any rendering over
-/// them is byte-identical for every worker count.
-pub fn run_sweep(experiments: &[Experiment], workers: usize) -> Vec<RunResult> {
-    let workers = effective_workers(experiments, workers);
-    let next = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<RunResult>>> =
-        experiments.iter().map(|_| Mutex::new(None)).collect();
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            let next = &next;
-            let slots = &slots;
-            scope.spawn(move || loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= experiments.len() {
-                    break;
-                }
-                let r = experiments[i].run();
-                *slots[i].lock().unwrap() = Some(r);
-            });
+/// Progress report handed to the `SweepOptions::on_progress` callback
+/// as each experiment finishes (from the worker thread that ran it).
+#[derive(Debug, Clone, Copy)]
+pub struct SweepProgress {
+    /// Experiments finished so far (including this one).
+    pub completed: usize,
+    /// Total experiments in this sweep.
+    pub total: usize,
+    /// The experiment that just finished.
+    pub experiment: Experiment,
+}
+
+/// Progress callback type (invoked concurrently from worker threads).
+pub type ProgressFn = Box<dyn Fn(&SweepProgress) + Send + Sync>;
+
+/// Per-session sweep configuration.
+pub struct SweepOptions {
+    /// Worker-pool width; 0 = auto (the deprecated [`set_jobs`] global
+    /// if set, else the machine parallelism).
+    pub jobs: usize,
+    /// Per-run simulation budget ([`Params::max_cycles`]).
+    pub max_cycles: u64,
+    /// Called as each experiment completes — wire a progress bar or a
+    /// log line for long sweeps.
+    pub on_progress: Option<ProgressFn>,
+}
+
+impl Default for SweepOptions {
+    fn default() -> SweepOptions {
+        SweepOptions { jobs: 0, max_cycles: DEFAULT_MAX_CYCLES, on_progress: None }
+    }
+}
+
+impl SweepOptions {
+    pub fn new() -> SweepOptions {
+        SweepOptions::default()
+    }
+
+    /// Fixed worker-pool width (0 = auto).
+    pub fn jobs(mut self, jobs: usize) -> SweepOptions {
+        self.jobs = jobs;
+        self
+    }
+
+    /// Per-run simulation budget.
+    pub fn max_cycles(mut self, max_cycles: u64) -> SweepOptions {
+        self.max_cycles = max_cycles;
+        self
+    }
+
+    /// Progress callback (invoked from worker threads).
+    pub fn on_progress(
+        mut self,
+        f: impl Fn(&SweepProgress) + Send + Sync + 'static,
+    ) -> SweepOptions {
+        self.on_progress = Some(Box::new(f));
+        self
+    }
+}
+
+/// A sweep **session**: owns its pool width, cycle budget and progress
+/// callback. Two sessions never interfere — unlike the old
+/// process-global `set_jobs` width (kept only as a deprecated shim).
+///
+/// ```no_run
+/// use snitch_sim::coordinator::{artifacts, ArtifactOptions, Sweep, SweepOptions};
+///
+/// let sweep = Sweep::with_options(SweepOptions::new().jobs(4));
+/// let table = artifacts::by_id("table2")
+///     .unwrap()
+///     .build(&sweep, &ArtifactOptions::default())
+///     .unwrap();
+/// println!("{}", table.to_markdown());
+/// ```
+#[derive(Default)]
+pub struct Sweep {
+    opts: SweepOptions,
+}
+
+impl Sweep {
+    /// A session with default options (auto width, default budget).
+    pub fn new() -> Sweep {
+        Sweep::with_options(SweepOptions::default())
+    }
+
+    pub fn with_options(opts: SweepOptions) -> Sweep {
+        Sweep { opts }
+    }
+
+    pub fn options(&self) -> &SweepOptions {
+        &self.opts
+    }
+
+    /// The resolved worker-pool width of this session.
+    pub fn jobs(&self) -> usize {
+        match self.opts.jobs {
+            0 => default_jobs(),
+            n => n,
         }
-    });
-    slots
-        .into_iter()
-        .map(|slot| slot.into_inner().unwrap().expect("worker filled every slot"))
-        .collect()
+    }
+
+    /// Run `experiments` across this session's bounded worker pool (one
+    /// fresh `Cluster` per experiment — workers share nothing but the
+    /// work queue). Results are returned **in input order**, so any
+    /// rendering over them is byte-identical for every worker count.
+    ///
+    /// Every experiment executes even when one fails; the first failure
+    /// in input order is returned, carrying that experiment's
+    /// `(kernel, variant, n, cores)` context.
+    pub fn run(&self, experiments: &[Experiment]) -> crate::Result<Vec<RunResult>> {
+        let workers = effective_workers(experiments, self.jobs());
+        let next = AtomicUsize::new(0);
+        let completed = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<crate::Result<RunResult>>>> =
+            experiments.iter().map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                let next = &next;
+                let completed = &completed;
+                let slots = &slots;
+                let opts = &self.opts;
+                scope.spawn(move || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= experiments.len() {
+                        break;
+                    }
+                    let r = experiments[i].try_run_budgeted(opts.max_cycles);
+                    *slots[i].lock().unwrap() = Some(r);
+                    let done = completed.fetch_add(1, Ordering::Relaxed) + 1;
+                    if let Some(cb) = &opts.on_progress {
+                        cb(&SweepProgress {
+                            completed: done,
+                            total: experiments.len(),
+                            experiment: experiments[i],
+                        });
+                    }
+                });
+            }
+        });
+        let mut out = Vec::with_capacity(experiments.len());
+        for slot in slots {
+            out.push(slot.into_inner().unwrap().expect("worker filled every slot")?);
+        }
+        Ok(out)
+    }
+
+    /// Run the full kernel × variant matrix for a core count over this
+    /// session's pool. Returns (kernel, variant) → result.
+    pub fn run_matrix(
+        &self,
+        cores: usize,
+    ) -> crate::Result<HashMap<(&'static str, Variant), RunResult>> {
+        let exps = artifacts::matrix_experiments_opt(cores, &ArtifactOptions::default());
+        let runs = self.run(&exps)?;
+        Ok(exps.iter().zip(runs).map(|(e, r)| ((e.kernel, e.variant), r)).collect())
+    }
+
+    /// Build one registered artifact on this session: resolve `id`,
+    /// run its experiments, render the typed table.
+    pub fn artifact(&self, id: &str, opts: &ArtifactOptions) -> crate::Result<Table> {
+        let a = artifacts::by_id(id).ok_or_else(|| {
+            format!("unknown artifact {id:?} (see `repro list` or `artifacts::all()`)")
+        })?;
+        a.build(self, opts)
+    }
+}
+
+/// Run `experiments` across a bounded pool of `workers` std threads.
+/// Legacy entry point: panics on the first failure — prefer
+/// [`Sweep::run`], which reports it instead.
+pub fn run_sweep(experiments: &[Experiment], workers: usize) -> Vec<RunResult> {
+    Sweep::with_options(SweepOptions::new().jobs(workers.max(1)))
+        .run(experiments)
+        .unwrap_or_else(|e| panic!("{e}"))
 }
 
 /// The kernel × variant matrix for a core count, as an experiment list
 /// (paper presentation order).
 pub fn matrix_experiments(cores: usize) -> Vec<Experiment> {
-    let mut exps = Vec::new();
-    for k in kernels::all_kernels() {
-        for &v in k.variants {
-            exps.push(Experiment::new(k.name, v, default_size(k.name), cores));
-        }
-    }
-    exps
+    artifacts::matrix_experiments_opt(cores, &ArtifactOptions::default())
 }
 
-/// Run the full kernel × variant matrix for a core count over the worker
-/// pool. Returns (kernel, variant) → result.
+/// Run the full kernel × variant matrix for a core count on a default
+/// session. Returns (kernel, variant) → result.
 pub fn run_matrix(cores: usize) -> HashMap<(&'static str, Variant), RunResult> {
-    let exps = matrix_experiments(cores);
-    let runs = run_sweep(&exps, jobs());
-    exps.iter()
-        .zip(runs)
-        .map(|(e, r)| ((e.kernel, e.variant), r))
-        .collect()
-}
-
-/// Fig. 1: energy per instruction of an application-class core (Ariane
-/// [8]) on the dot-product loop — the motivation numbers.
-pub fn figure1() -> String {
-    let rows = [
-        ("fld (L1 hit)", 59.0),
-        ("fmadd.d", 28.0),
-        ("addi", 20.0),
-        ("bne", 31.0),
-    ];
-    let mut s = String::from(
-        "## Fig. 1 — energy/instruction, application-class core (pJ, from [8])\n\n\
-         | instruction | pJ |\n|---|---|\n",
-    );
-    let mut loop_total = 0.0;
-    for (i, e) in rows {
-        s += &format!("| {i} | {e:.0} |\n");
-        loop_total += e;
-    }
-    // 2 loads + fma + 2 addi + branch ≈ the 6-instr loop of Fig. 6(a).
-    let total = 2.0 * 59.0 + 28.0 + 2.0 * 20.0 + 31.0 + 80.0; // + iF/RF overheads
-    s += &format!(
-        "\nLoop iteration ≈ {total:.0} pJ of which 28 pJ (≈{:.0}%) is the FMA — \
-         the paper's 317 pJ vs 28 pJ motivation.\n",
-        100.0 * 28.0 / total
-    );
-    let _ = loop_total;
-    s
-}
-
-/// Table 1: FPU / FP-SS / Snitch utilization and IPC, single- and 8-core.
-pub fn table1() -> String {
-    let sizes: Vec<(&str, usize)> = vec![
-        ("dot", 256),
-        ("dot", 4096),
-        ("relu", 1024),
-        ("dgemm", 16),
-        ("dgemm", 32),
-        ("fft", 256),
-        ("axpy", 1024),
-        ("conv2d", 32),
-        ("knn", 1024),
-        ("montecarlo", 2048),
-    ];
-    let mut s = String::from(
-        "## Table 1 — utilization and IPC (single-core | 8-core)\n\n\
-         | kernel | FPU | FPSS | Snitch | IPC | FPU | FPSS | Snitch | IPC |\n\
-         |---|---|---|---|---|---|---|---|---|\n",
-    );
-    // Adjacent (1-core, 8-core) experiment pairs, in presentation order;
-    // run_sweep preserves input order so no post-sort is needed.
-    let mut exps = Vec::new();
-    for &(name, n) in &sizes {
-        let k = kernels::kernel_by_name(name).unwrap();
-        for &v in k.variants {
-            exps.push(Experiment::new(name, v, n, 1));
-            exps.push(Experiment::new(name, v, n, 8));
-        }
-    }
-    let runs = run_sweep(&exps, jobs());
-    for (pair_e, pair_r) in exps.chunks_exact(2).zip(runs.chunks_exact(2)) {
-        let e = &pair_e[0];
-        let u1 = pair_r[0].stats.region_utils();
-        let u8_ = pair_r[1].stats.region_utils();
-        s += &format!(
-            "| {} {} {} | {:.2} | {:.2} | {:.2} | {:.2} | {:.2} | {:.2} | {:.2} | {:.2} |\n",
-            e.kernel,
-            e.n,
-            e.variant.label(),
-            u1.0, u1.1, u1.2, u1.3, u8_.0, u8_.1, u8_.2, u8_.3
-        );
-    }
-    s
+    Sweep::new().run_matrix(cores).unwrap_or_else(|e| panic!("{e}"))
 }
 
 /// The Table 2 experiment set: DGEMM 32² SSR+FREP from 1 to 32 cores (also
 /// the sweep-throughput benchmark workload in `benches/sim_hotpath.rs`).
 pub fn table2_experiments() -> Vec<Experiment> {
-    [1usize, 2, 4, 8, 16, 32]
-        .iter()
-        .map(|&c| Experiment::new("dgemm", Variant::SsrFrep, 32, c))
-        .collect()
+    artifacts::by_id("table2").expect("registered").experiments(&ArtifactOptions::default())
+}
+
+/// Render an artifact on a default session and return its markdown —
+/// the legacy `table_*` / `figure_*` surface.
+fn artifact_markdown(id: &str) -> String {
+    Sweep::new()
+        .artifact(id, &ArtifactOptions::default())
+        .unwrap_or_else(|e| panic!("{e}"))
+        .to_markdown()
+}
+
+/// Fig. 1: energy per instruction of an application-class core (Ariane
+/// [8]) on the dot-product loop — the motivation numbers.
+pub fn figure1() -> String {
+    artifact_markdown("figure1")
+}
+
+/// Table 1: FPU / FP-SS / Snitch utilization and IPC, single- and 8-core.
+pub fn table1() -> String {
+    artifact_markdown("table1")
 }
 
 /// Render Table 2 from its experiment results (input order of
-/// [`table2_experiments`]).
-pub fn render_table2(exps: &[Experiment], runs: &[RunResult]) -> String {
-    let base = runs[0].cycles as f64;
-    let mut s = String::from(
-        "## Table 2 — DGEMM 32×32 multi-core scaling (SSR+FREP)\n\n\
-         | cores | η (FPU util) | δ (vs half) | Δ (vs 1 core) |\n|---|---|---|---|\n",
-    );
-    for (i, r) in runs.iter().enumerate() {
-        let (fpu, _, _, _) = r.stats.region_utils();
-        let delta = base / r.cycles as f64;
-        let half = if i == 0 { 1.0 } else { runs[i - 1].cycles as f64 / r.cycles as f64 };
-        s += &format!(
-            "| {} | {fpu:.2} | {half:.2} | {delta:.2} |\n",
-            exps[i].cores
-        );
-    }
-    s += "\npaper: η 0.81–0.90, δ ≈ 1.9–2.0, Δ = 7.80 @ 8 cores, 27.61 @ 32.\n";
-    s
+/// [`table2_experiments`]). Legacy wrapper over the `table2` artifact's
+/// renderer; the experiment list is implied by the results.
+pub fn render_table2(_exps: &[Experiment], runs: &[RunResult]) -> String {
+    artifacts::by_id("table2")
+        .expect("registered")
+        .render(runs)
+        .unwrap_or_else(|e| panic!("{e}"))
+        .to_markdown()
 }
 
 /// Table 2: DGEMM 32² FPU utilization and scaling from 1 to 32 cores.
 pub fn table2() -> String {
-    let exps = table2_experiments();
-    let runs = run_sweep(&exps, jobs());
-    render_table2(&exps, &runs)
+    artifact_markdown("table2")
 }
 
 /// Table 3: normalized DGEMM performance, Snitch (measured) vs the vector
 /// lane model vs the published Ara/Hwacha numbers.
 pub fn table3() -> String {
-    let mut s = String::from(
-        "## Table 3 — normalized DGEMM performance [% of peak]\n\n\
-         | n | FPUs | Snitch (sim) | Ara (model) | Ara (paper) | Hwacha (paper) |\n\
-         |---|---|---|---|---|---|\n",
-    );
-    let grid: Vec<(usize, usize)> = [4usize, 8, 16]
-        .into_iter()
-        .flat_map(|fpus| [16usize, 32, 64, 128].into_iter().map(move |n| (fpus, n)))
-        .collect();
-    let exps: Vec<Experiment> = grid
-        .iter()
-        .filter(|&&(fpus, n)| n % fpus == 0)
-        .map(|&(fpus, n)| Experiment::new("dgemm", Variant::SsrFrep, n, fpus))
-        .collect();
-    let mut runs = run_sweep(&exps, jobs()).into_iter();
-    for (fpus, n) in grid {
-        if n % fpus != 0 {
-            s += &format!("| {n} | {fpus} | — | | | |\n");
-            continue;
-        }
-        let r = runs.next().expect("one run per valid grid point");
-        let flops: u64 = r.stats.cores.iter().map(|c| c.flops).sum();
-        let snitch = 100.0 * flops as f64 / r.cycles as f64 / (2.0 * fpus as f64);
-        let model = vector::dgemm_norm_perf(&vector::VectorConfig::ara(fpus as u64), n as u64);
-        let ara = vector::ara_published(fpus as u64, n as u64)
-            .map(|v| format!("{v:.1}"))
-            .unwrap_or_default();
-        let hw = vector::hwacha_published(fpus as u64, n as u64)
-            .map(|v| format!("{v:.1}"))
-            .unwrap_or_else(|| "—".into());
-        s += &format!("| {n} | {fpus} | {snitch:.1} | {model:.1} | {ara} | {hw} |\n");
-    }
-    s += "\npaper: Snitch 58–96 across the grid, beating Ara by up to 4.5× at n=16.\n";
-    s
+    artifact_markdown("table3")
 }
 
 /// Table 4: figures of merit vs Ara / Volta SM / Carmel.
 pub fn table4() -> String {
-    let k = kernels::kernel_by_name("dgemm").unwrap();
-    let r = run(k, Variant::SsrFrep, 32, 8);
-    let cfg = ClusterConfig::default();
-    let em = model::EnergyModel::default();
-    let p = model::power_report(&r.stats, &cfg, &em);
-    let flops: u64 = r.stats.cores.iter().map(|c| c.flops).sum();
-    let sustained = flops as f64 / r.cycles as f64; // Gflop/s @ 1GHz
-    let util = 100.0 * sustained / 16.0;
-    let eff = model::efficiency_gflops_w(flops, r.stats.cycles, p.total());
-    let area_mm2 = cluster_area(&cfg).total() / 3300.0 * 0.89; // paper: 0.89 mm²
-    format!(
-        "## Table 4 — comparison on n×n DGEMM (DP)\n\n\
-         | metric | unit | Snitch (this repro) | Snitch (paper) | Ara [14] | Volta SM [31] | Carmel [31] |\n\
-         |---|---|---|---|---|---|---|\n\
-         | problem size | n | 32 | 32 | 32 | 256 | 256 |\n\
-         | peak DP | Gflop/s | 16.0 | 16.96 | 18.72 | — | 18.13 |\n\
-         | sustained DP | Gflop/s | {sustained:.2} | 14.38 | 10.00 | — | 9.27 |\n\
-         | utilization DP | % | {util:.1} | 84.8 | 53.4 | — | 51.2 |\n\
-         | impl. area | mm² | {area_mm2:.2} | 0.89 | 1.07 | 11.03 | 7.37 |\n\
-         | total power DP | W | {:.3} | 0.17 | 0.46 | — | 1.85 |\n\
-         | energy eff. DP | Gflop/s/W | {eff:.1} | 79.4 | 39.9 | — | 5.0 |\n\
-         | leakage | mW | {:.0} | 12 | 21.1 | — | — |\n",
-        p.total() / 1000.0,
-        p.leakage,
-    )
+    artifact_markdown("table4")
 }
 
 /// Fig. 9 / Fig. 13: speed-up from the ISA extensions (single / 8 cores).
+/// Other core counts keep their historical behavior: the Fig. 13
+/// presentation over a kernel matrix at the requested core count.
 pub fn figure_speedups(cores: usize) -> String {
-    let matrix = run_matrix(cores);
-    let title = if cores == 1 { "Fig. 9 — single-core" } else { "Fig. 13 — octa-core" };
-    let mut s = format!(
-        "## {title} speed-up over baseline\n\n| kernel | variant | cycles | speed-up |\n|---|---|---|---|\n"
-    );
-    for k in kernels::all_kernels() {
-        let base = matrix[&(k.name, Variant::Baseline)].cycles as f64;
-        for &v in k.variants {
-            let r = &matrix[&(k.name, v)];
-            s += &format!(
-                "| {} | {} | {} | {:.2}× |\n",
-                k.name,
-                v.label(),
-                r.cycles,
-                base / r.cycles as f64
-            );
+    match cores {
+        1 => artifact_markdown("figure9"),
+        8 => artifact_markdown("figure13"),
+        _ => {
+            let exps = artifacts::matrix_experiments_opt(cores, &ArtifactOptions::default());
+            let runs = Sweep::new().run(&exps).unwrap_or_else(|e| panic!("{e}"));
+            artifacts::by_id("figure13")
+                .expect("registered")
+                .render(&runs)
+                .unwrap_or_else(|e| panic!("{e}"))
+                .to_markdown()
         }
     }
-    s += if cores == 1 {
-        "\npaper: 1.7× to >6× from SSR+FREP.\n"
-    } else {
-        "\npaper: 1.29× to 6.45× from SSR+FREP.\n"
-    };
-    s
-}
-
-/// Fig. 12: octa-core vs single-core speed-up per kernel × variant.
-pub fn figure12() -> String {
-    let single = run_matrix(1);
-    let multi = run_matrix(8);
-    let mut s = String::from(
-        "## Fig. 12 — multi-core (8) speed-up over single core\n\n\
-         | kernel | variant | 1-core cycles | 8-core cycles | speed-up |\n|---|---|---|---|---|\n",
-    );
-    for k in kernels::all_kernels() {
-        for &v in k.variants {
-            let a = single[&(k.name, v)].cycles;
-            let b = multi[&(k.name, v)].cycles;
-            s += &format!(
-                "| {} | {} | {a} | {b} | {:.2}× |\n",
-                k.name,
-                v.label(),
-                a as f64 / b as f64
-            );
-        }
-    }
-    s += "\npaper: 3× to 8× depending on kernel (ideal 8 for conv2d+SSR, kNN).\n";
-    s
 }
 
 /// Fig. 10: hierarchical area distribution.
 pub fn figure10() -> String {
-    let a = cluster_area(&ClusterConfig::default());
-    format!(
-        "## Fig. 10 — cluster area distribution (model)\n\n{}\n\
-         paper: 3.3 MGE total; TCDM 34 %, I$ 10 %, integer cores 5 %, FPUs 23 %.\n",
-        a.render()
-    )
+    artifact_markdown("figure10")
 }
 
 /// Fig. 11: integer-core configuration area sweep.
 pub fn figure11() -> String {
-    use crate::cluster::config::{IsaVariant, RfImpl};
-    let mut s = String::from(
-        "## Fig. 11 — integer core area by configuration (kGE)\n\n\
-         | ISA | RF | PMCs | kGE |\n|---|---|---|---|\n",
-    );
-    for isa in [IsaVariant::Rv32E, IsaVariant::Rv32I] {
-        for rf in [RfImpl::Latch, RfImpl::FlipFlop] {
-            for pmc in [false, true] {
-                s += &format!(
-                    "| {isa:?} | {rf:?} | {pmc} | {:.1} |\n",
-                    core_area(isa, rf, pmc)
-                );
-            }
-        }
-    }
-    s += "\npaper: 9 kGE (RV32E, latch, no PMC) to 21 kGE (RV32I, FF, PMC).\n";
-    s
+    artifact_markdown("figure11")
+}
+
+/// Fig. 12: octa-core vs single-core speed-up per kernel × variant.
+pub fn figure12() -> String {
+    artifact_markdown("figure12")
 }
 
 /// Fig. 14: power breakdown of DGEMM 32² SSR+FREP on 8 cores.
 pub fn figure14() -> String {
-    let k = kernels::kernel_by_name("dgemm").unwrap();
-    let r = run(k, Variant::SsrFrep, 32, 8);
-    let p = model::power_report(&r.stats, &ClusterConfig::default(), &model::EnergyModel::default());
-    format!(
-        "## Fig. 14 — power breakdown, DGEMM 32×32 + SSR + FREP (8 cores)\n\n{}\n\
-         paper: 171 mW total; FPU 42 %, integer cores 1 %, SSR <4 %, FREP <1 %, I$ 4.8 mW.\n",
-        p.render()
-    )
+    artifact_markdown("figure14")
 }
 
 /// Fig. 15 + Fig. 16: per-kernel power and energy efficiency (8 cores).
 pub fn figure15_16() -> String {
-    let matrix = run_matrix(8);
-    let cfg = ClusterConfig::default();
-    let em = model::EnergyModel::default();
-    let mut s = String::from(
-        "## Fig. 15/16 — power and energy efficiency (8 cores)\n\n\
-         | kernel variant | power [mW] | DPGflop/s | DPGflop/s/W | gain vs baseline |\n\
-         |---|---|---|---|---|\n",
-    );
-    for k in kernels::all_kernels() {
-        let base_eff = {
-            let r = &matrix[&(k.name, Variant::Baseline)];
-            let p = model::power_report(&r.stats, &cfg, &em).total();
-            let fl: u64 = r.stats.cores.iter().map(|c| c.flops).sum();
-            model::efficiency_gflops_w(fl, r.stats.cycles, p)
-        };
-        for &v in k.variants {
-            let r = &matrix[&(k.name, v)];
-            let p = model::power_report(&r.stats, &cfg, &em).total();
-            let fl: u64 = r.stats.cores.iter().map(|c| c.flops).sum();
-            let gf = fl as f64 / r.stats.cycles as f64;
-            let eff = model::efficiency_gflops_w(fl, r.stats.cycles, p);
-            s += &format!(
-                "| {} {} | {p:.0} | {gf:.2} | {eff:.1} | {:.2}× |\n",
-                k.name,
-                v.label(),
-                eff / base_eff
-            );
-        }
-    }
-    s += "\npaper: up to ~80 DPGflop/s/W peak; efficiency gains 1.5–4.9×.\n";
-    s
+    artifact_markdown("figure15_16")
 }
 
 /// Fig. 6-style dual-issue trace of the dot-product kernel.
@@ -468,7 +467,7 @@ pub fn trace_kernel(name: &str, v: Variant, n: usize) -> String {
     let k = kernels::kernel_by_name(name).unwrap_or_else(|| panic!("unknown kernel {name}"));
     let p = Params::new(n, 1);
     let prog = kernels::cached_program(k, v, &p);
-    let mut cfg = ClusterConfig::with_cores(1);
+    let mut cfg = crate::cluster::ClusterConfig::with_cores(1);
     cfg.trace = true;
     let mut cl = crate::cluster::Cluster::new(cfg);
     cl.load(&prog);
@@ -497,28 +496,6 @@ pub fn validate_goldens() -> crate::Result<String> {
 /// unavailability — callers that want to tolerate a missing PJRT backend
 /// catch the [`crate::runtime::GoldenRuntime::new`] error, not these.
 pub fn validate_goldens_with(rt: &crate::runtime::GoldenRuntime) -> crate::Result<String> {
-    let mut s = String::from("## golden validation (simulated vs AOT JAX/Pallas via PJRT)\n\n");
-    let cases: Vec<(&str, usize, Variant)> = vec![
-        ("dot", 256, Variant::SsrFrep),
-        ("dot", 1024, Variant::Ssr),
-        ("relu", 1024, Variant::SsrFrep),
-        ("axpy", 1024, Variant::Ssr),
-        ("dgemm", 16, Variant::SsrFrep),
-        ("dgemm", 32, Variant::SsrFrep),
-        ("conv2d", 32, Variant::SsrFrep),
-        ("knn", 1024, Variant::SsrFrep),
-        ("fft", 256, Variant::SsrFrep),
-    ];
-    for (name, n, v) in cases {
-        let k = kernels::kernel_by_name(name).unwrap();
-        let p = Params::new(n, 8);
-        let r = kernels::run_kernel(k, v, &p)?;
-        let mut io = (k.io)(&r.cluster, &p);
-        if name == "fft" {
-            io.inputs.truncate(1);
-        }
-        let err = rt.validate(name, n, &io, 1e-8, 1e-9)?;
-        s += &format!("| {name} n={n} {} | max err {err:.2e} | OK |\n", v.label());
-    }
-    Ok(s)
+    let runs = Sweep::new().run(&artifacts::validate_experiments())?;
+    Ok(artifacts::validate_render_with(rt, &runs)?.to_markdown())
 }

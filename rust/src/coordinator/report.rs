@@ -1,0 +1,358 @@
+//! Typed result tables and multi-format renderers.
+//!
+//! Every number the evaluation produces flows through a [`Table`] of
+//! typed [`Value`] cells before any presentation happens. The three
+//! renderers are hand-rolled (the offline build has no serde):
+//!
+//! * [`Table::to_markdown`] — the paper-style block the `repro` CLI and
+//!   the benches print. For every artifact in
+//!   [`super::artifacts`] this output is **byte-identical** to the
+//!   pre-redesign `table_*` / `figure_*` strings (pinned by the golden
+//!   test in `tests/report_api.rs`).
+//! * [`Table::to_csv`] — data-only (no title/notes): a header record
+//!   when the table has named columns, then one record per row. Fields
+//!   are quoted per RFC 4180 when they contain `,`, `"` or a newline;
+//!   numeric cells are emitted at their declared precision without
+//!   padding or unit suffixes.
+//! * [`Table::to_json`] — one object
+//!   `{id, title, columns, rows, notes}` with rows as arrays of
+//!   numbers / strings / nulls, for plotting and `BENCH_*.json`-style
+//!   trajectory diffing.
+//!
+//! ## Renderer contract
+//!
+//! A markdown cell renders exactly as the legacy `format!` call that
+//! produced it: [`Value::Float`] carries the precision, the minimum
+//! width (numeric right-alignment, as in `{v:8.0}`) and a unit suffix
+//! (`"×"`, `"%"`), so the typed path and the legacy string path cannot
+//! drift apart. CSV and JSON strip width and suffix and keep the
+//! precision, so `1.29×` in markdown is the number `1.29` to machines.
+
+/// Fixed-precision numeric cell: `value` printed with `precision`
+/// fractional digits; in markdown additionally right-aligned to
+/// `width` columns (0 = natural width) and followed by `suffix`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Num {
+    pub value: f64,
+    pub precision: usize,
+    pub width: usize,
+    pub suffix: &'static str,
+}
+
+/// One typed table cell.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// Free-form text (labels, pre-formatted literals from the paper).
+    Str(String),
+    /// Exact integer (cycle counts, sizes, core counts).
+    Int(i64),
+    /// Fixed-precision float (see [`Num`]).
+    Float(Num),
+    /// No value for this cell: `—` in markdown, empty in CSV, `null`
+    /// in JSON.
+    Missing,
+}
+
+impl Value {
+    pub fn str(s: impl Into<String>) -> Value {
+        Value::Str(s.into())
+    }
+
+    pub fn int(i: i64) -> Value {
+        Value::Int(i)
+    }
+
+    /// Float at `precision` fractional digits, natural width, no suffix.
+    pub fn float(value: f64, precision: usize) -> Value {
+        Value::float_fmt(value, precision, 0, "")
+    }
+
+    /// Float with full markdown formatting control (see [`Num`]).
+    pub fn float_fmt(value: f64, precision: usize, width: usize, suffix: &'static str) -> Value {
+        Value::Float(Num { value, precision, width, suffix })
+    }
+
+    /// The markdown rendering of this cell (exactly the legacy
+    /// `format!` output it replaced).
+    pub fn to_markdown(&self) -> String {
+        match self {
+            Value::Str(s) => s.clone(),
+            Value::Int(i) => i.to_string(),
+            Value::Float(n) => {
+                format!("{:w$.p$}{}", n.value, n.suffix, w = n.width, p = n.precision)
+            }
+            Value::Missing => "—".to_string(),
+        }
+    }
+
+    /// The machine rendering (CSV field before quoting): precision kept,
+    /// width/suffix dropped, missing empty.
+    fn to_plain(&self) -> String {
+        match self {
+            Value::Str(s) => s.clone(),
+            Value::Int(i) => i.to_string(),
+            Value::Float(n) => format!("{:.p$}", n.value, p = n.precision),
+            Value::Missing => String::new(),
+        }
+    }
+
+    /// The JSON rendering of this cell (a complete JSON value).
+    fn to_json(&self) -> String {
+        match self {
+            Value::Str(s) => json_string(s),
+            Value::Int(i) => i.to_string(),
+            Value::Float(n) if n.value.is_finite() => format!("{:.p$}", n.value, p = n.precision),
+            Value::Float(_) => "null".to_string(),
+            Value::Missing => "null".to_string(),
+        }
+    }
+}
+
+/// One rendered artifact: a titled table of typed cells plus an
+/// optional trailing note (the "paper: …" comparison line).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Table {
+    /// Stable artifact id (`"table2"`, `"figure9"`, …).
+    pub id: String,
+    /// Title without the markdown `## ` prefix.
+    pub title: String,
+    /// Column headers; empty = header-less table (the golden-validation
+    /// report renders rows without a header line, as before).
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<Value>>,
+    pub notes: Option<String>,
+}
+
+impl Table {
+    pub fn new(id: impl Into<String>, title: impl Into<String>) -> Table {
+        Table {
+            id: id.into(),
+            title: title.into(),
+            columns: Vec::new(),
+            rows: Vec::new(),
+            notes: None,
+        }
+    }
+
+    pub fn with_columns(mut self, columns: &[&str]) -> Table {
+        self.columns = columns.iter().map(|c| c.to_string()).collect();
+        self
+    }
+
+    pub fn with_notes(mut self, notes: impl Into<String>) -> Table {
+        self.notes = Some(notes.into());
+        self
+    }
+
+    pub fn push_row(&mut self, row: Vec<Value>) {
+        self.rows.push(row);
+    }
+
+    /// The markdown block: `## title`, header (if any), rows, notes.
+    /// Byte-identical to the legacy string builders for every artifact.
+    pub fn to_markdown(&self) -> String {
+        let mut s = format!("## {}\n\n", self.title);
+        if !self.columns.is_empty() {
+            s += &md_row(self.columns.iter().map(String::as_str));
+            s += &format!("|{}\n", "---|".repeat(self.columns.len()));
+        }
+        for row in &self.rows {
+            let cells: Vec<String> = row.iter().map(Value::to_markdown).collect();
+            s += &md_row(cells.iter().map(String::as_str));
+        }
+        if let Some(notes) = &self.notes {
+            s += &format!("\n{notes}\n");
+        }
+        s
+    }
+
+    /// Data-only CSV: header record (when columns are named) + one
+    /// record per row; title and notes are presentation and are dropped.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::new();
+        if !self.columns.is_empty() {
+            let header: Vec<String> = self.columns.iter().map(|c| csv_field(c)).collect();
+            s += &header.join(",");
+            s.push('\n');
+        }
+        for row in &self.rows {
+            let fields: Vec<String> = row.iter().map(|v| csv_field(&v.to_plain())).collect();
+            s += &fields.join(",");
+            s.push('\n');
+        }
+        s
+    }
+
+    /// The complete table as one JSON object
+    /// `{id, title, columns, rows, notes}`; numeric cells are JSON
+    /// numbers at their declared precision, missing cells are `null`.
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\n");
+        s += &format!("  \"id\": {},\n", json_string(&self.id));
+        s += &format!("  \"title\": {},\n", json_string(&self.title));
+        let cols: Vec<String> = self.columns.iter().map(|c| json_string(c)).collect();
+        s += &format!("  \"columns\": [{}],\n", cols.join(", "));
+        s += "  \"rows\": [\n";
+        for (i, row) in self.rows.iter().enumerate() {
+            let cells: Vec<String> = row.iter().map(Value::to_json).collect();
+            let sep = if i + 1 == self.rows.len() { "" } else { "," };
+            s += &format!("    [{}]{sep}\n", cells.join(", "));
+        }
+        s += "  ],\n";
+        match &self.notes {
+            Some(n) => s += &format!("  \"notes\": {}\n", json_string(n)),
+            None => s += "  \"notes\": null\n",
+        }
+        s += "}\n";
+        s
+    }
+
+    /// Render in `format` (the CLI's `--format` dispatch).
+    pub fn render(&self, format: Format) -> String {
+        match format {
+            Format::Markdown => self.to_markdown(),
+            Format::Csv => self.to_csv(),
+            Format::Json => self.to_json(),
+        }
+    }
+}
+
+/// Output format selector (`--format md|csv|json`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Format {
+    #[default]
+    Markdown,
+    Csv,
+    Json,
+}
+
+impl Format {
+    /// Parse a CLI spelling.
+    pub fn parse(s: &str) -> Option<Format> {
+        match s {
+            "md" | "markdown" => Some(Format::Markdown),
+            "csv" => Some(Format::Csv),
+            "json" => Some(Format::Json),
+            _ => None,
+        }
+    }
+}
+
+/// One markdown table row. Non-empty cells are padded with one space on
+/// each side; an empty cell collapses to a single space (`| |`), exactly
+/// as the legacy `format!("| … | | |")` literals did.
+fn md_row<'a>(cells: impl Iterator<Item = &'a str>) -> String {
+    let mut s = String::from("|");
+    for cell in cells {
+        if cell.is_empty() {
+            s.push(' ');
+        } else {
+            s += &format!(" {cell} ");
+        }
+        s.push('|');
+    }
+    s.push('\n');
+    s
+}
+
+/// RFC 4180 field quoting: wrap in quotes when the text contains a
+/// comma, a quote or a line break; double embedded quotes.
+fn csv_field(text: &str) -> String {
+    if text.contains(',') || text.contains('"') || text.contains('\n') || text.contains('\r') {
+        format!("\"{}\"", text.replace('"', "\"\""))
+    } else {
+        text.to_string()
+    }
+}
+
+/// JSON string literal with the mandatory escapes.
+fn json_string(text: &str) -> String {
+    let mut s = String::with_capacity(text.len() + 2);
+    s.push('"');
+    for c in text.chars() {
+        match c {
+            '"' => s.push_str("\\\""),
+            '\\' => s.push_str("\\\\"),
+            '\n' => s.push_str("\\n"),
+            '\r' => s.push_str("\\r"),
+            '\t' => s.push_str("\\t"),
+            c if (c as u32) < 0x20 => s += &format!("\\u{:04x}", c as u32),
+            c => s.push(c),
+        }
+    }
+    s.push('"');
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Table {
+        let mut t = Table::new("t", "Sample — title").with_columns(&["a", "b", "c"]);
+        t.push_row(vec![Value::str("x"), Value::float(1.2345, 2), Value::int(-7)]);
+        t.push_row(vec![Value::str(""), Value::Missing, Value::float_fmt(3.5, 1, 6, "%")]);
+        t.with_notes("paper: note.")
+    }
+
+    #[test]
+    fn markdown_matches_legacy_formatting() {
+        let md = sample().to_markdown();
+        assert_eq!(
+            md,
+            "## Sample — title\n\n\
+             | a | b | c |\n|---|---|---|\n\
+             | x | 1.23 | -7 |\n\
+             | | — |    3.5% |\n\
+             \npaper: note.\n"
+        );
+    }
+
+    #[test]
+    fn float_width_right_aligns_like_legacy_format() {
+        // The legacy area table used `{v:8.0}`; the typed cell must
+        // render the same bytes.
+        let v = Value::float_fmt(123.0, 0, 8, "");
+        assert_eq!(v.to_markdown(), format!("{:8.0}", 123.0));
+        let pct = Value::float_fmt(34.25, 1, 5, "%");
+        assert_eq!(pct.to_markdown(), format!("{:5.1}%", 34.25));
+    }
+
+    #[test]
+    fn headerless_table_renders_rows_only() {
+        let mut t = Table::new("v", "golden validation");
+        t.push_row(vec![Value::str("dot n=256"), Value::str("OK")]);
+        assert_eq!(t.to_markdown(), "## golden validation\n\n| dot n=256 | OK |\n");
+    }
+
+    #[test]
+    fn csv_quotes_and_strips_presentation() {
+        let mut t = Table::new("t", "ignored").with_columns(&["k, v", "n"]);
+        t.push_row(vec![Value::str("a \"quoted\" cell"), Value::float_fmt(1.5, 2, 8, "×")]);
+        t.push_row(vec![Value::Missing, Value::int(3)]);
+        let csv = t.with_notes("dropped").to_csv();
+        assert_eq!(csv, "\"k, v\",n\n\"a \"\"quoted\"\" cell\",1.50\n,3\n");
+    }
+
+    #[test]
+    fn json_escapes_and_nulls() {
+        let mut t = Table::new("id", "a \"b\"\nc");
+        t.columns = vec!["x".to_string()];
+        t.push_row(vec![Value::Missing]);
+        t.push_row(vec![Value::float(2.0, 1)]);
+        let j = t.to_json();
+        assert!(j.contains("\"title\": \"a \\\"b\\\"\\nc\""), "{j}");
+        assert!(j.contains("[null],"), "{j}");
+        assert!(j.contains("[2.0]"), "{j}");
+        assert!(j.contains("\"notes\": null"), "{j}");
+    }
+
+    #[test]
+    fn format_parses_cli_spellings() {
+        assert_eq!(Format::parse("md"), Some(Format::Markdown));
+        assert_eq!(Format::parse("markdown"), Some(Format::Markdown));
+        assert_eq!(Format::parse("csv"), Some(Format::Csv));
+        assert_eq!(Format::parse("json"), Some(Format::Json));
+        assert_eq!(Format::parse("yaml"), None);
+    }
+}

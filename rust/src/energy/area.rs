@@ -96,23 +96,33 @@ impl AreaBreakdown {
             / n_cores
     }
 
+    /// The hierarchy as (component, kGE) rows in Fig. 10 presentation
+    /// order — the single source for [`AreaBreakdown::render`] and the
+    /// `figure10` artifact renderer.
+    pub fn components(&self) -> [(&'static str, f64); 12] {
+        [
+            ("integer cores (all)", self.int_cores),
+            ("FPUs (all)", self.fpus),
+            ("FP-SS other (RF+LSU)", self.fp_ss_other),
+            ("SSR streamers", self.ssr),
+            ("FREP sequencers", self.frep),
+            ("CC misc (L0 I$, ifaces)", self.cc_misc),
+            ("TCDM SRAM", self.tcdm_sram),
+            ("TCDM interconnect", self.tcdm_xbar),
+            ("atomic units", self.atomics),
+            ("L1 I$", self.l1i),
+            ("mul/div units", self.muldiv),
+            ("cluster misc (AXI, periph)", self.misc),
+        ]
+    }
+
     /// Markdown table of the hierarchy with percentages (Fig. 10).
     pub fn render(&self) -> String {
         let t = self.total();
-        let row = |name: &str, v: f64| format!("| {name} | {v:8.0} | {:5.1}% |\n", 100.0 * v / t);
         let mut s = String::from("| component | kGE | share |\n|---|---|---|\n");
-        s += &row("integer cores (all)", self.int_cores);
-        s += &row("FPUs (all)", self.fpus);
-        s += &row("FP-SS other (RF+LSU)", self.fp_ss_other);
-        s += &row("SSR streamers", self.ssr);
-        s += &row("FREP sequencers", self.frep);
-        s += &row("CC misc (L0 I$, ifaces)", self.cc_misc);
-        s += &row("TCDM SRAM", self.tcdm_sram);
-        s += &row("TCDM interconnect", self.tcdm_xbar);
-        s += &row("atomic units", self.atomics);
-        s += &row("L1 I$", self.l1i);
-        s += &row("mul/div units", self.muldiv);
-        s += &row("cluster misc (AXI, periph)", self.misc);
+        for (name, v) in self.components() {
+            s += &format!("| {name} | {v:8.0} | {:5.1}% |\n", 100.0 * v / t);
+        }
         s += &format!("| **total** | {t:8.0} | 100% |\n");
         s
     }

@@ -105,21 +105,31 @@ impl PowerBreakdown {
             / self.total()
     }
 
+    /// The breakdown as (component, mW) rows in Fig. 14 presentation
+    /// order — the single source for [`PowerBreakdown::render`] and the
+    /// `figure14` artifact renderer.
+    pub fn components(&self) -> [(&'static str, f64); 11] {
+        [
+            ("FPUs", self.fpu),
+            ("FP-SS other", self.fpss_other),
+            ("integer cores", self.int_cores),
+            ("SSR", self.ssr),
+            ("FREP", self.frep),
+            ("I$ (L0+L1)", self.icache),
+            ("TCDM SRAM", self.tcdm_sram),
+            ("TCDM interconnect", self.interconnect),
+            ("mul/div", self.muldiv),
+            ("clock tree / idle", self.idle),
+            ("leakage", self.leakage),
+        ]
+    }
+
     pub fn render(&self) -> String {
         let t = self.total();
-        let row = |name: &str, v: f64| format!("| {name} | {v:7.1} | {:5.1}% |\n", 100.0 * v / t);
         let mut s = String::from("| component | mW | share |\n|---|---|---|\n");
-        s += &row("FPUs", self.fpu);
-        s += &row("FP-SS other", self.fpss_other);
-        s += &row("integer cores", self.int_cores);
-        s += &row("SSR", self.ssr);
-        s += &row("FREP", self.frep);
-        s += &row("I$ (L0+L1)", self.icache);
-        s += &row("TCDM SRAM", self.tcdm_sram);
-        s += &row("TCDM interconnect", self.interconnect);
-        s += &row("mul/div", self.muldiv);
-        s += &row("clock tree / idle", self.idle);
-        s += &row("leakage", self.leakage);
+        for (name, v) in self.components() {
+            s += &format!("| {name} | {v:7.1} | {:5.1}% |\n", 100.0 * v / t);
+        }
         s += &format!("| **total** | {t:7.1} | 100% |\n");
         s
     }

@@ -90,16 +90,33 @@ pub struct Params {
     /// [`DEFAULT_MAX_CYCLES`]; long sweeps and tests can bound runs
     /// explicitly via [`Params::with_max_cycles`]).
     pub max_cycles: u64,
+    /// Keep the final [`Cluster`] (TCDM + memories — megabytes per
+    /// slot) in [`RunResult::cluster`]. Off by default so wide sweep
+    /// matrices hold only stats; golden validation and I/O extraction
+    /// opt in via [`Params::with_cluster`].
+    pub keep_cluster: bool,
 }
 
 impl Params {
     pub fn new(n: usize, cores: usize) -> Params {
-        Params { n, cores, seed: 0x5EED_0001, max_cycles: DEFAULT_MAX_CYCLES }
+        Params {
+            n,
+            cores,
+            seed: 0x5EED_0001,
+            max_cycles: DEFAULT_MAX_CYCLES,
+            keep_cluster: false,
+        }
     }
 
     /// Same parameters with an explicit simulation budget.
     pub fn with_max_cycles(mut self, max_cycles: u64) -> Params {
         self.max_cycles = max_cycles;
+        self
+    }
+
+    /// Same parameters, keeping the final cluster state in the result.
+    pub fn with_cluster(mut self) -> Params {
+        self.keep_cluster = true;
         self
     }
 }
@@ -192,7 +209,10 @@ pub struct RunResult {
     pub stats: crate::cluster::ClusterStats,
     /// Max |error| vs the host reference.
     pub max_err: f64,
-    pub cluster: Cluster,
+    /// The final cluster state (TCDM contents, memories) — present only
+    /// when the run was parameterized with [`Params::with_cluster`];
+    /// boxed so a default [`RunResult`] stays small in wide sweeps.
+    pub cluster: Option<Box<Cluster>>,
 }
 
 /// Load (from the program cache), simulate and check one
@@ -228,7 +248,7 @@ pub fn run_kernel(
         cycles: stats.cluster_region_cycles(),
         stats,
         max_err,
-        cluster: cl,
+        cluster: if params.keep_cluster { Some(Box::new(cl)) } else { None },
     })
 }
 
@@ -389,6 +409,22 @@ mod tests {
         assert!(e.contains("did not finish"), "{e}");
         // Default budget still succeeds.
         assert!(run_kernel(k, Variant::Baseline, &Params::new(256, 1)).is_ok());
+    }
+
+    /// The final cluster state ships only on request: a default sweep
+    /// slot holds stats, not a TCDM image.
+    #[test]
+    fn cluster_state_is_opt_in() {
+        let k = kernel_by_name("dot").unwrap();
+        let lean = run_kernel(k, Variant::Ssr, &Params::new(256, 1)).unwrap();
+        assert!(lean.cluster.is_none(), "cluster retained without with_cluster()");
+        let full = run_kernel(k, Variant::Ssr, &Params::new(256, 1).with_cluster()).unwrap();
+        let cl = full.cluster.as_deref().expect("cluster requested");
+        // The retained state is the real post-run cluster: the kernel's
+        // I/O extractor works against it.
+        let io = (k.io)(cl, &full.params);
+        assert_eq!(io.output.len(), 1, "dot product reduces to one value");
+        assert_eq!(lean.cycles, full.cycles, "retention must not change timing");
     }
 
     #[test]

@@ -42,10 +42,13 @@
 //!   configuration assembles exactly once per process.
 //! * [`runtime`] — PJRT golden-model execution of the AOT-lowered JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) used to validate simulated results.
-//! * [`coordinator`] — experiment registry and sweep driver regenerating
-//!   every table and figure of the paper's evaluation, fanning independent
-//!   experiments out over a bounded worker pool (`--jobs N`) with
-//!   deterministic result ordering.
+//! * [`coordinator`] — the typed evaluation API: an artifact registry
+//!   ([`coordinator::artifacts`]) declaring every table/figure of the
+//!   paper's evaluation as an experiment list + renderer, typed result
+//!   tables ([`coordinator::report`]) rendering to markdown / CSV /
+//!   JSON, and [`coordinator::Sweep`] sessions fanning independent
+//!   experiments out over a bounded worker pool with deterministic
+//!   result ordering and per-session width/budget/progress options.
 //!
 //! See `DESIGN.md` for the cycle-engine contract, the per-experiment
 //! index, and the hardware→simulation substitution rationale.

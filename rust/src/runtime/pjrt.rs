@@ -103,9 +103,9 @@ mod tests {
     fn dot_golden_validates_simulation() {
         let rt = runtime();
         let k = kernels::kernel_by_name("dot").unwrap();
-        let p = Params::new(256, 1);
+        let p = Params::new(256, 1).with_cluster();
         let r = kernels::run_kernel(k, Variant::SsrFrep, &p).unwrap();
-        let io = (k.io)(&r.cluster, &p);
+        let io = (k.io)(r.cluster.as_deref().unwrap(), &p);
         let err = rt.validate("dot", 256, &io, 1e-9, 1e-9).unwrap();
         assert!(err < 1e-9, "err {err}");
     }
@@ -115,9 +115,9 @@ mod tests {
         let rt = runtime();
         let k = kernels::kernel_by_name("dgemm").unwrap();
         for v in [Variant::Baseline, Variant::Ssr, Variant::SsrFrep] {
-            let p = Params::new(16, 8);
+            let p = Params::new(16, 8).with_cluster();
             let r = kernels::run_kernel(k, v, &p).unwrap();
-            let io = (k.io)(&r.cluster, &p);
+            let io = (k.io)(r.cluster.as_deref().unwrap(), &p);
             let err = rt.validate("dgemm", 16, &io, 1e-11, 1e-12).unwrap();
             assert!(err < 1e-11, "{v:?}: err {err}");
         }
@@ -133,9 +133,9 @@ mod tests {
             ("axpy", 256, Variant::Ssr),
         ] {
             let k = kernels::kernel_by_name(name).unwrap();
-            let p = Params::new(n, 8);
+            let p = Params::new(n, 8).with_cluster();
             let r = kernels::run_kernel(k, v, &p).unwrap();
-            let io = (k.io)(&r.cluster, &p);
+            let io = (k.io)(r.cluster.as_deref().unwrap(), &p);
             let err = rt.validate(name, n, &io, 1e-8, 1e-9).unwrap();
             assert!(err < 1e-8, "{name}: err {err}");
         }
@@ -145,9 +145,9 @@ mod tests {
     fn fft_golden_validates_simulation() {
         let rt = runtime();
         let k = kernels::kernel_by_name("fft").unwrap();
-        let p = Params::new(256, 8);
+        let p = Params::new(256, 8).with_cluster();
         let r = kernels::run_kernel(k, Variant::SsrFrep, &p).unwrap();
-        let mut io = (k.io)(&r.cluster, &p);
+        let mut io = (k.io)(r.cluster.as_deref().unwrap(), &p);
         // The golden takes only the input signal (twiddles are internal).
         io.inputs.truncate(1);
         let err = rt.validate("fft", 256, &io, 1e-9, 1e-9).unwrap();

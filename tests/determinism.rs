@@ -1,15 +1,21 @@
-//! Engine and sweep determinism (the ISSUE 1 acceptance criteria): the
-//! same assembled program yields identical final cycle count, stats, and
-//! trace-event hash whether driven by the hand-ordered reference loop
-//! (`Cluster::cycle_direct`), the `ClockDomain` schedule (`Cluster::cycle`),
-//! or inside a multi-worker coordinator sweep — and sweep *rendering* is
-//! byte-identical for every `--jobs` width.
+//! Engine and sweep determinism: the same assembled program yields
+//! identical final cycle count, stats, and trace-event hash whether
+//! driven by the hand-ordered reference loop (`Cluster::cycle_direct`),
+//! the `ClockDomain` schedule (`Cluster::cycle`), or inside a
+//! multi-worker `Sweep` session — and artifact *rendering* is
+//! byte-identical for every session width (jobs ∈ {1, 2, 8}).
 
 use snitch_sim::asm::assemble;
 use snitch_sim::cluster::{Cluster, ClusterConfig};
-use snitch_sim::coordinator::{render_table2, run_sweep, Experiment};
-use snitch_sim::kernels::{self, Params, Variant};
+use snitch_sim::coordinator::{artifacts, Experiment, Sweep, SweepOptions};
+use snitch_sim::kernels::{self, Params, RunResult, Variant};
 use snitch_sim::sim::TraceSink;
+
+/// A session pinned to `jobs` workers (nothing global — see the
+/// isolation test in `tests/report_api.rs`).
+fn sweep_jobs(jobs: usize) -> Sweep {
+    Sweep::with_options(SweepOptions::new().jobs(jobs))
+}
 
 /// A 4-core program touching every clocked component: core 0 runs an
 /// SSR+FREP staggered dot product (I$, FP-SS, sequencer, both streamer
@@ -154,8 +160,8 @@ fn sweep_experiments() -> Vec<Experiment> {
 #[test]
 fn sweep_results_independent_of_worker_count() {
     let exps = sweep_experiments();
-    let serial = run_sweep(&exps, 1);
-    let jobs8 = run_sweep(&exps, 8);
+    let serial = sweep_jobs(1).run(&exps).expect("serial session");
+    let jobs8 = sweep_jobs(8).run(&exps).expect("jobs-8 session");
     for ((e, a), b) in exps.iter().zip(&serial).zip(&jobs8) {
         assert_eq!(a.cycles, b.cycles, "{e:?}: cycles");
         assert_eq!(a.stats.cycles, b.stats.cycles, "{e:?}: total cycles");
@@ -178,14 +184,17 @@ fn sweep_results_independent_of_worker_count() {
 
 #[test]
 fn table_rendering_byte_identical_across_jobs() {
-    // Table 2-style scaling set, trimmed to test-sized problems.
+    // Table 2-style scaling set, trimmed to test-sized problems,
+    // rendered through the artifact registry.
     let exps: Vec<Experiment> = [1usize, 2, 4, 8]
         .into_iter()
         .map(|c| Experiment::new("dgemm", Variant::SsrFrep, 16, c))
         .collect();
-    let serial = render_table2(&exps, &run_sweep(&exps, 1));
-    let jobs2 = render_table2(&exps, &run_sweep(&exps, 2));
-    let jobs8 = render_table2(&exps, &run_sweep(&exps, 8));
+    let table2 = artifacts::by_id("table2").expect("registered artifact");
+    let render = |runs: &[RunResult]| table2.render(runs).expect("render").to_markdown();
+    let serial = render(&sweep_jobs(1).run(&exps).unwrap());
+    let jobs2 = render(&sweep_jobs(2).run(&exps).unwrap());
+    let jobs8 = render(&sweep_jobs(8).run(&exps).unwrap());
     assert_eq!(serial, jobs2);
     assert_eq!(serial, jobs8);
 }

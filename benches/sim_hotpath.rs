@@ -5,13 +5,27 @@
 //! improves, plus program-construction throughput (text assemble vs
 //! typed builder vs program cache), the metric the codegen-IR refactor
 //! improves.
+//!
+//! The `cycles_per_sec` section is the checked-in perf baseline: it runs
+//! a multi-kernel matrix (dgemm/dot/conv2d × {1,8} cores × {+SSR,
+//! +SSR+FREP}) twice in the same process — once through the
+//! pre-optimization reference path (`Cluster::cycle_direct` on a fresh
+//! cluster per rep, full `done()` scan, byte-loop TCDM) and once through
+//! the optimized path (gated `Cluster::cycle` via a reused
+//! `ClusterPool`) — asserts both report identical final cycle counts,
+//! and writes the machine-readable `BENCH_PR4.json` speedup record.
+//!
+//! `-- --smoke` runs a reduced-size single-rep matrix, skips the JSON,
+//! and still fails on any optimized-vs-reference cycle disagreement
+//! (the CI `bench-smoke` job).
 
 use std::hint::black_box;
 use std::time::Instant;
 
 use snitch_sim::asm::assemble;
+use snitch_sim::cluster::Cluster;
 use snitch_sim::coordinator::{self, Experiment, Sweep, SweepOptions};
-use snitch_sim::kernels::{self, Params, Variant};
+use snitch_sim::kernels::{self, ClusterPool, KernelDef, Params, Variant};
 
 fn hotpath() {
     for (name, v, n, cores) in [
@@ -125,8 +139,210 @@ fn codegen_throughput() {
     }
 }
 
+// ---------------------------------------------------------------------
+// cycles_per_sec: optimized engine vs the pre-optimization reference
+// path, measured in the same run (the BENCH_PR4.json record).
+// ---------------------------------------------------------------------
+
+/// One benchmark configuration of the kernel matrix.
+struct BenchCase {
+    kernel: &'static str,
+    variant: Variant,
+    n: usize,
+    cores: usize,
+}
+
+impl BenchCase {
+    fn label(&self) -> String {
+        format!("{}/{}/n{}/{}c", self.kernel, self.variant.label(), self.n, self.cores)
+    }
+}
+
+fn bench_matrix(smoke: bool) -> Vec<BenchCase> {
+    let mut cases = Vec::new();
+    for (kernel, n) in [
+        ("dgemm", if smoke { 16 } else { 32 }),
+        ("dot", if smoke { 256 } else { 1024 }),
+        ("conv2d", if smoke { 16 } else { 32 }),
+    ] {
+        for cores in [1usize, 8] {
+            for variant in [Variant::Ssr, Variant::SsrFrep] {
+                cases.push(BenchCase { kernel, variant, n, cores });
+            }
+        }
+    }
+    cases
+}
+
+/// The pre-optimization hot path, replicated exactly: a fresh cluster
+/// per run, the ungated hand-ordered `cycle_direct` loop (byte-level
+/// TCDM accessors included) and the original full `done()` scan per
+/// cycle. Returns the final cycle count.
+fn run_reference(k: &'static KernelDef, case: &BenchCase, p: &Params) -> u64 {
+    let prog = kernels::cached_program(k, case.variant, p);
+    let mut cl = Cluster::new(kernels::config_for(k, case.variant, p));
+    cl.load(&prog);
+    (k.setup)(&mut cl, p);
+    while !cl.done() {
+        assert!(cl.now < p.max_cycles, "{}: reference run exceeded budget", case.label());
+        cl.cycle_direct();
+    }
+    (k.check)(&cl, p).unwrap_or_else(|e| panic!("{}: reference validation: {e}", case.label()));
+    cl.now
+}
+
+/// The optimized hot path: gated `Cluster::cycle` engine on a pooled,
+/// `Cluster::reset`-rewound cluster. Returns the final cycle count.
+fn run_engine(pool: &mut ClusterPool, k: &'static KernelDef, case: &BenchCase, p: &Params) -> u64 {
+    let r = kernels::run_kernel_pooled(pool, k, case.variant, p)
+        .unwrap_or_else(|e| panic!("{}: engine run: {e}", case.label()));
+    r.stats.cycles
+}
+
+struct BenchRow {
+    label: String,
+    n: usize,
+    cores: usize,
+    cycles: u64,
+    reference_ms: f64,
+    engine_ms: f64,
+}
+
+impl BenchRow {
+    fn reference_cps(&self, reps: u32) -> f64 {
+        self.cycles as f64 * f64::from(reps) / (self.reference_ms / 1e3)
+    }
+
+    fn engine_cps(&self, reps: u32) -> f64 {
+        self.cycles as f64 * f64::from(reps) / (self.engine_ms / 1e3)
+    }
+
+    fn speedup(&self) -> f64 {
+        self.reference_ms / self.engine_ms
+    }
+}
+
+/// Run the matrix through both paths, assert cycle-exactness, print the
+/// table, and (in full mode) write `BENCH_PR4.json`.
+fn cycles_per_sec(smoke: bool) {
+    let reps: u32 = if smoke { 1 } else { 3 };
+    let mut pool = ClusterPool::new();
+    let mut rows: Vec<BenchRow> = Vec::new();
+    for case in bench_matrix(smoke) {
+        let k = kernels::kernel_by_name(case.kernel).unwrap();
+        let p = Params::new(case.n, case.cores);
+        // Warm both paths once (program cache, page faults) outside the
+        // timed region, checking cycle-exactness on the way.
+        let ref_cycles = run_reference(k, &case, &p);
+        let eng_cycles = run_engine(&mut pool, k, &case, &p);
+        assert_eq!(
+            ref_cycles,
+            eng_cycles,
+            "{}: optimized engine and cycle_direct disagree on final cycle count",
+            case.label()
+        );
+
+        let t = Instant::now();
+        for _ in 0..reps {
+            assert_eq!(run_reference(k, &case, &p), ref_cycles, "{}", case.label());
+        }
+        let reference_ms = t.elapsed().as_secs_f64() * 1e3;
+
+        let t = Instant::now();
+        for _ in 0..reps {
+            assert_eq!(run_engine(&mut pool, k, &case, &p), ref_cycles, "{}", case.label());
+        }
+        let engine_ms = t.elapsed().as_secs_f64() * 1e3;
+
+        let row = BenchRow {
+            label: case.label(),
+            n: case.n,
+            cores: case.cores,
+            cycles: ref_cycles,
+            reference_ms,
+            engine_ms,
+        };
+        println!(
+            "[bench] cps/{}: direct {:.1} ms ({:.2} Mc/s), engine {:.1} ms ({:.2} Mc/s), {:.2}x",
+            row.label,
+            row.reference_ms,
+            row.reference_cps(reps) / 1e6,
+            row.engine_ms,
+            row.engine_cps(reps) / 1e6,
+            row.speedup(),
+        );
+        rows.push(row);
+    }
+    let total_ref: f64 = rows.iter().map(|r| r.reference_ms).sum();
+    let total_eng: f64 = rows.iter().map(|r| r.engine_ms).sum();
+    let overall = total_ref / total_eng;
+    println!(
+        "[bench] cps/total: direct {total_ref:.1} ms, engine {total_eng:.1} ms, {overall:.2}x \
+         ({} cases x{reps})",
+        rows.len()
+    );
+    if !smoke {
+        let json = render_bench_json(&rows, reps, total_ref, total_eng, overall);
+        std::fs::write("BENCH_PR4.json", json).expect("write BENCH_PR4.json");
+        println!("[bench] wrote BENCH_PR4.json");
+    }
+}
+
+/// Hand-rolled JSON (the crate is dependency-free).
+fn render_bench_json(
+    rows: &[BenchRow],
+    reps: u32,
+    total_ref: f64,
+    total_eng: f64,
+    overall: f64,
+) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"sim_hotpath/cycles_per_sec\",\n");
+    s.push_str("  \"regenerate\": \"cargo bench --bench sim_hotpath\",\n");
+    s.push_str(
+        "  \"baseline\": \"Cluster::cycle_direct (ungated, bytewise TCDM, fresh cluster per \
+         run) measured in the same process\",\n",
+    );
+    s.push_str(&format!("  \"reps\": {reps},\n"));
+    s.push_str("  \"kernels\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"kernel\": \"{}\", \"n\": {}, \"cores\": {}, \"cycles\": {}, \
+             \"direct_wall_ms\": {:.3}, \"direct_cycles_per_sec\": {:.0}, \
+             \"engine_wall_ms\": {:.3}, \"engine_cycles_per_sec\": {:.0}, \
+             \"speedup\": {:.3}}}{}\n",
+            r.label,
+            r.n,
+            r.cores,
+            r.cycles,
+            r.reference_ms,
+            r.reference_cps(reps),
+            r.engine_ms,
+            r.engine_cps(reps),
+            r.speedup(),
+            if i + 1 < rows.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str(&format!(
+        "  \"total\": {{\"direct_wall_ms\": {total_ref:.3}, \"engine_wall_ms\": \
+         {total_eng:.3}, \"speedup\": {overall:.3}}}\n"
+    ));
+    s.push_str("}\n");
+    s
+}
+
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    if smoke {
+        // CI bench-smoke: reduced sizes, single rep, no JSON — but the
+        // optimized-vs-reference cycle-count assertion still gates.
+        cycles_per_sec(true);
+        return;
+    }
     hotpath();
     sweep_throughput();
     codegen_throughput();
+    cycles_per_sec(false);
 }

@@ -125,9 +125,14 @@ pub fn tick(cl: &mut Cluster, idx: usize) {
     let cc = &mut ccs[idx];
 
     // ------------------------------------------------------------------
-    // 1. Collect memory responses from the previous cycle.
+    // 1. Collect memory responses from the previous cycle. A response
+    //    implies a registered owner (every submit sets one), so ports
+    //    without an owner need no lookup (§Perf).
     // ------------------------------------------------------------------
     for p in 0..2 {
+        if cc.port_owner[p].is_none() {
+            continue;
+        }
         if let Some(resp) = tcdm.take_response(2 * idx + p, now) {
             match cc.port_owner[p].take().expect("response without owner") {
                 PortOwner::IntLoad { rd, op } => {
@@ -140,13 +145,15 @@ pub fn tick(cl: &mut Cluster, idx: usize) {
             }
         }
     }
-    if let Some(resp) = ext.take_response(idx) {
-        match cc.ext_owner.take().expect("ext response without owner") {
-            ExtOwner::IntLoad { rd, op } => {
-                cc.wb_queue.push_back((rd, load_extend(op, resp.data)));
+    if cc.ext_owner.is_some() {
+        if let Some(resp) = ext.take_response(idx) {
+            match cc.ext_owner.take().expect("ext response without owner") {
+                ExtOwner::IntLoad { rd, op } => {
+                    cc.wb_queue.push_back((rd, load_extend(op, resp.data)));
+                }
+                ExtOwner::IntStore | ExtOwner::FpStore => {}
+                ExtOwner::FpLoad { frd, width } => cc.fpss.load_response(frd, width, resp.data),
             }
-            ExtOwner::IntStore | ExtOwner::FpStore => {}
-            ExtOwner::FpLoad { frd, width } => cc.fpss.load_response(frd, width, resp.data),
         }
     }
 
@@ -438,6 +445,7 @@ fn execute(
                     if off == periph::BARRIER {
                         cc.barrier_wait = Some(rd);
                         cc.core.mark_busy(rd);
+                        periph.barrier_waiters += 1;
                         return retire_int(cc, next, false);
                     }
                     let v = periph.read(off, now, cfg.tcdm_size, tcdm.conflict_cycles);

@@ -5,7 +5,7 @@ use crate::fpss::FpuLatency;
 
 /// Integer-core implementation options. These do not change timing — they
 //  change the area/energy models exactly as the paper's Fig. 11 explores.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum IsaVariant {
     /// RV32I: 31 general-purpose registers.
     Rv32I,
@@ -14,7 +14,7 @@ pub enum IsaVariant {
 }
 
 /// Register-file implementation choice (area/energy model input).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum RfImpl {
     /// D-latch based: ~50 % smaller.
     Latch,
@@ -25,7 +25,11 @@ pub enum RfImpl {
 /// Full cluster configuration. Default = the paper's evaluated octa-core
 /// cluster: 2 hives × 4 cores, 128 KiB TCDM in 32 banks (banking factor 2),
 /// 8 KiB shared instruction cache.
-#[derive(Debug, Clone, Copy)]
+///
+/// `Eq + Hash` because the full configuration is the reuse key of
+/// `kernels::ClusterPool`: two runs may share a warm cluster exactly when
+/// every knob matches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct ClusterConfig {
     pub num_hives: usize,
     pub cores_per_hive: usize,

@@ -34,7 +34,7 @@ use crate::isa::decode::decode;
 use crate::isa::Instr;
 use crate::mem::{ExtMemory, Tcdm, IMEM_BASE, IMEM_SIZE, TCDM_BASE};
 use crate::muldiv::MulDivUnit;
-use crate::sim::engine::tick_all;
+use crate::sim::engine::tick_all_active;
 use crate::sim::{ClockDomain, Cycle, Tick};
 
 pub use cc::CoreComplex;
@@ -60,10 +60,20 @@ impl LoadedProgram {
         }
     }
 
-    /// Decoded instruction at `pc` (None = not yet decoded / data).
+    /// Wipe back to [`LoadedProgram::empty`] contents, reusing the
+    /// existing buffers (the [`Cluster::reset`] building block).
+    fn clear(&mut self) {
+        self.imem.fill(0);
+        self.decoded.fill(None);
+        self.entry = 0;
+    }
+
+    /// Decoded instruction at `pc` (None = not yet decoded / data / below
+    /// the instruction-memory base — the checked subtraction keeps a wild
+    /// `pc` from wrapping into a bogus index in release builds).
     pub fn instr_at(&self, pc: u32) -> Option<Instr> {
-        let idx = ((pc - IMEM_BASE) / 4) as usize;
-        self.decoded.get(idx).copied().flatten()
+        let off = pc.checked_sub(IMEM_BASE)?;
+        self.decoded.get((off / 4) as usize).copied().flatten()
     }
 }
 
@@ -87,35 +97,96 @@ pub struct Cluster {
     pub trace: TraceSink,
     /// The cycle engine: the ordered phase schedule plus the clock.
     pub engine: ClockDomain<Cluster>,
+    /// Cores that have permanently retired from the simulation: halted,
+    /// fully drained ([`CoreComplex::quiet`]) and with no mul/div work in
+    /// flight. Nothing can re-activate such a core (halting is one-way),
+    /// so the gated `cores` phase skips them and [`Cluster::done`] checks
+    /// the count first. Maintained by the engine path ([`Cluster::cycle`]);
+    /// [`Cluster::cycle_direct`] deliberately leaves it untouched (flags
+    /// are conservative: unset just means "not proven retired").
+    retired: Vec<bool>,
+    retired_count: usize,
 }
 
-// ---- phase bodies of the default schedule (free functions so the
-// schedule stays `fn`-pointer data; see `sim::engine::Phase`) ----
+// ---- phase bodies and activity gates of the default schedule (free
+// functions so the schedule stays `fn`-pointer data; see
+// `sim::engine::Phase`). Every gate obeys the engine contract: it may
+// return `false` only when the phase body would change no observable
+// state this cycle (the invariants are spelled out in `DESIGN.md`
+// §"Performance"). ----
 
 fn phase_icache(cl: &mut Cluster, now: Cycle) {
-    tick_all(&mut cl.icaches, now);
+    tick_all_active(&mut cl.icaches, now);
+}
+
+fn gate_icache(cl: &Cluster) -> bool {
+    cl.icaches.iter().any(|ic| ic.active())
 }
 
 fn phase_ext_mem(cl: &mut Cluster, now: Cycle) {
     cl.ext.tick(now);
 }
 
+fn gate_ext_mem(cl: &Cluster) -> bool {
+    cl.ext.active()
+}
+
 fn phase_cores(cl: &mut Cluster, _now: Cycle) {
     for idx in 0..cl.ccs.len() {
+        if cl.retired[idx] {
+            continue;
+        }
         cc::tick(cl, idx);
+        // A halted core whose queues, ports, streams and mul/div work have
+        // all drained can never become active again — mark it retired so
+        // neither this loop nor `done()` looks at it next cycle.
+        let cc = &cl.ccs[idx];
+        if cc.core.halted && cc.quiet() {
+            let hive = idx / cl.cfg.cores_per_hive;
+            let local = idx % cl.cfg.cores_per_hive;
+            if !cl.muldivs[hive].has_work_for(local) {
+                cl.retired[idx] = true;
+                cl.retired_count += 1;
+            }
+        }
     }
 }
 
+fn gate_cores(cl: &Cluster) -> bool {
+    cl.retired_count < cl.ccs.len()
+}
+
 fn phase_muldiv(cl: &mut Cluster, now: Cycle) {
-    tick_all(&mut cl.muldivs, now);
+    tick_all_active(&mut cl.muldivs, now);
+}
+
+fn gate_muldiv(cl: &Cluster) -> bool {
+    cl.muldivs.iter().any(|md| md.active())
 }
 
 fn phase_tcdm(cl: &mut Cluster, now: Cycle) {
     cl.tcdm.tick(now);
 }
 
+fn gate_tcdm(cl: &Cluster) -> bool {
+    cl.tcdm.active()
+}
+
 fn phase_periph(cl: &mut Cluster, _now: Cycle) {
     periph::settle(cl);
+}
+
+fn gate_periph(cl: &Cluster) -> bool {
+    // The gate trusts `barrier_waiters`; verify it against the ground
+    // truth on every debug-build cycle, *before* gating — an undercount
+    // would otherwise skip `settle` (and any assert inside it) exactly
+    // when cores are parked, hanging them silently.
+    debug_assert_eq!(
+        cl.ccs.iter().filter(|cc| cc.barrier_wait.is_some()).count(),
+        cl.periph.barrier_waiters,
+        "barrier waiter count out of sync"
+    );
+    cl.periph.active()
 }
 
 impl Cluster {
@@ -134,21 +205,32 @@ impl Cluster {
             now: 0,
             trace: cfg.trace_sink(),
             engine: Cluster::default_schedule(),
+            retired: vec![false; n],
+            retired_count: 0,
             cfg,
         }
     }
 
     /// The canonical phase schedule (the cycle-ordering contract at the
-    /// top of this module). Registration order is execution order.
+    /// top of this module). Registration order is execution order; every
+    /// phase carries its activity gate (quiescent phases are skipped by
+    /// [`Cluster::cycle`] — unobservably, per the gating contract in
+    /// [`crate::sim::engine`]).
     pub fn default_schedule() -> ClockDomain<Cluster> {
         let mut d = ClockDomain::new();
-        d.register("icache", phase_icache);
-        d.register("ext-mem", phase_ext_mem);
-        d.register("cores", phase_cores);
-        d.register("muldiv", phase_muldiv);
-        d.register("tcdm", phase_tcdm);
-        d.register("periph", phase_periph);
+        d.register_gated("icache", phase_icache, gate_icache);
+        d.register_gated("ext-mem", phase_ext_mem, gate_ext_mem);
+        d.register_gated("cores", phase_cores, gate_cores);
+        d.register_gated("muldiv", phase_muldiv, gate_muldiv);
+        d.register_gated("tcdm", phase_tcdm, gate_tcdm);
+        d.register_gated("periph", phase_periph, gate_periph);
         d
+    }
+
+    /// Number of cores proven permanently finished by the gated engine
+    /// (diagnostics; `cycle_direct` does not maintain this).
+    pub fn retired_cores(&self) -> usize {
+        self.retired_count
     }
 
     /// Install a trace sink for this run (per-experiment tracing without
@@ -181,11 +263,7 @@ impl Cluster {
                         }
                     }
                 }
-                crate::mem::Region::Tcdm => {
-                    for (i, b) in seg.bytes.iter().enumerate() {
-                        self.tcdm.write(seg.base + i as u32, u64::from(*b), 1);
-                    }
-                }
+                crate::mem::Region::Tcdm => self.tcdm.load_slice(seg.base, &seg.bytes),
                 crate::mem::Region::Ext => self.ext.load(seg.base, &seg.bytes),
                 other => panic!("segment at {:#x} loads into {:?}", seg.base, other),
             }
@@ -201,6 +279,40 @@ impl Cluster {
         }
     }
 
+    /// Rewind the whole cluster to the state `Cluster::new(cfg)` +
+    /// `load(prog)` would produce, without reallocating the large buffers
+    /// (TCDM storage, instruction memory, decoded-program array, cache tag
+    /// arrays): clocks, cores, FP subsystems, streamer lanes, sequencers,
+    /// memories, peripherals, PMCs and the trace sink all return to their
+    /// power-on state, then `prog` is loaded.
+    ///
+    /// This is what lets sweep workers keep one warm cluster per
+    /// configuration shape instead of constructing a fresh one per
+    /// experiment (see `kernels::ClusterPool`); the determinism suite
+    /// holds a reused cluster byte-identical to a fresh one.
+    pub fn reset(&mut self, prog: &Program) {
+        let cfg = self.cfg;
+        for (i, cc) in self.ccs.iter_mut().enumerate() {
+            *cc = CoreComplex::new(i, &cfg);
+        }
+        self.tcdm.reset();
+        self.ext.reset();
+        for md in &mut self.muldivs {
+            md.reset();
+        }
+        for ic in &mut self.icaches {
+            ic.reset();
+        }
+        self.periph = Peripherals::new(cfg.num_cores());
+        self.program.clear();
+        self.now = 0;
+        self.trace.clear();
+        self.engine.reset_clock();
+        self.retired.fill(false);
+        self.retired_count = 0;
+        self.load(prog);
+    }
+
     /// Put cores `active..` directly into the halted state (e.g. to run a
     /// single-core experiment on a one-core configuration the paper style
     /// is to *instantiate* a smaller cluster; this is for tests).
@@ -210,27 +322,41 @@ impl Cluster {
         }
     }
 
-    /// Advance one clock cycle: run every phase of the engine schedule in
-    /// order, then advance the engine clock.
+    /// Advance one clock cycle: run every *active* phase of the engine
+    /// schedule in order, then advance the engine clock.
     ///
     /// The engine is embedded in the cluster it schedules, so this drives
     /// phases by index (each [`crate::sim::Phase`] is a `Copy` function
     /// pointer — no borrow of the engine is held across a phase call).
+    /// Phases whose gate reports them quiescent are skipped; by the gating
+    /// contract this is unobservable, and the determinism test holds this
+    /// path bit-identical to the ungated [`Cluster::cycle_direct`].
     pub fn cycle(&mut self) {
         let now = self.engine.now();
         debug_assert_eq!(self.now, now, "cluster clock out of sync with engine");
         for i in 0..self.engine.num_phases() {
             let phase = self.engine.phase(i);
-            (phase.run)(self, now);
+            let ran = match phase.active {
+                Some(gate) => gate(self),
+                None => true,
+            };
+            self.engine.note_phase(i, ran);
+            if ran {
+                (phase.run)(self, now);
+            }
         }
         self.engine.advance();
         self.now = self.engine.now();
     }
 
-    /// Reference implementation of one cycle: the hand-ordered component
-    /// sequence the engine schedule replaced. Kept (and exercised by the
-    /// engine-determinism test) as an executable specification that the
-    /// [`ClockDomain`] pass is a pure refactor of the original loop.
+    /// Reference implementation of one cycle: the hand-ordered, ungated
+    /// component sequence the engine schedule replaced — every component
+    /// ticks every cycle and the TCDM uses the original byte-loop storage
+    /// accessors ([`Tcdm::tick_bytewise`]). Kept (and exercised by the
+    /// engine-determinism tests) as an executable specification of the
+    /// pre-optimization hot path that the gated [`Cluster::cycle`] must
+    /// match bit for bit; it is also the baseline the
+    /// `benches/sim_hotpath.rs` speedup measurement runs against.
     pub fn cycle_direct(&mut self) {
         let now = self.now;
         for ic in &mut self.icaches {
@@ -243,7 +369,7 @@ impl Cluster {
         for md in &mut self.muldivs {
             md.tick(now);
         }
-        self.tcdm.tick(now);
+        self.tcdm.tick_bytewise(now);
         periph::settle(self);
         self.engine.advance();
         self.now += 1;
@@ -253,8 +379,20 @@ impl Cluster {
     /// True when every core has halted *and* all in-flight traffic
     /// (stores, streams, FPU pipeline) has drained — results are only
     /// architecturally visible then.
+    ///
+    /// §Perf: cores the gated engine has proven retired are skipped (a
+    /// retired core satisfies the halted-and-quiet predicate by
+    /// construction), so on the engine path the scan shrinks as cores
+    /// finish and the all-retired fast path is O(1). Under `cycle_direct`
+    /// no core is ever marked retired and this is the original full scan.
     pub fn done(&self) -> bool {
-        self.ccs.iter().all(|cc| cc.core.halted && cc.quiet())
+        if self.retired_count == self.ccs.len() {
+            return true;
+        }
+        self.ccs
+            .iter()
+            .zip(&self.retired)
+            .all(|(cc, &retired)| retired || (cc.core.halted && cc.quiet()))
     }
 
     /// Run until completion or `max_cycles`. Returns the cycle count.
@@ -725,6 +863,54 @@ mod tests {
             f = frep.now,
             s = ssr.now
         );
+    }
+
+    #[test]
+    fn instr_at_rejects_pc_outside_imem() {
+        let cl = run_asm("ecall\n", 1, 1_000);
+        // A wild pc below the instruction-memory base must yield None
+        // instead of wrapping the u32 subtraction into a bogus index in
+        // release builds (and panicking on overflow in debug builds).
+        let below = IMEM_BASE.wrapping_sub(4);
+        assert!(cl.program.instr_at(below).is_none());
+        assert!(cl.program.instr_at(u32::MAX & !3).is_none());
+        assert!(cl.program.instr_at(IMEM_BASE + IMEM_SIZE).is_none());
+        assert!(cl.program.instr_at(cl.program.entry).is_some());
+    }
+
+    /// The gated engine skips quiescent phases (visible in the activity
+    /// summary) and retires finished cores — without changing results
+    /// (`tests/determinism.rs` holds it bit-identical to `cycle_direct`).
+    #[test]
+    fn gated_engine_skips_idle_phases_and_retires_cores() {
+        let cl = run_asm(
+            r#"
+            li   a0, 7
+            li   a1, 6
+            mul  a2, a0, a1
+            li   t0, 0x10000000
+            sw   a2, 0(t0)
+            ecall
+            "#,
+            2,
+            10_000,
+        );
+        assert_eq!(cl.tcdm.read(0x1000_0000, 4), 42);
+        assert_eq!(cl.retired_cores(), 2, "all cores proven finished");
+        let names = cl.engine.schedule();
+        let act = cl.engine.activity();
+        let idx = |n: &str| names.iter().position(|x| *x == n).unwrap();
+        // No external-memory traffic at all: the phase never ran.
+        assert_eq!(act[idx("ext-mem")].runs, 0);
+        assert!(act[idx("ext-mem")].skips > 0);
+        // One mul: the mul/div phase ran at least once but idled mostly.
+        assert!(act[idx("muldiv")].runs >= 1);
+        assert!(act[idx("muldiv")].skips > 0);
+        // The I$ refills at startup, then the loop fits in the L0s.
+        assert!(act[idx("icache")].runs >= 1);
+        assert!(act[idx("icache")].skips > 0);
+        // Cores ran every cycle until everyone retired.
+        assert!(act[idx("cores")].runs > 0);
     }
 
     #[test]

@@ -12,13 +12,26 @@ pub struct Peripherals {
     /// Wake-up IPIs raised this cycle (bit per core), consumed in
     /// [`settle`].
     pub pending_wake: u32,
+    /// Cores currently parked on the hardware barrier (incremented where
+    /// `CoreComplex::barrier_wait` is set, zeroed when [`settle`] releases
+    /// them). This is the O(1) activity signal that lets the gated engine
+    /// skip the whole `periph` phase while nobody is at the barrier and no
+    /// IPI is pending.
+    pub barrier_waiters: usize,
     /// Two scratch registers (software use).
     pub scratch: [u32; 2],
 }
 
 impl Peripherals {
     pub fn new(num_cores: usize) -> Peripherals {
-        Peripherals { num_cores, pending_wake: 0, scratch: [0; 2] }
+        Peripherals { num_cores, pending_wake: 0, barrier_waiters: 0, scratch: [0; 2] }
+    }
+
+    /// True when [`settle`] could change any state this cycle (the
+    /// `periph` phase gate: someone is at the barrier or an IPI is
+    /// pending).
+    pub fn active(&self) -> bool {
+        self.pending_wake != 0 || self.barrier_waiters > 0
     }
 
     /// Read a peripheral register (zero-latency combinational read; the
@@ -46,12 +59,14 @@ pub fn settle(cl: &mut Cluster) {
     // non-halted core is parked, all loads return simultaneously.
     let active = cl.ccs.iter().filter(|cc| !cc.core.halted).count();
     let waiting = cl.ccs.iter().filter(|cc| cc.barrier_wait.is_some()).count();
+    debug_assert_eq!(waiting, cl.periph.barrier_waiters, "barrier waiter count out of sync");
     if active > 0 && waiting == active {
         for cc in &mut cl.ccs {
             if let Some(rd) = cc.barrier_wait.take() {
                 cc.wb_queue.push_back((rd, 0));
             }
         }
+        cl.periph.barrier_waiters = 0;
     }
     // ---- wake-up IPIs ----
     if cl.periph.pending_wake != 0 {

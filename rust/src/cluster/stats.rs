@@ -73,7 +73,7 @@ impl CounterSet {
 
 /// A closed measurement region of one core (between the two PERF_REGION
 /// peripheral writes).
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct RegionStats {
     pub start: u64,
     pub cycles: u64,
@@ -97,7 +97,7 @@ impl RegionStats {
 }
 
 /// Per-core stall-cycle buckets.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct StallCounters {
     pub fetch: u64,
     pub scoreboard: u64,
@@ -111,7 +111,9 @@ pub struct StallCounters {
 }
 
 /// Cluster-wide statistics bundle handed to the harness/energy model.
-#[derive(Debug, Clone)]
+/// `PartialEq` so the determinism tests can assert whole-bundle equality
+/// across engine paths and cluster reuse.
+#[derive(Debug, Clone, PartialEq)]
 pub struct ClusterStats {
     pub cycles: u64,
     /// Per-core *total* counters (full run).

@@ -121,22 +121,40 @@ impl Experiment {
         self.try_run_budgeted(DEFAULT_MAX_CYCLES)
     }
 
-    /// [`Experiment::try_run`] with an explicit per-run cycle budget
-    /// (what [`Sweep`] applies from `SweepOptions::max_cycles`).
+    /// [`Experiment::try_run`] with an explicit per-run cycle budget, on
+    /// a fresh cluster.
     pub fn try_run_budgeted(&self, max_cycles: u64) -> crate::Result<RunResult> {
         let k = kernels::kernel_by_name(self.kernel)
             .ok_or_else(|| format!("unknown kernel {}", self.kernel))?;
         let p = self.params().with_max_cycles(max_cycles);
-        kernels::run_kernel(k, self.variant, &p).map_err(|e| {
-            format!(
-                "experiment {} {} n={} cores={} failed: {e}",
-                self.kernel,
-                self.variant.label(),
-                self.n,
-                self.cores
-            )
-            .into()
-        })
+        kernels::run_kernel(k, self.variant, &p).map_err(|e| self.context(&e))
+    }
+
+    /// [`Experiment::try_run_budgeted`] through a worker-local
+    /// [`kernels::ClusterPool`]: the cluster for this experiment's
+    /// configuration shape is rewound and reused instead of reallocated
+    /// (what [`Sweep::run`] workers do — results are identical either
+    /// way, see `tests/determinism.rs`).
+    pub fn try_run_pooled(
+        &self,
+        pool: &mut kernels::ClusterPool,
+        max_cycles: u64,
+    ) -> crate::Result<RunResult> {
+        let k = kernels::kernel_by_name(self.kernel)
+            .ok_or_else(|| format!("unknown kernel {}", self.kernel))?;
+        let p = self.params().with_max_cycles(max_cycles);
+        kernels::run_kernel_pooled(pool, k, self.variant, &p).map_err(|e| self.context(&e))
+    }
+
+    fn context(&self, e: &str) -> crate::Error {
+        format!(
+            "experiment {} {} n={} cores={} failed: {e}",
+            self.kernel,
+            self.variant.label(),
+            self.n,
+            self.cores
+        )
+        .into()
     }
 }
 
@@ -278,10 +296,14 @@ impl Sweep {
         }
     }
 
-    /// Run `experiments` across this session's bounded worker pool (one
-    /// fresh `Cluster` per experiment — workers share nothing but the
-    /// work queue). Results are returned **in input order**, so any
-    /// rendering over them is byte-identical for every worker count.
+    /// Run `experiments` across this session's bounded worker pool.
+    /// Workers share nothing but the work queue; each keeps a private
+    /// [`kernels::ClusterPool`] so repeated configuration shapes rewind a
+    /// warm cluster ([`crate::cluster::Cluster::reset`]) instead of
+    /// reallocating one per experiment (§Perf). Results are returned
+    /// **in input order**, so any rendering over them is byte-identical
+    /// for every worker count — and identical to fresh-cluster runs
+    /// (`tests/determinism.rs`).
     ///
     /// Every experiment executes even when one fails; the first failure
     /// in input order is returned, carrying that experiment's
@@ -298,20 +320,23 @@ impl Sweep {
                 let completed = &completed;
                 let slots = &slots;
                 let opts = &self.opts;
-                scope.spawn(move || loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= experiments.len() {
-                        break;
-                    }
-                    let r = experiments[i].try_run_budgeted(opts.max_cycles);
-                    *slots[i].lock().unwrap() = Some(r);
-                    let done = completed.fetch_add(1, Ordering::Relaxed) + 1;
-                    if let Some(cb) = &opts.on_progress {
-                        cb(&SweepProgress {
-                            completed: done,
-                            total: experiments.len(),
-                            experiment: experiments[i],
-                        });
+                scope.spawn(move || {
+                    let mut pool = kernels::ClusterPool::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= experiments.len() {
+                            break;
+                        }
+                        let r = experiments[i].try_run_pooled(&mut pool, opts.max_cycles);
+                        *slots[i].lock().unwrap() = Some(r);
+                        let done = completed.fetch_add(1, Ordering::Relaxed) + 1;
+                        if let Some(cb) = &opts.on_progress {
+                            cb(&SweepProgress {
+                                completed: done,
+                                total: experiments.len(),
+                                experiment: experiments[i],
+                            });
+                        }
                     }
                 });
             }

@@ -18,7 +18,7 @@ use crate::ssr::SsrLane;
 /// FPU latency configuration (cycles). Defaults follow the paper's
 /// "between two and six pipeline stages for floating-point multiply-add";
 /// we model the mid-point used by the 1 GHz implementation.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct FpuLatency {
     /// add/sub/mul/fma latency.
     pub fma: u64,

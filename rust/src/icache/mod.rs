@@ -156,6 +156,22 @@ impl ICacheSystem {
     pub fn l1_stats(&self) -> (u64, u64) {
         (self.l1.hits, self.l1.misses)
     }
+
+    /// Rewind to the just-constructed state (cold caches, no refills,
+    /// zeroed PMCs) without reallocating the tag arrays.
+    pub fn reset(&mut self) {
+        for l0 in &mut self.l0 {
+            l0.lines = [L0Line { tag: 0, valid: false }; L0_LINES];
+            l0.fifo = 0;
+            l0.hits = 0;
+            l0.misses = 0;
+        }
+        self.l1.tags.fill(None);
+        self.l1.inflight.clear();
+        self.l1.hits = 0;
+        self.l1.misses = 0;
+        self.refill_ready.fill(None);
+    }
 }
 
 impl Tick for ICacheSystem {
@@ -170,6 +186,13 @@ impl Tick for ICacheSystem {
                 }
             }
         }
+    }
+
+    /// The tick only advances refills; with none in flight (the steady
+    /// state once the kernel loop fits the L0s) it is a no-op. Fetches are
+    /// driven by the cores, not by this tick.
+    fn active(&self) -> bool {
+        !self.l1.inflight.is_empty() || self.refill_ready.iter().any(Option::is_some)
     }
 
     fn name(&self) -> &'static str {

@@ -215,14 +215,13 @@ pub struct RunResult {
     pub cluster: Option<Box<Cluster>>,
 }
 
-/// Load (from the program cache), simulate and check one
-/// kernel/variant/size.
-pub fn run_kernel(
+/// The cluster configuration a kernel run instantiates (also the reuse
+/// key of [`ClusterPool`]).
+pub fn config_for(
     k: &KernelDef,
     variant: Variant,
     params: &Params,
-) -> Result<RunResult, String> {
-    let prog = cached_program(k, variant, params);
+) -> crate::cluster::ClusterConfig {
     let mut cfg = crate::cluster::ClusterConfig::with_cores(params.cores);
     cfg.has_ssr = variant != Variant::Baseline;
     cfg.has_frep = variant == Variant::SsrFrep;
@@ -234,22 +233,120 @@ pub fn run_kernel(
     if need > cfg.tcdm_size {
         cfg.tcdm_size = need.next_power_of_two();
     }
-    let mut cl = Cluster::new(cfg);
-    cl.load(&prog);
-    (k.setup)(&mut cl, params);
+    cfg
+}
+
+/// Simulate and check one kernel on an already-loaded cluster (the common
+/// tail of the fresh and pooled paths).
+fn simulate(
+    cl: &mut Cluster,
+    k: &KernelDef,
+    variant: Variant,
+    params: &Params,
+) -> Result<(crate::cluster::ClusterStats, f64), String> {
+    (k.setup)(cl, params);
     cl.run(params.max_cycles)
         .map_err(|e| format!("{}/{:?} n={}: {e}", k.name, variant, params.n))?;
-    let max_err = (k.check)(&cl, params)?;
-    let stats = cl.stats();
-    Ok(RunResult {
+    let max_err = (k.check)(cl, params)?;
+    Ok((cl.stats(), max_err))
+}
+
+fn result_from(
+    k: &KernelDef,
+    variant: Variant,
+    params: &Params,
+    stats: crate::cluster::ClusterStats,
+    max_err: f64,
+    cluster: Option<Box<Cluster>>,
+) -> RunResult {
+    RunResult {
         kernel: k.name,
         variant,
         params: *params,
         cycles: stats.cluster_region_cycles(),
         stats,
         max_err,
-        cluster: if params.keep_cluster { Some(Box::new(cl)) } else { None },
-    })
+        cluster,
+    }
+}
+
+/// Load (from the program cache), simulate and check one
+/// kernel/variant/size on a freshly constructed cluster.
+pub fn run_kernel(
+    k: &KernelDef,
+    variant: Variant,
+    params: &Params,
+) -> Result<RunResult, String> {
+    let prog = cached_program(k, variant, params);
+    let mut cl = Cluster::new(config_for(k, variant, params));
+    cl.load(&prog);
+    let (stats, max_err) = simulate(&mut cl, k, variant, params)?;
+    let cluster = params.keep_cluster.then(|| Box::new(cl));
+    Ok(result_from(k, variant, params, stats, max_err, cluster))
+}
+
+/// A pool of warm clusters, one per distinct
+/// [`crate::cluster::ClusterConfig`] shape,
+/// rewound by [`Cluster::reset`] between runs instead of reallocating
+/// megabytes of TCDM/instruction-memory per experiment (§Perf). Each
+/// sweep worker owns one pool — pools are never shared across threads.
+///
+/// The determinism suite holds pooled runs byte-identical to fresh ones;
+/// see `tests/determinism.rs`.
+#[derive(Default)]
+pub struct ClusterPool {
+    clusters: HashMap<crate::cluster::ClusterConfig, Cluster>,
+    /// Diagnostics: runs that reused a warm cluster.
+    pub reuses: u64,
+}
+
+impl ClusterPool {
+    pub fn new() -> ClusterPool {
+        ClusterPool::default()
+    }
+
+    /// Number of distinct cluster shapes currently kept warm.
+    pub fn len(&self) -> usize {
+        self.clusters.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.clusters.is_empty()
+    }
+}
+
+/// [`run_kernel`] through a [`ClusterPool`]: reuses (and rewinds) the
+/// pool's cluster for the run's configuration shape, constructing it only
+/// on first encounter. Runs that keep their final cluster state
+/// ([`Params::keep_cluster`]) fall back to the fresh path — the cluster
+/// leaves in the result, so there is nothing to pool.
+pub fn run_kernel_pooled(
+    pool: &mut ClusterPool,
+    k: &KernelDef,
+    variant: Variant,
+    params: &Params,
+) -> Result<RunResult, String> {
+    if params.keep_cluster {
+        return run_kernel(k, variant, params);
+    }
+    let prog = cached_program(k, variant, params);
+    let cfg = config_for(k, variant, params);
+    let ClusterPool { clusters, reuses } = pool;
+    let cl = match clusters.entry(cfg) {
+        std::collections::hash_map::Entry::Occupied(e) => {
+            let cl = e.into_mut();
+            cl.reset(&prog);
+            *reuses += 1;
+            cl
+        }
+        std::collections::hash_map::Entry::Vacant(e) => {
+            let cl = e.insert(Cluster::new(cfg));
+            cl.load(&prog);
+            cl
+        }
+    };
+    let (stats, max_err) = simulate(cl, k, variant, params)?;
+    Ok(result_from(k, variant, params, stats, max_err, None))
 }
 
 /// Rough upper bound of a kernel's TCDM working set in bytes.
@@ -425,6 +522,33 @@ mod tests {
         let io = (k.io)(cl, &full.params);
         assert_eq!(io.output.len(), 1, "dot product reduces to one value");
         assert_eq!(lean.cycles, full.cycles, "retention must not change timing");
+    }
+
+    /// A pooled run (warm cluster rewound by `Cluster::reset`) is
+    /// indistinguishable from a fresh-cluster run — across different
+    /// kernels sharing one cluster shape, back-to-back.
+    #[test]
+    fn pooled_run_matches_fresh_run() {
+        let mut pool = ClusterPool::new();
+        let dot = kernel_by_name("dot").unwrap();
+        let dgemm = kernel_by_name("dgemm").unwrap();
+        let runs = [
+            (dot, Variant::SsrFrep, Params::new(256, 1)),
+            (dgemm, Variant::SsrFrep, Params::new(16, 1)),
+            (dot, Variant::Ssr, Params::new(256, 1)),
+        ];
+        for (k, v, p) in runs {
+            let fresh = run_kernel(k, v, &p).unwrap();
+            let pooled = run_kernel_pooled(&mut pool, k, v, &p).unwrap();
+            let ctx = format!("{} {v:?}", k.name);
+            assert_eq!(fresh.cycles, pooled.cycles, "{ctx}: region cycles");
+            assert_eq!(fresh.stats, pooled.stats, "{ctx}: stats bundle");
+            assert_eq!(fresh.max_err.to_bits(), pooled.max_err.to_bits(), "{ctx}: max_err");
+        }
+        // dot +SSR and dgemm/dot +SSR+FREP at one core share no FREP knob,
+        // so the pool holds one cluster per distinct configuration.
+        assert_eq!(pool.len(), 2, "one warm cluster per shape");
+        assert_eq!(pool.reuses, 1, "the dgemm run rewound the dot cluster");
     }
 
     #[test]

@@ -30,7 +30,9 @@
 //! * [`cluster`] — core complex / hive / cluster assembly and the cluster
 //!   peripherals (performance counters, wake-up).
 //! * [`sim`] — the cycle engine ([`sim::Tick`] components scheduled by a
-//!   deterministic [`sim::ClockDomain`] phase pass) and the
+//!   deterministic [`sim::ClockDomain`] phase pass, with per-phase
+//!   activity gates so quiescent phases are skipped — provably
+//!   unobservably; see `DESIGN.md` §"Performance") and the
 //!   instruction-level trace infrastructure ([`sim::TraceSink`]: off,
 //!   unbounded, or ring-buffered per experiment).
 //! * [`energy`] — calibrated event-energy, power, and kGE area models.
@@ -48,7 +50,9 @@
 //!   tables ([`coordinator::report`]) rendering to markdown / CSV /
 //!   JSON, and [`coordinator::Sweep`] sessions fanning independent
 //!   experiments out over a bounded worker pool with deterministic
-//!   result ordering and per-session width/budget/progress options.
+//!   result ordering, per-session width/budget/progress options, and
+//!   per-worker warm-cluster reuse ([`kernels::ClusterPool`] +
+//!   [`cluster::Cluster::reset`]).
 //!
 //! See `DESIGN.md` for the cycle-engine contract, the per-experiment
 //! index, and the hardware→simulation substitution rationale.

@@ -102,6 +102,18 @@ impl ExtMemory {
         self.ensure(o + bytes.len());
         self.mem[o..o + bytes.len()].copy_from_slice(bytes);
     }
+
+    /// Rewind to the just-constructed state. The lazily-grown storage is
+    /// truncated (not freed): `resize` re-zeroes anything re-grown later,
+    /// so contents match a fresh instance exactly.
+    pub fn reset(&mut self) {
+        self.mem.clear();
+        self.inflight.clear();
+        self.resp.fill(None);
+        self.bursts.clear();
+        self.burst_resp.fill(None);
+        self.accesses = 0;
+    }
 }
 
 impl Tick for ExtMemory {
@@ -138,6 +150,12 @@ impl Tick for ExtMemory {
             self.ensure(o + len as usize);
             self.burst_resp[port] = Some(self.mem[o..o + len as usize].to_vec());
         }
+    }
+
+    /// Delivery only acts on in-flight accesses; undelivered responses are
+    /// pulled by the initiators, so an empty queue means a no-op tick.
+    fn active(&self) -> bool {
+        !self.inflight.is_empty() || !self.bursts.is_empty()
     }
 
     fn name(&self) -> &'static str {

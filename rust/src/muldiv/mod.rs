@@ -134,6 +134,25 @@ impl MulDivUnit {
             .position(|f| f.core == core && f.ready_at <= now)?;
         Some(self.inflight.swap_remove(idx).resp)
     }
+
+    /// True while `core` has a request waiting for a grant or a result in
+    /// flight — i.e. ticking the unit or the core could still make
+    /// progress on `core`'s behalf (the core-retirement check of the gated
+    /// engine; see `cluster::phase_cores`).
+    pub fn has_work_for(&self, core: usize) -> bool {
+        self.waiting[core].is_some() || self.inflight.iter().any(|f| f.core == core)
+    }
+
+    /// Rewind to the just-constructed state (idle unit, zeroed PMCs).
+    pub fn reset(&mut self) {
+        self.rr = 0;
+        self.waiting.fill(None);
+        self.inflight.clear();
+        self.div_busy_until = 0;
+        self.mul_count = 0;
+        self.div_count = 0;
+        self.contention_cycles = 0;
+    }
 }
 
 impl Tick for MulDivUnit {
@@ -171,6 +190,13 @@ impl Tick for MulDivUnit {
             }
             break; // one grant per cycle over the shared request path
         }
+    }
+
+    /// Arbitration only acts on *waiting* requests: in-flight results are
+    /// pulled by the cores and the divider-busy horizon is a timestamp
+    /// compared against `now`, so a tick with nothing waiting is a no-op.
+    fn active(&self) -> bool {
+        self.waiting.iter().any(Option::is_some)
     }
 
     fn name(&self) -> &'static str {

@@ -18,6 +18,18 @@
 //! the same initial state produce bit-identical histories. The cluster's
 //! canonical schedule and the per-phase ordering guarantees are documented
 //! in `DESIGN.md` §"Cycle engine".
+//!
+//! ## Activity gating (§Perf)
+//!
+//! A phase registered with a *gate* ([`ClockDomain::register_gated`]) may
+//! be skipped on cycles where the gate reports the phase quiescent. The
+//! contract is strict: a gate may return `false` only when running the
+//! phase would change **no observable state** (memory, registers,
+//! counters, queues, responses) — skipping must be unobservable, so the
+//! gated schedule produces bit-identical histories to the ungated one.
+//! [`Tick::active`] is the component-level form of the same promise, and
+//! [`ClockDomain::activity`] reports how often each phase actually ran
+//! versus being skipped (see `DESIGN.md` §"Performance").
 
 /// Simulation time, in clock cycles of the (single) cluster clock.
 pub type Cycle = u64;
@@ -31,6 +43,14 @@ pub type Cycle = u64;
 pub trait Tick {
     /// Advance one clock cycle.
     fn tick(&mut self, now: Cycle);
+
+    /// Quiescence probe: `false` promises that `tick(now)` would change no
+    /// observable state this cycle, so the owner may skip the call
+    /// entirely. Implementations must be conservative — when in doubt,
+    /// report `true`. Default: always active (never skipped).
+    fn active(&self) -> bool {
+        true
+    }
 
     /// Stable component name (for schedules, traces and diagnostics).
     fn name(&self) -> &'static str {
@@ -46,6 +66,17 @@ pub fn tick_all<T: Tick>(components: &mut [T], now: Cycle) {
     }
 }
 
+/// Tick only the members of a homogeneous slice that report themselves
+/// [`Tick::active`]. By the `active` contract the skipped ticks are
+/// no-ops, so this is observably identical to [`tick_all`].
+pub fn tick_all_active<T: Tick>(components: &mut [T], now: Cycle) {
+    for c in components {
+        if c.active() {
+            c.tick(now);
+        }
+    }
+}
+
 /// One named phase of the cycle schedule: a plain function over the system
 /// state. Function pointers (not closures) keep the schedule `Copy`-able,
 /// comparable and trivially `Send`, and make the schedule itself data —
@@ -53,6 +84,10 @@ pub fn tick_all<T: Tick>(components: &mut [T], now: Cycle) {
 pub struct Phase<S: ?Sized> {
     pub name: &'static str,
     pub run: fn(&mut S, Cycle),
+    /// Optional activity gate: `Some(gate)` with `gate(state) == false`
+    /// promises that running this phase now would change no observable
+    /// state, so the driver may skip it. `None` = always run.
+    pub active: Option<fn(&S) -> bool>,
 }
 
 impl<S: ?Sized> Clone for Phase<S> {
@@ -62,6 +97,17 @@ impl<S: ?Sized> Clone for Phase<S> {
 }
 
 impl<S: ?Sized> Copy for Phase<S> {}
+
+/// Run/skip tallies of one phase — the per-phase activity summary
+/// ([`ClockDomain::activity`]). `skips` only ever grows for phases whose
+/// gate fired; an ungated phase runs every cycle.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PhaseActivity {
+    /// Cycles on which the phase body ran.
+    pub runs: u64,
+    /// Cycles on which the gate reported the phase quiescent.
+    pub skips: u64,
+}
 
 /// A deterministic clock scheduler: an ordered list of phases plus the
 /// cycle counter they advance.
@@ -74,6 +120,7 @@ impl<S: ?Sized> Copy for Phase<S> {}
 pub struct ClockDomain<S: ?Sized> {
     now: Cycle,
     phases: Vec<Phase<S>>,
+    activity: Vec<PhaseActivity>,
 }
 
 impl<S: ?Sized> Default for ClockDomain<S> {
@@ -84,13 +131,27 @@ impl<S: ?Sized> Default for ClockDomain<S> {
 
 impl<S: ?Sized> ClockDomain<S> {
     pub fn new() -> Self {
-        ClockDomain { now: 0, phases: Vec::new() }
+        ClockDomain { now: 0, phases: Vec::new(), activity: Vec::new() }
     }
 
     /// Append a phase to the schedule. Registration order is execution
     /// order — forever (the determinism contract).
     pub fn register(&mut self, name: &'static str, run: fn(&mut S, Cycle)) {
-        self.phases.push(Phase { name, run });
+        self.phases.push(Phase { name, run, active: None });
+        self.activity.push(PhaseActivity::default());
+    }
+
+    /// Append a gated phase: `active(state) == false` promises the phase
+    /// body would be a no-op this cycle, letting the driver skip it (the
+    /// activity-gating contract at the top of this module).
+    pub fn register_gated(
+        &mut self,
+        name: &'static str,
+        run: fn(&mut S, Cycle),
+        active: fn(&S) -> bool,
+    ) {
+        self.phases.push(Phase { name, run, active: Some(active) });
+        self.activity.push(PhaseActivity::default());
     }
 
     /// Current cycle (the cycle the *next* phase pass will simulate).
@@ -114,18 +175,58 @@ impl<S: ?Sized> ClockDomain<S> {
         self.phases.iter().map(|p| p.name).collect()
     }
 
+    /// Per-phase run/skip tallies, in execution order (the activity
+    /// summary of the gated engine — see `DESIGN.md` §"Performance").
+    pub fn activity(&self) -> &[PhaseActivity] {
+        &self.activity
+    }
+
+    /// Record whether phase `i` ran (`true`) or was gated off (`false`)
+    /// this cycle. Drivers of embedded domains call this next to
+    /// [`ClockDomain::phase`]; [`ClockDomain::cycle`] does it itself.
+    pub fn note_phase(&mut self, i: usize, ran: bool) {
+        let a = &mut self.activity[i];
+        if ran {
+            a.runs += 1;
+        } else {
+            a.skips += 1;
+        }
+    }
+
     /// Advance the clock by one cycle (used by embedded domains after the
     /// owner has run every phase of the current cycle).
     pub fn advance(&mut self) {
         self.now += 1;
     }
 
-    /// Run one full cycle against external state: every phase in order,
-    /// then advance the clock.
+    /// Rewind the clock to cycle 0 and zero the activity tallies (for
+    /// [`crate::cluster::Cluster::reset`]-style reuse). The schedule
+    /// itself is untouched.
+    pub fn reset_clock(&mut self) {
+        self.now = 0;
+        for a in &mut self.activity {
+            *a = PhaseActivity::default();
+        }
+    }
+
+    /// Run one full cycle against external state: every gate-passing
+    /// phase in order, then advance the clock. By the gating contract the
+    /// skipped phases are no-ops, so the history is identical to running
+    /// every phase unconditionally.
     pub fn cycle(&mut self, state: &mut S) {
         let now = self.now;
-        for p in &self.phases {
-            (p.run)(state, now);
+        for (i, p) in self.phases.iter().enumerate() {
+            let ran = match p.active {
+                Some(gate) => gate(state),
+                None => true,
+            };
+            let a = &mut self.activity[i];
+            if ran {
+                a.runs += 1;
+                (p.run)(state, now);
+            } else {
+                a.skips += 1;
+            }
         }
         self.now += 1;
     }
@@ -233,6 +334,53 @@ mod tests {
         }
         assert_eq!(s1.order_log, s2.order_log);
         assert_eq!(d1.now(), d2.now());
+    }
+
+    #[test]
+    fn gated_phase_skips_are_counted_and_unobservable() {
+        struct S {
+            work: u64,
+            hits: u64,
+        }
+        fn gate(s: &S) -> bool {
+            s.work > 0
+        }
+        fn drain(s: &mut S, _now: Cycle) {
+            s.work -= 1;
+            s.hits += 1;
+        }
+        let mut d: ClockDomain<S> = ClockDomain::new();
+        d.register_gated("drain", drain, gate);
+        let mut s = S { work: 3, hits: 0 };
+        for _ in 0..10 {
+            d.cycle(&mut s);
+        }
+        assert_eq!(s.hits, 3, "phase ran exactly while active");
+        assert_eq!(d.activity()[0], PhaseActivity { runs: 3, skips: 7 });
+        assert_eq!(d.now(), 10, "skipping never stalls the clock");
+        d.reset_clock();
+        assert_eq!(d.now(), 0);
+        assert_eq!(d.activity()[0], PhaseActivity::default());
+    }
+
+    #[test]
+    fn tick_all_active_skips_quiescent_components() {
+        struct Gated {
+            active: bool,
+            ticks: u64,
+        }
+        impl Tick for Gated {
+            fn tick(&mut self, _now: Cycle) {
+                self.ticks += 1;
+            }
+            fn active(&self) -> bool {
+                self.active
+            }
+        }
+        let mut cs = vec![Gated { active: true, ticks: 0 }, Gated { active: false, ticks: 0 }];
+        tick_all_active(&mut cs, 0);
+        assert_eq!(cs[0].ticks, 1);
+        assert_eq!(cs[1].ticks, 0);
     }
 
     #[test]

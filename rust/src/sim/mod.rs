@@ -11,5 +11,5 @@ pub mod engine;
 pub mod proptest;
 pub mod trace;
 
-pub use engine::{Cycle, ClockDomain, Phase, Tick};
+pub use engine::{Cycle, ClockDomain, Phase, PhaseActivity, Tick};
 pub use trace::{TraceEvent, TraceMode, TraceSink, TraceUnit};

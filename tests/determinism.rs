@@ -1,12 +1,16 @@
 //! Engine and sweep determinism: the same assembled program yields
 //! identical final cycle count, stats, and trace-event hash whether
-//! driven by the hand-ordered reference loop (`Cluster::cycle_direct`),
-//! the `ClockDomain` schedule (`Cluster::cycle`), or inside a
-//! multi-worker `Sweep` session — and artifact *rendering* is
-//! byte-identical for every session width (jobs ∈ {1, 2, 8}).
+//! driven by the hand-ordered, ungated reference loop
+//! (`Cluster::cycle_direct` — byte-level TCDM, every component ticked
+//! every cycle), the activity-gated `ClockDomain` schedule
+//! (`Cluster::cycle` — idle phases skipped, retired cores dropped from
+//! the scan, word-level TCDM), or inside a multi-worker `Sweep` session
+//! with per-worker cluster reuse — and artifact *rendering* is
+//! byte-identical for every session width (jobs ∈ {1, 2, 8}) and for
+//! reused versus freshly constructed clusters.
 
 use snitch_sim::asm::assemble;
-use snitch_sim::cluster::{Cluster, ClusterConfig};
+use snitch_sim::cluster::{Cluster, ClusterConfig, ClusterStats};
 use snitch_sim::coordinator::{artifacts, Experiment, Sweep, SweepOptions};
 use snitch_sim::kernels::{self, Params, RunResult, Variant};
 use snitch_sim::sim::TraceSink;
@@ -126,6 +130,70 @@ fn engine_matches_direct_loop() {
     assert_eq!(se.tcdm_conflicts, sd.tcdm_conflicts);
     assert_eq!(se.icache_l0_misses, sd.icache_l0_misses);
     assert_eq!(se.muldiv_muls, sd.muldiv_muls);
+    assert_eq!(se, sd, "whole stats bundle (stalls, regions, every PMC)");
+    // The gated engine really gated something on this program (otherwise
+    // this test exercises nothing new) ...
+    let activity = via_engine.engine.activity();
+    assert!(
+        activity.iter().any(|a| a.skips > 0),
+        "expected at least one skipped phase, got {activity:?}"
+    );
+    // ... and proved every core finished.
+    assert_eq!(via_engine.retired_cores(), 4);
+    assert_eq!(via_direct.retired_cores(), 0, "cycle_direct never marks retirement");
+}
+
+/// Drive one kernel run manually through either cycle function and
+/// return everything observable.
+fn kernel_run_with(
+    k: &'static kernels::KernelDef,
+    v: Variant,
+    p: &Params,
+    direct: bool,
+) -> (u64, ClusterStats, f64) {
+    let prog = kernels::cached_program(k, v, p);
+    let mut cl = Cluster::new(kernels::config_for(k, v, p));
+    cl.load(&prog);
+    (k.setup)(&mut cl, p);
+    while !cl.done() {
+        assert!(cl.now < p.max_cycles, "{}/{v:?} exceeded budget", k.name);
+        if direct {
+            cl.cycle_direct();
+        } else {
+            cl.cycle();
+        }
+    }
+    let max_err = (k.check)(&cl, p).unwrap_or_else(|e| panic!("{}/{v:?}: {e}", k.name));
+    (cl.now, cl.stats(), max_err)
+}
+
+/// The tentpole acceptance gate: the gated fast path (`Cluster::cycle`)
+/// is bit-identical to the ungated reference (`Cluster::cycle_direct`)
+/// — cycle count, the entire stats bundle, and the validated output —
+/// for every kernel × variant × {1, 8} cores.
+#[test]
+fn gated_engine_matches_direct_for_every_kernel() {
+    for k in kernels::all_kernels() {
+        for &v in k.variants {
+            for cores in [1usize, 8] {
+                let n = match k.name {
+                    "dgemm" => 16,
+                    "fft" => 64,
+                    "conv2d" => 16,
+                    "knn" => 64,
+                    "montecarlo" => 128,
+                    _ => 256,
+                };
+                let p = Params::new(n, cores);
+                let (dc, ds, de) = kernel_run_with(k, v, &p, true);
+                let (gc, gs, ge) = kernel_run_with(k, v, &p, false);
+                let ctx = format!("{} {v:?} cores={cores}", k.name);
+                assert_eq!(dc, gc, "{ctx}: final cycle count");
+                assert_eq!(ds, gs, "{ctx}: stats bundle");
+                assert_eq!(de.to_bits(), ge.to_bits(), "{ctx}: max_err");
+            }
+        }
+    }
 }
 
 #[test]
@@ -180,6 +248,81 @@ fn sweep_results_independent_of_worker_count() {
     .unwrap();
     assert_eq!(standalone.cycles, serial[3].cycles);
     assert_eq!(standalone.stats.cores, serial[3].stats.cores);
+}
+
+/// Satellite: a cluster reused via `Cluster::reset` must be
+/// indistinguishable from a freshly constructed one — same cycle count,
+/// same stats bundle, same trace-event hash — across two different
+/// kernels run back-to-back on the same warm cluster (and the first
+/// kernel again, to catch leakage from the second).
+#[test]
+fn reset_cluster_is_byte_identical_to_fresh() {
+    let dot = kernels::kernel_by_name("dot").unwrap();
+    let relu = kernels::kernel_by_name("relu").unwrap();
+    let p = Params::new(256, 1);
+    let sequence: [(&'static kernels::KernelDef, Variant); 3] =
+        [(dot, Variant::SsrFrep), (relu, Variant::SsrFrep), (dot, Variant::SsrFrep)];
+
+    // Fresh reference runs, traced.
+    let fresh: Vec<(u64, ClusterStats, u64)> = sequence
+        .iter()
+        .map(|&(k, v)| {
+            let prog = kernels::cached_program(k, v, &p);
+            let mut cfg = kernels::config_for(k, v, &p);
+            cfg.trace = true;
+            let mut cl = Cluster::new(cfg);
+            cl.load(&prog);
+            (k.setup)(&mut cl, &p);
+            cl.run(p.max_cycles).expect("fresh run");
+            (k.check)(&cl, &p).expect("fresh check");
+            (cl.now, cl.stats(), cl.trace.event_hash())
+        })
+        .collect();
+
+    // One warm cluster, rewound between runs.
+    let (k0, v0) = sequence[0];
+    let prog0 = kernels::cached_program(k0, v0, &p);
+    let mut cfg = kernels::config_for(k0, v0, &p);
+    cfg.trace = true;
+    let mut cl = Cluster::new(cfg);
+    cl.load(&prog0);
+    for (i, &(k, v)) in sequence.iter().enumerate() {
+        assert_eq!(
+            kernels::config_for(k, v, &p),
+            cl.cfg,
+            "test premise: every leg shares one cluster shape"
+        );
+        if i > 0 {
+            cl.reset(&kernels::cached_program(k, v, &p));
+        }
+        (k.setup)(&mut cl, &p);
+        cl.run(p.max_cycles).expect("reused run");
+        (k.check)(&cl, &p).unwrap_or_else(|e| panic!("leg {i} ({}): {e}", k.name));
+        let (want_now, want_stats, want_hash) = &fresh[i];
+        assert_eq!(cl.now, *want_now, "leg {i} ({}): cycle count", k.name);
+        assert_eq!(&cl.stats(), want_stats, "leg {i} ({}): stats bundle", k.name);
+        assert_eq!(cl.trace.event_hash(), *want_hash, "leg {i} ({}): trace hash", k.name);
+    }
+}
+
+/// Satellite companion: rendered table cells from a pooled sweep are
+/// byte-identical to cells rendered from fresh-cluster runs of the same
+/// experiments.
+#[test]
+fn pooled_sweep_renders_identical_tables_to_fresh_runs() {
+    let exps: Vec<Experiment> = [1usize, 2, 4, 8]
+        .into_iter()
+        .map(|c| Experiment::new("dgemm", Variant::SsrFrep, 16, c))
+        .collect();
+    let table2 = artifacts::by_id("table2").expect("registered artifact");
+    // Sweep workers reuse clusters; Experiment::run constructs fresh ones.
+    let pooled = sweep_jobs(2).run(&exps).expect("pooled sweep");
+    let fresh: Vec<RunResult> = exps.iter().map(Experiment::run).collect();
+    assert_eq!(
+        table2.render(&pooled).expect("render").to_markdown(),
+        table2.render(&fresh).expect("render").to_markdown(),
+        "pooled vs fresh table bytes"
+    );
 }
 
 #[test]

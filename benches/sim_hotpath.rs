@@ -333,16 +333,129 @@ fn render_bench_json(
     s
 }
 
+// ---------------------------------------------------------------------
+// cluster_scaling: multi-cluster System throughput across {1,2,4}
+// clusters (the BENCH_PR5.json record).
+// ---------------------------------------------------------------------
+
+struct ScaleRow {
+    label: String,
+    clusters: usize,
+    compute_cycles: u64,
+    dma_cycles: u64,
+    total_cycles: u64,
+    wall_ms: f64,
+    speedup: f64,
+}
+
+/// One sharded run per (kernel, cluster-count) point: compute-makespan
+/// scaling plus the DMA preload/write-back overhead the shared memory
+/// and round-robin interconnect impose. The 1-cluster row of each
+/// kernel is additionally asserted equal to the legacy path's region
+/// cycles — the System determinism gate, exercised by the benchmark
+/// itself (so `--smoke` in CI catches a drift).
+fn cluster_scaling(smoke: bool) -> Vec<ScaleRow> {
+    let cases = [
+        ("dgemm", Variant::SsrFrep, if smoke { 32usize } else { 64 }),
+        ("dot", Variant::SsrFrep, if smoke { 256 } else { 1024 }),
+    ];
+    let mut rows = Vec::new();
+    for (name, v, n) in cases {
+        let k = kernels::kernel_by_name(name).unwrap();
+        let legacy = kernels::run_kernel(k, v, &Params::new(n, 8)).unwrap();
+        let mut base = None;
+        for clusters in [1usize, 2, 4] {
+            let p = Params::new(n, 8).with_clusters(clusters);
+            let t = Instant::now();
+            // Through the System layer for every point — including the
+            // 1-cluster row, which `kernels::run_kernel` would route to
+            // the legacy path (no stage summary) and which is exactly
+            // the run the legacy-match assert below is about.
+            let r = snitch_sim::system::run_kernel_system(k, v, &p)
+                .unwrap_or_else(|e| panic!("scale/{name}/{clusters}cl: {e}"));
+            let wall_ms = t.elapsed().as_secs_f64() * 1e3;
+            let s = r.system.expect("system summary");
+            if clusters == 1 {
+                assert_eq!(
+                    r.cycles, legacy.cycles,
+                    "scale/{name}: 1-cluster System must match the legacy path"
+                );
+            }
+            let speedup = match base {
+                None => {
+                    base = Some(r.cycles.max(1) as f64);
+                    1.0
+                }
+                Some(b) => b / r.cycles.max(1) as f64,
+            };
+            println!(
+                "[bench] scale/{name}/n{n}/{clusters}cl: compute {} cycles ({speedup:.2}x), \
+                 dma {} cycles, total {} cycles, {wall_ms:.1} ms wall",
+                r.cycles,
+                s.dma_in_cycles + s.dma_out_cycles,
+                s.total_cycles,
+            );
+            rows.push(ScaleRow {
+                label: format!("{name}/n{n}/{clusters}cl"),
+                clusters,
+                compute_cycles: r.cycles,
+                dma_cycles: s.dma_in_cycles + s.dma_out_cycles,
+                total_cycles: s.total_cycles,
+                wall_ms,
+                speedup,
+            });
+        }
+    }
+    rows
+}
+
+/// Hand-rolled JSON for the cluster-scaling record (dependency-free).
+fn render_scale_json(rows: &[ScaleRow]) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"sim_hotpath/cluster_scaling\",\n");
+    s.push_str("  \"regenerate\": \"cargo bench --bench sim_hotpath\",\n");
+    s.push_str(
+        "  \"baseline\": \"1-cluster System (asserted cycle-identical to the legacy \
+         single-cluster path in the same process)\",\n",
+    );
+    s.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"case\": \"{}\", \"clusters\": {}, \"compute_cycles\": {}, \
+             \"dma_cycles\": {}, \"total_cycles\": {}, \"compute_speedup\": {:.3}, \
+             \"wall_ms\": {:.3}}}{}\n",
+            r.label,
+            r.clusters,
+            r.compute_cycles,
+            r.dma_cycles,
+            r.total_cycles,
+            r.speedup,
+            r.wall_ms,
+            if i + 1 < rows.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("  ]\n");
+    s.push_str("}\n");
+    s
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     if smoke {
         // CI bench-smoke: reduced sizes, single rep, no JSON — but the
-        // optimized-vs-reference cycle-count assertion still gates.
+        // optimized-vs-reference and System-vs-legacy cycle-count
+        // assertions still gate.
         cycles_per_sec(true);
+        cluster_scaling(true);
         return;
     }
     hotpath();
     sweep_throughput();
     codegen_throughput();
     cycles_per_sec(false);
+    let rows = cluster_scaling(false);
+    let json = render_scale_json(&rows);
+    std::fs::write("BENCH_PR5.json", json).expect("write BENCH_PR5.json");
+    println!("[bench] wrote BENCH_PR5.json");
 }

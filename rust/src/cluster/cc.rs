@@ -347,7 +347,7 @@ fn execute(
     now: u64,
     cfg: &ClusterConfig,
     tcdm: &mut crate::mem::Tcdm,
-    ext: &mut crate::mem::ExtMemory,
+    ext: &mut crate::mem::ExtIf,
     muldivs: &mut [crate::muldiv::MulDivUnit],
     periph: &mut super::Peripherals,
     hive: usize,

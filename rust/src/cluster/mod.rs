@@ -32,7 +32,7 @@ use crate::asm::Program;
 use crate::icache::ICacheSystem;
 use crate::isa::decode::decode;
 use crate::isa::Instr;
-use crate::mem::{ExtMemory, Tcdm, IMEM_BASE, IMEM_SIZE, TCDM_BASE};
+use crate::mem::{ExtIf, ExtMemory, MemPort, Tcdm, IMEM_BASE, IMEM_SIZE, TCDM_BASE};
 use crate::muldiv::MulDivUnit;
 use crate::sim::engine::tick_all_active;
 use crate::sim::{ClockDomain, Cycle, Tick};
@@ -82,7 +82,10 @@ pub struct Cluster {
     pub cfg: ClusterConfig,
     pub ccs: Vec<CoreComplex>,
     pub tcdm: Tcdm,
-    pub ext: ExtMemory,
+    /// External-memory interface: a privately-owned [`ExtMemory`]
+    /// (standalone cluster) or a [`MemPort`] onto a `System`'s shared
+    /// memory (see [`Cluster::use_ext_port`]).
+    pub ext: ExtIf,
     /// One shared mul/div unit per hive.
     pub muldivs: Vec<MulDivUnit>,
     /// One L0/L1 I$ system per hive.
@@ -195,7 +198,7 @@ impl Cluster {
         Cluster {
             ccs: (0..n).map(|i| CoreComplex::new(i, &cfg)).collect(),
             tcdm: Tcdm::new(TCDM_BASE, cfg.tcdm_size, cfg.tcdm_banks, 2 * n),
-            ext: ExtMemory::new(n),
+            ext: ExtIf::Local(ExtMemory::new(n)),
             muldivs: (0..cfg.num_hives).map(|_| MulDivUnit::new(cfg.cores_per_hive)).collect(),
             icaches: (0..cfg.num_hives)
                 .map(|_| ICacheSystem::new(cfg.cores_per_hive, cfg.l1i_size))
@@ -231,6 +234,15 @@ impl Cluster {
     /// (diagnostics; `cycle_direct` does not maintain this).
     pub fn retired_cores(&self) -> usize {
         self.retired_count
+    }
+
+    /// Detach the privately-owned external memory and replace it with a
+    /// [`MemPort`] client endpoint (one subport per core). Called by
+    /// `System::new` before anything is loaded; from then on the owning
+    /// system's interconnect carries this cluster's external traffic to
+    /// the shared memory.
+    pub fn use_ext_port(&mut self) {
+        self.ext = ExtIf::Port(MemPort::new(self.cfg.num_cores()));
     }
 
     /// Install a trace sink for this run (per-experiment tracing without

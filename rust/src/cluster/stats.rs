@@ -161,7 +161,7 @@ impl ClusterStats {
             icache_l1_misses: l1m,
             muldiv_muls: cl.muldivs.iter().map(|m| m.mul_count).sum(),
             muldiv_divs: cl.muldivs.iter().map(|m| m.div_count).sum(),
-            ext_accesses: cl.ext.accesses,
+            ext_accesses: cl.ext.accesses(),
         }
     }
 

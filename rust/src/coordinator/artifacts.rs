@@ -141,8 +141,10 @@ const TITLE_FIGURE13: &str = "Fig. 13 — octa-core speed-up over baseline";
 const TITLE_FIGURE14: &str = "Fig. 14 — power breakdown, DGEMM 32×32 + SSR + FREP (8 cores)";
 const TITLE_FIGURE15_16: &str = "Fig. 15/16 — power and energy efficiency (8 cores)";
 const TITLE_VALIDATE: &str = "golden validation (simulated vs AOT JAX/Pallas via PJRT)";
+const TITLE_CLUSTER_SCALING: &str =
+    "cluster scaling — sharded kernels across {1,2,4,8} clusters (8 cores each)";
 
-static REGISTRY: [Artifact; 13] = [
+static REGISTRY: [Artifact; 14] = [
     sweep_artifact("figure1", TITLE_FIGURE1, no_experiments, figure1_render),
     sweep_artifact("table1", TITLE_TABLE1, table1_experiments, table1_render),
     sweep_artifact("table2", TITLE_TABLE2, table2_experiments, table2_render),
@@ -155,6 +157,12 @@ static REGISTRY: [Artifact; 13] = [
     sweep_artifact("figure13", TITLE_FIGURE13, figure13_experiments, figure13_render),
     sweep_artifact("figure14", TITLE_FIGURE14, table4_experiments, figure14_render),
     sweep_artifact("figure15_16", TITLE_FIGURE15_16, figure15_16_experiments, figure15_16_render),
+    sweep_artifact(
+        "cluster_scaling",
+        TITLE_CLUSTER_SCALING,
+        cluster_scaling_experiments,
+        cluster_scaling_render,
+    ),
     Artifact {
         id: "validate",
         title: TITLE_VALIDATE,
@@ -673,6 +681,82 @@ fn figure11_render(_runs: &[RunResult]) -> crate::Result<Table> {
     Ok(t.with_notes("paper: 9 kGE (RV32E, latch, no PMC) to 21 kGE (RV32I, FF, PMC)."))
 }
 
+// ------------------------------------------------------- cluster scaling
+
+/// Cluster counts of the scaling artifact (beyond the paper: the
+/// Manticore direction — many Snitch clusters behind a shared memory).
+const SCALING_CLUSTERS: [usize; 4] = [1, 2, 4, 8];
+/// Cores per cluster (the paper's octa-core cluster).
+const SCALING_CORES: usize = 8;
+
+/// The shard-aware kernels at their scaling sizes and best variants.
+fn scaling_kernels() -> [(&'static str, usize, Variant); 4] {
+    [
+        ("dgemm", 64, Variant::SsrFrep),
+        ("dot", 1024, Variant::SsrFrep),
+        ("axpy", 1024, Variant::Ssr),
+        ("relu", 1024, Variant::SsrFrep),
+    ]
+}
+
+fn cluster_scaling_experiments(opts: &ArtifactOptions) -> Vec<Experiment> {
+    // Every scaling point needs n divisible by clusters × cores, so
+    // sizes (reduced included) round up to a multiple of the widest
+    // split (8 clusters × 8 cores = 64).
+    let widest = SCALING_CLUSTERS[SCALING_CLUSTERS.len() - 1] * SCALING_CORES;
+    let mut exps = Vec::new();
+    for (kernel, full, v) in scaling_kernels() {
+        let n = reduced_size(kernel, full, opts).div_ceil(widest) * widest;
+        for clusters in SCALING_CLUSTERS {
+            exps.push(Experiment::new(kernel, v, n, SCALING_CORES).with_clusters(clusters));
+        }
+    }
+    exps
+}
+
+fn cluster_scaling_render(runs: &[RunResult]) -> crate::Result<Table> {
+    let per = SCALING_CLUSTERS.len();
+    if runs.is_empty() || runs.len() % per != 0 {
+        return Err(format!(
+            "cluster_scaling: expected a multiple of {per} runs (one row per kernel), got {}",
+            runs.len()
+        )
+        .into());
+    }
+    let mut t = Table::new("cluster_scaling", TITLE_CLUSTER_SCALING).with_columns(&[
+        "kernel",
+        "variant",
+        "n",
+        "1-cluster cycles",
+        "2 clusters",
+        "4 clusters",
+        "8 clusters",
+        "DMA-in cycles (8cl)",
+    ]);
+    for chunk in runs.chunks(per) {
+        let base = chunk[0].cycles.max(1) as f64;
+        let mut row = vec![
+            Value::str(chunk[0].kernel),
+            Value::str(chunk[0].variant.label()),
+            Value::int(chunk[0].params.n as i64),
+            Value::int(chunk[0].cycles as i64),
+        ];
+        for r in &chunk[1..] {
+            row.push(Value::float_fmt(base / r.cycles.max(1) as f64, 2, 0, "×"));
+        }
+        row.push(match chunk[per - 1].system {
+            Some(s) => Value::int(s.dma_in_cycles as i64),
+            None => Value::str("-"),
+        });
+        t.push_row(row);
+    }
+    Ok(t.with_notes(
+        "compute-region makespan (slowest cluster); speed-ups vs 1 cluster. DMA-in is the \
+         shared-memory preload through the round-robin interconnect (serialized across \
+         clusters; compute overlap is future work).",
+    ))
+}
+
 // ------------------------------------------------------ golden validation
 
 /// The golden-validation experiment set: one run per AOT artifact, all
@@ -768,6 +852,22 @@ mod tests {
         assert!(by_id("figure10").unwrap().experiments(&o).is_empty());
         // Validation keeps the cluster for I/O extraction.
         assert!(validate_experiments().iter().all(|e| e.keep_cluster));
+    }
+
+    /// Every scaling point of the cluster_scaling artifact must split
+    /// evenly over clusters × cores — at paper scale and reduced.
+    #[test]
+    fn cluster_scaling_experiments_stay_shardable() {
+        for opts in [ArtifactOptions::default(), ArtifactOptions::default().with_size(16)] {
+            let exps = by_id("cluster_scaling").unwrap().experiments(&opts);
+            assert_eq!(exps.len(), 16, "4 kernels x 4 cluster counts");
+            for e in &exps {
+                assert_eq!(e.n % (e.clusters * e.cores), 0, "{e:?} must split evenly");
+                assert!(crate::kernels::shard::supports(e.kernel), "{}", e.kernel);
+            }
+            let counts: Vec<usize> = exps.iter().map(|e| e.clusters).take(4).collect();
+            assert_eq!(counts, vec![1, 2, 4, 8]);
+        }
     }
 
     #[test]

@@ -32,6 +32,9 @@ OPTIONS:
 COMMANDS:
     list                    list every registered artifact id
     artifact <ID>           define, sweep and render one artifact
+                            (ids beyond the paper's tables/figures:
+                            `cluster_scaling` shards dgemm/axpy/dot/relu
+                            across {1,2,4,8} clusters of a System)
     all                     regenerate every table and figure
     table <1|2|3|4>         regenerate a paper table
     figure <1|9|10|11|12|13|14|15|16>

@@ -80,16 +80,20 @@ pub struct Experiment {
     pub kernel: &'static str,
     pub variant: Variant,
     pub n: usize,
+    /// Cores per cluster.
     pub cores: usize,
     /// Keep the final [`crate::cluster::Cluster`] in the result
     /// ([`RunResult::cluster`]) — off by default so wide sweeps don't
     /// retain every TCDM image (see [`Params::keep_cluster`]).
     pub keep_cluster: bool,
+    /// Number of clusters (the `System` axis, see
+    /// [`Params::clusters`]); 1 = the classic single-cluster path.
+    pub clusters: usize,
 }
 
 impl Experiment {
     pub fn new(kernel: &'static str, variant: Variant, n: usize, cores: usize) -> Experiment {
-        Experiment { kernel, variant, n, cores, keep_cluster: false }
+        Experiment { kernel, variant, n, cores, keep_cluster: false, clusters: 1 }
     }
 
     /// Request the final cluster state in this experiment's result.
@@ -98,9 +102,16 @@ impl Experiment {
         self
     }
 
+    /// Run this experiment sharded across `clusters` clusters (the
+    /// kernel must have a shard plan in [`kernels::shard`]).
+    pub fn with_clusters(mut self, clusters: usize) -> Experiment {
+        self.clusters = clusters.max(1);
+        self
+    }
+
     /// The [`Params`] this experiment runs with (default cycle budget).
     pub fn params(&self) -> Params {
-        let p = Params::new(self.n, self.cores);
+        let p = Params::new(self.n, self.cores).with_clusters(self.clusters);
         if self.keep_cluster {
             p.with_cluster()
         } else {
@@ -147,8 +158,13 @@ impl Experiment {
     }
 
     fn context(&self, e: &str) -> crate::Error {
+        let clusters = if self.clusters > 1 {
+            format!(" clusters={}", self.clusters)
+        } else {
+            String::new()
+        };
         format!(
-            "experiment {} {} n={} cores={} failed: {e}",
+            "experiment {} {} n={} cores={}{clusters} failed: {e}",
             self.kernel,
             self.variant.label(),
             self.n,

@@ -16,12 +16,19 @@ use crate::isa::csr::{ssr_bound_csr, ssr_rptr_csr, ssr_stride_csr, SSR_ENABLE};
 
 const X: u32 = rt::DATA;
 
-fn y_addr(n: usize) -> u32 {
+pub(crate) fn y_addr(n: usize) -> u32 {
     X + 8 * n as u32
 }
 
 /// The scalar `a` parks in the result area so the kernel can `fld` it.
-const A_SCALAR: u32 = rt::RESULT + 8;
+pub(crate) const A_SCALAR: u32 = rt::RESULT + 8;
+
+/// Host-visible input layout for the multi-cluster shard planner
+/// ([`super::shard`]): x, y, then the scalar `a`.
+pub(crate) fn host_arrays(p: &Params) -> Vec<(u32, Vec<f64>)> {
+    let (a, x, y) = inputs(p);
+    vec![(X, x), (y_addr(p.n), y), (A_SCALAR, vec![a])]
+}
 
 fn gen(v: Variant, p: &Params) -> Program {
     let y = y_addr(p.n);

@@ -23,11 +23,18 @@ use crate::isa::FReg;
 
 const A: u32 = rt::DATA;
 
-fn b_addr(n: usize) -> u32 {
+pub(crate) fn b_addr(n: usize) -> u32 {
     A + 8 * (n * n) as u32
 }
-fn c_addr(n: usize) -> u32 {
+pub(crate) fn c_addr(n: usize) -> u32 {
     b_addr(n) + 8 * (n * n) as u32
+}
+
+/// Host-visible input layout for the multi-cluster shard planner
+/// ([`super::shard`]): A then B, both full n×n.
+pub(crate) fn host_arrays(p: &Params) -> Vec<(u32, Vec<f64>)> {
+    let (a, b) = inputs(p);
+    vec![(A, a), (b_addr(p.n), b)]
 }
 
 /// FREP/SSR column-block width: widest of 4/2/1 dividing the chunk.

@@ -20,8 +20,15 @@ use crate::isa::csr::{ssr_bound_csr, ssr_rptr_csr, ssr_stride_csr, SSR_ENABLE};
 
 const A: u32 = rt::DATA;
 
-fn b_addr(n: usize) -> u32 {
+pub(crate) fn b_addr(n: usize) -> u32 {
     A + 8 * n as u32
+}
+
+/// Host-visible input layout for the multi-cluster shard planner
+/// ([`super::shard`]): (TCDM address, full data) per input array.
+pub(crate) fn host_arrays(p: &Params) -> Vec<(u32, Vec<f64>)> {
+    let (a, b) = inputs(p);
+    vec![(A, a), (b_addr(p.n), b)]
 }
 
 fn gen(v: Variant, p: &Params) -> Program {

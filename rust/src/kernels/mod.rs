@@ -22,7 +22,18 @@
 //! [`run_kernel`] assembles each distinct configuration exactly once per
 //! process through a shared program cache ([`cached_program`]) — repeated
 //! experiment configurations (kernel matrices, benches, determinism
-//! tests) reuse the cached image.
+//! tests) reuse the cached image. The cache is LRU-bounded at
+//! [`PROGRAM_CACHE_CAP`] (and clearable via [`program_cache_clear`]), so
+//! sweeps over many distinct `n` cannot grow it without limit.
+//!
+//! ## Multi-cluster sharding
+//!
+//! [`Params::clusters`] adds the `System` axis: [`run_kernel`] with
+//! `clusters > 1` dispatches to [`crate::system::run_kernel_system`],
+//! which shards the problem per the kernel's plan in [`shard`]
+//! (dgemm/axpy/dot/relu; others opt out), DMA-preloads each cluster's
+//! TCDM from the shared external memory, and validates the re-assembled
+//! outputs against the full-problem reference.
 //!
 //! Every kernel provides:
 //! * `gen(variant, params)` — the complete built [`Program`] (all cores
@@ -47,6 +58,7 @@ pub mod knn;
 pub mod montecarlo;
 pub mod relu;
 pub mod runtime;
+pub mod shard;
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
@@ -95,6 +107,11 @@ pub struct Params {
     /// matrices hold only stats; golden validation and I/O extraction
     /// opt in via [`Params::with_cluster`].
     pub keep_cluster: bool,
+    /// Number of clusters (the `System` axis): 1 = the classic
+    /// single-cluster path; >1 shards the kernel across a
+    /// [`crate::system::System`] (DMA preload, shared external memory —
+    /// see [`shard`]). [`run_kernel`] dispatches automatically.
+    pub clusters: usize,
 }
 
 impl Params {
@@ -105,6 +122,7 @@ impl Params {
             seed: 0x5EED_0001,
             max_cycles: DEFAULT_MAX_CYCLES,
             keep_cluster: false,
+            clusters: 1,
         }
     }
 
@@ -117,6 +135,13 @@ impl Params {
     /// Same parameters, keeping the final cluster state in the result.
     pub fn with_cluster(mut self) -> Params {
         self.keep_cluster = true;
+        self
+    }
+
+    /// Same parameters on `clusters` clusters (the `System` axis).
+    pub fn with_clusters(mut self, clusters: usize) -> Params {
+        assert!(clusters >= 1, "at least one cluster");
+        self.clusters = clusters;
         self
     }
 }
@@ -176,27 +201,112 @@ struct ProgKey {
     cores: usize,
 }
 
-static PROGRAM_CACHE: OnceLock<Mutex<HashMap<ProgKey, Arc<Program>>>> = OnceLock::new();
+/// Bounded, LRU-evicting program cache (the process-global instance
+/// behind [`cached_program`] is capped at [`PROGRAM_CACHE_CAP`] so
+/// sweeps over many distinct `n` no longer grow it without limit).
+pub struct ProgramCache {
+    map: HashMap<ProgKey, (Arc<Program>, u64)>,
+    cap: usize,
+    tick: u64,
+}
+
+impl ProgramCache {
+    pub fn new(cap: usize) -> ProgramCache {
+        assert!(cap >= 1, "cache capacity must be positive");
+        ProgramCache { map: HashMap::new(), cap, tick: 0 }
+    }
+
+    fn stamp(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+
+    /// The cached program for `key`, freshening its recency.
+    fn lookup(&mut self, key: &ProgKey) -> Option<Arc<Program>> {
+        let tick = self.stamp();
+        self.map.get_mut(key).map(|e| {
+            e.1 = tick;
+            Arc::clone(&e.0)
+        })
+    }
+
+    /// Insert (evicting the least-recently-used entry at capacity) and
+    /// return the cached program — the already-present one if a racing
+    /// generator got there first.
+    fn insert(&mut self, key: ProgKey, prog: Arc<Program>) -> Arc<Program> {
+        let tick = self.stamp();
+        if let Some(e) = self.map.get_mut(&key) {
+            e.1 = tick;
+            return Arc::clone(&e.0);
+        }
+        if self.map.len() >= self.cap {
+            // O(cap) victim scan — cap is small and insertions are rare
+            // (one per distinct configuration).
+            if let Some(victim) = self.map.iter().min_by_key(|(_, e)| e.1).map(|(k, _)| *k) {
+                self.map.remove(&victim);
+            }
+        }
+        self.map.insert(key, (Arc::clone(&prog), tick));
+        prog
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Drop every cached program (capacity unchanged).
+    pub fn clear(&mut self) {
+        self.map.clear();
+    }
+}
+
+/// Capacity of the process-global program cache. Generously above any
+/// single sweep's working set (the full evaluation uses a few dozen
+/// configurations), so eviction only triggers on unbounded multi-`n`
+/// scans — the failure mode the cap exists for.
+pub const PROGRAM_CACHE_CAP: usize = 512;
+
+static PROGRAM_CACHE: OnceLock<Mutex<ProgramCache>> = OnceLock::new();
+
+fn global_cache() -> &'static Mutex<ProgramCache> {
+    PROGRAM_CACHE.get_or_init(|| Mutex::new(ProgramCache::new(PROGRAM_CACHE_CAP)))
+}
 
 /// The built program for `(kernel, variant, n, cores)`, assembled exactly
 /// once per process and shared across sweep workers. Repeated experiment
 /// configurations (kernel matrices, benches, determinism tests) hit the
-/// cache instead of re-running codegen.
+/// cache instead of re-running codegen; the cache is LRU-bounded at
+/// [`PROGRAM_CACHE_CAP`].
 pub fn cached_program(k: &KernelDef, variant: Variant, p: &Params) -> Arc<Program> {
     let key = ProgKey { kernel: k.name, variant, n: p.n, cores: p.cores };
-    let cache = PROGRAM_CACHE.get_or_init(|| Mutex::new(HashMap::new()));
-    if let Some(prog) = cache.lock().unwrap().get(&key) {
-        return Arc::clone(prog);
+    if let Some(prog) = global_cache().lock().unwrap().lookup(&key) {
+        return prog;
     }
     // Generate outside the lock (codegen is the expensive part); a racing
     // worker generating the same key is harmless — first insert wins.
     let prog = Arc::new((k.gen)(variant, p));
-    Arc::clone(cache.lock().unwrap().entry(key).or_insert(prog))
+    global_cache().lock().unwrap().insert(key, prog)
 }
 
 /// Number of distinct programs currently cached (benchmark/diagnostics).
 pub fn program_cache_len() -> usize {
     PROGRAM_CACHE.get().map_or(0, |c| c.lock().unwrap().len())
+}
+
+/// Drop every cached program (e.g. between unrelated sweeps in a
+/// long-lived process). Subsequent [`cached_program`] calls regenerate.
+pub fn program_cache_clear() {
+    if let Some(c) = PROGRAM_CACHE.get() {
+        c.lock().unwrap().clear();
+    }
 }
 
 /// Outcome of a simulated kernel run.
@@ -212,7 +322,13 @@ pub struct RunResult {
     /// The final cluster state (TCDM contents, memories) — present only
     /// when the run was parameterized with [`Params::with_cluster`];
     /// boxed so a default [`RunResult`] stays small in wide sweeps.
+    /// Multi-cluster runs keep cluster 0.
     pub cluster: Option<Box<Cluster>>,
+    /// Stage split and DMA traffic of a [`crate::system::System`] run —
+    /// present exactly when the run went through the system layer
+    /// (`params.clusters > 1`, or [`crate::system::run_kernel_system`]
+    /// directly).
+    pub system: Option<crate::system::SystemStats>,
 }
 
 /// The cluster configuration a kernel run instantiates (also the reuse
@@ -267,16 +383,22 @@ fn result_from(
         stats,
         max_err,
         cluster,
+        system: None,
     }
 }
 
 /// Load (from the program cache), simulate and check one
-/// kernel/variant/size on a freshly constructed cluster.
+/// kernel/variant/size on a freshly constructed cluster. Runs with
+/// `params.clusters > 1` dispatch to the system layer
+/// ([`crate::system::run_kernel_system`]) instead.
 pub fn run_kernel(
     k: &KernelDef,
     variant: Variant,
     params: &Params,
 ) -> Result<RunResult, String> {
+    if params.clusters > 1 {
+        return crate::system::run_kernel_system(k, variant, params);
+    }
     let prog = cached_program(k, variant, params);
     let mut cl = Cluster::new(config_for(k, variant, params));
     cl.load(&prog);
@@ -326,7 +448,9 @@ pub fn run_kernel_pooled(
     variant: Variant,
     params: &Params,
 ) -> Result<RunResult, String> {
-    if params.keep_cluster {
+    if params.keep_cluster || params.clusters > 1 {
+        // Nothing to pool: the cluster leaves in the result, or the run
+        // builds a whole System (not pooled — systems are per-run).
         return run_kernel(k, variant, params);
     }
     let prog = cached_program(k, variant, params);
@@ -495,6 +619,59 @@ mod tests {
         let d = cached_program(k, Variant::Ssr, &p2);
         assert!(Arc::ptr_eq(&a, &d), "seed/max_cycles are not part of the key");
         assert!(program_cache_len() >= 2);
+        assert!(program_cache_len() <= PROGRAM_CACHE_CAP, "global cache stays bounded");
+    }
+
+    /// Satellite: the program cache is LRU-bounded — filling a (local)
+    /// cache past capacity evicts the least-recently-used entry, and a
+    /// cleared cache accepts fresh entries. Exercised on a private
+    /// instance so concurrently running tests sharing the process-global
+    /// cache are unaffected.
+    #[test]
+    fn program_cache_evicts_lru_and_reuses_after_clear() {
+        let mk = |n: usize| ProgKey { kernel: "dot", variant: Variant::Ssr, n, cores: 1 };
+        let prog = || {
+            let mut b = crate::asm::ProgramBuilder::new();
+            b.ecall();
+            Arc::new(b.finish())
+        };
+        let mut c = ProgramCache::new(2);
+        assert!(c.is_empty());
+        c.insert(mk(1), prog());
+        c.insert(mk(2), prog());
+        assert_eq!(c.len(), 2);
+        // Touch key 1 so key 2 becomes the LRU victim.
+        assert!(c.lookup(&mk(1)).is_some());
+        c.insert(mk(3), prog());
+        assert_eq!(c.len(), 2, "capacity held");
+        assert!(c.lookup(&mk(2)).is_none(), "LRU entry evicted");
+        assert!(c.lookup(&mk(1)).is_some(), "recently-used entry survives");
+        assert!(c.lookup(&mk(3)).is_some());
+        // Re-inserting an existing key refreshes, never duplicates or
+        // replaces the first-inserted program (racing-generator rule).
+        let first = c.lookup(&mk(1)).unwrap();
+        let again = c.insert(mk(1), prog());
+        assert!(Arc::ptr_eq(&first, &again), "first insert wins");
+        assert_eq!(c.len(), 2);
+        // Reuse after clear.
+        c.clear();
+        assert_eq!(c.len(), 0);
+        assert!(c.lookup(&mk(1)).is_none());
+        let fresh = prog();
+        let got = c.insert(mk(1), Arc::clone(&fresh));
+        assert!(Arc::ptr_eq(&got, &fresh), "cleared cache accepts fresh entries");
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.cap(), 2);
+    }
+
+    /// Satellite: `ClusterPool` is `Default`-constructible and starts
+    /// empty.
+    #[test]
+    fn cluster_pool_default_is_empty() {
+        let pool = ClusterPool::default();
+        assert!(pool.is_empty());
+        assert_eq!(pool.len(), 0);
+        assert_eq!(pool.reuses, 0);
     }
 
     /// `max_cycles` bounds the run: an absurdly small budget errors out.

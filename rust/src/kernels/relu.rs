@@ -15,8 +15,14 @@ use crate::isa::csr::{ssr_bound_csr, ssr_rptr_csr, ssr_stride_csr, ssr_wptr_csr,
 
 const X: u32 = rt::DATA;
 
-fn y_addr(n: usize) -> u32 {
+pub(crate) fn y_addr(n: usize) -> u32 {
     X + 8 * n as u32
+}
+
+/// Host-visible input layout for the multi-cluster shard planner
+/// ([`super::shard`]).
+pub(crate) fn host_arrays(p: &Params) -> Vec<(u32, Vec<f64>)> {
+    vec![(X, inputs(p))]
 }
 
 fn gen(v: Variant, p: &Params) -> Program {

@@ -1,0 +1,330 @@
+//! Shard-aware program generation for multi-cluster runs: how a kernel's
+//! full problem splits into per-cluster sub-problems, which DMA transfers
+//! move each cluster's shard between the shared external memory and its
+//! TCDM, and how the re-assembled outputs validate against the
+//! full-problem host reference.
+//!
+//! ## Ownership rules
+//!
+//! Work splits evenly over **all** cores of the system (`clusters ×
+//! cores`), exactly like the single-cluster `mhartid` split — cluster `c`
+//! owns the contiguous global range covered by its cores. The planner
+//! requires `n % (clusters × cores) == 0` so every core gets a non-empty,
+//! equal share (the kernels' inner loops are do-while shaped).
+//!
+//! * **dot / relu / axpy** — element ranges. Each cluster runs the
+//!   full-layout program (`gen(v, Params { n, cores })` — addresses are
+//!   the full-problem TCDM layout) but its TCDM only holds the owned
+//!   slice of each input array, DMA'd from the shared memory; the work
+//!   bounds restrict every core to the owned range. dot reduces to a
+//!   per-cluster partial (`RESULT`), written back to a per-cluster slot
+//!   and summed host-side; relu/axpy write back their output slice.
+//! * **dgemm** — column stripes (the kernel's own per-core chunking,
+//!   widened to the whole system): the per-cluster program is
+//!   `gen(v, Params { n, cores: clusters × cores })`, i.e. **the same
+//!   image a (clusters×cores)-core cluster would run**, with each
+//!   cluster's bounds naming its cores' global column stripes. A is
+//!   broadcast (1D DMA), the B and C stripes move as strided 2D
+//!   transfers.
+//! * everything else (fft, knn, montecarlo, conv2d) — **opted out**:
+//!   [`plan`] refuses, and `System` runs them single-cluster only.
+//!
+//! ## Shared-memory layout
+//!
+//! The full-problem TCDM image is mirrored into the shared memory at
+//! [`ext_of`]: TCDM address `a` ↔ `EXT_BASE + 0x1000 + (a - TCDM_BASE)`.
+//! Inputs are written there by the host ([`write_ext_inputs`]); outputs
+//! land back there via DMA write-back, except dot's per-cluster partials,
+//! which occupy consecutive slots at `ext_of(RESULT)`.
+
+use super::runtime as rt;
+use super::{allclose, KernelDef, Params};
+use crate::cluster::Cluster;
+use crate::mem::{ExtMemory, EXT_BASE};
+use crate::system::dma::DmaXfer;
+use crate::system::System;
+
+/// Kernels with a shard plan (ISSUE 5 scope; others opt out explicitly).
+pub const SUPPORTED: [&str; 4] = ["dgemm", "axpy", "dot", "relu"];
+
+pub fn supports(kernel: &str) -> bool {
+    SUPPORTED.contains(&kernel)
+}
+
+/// Base of the full-problem TCDM mirror in the shared external memory.
+pub const EXT_DATA: u32 = EXT_BASE + 0x1000;
+
+/// Shared-memory address mirroring TCDM address `tcdm_addr`.
+pub fn ext_of(tcdm_addr: u32) -> u32 {
+    EXT_DATA + (tcdm_addr - rt::SCRATCH)
+}
+
+/// One cluster's slice of the problem.
+#[derive(Debug, Clone)]
+pub struct Shard {
+    /// First owned element/column (global index) and count.
+    pub lo: usize,
+    pub cnt: usize,
+    /// Per-local-core work bounds, in global indices (written to the
+    /// cluster's `BOUNDS` table — the same `(lo, cnt)` format as
+    /// [`rt::write_bounds`]).
+    pub bounds: Vec<(usize, usize)>,
+    /// Preload transfers (shared memory → TCDM).
+    pub dma_in: Vec<DmaXfer>,
+    /// Write-back transfers (TCDM → shared memory).
+    pub dma_out: Vec<DmaXfer>,
+}
+
+/// A full shard plan: per-cluster shards plus the program-generation
+/// parameters (identical programs for every cluster).
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    pub shards: Vec<Shard>,
+    /// Parameters the per-cluster program is generated (and cached)
+    /// with: `cores` is the *total* core count for dgemm (which bakes
+    /// its per-core chunk), the local count otherwise.
+    pub prog_params: Params,
+}
+
+/// Even split of `total` items over `parts`, as (lo, cnt) — the same
+/// arithmetic as [`rt::write_bounds`].
+fn split(total: usize, parts: usize) -> Vec<(usize, usize)> {
+    let base = total / parts;
+    let rem = total % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut lo = 0usize;
+    for i in 0..parts {
+        let cnt = base + usize::from(i < rem);
+        out.push((lo, cnt));
+        lo += cnt;
+    }
+    out
+}
+
+/// Shard `k`'s problem across `clusters` clusters of `p.cores` cores.
+pub fn plan(k: &KernelDef, p: &Params, clusters: usize) -> Result<ShardPlan, String> {
+    if !supports(k.name) {
+        return Err(format!(
+            "kernel {} does not shard across clusters (shard-aware: {})",
+            k.name,
+            SUPPORTED.join(", ")
+        ));
+    }
+    assert!(clusters >= 1, "a plan needs at least one cluster");
+    let n = p.n;
+    let total_cores = clusters * p.cores;
+    if n % total_cores != 0 {
+        return Err(format!(
+            "{} sharding needs n ({n}) divisible by clusters × cores ({total_cores})",
+            k.name
+        ));
+    }
+    let gbounds = split(n, total_cores);
+    let per = n / clusters;
+    let rowb = 8 * n as u32; // dgemm row stride in bytes
+    let mut shards = Vec::with_capacity(clusters);
+    for c in 0..clusters {
+        let lo = c * per;
+        let cnt = per;
+        let bounds = gbounds[c * p.cores..(c + 1) * p.cores].to_vec();
+        let off = 8 * lo as u32;
+        let len = 8 * cnt as u32;
+        let (dma_in, dma_out) = match k.name {
+            "dot" => {
+                let a = rt::DATA;
+                let b = super::dot::b_addr(n);
+                (
+                    vec![
+                        DmaXfer::d1(ext_of(a + off), a + off, len, true),
+                        DmaXfer::d1(ext_of(b + off), b + off, len, true),
+                    ],
+                    // Per-cluster partial into consecutive slots.
+                    vec![DmaXfer::d1(ext_of(rt::RESULT) + 8 * c as u32, rt::RESULT, 8, false)],
+                )
+            }
+            "relu" => {
+                let x = rt::DATA;
+                let y = super::relu::y_addr(n);
+                (
+                    vec![DmaXfer::d1(ext_of(x + off), x + off, len, true)],
+                    vec![DmaXfer::d1(ext_of(y + off), y + off, len, false)],
+                )
+            }
+            "axpy" => {
+                let x = rt::DATA;
+                let y = super::axpy::y_addr(n);
+                let s = super::axpy::A_SCALAR;
+                (
+                    vec![
+                        DmaXfer::d1(ext_of(x + off), x + off, len, true),
+                        DmaXfer::d1(ext_of(y + off), y + off, len, true),
+                        DmaXfer::d1(ext_of(s), s, 8, true),
+                    ],
+                    vec![DmaXfer::d1(ext_of(y + off), y + off, len, false)],
+                )
+            }
+            "dgemm" => {
+                // lo/cnt are output *columns*: broadcast A, stripe B/C.
+                let a = rt::DATA;
+                let b = super::dgemm::b_addr(n);
+                let cm = super::dgemm::c_addr(n);
+                (
+                    vec![
+                        DmaXfer::d1(ext_of(a), a, 8 * (n * n) as u32, true),
+                        DmaXfer::d2(ext_of(b) + off, b + off, len, n as u32, rowb, rowb, true),
+                    ],
+                    vec![DmaXfer::d2(ext_of(cm) + off, cm + off, len, n as u32, rowb, rowb, false)],
+                )
+            }
+            other => unreachable!("unsupported shard kernel {other}"),
+        };
+        shards.push(Shard { lo, cnt, bounds, dma_in, dma_out });
+    }
+    let mut prog_params = *p;
+    prog_params.clusters = 1;
+    if k.name == "dgemm" {
+        prog_params.cores = total_cores;
+    }
+    Ok(ShardPlan { shards, prog_params })
+}
+
+/// The full input arrays of the kernel, by TCDM address (deterministic
+/// from `p.seed`, identical to what the single-cluster `setup` writes).
+fn host_arrays(kernel: &str, p: &Params) -> Vec<(u32, Vec<f64>)> {
+    match kernel {
+        "dot" => super::dot::host_arrays(p),
+        "relu" => super::relu::host_arrays(p),
+        "axpy" => super::axpy::host_arrays(p),
+        "dgemm" => super::dgemm::host_arrays(p),
+        other => unreachable!("unsupported shard kernel {other}"),
+    }
+}
+
+/// Host side: write the kernel's full inputs into the shared external
+/// memory at the TCDM-mirror layout ([`ext_of`]).
+pub fn write_ext_inputs(ext: &mut ExtMemory, k: &KernelDef, p: &Params) {
+    for (addr, data) in host_arrays(k.name, p) {
+        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        ext.load(ext_of(addr), &bytes);
+    }
+}
+
+/// Host side: write one cluster's work-bounds table (the only TCDM state
+/// the host seeds directly — array data arrives by DMA).
+pub fn setup_cluster(cl: &mut Cluster, sh: &Shard) {
+    for (i, &(lo, cnt)) in sh.bounds.iter().enumerate() {
+        cl.tcdm.write_u32_slice(rt::BOUNDS + 8 * i as u32, &[lo as u32, cnt as u32]);
+    }
+}
+
+fn read_ext_f64(ext: &ExtMemory, addr: u32, n: usize) -> Vec<f64> {
+    (0..n).map(|i| f64::from_bits(ext.read(addr + 8 * i as u32, 8))).collect()
+}
+
+/// Validate a finished system run: re-assemble the written-back outputs
+/// from the shared memory and compare against the full-problem host
+/// reference (same tolerances as the single-cluster `check`s). Returns
+/// the max |error|.
+pub fn check(sys: &System, k: &KernelDef, p: &Params, plan: &ShardPlan) -> Result<f64, String> {
+    let n = p.n;
+    let arrays = host_arrays(k.name, p);
+    match k.name {
+        "dot" => {
+            let (a, b) = (&arrays[0].1, &arrays[1].1);
+            let want: f64 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+            let got: f64 = (0..plan.shards.len())
+                .map(|c| f64::from_bits(sys.ext.read(ext_of(rt::RESULT) + 8 * c as u32, 8)))
+                .sum();
+            allclose(&[got], &[want], 1e-9, 1e-9)
+        }
+        "relu" => {
+            let x = &arrays[0].1;
+            let want: Vec<f64> = x.iter().map(|&v| v.max(0.0)).collect();
+            let got = read_ext_f64(&sys.ext, ext_of(super::relu::y_addr(n)), n);
+            allclose(&got, &want, 0.0, 0.0)
+        }
+        "axpy" => {
+            let (x, y, a) = (&arrays[0].1, &arrays[1].1, arrays[2].1[0]);
+            let want: Vec<f64> = x.iter().zip(y).map(|(xi, yi)| a.mul_add(*xi, *yi)).collect();
+            let got = read_ext_f64(&sys.ext, ext_of(super::axpy::y_addr(n)), n);
+            allclose(&got, &want, 1e-12, 0.0)
+        }
+        "dgemm" => {
+            let (a, b) = (&arrays[0].1, &arrays[1].1);
+            let want = super::dgemm::reference(n, a, b);
+            let got = read_ext_f64(&sys.ext, ext_of(super::dgemm::c_addr(n)), n * n);
+            allclose(&got, &want, 1e-12, 1e-14)
+        }
+        other => unreachable!("unsupported shard kernel {other}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::kernel_by_name;
+
+    #[test]
+    fn plan_splits_evenly_and_covers_the_problem() {
+        let k = kernel_by_name("dot").unwrap();
+        let p = Params::new(256, 8);
+        let plan = plan(k, &p, 4).expect("plan");
+        assert_eq!(plan.shards.len(), 4);
+        let mut next = 0usize;
+        for (c, sh) in plan.shards.iter().enumerate() {
+            assert_eq!(sh.lo, next, "cluster {c} contiguous");
+            assert_eq!(sh.cnt, 64);
+            assert_eq!(sh.bounds.len(), 8);
+            // Core bounds tile the shard exactly.
+            let mut lo = sh.lo;
+            for &(blo, bcnt) in &sh.bounds {
+                assert_eq!(blo, lo);
+                assert_eq!(bcnt, 8);
+                lo += bcnt;
+            }
+            assert_eq!(lo, sh.lo + sh.cnt);
+            next += sh.cnt;
+            // Two preloads (a, b), one partial write-back.
+            assert_eq!(sh.dma_in.len(), 2);
+            assert_eq!(sh.dma_out.len(), 1);
+            assert_eq!(sh.dma_in[0].total_bytes(), 8 * 64);
+        }
+        assert_eq!(next, 256);
+        // dot programs keep the local core count.
+        assert_eq!(plan.prog_params.cores, 8);
+    }
+
+    #[test]
+    fn dgemm_plan_uses_total_cores_and_2d_stripes() {
+        let k = kernel_by_name("dgemm").unwrap();
+        let p = Params::new(32, 8);
+        let plan = plan(k, &p, 2).expect("plan");
+        // The program is the 16-core single-cluster image.
+        assert_eq!(plan.prog_params.cores, 16);
+        let sh = &plan.shards[1];
+        assert_eq!((sh.lo, sh.cnt), (16, 16));
+        // A broadcast is 1D and full-size; B stripe is 2D.
+        assert_eq!(sh.dma_in[0].rows, 1);
+        assert_eq!(sh.dma_in[0].total_bytes(), 8 * 32 * 32);
+        assert_eq!(sh.dma_in[1].rows, 32);
+        assert_eq!(sh.dma_in[1].row_bytes, 8 * 16);
+        assert_eq!(sh.dma_in[1].ext_stride, 8 * 32);
+        assert_eq!(sh.dma_out[0].rows, 32);
+    }
+
+    #[test]
+    fn plan_rejects_unsupported_and_indivisible() {
+        let fft = kernel_by_name("fft").unwrap();
+        assert!(plan(fft, &Params::new(64, 8), 2).is_err());
+        let dot = kernel_by_name("dot").unwrap();
+        let e = plan(dot, &Params::new(100, 8), 3).unwrap_err();
+        assert!(e.contains("divisible"), "{e}");
+        assert!(plan(dot, &Params::new(96, 8), 3).is_ok());
+    }
+
+    #[test]
+    fn ext_mirror_is_offset_stable() {
+        assert_eq!(ext_of(rt::SCRATCH), EXT_DATA);
+        assert_eq!(ext_of(rt::DATA) - ext_of(rt::SCRATCH), rt::DATA - rt::SCRATCH);
+    }
+}

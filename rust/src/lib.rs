@@ -25,7 +25,10 @@
 //!   instruction (inner/outer repetition, operand staggering).
 //! * [`muldiv`] — the per-hive shared integer multiply/divide unit.
 //! * [`mem`] — banked TCDM with conflict arbitration and per-bank atomic
-//!   units, plus the cluster-external memory.
+//!   units, the cluster-external memory, and the generic memory-port
+//!   protocol ([`mem::port`]: [`mem::MemDevice`] / [`mem::MemPort`] /
+//!   round-robin [`mem::Interconnect`]) that shares one external memory
+//!   between clusters.
 //! * [`icache`] — per-core L0 and shared L1 instruction caches.
 //! * [`cluster`] — core complex / hive / cluster assembly and the cluster
 //!   peripherals (performance counters, wake-up).
@@ -39,9 +42,16 @@
 //! * [`vector`] — an Ara-like vector-lane timing model (Table 3 comparator).
 //! * [`kernels`] — the paper's eight microkernels in three variants
 //!   (baseline / +SSR / +SSR+FREP) as typed program generators over the
-//!   builder IR, with a sweep-level program cache
+//!   builder IR, with an LRU-bounded sweep-level program cache
 //!   ([`kernels::cached_program`]) so each `(kernel, variant, n, cores)`
-//!   configuration assembles exactly once per process.
+//!   configuration assembles exactly once per process, and shard plans
+//!   ([`kernels::shard`]) for splitting dgemm/axpy/dot/relu across
+//!   clusters.
+//! * [`system`] — the sharded multi-cluster layer: `N` clusters behind a
+//!   shared external memory and round-robin interconnect, per-cluster
+//!   DMA engines ([`system::DmaEngine`]) preloading TCDM shards and
+//!   writing results back, all driven by the same [`sim`] phase engine
+//!   (a 1-cluster system is bit-identical to a standalone cluster).
 //! * [`runtime`] — PJRT golden-model execution of the AOT-lowered JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) used to validate simulated results.
 //! * [`coordinator`] — the typed evaluation API: an artifact registry
@@ -78,4 +88,5 @@ pub mod muldiv;
 pub mod runtime;
 pub mod sim;
 pub mod ssr;
+pub mod system;
 pub mod vector;

@@ -32,6 +32,9 @@ pub struct ExtMemory {
     /// In-flight burst reads: (port, addr, beats, ready_at).
     bursts: VecDeque<(usize, u32, u32, u64)>,
     burst_resp: Vec<Option<Vec<u8>>>,
+    /// In-flight burst writes: (port, addr, bytes, ready_at). Acked via
+    /// the single-beat response slot (`is_write`).
+    wbursts: VecDeque<(usize, u32, Vec<u8>, u64)>,
     pub accesses: u64,
 }
 
@@ -45,6 +48,7 @@ impl ExtMemory {
             resp: vec![None; num_ports],
             bursts: VecDeque::new(),
             burst_resp: vec![None; num_ports],
+            wbursts: VecDeque::new(),
             accesses: 0,
         }
     }
@@ -59,6 +63,16 @@ impl ExtMemory {
     pub fn submit_burst(&mut self, port: usize, addr: u32, len: u32, now: u64) {
         let beats = len.div_ceil(8);
         self.bursts.push_back((port, addr, len, now + EXT_LATENCY + EXT_BEAT * u64::from(beats)));
+        self.accesses += 1;
+    }
+
+    /// Submit a burst write of `bytes` (DMA write-back). Same latency
+    /// shape as a burst read; completion is acked through the single-beat
+    /// response slot with `is_write` set.
+    pub fn submit_burst_write(&mut self, port: usize, addr: u32, bytes: Vec<u8>, now: u64) {
+        let beats = (bytes.len() as u32).div_ceil(8);
+        let ready = now + EXT_LATENCY + EXT_BEAT * u64::from(beats);
+        self.wbursts.push_back((port, addr, bytes, ready));
         self.accesses += 1;
     }
 
@@ -112,6 +126,7 @@ impl ExtMemory {
         self.resp.fill(None);
         self.bursts.clear();
         self.burst_resp.fill(None);
+        self.wbursts.clear();
         self.accesses = 0;
     }
 }
@@ -150,12 +165,19 @@ impl Tick for ExtMemory {
             self.ensure(o + len as usize);
             self.burst_resp[port] = Some(self.mem[o..o + len as usize].to_vec());
         }
+        while self.wbursts.front().is_some_and(|f| f.3 <= now && self.resp[f.0].is_none()) {
+            let (port, addr, bytes, _) = self.wbursts.pop_front().unwrap();
+            let o = (addr - EXT_BASE) as usize;
+            self.ensure(o + bytes.len());
+            self.mem[o..o + bytes.len()].copy_from_slice(&bytes);
+            self.resp[port] = Some(TcdmResponse { data: 0, is_write: true });
+        }
     }
 
     /// Delivery only acts on in-flight accesses; undelivered responses are
     /// pulled by the initiators, so an empty queue means a no-op tick.
     fn active(&self) -> bool {
-        !self.inflight.is_empty() || !self.bursts.is_empty()
+        !self.inflight.is_empty() || !self.bursts.is_empty() || !self.wbursts.is_empty()
     }
 
     fn name(&self) -> &'static str {
@@ -197,5 +219,26 @@ mod tests {
         let (cycle, b) = got.expect("burst must complete");
         assert_eq!(b, bytes);
         assert!(cycle >= EXT_LATENCY);
+    }
+
+    #[test]
+    fn burst_write_lands_after_latency_and_acks() {
+        let mut m = ExtMemory::new(1);
+        let bytes: Vec<u8> = (0..16).map(|i| i * 3).collect();
+        m.submit_burst_write(0, EXT_BASE + 128, bytes.clone(), 0);
+        let mut acked_at = None;
+        for c in 0..64 {
+            m.tick(c);
+            if let Some(r) = m.take_response(0) {
+                assert!(r.is_write);
+                acked_at = Some(c);
+                break;
+            }
+        }
+        let cycle = acked_at.expect("write must ack");
+        assert!(cycle >= EXT_LATENCY + EXT_BEAT * 2, "16 bytes = 2 beats");
+        for (i, want) in bytes.iter().enumerate() {
+            assert_eq!(m.read(EXT_BASE + 128 + i as u32, 1), u64::from(*want));
+        }
     }
 }

@@ -1,10 +1,14 @@
 //! Memory subsystem: address map, banked TCDM with per-bank atomic units,
-//! and the cluster-external (AXI-attached) memory.
+//! the cluster-external (AXI-attached) memory, and the generic port
+//! protocol ([`port`]) that shares one external memory between clusters
+//! behind a round-robin [`Interconnect`].
 
 pub mod ext;
 pub mod map;
+pub mod port;
 pub mod tcdm;
 
 pub use ext::ExtMemory;
 pub use map::*;
+pub use port::{ExtIf, Interconnect, MemDevice, MemPort};
 pub use tcdm::{MemOp, Tcdm, TcdmRequest, TcdmResponse};

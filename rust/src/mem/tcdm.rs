@@ -371,6 +371,13 @@ impl Tcdm {
         self.mem[o..o + bytes.len()].copy_from_slice(bytes);
     }
 
+    /// Zero-time bulk read of a whole byte slice (the DMA engine's
+    /// TCDM-side read port; mirror of [`Tcdm::load_slice`]).
+    pub fn read_slice(&self, addr: u32, len: usize) -> Vec<u8> {
+        let o = (addr - self.base) as usize;
+        self.mem[o..o + len].to_vec()
+    }
+
     /// Host-side helper: read an `f64` array.
     pub fn read_f64_slice(&self, addr: u32, n: usize) -> Vec<f64> {
         (0..n).map(|i| f64::from_bits(self.read(addr + 8 * i as u32, 8))).collect()

@@ -1,0 +1,545 @@
+//! The multi-cluster system: `N` Snitch clusters sharing one external
+//! memory behind a round-robin interconnect, each with a DMA engine that
+//! preloads its TCDM shard and writes results back.
+//!
+//! ## Structure
+//!
+//! A [`System`] owns `clusters: Vec<Cluster>` (each constructed with
+//! [`crate::cluster::Cluster::use_ext_port`], so cluster-issued external
+//! accesses travel the port protocol instead of a private memory), the
+//! shared [`crate::mem::ExtMemory`], a [`crate::mem::Interconnect`], and
+//! one [`DmaEngine`] per cluster. It is driven by the same
+//! [`crate::sim::ClockDomain`] phase engine as a cluster, with gated
+//! phases (see [`System::default_schedule`]):
+//!
+//! 1. `ext-mem` — the shared memory delivers matured responses;
+//! 2. `xbar` — the interconnect routes responses to client ports and
+//!    grants queued requests round-robin;
+//! 3. `dma` — every DMA engine advances its transfer queue;
+//! 4. `clusters` — during the compute stage, every unfinished cluster
+//!    runs one full cluster cycle (its own gated phase schedule);
+//! 5. `control` — the stage machine advances.
+//!
+//! ## Stage machine & timing accounting
+//!
+//! A kernel run proceeds [`Stage::DmaIn`] → [`Stage::Compute`] →
+//! [`Stage::DmaOut`] → [`Stage::Done`]. Cluster-local clocks only advance
+//! during `Compute`, so a 1-cluster system's compute epoch is
+//! **bit-identical** to a standalone [`crate::cluster::Cluster`] run of
+//! the same program and TCDM image (cycle counts, stats, trace hashes —
+//! held by `tests/system.rs` and the determinism suite). The system
+//! clock [`System::now`] spans all stages; [`SystemStats`] reports the
+//! per-stage split.
+//!
+//! ## Sharded kernel runs
+//!
+//! [`run_kernel_system`] executes one kernel across the system:
+//! shard-aware kernels (see [`crate::kernels::shard`]) have their full
+//! inputs written to the shared memory, per-cluster shards DMA'd into
+//! each TCDM, per-cluster programs computed in parallel, and outputs
+//! DMA'd back for a host-side `allclose` against the full-problem
+//! reference. Kernels without a shard plan run unsharded on a 1-cluster
+//! system (and refuse `clusters > 1`).
+
+pub mod dma;
+
+use crate::cluster::{Cluster, ClusterConfig};
+use crate::kernels::{self, shard, KernelDef, Params, RunResult, Variant};
+use crate::mem::{ExtMemory, Interconnect, MemPort};
+use crate::sim::{ClockDomain, Cycle, Tick};
+
+pub use dma::{DmaEngine, DmaXfer, DMA_MAX_BURST};
+
+/// Run stage of a [`System`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// DMA engines preload TCDM shards; cluster clocks are frozen.
+    DmaIn,
+    /// Clusters compute (each advancing its own clock from 0).
+    Compute,
+    /// DMA engines write results back to the shared memory.
+    DmaOut,
+    Done,
+}
+
+/// Per-stage cycle split and DMA traffic of a finished system run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct SystemStats {
+    pub clusters: usize,
+    /// Whole-run system cycles (all stages).
+    pub total_cycles: u64,
+    pub dma_in_cycles: u64,
+    pub compute_cycles: u64,
+    pub dma_out_cycles: u64,
+    pub dma_bytes_in: u64,
+    pub dma_bytes_out: u64,
+    /// Requests the shared external memory served (cores + DMA).
+    pub ext_accesses: u64,
+}
+
+/// The sharded multi-cluster system.
+pub struct System {
+    pub cfg: ClusterConfig,
+    pub clusters: Vec<Cluster>,
+    /// One DMA engine per cluster (same index).
+    pub dmas: Vec<DmaEngine>,
+    /// The shared external memory (all clusters, all DMA engines).
+    pub ext: ExtMemory,
+    pub xbar: Interconnect,
+    /// The system-level cycle engine (stage phases; cluster-internal
+    /// phases run nested inside the `clusters` phase).
+    pub engine: ClockDomain<System>,
+    /// Mirror of the engine clock, like [`Cluster::now`].
+    pub now: u64,
+    stage: Stage,
+    /// Write-back descriptors queued per cluster, released into the DMA
+    /// engines when compute completes.
+    pending_out: Vec<Vec<DmaXfer>>,
+    /// Cycle at which DMA-in finished (Compute began).
+    dma_in_done_at: u64,
+    /// Cycle at which compute finished (DmaOut began).
+    compute_done_at: u64,
+}
+
+// ---- phase bodies and gates (free functions, like the cluster's, so the
+// schedule stays `fn`-pointer data). Gates obey the engine contract: a
+// skipped phase would have changed no observable state. ----
+
+fn phase_ext(sys: &mut System, now: Cycle) {
+    sys.ext.tick(now);
+}
+
+fn gate_ext(sys: &System) -> bool {
+    sys.ext.active()
+}
+
+fn phase_xbar(sys: &mut System, now: Cycle) {
+    let System { clusters, dmas, ext, xbar, .. } = sys;
+    let mut clients: Vec<&mut MemPort> = Vec::with_capacity(clusters.len() + dmas.len());
+    for cl in clusters.iter_mut() {
+        clients.push(cl.ext.as_port_mut().expect("system clusters use ext ports"));
+    }
+    for d in dmas.iter_mut() {
+        clients.push(&mut d.port);
+    }
+    xbar.route(&mut clients, ext, now);
+}
+
+/// A routing pass matters only when a granted request awaits delivery
+/// (`Interconnect::quiet`, O(1)) or some client has queued requests to
+/// grant (O(clients) flag checks). Quiescent compute stages — sharded
+/// kernels issue no external traffic while computing — skip the phase
+/// and its per-cycle client-list allocation entirely.
+fn gate_xbar(sys: &System) -> bool {
+    !sys.xbar.quiet()
+        || sys.ext.active()
+        || sys.clusters.iter().any(|cl| cl.ext.has_pending())
+        || sys.dmas.iter().any(|d| d.port.pending_len() > 0)
+}
+
+fn phase_dma(sys: &mut System, now: Cycle) {
+    let System { clusters, dmas, .. } = sys;
+    for (c, d) in dmas.iter_mut().enumerate() {
+        d.step(&mut clusters[c].tcdm, now);
+    }
+}
+
+fn gate_dma(sys: &System) -> bool {
+    sys.dmas.iter().any(|d| d.busy())
+}
+
+fn phase_clusters(sys: &mut System, _now: Cycle) {
+    if sys.stage != Stage::Compute {
+        return;
+    }
+    for cl in &mut sys.clusters {
+        if !cl.done() {
+            cl.cycle();
+        }
+    }
+}
+
+fn gate_clusters(sys: &System) -> bool {
+    sys.stage == Stage::Compute && !sys.clusters.iter().all(Cluster::done)
+}
+
+fn phase_control(sys: &mut System, now: Cycle) {
+    match sys.stage {
+        Stage::DmaIn => {
+            if sys.dmas.iter().all(DmaEngine::idle) {
+                sys.dma_in_done_at = now;
+                sys.stage = Stage::Compute;
+            }
+        }
+        Stage::Compute => {
+            if sys.clusters.iter().all(Cluster::done) {
+                sys.compute_done_at = now;
+                let mut queued = false;
+                for c in 0..sys.clusters.len() {
+                    let xfers = std::mem::take(&mut sys.pending_out[c]);
+                    for x in xfers {
+                        sys.dmas[c].enqueue(x);
+                        queued = true;
+                    }
+                }
+                sys.stage = if queued { Stage::DmaOut } else { Stage::Done };
+            }
+        }
+        Stage::DmaOut => {
+            if sys.dmas.iter().all(DmaEngine::idle) {
+                sys.stage = Stage::Done;
+            }
+        }
+        Stage::Done => {}
+    }
+}
+
+impl System {
+    /// A system of `num_clusters` identical clusters of shape `cfg`,
+    /// sharing one external memory. Every cluster's external interface is
+    /// a port onto the shared interconnect; nothing is loaded yet.
+    pub fn new(cfg: ClusterConfig, num_clusters: usize) -> System {
+        assert!(num_clusters >= 1, "a system needs at least one cluster");
+        let cores = cfg.num_cores();
+        let clusters: Vec<Cluster> = (0..num_clusters)
+            .map(|_| {
+                let mut cl = Cluster::new(cfg);
+                cl.use_ext_port();
+                cl
+            })
+            .collect();
+        let dmas: Vec<DmaEngine> = (0..num_clusters).map(|_| DmaEngine::new()).collect();
+        System {
+            cfg,
+            clusters,
+            dmas,
+            // Device ports: cores of every cluster, then one per DMA
+            // engine (the interconnect flattens clients in that order).
+            ext: ExtMemory::new(num_clusters * cores + num_clusters),
+            xbar: Interconnect::new(1),
+            engine: System::default_schedule(),
+            now: 0,
+            stage: Stage::DmaIn,
+            pending_out: vec![Vec::new(); num_clusters],
+            dma_in_done_at: 0,
+            compute_done_at: 0,
+        }
+    }
+
+    /// The system-level phase schedule (module docs). `control` is
+    /// cheap and ungated; the rest carry activity gates.
+    pub fn default_schedule() -> ClockDomain<System> {
+        let mut d = ClockDomain::new();
+        d.register_gated("ext-mem", phase_ext, gate_ext);
+        d.register_gated("xbar", phase_xbar, gate_xbar);
+        d.register_gated("dma", phase_dma, gate_dma);
+        d.register_gated("clusters", phase_clusters, gate_clusters);
+        d.register("control", phase_control);
+        d
+    }
+
+    pub fn stage(&self) -> Stage {
+        self.stage
+    }
+
+    /// Queue write-back transfers for cluster `c`, executed by its DMA
+    /// engine once compute completes.
+    pub fn queue_writeback(&mut self, c: usize, xfers: impl IntoIterator<Item = DmaXfer>) {
+        self.pending_out[c].extend(xfers);
+    }
+
+    /// Advance one system cycle (embedded-engine pattern, identical to
+    /// [`Cluster::cycle`]).
+    pub fn cycle(&mut self) {
+        let now = self.engine.now();
+        debug_assert_eq!(self.now, now, "system clock out of sync with engine");
+        for i in 0..self.engine.num_phases() {
+            let phase = self.engine.phase(i);
+            let ran = match phase.active {
+                Some(gate) => gate(self),
+                None => true,
+            };
+            self.engine.note_phase(i, ran);
+            if ran {
+                (phase.run)(self, now);
+            }
+        }
+        self.engine.advance();
+        self.now = self.engine.now();
+    }
+
+    pub fn done(&self) -> bool {
+        self.stage == Stage::Done
+    }
+
+    /// Run all stages to completion or `max_cycles`. Returns the total
+    /// system cycle count.
+    pub fn run(&mut self, max_cycles: u64) -> Result<u64, String> {
+        while !self.done() {
+            if self.now >= max_cycles {
+                return Err(format!(
+                    "system did not finish within {max_cycles} cycles (stage {:?})",
+                    self.stage
+                ));
+            }
+            self.cycle();
+        }
+        Ok(self.now)
+    }
+
+    /// The per-stage cycle split and DMA traffic (valid once
+    /// [`System::done`]).
+    pub fn stats_summary(&self) -> SystemStats {
+        SystemStats {
+            clusters: self.clusters.len(),
+            total_cycles: self.now,
+            dma_in_cycles: self.dma_in_done_at,
+            compute_cycles: self.compute_done_at.saturating_sub(self.dma_in_done_at),
+            dma_out_cycles: self.now.saturating_sub(self.compute_done_at),
+            dma_bytes_in: self.dmas.iter().map(|d| d.bytes_in).sum(),
+            dma_bytes_out: self.dmas.iter().map(|d| d.bytes_out).sum(),
+            ext_accesses: self.ext.accesses,
+        }
+    }
+}
+
+/// Build a ready-to-run system for a shard-aware kernel: clusters
+/// constructed and loaded, full inputs in the shared memory, per-cluster
+/// work bounds written, DMA preloads queued and write-backs pending.
+/// Call [`System::run`] then [`shard::check`] (or use
+/// [`run_kernel_system`], which does all three).
+pub fn build_system(
+    k: &KernelDef,
+    variant: Variant,
+    p: &Params,
+) -> Result<(System, shard::ShardPlan), String> {
+    let clusters = p.clusters.max(1);
+    let plan = shard::plan(k, p, clusters)?;
+    let cfg = kernels::config_for(k, variant, p);
+    let mut sys = System::new(cfg, clusters);
+    shard::write_ext_inputs(&mut sys.ext, k, p);
+    let prog = kernels::cached_program(k, variant, &plan.prog_params);
+    for (c, sh) in plan.shards.iter().enumerate() {
+        sys.clusters[c].load(&prog);
+        shard::setup_cluster(&mut sys.clusters[c], sh);
+        for x in &sh.dma_in {
+            sys.dmas[c].enqueue(*x);
+        }
+        sys.queue_writeback(c, sh.dma_out.iter().copied());
+    }
+    Ok((sys, plan))
+}
+
+/// Execute one kernel on a [`System`] of `p.clusters` clusters and
+/// validate the (re-assembled) outputs against the full-problem host
+/// reference. Kernels without a shard plan run unsharded on a single
+/// cluster and refuse `clusters > 1`.
+pub fn run_kernel_system(
+    k: &KernelDef,
+    variant: Variant,
+    p: &Params,
+) -> Result<RunResult, String> {
+    let clusters = p.clusters.max(1);
+    let ctx = |e: String| format!("{}/{:?} n={} clusters={}: {e}", k.name, variant, p.n, clusters);
+    if !shard::supports(k.name) {
+        if clusters > 1 {
+            return Err(ctx(format!(
+                "kernel does not shard across clusters (shard-aware: {})",
+                shard::SUPPORTED.join(", ")
+            )));
+        }
+        return run_unsharded_single(k, variant, p);
+    }
+    let (mut sys, plan) = build_system(k, variant, p)?;
+    sys.run(p.max_cycles).map_err(&ctx)?;
+    let max_err = shard::check(&sys, k, p, &plan).map_err(&ctx)?;
+    finish(sys, k, variant, p, max_err)
+}
+
+/// The 1-cluster fallback for kernels without a shard plan: host-side
+/// setup straight into the TCDM (exactly the legacy path), computed
+/// through the system engine.
+fn run_unsharded_single(
+    k: &KernelDef,
+    variant: Variant,
+    p: &Params,
+) -> Result<RunResult, String> {
+    let prog = kernels::cached_program(k, variant, p);
+    let mut sys = System::new(kernels::config_for(k, variant, p), 1);
+    sys.clusters[0].load(&prog);
+    (k.setup)(&mut sys.clusters[0], p);
+    sys.run(p.max_cycles)
+        .map_err(|e| format!("{}/{:?} n={} (system): {e}", k.name, variant, p.n))?;
+    let max_err = (k.check)(&sys.clusters[0], p)?;
+    finish(sys, k, variant, p, max_err)
+}
+
+/// Package a finished system run: the reported `cycles` is the compute
+/// makespan (slowest cluster's measured region); `stats` is cluster 0's
+/// bundle (identical across clusters only in shape, not content);
+/// [`RunResult::system`] carries the stage split.
+fn finish(
+    mut sys: System,
+    k: &KernelDef,
+    variant: Variant,
+    p: &Params,
+    max_err: f64,
+) -> Result<RunResult, String> {
+    let all_stats: Vec<crate::cluster::ClusterStats> =
+        sys.clusters.iter().map(Cluster::stats).collect();
+    let cycles = all_stats.iter().map(|s| s.cluster_region_cycles()).max().unwrap_or(0);
+    let summary = sys.stats_summary();
+    let stats = all_stats.into_iter().next().expect("at least one cluster");
+    let cluster = p.keep_cluster.then(|| Box::new(sys.clusters.swap_remove(0)));
+    Ok(RunResult {
+        kernel: k.name,
+        variant,
+        params: *p,
+        cycles,
+        stats,
+        max_err,
+        cluster,
+        system: Some(summary),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::assemble;
+    use crate::mem::{map::EXT_BASE, map::TCDM_BASE};
+
+    const PROG: &str = r#"
+        csrr a0, mhartid
+        slli a1, a0, 3
+        li   t0, 0x10000000
+        add  t0, t0, a1
+        li   t1, 7
+        mul  t2, t1, t1
+        add  t2, t2, a0
+        sw   t2, 0(t0)
+        ecall
+    "#;
+
+    fn two_core_cfg() -> ClusterConfig {
+        let mut cfg = ClusterConfig::default();
+        cfg.num_hives = 1;
+        cfg.cores_per_hive = 2;
+        cfg
+    }
+
+    /// A 1-cluster system with no DMA work computes bit-identically to a
+    /// standalone cluster (clocks, stats), with zero DMA cycles.
+    #[test]
+    fn single_cluster_system_matches_standalone_cluster() {
+        let prog = assemble(PROG).expect("asm");
+        let mut legacy = Cluster::new(two_core_cfg());
+        legacy.load(&prog);
+        legacy.run(100_000).expect("legacy run");
+
+        let mut sys = System::new(two_core_cfg(), 1);
+        sys.clusters[0].load(&prog);
+        sys.run(100_000).expect("system run");
+
+        assert_eq!(sys.clusters[0].now, legacy.now, "cluster-local cycle count");
+        assert_eq!(sys.clusters[0].stats(), legacy.stats(), "stats bundle");
+        let s = sys.stats_summary();
+        assert_eq!(s.dma_in_cycles, 0);
+        assert_eq!(s.dma_out_cycles, 0);
+        assert_eq!(s.compute_cycles, sys.compute_done_at);
+        assert_eq!(sys.clusters[0].tcdm.read(0x1000_0000, 4), 49);
+        assert_eq!(sys.clusters[0].tcdm.read(0x1000_0008, 4), 50);
+    }
+
+    /// DMA-in runs before any cluster cycle, write-back after the last:
+    /// preloaded data is visible to the program, results land in the
+    /// shared memory, and the stage split accounts every cycle.
+    #[test]
+    fn stages_run_in_order_with_dma_roundtrip() {
+        // Program: load the preloaded word, add 1, store it back.
+        let prog = assemble(
+            r#"
+            li   t0, 0x10000100
+            lw   t1, 0(t0)
+            addi t1, t1, 1
+            sw   t1, 4(t0)
+            ecall
+        "#,
+        )
+        .expect("asm");
+        let mut cfg = ClusterConfig::default();
+        cfg.num_hives = 1;
+        cfg.cores_per_hive = 1;
+        let mut sys = System::new(cfg, 2);
+        for c in 0..2 {
+            sys.clusters[c].load(&prog);
+            let marker = 100 * (c as u32 + 1);
+            sys.ext.write(EXT_BASE + 0x100 + 0x40 * c as u32, u64::from(marker), 4);
+            sys.dmas[c].enqueue(DmaXfer::d1(
+                EXT_BASE + 0x100 + 0x40 * c as u32,
+                TCDM_BASE + 0x100,
+                4,
+                true,
+            ));
+            sys.queue_writeback(
+                c,
+                [DmaXfer::d1(EXT_BASE + 0x200 + 0x40 * c as u32, TCDM_BASE + 0x104, 4, false)],
+            );
+        }
+        sys.run(100_000).expect("system run");
+        assert_eq!(sys.ext.read(EXT_BASE + 0x200, 4), 101);
+        assert_eq!(sys.ext.read(EXT_BASE + 0x240, 4), 201);
+        let s = sys.stats_summary();
+        assert!(s.dma_in_cycles > 0, "preload took cycles");
+        assert!(s.dma_out_cycles > 0, "write-back took cycles");
+        assert_eq!(
+            s.dma_in_cycles + s.compute_cycles + s.dma_out_cycles,
+            s.total_cycles,
+            "stage split covers the whole run"
+        );
+        assert_eq!(s.dma_bytes_in, 8);
+        assert_eq!(s.dma_bytes_out, 8);
+        assert_eq!(s.clusters, 2);
+    }
+
+    /// Core-issued external accesses travel the port protocol to the
+    /// shared memory during compute.
+    #[test]
+    fn core_ext_access_reaches_shared_memory_through_the_port() {
+        let prog = assemble(
+            r#"
+            li   t0, 0x80000400
+            li   t1, 0xBEEF
+            sw   t1, 0(t0)
+            lw   t2, 0(t0)
+            li   t3, 0x10000000
+            sw   t2, 0(t3)
+            ecall
+        "#,
+        )
+        .expect("asm");
+        let mut cfg = ClusterConfig::default();
+        cfg.num_hives = 1;
+        cfg.cores_per_hive = 1;
+        let mut sys = System::new(cfg, 1);
+        sys.clusters[0].load(&prog);
+        sys.run(100_000).expect("system run");
+        assert_eq!(sys.ext.read(EXT_BASE + 0x400, 4), 0xBEEF, "store reached shared memory");
+        assert_eq!(sys.clusters[0].tcdm.read(0x1000_0000, 4), 0xBEEF, "load round-tripped");
+        assert_eq!(sys.clusters[0].ext.accesses(), 2, "cluster-side access count");
+        assert!(sys.ext.accesses >= 2, "shared memory served the requests");
+    }
+
+    #[test]
+    fn run_respects_max_cycles() {
+        // A spin loop never halts, so the budget must trip.
+        let prog = assemble("l: j l\n").expect("asm");
+        let mut cfg = ClusterConfig::default();
+        cfg.num_hives = 1;
+        cfg.cores_per_hive = 1;
+        let mut sys = System::new(cfg, 1);
+        sys.clusters[0].load(&prog);
+        let e = sys.run(500).unwrap_err();
+        assert!(e.contains("did not finish"), "{e}");
+    }
+}

@@ -196,6 +196,26 @@ fn gated_engine_matches_direct_for_every_kernel() {
     }
 }
 
+/// Fourth leg of the engine-equivalence chain: a kernel computed inside
+/// a 1-cluster `System` (DMA preload, shared external memory, system
+/// phase schedule) is bit-identical to the ungated `cycle_direct`
+/// reference — the stats bundle carries every cycle count and PMC.
+/// (`tests/system.rs` holds the full kernel × variant × cores matrix.)
+#[test]
+fn system_single_cluster_matches_direct_loop() {
+    for (name, v) in [("dgemm", Variant::SsrFrep), ("dot", Variant::Ssr)] {
+        let k = kernels::kernel_by_name(name).unwrap();
+        let n = if name == "dgemm" { 16 } else { 256 };
+        let p = Params::new(n, 8);
+        let (direct_now, direct_stats, direct_err) = kernel_run_with(k, v, &p, true);
+        let r = snitch_sim::system::run_kernel_system(k, v, &p)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(direct_now, r.stats.cycles, "{name}: cluster-local cycle count");
+        assert_eq!(direct_stats, r.stats, "{name}: stats bundle");
+        assert_eq!(direct_err.to_bits(), r.max_err.to_bits(), "{name}: max_err");
+    }
+}
+
 #[test]
 fn ring_trace_does_not_change_timing() {
     let mut unbounded = traced_cluster();

@@ -1,0 +1,182 @@
+//! System-layer acceptance suite (ISSUE 5):
+//!
+//! * a 1-cluster `System` is **bit-identical** to the legacy
+//!   single-`Cluster` path — region cycles, whole stats bundles,
+//!   validated-error bits — for every kernel × variant × {1, 8} cores,
+//!   and trace-hash-identical on a traced run;
+//! * sharded {2, 4}-cluster runs `allclose` against the full-problem
+//!   reference (the same one the single-cluster check uses), with
+//!   DMA-preload vs core-issued-preload cycle counts reported;
+//! * the `cluster_scaling` artifact renders through the typed
+//!   evaluation API (and through a multi-worker `Sweep`, order-stable).
+
+use snitch_sim::cluster::Cluster;
+use snitch_sim::coordinator::{artifacts, ArtifactOptions, Sweep, SweepOptions};
+use snitch_sim::kernels::{self, Params, Variant};
+use snitch_sim::mem::ext::{EXT_BEAT, EXT_LATENCY};
+use snitch_sim::sim::TraceSink;
+use snitch_sim::system;
+
+fn small_n(name: &str) -> usize {
+    match name {
+        "dgemm" => 16,
+        "fft" => 64,
+        "conv2d" => 16,
+        "knn" => 64,
+        "montecarlo" => 128,
+        _ => 256,
+    }
+}
+
+/// The tentpole acceptance gate: for every kernel × variant × {1, 8}
+/// cores, a 1-cluster `System` run (DMA preload included for the
+/// shard-aware kernels, host setup for the rest) reproduces the legacy
+/// `run_kernel` path bit for bit — compute region cycles, the entire
+/// `ClusterStats` bundle, and the validated max-error bits.
+#[test]
+fn one_cluster_system_bit_identical_to_legacy_for_every_kernel() {
+    for k in kernels::all_kernels() {
+        for &v in k.variants {
+            for cores in [1usize, 8] {
+                let p = Params::new(small_n(k.name), cores);
+                let legacy = kernels::run_kernel(k, v, &p)
+                    .unwrap_or_else(|e| panic!("legacy {} {v:?} cores={cores}: {e}", k.name));
+                let sys = system::run_kernel_system(k, v, &p)
+                    .unwrap_or_else(|e| panic!("system {} {v:?} cores={cores}: {e}", k.name));
+                let ctx = format!("{} {v:?} cores={cores}", k.name);
+                assert_eq!(legacy.cycles, sys.cycles, "{ctx}: region cycles");
+                assert_eq!(legacy.stats, sys.stats, "{ctx}: whole stats bundle");
+                assert_eq!(
+                    legacy.max_err.to_bits(),
+                    sys.max_err.to_bits(),
+                    "{ctx}: max_err bits"
+                );
+                let s = sys.system.expect("system runs carry a stage summary");
+                assert_eq!(s.clusters, 1);
+                assert_eq!(
+                    s.total_cycles,
+                    s.dma_in_cycles + s.compute_cycles + s.dma_out_cycles,
+                    "{ctx}: stage split covers the run"
+                );
+            }
+        }
+    }
+}
+
+/// Trace-level determinism: the cluster inside a 1-cluster system emits
+/// exactly the legacy cluster's event stream (same hash, same clock).
+#[test]
+fn one_cluster_system_trace_hash_matches_legacy() {
+    let k = kernels::kernel_by_name("dot").unwrap();
+    let v = Variant::SsrFrep;
+    let p = Params::new(256, 8);
+
+    let prog = kernels::cached_program(k, v, &p);
+    let mut cfg = kernels::config_for(k, v, &p);
+    cfg.trace = true;
+    let mut legacy = Cluster::new(cfg);
+    legacy.load(&prog);
+    (k.setup)(&mut legacy, &p);
+    legacy.run(p.max_cycles).expect("legacy run");
+
+    let (mut sys, plan) = system::build_system(k, v, &p).expect("build system");
+    for cl in &mut sys.clusters {
+        cl.set_trace(TraceSink::unbounded());
+    }
+    sys.run(p.max_cycles).expect("system run");
+    kernels::shard::check(&sys, k, &p, &plan).expect("system check");
+
+    assert_eq!(sys.clusters[0].now, legacy.now, "cluster-local cycle count");
+    assert_eq!(sys.clusters[0].trace.len(), legacy.trace.len(), "trace event count");
+    assert_eq!(
+        sys.clusters[0].trace.event_hash(),
+        legacy.trace.event_hash(),
+        "trace event hash"
+    );
+}
+
+/// Sharded {2, 4}-cluster runs validate against the same full-problem
+/// reference as the single-cluster path, and the DMA-vs-core-preload
+/// cycle comparison is reported for each point.
+#[test]
+fn sharded_clusters_match_reference_and_report_dma_costs() {
+    for (name, v, n) in [
+        ("dgemm", Variant::SsrFrep, 32usize),
+        ("dot", Variant::SsrFrep, 256),
+        ("axpy", Variant::Ssr, 256),
+        ("relu", Variant::SsrFrep, 256),
+    ] {
+        let k = kernels::kernel_by_name(name).unwrap();
+        let single = kernels::run_kernel(k, v, &Params::new(n, 8))
+            .unwrap_or_else(|e| panic!("single {name}: {e}"));
+        for clusters in [2usize, 4] {
+            let p = Params::new(n, 8).with_clusters(clusters);
+            let r = kernels::run_kernel(k, v, &p)
+                .unwrap_or_else(|e| panic!("{name} {clusters}cl: {e}"));
+            assert!(r.max_err < 1e-6, "{name} {clusters}cl: max_err {}", r.max_err);
+            let s = r.system.expect("sharded runs carry a stage summary");
+            assert_eq!(s.clusters, clusters);
+            assert!(s.dma_in_cycles > 0, "{name} {clusters}cl: preload must take cycles");
+            assert!(s.dma_out_cycles > 0, "{name} {clusters}cl: write-back must take cycles");
+            assert!(s.dma_bytes_in > 0 && s.dma_bytes_out > 0);
+            // What the replaced design would cost: cores issuing one
+            // single-beat (8-byte) external load per element, each
+            // paying the full AXI round trip, serialized per port.
+            let core_preload = (s.dma_bytes_in / 8) * (EXT_LATENCY + EXT_BEAT);
+            println!(
+                "[system] {name} n={n} {clusters}cl: dma-in {} cycles vs core-issued preload \
+                 ~{core_preload} cycles ({} bytes); compute {} vs single-cluster {}",
+                s.dma_in_cycles, s.dma_bytes_in, r.cycles, single.cycles
+            );
+            assert!(
+                s.dma_in_cycles < core_preload,
+                "{name} {clusters}cl: bursts must beat per-element loads"
+            );
+        }
+        // Parallel compute must actually help where there is real work.
+        if name == "dgemm" {
+            let two = kernels::run_kernel(k, v, &Params::new(n, 8).with_clusters(2)).unwrap();
+            assert!(
+                two.cycles < single.cycles,
+                "dgemm 2cl compute {} should beat 1cl {}",
+                two.cycles,
+                single.cycles
+            );
+        }
+    }
+}
+
+/// Kernels without a shard plan refuse multi-cluster runs with a clear
+/// error instead of silently computing nonsense.
+#[test]
+fn unsharded_kernels_refuse_multiple_clusters() {
+    let k = kernels::kernel_by_name("fft").unwrap();
+    let e = kernels::run_kernel(k, Variant::SsrFrep, &Params::new(64, 8).with_clusters(2))
+        .unwrap_err();
+    assert!(e.contains("does not shard"), "{e}");
+    assert!(e.contains("dgemm"), "error names the shard-aware kernels: {e}");
+}
+
+/// The cluster-scaling artifact renders through the typed evaluation
+/// API, and a 2-worker sweep renders byte-identically to a serial one.
+#[test]
+fn cluster_scaling_artifact_renders_and_is_sweep_stable() {
+    let a = artifacts::by_id("cluster_scaling").expect("registered");
+    let opts = ArtifactOptions::default().with_size(64);
+    let exps = a.experiments(&opts);
+    assert!(!exps.is_empty());
+    let serial = Sweep::with_options(SweepOptions::new().jobs(1))
+        .run(&exps)
+        .expect("serial sweep");
+    let jobs2 = Sweep::with_options(SweepOptions::new().jobs(2))
+        .run(&exps)
+        .expect("2-worker sweep");
+    let t1 = a.render(&serial).expect("render serial");
+    let t2 = a.render(&jobs2).expect("render jobs2");
+    assert_eq!(t1.to_markdown(), t2.to_markdown(), "worker count must not change bytes");
+    let md = t1.to_markdown();
+    assert!(md.contains("dgemm") && md.contains("relu"), "{md}");
+    assert!(md.contains("×"), "speed-up cells rendered: {md}");
+    // JSON renders well-formed enough to carry the id.
+    assert!(t1.to_json().contains("cluster_scaling"));
+}

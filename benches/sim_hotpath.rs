@@ -8,22 +8,29 @@
 //!
 //! The `cycles_per_sec` section is the checked-in perf baseline: it runs
 //! a multi-kernel matrix (dgemm/dot/conv2d × {1,8} cores × {+SSR,
-//! +SSR+FREP}) twice in the same process — once through the
+//! +SSR+FREP}) three times in the same process — through the
 //! pre-optimization reference path (`Cluster::cycle_direct` on a fresh
-//! cluster per rep, full `done()` scan, byte-loop TCDM) and once through
-//! the optimized path (gated `Cluster::cycle` via a reused
-//! `ClusterPool`) — asserts both report identical final cycle counts,
-//! and writes the machine-readable `BENCH_PR4.json` speedup record.
+//! cluster per rep, full `done()` scan, byte-loop TCDM), through the
+//! gated `Cluster::cycle` engine with the steady-state fast-forward tier
+//! disabled (the PR4 path, via a reused `ClusterPool`), and through the
+//! same engine with the tier enabled (the default) — asserts all three
+//! report identical final cycle counts *and* stats bundles, prints the
+//! per-row fast-forward hit rate, and writes the machine-readable
+//! `BENCH_PR4.json` (direct vs gated engine) and `BENCH_PR6.json`
+//! (gated engine vs fast-forward) speedup records.
 //!
-//! `-- --smoke` runs a reduced-size single-rep matrix, skips the JSON,
-//! and still fails on any optimized-vs-reference cycle disagreement
-//! (the CI `bench-smoke` job).
+//! `-- --smoke` runs a reduced-size single-rep matrix, skips the JSONs,
+//! and still fails on any cross-path disagreement (the CI `bench-smoke`
+//! job). `-- --filter <substr>` re-runs only the matrix rows whose
+//! label contains the substring (e.g. `dot/+SSR+FREP/n1024/1c`) and
+//! never writes the JSONs — for regenerating or investigating a single
+//! row without paying for the whole matrix.
 
 use std::hint::black_box;
 use std::time::Instant;
 
 use snitch_sim::asm::assemble;
-use snitch_sim::cluster::Cluster;
+use snitch_sim::cluster::{Cluster, ClusterStats};
 use snitch_sim::coordinator::{self, Experiment, Sweep, SweepOptions};
 use snitch_sim::kernels::{self, ClusterPool, KernelDef, Params, Variant};
 
@@ -160,9 +167,12 @@ impl BenchCase {
 
 fn bench_matrix(smoke: bool) -> Vec<BenchCase> {
     let mut cases = Vec::new();
+    // dot runs at the paper's large size (n = 4096): single long SSR
+    // streams are the fast-forward tier's best case and the row that
+    // distinguishes it most sharply from the gated engine.
     for (kernel, n) in [
         ("dgemm", if smoke { 16 } else { 32 }),
-        ("dot", if smoke { 256 } else { 1024 }),
+        ("dot", if smoke { 256 } else { 4096 }),
         ("conv2d", if smoke { 16 } else { 32 }),
     ] {
         for cores in [1usize, 8] {
@@ -177,8 +187,8 @@ fn bench_matrix(smoke: bool) -> Vec<BenchCase> {
 /// The pre-optimization hot path, replicated exactly: a fresh cluster
 /// per run, the ungated hand-ordered `cycle_direct` loop (byte-level
 /// TCDM accessors included) and the original full `done()` scan per
-/// cycle. Returns the final cycle count.
-fn run_reference(k: &'static KernelDef, case: &BenchCase, p: &Params) -> u64 {
+/// cycle. Returns the final cycle count and the stats bundle.
+fn run_reference(k: &'static KernelDef, case: &BenchCase, p: &Params) -> (u64, ClusterStats) {
     let prog = kernels::cached_program(k, case.variant, p);
     let mut cl = Cluster::new(kernels::config_for(k, case.variant, p));
     cl.load(&prog);
@@ -188,24 +198,36 @@ fn run_reference(k: &'static KernelDef, case: &BenchCase, p: &Params) -> u64 {
         cl.cycle_direct();
     }
     (k.check)(&cl, p).unwrap_or_else(|e| panic!("{}: reference validation: {e}", case.label()));
-    cl.now
+    (cl.now, cl.stats())
 }
 
 /// The optimized hot path: gated `Cluster::cycle` engine on a pooled,
-/// `Cluster::reset`-rewound cluster. Returns the final cycle count.
-fn run_engine(pool: &mut ClusterPool, k: &'static KernelDef, case: &BenchCase, p: &Params) -> u64 {
+/// `Cluster::reset`-rewound cluster, with the steady-state fast-forward
+/// tier per `p.fast_forward`. Returns the final cycle count and the
+/// stats bundle.
+fn run_engine(
+    pool: &mut ClusterPool,
+    k: &'static KernelDef,
+    case: &BenchCase,
+    p: &Params,
+) -> (u64, ClusterStats) {
     let r = kernels::run_kernel_pooled(pool, k, case.variant, p)
         .unwrap_or_else(|e| panic!("{}: engine run: {e}", case.label()));
-    r.stats.cycles
+    (r.stats.cycles, r.stats)
 }
 
 struct BenchRow {
     label: String,
     n: usize,
     cores: usize,
+    /// `+SSR+FREP` row (the acceptance geomean is over these).
+    frep: bool,
     cycles: u64,
     reference_ms: f64,
     engine_ms: f64,
+    ff_ms: f64,
+    ff_engagements: u64,
+    ff_cycles_skipped: u64,
 }
 
 impl BenchRow {
@@ -217,74 +239,138 @@ impl BenchRow {
         self.cycles as f64 * f64::from(reps) / (self.engine_ms / 1e3)
     }
 
+    fn ff_cps(&self, reps: u32) -> f64 {
+        self.cycles as f64 * f64::from(reps) / (self.ff_ms / 1e3)
+    }
+
     fn speedup(&self) -> f64 {
         self.reference_ms / self.engine_ms
     }
+
+    /// Fast-forward tier speedup over the PR4 gated engine.
+    fn ff_speedup(&self) -> f64 {
+        self.engine_ms / self.ff_ms
+    }
+
+    /// Fraction of simulated cycles covered by analytic jumps.
+    fn ff_hit_rate(&self) -> f64 {
+        self.ff_cycles_skipped as f64 / self.cycles.max(1) as f64
+    }
 }
 
-/// Run the matrix through both paths, assert cycle-exactness, print the
-/// table, and (in full mode) write `BENCH_PR4.json`.
-fn cycles_per_sec(smoke: bool) {
+/// Run the matrix through all three paths (reference `cycle_direct`,
+/// gated engine with fast-forward off, gated engine with it on), assert
+/// bit-identity of cycle counts and stats bundles, print the table with
+/// per-row fast-forward hit rates, and (in full, unfiltered mode) write
+/// `BENCH_PR4.json` and `BENCH_PR6.json`.
+fn cycles_per_sec(smoke: bool, filter: Option<&str>) {
     let reps: u32 = if smoke { 1 } else { 3 };
     let mut pool = ClusterPool::new();
     let mut rows: Vec<BenchRow> = Vec::new();
-    for case in bench_matrix(smoke) {
+    let cases: Vec<BenchCase> = bench_matrix(smoke)
+        .into_iter()
+        .filter(|c| filter.map_or(true, |f| c.label().contains(f)))
+        .collect();
+    if cases.is_empty() {
+        println!("[bench] cps: no matrix row matches --filter {}", filter.unwrap_or(""));
+        return;
+    }
+    for case in cases {
         let k = kernels::kernel_by_name(case.kernel).unwrap();
-        let p = Params::new(case.n, case.cores);
-        // Warm both paths once (program cache, page faults) outside the
-        // timed region, checking cycle-exactness on the way.
-        let ref_cycles = run_reference(k, &case, &p);
-        let eng_cycles = run_engine(&mut pool, k, &case, &p);
-        assert_eq!(
-            ref_cycles,
-            eng_cycles,
-            "{}: optimized engine and cycle_direct disagree on final cycle count",
-            case.label()
-        );
+        let p_on = Params::new(case.n, case.cores);
+        let p_off = p_on.with_fast_forward(false);
+        // Warm all three paths once (program cache, page faults) outside
+        // the timed region, checking bit-identity on the way. The stats
+        // comparison covers every PMC, stall bucket and region — the
+        // same gate `tests/determinism.rs` holds, re-checked here on the
+        // bench sizes so CI `--smoke` catches a drift.
+        let (ref_cycles, ref_stats) = run_reference(k, &case, &p_on);
+        let (eng_cycles, eng_stats) = run_engine(&mut pool, k, &case, &p_off);
+        let (ff_cycles, ff_stats) = run_engine(&mut pool, k, &case, &p_on);
+        let ctx = case.label();
+        assert_eq!(ref_cycles, eng_cycles, "{ctx}: ff-off engine vs cycle_direct cycle count");
+        assert_eq!(ref_cycles, ff_cycles, "{ctx}: ff-on engine vs cycle_direct cycle count");
+        assert_eq!(ref_stats, eng_stats, "{ctx}: ff-off engine vs cycle_direct stats bundle");
+        assert_eq!(ref_stats, ff_stats, "{ctx}: ff-on engine vs cycle_direct stats bundle");
+        assert_eq!(eng_stats.ff_engagements, 0, "{ctx}: ff-off run must not engage");
 
         let t = Instant::now();
         for _ in 0..reps {
-            assert_eq!(run_reference(k, &case, &p), ref_cycles, "{}", case.label());
+            assert_eq!(run_reference(k, &case, &p_on).0, ref_cycles, "{ctx}");
         }
         let reference_ms = t.elapsed().as_secs_f64() * 1e3;
 
         let t = Instant::now();
         for _ in 0..reps {
-            assert_eq!(run_engine(&mut pool, k, &case, &p), ref_cycles, "{}", case.label());
+            assert_eq!(run_engine(&mut pool, k, &case, &p_off).0, ref_cycles, "{ctx}");
         }
         let engine_ms = t.elapsed().as_secs_f64() * 1e3;
+
+        let t = Instant::now();
+        for _ in 0..reps {
+            assert_eq!(run_engine(&mut pool, k, &case, &p_on).0, ref_cycles, "{ctx}");
+        }
+        let ff_ms = t.elapsed().as_secs_f64() * 1e3;
 
         let row = BenchRow {
             label: case.label(),
             n: case.n,
             cores: case.cores,
+            frep: case.variant == Variant::SsrFrep,
             cycles: ref_cycles,
             reference_ms,
             engine_ms,
+            ff_ms,
+            ff_engagements: ff_stats.ff_engagements,
+            ff_cycles_skipped: ff_stats.ff_cycles_skipped,
         };
         println!(
-            "[bench] cps/{}: direct {:.1} ms ({:.2} Mc/s), engine {:.1} ms ({:.2} Mc/s), {:.2}x",
+            "[bench] cps/{}: direct {:.1} ms ({:.2} Mc/s), engine {:.1} ms ({:.2} Mc/s, \
+             {:.2}x), ff {:.1} ms ({:.2} Mc/s, {:.2}x vs engine), hit rate {:.1}% \
+             ({} jumps, {} cycles skipped)",
             row.label,
             row.reference_ms,
             row.reference_cps(reps) / 1e6,
             row.engine_ms,
             row.engine_cps(reps) / 1e6,
             row.speedup(),
+            row.ff_ms,
+            row.ff_cps(reps) / 1e6,
+            row.ff_speedup(),
+            row.ff_hit_rate() * 100.0,
+            row.ff_engagements,
+            row.ff_cycles_skipped,
         );
         rows.push(row);
     }
     let total_ref: f64 = rows.iter().map(|r| r.reference_ms).sum();
     let total_eng: f64 = rows.iter().map(|r| r.engine_ms).sum();
+    let total_ff: f64 = rows.iter().map(|r| r.ff_ms).sum();
     let overall = total_ref / total_eng;
     println!(
-        "[bench] cps/total: direct {total_ref:.1} ms, engine {total_eng:.1} ms, {overall:.2}x \
-         ({} cases x{reps})",
+        "[bench] cps/total: direct {total_ref:.1} ms, engine {total_eng:.1} ms ({overall:.2}x), \
+         ff {total_ff:.1} ms ({:.2}x vs engine) ({} cases x{reps})",
+        total_eng / total_ff,
         rows.len()
     );
-    if !smoke {
+    let frep_rows: Vec<&BenchRow> = rows.iter().filter(|r| r.frep).collect();
+    let geomean = if frep_rows.is_empty() {
+        1.0
+    } else {
+        (frep_rows.iter().map(|r| r.ff_speedup().ln()).sum::<f64>() / frep_rows.len() as f64)
+            .exp()
+    };
+    println!(
+        "[bench] cps/frep-geomean: ff {geomean:.2}x vs gated engine over {} +SSR+FREP rows",
+        frep_rows.len()
+    );
+    if !smoke && filter.is_none() {
         let json = render_bench_json(&rows, reps, total_ref, total_eng, overall);
         std::fs::write("BENCH_PR4.json", json).expect("write BENCH_PR4.json");
         println!("[bench] wrote BENCH_PR4.json");
+        let json = render_ff_json(&rows, reps, total_eng, total_ff, geomean);
+        std::fs::write("BENCH_PR6.json", json).expect("write BENCH_PR6.json");
+        println!("[bench] wrote BENCH_PR6.json");
     }
 }
 
@@ -328,6 +414,58 @@ fn render_bench_json(
     s.push_str(&format!(
         "  \"total\": {{\"direct_wall_ms\": {total_ref:.3}, \"engine_wall_ms\": \
          {total_eng:.3}, \"speedup\": {overall:.3}}}\n"
+    ));
+    s.push_str("}\n");
+    s
+}
+
+/// Hand-rolled JSON for the fast-forward record (`BENCH_PR6.json`):
+/// gated engine with the tier off vs on, per matrix row, plus the
+/// `+SSR+FREP` geomean the acceptance gate reads.
+fn render_ff_json(
+    rows: &[BenchRow],
+    reps: u32,
+    total_eng: f64,
+    total_ff: f64,
+    geomean: f64,
+) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"sim_hotpath/cycles_per_sec_ff\",\n");
+    s.push_str("  \"regenerate\": \"cargo bench --bench sim_hotpath\",\n");
+    s.push_str(
+        "  \"baseline\": \"gated Cluster::cycle engine with the steady-state fast-forward \
+         tier disabled (the PR4 path: ClusterPool reuse, word-level TCDM, activity gating) \
+         measured in the same process\",\n",
+    );
+    s.push_str(&format!("  \"reps\": {reps},\n"));
+    s.push_str("  \"kernels\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"kernel\": \"{}\", \"n\": {}, \"cores\": {}, \"cycles\": {}, \
+             \"engine_wall_ms\": {:.3}, \"engine_cycles_per_sec\": {:.0}, \
+             \"ff_wall_ms\": {:.3}, \"ff_cycles_per_sec\": {:.0}, \"speedup\": {:.3}, \
+             \"ff_engagements\": {}, \"ff_cycles_skipped\": {}, \"ff_hit_rate\": {:.4}}}{}\n",
+            r.label,
+            r.n,
+            r.cores,
+            r.cycles,
+            r.engine_ms,
+            r.engine_cps(reps),
+            r.ff_ms,
+            r.ff_cps(reps),
+            r.ff_speedup(),
+            r.ff_engagements,
+            r.ff_cycles_skipped,
+            r.ff_hit_rate(),
+            if i + 1 < rows.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str(&format!(
+        "  \"total\": {{\"engine_wall_ms\": {total_eng:.3}, \"ff_wall_ms\": {total_ff:.3}, \
+         \"speedup\": {:.3}, \"frep_geomean_speedup\": {geomean:.3}}}\n",
+        total_eng / total_ff
     ));
     s.push_str("}\n");
     s
@@ -441,19 +579,32 @@ fn render_scale_json(rows: &[ScaleRow]) -> String {
 }
 
 fn main() {
-    let smoke = std::env::args().any(|a| a == "--smoke");
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let filter: Option<String> = args
+        .iter()
+        .position(|a| a == "--filter")
+        .map(|i| args.get(i + 1).expect("--filter needs a substring argument").clone());
+    if let Some(f) = &filter {
+        // Focused re-run of the matching matrix row(s): the full triple
+        // with all bit-identity asserts and the hit-rate print, but no
+        // JSON rewrite and none of the unrelated sections.
+        cycles_per_sec(smoke, Some(f));
+        return;
+    }
     if smoke {
         // CI bench-smoke: reduced sizes, single rep, no JSON — but the
-        // optimized-vs-reference and System-vs-legacy cycle-count
-        // assertions still gate.
-        cycles_per_sec(true);
+        // engine-vs-reference (fast-forward on *and* off) and
+        // System-vs-legacy assertions still gate, and the per-row
+        // fast-forward hit rates still print.
+        cycles_per_sec(true, None);
         cluster_scaling(true);
         return;
     }
     hotpath();
     sweep_throughput();
     codegen_throughput();
-    cycles_per_sec(false);
+    cycles_per_sec(false, None);
     let rows = cluster_scaling(false);
     let json = render_scale_json(&rows);
     std::fs::write("BENCH_PR5.json", json).expect("write BENCH_PR5.json");

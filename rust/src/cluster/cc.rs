@@ -28,7 +28,7 @@ use super::stats::{CounterSet, RegionStats, StallCounters};
 use super::{Cluster, TraceEvent, TraceSink, TraceUnit};
 
 /// Who owns the single outstanding request of a TCDM port.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PortOwner {
     IntLoad { rd: Reg, op: LoadOp },
     IntStore,
@@ -40,7 +40,7 @@ pub enum PortOwner {
 }
 
 /// Owner of an outstanding external-memory access.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ExtOwner {
     IntLoad { rd: Reg, op: LoadOp },
     IntStore,

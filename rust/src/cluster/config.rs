@@ -53,6 +53,13 @@ pub struct ClusterConfig {
     pub has_ssr: bool,
     /// FREP sequence buffer present.
     pub has_frep: bool,
+    /// Steady-state fast-forward tier enabled (`cluster::ff`): inside an
+    /// active FREP body, once two successive iterations produce identical
+    /// microarchitectural fingerprints, the remaining iterations are
+    /// advanced analytically instead of cycle-by-cycle. Observationally
+    /// equivalent to the gated engine (held bit-identical by
+    /// `tests/determinism.rs`); `Cluster::cycle_direct` never uses it.
+    pub fast_forward: bool,
 }
 
 impl Default for ClusterConfig {
@@ -71,6 +78,7 @@ impl Default for ClusterConfig {
             pmcs: true,
             has_ssr: true,
             has_frep: true,
+            fast_forward: true,
         }
     }
 }

@@ -1,0 +1,1023 @@
+//! Steady-state fast-forward for FREP/SSR loops (the "phase-skip" tier on
+//! top of the activity-gated engine).
+//!
+//! The hot loop of every `+SSR+FREP` kernel is a sequencer feeding one FPU
+//! at one op per cycle from two affine streams. Once that loop reaches its
+//! steady state, every iteration of the *microarchitecture* — not just the
+//! program — repeats exactly, shifted in time: same stall pattern, same
+//! TCDM banks, same pipeline occupancy, only the data differs. Simulating
+//! those cycles one by one re-derives a fixed point thousands of times.
+//!
+//! This module detects that fixed point and advances it analytically:
+//!
+//! 1. **Anchors.** While some core is sequencing, each cycle at which the
+//!    lead sequencer *arrives* at the top of its block with the stagger
+//!    phase at zero (`inst_idx == 0`, `iter % (stagger_count+1) == 0`) is
+//!    an anchor. Anchoring on stagger-aligned iterations makes successive
+//!    anchors candidates for exact state equality — a staggered loop only
+//!    repeats its register pattern every `stagger_count + 1` iterations.
+//! 2. **Fingerprints.** At an eligible anchor the full loop-relevant
+//!    microarchitectural state is captured: core PC/registers/scoreboards,
+//!    sequencer position, SSR lane cursors, FPU pipeline shape, pending
+//!    TCDM responses, and every PMC that must stay exact.
+//! 3. **Engage.** When two successive anchors compare equal modulo a time
+//!    shift `T` (data values and monotonic counters excepted), the window
+//!    between them is one period. The TCDM grant log for that window is
+//!    validated against the streams' affine address functions; if every
+//!    grant is a stream read at its predicted address and no period up to
+//!    `k` would introduce a bank conflict, the simulator jumps `k` periods
+//!    at once: counters are extrapolated linearly, stream cursors and bank
+//!    arbiters advance analytically, and the FP data path is *replayed
+//!    functionally* (values only — no per-cycle machinery) so that
+//!    register contents and in-flight pipeline values stay bit-identical.
+//! 4. **Fallback.** Anything unusual — an ineligible structure, a failed
+//!    compare, a perturbing event between anchors — either prevents an
+//!    anchor from arming or costs a strike; [`MAX_STRIKES`] strikes put
+//!    the detector to sleep until the FREP region ends. The exact path
+//!    (`Cluster::cycle_direct` is the untouched oracle) then runs the
+//!    remaining cycles, including the final ragged iterations, which the
+//!    per-stream caps always leave to the exact path.
+//!
+//! The contract, enforced by `tests/determinism.rs` and the in-module
+//! test: a run with fast-forward enabled is **observationally identical**
+//! to the exact run — same final cycle count, same memory contents, same
+//! [`super::stats::ClusterStats`] (the `ff_*` hit-rate counters excepted).
+
+use crate::fpss::{eval_fpop, Dest};
+use crate::frep::{FpssOp, FrepConfig, Sequencer, State};
+use crate::isa::csr::SSR_DIMS;
+use crate::isa::{FReg, FpOp, Instr};
+use crate::mem::{ExtIf, Tcdm, TcdmResponse};
+use crate::sim::Tick;
+use crate::ssr::{LaneState, StreamConfig};
+
+use super::cc::{CoreComplex, PortOwner};
+use super::Cluster;
+
+/// Failed engage attempts tolerated per FREP region before the detector
+/// goes dormant (stops capturing) until the region ends. Bounds the
+/// capture overhead on loops that never settle (e.g. persistent bank
+/// conflicts).
+const MAX_STRIKES: u32 = 16;
+
+/// Upper bound on periods skipped per engagement. Bounds the cost of the
+/// per-period work an engagement still has to do (bank-conflict scan,
+/// round-robin patching, functional replay) so a single jump stays cheap
+/// relative to the cycles it skips.
+const SCAN_CAP: u64 = 4096;
+
+/// Fast-forward detector state, one per [`Cluster`].
+#[derive(Default)]
+pub(crate) struct FfState {
+    /// Fingerprint captured at the previous eligible anchor.
+    anchor: Option<Anchor>,
+    /// Lead sequencer position at the previous poll — anchors fire only on
+    /// *arrival* at a position, not on every stalled cycle sitting there.
+    prev_pos: Option<(usize, u32, usize)>,
+    /// Consecutive failed engage attempts in the current FREP region.
+    strikes: u32,
+    /// Detector disabled until the current FREP region ends.
+    dormant: bool,
+    /// PMC: number of analytic jumps taken.
+    pub(crate) engagements: u64,
+    /// PMC: total cycles skipped by analytic jumps.
+    pub(crate) cycles_skipped: u64,
+}
+
+/// One captured fingerprint (plus the monotonic counters needed to
+/// extrapolate and the ones that must not move at all).
+struct Anchor {
+    /// Capture cycle.
+    t: u64,
+    retired: Vec<bool>,
+    ccs: Vec<CcSnap>,
+    /// Per TCDM port: `ready_at` of a pending response, if any.
+    resp: Vec<Option<u64>>,
+    reservations: Vec<Option<u32>>,
+    /// Monotonic PMCs, extrapolated linearly on engage (layout defined by
+    /// [`counters`] / [`apply_counters`] — keep the two in lock step).
+    counters: Vec<u64>,
+    // ---- must show zero delta across a period ----
+    tcdm_conflicts: u64,
+    /// Per hive × core: L0 misses (hits are extrapolated — a stalled core
+    /// re-fetches and hits every cycle; misses would mean refills).
+    l0_misses: Vec<u64>,
+    /// Per hive: (l1_hits, l1_misses).
+    l1: Vec<(u64, u64)>,
+    /// Per hive: (mul_count, div_count, contention_cycles).
+    muldiv: Vec<(u64, u64, u64)>,
+    ext_accesses: u64,
+}
+
+struct CcSnap {
+    pc: u32,
+    regs: [u32; 32],
+    busy: [bool; 32],
+    halted: bool,
+    sleeping: bool,
+    instret: u64,
+    /// FP register file — **not compared** (data differs across
+    /// iterations); kept to seed the functional replay.
+    fregs: [u64; 32],
+    fbusy: [bool; 32],
+    ssr_enabled: bool,
+    pipeline: Vec<PipeSnap>,
+    seq: SeqSnap,
+    lanes: [LaneSnap; 2],
+    port_owner: [Option<PortOwner>; 2],
+}
+
+/// FPU pipeline entry shape: destination and deadline, not the data.
+struct PipeSnap {
+    ready_at: u64,
+    dest: FReg,
+}
+
+struct SeqSnap {
+    state: State,
+    configs: Vec<FrepConfig>,
+    buffer: Vec<Instr>,
+    inst_idx: usize,
+    iter: u32,
+    /// Emitted-but-unissued ops. Compared directly: at stagger-aligned
+    /// anchors the staggered instruction bits repeat exactly, so equality
+    /// here means the issue frontier sits at the same loop offset.
+    out: Vec<FpssOp>,
+}
+
+struct LaneSnap {
+    state: LaneState,
+    active: Option<StreamConfig>,
+    shadow: Option<StreamConfig>,
+    stage_repeat: u32,
+    stage_bounds: [u32; SSR_DIMS],
+    stage_strides: [i32; SSR_DIMS],
+    fetch_idx: u64,
+    consume_idx: u64,
+    head_serves_left: u32,
+    data_len: usize,
+    in_flight: usize,
+}
+
+/// A validated TCDM grant from the observed period: stream read `elem` of
+/// `cfg` on `port`, `cycle_off` cycles after the anchor, advancing `de`
+/// elements per period.
+struct LogEntry {
+    cycle_off: u64,
+    port: usize,
+    cfg: StreamConfig,
+    elem: u64,
+    de: u64,
+}
+
+/// The deltas that define one period.
+struct Period {
+    /// Period length in cycles.
+    t: u64,
+    /// Per core: sequencer iterations per period (0 = not sequencing).
+    dit: Vec<u64>,
+    /// Per core × lane: stream elements fetched (= consumed) per period.
+    de: Vec<[u64; 2]>,
+}
+
+/// Per-cycle hook, called by `Cluster::cycle` before the phase loop when
+/// `cfg.fast_forward` is set. Cheap when no FREP is running.
+pub(crate) fn poll(cl: &mut Cluster) {
+    let lead = (0..cl.ccs.len())
+        .find(|&i| !cl.retired[i] && cl.ccs[i].seq.state == State::Sequencing);
+    let Some(lead) = lead else {
+        // No FREP region: disarm (and re-arm the detector for the next
+        // region if a dormant one just ended).
+        if cl.ff.prev_pos.is_some() || cl.ff.dormant {
+            cl.ff.anchor = None;
+            cl.ff.prev_pos = None;
+            cl.ff.strikes = 0;
+            cl.ff.dormant = false;
+            cl.tcdm.ff_log = None;
+        }
+        return;
+    };
+    if cl.ff.dormant {
+        return;
+    }
+    let (s, iter, inst_idx) = {
+        let seq = &cl.ccs[lead].seq;
+        let Some(cfg) = seq.configs.front() else {
+            return;
+        };
+        let s = if cfg.stagger_mask == 0 { 1 } else { u64::from(cfg.stagger_count) + 1 };
+        (s, seq.iter, seq.inst_idx)
+    };
+    let pos = (lead, iter, inst_idx);
+    let arrived = cl.ff.prev_pos != Some(pos);
+    cl.ff.prev_pos = Some(pos);
+    if !(arrived && inst_idx == 0 && u64::from(iter) % s == 0) {
+        return; // not an anchor cycle; any armed log keeps recording
+    }
+    if !eligible(cl) {
+        // Perturbed window: the grant log no longer describes a clean
+        // period. Drop the anchor and retry from the next clean one.
+        cl.ff.anchor = None;
+        cl.tcdm.ff_log = None;
+        return;
+    }
+    let b = capture(cl);
+    match cl.ff.anchor.take() {
+        None => cl.ff.anchor = Some(b),
+        Some(a) => {
+            if try_engage(cl, &a, &b) {
+                cl.ff.strikes = 0;
+                // Re-anchor at the post-jump state so the next engagement
+                // only has to observe one more period.
+                cl.ff.anchor = Some(capture(cl));
+                let seq = &cl.ccs[lead].seq;
+                cl.ff.prev_pos = Some((lead, seq.iter, seq.inst_idx));
+            } else {
+                cl.ff.strikes += 1;
+                if cl.ff.strikes >= MAX_STRIKES {
+                    cl.ff.dormant = true;
+                    cl.ff.anchor = None;
+                    cl.tcdm.ff_log = None;
+                    return;
+                }
+                cl.ff.anchor = Some(b);
+            }
+        }
+    }
+    cl.tcdm.ff_log = Some(Vec::new());
+}
+
+/// Structural eligibility: true iff the cluster is in a state whose
+/// periodic evolution the analytic jump can reproduce exactly. Everything
+/// outside this envelope simply runs on the exact path.
+fn eligible(cl: &Cluster) -> bool {
+    // Tracing records per-cycle events; skipping cycles would drop them.
+    if cl.trace.enabled() {
+        return false;
+    }
+    // Standalone cluster only: a System-attached port (DMA traffic,
+    // cross-cluster accesses) can perturb the window asynchronously.
+    match &cl.ext {
+        ExtIf::Local(_) => {
+            if cl.ext.active() {
+                return false;
+            }
+        }
+        ExtIf::Port(_) => return false,
+    }
+    if cl.icaches.iter().any(|ic| ic.active()) {
+        return false;
+    }
+    if cl.periph.active() {
+        return false;
+    }
+    // TCDM quiescent except for in-flight SSR read responses.
+    if cl.tcdm.npending != 0 {
+        return false;
+    }
+    let now = cl.now;
+    if cl.tcdm.bank_busy_until.iter().any(|&t| t > now) {
+        return false;
+    }
+    for (p, r) in cl.tcdm.resp.iter().enumerate() {
+        if let Some((_, resp)) = r {
+            if resp.is_write {
+                return false;
+            }
+            if cl.ccs[p / 2].port_owner[p % 2] != Some(PortOwner::SsrRead(p % 2)) {
+                return false;
+            }
+        }
+    }
+    for (i, cc) in cl.ccs.iter().enumerate() {
+        let hive = i / cl.cfg.cores_per_hive;
+        let local = i % cl.cfg.cores_per_hive;
+        if cl.muldivs[hive].has_work_for(local) {
+            return false;
+        }
+        if !cc.wb_queue.is_empty()
+            || !cc.fpss.int_results.is_empty()
+            || cc.fpss.loads_in_flight != 0
+            || cc.fpss.div_busy_until > now
+            || cc.ext_owner.is_some()
+            || cc.barrier_wait.is_some()
+            || cc.wake_pending
+        {
+            return false;
+        }
+        // Only plain FP-register destinations in flight: SSR write-slot
+        // destinations would mean a write stream is active.
+        if cc.fpss.pipeline.iter().any(|e| !matches!(e.dest, Dest::Freg(_))) {
+            return false;
+        }
+        for l in 0..2 {
+            let lane = &cc.lanes[l];
+            if lane.state == LaneState::Writing || !lane.wq.is_empty() {
+                return false;
+            }
+            match cc.port_owner[l] {
+                None => {}
+                Some(PortOwner::SsrRead(x)) if x == l => {}
+                _ => return false,
+            }
+        }
+        if cc.seq.state == State::Sequencing {
+            let Some(cfg) = cc.seq.configs.front() else {
+                return false;
+            };
+            // Inner-loop repetition re-runs one instruction with varying
+            // latency interactions; only the outer form is periodic in
+            // whole-block steps.
+            if !cfg.is_outer || cc.seq.buffer.is_empty() {
+                return false;
+            }
+            for instr in &cc.seq.buffer {
+                match instr {
+                    // Fdiv/Fsqrt have data-dependent issue serialization
+                    // (div_busy_until); everything else has fixed latency.
+                    Instr::FpOp { op, .. } if !matches!(op, FpOp::Fdiv | FpOp::Fsqrt) => {}
+                    _ => return false,
+                }
+            }
+            if cc.seq.out.iter().any(|o| !o.from_sequencer) {
+                return false;
+            }
+        } else {
+            // A filling sequencer or queued bypass ops are mid-transition;
+            // their drain is not periodic.
+            if cc.seq.state != State::Idle || !cc.seq.out.is_empty() {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+fn capture(cl: &Cluster) -> Anchor {
+    let cores_per_hive = cl.cfg.cores_per_hive;
+    Anchor {
+        t: cl.now,
+        retired: cl.retired.clone(),
+        ccs: cl.ccs.iter().map(snap_cc).collect(),
+        resp: cl.tcdm.resp.iter().map(|r| r.map(|(ready, _)| ready)).collect(),
+        reservations: cl.tcdm.reservations.clone(),
+        counters: counters(cl),
+        tcdm_conflicts: cl.tcdm.conflict_cycles,
+        l0_misses: cl
+            .icaches
+            .iter()
+            .flat_map(|ic| (0..cores_per_hive).map(move |c| ic.l0_stats(c).1))
+            .collect(),
+        l1: cl.icaches.iter().map(|ic| ic.l1_stats()).collect(),
+        muldiv: cl
+            .muldivs
+            .iter()
+            .map(|m| (m.mul_count, m.div_count, m.contention_cycles))
+            .collect(),
+        ext_accesses: cl.ext.accesses(),
+    }
+}
+
+fn snap_cc(cc: &CoreComplex) -> CcSnap {
+    let snap_lane = |l: usize| {
+        let lane = &cc.lanes[l];
+        LaneSnap {
+            state: lane.state,
+            active: lane.active,
+            shadow: lane.shadow,
+            stage_repeat: lane.stage_repeat,
+            stage_bounds: lane.stage_bounds,
+            stage_strides: lane.stage_strides,
+            fetch_idx: lane.fetch_idx,
+            consume_idx: lane.consume_idx,
+            head_serves_left: lane.head_serves_left,
+            data_len: lane.data.len(),
+            in_flight: lane.in_flight,
+        }
+    };
+    CcSnap {
+        pc: cc.core.pc,
+        regs: cc.core.regs,
+        busy: cc.core.busy,
+        halted: cc.core.halted,
+        sleeping: cc.core.sleeping,
+        instret: cc.core.instret,
+        fregs: cc.fpss.regs,
+        fbusy: cc.fpss.busy,
+        ssr_enabled: cc.fpss.ssr_enabled,
+        pipeline: cc
+            .fpss
+            .pipeline
+            .iter()
+            .map(|e| {
+                let Dest::Freg(f) = e.dest else {
+                    unreachable!("eligibility admits only Freg destinations");
+                };
+                PipeSnap { ready_at: e.ready_at, dest: f }
+            })
+            .collect(),
+        seq: SeqSnap {
+            state: cc.seq.state,
+            configs: cc.seq.configs.iter().copied().collect(),
+            buffer: cc.seq.buffer.clone(),
+            inst_idx: cc.seq.inst_idx,
+            iter: cc.seq.iter,
+            out: cc.seq.out.iter().copied().collect(),
+        },
+        lanes: [snap_lane(0), snap_lane(1)],
+        port_owner: cc.port_owner,
+    }
+}
+
+/// The monotonic PMCs extrapolated linearly on engage. **Layout contract:**
+/// [`apply_counters`] consumes deltas in exactly this order.
+fn counters(cl: &Cluster) -> Vec<u64> {
+    let mut v = Vec::with_capacity(cl.ccs.len() * 28 + 1 + cl.cfg.num_cores());
+    for cc in &cl.ccs {
+        v.push(cc.core.instret);
+        v.push(cc.core.offloaded);
+        let s = &cc.stalls;
+        v.extend_from_slice(&[
+            s.fetch,
+            s.scoreboard,
+            s.mem_port,
+            s.offload,
+            s.muldiv,
+            s.ssr_config,
+            s.barrier,
+            s.drain,
+            s.wfi,
+        ]);
+        v.push(cc.int_loads);
+        v.push(cc.int_stores);
+        let f = &cc.fpss;
+        v.extend_from_slice(&[f.issued, f.fpu_arith, f.flops, f.loads, f.stores]);
+        v.push(cc.seq.sequenced_ops);
+        v.push(cc.seq.freps_run);
+        for lane in &cc.lanes {
+            v.extend_from_slice(&[
+                lane.reads_served,
+                lane.writes_accepted,
+                lane.mem_reads,
+                lane.mem_writes,
+            ]);
+        }
+    }
+    v.push(cl.tcdm.accesses);
+    for ic in &cl.icaches {
+        for c in 0..cl.cfg.cores_per_hive {
+            v.push(ic.l0_stats(c).0); // L0 hits
+        }
+    }
+    v
+}
+
+/// Add `k` periods' worth of counter deltas (layout: see [`counters`]).
+fn apply_counters(cl: &mut Cluster, a: &[u64], b: &[u64], k: u64) {
+    debug_assert_eq!(a.len(), b.len());
+    let mut it = a.iter().zip(b).map(|(x, y)| (y - x) * k);
+    macro_rules! take {
+        () => {
+            it.next().expect("ff counter layout out of sync")
+        };
+    }
+    for cc in &mut cl.ccs {
+        cc.core.instret += take!();
+        cc.core.offloaded += take!();
+        cc.stalls.fetch += take!();
+        cc.stalls.scoreboard += take!();
+        cc.stalls.mem_port += take!();
+        cc.stalls.offload += take!();
+        cc.stalls.muldiv += take!();
+        cc.stalls.ssr_config += take!();
+        cc.stalls.barrier += take!();
+        cc.stalls.drain += take!();
+        cc.stalls.wfi += take!();
+        cc.int_loads += take!();
+        cc.int_stores += take!();
+        cc.fpss.issued += take!();
+        cc.fpss.fpu_arith += take!();
+        cc.fpss.flops += take!();
+        cc.fpss.loads += take!();
+        cc.fpss.stores += take!();
+        cc.seq.sequenced_ops += take!();
+        cc.seq.freps_run += take!();
+        for lane in &mut cc.lanes {
+            lane.reads_served += take!();
+            lane.writes_accepted += take!();
+            lane.mem_reads += take!();
+            lane.mem_writes += take!();
+        }
+    }
+    cl.tcdm.accesses += take!();
+    let cores_per_hive = cl.cfg.cores_per_hive;
+    for ic in &mut cl.icaches {
+        for c in 0..cores_per_hive {
+            let hits = take!();
+            ic.ff_add_l0(c, hits, 0);
+        }
+    }
+    debug_assert!(it.next().is_none(), "ff counter layout out of sync");
+}
+
+/// Compare two fingerprints for equality modulo a uniform time shift;
+/// returns the period deltas on success.
+fn compare(a: &Anchor, b: &Anchor) -> Option<Period> {
+    if b.t <= a.t {
+        return None;
+    }
+    let t = b.t - a.t;
+    if a.retired != b.retired
+        || a.tcdm_conflicts != b.tcdm_conflicts
+        || a.l0_misses != b.l0_misses
+        || a.l1 != b.l1
+        || a.muldiv != b.muldiv
+        || a.ext_accesses != b.ext_accesses
+        || a.reservations != b.reservations
+        || a.resp.len() != b.resp.len()
+        || a.counters.len() != b.counters.len()
+    {
+        return None;
+    }
+    // Monotonicity (paranoia: a counter reset mid-window would otherwise
+    // wrap the extrapolated delta).
+    if a.counters.iter().zip(&b.counters).any(|(x, y)| y < x) {
+        return None;
+    }
+    for (x, y) in a.resp.iter().zip(&b.resp) {
+        match (x, y) {
+            (None, None) => {}
+            (Some(rx), Some(ry)) if *ry == rx + t => {}
+            _ => return None,
+        }
+    }
+    let mut dit = Vec::with_capacity(a.ccs.len());
+    let mut de = Vec::with_capacity(a.ccs.len());
+    for (x, y) in a.ccs.iter().zip(&b.ccs) {
+        if x.pc != y.pc
+            || x.regs != y.regs
+            || x.busy != y.busy
+            || x.halted != y.halted
+            || x.sleeping != y.sleeping
+            || x.instret != y.instret
+            || x.fbusy != y.fbusy
+            || x.ssr_enabled != y.ssr_enabled
+            || x.port_owner != y.port_owner
+            || x.pipeline.len() != y.pipeline.len()
+        {
+            return None;
+        }
+        for (p, q) in x.pipeline.iter().zip(&y.pipeline) {
+            if p.dest != q.dest || q.ready_at != p.ready_at + t {
+                return None;
+            }
+        }
+        if x.seq.state != y.seq.state
+            || x.seq.configs != y.seq.configs
+            || x.seq.buffer != y.seq.buffer
+            || x.seq.inst_idx != y.seq.inst_idx
+            || x.seq.out != y.seq.out
+        {
+            return None;
+        }
+        let di = if x.seq.state == State::Sequencing {
+            let d = u64::from(y.seq.iter).checked_sub(u64::from(x.seq.iter))?;
+            if d == 0 {
+                return None;
+            }
+            let cfg = x.seq.configs.first()?;
+            let s = if cfg.stagger_mask == 0 { 1 } else { u64::from(cfg.stagger_count) + 1 };
+            if d % s != 0 {
+                return None;
+            }
+            d
+        } else {
+            if x.seq.iter != y.seq.iter {
+                return None;
+            }
+            0
+        };
+        dit.push(di);
+        let mut dl = [0u64; 2];
+        for l in 0..2 {
+            let lx = &x.lanes[l];
+            let ly = &y.lanes[l];
+            if lx.state != ly.state
+                || lx.active != ly.active
+                || lx.shadow != ly.shadow
+                || lx.stage_repeat != ly.stage_repeat
+                || lx.stage_bounds != ly.stage_bounds
+                || lx.stage_strides != ly.stage_strides
+                || lx.head_serves_left != ly.head_serves_left
+                || lx.data_len != ly.data_len
+                || lx.in_flight != ly.in_flight
+            {
+                return None;
+            }
+            let df = ly.fetch_idx.checked_sub(lx.fetch_idx)?;
+            let dc = ly.consume_idx.checked_sub(lx.consume_idx)?;
+            if df != dc {
+                return None;
+            }
+            dl[l] = df;
+        }
+        de.push(dl);
+    }
+    Some(Period { t, dit, de })
+}
+
+/// Attempt the analytic jump from anchor `b` (the current state), having
+/// observed one full period `[a, b)`. Returns true iff the cluster was
+/// advanced; on false the cluster is untouched (the grant log may have
+/// been consumed — `poll` re-arms it either way).
+fn try_engage(cl: &mut Cluster, a: &Anchor, b: &Anchor) -> bool {
+    let Some(p) = compare(a, b) else {
+        return false;
+    };
+    let t = p.t;
+    let now = cl.now;
+
+    // ---- bound the number of periods k ----
+    // Timeout: `Cluster::run` errors at `now == max_cycles` *without*
+    // running that cycle, and the cycle that invoked us still runs once
+    // after the jump; keep the post-jump `now` at most `max_cycles - 1`
+    // so the exact path's error point (and its stats) are reproduced
+    // bit-identically.
+    let mut k = cl.ff_max_cycles.saturating_sub(now).saturating_sub(1) / t;
+    k = k.min(SCAN_CAP);
+    for (i, cc) in cl.ccs.iter().enumerate() {
+        if cc.seq.state == State::Sequencing {
+            let dit = p.dit[i];
+            if dit == 0 {
+                return false;
+            }
+            let Some(cfg) = cc.seq.configs.front() else {
+                return false;
+            };
+            // Stop one full period short of the last iteration: the
+            // config pop / refill boundary runs on the exact path.
+            let room = u64::from(cfg.max_rep).saturating_sub(u64::from(cc.seq.iter));
+            k = k.min((room / dit).saturating_sub(1));
+        }
+        for l in 0..2 {
+            let de = p.de[i][l];
+            if de == 0 {
+                continue;
+            }
+            let Some(cfg) = cc.lanes[l].active else {
+                return false;
+            };
+            // Two periods of headroom before either cursor reaches the
+            // stream end, so fetch throttling / shadow swap stay exact.
+            let n = cfg.num_elements();
+            k = k.min((n.saturating_sub(cc.lanes[l].fetch_idx) / de).saturating_sub(2));
+            k = k.min((n.saturating_sub(cc.lanes[l].consume_idx) / de).saturating_sub(2));
+        }
+    }
+    if k == 0 {
+        return false;
+    }
+
+    // ---- validate the observed period's TCDM traffic ----
+    // Every grant in the window must be a stream read at exactly the
+    // address its lane's affine function predicts. This is the proof that
+    // memory was read-only over the period (writes never reach a bank
+    // without a grant) and that the bank schedule is analytically known.
+    let Some(log) = cl.tcdm.ff_log.take() else {
+        return false;
+    };
+    let nports = cl.tcdm.num_ports();
+    let mut next_elem: Vec<u64> =
+        (0..nports).map(|q| a.ccs[q / 2].lanes[q % 2].fetch_idx).collect();
+    let mut entries: Vec<LogEntry> = Vec::with_capacity(log.len());
+    for &(cyc, port, addr) in &log {
+        if cyc < a.t || cyc >= b.t || port >= nports {
+            return false;
+        }
+        let lane = &cl.ccs[port / 2].lanes[port % 2];
+        if lane.state != LaneState::Reading {
+            return false;
+        }
+        let Some(cfg) = lane.active else {
+            return false;
+        };
+        let elem = next_elem[port];
+        if cfg.address(elem) != addr {
+            return false;
+        }
+        next_elem[port] = elem + 1;
+        entries.push(LogEntry {
+            cycle_off: cyc - a.t,
+            port,
+            cfg,
+            elem,
+            de: p.de[port / 2][port % 2],
+        });
+    }
+    for port in 0..nports {
+        let granted = next_elem[port] - a.ccs[port / 2].lanes[port % 2].fetch_idx;
+        if granted != p.de[port / 2][port % 2] {
+            return false;
+        }
+    }
+
+    // ---- dry-run the bank schedule of future periods ----
+    // The observed period had no conflicts (conflict-counter delta is
+    // zero), so every grant cycle had at most one request per bank. A
+    // shifted period re-maps each grant to a new bank; cap k just below
+    // the first period where two same-cycle grants would collide.
+    let mut g0 = 0;
+    while g0 < entries.len() {
+        let mut g1 = g0 + 1;
+        while g1 < entries.len() && entries[g1].cycle_off == entries[g0].cycle_off {
+            g1 += 1;
+        }
+        if g1 - g0 >= 2 {
+            let group = &entries[g0..g1];
+            let mut banks: Vec<usize> = Vec::with_capacity(group.len());
+            'scan: for j in 1..=k {
+                banks.clear();
+                for e in group {
+                    banks.push(cl.tcdm.bank_of(e.cfg.address(e.elem + j * e.de)));
+                }
+                banks.sort_unstable();
+                if banks.windows(2).any(|w| w[0] == w[1]) {
+                    k = j - 1;
+                    break 'scan;
+                }
+            }
+        }
+        g0 = g1;
+    }
+    if k == 0 {
+        return false;
+    }
+
+    // ---- commit: the jump is exact from here on ----
+    // Bank arbiter state: each skipped grant bumps its bank's access
+    // counter and leaves the round-robin pointer just past the granted
+    // port, in log order per period (matching `Tcdm::arbitrate`).
+    // `tcdm.accesses` rides the flat counter extrapolation instead.
+    for j in 1..=k {
+        for e in &entries {
+            let bank = cl.tcdm.bank_of(e.cfg.address(e.elem + j * e.de));
+            cl.tcdm.rr[bank] = (e.port + 1) % nports;
+            cl.tcdm.bank_accesses[bank] += 1;
+        }
+    }
+
+    apply_counters(cl, &a.counters, &b.counters, k);
+
+    let Cluster { ccs, tcdm, .. } = cl;
+    for (i, cc) in ccs.iter_mut().enumerate() {
+        if cc.seq.state == State::Sequencing && p.dit[i] > 0 {
+            replay_cc(cc, tcdm, k, t, p.dit[i], p.de[i]);
+        }
+        for l in 0..2 {
+            let de = p.de[i][l];
+            if de == 0 {
+                continue;
+            }
+            let port = 2 * i + l;
+            let lane = &mut cc.lanes[l];
+            let cfg = lane.active.expect("validated above");
+            let adv = k * de;
+            lane.consume_idx += adv;
+            lane.fetch_idx += adv;
+            lane.fetch_addr = cfg.address(lane.fetch_idx);
+            // Mixed-radix digits of fetch_idx, matching the incremental
+            // counter chain in `SsrLane::advance`.
+            let mut rem = lane.fetch_idx;
+            let mut ctr = [0u32; SSR_DIMS];
+            for (d, digit) in ctr.iter_mut().enumerate().take(cfg.dims) {
+                let extent = u64::from(cfg.bounds[d]) + 1;
+                *digit = (rem % extent) as u32;
+                rem /= extent;
+            }
+            lane.fetch_ctr = ctr;
+            // Data queue: the same number of elements, now the window
+            // starting at the advanced consume cursor.
+            let len = lane.data.len();
+            lane.data.clear();
+            for q in 0..len as u64 {
+                let bits = tcdm.read(cfg.address(lane.consume_idx + q), 8);
+                lane.data.push_back(f64::from_bits(bits));
+            }
+            // In-flight response: re-dated and re-valued for the element
+            // granted last (fetch_idx - 1 after the advance).
+            if let Some((ready, _)) = tcdm.resp[port] {
+                let data = tcdm.read(cfg.address(lane.fetch_idx - 1), 8);
+                tcdm.resp[port] = Some((ready + k * t, TcdmResponse { data, is_write: false }));
+            }
+        }
+    }
+
+    cl.engine.advance_by(k * t);
+    cl.now = cl.engine.now();
+    cl.ff.engagements += 1;
+    cl.ff.cycles_skipped += k * t;
+    true
+}
+
+/// Functionally replay the `k * dit * buffer.len()` sequenced ops a core's
+/// FPU would issue over the skipped periods, reconstructing the FP
+/// register file and the in-flight pipeline values bit-exactly.
+///
+/// The busy-flag scoreboard serializes each register's writes (an op whose
+/// destination is in flight cannot issue), and every source is either a
+/// stream element (read from TCDM at its affine address) or the latest
+/// program-order write — so immediate-commit evaluation in emission order
+/// reproduces the dataflow exactly; only the commit *timing* differs, and
+/// that is what the pipeline re-dating restores.
+fn replay_cc(cc: &mut CoreComplex, tcdm: &Tcdm, k: u64, t: u64, dit: u64, de: [u64; 2]) {
+    let cfg = *cc.seq.configs.front().expect("sequencing without config");
+    let n = cc.seq.buffer.len() as u64;
+    let emitted = u64::from(cc.seq.iter) * n + cc.seq.inst_idx as u64;
+    // Ops the FPU has actually issued so far: emitted minus those still
+    // queued in `out` (which survive the jump untouched — at stagger-
+    // aligned anchors their instruction bits repeat exactly).
+    let frontier = emitted - cc.seq.out.len() as u64;
+    let dm = dit * n;
+
+    // Stream-side mirrors of `SsrLane::read`, starting at the live
+    // consume cursors.
+    let ssr_on = cc.fpss.ssr_enabled;
+    let mut lelem = [cc.lanes[0].consume_idx, cc.lanes[1].consume_idx];
+    let mut lhsl = [cc.lanes[0].head_serves_left, cc.lanes[1].head_serves_left];
+    let lread =
+        [cc.lanes[0].state == LaneState::Reading, cc.lanes[1].state == LaneState::Reading];
+    let lcfg = [cc.lanes[0].active, cc.lanes[1].active];
+
+    // Functional register state: architectural file with every in-flight
+    // value applied (an in-flight entry is a program-order-earlier write
+    // whose value later ops may consume).
+    let mut regs = cc.fpss.regs;
+    for e in &cc.fpss.pipeline {
+        if let Dest::Freg(f) = e.dest {
+            regs[f.index()] = e.bits;
+        }
+    }
+    let mut prev = regs;
+    let mut written = [false; 32];
+
+    for o in frontier..frontier + k * dm {
+        let instr = Sequencer::stagger(cc.seq.buffer[(o % n) as usize], &cfg, (o / n) as u32);
+        let Instr::FpOp { op, width, frd, frs1, frs2, frs3 } = instr else {
+            unreachable!("non-FpOp in eligible FREP buffer");
+        };
+        {
+            let mut read = |r: FReg| -> u64 {
+                let ri = r.index();
+                if ri < 2 && ssr_on && lread[ri] {
+                    let v = tcdm.read(lcfg[ri].unwrap().address(lelem[ri]), 8);
+                    // Mirror of SsrLane::read's repeat handling.
+                    if lhsl[ri] == 0 {
+                        lhsl[ri] = lcfg[ri].unwrap().repeat;
+                    } else {
+                        lhsl[ri] -= 1;
+                    }
+                    if lhsl[ri] == 0 {
+                        lelem[ri] += 1;
+                    }
+                    v
+                } else {
+                    regs[ri]
+                }
+            };
+            let av = read(frs1);
+            let bv = if op.has_rs2() { read(frs2) } else { 0 };
+            let cv = if op.has_rs3() { read(frs3) } else { 0 };
+            let bits = eval_fpop(op, width, av, bv, cv);
+            let d = frd.index();
+            prev[d] = regs[d];
+            regs[d] = bits;
+            written[d] = true;
+        }
+    }
+
+    // Re-date the in-flight entries and give each the value of its
+    // register's latest replayed write (the scoreboard guarantees the
+    // in-flight write *is* the latest). The architectural file gets the
+    // latest *committed* write: for an in-flight destination that is the
+    // one before last.
+    let mut inflight = [false; 32];
+    for e in &mut cc.fpss.pipeline {
+        e.ready_at += k * t;
+        let Dest::Freg(f) = e.dest else {
+            unreachable!("eligibility admits only Freg destinations");
+        };
+        e.bits = regs[f.index()];
+        inflight[f.index()] = true;
+    }
+    for f in 0..32 {
+        if written[f] {
+            cc.fpss.regs[f] = if inflight[f] { prev[f] } else { regs[f] };
+        }
+    }
+    cc.seq.iter = (u64::from(cc.seq.iter) + k * dit) as u32;
+    for l in 0..2 {
+        debug_assert_eq!(
+            lelem[l],
+            cc.lanes[l].consume_idx + k * de[l],
+            "replay consumed a different element count than the period delta"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Cluster, ClusterConfig};
+    use crate::asm::assemble;
+
+    /// FREP dot product with 4-way accumulator staggering over 256
+    /// elements; the B stream is offset by one bank so the two lanes never
+    /// collide in the steady state.
+    const SRC: &str = r#"
+        li   t0, 255
+        csrw ssr0_bound0, t0
+        csrw ssr1_bound0, t0
+        li   t1, 8
+        csrw ssr0_stride0, t1
+        csrw ssr1_stride0, t1
+        li   t2, 0x10000000
+        csrw ssr0_rptr0, t2
+        li   t3, 0x10000808
+        csrw ssr1_rptr0, t3
+        csrwi ssr, 1
+        fcvt.d.w ft3, zero
+        fmv.d ft4, ft3
+        fmv.d ft5, ft3
+        fmv.d ft6, ft3
+        li   t4, 255
+        frep.o t4, 1, 0b1100, 3
+        fmadd.d ft3, ft0, ft1, ft3
+        fadd.d ft3, ft3, ft4
+        fadd.d ft5, ft5, ft6
+        fadd.d ft3, ft3, ft5
+        csrwi ssr, 0
+        li   t5, 0x10001800
+        fsd  ft3, 0(t5)
+        fence
+        ecall
+        "#;
+
+    fn prepared(cfg: ClusterConfig) -> Cluster {
+        let prog = assemble(SRC).expect("asm");
+        let a: Vec<f64> = (0..256).map(|i| f64::from((i * 7) % 23) - 11.0).collect();
+        let b: Vec<f64> = (0..256).map(|i| f64::from((i * 13) % 19) * 0.5).collect();
+        let mut cl = Cluster::new(cfg);
+        cl.load(&prog);
+        cl.tcdm.write_f64_slice(0x1000_0000, &a);
+        cl.tcdm.write_f64_slice(0x1000_0808, &b);
+        cl
+    }
+
+    #[test]
+    fn fast_forward_engages_and_stays_exact() {
+        let mut cfg = ClusterConfig::default();
+        cfg.num_hives = 1;
+        cfg.cores_per_hive = 1;
+        assert!(cfg.fast_forward);
+
+        let mut fast = prepared(cfg);
+        fast.run(1_000_000).expect("run");
+
+        let mut exact = prepared(cfg);
+        let mut guard = 0u64;
+        while !exact.done() {
+            exact.cycle_direct();
+            guard += 1;
+            assert!(guard < 1_000_000, "exact run did not finish");
+        }
+
+        assert!(fast.ff.engagements > 0, "fast-forward never engaged");
+        assert!(fast.ff.cycles_skipped > 0);
+        assert!(
+            fast.ff.cycles_skipped * 2 > exact.now,
+            "expected most cycles skipped, got {} of {}",
+            fast.ff.cycles_skipped,
+            exact.now
+        );
+        assert_eq!(fast.now, exact.now, "cycle count must be bit-identical");
+        assert_eq!(
+            fast.tcdm.read(0x1000_1800, 8),
+            exact.tcdm.read(0x1000_1800, 8),
+            "stored dot product must be bit-identical"
+        );
+        assert_eq!(
+            super::super::ClusterStats::gather(&fast),
+            super::super::ClusterStats::gather(&exact),
+            "PMCs must be bit-identical"
+        );
+        // Reference value computed the staggered way: 4 fmadd chains, then
+        // the program's reduction order.
+        let mut acc = [0.0f64; 4];
+        for i in 0..256usize {
+            let x = f64::from(((i * 7) % 23) as u32) - 11.0;
+            let y = f64::from(((i * 13) % 19) as u32) * 0.5;
+            acc[i % 4] = x.mul_add(y, acc[i % 4]);
+        }
+        let reference = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+        assert_eq!(f64::from_bits(fast.tcdm.read(0x1000_1800, 8)), reference);
+    }
+}

@@ -25,6 +25,7 @@
 
 pub mod cc;
 pub mod config;
+mod ff;
 pub mod periph;
 pub mod stats;
 
@@ -109,6 +110,16 @@ pub struct Cluster {
     /// are conservative: unset just means "not proven retired").
     retired: Vec<bool>,
     retired_count: usize,
+    /// Steady-state fast-forward state (`cluster::ff`): the armed anchor
+    /// snapshot plus the engagement/skip counters surfaced through
+    /// [`ClusterStats`]. Only the engine path ([`Cluster::cycle`]) with
+    /// `cfg.fast_forward` consults it; [`Cluster::cycle_direct`] never
+    /// does.
+    pub(crate) ff: ff::FfState,
+    /// Cycle horizon for fast-forward jumps: [`Cluster::run`] records its
+    /// `max_cycles` here so an analytic jump never overshoots the budget
+    /// check (the timeout error stays bit-identical to the exact path).
+    pub(crate) ff_max_cycles: u64,
 }
 
 // ---- phase bodies and activity gates of the default schedule (free
@@ -210,6 +221,8 @@ impl Cluster {
             engine: Cluster::default_schedule(),
             retired: vec![false; n],
             retired_count: 0,
+            ff: ff::FfState::default(),
+            ff_max_cycles: u64::MAX,
             cfg,
         }
     }
@@ -322,6 +335,8 @@ impl Cluster {
         self.engine.reset_clock();
         self.retired.fill(false);
         self.retired_count = 0;
+        self.ff = ff::FfState::default();
+        self.ff_max_cycles = u64::MAX;
         self.load(prog);
     }
 
@@ -344,6 +359,13 @@ impl Cluster {
     /// contract this is unobservable, and the determinism test holds this
     /// path bit-identical to the ungated [`Cluster::cycle_direct`].
     pub fn cycle(&mut self) {
+        // Fast-forward tier: at FREP steady-state anchor points this may
+        // advance the clock (and all state) by many cycles analytically
+        // before the exact cycle below runs; unobservable by the
+        // equivalence argument in `cluster::ff` / DESIGN.md.
+        if self.cfg.fast_forward {
+            ff::poll(self);
+        }
         let now = self.engine.now();
         debug_assert_eq!(self.now, now, "cluster clock out of sync with engine");
         for i in 0..self.engine.num_phases() {
@@ -409,6 +431,7 @@ impl Cluster {
 
     /// Run until completion or `max_cycles`. Returns the cycle count.
     pub fn run(&mut self, max_cycles: u64) -> Result<u64, String> {
+        self.ff_max_cycles = max_cycles;
         while !self.done() {
             if self.now >= max_cycles {
                 let stuck: Vec<String> = self

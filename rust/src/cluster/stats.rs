@@ -111,9 +111,12 @@ pub struct StallCounters {
 }
 
 /// Cluster-wide statistics bundle handed to the harness/energy model.
-/// `PartialEq` so the determinism tests can assert whole-bundle equality
-/// across engine paths and cluster reuse.
-#[derive(Debug, Clone, PartialEq)]
+/// `PartialEq` (manual, below) so the determinism tests can assert
+/// whole-bundle equality across engine paths and cluster reuse; the
+/// fast-forward hit-rate pair is *excluded* from equality — it reports how
+/// a result was obtained, not what the result is (an exact run and a
+/// fast-forwarded run of the same program must compare equal).
+#[derive(Debug, Clone)]
 pub struct ClusterStats {
     pub cycles: u64,
     /// Per-core *total* counters (full run).
@@ -131,6 +134,29 @@ pub struct ClusterStats {
     pub muldiv_muls: u64,
     pub muldiv_divs: u64,
     pub ext_accesses: u64,
+    /// Steady-state fast-forward engagements (analytic jumps taken).
+    pub ff_engagements: u64,
+    /// Cycles skipped by analytic jumps (0 on the exact path).
+    pub ff_cycles_skipped: u64,
+}
+
+impl PartialEq for ClusterStats {
+    fn eq(&self, other: &Self) -> bool {
+        // Every architectural/PMC field except the ff_* pair.
+        self.cycles == other.cycles
+            && self.cores == other.cores
+            && self.regions == other.regions
+            && self.stalls == other.stalls
+            && self.tcdm_accesses == other.tcdm_accesses
+            && self.tcdm_conflicts == other.tcdm_conflicts
+            && self.icache_l0_hits == other.icache_l0_hits
+            && self.icache_l0_misses == other.icache_l0_misses
+            && self.icache_l1_hits == other.icache_l1_hits
+            && self.icache_l1_misses == other.icache_l1_misses
+            && self.muldiv_muls == other.muldiv_muls
+            && self.muldiv_divs == other.muldiv_divs
+            && self.ext_accesses == other.ext_accesses
+    }
 }
 
 impl ClusterStats {
@@ -162,6 +188,8 @@ impl ClusterStats {
             muldiv_muls: cl.muldivs.iter().map(|m| m.mul_count).sum(),
             muldiv_divs: cl.muldivs.iter().map(|m| m.div_count).sum(),
             ext_accesses: cl.ext.accesses(),
+            ff_engagements: cl.ff.engagements,
+            ff_cycles_skipped: cl.ff.cycles_skipped,
         }
     }
 

@@ -37,17 +37,18 @@ impl Default for FpuLatency {
 }
 
 /// Destination of an in-flight FPU result.
-#[derive(Debug, Clone, Copy)]
-enum Dest {
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Dest {
     Freg(FReg),
     /// SSR write-stream slot (lane, slot id).
     SsrSlot(usize, u64),
 }
 
-struct PipeEntry {
-    ready_at: u64,
-    dest: Dest,
-    bits: u64,
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct PipeEntry {
+    pub(crate) ready_at: u64,
+    pub(crate) dest: Dest,
+    pub(crate) bits: u64,
 }
 
 /// Outcome of attempting to issue the head instruction.
@@ -69,13 +70,13 @@ pub struct FpSubsystem {
     pub regs: [u64; 32],
     pub busy: [bool; 32],
     pub ssr_enabled: bool,
-    lat: FpuLatency,
-    pipeline: Vec<PipeEntry>,
+    pub(crate) lat: FpuLatency,
+    pub(crate) pipeline: Vec<PipeEntry>,
     /// FP→integer results heading back to the core: (ready_at, rd, value).
-    int_results: VecDeque<(u64, u8, u32)>,
-    div_busy_until: u64,
+    pub(crate) int_results: VecDeque<(u64, u8, u32)>,
+    pub(crate) div_busy_until: u64,
     /// In-flight FP loads (for drain checks).
-    loads_in_flight: u32,
+    pub(crate) loads_in_flight: u32,
     // ---- PMCs (Table 1 accounting) ----
     /// All instructions executed by the FP-SS (FP-SS utilization).
     pub issued: u64,

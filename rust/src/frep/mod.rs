@@ -57,7 +57,7 @@ pub struct FpssOp {
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum State {
+pub(crate) enum State {
     Idle,
     /// Capturing `max_inst + 1` instructions of the active config.
     Filling,
@@ -76,17 +76,17 @@ pub enum Offer {
 
 /// The FPU sequencer.
 pub struct Sequencer {
-    state: State,
-    configs: VecDeque<FrepConfig>,
-    buffer: Vec<Instr>,
+    pub(crate) state: State,
+    pub(crate) configs: VecDeque<FrepConfig>,
+    pub(crate) buffer: Vec<Instr>,
     /// Position in the buffer during sequencing.
-    inst_idx: usize,
+    pub(crate) inst_idx: usize,
     /// Current iteration (outer: block iteration; inner: per-instruction).
-    iter: u32,
+    pub(crate) iter: u32,
     /// Output queue toward the FP-SS (models the issue register; depth 1 —
     /// the FP-SS pulls one instruction per cycle).
-    out: VecDeque<FpssOp>,
-    out_capacity: usize,
+    pub(crate) out: VecDeque<FpssOp>,
+    pub(crate) out_capacity: usize,
     /// PMC: instructions issued out of the sequence buffer (beyond their
     /// first, core-issued occurrence).
     pub sequenced_ops: u64,
@@ -178,7 +178,9 @@ impl Sequencer {
     }
 
     /// Apply the stagger transform for iteration `iter` to an instruction.
-    fn stagger(instr: Instr, cfg: &FrepConfig, iter: u32) -> Instr {
+    /// `pub(crate)` so the fast-forward replay (`cluster::ff`) can
+    /// reproduce the exact op stream for an arbitrary iteration.
+    pub(crate) fn stagger(instr: Instr, cfg: &FrepConfig, iter: u32) -> Instr {
         if cfg.stagger_mask == 0 {
             return instr;
         }

@@ -157,6 +157,20 @@ impl ICacheSystem {
         (self.l1.hits, self.l1.misses)
     }
 
+    /// Bulk-add L0 hit/miss deltas for `core` — the fast-forward tier
+    /// (`cluster::ff`) applies `k` skipped periods' worth of counter
+    /// deltas in one step (the L0/L1 structs stay private).
+    pub(crate) fn ff_add_l0(&mut self, core: usize, hits: u64, misses: u64) {
+        self.l0[core].hits += hits;
+        self.l0[core].misses += misses;
+    }
+
+    /// Bulk-add L1 hit/miss deltas (see [`ICacheSystem::ff_add_l0`]).
+    pub(crate) fn ff_add_l1(&mut self, hits: u64, misses: u64) {
+        self.l1.hits += hits;
+        self.l1.misses += misses;
+    }
+
     /// Rewind to the just-constructed state (cold caches, no refills,
     /// zeroed PMCs) without reallocating the tag arrays.
     pub fn reset(&mut self) {

@@ -112,6 +112,12 @@ pub struct Params {
     /// [`crate::system::System`] (DMA preload, shared external memory —
     /// see [`shard`]). [`run_kernel`] dispatches automatically.
     pub clusters: usize,
+    /// Steady-state fast-forward tier (`cluster::ff`), on by default.
+    /// Observationally equivalent to the exact engine path — the
+    /// determinism suite holds every kernel bit-identical with it on and
+    /// off; turn it off via [`Params::with_fast_forward`] to pin a run to
+    /// the exact path (e.g. one leg of an equivalence check).
+    pub fast_forward: bool,
 }
 
 impl Params {
@@ -123,6 +129,7 @@ impl Params {
             max_cycles: DEFAULT_MAX_CYCLES,
             keep_cluster: false,
             clusters: 1,
+            fast_forward: true,
         }
     }
 
@@ -142,6 +149,13 @@ impl Params {
     pub fn with_clusters(mut self, clusters: usize) -> Params {
         assert!(clusters >= 1, "at least one cluster");
         self.clusters = clusters;
+        self
+    }
+
+    /// Same parameters with the steady-state fast-forward tier switched
+    /// on (`true`, the default) or off (`false`, exact cycle-by-cycle).
+    pub fn with_fast_forward(mut self, fast_forward: bool) -> Params {
+        self.fast_forward = fast_forward;
         self
     }
 }
@@ -349,6 +363,7 @@ pub fn config_for(
     if need > cfg.tcdm_size {
         cfg.tcdm_size = need.next_power_of_two();
     }
+    cfg.fast_forward = params.fast_forward;
     cfg
 }
 

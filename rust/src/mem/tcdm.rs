@@ -53,19 +53,25 @@ pub struct Tcdm {
     num_banks: usize,
     /// log2 of bank word width in bytes (64-bit banks → 3).
     bank_word_shift: u32,
-    pending: Vec<Option<TcdmRequest>>,
+    pub(crate) pending: Vec<Option<TcdmRequest>>,
     /// Requests awaiting a grant (`Some` entries of `pending`) — the O(1)
     /// activity signal the gated engine checks before running the arbiter
     /// phase at all (§Perf).
-    npending: usize,
+    pub(crate) npending: usize,
     /// Responses that become visible at cycle `ready_at`.
-    resp: Vec<Option<(u64, TcdmResponse)>>,
+    pub(crate) resp: Vec<Option<(u64, TcdmResponse)>>,
     /// Per-bank: cycle until which the bank is held by an atomic FSM.
-    bank_busy_until: Vec<u64>,
+    pub(crate) bank_busy_until: Vec<u64>,
     /// Round-robin pointer per bank.
-    rr: Vec<usize>,
+    pub(crate) rr: Vec<usize>,
     /// Reservation set for LR/SC: one reservation per port (address).
-    reservations: Vec<Option<u32>>,
+    pub(crate) reservations: Vec<Option<u32>>,
+    /// Grant log armed by the fast-forward detector (`cluster::ff`):
+    /// while `Some`, every grant appends `(cycle, port, addr)` so a
+    /// steady-state period's bank traffic can be replayed analytically.
+    /// `None` (the default and the `cycle_direct` state) costs one branch
+    /// per grant.
+    pub(crate) ff_log: Option<Vec<(u64, usize, u32)>>,
     /// PMC: cycles a pending request could not be granted (bank conflict).
     pub conflict_cycles: u64,
     /// PMC: total granted accesses.
@@ -93,6 +99,7 @@ impl Tcdm {
             bank_busy_until: vec![0; num_banks],
             rr: vec![0; num_banks],
             reservations: vec![None; num_ports],
+            ff_log: None,
             conflict_cycles: 0,
             accesses: 0,
             bank_accesses: vec![0; num_banks],
@@ -112,6 +119,7 @@ impl Tcdm {
         self.bank_busy_until.fill(0);
         self.rr.fill(0);
         self.reservations.fill(None);
+        self.ff_log = None;
         self.conflict_cycles = 0;
         self.accesses = 0;
         self.bank_accesses.fill(0);
@@ -127,7 +135,7 @@ impl Tcdm {
         self.pending.len()
     }
 
-    fn bank_of(&self, addr: u32) -> usize {
+    pub(crate) fn bank_of(&self, addr: u32) -> usize {
         (((addr - self.base) >> self.bank_word_shift) as usize) & (self.num_banks - 1)
     }
 
@@ -217,6 +225,9 @@ impl Tcdm {
                 self.accesses += 1;
                 self.bank_accesses[bank] += 1;
                 let req = self.pending[p].unwrap();
+                if let Some(log) = &mut self.ff_log {
+                    log.push((now, p, req.addr));
+                }
                 self.pending[p] = None;
                 self.npending -= 1;
                 match req.op {

@@ -199,6 +199,15 @@ impl<S: ?Sized> ClockDomain<S> {
         self.now += 1;
     }
 
+    /// Jump the clock forward by `k` cycles in one step — the fast-forward
+    /// tier's clock primitive (`cluster::ff`). The owner is responsible
+    /// for having advanced all external state by the same `k` cycles; the
+    /// per-phase activity tallies deliberately do not change (skipped
+    /// cycles ran no phases).
+    pub fn advance_by(&mut self, k: u64) {
+        self.now += k;
+    }
+
     /// Rewind the clock to cycle 0 and zero the activity tallies (for
     /// [`crate::cluster::Cluster::reset`]-style reuse). The schedule
     /// itself is untouched.

@@ -57,7 +57,7 @@ impl StreamConfig {
 
 /// Lane activity state.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum LaneState {
+pub(crate) enum LaneState {
     Idle,
     Reading,
     Writing,
@@ -66,8 +66,8 @@ enum LaneState {
 /// A pending write-stream slot: allocated at FP-SS issue (to preserve
 /// program order), filled at FPU retire.
 #[derive(Debug, Clone, Copy)]
-struct WriteSlot {
-    value: Option<f64>,
+pub(crate) struct WriteSlot {
+    pub(crate) value: Option<f64>,
 }
 
 /// One streamer lane (the paper's Fig. 3 data mover).
@@ -78,38 +78,38 @@ pub struct SsrLane {
     pub stage_bounds: [u32; SSR_DIMS],
     pub stage_strides: [i32; SSR_DIMS],
 
-    state: LaneState,
-    active: Option<StreamConfig>,
+    pub(crate) state: LaneState,
+    pub(crate) active: Option<StreamConfig>,
     /// The shadow register: the next armed configuration.
-    shadow: Option<StreamConfig>,
+    pub(crate) shadow: Option<StreamConfig>,
 
     // ---- read stream state ----
     /// Next element index to fetch from memory.
-    fetch_idx: u64,
+    pub(crate) fetch_idx: u64,
     /// Incrementally maintained fetch address + loop counters (§Perf:
     /// avoids the div/mod chain of `StreamConfig::address` per element).
-    fetch_addr: u32,
-    fetch_ctr: [u32; SSR_DIMS],
+    pub(crate) fetch_addr: u32,
+    pub(crate) fetch_ctr: [u32; SSR_DIMS],
     /// Element index the consumer is on.
-    consume_idx: u64,
+    pub(crate) consume_idx: u64,
     /// Remaining serves of the current head (repeat semantics).
-    head_serves_left: u32,
+    pub(crate) head_serves_left: u32,
     /// Fetched data waiting to be consumed.
-    data: VecDeque<f64>,
+    pub(crate) data: VecDeque<f64>,
     /// Requests in flight (credits consumed).
-    in_flight: usize,
+    pub(crate) in_flight: usize,
 
     // ---- write stream state ----
     /// Next element index to store to memory.
-    store_idx: u64,
-    store_addr: u32,
-    store_ctr: [u32; SSR_DIMS],
+    pub(crate) store_idx: u64,
+    pub(crate) store_addr: u32,
+    pub(crate) store_ctr: [u32; SSR_DIMS],
     /// In-order write slots.
-    wq: VecDeque<WriteSlot>,
+    pub(crate) wq: VecDeque<WriteSlot>,
     /// Monotonic id of the first slot in `wq`.
-    wq_base: u64,
+    pub(crate) wq_base: u64,
     /// Next slot id to allocate.
-    wq_next: u64,
+    pub(crate) wq_next: u64,
 
     // ---- PMCs ----
     pub reads_served: u64,

@@ -4,10 +4,17 @@
 //! (`Cluster::cycle_direct` — byte-level TCDM, every component ticked
 //! every cycle), the activity-gated `ClockDomain` schedule
 //! (`Cluster::cycle` — idle phases skipped, retired cores dropped from
-//! the scan, word-level TCDM), or inside a multi-worker `Sweep` session
-//! with per-worker cluster reuse — and artifact *rendering* is
-//! byte-identical for every session width (jobs ∈ {1, 2, 8}) and for
-//! reused versus freshly constructed clusters.
+//! the scan, word-level TCDM) with the steady-state fast-forward tier
+//! (`cluster::ff`) either enabled (the default) or disabled, or inside
+//! a multi-worker `Sweep` session with per-worker cluster reuse — and
+//! artifact *rendering* is byte-identical for every session width
+//! (jobs ∈ {1, 2, 8}) and for reused versus freshly constructed
+//! clusters.
+//!
+//! The fast-forward tier gets its own fallback section at the bottom:
+//! each perturbing event (barrier waits, foreign TCDM traffic, a
+//! simulation budget expiring inside the fast-forwarded region) must
+//! force the exact path without breaking bit-identity.
 
 use snitch_sim::asm::assemble;
 use snitch_sim::cluster::{Cluster, ClusterConfig, ClusterStats};
@@ -167,12 +174,22 @@ fn kernel_run_with(
     (cl.now, cl.stats(), max_err)
 }
 
-/// The tentpole acceptance gate: the gated fast path (`Cluster::cycle`)
-/// is bit-identical to the ungated reference (`Cluster::cycle_direct`)
-/// — cycle count, the entire stats bundle, and the validated output —
-/// for every kernel × variant × {1, 8} cores.
+/// The tentpole acceptance gate, now a triple: the ungated reference
+/// (`Cluster::cycle_direct`), the gated engine with the steady-state
+/// fast-forward tier disabled, and the gated engine with the tier
+/// enabled (the default) are bit-identical — cycle count, the entire
+/// stats bundle, and the validated output — for every kernel × variant
+/// × {1, 8} cores.
+///
+/// The fast-forward hit-rate pair is observability, not a result: the
+/// direct and ff-off legs must report zero engagements, and across the
+/// whole matrix the ff-on legs must have engaged at least once —
+/// otherwise the tier is dead code and this test would prove nothing
+/// about it.
 #[test]
 fn gated_engine_matches_direct_for_every_kernel() {
+    let mut total_engagements = 0u64;
+    let mut total_skipped = 0u64;
     for k in kernels::all_kernels() {
         for &v in k.variants {
             for cores in [1usize, 8] {
@@ -186,14 +203,24 @@ fn gated_engine_matches_direct_for_every_kernel() {
                 };
                 let p = Params::new(n, cores);
                 let (dc, ds, de) = kernel_run_with(k, v, &p, true);
-                let (gc, gs, ge) = kernel_run_with(k, v, &p, false);
+                let (oc, os, oe) = kernel_run_with(k, v, &p.with_fast_forward(false), false);
+                let (fc, fs, fe) = kernel_run_with(k, v, &p, false);
                 let ctx = format!("{} {v:?} cores={cores}", k.name);
-                assert_eq!(dc, gc, "{ctx}: final cycle count");
-                assert_eq!(ds, gs, "{ctx}: stats bundle");
-                assert_eq!(de.to_bits(), ge.to_bits(), "{ctx}: max_err");
+                assert_eq!(dc, oc, "{ctx}: direct vs ff-off cycle count");
+                assert_eq!(dc, fc, "{ctx}: direct vs ff-on cycle count");
+                assert_eq!(ds, os, "{ctx}: direct vs ff-off stats bundle");
+                assert_eq!(ds, fs, "{ctx}: direct vs ff-on stats bundle");
+                assert_eq!(de.to_bits(), oe.to_bits(), "{ctx}: ff-off max_err");
+                assert_eq!(de.to_bits(), fe.to_bits(), "{ctx}: ff-on max_err");
+                assert_eq!(ds.ff_engagements, 0, "{ctx}: direct path never engages");
+                assert_eq!(os.ff_engagements, 0, "{ctx}: ff-off path never engages");
+                total_engagements += fs.ff_engagements;
+                total_skipped += fs.ff_cycles_skipped;
             }
         }
     }
+    assert!(total_engagements > 0, "fast-forward never engaged across the matrix");
+    assert!(total_skipped > 0, "fast-forward engaged but skipped no cycles");
 }
 
 /// Fourth leg of the engine-equivalence chain: a kernel computed inside
@@ -343,6 +370,187 @@ fn pooled_sweep_renders_identical_tables_to_fresh_runs() {
         table2.render(&fresh).expect("render").to_markdown(),
         "pooled vs fresh table bytes"
     );
+}
+
+// ---------------------------------------------------------------------------
+// Fast-forward fallback: each perturbing event must force the exact
+// path without breaking bit-identity (see `cluster::ff` / DESIGN.md).
+// ---------------------------------------------------------------------------
+
+const FF_A: u32 = 0x1000_0000;
+const FF_B: u32 = 0x1000_0808;
+const FF_OUT: u32 = 0x1000_1800;
+const FF_N: usize = 256;
+
+/// A 256-element staggered SSR+FREP dot product on core 0 with a
+/// test-specific body on the other cores. The operand arrays (written
+/// by [`write_ff_data`]) sit `0x808` apart so the two lanes land in
+/// different banks under both the 1-core (4-bank) and 2-core (8-bank)
+/// maps — the steady state is conflict-free and the fast-forward tier
+/// engages unless the worker body perturbs it.
+fn ff_prog(worker: &str) -> String {
+    format!(
+        r#"
+    .equ PERIPH, 0x20000000
+    csrr a0, mhartid
+    bnez a0, worker
+    li   t0, 255
+    csrw ssr0_bound0, t0
+    csrw ssr1_bound0, t0
+    li   t1, 8
+    csrw ssr0_stride0, t1
+    csrw ssr1_stride0, t1
+    li   t2, {FF_A:#x}
+    csrw ssr0_rptr0, t2
+    li   t3, {FF_B:#x}
+    csrw ssr1_rptr0, t3
+    csrwi ssr, 1
+    fcvt.d.w ft3, zero
+    fmv.d ft4, ft3
+    fmv.d ft5, ft3
+    fmv.d ft6, ft3
+    li   t4, 255
+    frep.o t4, 1, 0b1100, 3
+    fmadd.d ft3, ft0, ft1, ft3
+    fadd.d ft3, ft3, ft4
+    fadd.d ft5, ft5, ft6
+    fadd.d ft3, ft3, ft5
+    csrwi ssr, 0
+    li   t5, {FF_OUT:#x}
+    fsd  ft3, 0(t5)
+    fence
+    j    join
+worker:
+{worker}
+join:
+    li   t2, PERIPH
+    lw   zero, 12(t2)
+    ecall
+"#
+    )
+}
+
+fn write_ff_data(cl: &mut Cluster) {
+    let (a, b) = ff_inputs();
+    cl.tcdm.write_f64_slice(FF_A, &a);
+    cl.tcdm.write_f64_slice(FF_B, &b);
+}
+
+fn ff_inputs() -> (Vec<f64>, Vec<f64>) {
+    let a = (0..FF_N).map(|i| ((i * 7) % 23) as f64 - 11.0).collect();
+    let b = (0..FF_N).map(|i| ((i * 13) % 19) as f64 * 0.5).collect();
+    (a, b)
+}
+
+/// Host reference of the staggered reduction (4 accumulators, then
+/// `(acc0+acc1) + (acc2+acc3)`), bit-exact in f64.
+fn ff_dot_expected() -> f64 {
+    let (a, b) = ff_inputs();
+    let mut acc = [0.0f64; 4];
+    for i in 0..FF_N {
+        acc[i % 4] = a[i].mul_add(b[i], acc[i % 4]);
+    }
+    (acc[0] + acc[1]) + (acc[2] + acc[3])
+}
+
+/// Build, load and drive `src` on `cores` cores through one of the
+/// three paths: the ungated reference, or the gated engine with the
+/// fast-forward tier off or on.
+fn ff_run(src: &str, cores: usize, ff: bool, direct: bool) -> Cluster {
+    let prog = assemble(src).expect("asm");
+    let mut cfg = ClusterConfig::with_cores(cores);
+    cfg.fast_forward = ff;
+    let mut cl = Cluster::new(cfg);
+    cl.load(&prog);
+    write_ff_data(&mut cl);
+    let one_cycle: fn(&mut Cluster) = if direct { Cluster::cycle_direct } else { Cluster::cycle };
+    drive(&mut cl, one_cycle);
+    cl
+}
+
+/// A core waiting at the hardware barrier while core 0's FREP runs
+/// makes the cluster ineligible for the entire steady state: zero
+/// analytic jumps, and the run stays bit-identical to both exact paths.
+#[test]
+fn ff_barrier_during_frep_falls_back_exactly() {
+    let src = ff_prog("    j    join");
+    let direct = ff_run(&src, 2, true, true);
+    let off = ff_run(&src, 2, false, false);
+    let on = ff_run(&src, 2, true, false);
+    for cl in [&direct, &off, &on] {
+        assert_eq!(f64::from_bits(cl.tcdm.read(FF_OUT, 8)), ff_dot_expected());
+    }
+    assert_eq!(direct.now, off.now, "direct vs ff-off cycle count");
+    assert_eq!(direct.now, on.now, "direct vs ff-on cycle count");
+    assert_eq!(direct.stats(), off.stats(), "direct vs ff-off stats");
+    assert_eq!(direct.stats(), on.stats(), "direct vs ff-on stats");
+    assert_eq!(on.stats().ff_engagements, 0, "a waiting core must block engagement");
+}
+
+/// Non-SSR TCDM traffic from another core through the whole FREP
+/// window (core 1 read-modify-writes one word for ~10k cycles, far
+/// outliving core 0's ~300-cycle stream) perturbs every would-be
+/// period: zero analytic jumps, results bit-identical.
+#[test]
+fn ff_foreign_tcdm_traffic_falls_back_exactly() {
+    let worker = r#"    li   t0, 0x10001000
+    li   t1, 2000
+wloop:
+    lw   t3, 0(t0)
+    addi t3, t3, 1
+    sw   t3, 0(t0)
+    addi t1, t1, -1
+    bnez t1, wloop"#;
+    let src = ff_prog(worker);
+    let direct = ff_run(&src, 2, true, true);
+    let off = ff_run(&src, 2, false, false);
+    let on = ff_run(&src, 2, true, false);
+    for cl in [&direct, &off, &on] {
+        assert_eq!(f64::from_bits(cl.tcdm.read(FF_OUT, 8)), ff_dot_expected());
+        assert_eq!(cl.tcdm.read(0x1000_1000, 4), 2000, "worker loop completed");
+    }
+    assert_eq!(direct.now, off.now, "direct vs ff-off cycle count");
+    assert_eq!(direct.now, on.now, "direct vs ff-on cycle count");
+    assert_eq!(direct.stats(), off.stats(), "direct vs ff-off stats");
+    assert_eq!(direct.stats(), on.stats(), "direct vs ff-on stats");
+    assert_eq!(on.stats().ff_engagements, 0, "foreign traffic must block engagement");
+}
+
+/// A simulation budget expiring *inside* the fast-forwarded region:
+/// the analytic jump is capped one cycle short of the budget, so the
+/// timeout fires on the exact path at precisely the same cycle — the
+/// `Err` diagnostic, expiry cycle, and stats bundle are identical to
+/// the ff-off engine run.
+#[test]
+fn ff_budget_expiry_inside_region_is_exact() {
+    let src = ff_prog("    j    join");
+    let mk = |ff: bool| {
+        let prog = assemble(&src).expect("asm");
+        let mut cfg = ClusterConfig::with_cores(1);
+        cfg.fast_forward = ff;
+        let mut cl = Cluster::new(cfg);
+        cl.load(&prog);
+        write_ff_data(&mut cl);
+        cl
+    };
+    // Premises: run to completion takes well over the budget below, and
+    // the steady state really engages on this program.
+    let mut full = mk(true);
+    drive(&mut full, Cluster::cycle);
+    assert!(full.now > 220, "premise: budget must land mid-FREP (total {})", full.now);
+    assert!(full.stats().ff_engagements > 0, "premise: the steady state engages");
+    assert_eq!(f64::from_bits(full.tcdm.read(FF_OUT, 8)), ff_dot_expected());
+
+    let max = 200;
+    let mut on = mk(true);
+    let mut off = mk(false);
+    let e_on = on.run(max).expect_err("budget must expire");
+    let e_off = off.run(max).expect_err("budget must expire");
+    assert_eq!(e_on, e_off, "identical timeout diagnostics");
+    assert_eq!(on.now, max, "ff-on expires exactly at the budget");
+    assert_eq!(off.now, max, "ff-off expires exactly at the budget");
+    assert_eq!(on.stats(), off.stats(), "stats at expiry");
+    assert!(on.stats().ff_engagements > 0, "a jump preceded the expiry");
 }
 
 #[test]

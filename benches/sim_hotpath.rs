@@ -473,82 +473,137 @@ fn render_ff_json(
 
 // ---------------------------------------------------------------------
 // cluster_scaling: multi-cluster System throughput across {1,2,4}
-// clusters (the BENCH_PR5.json record).
+// clusters, staged vs tiled double-buffered DMA pipeline (the
+// BENCH_PR5.json / BENCH_PR7.json records).
 // ---------------------------------------------------------------------
 
 struct ScaleRow {
     label: String,
+    /// `"staged"` (whole-shard DmaIn → Compute → DmaOut) or `"tiled"`
+    /// (double-buffered pipeline, prefetch hidden behind compute).
+    mode: &'static str,
     clusters: usize,
     compute_cycles: u64,
     dma_cycles: u64,
     total_cycles: u64,
+    dma_busy_cycles: u64,
+    dma_hidden_cycles: u64,
+    /// Hidden / busy DMA cycles (0 for staged rows by construction).
+    overlap: f64,
     wall_ms: f64,
+    /// Compute-makespan speedup vs this mode's own 1-cluster point.
     speedup: f64,
+    /// Total-cycle (end-to-end) speedup vs this mode's 1-cluster point.
+    total_speedup: f64,
+    /// Staged total cycles / this row's total cycles at the same
+    /// (kernel, cluster) point — 1.0 for the staged rows themselves.
+    vs_staged: f64,
 }
 
-/// One sharded run per (kernel, cluster-count) point: compute-makespan
-/// scaling plus the DMA preload/write-back overhead the shared memory
-/// and round-robin interconnect impose. The 1-cluster row of each
-/// kernel is additionally asserted equal to the legacy path's region
-/// cycles — the System determinism gate, exercised by the benchmark
-/// itself (so `--smoke` in CI catches a drift).
+/// One sharded run per (kernel, mode, cluster-count) point:
+/// compute-makespan scaling plus the DMA overhead the shared memory and
+/// round-robin interconnect impose — staged first, then the tiled
+/// pipeline with forced multi-tile schedules, with the tiled rows'
+/// overlap efficiency (hidden/busy DMA cycles) and total-cycle win over
+/// the staged machine. The staged 1-cluster row of each kernel is
+/// additionally asserted equal to the legacy path's region cycles — the
+/// System determinism gate, exercised by the benchmark itself (so
+/// `--smoke` in CI catches a drift).
 fn cluster_scaling(smoke: bool) -> Vec<ScaleRow> {
+    // Tile divisor: tile = n / div, sized so every cluster count gets a
+    // genuine multi-tile (≥ 2 per cluster) schedule.
     let cases = [
-        ("dgemm", Variant::SsrFrep, if smoke { 32usize } else { 64 }),
-        ("dot", Variant::SsrFrep, if smoke { 256 } else { 1024 }),
+        ("dgemm", Variant::SsrFrep, if smoke { 32usize } else { 64 }, 8usize),
+        ("dot", Variant::SsrFrep, if smoke { 256 } else { 1024 }, 16),
     ];
     let mut rows = Vec::new();
-    for (name, v, n) in cases {
+    for (name, v, n, div) in cases {
+        let tile = (n / div).max(1);
         let k = kernels::kernel_by_name(name).unwrap();
         let legacy = kernels::run_kernel(k, v, &Params::new(n, 8)).unwrap();
-        let mut base = None;
-        for clusters in [1usize, 2, 4] {
-            let p = Params::new(n, 8).with_clusters(clusters);
-            let t = Instant::now();
-            // Through the System layer for every point — including the
-            // 1-cluster row, which `kernels::run_kernel` would route to
-            // the legacy path (no stage summary) and which is exactly
-            // the run the legacy-match assert below is about.
-            let r = snitch_sim::system::run_kernel_system(k, v, &p)
-                .unwrap_or_else(|e| panic!("scale/{name}/{clusters}cl: {e}"));
-            let wall_ms = t.elapsed().as_secs_f64() * 1e3;
-            let s = r.system.expect("system summary");
-            if clusters == 1 {
-                assert_eq!(
-                    r.cycles, legacy.cycles,
-                    "scale/{name}: 1-cluster System must match the legacy path"
-                );
-            }
-            let speedup = match base {
-                None => {
-                    base = Some(r.cycles.max(1) as f64);
-                    1.0
+        let mut staged_totals: Vec<u64> = Vec::new();
+        for mode in ["staged", "tiled"] {
+            let mut base_compute = None;
+            let mut base_total = None;
+            for (ci, clusters) in [1usize, 2, 4].into_iter().enumerate() {
+                let mut p = Params::new(n, 8).with_clusters(clusters);
+                if mode == "tiled" {
+                    p = p.with_tile_elems(tile);
                 }
-                Some(b) => b / r.cycles.max(1) as f64,
-            };
-            println!(
-                "[bench] scale/{name}/n{n}/{clusters}cl: compute {} cycles ({speedup:.2}x), \
-                 dma {} cycles, total {} cycles, {wall_ms:.1} ms wall",
-                r.cycles,
-                s.dma_in_cycles + s.dma_out_cycles,
-                s.total_cycles,
-            );
-            rows.push(ScaleRow {
-                label: format!("{name}/n{n}/{clusters}cl"),
-                clusters,
-                compute_cycles: r.cycles,
-                dma_cycles: s.dma_in_cycles + s.dma_out_cycles,
-                total_cycles: s.total_cycles,
-                wall_ms,
-                speedup,
-            });
+                let t = Instant::now();
+                // Through the System layer for every point — including
+                // the 1-cluster row, which `kernels::run_kernel` would
+                // route to the legacy path (no stage summary) and which
+                // is exactly the run the legacy-match assert is about.
+                let r = snitch_sim::system::run_kernel_system(k, v, &p)
+                    .unwrap_or_else(|e| panic!("scale/{name}/{mode}/{clusters}cl: {e}"));
+                let wall_ms = t.elapsed().as_secs_f64() * 1e3;
+                let s = r.system.expect("system summary");
+                if mode == "staged" {
+                    if clusters == 1 {
+                        assert_eq!(
+                            r.cycles, legacy.cycles,
+                            "scale/{name}: 1-cluster System must match the legacy path"
+                        );
+                    }
+                    assert_eq!(s.dma_hidden_cycles, 0, "scale/{name}: staged hides nothing");
+                    staged_totals.push(s.total_cycles);
+                } else {
+                    assert!(s.tiles as usize >= 2 * clusters, "scale/{name}: multi-tile");
+                    assert!(s.dma_hidden_cycles > 0, "scale/{name}: tiled must hide DMA");
+                }
+                let speedup = match base_compute {
+                    None => {
+                        base_compute = Some(r.cycles.max(1) as f64);
+                        1.0
+                    }
+                    Some(b) => b / r.cycles.max(1) as f64,
+                };
+                let total_speedup = match base_total {
+                    None => {
+                        base_total = Some(s.total_cycles.max(1) as f64);
+                        1.0
+                    }
+                    Some(b) => b / s.total_cycles.max(1) as f64,
+                };
+                let vs_staged = staged_totals[ci] as f64 / s.total_cycles.max(1) as f64;
+                let overlap = s.overlap_efficiency();
+                println!(
+                    "[bench] scale/{name}/n{n}/{mode}/{clusters}cl: compute {} cycles \
+                     ({speedup:.2}x), dma {} cycles ({} hidden, overlap {overlap:.2}), total \
+                     {} cycles ({total_speedup:.2}x, {vs_staged:.2}x vs staged), \
+                     {wall_ms:.1} ms wall",
+                    r.cycles,
+                    s.dma_busy_cycles,
+                    s.dma_hidden_cycles,
+                    s.total_cycles,
+                );
+                rows.push(ScaleRow {
+                    label: format!("{name}/n{n}/{clusters}cl"),
+                    mode,
+                    clusters,
+                    compute_cycles: r.cycles,
+                    dma_cycles: s.dma_in_cycles + s.dma_out_cycles,
+                    total_cycles: s.total_cycles,
+                    dma_busy_cycles: s.dma_busy_cycles,
+                    dma_hidden_cycles: s.dma_hidden_cycles,
+                    overlap,
+                    wall_ms,
+                    speedup,
+                    total_speedup,
+                    vs_staged,
+                });
+            }
         }
     }
     rows
 }
 
-/// Hand-rolled JSON for the cluster-scaling record (dependency-free).
+/// Hand-rolled JSON for the staged cluster-scaling record
+/// (`BENCH_PR5.json`, dependency-free) — staged rows only, preserving
+/// that record's semantics.
 fn render_scale_json(rows: &[ScaleRow]) -> String {
+    let rows: Vec<&ScaleRow> = rows.iter().filter(|r| r.mode == "staged").collect();
     let mut s = String::new();
     s.push_str("{\n");
     s.push_str("  \"bench\": \"sim_hotpath/cluster_scaling\",\n");
@@ -570,6 +625,46 @@ fn render_scale_json(rows: &[ScaleRow]) -> String {
             r.total_cycles,
             r.speedup,
             r.wall_ms,
+            if i + 1 < rows.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("  ]\n");
+    s.push_str("}\n");
+    s
+}
+
+/// Hand-rolled JSON for the tiled-pipeline record (`BENCH_PR7.json`):
+/// every staged and tiled row with overlap efficiency (hidden/busy DMA
+/// cycles) and the tiled rows' total-cycle win over the staged machine
+/// at the same point.
+fn render_pr7_json(rows: &[ScaleRow]) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"sim_hotpath/cluster_scaling_tiled\",\n");
+    s.push_str("  \"regenerate\": \"cargo bench --bench sim_hotpath\",\n");
+    s.push_str(
+        "  \"baseline\": \"staged System stage machine (whole-shard DmaIn -> Compute -> \
+         DmaOut) at the same (kernel, clusters) point, same process\",\n",
+    );
+    s.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"case\": \"{}\", \"mode\": \"{}\", \"clusters\": {}, \
+             \"compute_cycles\": {}, \"total_cycles\": {}, \"dma_busy_cycles\": {}, \
+             \"dma_hidden_cycles\": {}, \"overlap_efficiency\": {:.3}, \
+             \"compute_speedup\": {:.3}, \"total_speedup\": {:.3}, \"vs_staged\": {:.3}, \
+             \"wall_ms\": {:.3}}}{}\n",
+            r.label,
+            r.mode,
+            r.clusters,
+            r.compute_cycles,
+            r.total_cycles,
+            r.dma_busy_cycles,
+            r.dma_hidden_cycles,
+            r.overlap,
+            r.speedup,
+            r.total_speedup,
+            r.vs_staged,
             if i + 1 < rows.len() { "," } else { "" },
         ));
     }
@@ -609,4 +704,7 @@ fn main() {
     let json = render_scale_json(&rows);
     std::fs::write("BENCH_PR5.json", json).expect("write BENCH_PR5.json");
     println!("[bench] wrote BENCH_PR5.json");
+    let json = render_pr7_json(&rows);
+    std::fs::write("BENCH_PR7.json", json).expect("write BENCH_PR7.json");
+    println!("[bench] wrote BENCH_PR7.json");
 }

@@ -61,6 +61,10 @@ pub struct CoreComplex {
     pub wb_queue: VecDeque<(Reg, u32)>,
     /// Parked on the hardware barrier (holds the destination register).
     pub barrier_wait: Option<Reg>,
+    /// Parked on the tile-handshake register (holds the destination
+    /// register). Released host-side by [`Cluster::release_tile`], never
+    /// by the cluster itself.
+    pub tile_wait: Option<Reg>,
     /// Latched wake-up IPI (arrived before `wfi`).
     pub wake_pending: bool,
     pub stalls: StallCounters,
@@ -83,6 +87,7 @@ impl CoreComplex {
             ext_owner: None,
             wb_queue: VecDeque::new(),
             barrier_wait: None,
+            tile_wait: None,
             wake_pending: false,
             stalls: StallCounters::default(),
             int_loads: 0,
@@ -172,7 +177,7 @@ pub fn tick(cl: &mut Cluster, idx: usize) {
     // 3. Integer core: fetch + execute one instruction (phase A).
     // ------------------------------------------------------------------
     let mut wrote_rf = false;
-    if !cc.core.halted && cc.barrier_wait.is_none() {
+    if !cc.core.halted && cc.barrier_wait.is_none() && cc.tile_wait.is_none() {
         if cc.core.sleeping {
             if cc.wake_pending {
                 cc.wake_pending = false;
@@ -446,6 +451,11 @@ fn execute(
                         cc.barrier_wait = Some(rd);
                         cc.core.mark_busy(rd);
                         periph.barrier_waiters += 1;
+                        return retire_int(cc, next, false);
+                    }
+                    if off == periph::TILE {
+                        cc.tile_wait = Some(rd);
+                        cc.core.mark_busy(rd);
                         return retire_int(cc, next, false);
                     }
                     let v = periph.read(off, now, cfg.tcdm_size, tcdm.conflict_cycles);

@@ -255,15 +255,24 @@ fn eligible(cl: &Cluster) -> bool {
     if cl.trace.enabled() {
         return false;
     }
-    // Standalone cluster only: a System-attached port (DMA traffic,
-    // cross-cluster accesses) can perturb the window asynchronously.
+    // External interface quiescent. A standalone cluster owns its memory
+    // and can check directly; a System-attached port is only admitted
+    // when the owning System has vouched for the window (`ff_port_ok`:
+    // no DMA write will touch the data the replayed streams read) *and*
+    // the port itself is quiet — nothing queued, nothing undelivered.
+    // In-flight granted requests are covered by the per-core
+    // `ext_owner` check below.
     match &cl.ext {
         ExtIf::Local(_) => {
             if cl.ext.active() {
                 return false;
             }
         }
-        ExtIf::Port(_) => return false,
+        ExtIf::Port(p) => {
+            if !cl.ff_port_ok || !p.quiet() {
+                return false;
+            }
+        }
     }
     if cl.icaches.iter().any(|ic| ic.active()) {
         return false;
@@ -301,6 +310,7 @@ fn eligible(cl: &Cluster) -> bool {
             || cc.fpss.div_busy_until > now
             || cc.ext_owner.is_some()
             || cc.barrier_wait.is_some()
+            || cc.tile_wait.is_some()
             || cc.wake_pending
         {
             return false;

@@ -120,6 +120,15 @@ pub struct Cluster {
     /// `max_cycles` here so an analytic jump never overshoots the budget
     /// check (the timeout error stays bit-identical to the exact path).
     pub(crate) ff_max_cycles: u64,
+    /// System opt-in for fast-forward on [`ExtIf::Port`] clusters. A
+    /// standalone cluster owns its external memory, so `ff` can reason
+    /// about it locally; a port cluster's external world (interconnect,
+    /// DMA engine) lives in the owning `System`, which alone knows whether
+    /// the engaged window is safe (no in-flight port requests, no DMA
+    /// write targeting the data the replayed streams read). The System
+    /// sets this each cycle when those conditions hold; it stays `false`
+    /// everywhere else, preserving the PR 6 hard-exclusion.
+    pub(crate) ff_port_ok: bool,
 }
 
 // ---- phase bodies and activity gates of the default schedule (free
@@ -223,6 +232,7 @@ impl Cluster {
             retired_count: 0,
             ff: ff::FfState::default(),
             ff_max_cycles: u64::MAX,
+            ff_port_ok: false,
             cfg,
         }
     }
@@ -337,6 +347,7 @@ impl Cluster {
         self.retired_count = 0;
         self.ff = ff::FfState::default();
         self.ff_max_cycles = u64::MAX;
+        self.ff_port_ok = false;
         self.load(prog);
     }
 
@@ -448,6 +459,38 @@ impl Cluster {
             self.cycle();
         }
         Ok(self.now)
+    }
+
+    /// True when at least one core is live and every live (non-halted)
+    /// core is parked on the tile-handshake register — the cluster is at a
+    /// tile boundary, waiting for the host-side scheduler. Cores `fence`
+    /// before the parking load, so a parked cluster has no in-flight
+    /// stores: the tile buffer it just produced is architecturally
+    /// visible to the DMA engine.
+    pub fn tile_parked(&self) -> bool {
+        let mut any = false;
+        for cc in &self.ccs {
+            if cc.core.halted {
+                continue;
+            }
+            if cc.tile_wait.is_none() {
+                return false;
+            }
+            any = true;
+        }
+        any
+    }
+
+    /// Host-side release of every core parked on the tile-handshake
+    /// register: the parking load retires with `value` (nonzero = "run the
+    /// tile whose bounds are in TCDM", zero = "no more tiles"). Releasing
+    /// all parked cores at once doubles as the inter-tile barrier.
+    pub fn release_tile(&mut self, value: u32) {
+        for cc in &mut self.ccs {
+            if let Some(rd) = cc.tile_wait.take() {
+                cc.wb_queue.push_back((rd, value));
+            }
+        }
     }
 
     /// Aggregate statistics (Table 1 metrics, energy-model event counts).

@@ -699,6 +699,13 @@ fn scaling_kernels() -> [(&'static str, usize, Variant); 4] {
     ]
 }
 
+/// Tile size (elements / dgemm columns per cluster per tile) for the
+/// tiled rows: half the widest split's per-cluster shard, so every
+/// cluster count gets a genuine multi-tile (≥ 2) schedule.
+fn scaling_tile(n: usize) -> usize {
+    (n / (2 * SCALING_CLUSTERS[SCALING_CLUSTERS.len() - 1])).max(1)
+}
+
 fn cluster_scaling_experiments(opts: &ArtifactOptions) -> Vec<Experiment> {
     // Every scaling point needs n divisible by clusters × cores, so
     // sizes (reduced included) round up to a multiple of the widest
@@ -707,8 +714,18 @@ fn cluster_scaling_experiments(opts: &ArtifactOptions) -> Vec<Experiment> {
     let mut exps = Vec::new();
     for (kernel, full, v) in scaling_kernels() {
         let n = reduced_size(kernel, full, opts).div_ceil(widest) * widest;
+        // Staged row (whole-shard DmaIn → Compute → DmaOut) ...
         for clusters in SCALING_CLUSTERS {
             exps.push(Experiment::new(kernel, v, n, SCALING_CORES).with_clusters(clusters));
+        }
+        // ... then the tiled row: same points through the
+        // double-buffered DMA pipeline (prefetch hidden behind compute).
+        for clusters in SCALING_CLUSTERS {
+            exps.push(
+                Experiment::new(kernel, v, n, SCALING_CORES)
+                    .with_clusters(clusters)
+                    .with_tile_elems(scaling_tile(n)),
+            );
         }
     }
     exps
@@ -732,11 +749,18 @@ fn cluster_scaling_render(runs: &[RunResult]) -> crate::Result<Table> {
         "4 clusters",
         "8 clusters",
         "DMA-in cycles (8cl)",
+        "overlap (4cl)",
     ]);
     for chunk in runs.chunks(per) {
+        let tiled = chunk[0].params.tile_elems.is_some();
+        let label = if tiled {
+            format!("{} (tiled)", chunk[0].kernel)
+        } else {
+            chunk[0].kernel.to_string()
+        };
         let base = chunk[0].cycles.max(1) as f64;
         let mut row = vec![
-            Value::str(chunk[0].kernel),
+            Value::str(label),
             Value::str(chunk[0].variant.label()),
             Value::int(chunk[0].params.n as i64),
             Value::int(chunk[0].cycles as i64),
@@ -748,12 +772,23 @@ fn cluster_scaling_render(runs: &[RunResult]) -> crate::Result<Table> {
             Some(s) => Value::int(s.dma_in_cycles as i64),
             None => Value::str("-"),
         });
+        // Overlap efficiency (hidden / busy DMA cycles) at 4 clusters —
+        // structurally zero for the staged rows, which serialize every
+        // DMA cycle before or after compute.
+        let at4 = SCALING_CLUSTERS.iter().position(|&c| c == 4).expect("4cl point");
+        row.push(match (tiled, chunk[at4].system) {
+            (true, Some(s)) => Value::float_fmt(s.overlap_efficiency(), 2, 0, ""),
+            _ => Value::str("-"),
+        });
         t.push_row(row);
     }
     Ok(t.with_notes(
-        "compute-region makespan (slowest cluster); speed-ups vs 1 cluster. DMA-in is the \
-         shared-memory preload through the round-robin interconnect (serialized across \
-         clusters; compute overlap is future work).",
+        "compute-region makespan (slowest cluster); speed-ups vs that row's own 1-cluster \
+         point. Staged rows serialize DmaIn → Compute → DmaOut per shard; (tiled) rows run \
+         the double-buffered DMA pipeline — prefetch and write-back overlap compute, and \
+         the overlap column reports hidden/busy DMA cycles at 4 clusters. DMA-in is the \
+         shared-memory preload through the round-robin interconnect (tiled: cycles to the \
+         first tile release).",
     ))
 }
 
@@ -855,18 +890,27 @@ mod tests {
     }
 
     /// Every scaling point of the cluster_scaling artifact must split
-    /// evenly over clusters × cores — at paper scale and reduced.
+    /// evenly over clusters × cores — at paper scale and reduced — and
+    /// the tiled rows must force genuine multi-tile schedules at every
+    /// cluster count.
     #[test]
     fn cluster_scaling_experiments_stay_shardable() {
         for opts in [ArtifactOptions::default(), ArtifactOptions::default().with_size(16)] {
             let exps = by_id("cluster_scaling").unwrap().experiments(&opts);
-            assert_eq!(exps.len(), 16, "4 kernels x 4 cluster counts");
+            assert_eq!(exps.len(), 32, "4 kernels x (staged + tiled) x 4 cluster counts");
             for e in &exps {
                 assert_eq!(e.n % (e.clusters * e.cores), 0, "{e:?} must split evenly");
                 assert!(crate::kernels::shard::supports(e.kernel), "{}", e.kernel);
+                if let Some(t) = e.tile_elems {
+                    // ≥ 2 tiles even on the widest split's shard.
+                    assert!(2 * t <= e.n / e.clusters, "{e:?}: tile {t} must multi-tile");
+                }
             }
             let counts: Vec<usize> = exps.iter().map(|e| e.clusters).take(4).collect();
             assert_eq!(counts, vec![1, 2, 4, 8]);
+            // Staged and tiled halves per kernel, in that order.
+            assert!(exps[..4].iter().all(|e| e.tile_elems.is_none()));
+            assert!(exps[4..8].iter().all(|e| e.tile_elems.is_some()));
         }
     }
 

@@ -89,11 +89,15 @@ pub struct Experiment {
     /// Number of clusters (the `System` axis, see
     /// [`Params::clusters`]); 1 = the classic single-cluster path.
     pub clusters: usize,
+    /// Force the tiled DMA pipeline with this tile size (elements per
+    /// cluster per tile, see [`Params::tile_elems`]); `None` (the
+    /// default) tiles only when the working set exceeds the TCDM.
+    pub tile_elems: Option<usize>,
 }
 
 impl Experiment {
     pub fn new(kernel: &'static str, variant: Variant, n: usize, cores: usize) -> Experiment {
-        Experiment { kernel, variant, n, cores, keep_cluster: false, clusters: 1 }
+        Experiment { kernel, variant, n, cores, keep_cluster: false, clusters: 1, tile_elems: None }
     }
 
     /// Request the final cluster state in this experiment's result.
@@ -109,14 +113,25 @@ impl Experiment {
         self
     }
 
+    /// Run this experiment through the tiled DMA pipeline with `tile`
+    /// elements (dgemm: output columns) per cluster per tile (see
+    /// [`Params::with_tile_elems`]).
+    pub fn with_tile_elems(mut self, tile: usize) -> Experiment {
+        assert!(tile >= 1, "a tile holds at least one element");
+        self.tile_elems = Some(tile);
+        self
+    }
+
     /// The [`Params`] this experiment runs with (default cycle budget).
     pub fn params(&self) -> Params {
-        let p = Params::new(self.n, self.cores).with_clusters(self.clusters);
+        let mut p = Params::new(self.n, self.cores).with_clusters(self.clusters);
         if self.keep_cluster {
-            p.with_cluster()
-        } else {
-            p
+            p = p.with_cluster();
         }
+        if let Some(t) = self.tile_elems {
+            p = p.with_tile_elems(t);
+        }
+        p
     }
 
     /// Execute this experiment on a fresh cluster (checked run); panics

@@ -59,6 +59,7 @@ pub mod montecarlo;
 pub mod relu;
 pub mod runtime;
 pub mod shard;
+pub mod tile;
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
@@ -118,6 +119,14 @@ pub struct Params {
     /// off; turn it off via [`Params::with_fast_forward`] to pin a run to
     /// the exact path (e.g. one leg of an equivalence check).
     pub fast_forward: bool,
+    /// Force a tile size (elements per cluster per tile) on the
+    /// [`crate::system::System`] DMA pipeline instead of the automatic
+    /// half-TCDM sizing (see [`shard::tile_capacity`]). `None` (the
+    /// default) tiles only when the working set exceeds the TCDM;
+    /// `Some(t)` forces the tiled pipeline even for TCDM-resident
+    /// problems — the benchmark and tests use it to exercise multi-tile
+    /// schedules at small `n`. Ignored on single-cluster legacy runs.
+    pub tile_elems: Option<usize>,
 }
 
 impl Params {
@@ -130,6 +139,7 @@ impl Params {
             keep_cluster: false,
             clusters: 1,
             fast_forward: true,
+            tile_elems: None,
         }
     }
 
@@ -156,6 +166,14 @@ impl Params {
     /// on (`true`, the default) or off (`false`, exact cycle-by-cycle).
     pub fn with_fast_forward(mut self, fast_forward: bool) -> Params {
         self.fast_forward = fast_forward;
+        self
+    }
+
+    /// Same parameters with a forced tile size for the `System` DMA
+    /// pipeline (see [`Params::tile_elems`]).
+    pub fn with_tile_elems(mut self, tile_elems: usize) -> Params {
+        assert!(tile_elems >= 1, "tiles hold at least one element");
+        self.tile_elems = Some(tile_elems);
         self
     }
 }

@@ -6,11 +6,17 @@
 //!
 //! ## Ownership rules
 //!
-//! Work splits evenly over **all** cores of the system (`clusters ×
-//! cores`), exactly like the single-cluster `mhartid` split — cluster `c`
-//! owns the contiguous global range covered by its cores. The planner
-//! requires `n % (clusters × cores) == 0` so every core gets a non-empty,
-//! equal share (the kernels' inner loops are do-while shaped).
+//! Work splits over **all** cores of the system (`clusters × cores`),
+//! exactly like the single-cluster `mhartid` split — cluster `c` owns
+//! the contiguous global range covered by its cores. The split is
+//! remainder-aware (the first `n mod parts` shares get one extra
+//! element), so `n` need not divide evenly; the planner only requires
+//! `n ≥ clusters × cores` so every core gets a non-empty share (the
+//! kernels' inner loops are do-while shaped). Staged dgemm additionally
+//! keeps the even-divisibility requirement, because its per-core column
+//! chunk is baked into the program as an immediate — ragged dgemm
+//! problems run through the tiled pipeline instead ([`plan_tiles`]),
+//! whose bounds are runtime values.
 //!
 //! * **dot / relu / axpy** — element ranges. Each cluster runs the
 //!   full-layout program (`gen(v, Params { n, cores })` — addresses are
@@ -36,11 +42,24 @@
 //! Inputs are written there by the host ([`write_ext_inputs`]); outputs
 //! land back there via DMA write-back, except dot's per-cluster partials,
 //! which occupy consecutive slots at `ext_of(RESULT)`.
+//!
+//! ## Tiled plans
+//!
+//! [`plan_tiles`] is the double-buffered alternative to [`plan`]: each
+//! cluster's shard is cut into tiles of at most [`tile_capacity`]
+//! elements (half the free TCDM, so two tiles coexist), and each tile
+//! carries its own DMA-in/DMA-out descriptors targeting one of two
+//! ping-pong buffers (`tile % 2`). The per-tile core bounds are
+//! **buffer-local** — the tiled programs ([`super::tile`]) re-read them
+//! from `BOUNDS` at every tile handshake, so the same image serves every
+//! tile. The `System` scheduler overlaps `DmaIn(k+1)` and `DmaOut(k-1)`
+//! with `Compute(k)`; tiled problems therefore neither need to fit TCDM
+//! whole nor divide evenly over the cores.
 
 use super::runtime as rt;
 use super::{allclose, KernelDef, Params};
 use crate::cluster::Cluster;
-use crate::mem::{ExtMemory, EXT_BASE};
+use crate::mem::{ExtMemory, EXT_BASE, TCDM_BASE};
 use crate::system::dma::DmaXfer;
 use crate::system::System;
 
@@ -113,20 +132,28 @@ pub fn plan(k: &KernelDef, p: &Params, clusters: usize) -> Result<ShardPlan, Str
     assert!(clusters >= 1, "a plan needs at least one cluster");
     let n = p.n;
     let total_cores = clusters * p.cores;
-    if n % total_cores != 0 {
+    if n < total_cores {
         return Err(format!(
-            "{} sharding needs n ({n}) divisible by clusters × cores ({total_cores})",
+            "{} sharding needs n ({n}) ≥ clusters × cores ({total_cores}) so every core's \
+             do-while body has work",
             k.name
         ));
     }
+    if k.name == "dgemm" && n % total_cores != 0 {
+        // The staged dgemm image bakes its per-core chunk as an
+        // immediate; ragged shapes go through the tiled pipeline.
+        return Err(format!(
+            "staged dgemm sharding needs n ({n}) divisible by clusters × cores \
+             ({total_cores}); ragged shapes run tiled (plan_tiles)"
+        ));
+    }
     let gbounds = split(n, total_cores);
-    let per = n / clusters;
     let rowb = 8 * n as u32; // dgemm row stride in bytes
     let mut shards = Vec::with_capacity(clusters);
     for c in 0..clusters {
-        let lo = c * per;
-        let cnt = per;
         let bounds = gbounds[c * p.cores..(c + 1) * p.cores].to_vec();
+        let lo = bounds[0].0;
+        let cnt: usize = bounds.iter().map(|&(_, bc)| bc).sum();
         let off = 8 * lo as u32;
         let len = 8 * cnt as u32;
         let (dma_in, dma_out) = match k.name {
@@ -188,6 +215,203 @@ pub fn plan(k: &KernelDef, p: &Params, clusters: usize) -> Result<ShardPlan, Str
     Ok(ShardPlan { shards, prog_params })
 }
 
+// ------------------------------------------------------------- tiled plans
+
+/// One tile of a cluster's shard: buffer-local core bounds plus the DMA
+/// transfers that stage it in and drain it out.
+#[derive(Debug, Clone)]
+pub struct TileStep {
+    /// First global element/column this tile covers, and count.
+    pub lo: usize,
+    pub cnt: usize,
+    /// Ping-pong buffer this tile occupies (`tile index % 2`).
+    pub buf: usize,
+    /// Per-local-core work bounds, **buffer-local** (written to `BOUNDS`
+    /// right before the tile's release). Trailing cores may get zero
+    /// counts on a short final tile — the tiled programs skip those.
+    pub bounds: Vec<(usize, usize)>,
+    /// Stage-in transfers (shared memory → this tile's buffer).
+    pub dma_in: Vec<DmaXfer>,
+    /// Drain transfers (this tile's buffer → shared memory).
+    pub dma_out: Vec<DmaXfer>,
+}
+
+/// One cluster's tiled shard.
+#[derive(Debug, Clone)]
+pub struct ClusterTiles {
+    /// First owned global element/column and count.
+    pub lo: usize,
+    pub cnt: usize,
+    /// One-off transfers before the first tile (dgemm's broadcast A,
+    /// axpy's scalar).
+    pub preload: Vec<DmaXfer>,
+    pub tiles: Vec<TileStep>,
+    /// One-off transfers after the last tile drains (dot's partial).
+    pub final_out: Vec<DmaXfer>,
+}
+
+/// A tiled shard plan (see the module doc's "Tiled plans").
+#[derive(Debug, Clone)]
+pub struct TilePlan {
+    pub clusters: Vec<ClusterTiles>,
+    /// Elements (output columns for dgemm) per tile — each ping-pong
+    /// buffer holds `cap`, the tiled TCDM layout spans `2 × cap`.
+    pub cap: usize,
+    /// TCDM size the tiled cluster config must use (grown past the
+    /// default only when dgemm's resident A leaves no room for a tile
+    /// pair).
+    pub tcdm_size: u32,
+}
+
+/// Elements (dgemm: output columns) per tile buffer under `tcdm_size`:
+/// half the TCDM left after the fixed scratch area — and, for dgemm,
+/// after the TCDM-resident A matrix — so two tile buffers coexist.
+pub fn tile_capacity(kernel: &str, n: usize, tcdm_size: u32) -> usize {
+    let avail = tcdm_size.saturating_sub(rt::DATA - TCDM_BASE) as usize;
+    match kernel {
+        // Per output column and buffer: one B column + one C column
+        // (8 bytes × n rows each), times two buffers.
+        "dgemm" => avail.saturating_sub(8 * n * n) / (32 * n.max(1)),
+        // Per element and buffer: two f64 arrays (a/b or x/y), times two
+        // buffers.
+        _ => avail / 32,
+    }
+}
+
+/// Cut `k`'s problem into a double-buffered tile schedule across
+/// `clusters` clusters of `p.cores` cores (see the module doc's "Tiled
+/// plans"). Unlike [`plan`], no divisibility or fits-in-TCDM
+/// requirement: ragged tails become a short final tile, and tiles are
+/// sized so only two of them (not the whole shard) need TCDM residency.
+pub fn plan_tiles(k: &KernelDef, p: &Params, clusters: usize) -> Result<TilePlan, String> {
+    if !supports(k.name) {
+        return Err(format!(
+            "kernel {} does not shard across clusters (shard-aware: {})",
+            k.name,
+            SUPPORTED.join(", ")
+        ));
+    }
+    assert!(clusters >= 1, "a plan needs at least one cluster");
+    let n = p.n;
+    let mut tcdm_size = crate::cluster::ClusterConfig::with_cores(p.cores).tcdm_size;
+    if tile_capacity(k.name, n, tcdm_size) == 0 {
+        // Only dgemm's resident A can exhaust the default TCDM: grow to
+        // fit A plus one column pair per buffer.
+        let extra = if k.name == "dgemm" { 8 * n * n } else { 0 };
+        let unit = if k.name == "dgemm" { n } else { 1 };
+        let need = (rt::DATA - TCDM_BASE) as usize + extra + 32 * unit;
+        tcdm_size = (need as u32).next_power_of_two();
+    }
+    let auto = tile_capacity(k.name, n, tcdm_size);
+    // A forced tile size may shrink tiles (multi-tile schedules at small
+    // n) but never exceed what the two buffers can hold.
+    let cap = p.tile_elems.map_or(auto, |t| t.min(auto)).max(1);
+    let nbuf = 2 * cap;
+    let rowb_full = 8 * n as u32; // full-layout dgemm row stride
+    let rowb_buf = 8 * nbuf as u32; // tiled dgemm buffer row stride
+    let mut out = Vec::with_capacity(clusters);
+    for (c, &(clo, ccnt)) in split(n, clusters).iter().enumerate() {
+        let mut preload = Vec::new();
+        let mut final_out = Vec::new();
+        match k.name {
+            "dgemm" => {
+                let bytes = 8 * (n * n) as u32;
+                preload.push(DmaXfer::d1(ext_of(rt::DATA), rt::DATA, bytes, true));
+            }
+            "axpy" => {
+                let s = super::axpy::A_SCALAR;
+                preload.push(DmaXfer::d1(ext_of(s), s, 8, true));
+            }
+            "dot" => {
+                let slot = ext_of(rt::RESULT) + 8 * c as u32;
+                final_out.push(DmaXfer::d1(slot, rt::RESULT, 8, false));
+            }
+            _ => {}
+        }
+        let mut tiles = Vec::new();
+        let (mut tlo, mut left) = (clo, ccnt);
+        while left > 0 {
+            let tcnt = left.min(cap);
+            let buf = tiles.len() % 2;
+            let boff = 8 * (buf * cap) as u32; // buffer byte offset
+            let goff = 8 * tlo as u32; // global byte offset
+            let len = 8 * tcnt as u32;
+            let bounds: Vec<(usize, usize)> = split(tcnt, p.cores)
+                .into_iter()
+                .map(|(l, cnt)| (buf * cap + l, cnt))
+                .collect();
+            let (dma_in, dma_out) = match k.name {
+                "dot" => {
+                    let a = rt::DATA;
+                    let b_full = super::dot::b_addr(n);
+                    let b_buf = super::dot::b_addr(nbuf);
+                    (
+                        vec![
+                            DmaXfer::d1(ext_of(a) + goff, a + boff, len, true),
+                            DmaXfer::d1(ext_of(b_full) + goff, b_buf + boff, len, true),
+                        ],
+                        vec![],
+                    )
+                }
+                "relu" => {
+                    let x = rt::DATA;
+                    let y_full = super::relu::y_addr(n);
+                    let y_buf = super::relu::y_addr(nbuf);
+                    (
+                        vec![DmaXfer::d1(ext_of(x) + goff, x + boff, len, true)],
+                        vec![DmaXfer::d1(ext_of(y_full) + goff, y_buf + boff, len, false)],
+                    )
+                }
+                "axpy" => {
+                    let x = rt::DATA;
+                    let y_full = super::axpy::y_addr(n);
+                    let y_buf = super::axpy::y_addr(nbuf);
+                    (
+                        vec![
+                            DmaXfer::d1(ext_of(x) + goff, x + boff, len, true),
+                            DmaXfer::d1(ext_of(y_full) + goff, y_buf + boff, len, true),
+                        ],
+                        vec![DmaXfer::d1(ext_of(y_full) + goff, y_buf + boff, len, false)],
+                    )
+                }
+                "dgemm" => {
+                    let b_full = super::dgemm::b_addr(n);
+                    let c_full = super::dgemm::c_addr(n);
+                    let b_buf = super::tile::dgemm_b_base(n);
+                    let c_buf = super::tile::dgemm_c_base(n, cap);
+                    let rows = n as u32;
+                    (
+                        vec![DmaXfer::d2(
+                            ext_of(b_full) + goff,
+                            b_buf + boff,
+                            len,
+                            rows,
+                            rowb_full,
+                            rowb_buf,
+                            true,
+                        )],
+                        vec![DmaXfer::d2(
+                            ext_of(c_full) + goff,
+                            c_buf + boff,
+                            len,
+                            rows,
+                            rowb_full,
+                            rowb_buf,
+                            false,
+                        )],
+                    )
+                }
+                other => unreachable!("unsupported shard kernel {other}"),
+            };
+            tiles.push(TileStep { lo: tlo, cnt: tcnt, buf, bounds, dma_in, dma_out });
+            tlo += tcnt;
+            left -= tcnt;
+        }
+        out.push(ClusterTiles { lo: clo, cnt: ccnt, preload, tiles, final_out });
+    }
+    Ok(TilePlan { clusters: out, cap, tcdm_size })
+}
+
 /// The full input arrays of the kernel, by TCDM address (deterministic
 /// from `p.seed`, identical to what the single-cluster `setup` writes).
 fn host_arrays(kernel: &str, p: &Params) -> Vec<(u32, Vec<f64>)> {
@@ -212,7 +436,13 @@ pub fn write_ext_inputs(ext: &mut ExtMemory, k: &KernelDef, p: &Params) {
 /// Host side: write one cluster's work-bounds table (the only TCDM state
 /// the host seeds directly — array data arrives by DMA).
 pub fn setup_cluster(cl: &mut Cluster, sh: &Shard) {
-    for (i, &(lo, cnt)) in sh.bounds.iter().enumerate() {
+    write_tile_bounds(cl, &sh.bounds);
+}
+
+/// Host side: (re)write one cluster's per-core work-bounds table — the
+/// tiled pipeline calls this before releasing each tile.
+pub fn write_tile_bounds(cl: &mut Cluster, bounds: &[(usize, usize)]) {
+    for (i, &(lo, cnt)) in bounds.iter().enumerate() {
         cl.tcdm.write_u32_slice(rt::BOUNDS + 8 * i as u32, &[lo as u32, cnt as u32]);
     }
 }
@@ -226,13 +456,25 @@ fn read_ext_f64(ext: &ExtMemory, addr: u32, n: usize) -> Vec<f64> {
 /// reference (same tolerances as the single-cluster `check`s). Returns
 /// the max |error|.
 pub fn check(sys: &System, k: &KernelDef, p: &Params, plan: &ShardPlan) -> Result<f64, String> {
+    check_outputs(sys, k, p, plan.shards.len())
+}
+
+/// [`check`] by per-cluster partial count instead of a [`ShardPlan`] —
+/// the shared tail of the staged and tiled validation paths (`partials`
+/// is the cluster count: dot writes one partial slot per cluster).
+pub fn check_outputs(
+    sys: &System,
+    k: &KernelDef,
+    p: &Params,
+    partials: usize,
+) -> Result<f64, String> {
     let n = p.n;
     let arrays = host_arrays(k.name, p);
     match k.name {
         "dot" => {
             let (a, b) = (&arrays[0].1, &arrays[1].1);
             let want: f64 = a.iter().zip(b).map(|(x, y)| x * y).sum();
-            let got: f64 = (0..plan.shards.len())
+            let got: f64 = (0..partials)
                 .map(|c| f64::from_bits(sys.ext.read(ext_of(rt::RESULT) + 8 * c as u32, 8)))
                 .sum();
             allclose(&[got], &[want], 1e-9, 1e-9)
@@ -312,14 +554,123 @@ mod tests {
         assert_eq!(sh.dma_out[0].rows, 32);
     }
 
+    /// The planner refuses unsupported kernels and too-small problems,
+    /// but — the PR 7 fix — no longer refuses ragged (non-divisible)
+    /// vector shapes: the old failing `dot n=100, 3 clusters × 8 cores`
+    /// now plans with a remainder-aware split.
     #[test]
-    fn plan_rejects_unsupported_and_indivisible() {
+    fn plan_rejects_unsupported_and_too_small_but_plans_ragged() {
         let fft = kernel_by_name("fft").unwrap();
         assert!(plan(fft, &Params::new(64, 8), 2).is_err());
         let dot = kernel_by_name("dot").unwrap();
-        let e = plan(dot, &Params::new(100, 8), 3).unwrap_err();
-        assert!(e.contains("divisible"), "{e}");
+        // Too few elements for every do-while core body: still refused.
+        let e = plan(dot, &Params::new(10, 8), 3).unwrap_err();
+        assert!(e.contains("≥ clusters × cores"), "{e}");
+        // Ragged shapes plan (the pre-PR7 all-or-nothing refusal).
+        let ragged = plan(dot, &Params::new(100, 8), 3).expect("ragged dot plans");
+        let covered: usize = ragged.shards.iter().map(|s| s.cnt).sum();
+        assert_eq!(covered, 100);
+        assert!(ragged.shards.iter().all(|s| s.bounds.iter().all(|&(_, c)| c >= 1)));
         assert!(plan(dot, &Params::new(96, 8), 3).is_ok());
+        // Staged dgemm keeps the divisibility requirement (its per-core
+        // chunk is a baked immediate); ragged dgemm runs tiled instead.
+        let dgemm = kernel_by_name("dgemm").unwrap();
+        let e = plan(dgemm, &Params::new(30, 8), 2).unwrap_err();
+        assert!(e.contains("divisible"), "{e}");
+        assert!(plan_tiles(dgemm, &Params::new(30, 8), 2).is_ok());
+    }
+
+    /// Regression (satellite 2): the old failing shape — dot n=1000 over
+    /// 3 clusters × 8 cores — plans ragged: contiguous cluster ranges
+    /// covering the whole problem, every core non-empty, DMA slices
+    /// matching each cluster's count.
+    #[test]
+    fn ragged_plan_covers_dot_n1000_over_3_clusters() {
+        let dot = kernel_by_name("dot").unwrap();
+        let p = Params::new(1000, 8);
+        let plan = plan(dot, &p, 3).expect("ragged plan");
+        assert_eq!(plan.shards.len(), 3);
+        let mut next = 0usize;
+        for sh in &plan.shards {
+            assert_eq!(sh.lo, next);
+            let mut lo = sh.lo;
+            for &(blo, bcnt) in &sh.bounds {
+                assert_eq!(blo, lo);
+                assert!(bcnt >= 1, "every core keeps a non-empty share");
+                lo += bcnt;
+            }
+            assert_eq!(lo, sh.lo + sh.cnt);
+            assert_eq!(sh.dma_in[0].total_bytes(), 8 * sh.cnt as u32);
+            next += sh.cnt;
+        }
+        assert_eq!(next, 1000);
+    }
+
+    /// Tile plans alternate ping-pong buffers, keep bounds buffer-local,
+    /// and end in a short ragged tail when the shard doesn't divide.
+    #[test]
+    fn tile_plan_double_buffers_and_handles_ragged_tails() {
+        let dot = kernel_by_name("dot").unwrap();
+        let p = Params::new(300, 8).with_tile_elems(64);
+        let plan = plan_tiles(dot, &p, 2).expect("tile plan");
+        assert_eq!(plan.cap, 64);
+        assert_eq!(plan.clusters.len(), 2);
+        // 150 elements per cluster → tiles of 64, 64, 22.
+        let ct = &plan.clusters[0];
+        assert_eq!((ct.lo, ct.cnt), (0, 150));
+        let sizes: Vec<usize> = ct.tiles.iter().map(|t| t.cnt).collect();
+        assert_eq!(sizes, vec![64, 64, 22]);
+        for (i, t) in ct.tiles.iter().enumerate() {
+            assert_eq!(t.buf, i % 2, "buffers alternate");
+            // Bounds live inside the tile's buffer [buf·cap, buf·cap+cap).
+            for &(lo, cnt) in &t.bounds {
+                assert!(lo >= t.buf * plan.cap && lo + cnt <= (t.buf + 1) * plan.cap);
+            }
+            let covered: usize = t.bounds.iter().map(|&(_, c)| c).sum();
+            assert_eq!(covered, t.cnt);
+            // DMA stages exactly the tile into its buffer.
+            assert_eq!(t.dma_in[0].total_bytes(), 8 * t.cnt as u32);
+            assert_eq!(
+                t.dma_in[0].tcdm_addr,
+                rt::DATA + 8 * (t.buf * plan.cap) as u32,
+                "a-array slice lands in the active buffer"
+            );
+        }
+        // dot: no per-tile drain, one final partial per cluster.
+        assert!(ct.tiles.iter().all(|t| t.dma_out.is_empty()));
+        assert_eq!(ct.final_out.len(), 1);
+        assert_eq!(plan.clusters[1].final_out[0].ext_addr, ext_of(rt::RESULT) + 8);
+    }
+
+    /// dgemm tiles: A broadcast once per cluster, per-tile B/C column
+    /// stripes as 2D transfers with full-layout ext strides and
+    /// buffer-layout TCDM strides; an A too big for the default TCDM
+    /// grows the tiled config.
+    #[test]
+    fn dgemm_tile_plan_stripes_columns_and_grows_tcdm() {
+        let dgemm = kernel_by_name("dgemm").unwrap();
+        let p = Params::new(32, 8).with_tile_elems(8);
+        let plan = plan_tiles(dgemm, &p, 2).expect("tile plan");
+        let ct = &plan.clusters[0];
+        assert_eq!(ct.preload.len(), 1);
+        assert_eq!(ct.preload[0].total_bytes(), 8 * 32 * 32);
+        let t = &ct.tiles[1]; // second tile, buffer 1
+        assert_eq!(t.buf, 1);
+        assert_eq!(t.dma_in[0].rows, 32);
+        assert_eq!(t.dma_in[0].row_bytes, 8 * 8);
+        assert_eq!(t.dma_in[0].ext_stride, 8 * 32);
+        assert_eq!(t.dma_in[0].tcdm_stride, 8 * 2 * plan.cap as u32);
+        assert_eq!(t.dma_out[0].rows, 32);
+        // n=128: resident A alone is 128 KiB — the default TCDM can't
+        // hold it plus a tile pair, so the plan grows the config.
+        let big = plan_tiles(dgemm, &Params::new(128, 8), 2).expect("big plan");
+        assert!(big.tcdm_size > crate::cluster::ClusterConfig::with_cores(8).tcdm_size);
+        assert!(big.cap >= 1);
+        // Auto capacity with room to spare: vectors tile at half TCDM.
+        let auto = plan_tiles(kernel_by_name("relu").unwrap(), &Params::new(100_000, 8), 2)
+            .expect("auto plan");
+        assert_eq!(auto.cap, tile_capacity("relu", 100_000, auto.tcdm_size));
+        assert!(auto.clusters[0].tiles.len() > 1, "big vectors really tile");
     }
 
     #[test]

@@ -1,0 +1,428 @@
+//! Tiled (double-buffered) program generation for the `System` DMA
+//! pipeline: the same kernel bodies as the full-problem generators, but
+//! wrapped in a **tile loop** driven by the host-side scheduler through
+//! the peripheral tile-handshake register ([`crate::mem::periph::TILE`]).
+//!
+//! ```text
+//! prologue
+//! [dot: ft7 ← 0]                    cross-tile accumulator
+//! tile_loop:
+//!     fence                         drain this tile's stores
+//!     lw  a0, TILE(s1)              park until the System releases
+//!     beqz a0, tile_exit            0 = no more tiles
+//!     load_bounds a3, a4            buffer-local (lo, cnt) for this tile
+//!     beqz a4, tile_next            short final tile: this core is idle
+//!     <variant body>                bounds-driven, ping-pong layout
+//!     [dot: ft7 += ft3]
+//! tile_next:
+//!     j tile_loop
+//! tile_exit:
+//!     [dot: partial store + barrier + reduction] / [others: barrier]
+//! epilogue
+//! ```
+//!
+//! The bodies address a **ping-pong layout**: every tiled array spans
+//! `nbuf = 2 × cap` elements (buffer `b` owns elements `[b·cap,
+//! b·cap+cap)`), and the per-tile bounds the scheduler writes are
+//! buffer-local — the unchanged bounds-driven body addresses the right
+//! buffer with no extra codegen. dgemm keeps its full `A` matrix
+//! TCDM-resident (broadcast once) and tiles only the B/C column stripes;
+//! its tiled bodies replace every count/stride that the full-problem
+//! generator bakes as an immediate with a register value, so one image
+//! serves full and ragged tiles alike.
+//!
+//! Tiled programs are built per `System` run (never installed as a
+//! [`super::KernelDef::gen`], never put in the program cache, and with
+//! no text twins — the builder-vs-text equivalence pin covers only the
+//! legacy full-problem generators). A standalone cluster never releases
+//! the handshake register, so these images only run under a `System`.
+
+use super::runtime as rt;
+use super::{KernelDef, Params, Variant};
+use crate::asm::builder::abi::*;
+use crate::asm::{Program, ProgramBuilder};
+use crate::isa::csr::{
+    ssr_bound_csr, ssr_rptr_csr, ssr_stride_csr, ssr_wptr_csr, SSR_ENABLE,
+};
+use crate::mem::periph;
+
+/// Elements the ping-pong layout spans: two buffers of `cap`.
+pub fn nbuf(cap: usize) -> usize {
+    2 * cap
+}
+
+/// Tiled dgemm TCDM layout: the full A matrix stays resident at
+/// [`rt::DATA`]; the B tile buffers start right after it…
+pub fn dgemm_b_base(n: usize) -> u32 {
+    rt::DATA + 8 * (n * n) as u32
+}
+
+/// …and the C tile buffers after the B pair (each `n × 2·cap` doubles,
+/// row-major with row stride `8 · 2·cap`).
+pub fn dgemm_c_base(n: usize, cap: usize) -> u32 {
+    dgemm_b_base(n) + 8 * (n * nbuf(cap)) as u32
+}
+
+/// Build the tiled program for `k`/`v` with tile capacity `cap` (from
+/// [`super::shard::TilePlan::cap`]). `p.n` is the *full* problem size
+/// (dgemm needs it for the resident-A row stride), `p.cores` the local
+/// core count.
+pub fn gen_tiled(k: &KernelDef, v: Variant, p: &Params, cap: usize) -> Program {
+    let mut b = ProgramBuilder::new();
+    rt::prologue(&mut b);
+    if k.name == "dot" {
+        b.fcvt_d_w(FT7, ZERO); // cross-tile accumulator
+    }
+    let tile_loop = b.new_label();
+    let tile_next = b.new_label();
+    let tile_exit = b.new_label();
+    b.bind(tile_loop);
+    b.fence();
+    b.lw(A0, periph::TILE as i32, S1);
+    b.beqz(A0, tile_exit);
+    rt::load_bounds(&mut b, A3, A4); // a3 = buffer-local lo, a4 = count
+    b.beqz(A4, tile_next);
+    match k.name {
+        "dot" => {
+            dot_body(&mut b, v, cap);
+            b.fadd_d(FT7, FT7, FT3);
+        }
+        "relu" => relu_body(&mut b, v, cap),
+        "axpy" => axpy_body(&mut b, v, cap),
+        "dgemm" => dgemm_body(&mut b, v, p.n, cap),
+        other => unreachable!("no tiled generator for kernel {other}"),
+    }
+    b.bind(tile_next);
+    b.j(tile_loop);
+    b.bind(tile_exit);
+    if k.name == "dot" {
+        // Partial store + reduction, as in the full-problem image but
+        // from the cross-tile accumulator.
+        b.li(T2, i64::from(rt::PARTIALS));
+        b.slli(T3, S0, 3);
+        b.add(T2, T2, T3);
+        b.fsd(FT7, 0, T2);
+        rt::barrier(&mut b);
+        rt::reduce_partials(&mut b, p.cores);
+    } else {
+        rt::barrier(&mut b);
+    }
+    rt::epilogue(&mut b);
+    b.finish()
+}
+
+// ------------------------------------------------------------- vectors
+
+/// Both-read 1-D stream pair over this core's chunk (dot / axpy): lane 0
+/// from `a0_base`, lane 1 from `a1_base`, bounds from a3/a4.
+fn cfg_read_streams(b: &mut ProgramBuilder, a0_base: u32, a1_base: u32) {
+    b.addi(T5, A4, -1);
+    b.csrw(ssr_bound_csr(0, 0), T5);
+    b.csrw(ssr_bound_csr(1, 0), T5);
+    b.li(T5, 8);
+    b.csrw(ssr_stride_csr(0, 0), T5);
+    b.csrw(ssr_stride_csr(1, 0), T5);
+    b.slli(T6, A3, 3);
+    b.li(T5, i64::from(a0_base));
+    b.add(T5, T5, T6);
+    b.csrw(ssr_rptr_csr(0, 0), T5);
+    b.li(T5, i64::from(a1_base));
+    b.add(T5, T5, T6);
+    b.csrw(ssr_rptr_csr(1, 0), T5);
+}
+
+/// dot tile body: the full-problem variant bodies verbatim, addressing
+/// the ping-pong layout (`b` array at `b_addr(2·cap)`). Leaves this
+/// tile's partial in `ft3`.
+fn dot_body(b: &mut ProgramBuilder, v: Variant, cap: usize) {
+    let a = rt::DATA;
+    let bv = super::dot::b_addr(nbuf(cap));
+    match v {
+        Variant::Baseline => {
+            b.slli(T0, A3, 3);
+            b.li(A0, i64::from(a));
+            b.add(A0, A0, T0);
+            b.li(A1, i64::from(bv));
+            b.add(A1, A1, T0);
+            b.slli(T1, A4, 3);
+            b.add(A2, A0, T1);
+            b.fcvt_d_w(FT3, ZERO);
+            let l = b.new_label();
+            b.bind(l);
+            b.fld(FT0, 0, A0);
+            b.fld(FT1, 0, A1);
+            b.fmadd_d(FT3, FT0, FT1, FT3);
+            b.addi(A0, A0, 8);
+            b.addi(A1, A1, 8);
+            b.bne(A0, A2, l);
+        }
+        Variant::Ssr => {
+            cfg_read_streams(b, a, bv);
+            b.csrwi(SSR_ENABLE, 1);
+            b.fcvt_d_w(FT3, ZERO);
+            b.mv(T0, A4);
+            let l = b.new_label();
+            b.bind(l);
+            b.fmadd_d(FT3, FT0, FT1, FT3);
+            b.addi(T0, T0, -1);
+            b.bnez(T0, l);
+            b.csrwi(SSR_ENABLE, 0);
+        }
+        Variant::SsrFrep => {
+            cfg_read_streams(b, a, bv);
+            b.csrwi(SSR_ENABLE, 1);
+            b.fcvt_d_w(FT3, ZERO);
+            b.fmv_d(FT4, FT3);
+            b.fmv_d(FT5, FT3);
+            b.fmv_d(FT6, FT3);
+            b.addi(T0, A4, -1);
+            b.frep_outer(T0, 0b1100, 3, |b| b.fmadd_d(FT3, FT0, FT1, FT3));
+            b.fadd_d(FT3, FT3, FT4);
+            b.fadd_d(FT5, FT5, FT6);
+            b.fadd_d(FT3, FT3, FT5);
+            b.csrwi(SSR_ENABLE, 0);
+        }
+    }
+}
+
+/// relu tile body: read stream on lane 0, write stream on lane 1.
+fn relu_body(b: &mut ProgramBuilder, v: Variant, cap: usize) {
+    let x = rt::DATA;
+    let y = super::relu::y_addr(nbuf(cap));
+    let cfg = |b: &mut ProgramBuilder| {
+        b.addi(T5, A4, -1);
+        b.csrw(ssr_bound_csr(0, 0), T5);
+        b.csrw(ssr_bound_csr(1, 0), T5);
+        b.li(T5, 8);
+        b.csrw(ssr_stride_csr(0, 0), T5);
+        b.csrw(ssr_stride_csr(1, 0), T5);
+        b.slli(T6, A3, 3);
+        b.li(T5, i64::from(x));
+        b.add(T5, T5, T6);
+        b.csrw(ssr_rptr_csr(0, 0), T5);
+        b.li(T5, i64::from(y));
+        b.add(T5, T5, T6);
+        b.csrw(ssr_wptr_csr(1, 0), T5);
+    };
+    match v {
+        Variant::Baseline => {
+            b.slli(T0, A3, 3);
+            b.li(A0, i64::from(x));
+            b.add(A0, A0, T0);
+            b.li(A1, i64::from(y));
+            b.add(A1, A1, T0);
+            b.slli(T1, A4, 3);
+            b.add(A2, A0, T1);
+            b.fcvt_d_w(FT2, ZERO);
+            let l = b.new_label();
+            b.bind(l);
+            b.fld(FT0, 0, A0);
+            b.fmax_d(FT1, FT0, FT2);
+            b.fsd(FT1, 0, A1);
+            b.addi(A0, A0, 8);
+            b.addi(A1, A1, 8);
+            b.bne(A0, A2, l);
+        }
+        Variant::Ssr => {
+            cfg(b);
+            b.csrwi(SSR_ENABLE, 1);
+            b.fcvt_d_w(FT2, ZERO);
+            b.mv(T0, A4);
+            let l = b.new_label();
+            b.bind(l);
+            b.fmax_d(FT1, FT0, FT2);
+            b.addi(T0, T0, -1);
+            b.bnez(T0, l);
+            b.csrwi(SSR_ENABLE, 0);
+        }
+        Variant::SsrFrep => {
+            cfg(b);
+            b.csrwi(SSR_ENABLE, 1);
+            b.fcvt_d_w(FT2, ZERO);
+            b.addi(T0, A4, -1);
+            b.frep_outer(T0, 0, 0, |b| b.fmax_d(FT1, FT0, FT2));
+            b.csrwi(SSR_ENABLE, 0);
+        }
+    }
+}
+
+/// axpy tile body. The scalar load sits inside the body (not the
+/// program prologue) because it must run *after* the first release —
+/// the scalar arrives by preload DMA while the cores park.
+fn axpy_body(b: &mut ProgramBuilder, v: Variant, cap: usize) {
+    let x = rt::DATA;
+    let y = super::axpy::y_addr(nbuf(cap));
+    b.li(T0, i64::from(super::axpy::A_SCALAR));
+    b.fld(FA0, 0, T0); // a
+    b.slli(T0, A3, 3);
+    b.li(A1, i64::from(y));
+    b.add(A1, A1, T0); // y pointer (store target)
+    match v {
+        Variant::Baseline => {
+            b.li(A0, i64::from(x));
+            b.add(A0, A0, T0);
+            b.slli(T1, A4, 3);
+            b.add(A2, A0, T1);
+            let l = b.new_label();
+            b.bind(l);
+            b.fld(FT0, 0, A0);
+            b.fld(FT1, 0, A1);
+            b.fmadd_d(FT2, FA0, FT0, FT1);
+            b.fsd(FT2, 0, A1);
+            b.addi(A0, A0, 8);
+            b.addi(A1, A1, 8);
+            b.bne(A0, A2, l);
+        }
+        Variant::Ssr => {
+            // lane0 reads x, lane1 reads y; the y store stays explicit.
+            b.addi(T5, A4, -1);
+            b.csrw(ssr_bound_csr(0, 0), T5);
+            b.csrw(ssr_bound_csr(1, 0), T5);
+            b.li(T5, 8);
+            b.csrw(ssr_stride_csr(0, 0), T5);
+            b.csrw(ssr_stride_csr(1, 0), T5);
+            b.slli(T6, A3, 3);
+            b.li(T5, i64::from(x));
+            b.add(T5, T5, T6);
+            b.csrw(ssr_rptr_csr(0, 0), T5);
+            b.mv(T5, A1);
+            b.csrw(ssr_rptr_csr(1, 0), T5);
+            b.csrwi(SSR_ENABLE, 1);
+            b.mv(T0, A4);
+            let l = b.new_label();
+            b.bind(l);
+            b.fmadd_d(FT2, FA0, FT0, FT1);
+            b.fsd(FT2, 0, A1);
+            b.addi(A1, A1, 8);
+            b.addi(T0, T0, -1);
+            b.bnez(T0, l);
+            b.csrwi(SSR_ENABLE, 0);
+        }
+        Variant::SsrFrep => unreachable!("axpy has no FREP variant (needs 3 streamers)"),
+    }
+}
+
+// -------------------------------------------------------------- dgemm
+
+/// dgemm tile body. Unlike the full-problem generator — which bakes the
+/// per-core column count, row strides and FREP depth as immediates —
+/// every count here is a register value (`a4` columns) and the two row
+/// strides differ: `s3` = resident-A row (`8n`), `s4` = B/C buffer row
+/// (`8 · 2·cap`). The `+SSR+FREP` body sequences one k-deep `fmadd` per
+/// output with 4-way accumulator staggering (the full generator's
+/// single-column shape), because its 4-column block form needs the
+/// column count as a compile-time immediate.
+fn dgemm_body(b: &mut ProgramBuilder, v: Variant, n: usize, cap: usize) {
+    let a = rt::DATA;
+    let bb = dgemm_b_base(n);
+    let cb = dgemm_c_base(n, cap);
+    let row_a = 8 * n as i64;
+    let row_b = 8 * nbuf(cap) as i64;
+    let n = n as i64;
+    b.li(A0, i64::from(a)); // &A[0][0]
+    b.slli(T1, A3, 3);
+    b.li(A5, i64::from(cb));
+    b.add(A5, A5, T1); // &Cbuf[0][col_lo]
+    b.li(A2, i64::from(bb));
+    b.add(A2, A2, T1); // &Bbuf[0][col_lo]
+    b.li(S3, row_a);
+    b.li(S4, row_b);
+    match v {
+        Variant::Baseline => {
+            b.li(A6, n); // remaining rows
+            let l_row = b.new_label();
+            b.bind(l_row);
+            b.mv(A7, A4); // remaining columns
+            b.mv(T2, A2); // &B[0][j]
+            b.mv(S2, A5); // &C[m][j]
+            let l_col = b.new_label();
+            b.bind(l_col);
+            b.mv(T3, A0); // &A[m][0]
+            b.mv(T6, T2);
+            b.li(T4, n);
+            b.fcvt_d_w(FT3, ZERO);
+            let l_k = b.new_label();
+            b.bind(l_k);
+            b.fld(FT0, 0, T3);
+            b.fld(FT1, 0, T6);
+            b.fmadd_d(FT3, FT0, FT1, FT3);
+            b.addi(T3, T3, 8);
+            b.add(T6, T6, S4);
+            b.addi(T4, T4, -1);
+            b.bnez(T4, l_k);
+            b.fsd(FT3, 0, S2);
+            b.addi(S2, S2, 8);
+            b.addi(T2, T2, 8);
+            b.addi(A7, A7, -1);
+            b.bnez(A7, l_col);
+            b.add(A0, A0, S3);
+            b.add(A5, A5, S4);
+            b.addi(A6, A6, -1);
+            b.bnez(A6, l_row);
+        }
+        Variant::Ssr | Variant::SsrFrep => {
+            // lane0: A — (k: n,8), (j: a4,0), (m: n,row_a); base &A[0][0]
+            // lane1: B — (k: n,row_b), (j: a4,8), (m: n,0); base &B[0][col_lo]
+            b.li(T5, n - 1);
+            b.csrw(ssr_bound_csr(0, 0), T5);
+            b.csrw(ssr_bound_csr(0, 2), T5);
+            b.csrw(ssr_bound_csr(1, 0), T5);
+            b.addi(T5, A4, -1);
+            b.csrw(ssr_bound_csr(0, 1), T5);
+            b.csrw(ssr_bound_csr(1, 1), T5);
+            b.li(T5, n - 1);
+            b.csrw(ssr_bound_csr(1, 2), T5);
+            b.li(T5, 8);
+            b.csrw(ssr_stride_csr(0, 0), T5);
+            b.csrw(ssr_stride_csr(1, 1), T5);
+            b.li(T5, 0);
+            b.csrw(ssr_stride_csr(0, 1), T5);
+            b.csrw(ssr_stride_csr(1, 2), T5);
+            b.li(T5, row_a);
+            b.csrw(ssr_stride_csr(0, 2), T5);
+            b.li(T5, row_b);
+            b.csrw(ssr_stride_csr(1, 0), T5);
+            b.mv(T5, A0);
+            b.csrw(ssr_rptr_csr(0, 2), T5);
+            b.mv(T5, A2);
+            b.csrw(ssr_rptr_csr(1, 2), T5);
+            b.csrwi(SSR_ENABLE, 1);
+            b.li(A6, n); // rows
+            if v == Variant::SsrFrep {
+                b.li(S2, n - 1); // frep count (k iterations - 1)
+            }
+            let l_row = b.new_label();
+            b.bind(l_row);
+            b.mv(A7, A4);
+            b.mv(T2, A5); // &C[m][col_lo] walker
+            let l_out = b.new_label();
+            b.bind(l_out);
+            if v == Variant::SsrFrep {
+                b.fcvt_d_w(FT3, ZERO);
+                b.fcvt_d_w(FT4, ZERO);
+                b.fcvt_d_w(FT5, ZERO);
+                b.fcvt_d_w(FT6, ZERO);
+                b.frep_outer(S2, 0b1100, 3, |b| b.fmadd_d(FT3, FT0, FT1, FT3));
+                b.fadd_d(FT3, FT3, FT4);
+                b.fadd_d(FT5, FT5, FT6);
+                b.fadd_d(FT3, FT3, FT5);
+            } else {
+                b.fcvt_d_w(FT3, ZERO);
+                b.li(T0, n);
+                let l_k = b.new_label();
+                b.bind(l_k);
+                b.fmadd_d(FT3, FT0, FT1, FT3);
+                b.addi(T0, T0, -1);
+                b.bnez(T0, l_k);
+            }
+            b.fsd(FT3, 0, T2);
+            b.addi(T2, T2, 8);
+            b.addi(A7, A7, -1);
+            b.bnez(A7, l_out);
+            b.add(A5, A5, S4);
+            b.addi(A6, A6, -1);
+            b.bnez(A6, l_row);
+            b.csrwi(SSR_ENABLE, 0);
+        }
+    }
+}

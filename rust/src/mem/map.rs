@@ -51,6 +51,13 @@ pub mod periph {
     /// WO: end-of-computation; writing any value halts the writing core
     /// (equivalent to `ecall`), used by the runtime epilogue.
     pub const EOC: u32 = 0x20;
+    /// Tile handshake: a load from this address parks the core until the
+    /// host-side tile scheduler (the `System` DMA pipeline) releases it
+    /// with a value — nonzero means "a fresh tile's bounds are in TCDM,
+    /// run it", zero means "no more tiles, fall through to the epilogue".
+    /// Standalone clusters never release this register, so tiled programs
+    /// are only runnable under a `System`.
+    pub const TILE: u32 = 0x24;
 }
 
 /// Which region an address falls into.

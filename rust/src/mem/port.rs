@@ -152,6 +152,19 @@ impl MemPort {
         self.pending.len()
     }
 
+    /// Nothing queued and no delivered-but-unconsumed response sitting in
+    /// a slot. Note this cannot see a granted request whose response is
+    /// still inside the device — initiators track those themselves
+    /// (`CoreComplex::ext_owner`), so callers needing full quiescence
+    /// must check both. This is the port half of the fast-forward
+    /// eligibility check for System-attached clusters (the other half —
+    /// DMA safety — only the owning System can judge).
+    pub fn quiet(&self) -> bool {
+        self.pending.is_empty()
+            && self.resp.iter().all(Option::is_none)
+            && self.burst.iter().all(Option::is_none)
+    }
+
     pub fn reset(&mut self) {
         self.pending.clear();
         self.resp.fill(None);

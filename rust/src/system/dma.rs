@@ -14,8 +14,11 @@
 //!   serializes round-robin at the shared memory;
 //! * the TCDM side is a full-width dedicated port: an arrived chunk
 //!   lands in (or is read from) the TCDM in the delivery cycle, without
-//!   occupying core ports (cores are idle during DMA stages anyway —
-//!   see `crate::system`'s stage schedule).
+//!   occupying core ports. In the staged pipeline cores are idle during
+//!   DMA stages; in the tiled pipeline (`crate::system`'s tile
+//!   scheduler) the engine runs concurrently with compute, but only ever
+//!   touches the inactive ping-pong buffer, so it still never contends
+//!   with core accesses.
 
 use std::collections::VecDeque;
 

@@ -1,6 +1,6 @@
 //! The multi-cluster system: `N` Snitch clusters sharing one external
 //! memory behind a round-robin interconnect, each with a DMA engine that
-//! preloads its TCDM shard and writes results back.
+//! moves data between the shared memory and its TCDM.
 //!
 //! ## Structure
 //!
@@ -16,20 +16,54 @@
 //! 2. `xbar` — the interconnect routes responses to client ports and
 //!    grants queued requests round-robin;
 //! 3. `dma` — every DMA engine advances its transfer queue;
-//! 4. `clusters` — during the compute stage, every unfinished cluster
-//!    runs one full cluster cycle (its own gated phase schedule);
-//! 5. `control` — the stage machine advances.
+//! 4. `clusters` — every unfinished cluster runs one full cluster cycle
+//!    (its own gated phase schedule), when the run mode allows;
+//! 5. `control` — the stage machine / tile scheduler advances.
 //!
-//! ## Stage machine & timing accounting
+//! ## Staged runs
 //!
-//! A kernel run proceeds [`Stage::DmaIn`] → [`Stage::Compute`] →
-//! [`Stage::DmaOut`] → [`Stage::Done`]. Cluster-local clocks only advance
-//! during `Compute`, so a 1-cluster system's compute epoch is
-//! **bit-identical** to a standalone [`crate::cluster::Cluster`] run of
-//! the same program and TCDM image (cycle counts, stats, trace hashes —
-//! held by `tests/system.rs` and the determinism suite). The system
-//! clock [`System::now`] spans all stages; [`SystemStats`] reports the
-//! per-stage split.
+//! The whole-shard mode: a run proceeds [`Stage::DmaIn`] →
+//! [`Stage::Compute`] → [`Stage::DmaOut`] → [`Stage::Done`], and
+//! cluster-local clocks only advance during `Compute`, so a 1-cluster
+//! system's compute epoch is **bit-identical** to a standalone
+//! [`crate::cluster::Cluster`] run of the same program and TCDM image
+//! (cycle counts, stats, trace hashes — held by `tests/system.rs` and
+//! the determinism suite). The system clock [`System::now`] spans all
+//! stages; [`SystemStats`] reports the per-stage split.
+//!
+//! ## Tiled runs (double-buffered DMA pipeline)
+//!
+//! The overlapped mode: each cluster's shard is cut into tiles
+//! ([`shard::plan_tiles`]) that ping-pong between two TCDM buffers, the
+//! per-cluster program is a tile loop ([`crate::kernels::tile`]) that
+//! parks at the [`crate::mem::periph::TILE`] handshake between tiles,
+//! and the DMA engines run **concurrently** with compute: while a
+//! cluster computes tile `k` its engine drains tile `k-1`'s output and
+//! prefetches tile `k+1`'s input, so steady-state DMA hides under
+//! compute (`DmaIn(k+1) ∥ Compute(k) ∥ DmaOut(k-1)`). The scheduler per
+//! cluster:
+//!
+//! * release tile `k` (write its buffer-local core bounds, wake the
+//!   parked cores) once the engine's completed-transfer count shows
+//!   `k`'s input resident;
+//! * when the cores park again, enqueue `DmaOut(k)` then
+//!   `DmaIn(k+2)` — FIFO order guarantees the drain reads buffer
+//!   `k mod 2` before the prefetch overwrites it;
+//! * when tiles are exhausted, release the parked cores with `0` (run
+//!   the epilogue) and enqueue the one-off `final_out` transfers.
+//!
+//! Tiled runs lift the staged mode's restrictions: the working set need
+//! not fit TCDM (only two tiles are ever resident) and `n` need not
+//! divide evenly (a ragged tail is just a short final tile with some
+//! zero-count cores). A *degenerate* tile schedule — one tile per
+//! cluster, staged mode able to run it — falls back to the staged
+//! machine, keeping small runs bit-identical to the pre-tiling pipeline.
+//!
+//! [`SystemStats::dma_hidden_cycles`] counts the DMA busy-cycles inside
+//! the system-wide compute epoch (first tile release anywhere → last
+//! cluster halted) — the cycles the staged machine would have
+//! serialized; `hidden / busy` is the pipeline's overlap efficiency
+//! ([`SystemStats::overlap_efficiency`]).
 //!
 //! ## Sharded kernel runs
 //!
@@ -38,19 +72,24 @@
 //! inputs written to the shared memory, per-cluster shards DMA'd into
 //! each TCDM, per-cluster programs computed in parallel, and outputs
 //! DMA'd back for a host-side `allclose` against the full-problem
-//! reference. Kernels without a shard plan run unsharded on a 1-cluster
-//! system (and refuse `clusters > 1`).
+//! reference. [`build_system`] picks the mode: staged when the shard
+//! fits TCDM (and, for dgemm, divides evenly), tiled otherwise or when
+//! [`crate::kernels::Params::tile_elems`] forces it. Kernels without a
+//! shard plan run unsharded on a 1-cluster system (and refuse
+//! `clusters > 1`).
 
 pub mod dma;
 
 use crate::cluster::{Cluster, ClusterConfig};
-use crate::kernels::{self, shard, KernelDef, Params, RunResult, Variant};
+use crate::kernels::{self, shard, tile, KernelDef, Params, RunResult, Variant};
 use crate::mem::{ExtMemory, Interconnect, MemPort};
 use crate::sim::{ClockDomain, Cycle, Tick};
 
 pub use dma::{DmaEngine, DmaXfer, DMA_MAX_BURST};
 
-/// Run stage of a [`System`].
+/// Run stage of a [`System`]. Staged runs walk all four stages; tiled
+/// runs report `Compute` for the whole pipelined portion (DMA and
+/// compute overlap, so the phases are not separable states).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Stage {
     /// DMA engines preload TCDM shards; cluster clocks are frozen.
@@ -68,13 +107,64 @@ pub struct SystemStats {
     pub clusters: usize,
     /// Whole-run system cycles (all stages).
     pub total_cycles: u64,
+    /// Cycles before compute began (staged: the DmaIn stage; tiled: the
+    /// lead-in until the first tile release).
     pub dma_in_cycles: u64,
     pub compute_cycles: u64,
+    /// Cycles after the last cluster finished (trailing drain).
     pub dma_out_cycles: u64,
     pub dma_bytes_in: u64,
     pub dma_bytes_out: u64,
     /// Requests the shared external memory served (cores + DMA).
     pub ext_accesses: u64,
+    /// Cycles any DMA engine had a transfer in progress (sum over
+    /// engines, so it can exceed `total_cycles` on multi-cluster runs).
+    pub dma_busy_cycles: u64,
+    /// The subset of `dma_busy_cycles` that ran inside the system-wide
+    /// compute epoch — from the first tile release on any cluster until
+    /// the last cluster halted. The staged machine freezes every cluster
+    /// clock whenever any engine is busy, so these are exactly the DMA
+    /// cycles it would have serialized before or after compute and the
+    /// tiled pipeline hides behind it. Always 0 for staged runs (no DMA
+    /// cycle falls inside a compute epoch there by construction).
+    pub dma_hidden_cycles: u64,
+    /// Tiles scheduled across all clusters (0 for staged runs).
+    pub tiles: u64,
+}
+
+impl SystemStats {
+    /// Fraction of DMA busy time hidden under compute (0 when no DMA
+    /// ran). The tiled pipeline's headline number: 1.0 means every DMA
+    /// cycle overlapped compute, 0.0 is the staged machine's serial
+    /// behaviour.
+    pub fn overlap_efficiency(&self) -> f64 {
+        if self.dma_busy_cycles == 0 {
+            0.0
+        } else {
+            self.dma_hidden_cycles as f64 / self.dma_busy_cycles as f64
+        }
+    }
+}
+
+/// Per-cluster state of the tiled scheduler.
+struct TileCtl {
+    /// This cluster's tile schedule.
+    sched: shard::ClusterTiles,
+    /// Next tile to release to the cores.
+    next: usize,
+    /// Tile currently computing, if any (None while the cores park).
+    computing: Option<usize>,
+    /// Tiles whose `dma_in` has been enqueued.
+    fetched: usize,
+    /// Completed-transfer count at which tile `k`'s input is resident
+    /// (the engine's FIFO [`DmaEngine::transfers`] counter).
+    in_done_at: Vec<u64>,
+    /// Descriptors enqueued to this cluster's engine so far.
+    enqueued: u64,
+    /// `busy_cycles` snapshot for per-cycle overlap deltas.
+    prev_busy: u64,
+    /// `final_out` enqueued (cluster finished).
+    flushed: bool,
 }
 
 /// The sharded multi-cluster system.
@@ -92,13 +182,25 @@ pub struct System {
     /// Mirror of the engine clock, like [`Cluster::now`].
     pub now: u64,
     stage: Stage,
+    /// Tiled-mode scheduler state; `None` runs the staged stage machine.
+    tiled: Option<Vec<TileCtl>>,
+    /// Per-cluster fast-forward debt: cluster cycles already advanced
+    /// analytically that the system clock still has to serve, so
+    /// cluster-local and system cycle counts stay identical with
+    /// fast-forward on or off.
+    skip: Vec<u64>,
     /// Write-back descriptors queued per cluster, released into the DMA
-    /// engines when compute completes.
+    /// engines when compute completes (staged mode).
     pending_out: Vec<Vec<DmaXfer>>,
-    /// Cycle at which DMA-in finished (Compute began).
+    /// Cycle at which DMA-in finished (staged) / the first tile was
+    /// released (tiled).
     dma_in_done_at: u64,
-    /// Cycle at which compute finished (DmaOut began).
+    /// Cycle at which compute finished (the last cluster halted).
     compute_done_at: u64,
+    /// DMA busy-cycles inside the system-wide compute epoch.
+    dma_hidden_cycles: u64,
+    /// Total tiles scheduled (0 in staged mode).
+    tiles_total: u64,
 }
 
 // ---- phase bodies and gates (free functions, like the cluster's, so the
@@ -148,22 +250,52 @@ fn gate_dma(sys: &System) -> bool {
     sys.dmas.iter().any(|d| d.busy())
 }
 
+/// Advance every unfinished cluster one cluster cycle. In staged mode
+/// this only runs during `Compute` (DMA stages freeze cluster clocks);
+/// in tiled mode it runs every cycle — parked cores cost nothing, and
+/// the DMA engines work concurrently.
+///
+/// Fast-forward opt-in: a port cluster's `ff` tier only engages when the
+/// system vouches for its external world ([`Cluster`]'s `ff_port_ok`).
+/// Staged mode vouches when the cluster's engine is idle; tiled mode
+/// vouches always, because in-flight tiled DMA only ever touches the
+/// *inactive* ping-pong buffer — never TCDM the computing tile reads or
+/// writes. A fast-forwarded cluster repays the analytically-advanced
+/// cycles as `skip` debt, so system-cycle totals stay bit-identical with
+/// fast-forward on or off.
 fn phase_clusters(sys: &mut System, _now: Cycle) {
-    if sys.stage != Stage::Compute {
+    let System { clusters, dmas, skip, tiled, stage, .. } = sys;
+    if tiled.is_none() && *stage != Stage::Compute {
         return;
     }
-    for cl in &mut sys.clusters {
-        if !cl.done() {
-            cl.cycle();
+    for (c, cl) in clusters.iter_mut().enumerate() {
+        if cl.done() {
+            continue;
         }
+        if skip[c] > 0 {
+            skip[c] -= 1;
+            continue;
+        }
+        cl.ff_port_ok = if tiled.is_some() { true } else { dmas[c].idle() };
+        let before = cl.now;
+        cl.cycle();
+        cl.ff_port_ok = false;
+        skip[c] = cl.now - before - 1;
     }
 }
 
 fn gate_clusters(sys: &System) -> bool {
-    sys.stage == Stage::Compute && !sys.clusters.iter().all(Cluster::done)
+    let mode_ok = match sys.tiled {
+        None => sys.stage == Stage::Compute,
+        Some(_) => sys.stage != Stage::Done,
+    };
+    mode_ok && !sys.clusters.iter().all(Cluster::done)
 }
 
 fn phase_control(sys: &mut System, now: Cycle) {
+    if sys.tiled.is_some() {
+        return tile_control(sys, now);
+    }
     match sys.stage {
         Stage::DmaIn => {
             if sys.dmas.iter().all(DmaEngine::idle) {
@@ -194,10 +326,101 @@ fn phase_control(sys: &mut System, now: Cycle) {
     }
 }
 
+/// The tiled scheduler (module docs, "Tiled runs"). Runs after the `dma`
+/// phase each cycle: accounts overlap, releases ready tiles to parked
+/// clusters, and interleaves drains and prefetches behind compute.
+fn tile_control(sys: &mut System, now: Cycle) {
+    if sys.stage == Stage::Done {
+        return;
+    }
+    let System {
+        clusters,
+        dmas,
+        tiled,
+        stage,
+        dma_in_done_at,
+        compute_done_at,
+        dma_hidden_cycles,
+        ..
+    } = sys;
+    let ctls = tiled.as_mut().expect("tile_control runs in tiled mode");
+    // Overlap accounting: DMA busy-cycles since the last control pass
+    // count as hidden iff the system-wide compute epoch is open — some
+    // cluster has released its first tile and not yet halted. These are
+    // exactly the cycles the staged machine would have serialized: it
+    // freezes every cluster clock whenever any engine is busy, so any
+    // DMA running inside the compute epoch is a cycle it would have
+    // added to the run.
+    let epoch_open = ctls.iter().enumerate().any(|(c, ctl)| ctl.next > 0 && !clusters[c].done());
+    for (c, ctl) in ctls.iter_mut().enumerate() {
+        let d = &mut dmas[c];
+        let delta = d.busy_cycles - ctl.prev_busy;
+        ctl.prev_busy = d.busy_cycles;
+        if epoch_open {
+            *dma_hidden_cycles += delta;
+        }
+        let cl = &mut clusters[c];
+        if cl.done() {
+            if !ctl.flushed {
+                for x in &ctl.sched.final_out {
+                    d.enqueue(*x);
+                }
+                ctl.flushed = true;
+            }
+            continue;
+        }
+        if !cl.tile_parked() {
+            continue;
+        }
+        let tiles = &ctl.sched.tiles;
+        if let Some(k) = ctl.computing.take() {
+            // Tile k finished: drain it, then prefetch the next tile.
+            // FIFO order makes the drain read buffer `k % 2` before the
+            // prefetch (same buffer, two tiles later) overwrites it.
+            for x in &tiles[k].dma_out {
+                d.enqueue(*x);
+                ctl.enqueued += 1;
+            }
+            if ctl.fetched < tiles.len() {
+                for x in &tiles[ctl.fetched].dma_in {
+                    d.enqueue(*x);
+                    ctl.enqueued += 1;
+                }
+                ctl.in_done_at[ctl.fetched] = ctl.enqueued;
+                ctl.fetched += 1;
+            }
+        }
+        if ctl.next < tiles.len() {
+            if d.transfers >= ctl.in_done_at[ctl.next] {
+                shard::write_tile_bounds(cl, &tiles[ctl.next].bounds);
+                cl.release_tile(1);
+                if *dma_in_done_at == 0 {
+                    *dma_in_done_at = now;
+                }
+                ctl.computing = Some(ctl.next);
+                ctl.next += 1;
+            }
+        } else {
+            // No more tiles: run the epilogue.
+            cl.release_tile(0);
+        }
+    }
+    if clusters.iter().all(Cluster::done) {
+        if *compute_done_at == 0 {
+            *compute_done_at = now;
+        }
+        if ctls.iter().all(|t| t.flushed) && dmas.iter().all(DmaEngine::idle) {
+            *stage = Stage::Done;
+        }
+    }
+}
+
 impl System {
     /// A system of `num_clusters` identical clusters of shape `cfg`,
     /// sharing one external memory. Every cluster's external interface is
-    /// a port onto the shared interconnect; nothing is loaded yet.
+    /// a port onto the shared interconnect; nothing is loaded yet. Runs
+    /// in staged mode unless a tiled schedule is installed
+    /// ([`build_system`]).
     pub fn new(cfg: ClusterConfig, num_clusters: usize) -> System {
         assert!(num_clusters >= 1, "a system needs at least one cluster");
         let cores = cfg.num_cores();
@@ -220,9 +443,13 @@ impl System {
             engine: System::default_schedule(),
             now: 0,
             stage: Stage::DmaIn,
+            tiled: None,
+            skip: vec![0; num_clusters],
             pending_out: vec![Vec::new(); num_clusters],
             dma_in_done_at: 0,
             compute_done_at: 0,
+            dma_hidden_cycles: 0,
+            tiles_total: 0,
         }
     }
 
@@ -242,8 +469,54 @@ impl System {
         self.stage
     }
 
+    /// Whether this system runs the tiled double-buffered pipeline.
+    pub fn is_tiled(&self) -> bool {
+        self.tiled.is_some()
+    }
+
+    /// Install a tiled schedule: per-cluster tile controllers with the
+    /// preloads and the first two tiles' inputs enqueued (the ping-pong
+    /// pair), switching the control phase to the tile scheduler.
+    /// The clusters must already hold the tiled program.
+    pub fn install_tiles(&mut self, plan: &shard::TilePlan) {
+        assert_eq!(plan.clusters.len(), self.clusters.len(), "one tile schedule per cluster");
+        let mut ctls = Vec::with_capacity(plan.clusters.len());
+        let mut total = 0u64;
+        for (c, sched) in plan.clusters.iter().enumerate() {
+            let mut enqueued = 0u64;
+            for x in &sched.preload {
+                self.dmas[c].enqueue(*x);
+                enqueued += 1;
+            }
+            let mut in_done_at = vec![0u64; sched.tiles.len()];
+            let mut fetched = 0usize;
+            while fetched < sched.tiles.len().min(2) {
+                for x in &sched.tiles[fetched].dma_in {
+                    self.dmas[c].enqueue(*x);
+                    enqueued += 1;
+                }
+                in_done_at[fetched] = enqueued;
+                fetched += 1;
+            }
+            total += sched.tiles.len() as u64;
+            ctls.push(TileCtl {
+                sched: sched.clone(),
+                next: 0,
+                computing: None,
+                fetched,
+                in_done_at,
+                enqueued,
+                prev_busy: 0,
+                flushed: false,
+            });
+        }
+        self.tiles_total = total;
+        self.stage = Stage::Compute;
+        self.tiled = Some(ctls);
+    }
+
     /// Queue write-back transfers for cluster `c`, executed by its DMA
-    /// engine once compute completes.
+    /// engine once compute completes (staged mode).
     pub fn queue_writeback(&mut self, c: usize, xfers: impl IntoIterator<Item = DmaXfer>) {
         self.pending_out[c].extend(xfers);
     }
@@ -275,6 +548,10 @@ impl System {
     /// Run all stages to completion or `max_cycles`. Returns the total
     /// system cycle count.
     pub fn run(&mut self, max_cycles: u64) -> Result<u64, String> {
+        for cl in &mut self.clusters {
+            // Bound the fast-forward tier like `Cluster::run` does.
+            cl.ff_max_cycles = max_cycles;
+        }
         while !self.done() {
             if self.now >= max_cycles {
                 return Err(format!(
@@ -299,21 +576,50 @@ impl System {
             dma_bytes_in: self.dmas.iter().map(|d| d.bytes_in).sum(),
             dma_bytes_out: self.dmas.iter().map(|d| d.bytes_out).sum(),
             ext_accesses: self.ext.accesses,
+            dma_busy_cycles: self.dmas.iter().map(|d| d.busy_cycles).sum(),
+            dma_hidden_cycles: self.dma_hidden_cycles,
+            tiles: self.tiles_total,
         }
     }
 }
 
+/// How [`build_system`] laid the run out: the staged whole-shard plan or
+/// the tiled double-buffered schedule.
+pub enum SysPlan {
+    Staged(shard::ShardPlan),
+    Tiled(shard::TilePlan),
+}
+
 /// Build a ready-to-run system for a shard-aware kernel: clusters
-/// constructed and loaded, full inputs in the shared memory, per-cluster
-/// work bounds written, DMA preloads queued and write-backs pending.
-/// Call [`System::run`] then [`shard::check`] (or use
+/// constructed and loaded, full inputs in the shared memory, work bounds
+/// written and DMA work queued. Call [`System::run`] then
+/// [`shard::check`] / [`shard::check_outputs`] (or use
 /// [`run_kernel_system`], which does all three).
+///
+/// Mode selection: staged (the bit-identical whole-shard machine) when
+/// the working set fits TCDM and — dgemm only — the columns divide
+/// evenly over `clusters × cores`; tiled otherwise, or when
+/// `p.tile_elems` forces it. A forced-tiled run that degenerates to one
+/// tile per cluster falls back to staged when eligible, so single-tile
+/// schedules stay bit-identical to the pre-tiling pipeline.
 pub fn build_system(
     k: &KernelDef,
     variant: Variant,
     p: &Params,
-) -> Result<(System, shard::ShardPlan), String> {
+) -> Result<(System, SysPlan), String> {
     let clusters = p.clusters.max(1);
+    let base_tcdm = ClusterConfig::with_cores(p.cores).tcdm_size;
+    let fits = kernels::working_set_bytes(k.name, p.n) + 0x1000 <= base_tcdm;
+    let staged_ok = fits && (k.name != "dgemm" || p.n % (clusters * p.cores) == 0);
+    if p.tile_elems.is_some() || !staged_ok {
+        let plan = shard::plan_tiles(k, p, clusters)?;
+        let single_tile = plan.clusters.iter().all(|ct| ct.tiles.len() <= 1);
+        if !(single_tile && staged_ok) {
+            let sys = build_tiled(k, variant, p, &plan, clusters);
+            return Ok((sys, SysPlan::Tiled(plan)));
+        }
+        // Degenerate schedule: fall through to the staged machine.
+    }
     let plan = shard::plan(k, p, clusters)?;
     let cfg = kernels::config_for(k, variant, p);
     let mut sys = System::new(cfg, clusters);
@@ -327,7 +633,30 @@ pub fn build_system(
         }
         sys.queue_writeback(c, sh.dma_out.iter().copied());
     }
-    Ok((sys, plan))
+    Ok((sys, SysPlan::Staged(plan)))
+}
+
+/// The tiled half of [`build_system`]: generate the tile-loop program
+/// (uncached — tile capacity is plan-dependent), size the TCDM for the
+/// ping-pong pair rather than the whole working set, and install the
+/// tile schedule.
+fn build_tiled(
+    k: &KernelDef,
+    variant: Variant,
+    p: &Params,
+    plan: &shard::TilePlan,
+    clusters: usize,
+) -> System {
+    let mut cfg = kernels::config_for(k, variant, p);
+    cfg.tcdm_size = plan.tcdm_size;
+    let mut sys = System::new(cfg, clusters);
+    shard::write_ext_inputs(&mut sys.ext, k, p);
+    let prog = tile::gen_tiled(k, variant, p, plan.cap);
+    for cl in &mut sys.clusters {
+        cl.load(&prog);
+    }
+    sys.install_tiles(plan);
+    sys
 }
 
 /// Execute one kernel on a [`System`] of `p.clusters` clusters and
@@ -352,7 +681,11 @@ pub fn run_kernel_system(
     }
     let (mut sys, plan) = build_system(k, variant, p)?;
     sys.run(p.max_cycles).map_err(&ctx)?;
-    let max_err = shard::check(&sys, k, p, &plan).map_err(&ctx)?;
+    let max_err = match &plan {
+        SysPlan::Staged(pl) => shard::check(&sys, k, p, pl),
+        SysPlan::Tiled(_) => shard::check_outputs(&sys, k, p, clusters),
+    }
+    .map_err(&ctx)?;
     finish(sys, k, variant, p, max_err)
 }
 
@@ -377,7 +710,7 @@ fn run_unsharded_single(
 /// Package a finished system run: the reported `cycles` is the compute
 /// makespan (slowest cluster's measured region); `stats` is cluster 0's
 /// bundle (identical across clusters only in shape, not content);
-/// [`RunResult::system`] carries the stage split.
+/// [`RunResult::system`] carries the stage split and overlap counters.
 fn finish(
     mut sys: System,
     k: &KernelDef,
@@ -447,6 +780,9 @@ mod tests {
         assert_eq!(s.dma_in_cycles, 0);
         assert_eq!(s.dma_out_cycles, 0);
         assert_eq!(s.compute_cycles, sys.compute_done_at);
+        assert_eq!(s.dma_busy_cycles, 0);
+        assert_eq!(s.dma_hidden_cycles, 0);
+        assert_eq!(s.tiles, 0);
         assert_eq!(sys.clusters[0].tcdm.read(0x1000_0000, 4), 49);
         assert_eq!(sys.clusters[0].tcdm.read(0x1000_0008, 4), 50);
     }
@@ -500,6 +836,10 @@ mod tests {
         assert_eq!(s.dma_bytes_in, 8);
         assert_eq!(s.dma_bytes_out, 8);
         assert_eq!(s.clusters, 2);
+        // Staged runs never overlap: cluster clocks freeze during DMA.
+        assert!(s.dma_busy_cycles > 0);
+        assert_eq!(s.dma_hidden_cycles, 0);
+        assert_eq!(s.overlap_efficiency(), 0.0);
     }
 
     /// Core-issued external accesses travel the port protocol to the

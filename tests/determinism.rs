@@ -11,6 +11,12 @@
 //! (jobs ∈ {1, 2, 8}) and for reused versus freshly constructed
 //! clusters.
 //!
+//! PR 7 adds the multi-cluster `System` legs: staged and tiled
+//! (double-buffered DMA pipeline) runs are bit-identical with the
+//! fast-forward tier on and off — the tier now opts in during the
+//! Compute stage (staged: only while the cluster's DMA engine is idle;
+//! tiled: throughout, the DMA only ever touches the inactive buffer).
+//!
 //! The fast-forward tier gets its own fallback section at the bottom:
 //! each perturbing event (barrier waits, foreign TCDM traffic, a
 //! simulation budget expiring inside the fast-forwarded region) must
@@ -240,6 +246,63 @@ fn system_single_cluster_matches_direct_loop() {
         assert_eq!(direct_now, r.stats.cycles, "{name}: cluster-local cycle count");
         assert_eq!(direct_stats, r.stats, "{name}: stats bundle");
         assert_eq!(direct_err.to_bits(), r.max_err.to_bits(), "{name}: max_err");
+    }
+}
+
+/// PR 7 satellite: the System fast-forward opt-in (engage during the
+/// Compute stage only while the cluster's own DMA engine is idle) must
+/// not perturb staged multi-cluster runs — the tier on vs off is
+/// bit-identical in region cycles, the stats bundle, the stage summary,
+/// and the validated error bits.
+#[test]
+fn staged_system_matches_with_fast_forward_on_and_off() {
+    for (name, v, n) in [
+        ("dot", Variant::SsrFrep, 256usize),
+        ("dgemm", Variant::SsrFrep, 32),
+        ("axpy", Variant::Ssr, 256),
+    ] {
+        let k = kernels::kernel_by_name(name).unwrap();
+        let p = Params::new(n, 8).with_clusters(2);
+        let on = snitch_sim::system::run_kernel_system(k, v, &p)
+            .unwrap_or_else(|e| panic!("{name} ff-on: {e}"));
+        let off = snitch_sim::system::run_kernel_system(k, v, &p.with_fast_forward(false))
+            .unwrap_or_else(|e| panic!("{name} ff-off: {e}"));
+        let ctx = format!("{name} 2cl staged");
+        assert_eq!(on.cycles, off.cycles, "{ctx}: region cycles");
+        assert_eq!(on.stats, off.stats, "{ctx}: stats bundle");
+        assert_eq!(on.max_err.to_bits(), off.max_err.to_bits(), "{ctx}: max_err");
+        assert_eq!(on.system, off.system, "{ctx}: stage summary");
+        assert_eq!(off.stats.ff_engagements, 0, "{ctx}: ff-off never engages");
+    }
+}
+
+/// PR 7: the tiled DMA pipeline joins the equivalence chain — a forced
+/// multi-tile `System` run (DMA overlapping compute, fast-forward
+/// opted in throughout the compute epoch) is bit-identical with the
+/// tier on and off: same region cycles, same stats bundle, same stage
+/// summary (including the overlap accounting), same validated error
+/// bits.
+#[test]
+fn tiled_system_matches_with_fast_forward_on_and_off() {
+    for (name, v, n, tile) in [
+        ("dot", Variant::SsrFrep, 600usize, 64usize),
+        ("relu", Variant::SsrFrep, 600, 64),
+        ("dgemm", Variant::SsrFrep, 32, 8),
+    ] {
+        let k = kernels::kernel_by_name(name).unwrap();
+        let p = Params::new(n, 8).with_clusters(2).with_tile_elems(tile);
+        let on = snitch_sim::system::run_kernel_system(k, v, &p)
+            .unwrap_or_else(|e| panic!("{name} tiled ff-on: {e}"));
+        let off = snitch_sim::system::run_kernel_system(k, v, &p.with_fast_forward(false))
+            .unwrap_or_else(|e| panic!("{name} tiled ff-off: {e}"));
+        let ctx = format!("{name} 2cl tiled");
+        let s = on.system.expect("tiled runs carry a stage summary");
+        assert!(s.tiles >= 4, "{ctx}: premise — a multi-tile schedule ({} tiles)", s.tiles);
+        assert_eq!(on.cycles, off.cycles, "{ctx}: region cycles");
+        assert_eq!(on.stats, off.stats, "{ctx}: stats bundle");
+        assert_eq!(on.max_err.to_bits(), off.max_err.to_bits(), "{ctx}: max_err");
+        assert_eq!(on.system, off.system, "{ctx}: stage summary incl. overlap accounting");
+        assert_eq!(off.stats.ff_engagements, 0, "{ctx}: ff-off never engages");
     }
 }
 

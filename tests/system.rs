@@ -9,6 +9,12 @@
 //!   DMA-preload vs core-issued-preload cycle counts reported;
 //! * the `cluster_scaling` artifact renders through the typed
 //!   evaluation API (and through a multi-worker `Sweep`, order-stable).
+//!
+//! PR 7 adds the tiled DMA pipeline gates: degenerate single-tile
+//! schedules fall back to (and stay bit-identical with) the staged
+//! machine, multi-tile schedules hide DMA behind compute and match the
+//! full-problem reference, over-TCDM working sets auto-tile, and ragged
+//! shapes (n not divisible by clusters × cores) run end to end.
 
 use snitch_sim::cluster::Cluster;
 use snitch_sim::coordinator::{artifacts, ArtifactOptions, Sweep, SweepOptions};
@@ -79,12 +85,12 @@ fn one_cluster_system_trace_hash_matches_legacy() {
     (k.setup)(&mut legacy, &p);
     legacy.run(p.max_cycles).expect("legacy run");
 
-    let (mut sys, plan) = system::build_system(k, v, &p).expect("build system");
+    let (mut sys, _plan) = system::build_system(k, v, &p).expect("build system");
     for cl in &mut sys.clusters {
         cl.set_trace(TraceSink::unbounded());
     }
     sys.run(p.max_cycles).expect("system run");
-    kernels::shard::check(&sys, k, &p, &plan).expect("system check");
+    kernels::shard::check_outputs(&sys, k, &p, 1).expect("system check");
 
     assert_eq!(sys.clusters[0].now, legacy.now, "cluster-local cycle count");
     assert_eq!(sys.clusters[0].trace.len(), legacy.trace.len(), "trace event count");
@@ -155,6 +161,127 @@ fn unsharded_kernels_refuse_multiple_clusters() {
         .unwrap_err();
     assert!(e.contains("does not shard"), "{e}");
     assert!(e.contains("dgemm"), "error names the shard-aware kernels: {e}");
+}
+
+/// PR 7, degenerate-schedule gate: forcing the tiled pipeline onto a
+/// problem that fits one tile per cluster falls back to the staged
+/// machine — bit-identical region cycles, whole stats bundles, max-err
+/// bits, and system stage summaries — for every shardable kernel ×
+/// {1, 2, 4} clusters.
+#[test]
+fn single_tile_tiled_runs_are_bit_identical_to_staged() {
+    for (name, v, n) in [
+        ("dgemm", Variant::SsrFrep, 32usize),
+        ("dot", Variant::SsrFrep, 256),
+        ("axpy", Variant::Ssr, 256),
+        ("relu", Variant::SsrFrep, 256),
+    ] {
+        let k = kernels::kernel_by_name(name).unwrap();
+        for clusters in [1usize, 2, 4] {
+            let p = Params::new(n, 8).with_clusters(clusters);
+            // Tiles as big as the buffer allows → one tile per cluster.
+            let forced = p.with_tile_elems(1 << 20);
+            let (sys, plan) =
+                system::build_system(k, v, &forced).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(!sys.is_tiled(), "{name} {clusters}cl: degenerate schedule runs staged");
+            assert!(matches!(plan, system::SysPlan::Staged(_)));
+            drop(sys);
+            let staged = system::run_kernel_system(k, v, &p).unwrap();
+            let tiled = system::run_kernel_system(k, v, &forced).unwrap();
+            let ctx = format!("{name} {clusters}cl");
+            assert_eq!(staged.cycles, tiled.cycles, "{ctx}: region cycles");
+            assert_eq!(staged.stats, tiled.stats, "{ctx}: whole stats bundle");
+            assert_eq!(staged.max_err.to_bits(), tiled.max_err.to_bits(), "{ctx}: max_err");
+            assert_eq!(staged.system, tiled.system, "{ctx}: system stage summary");
+        }
+    }
+    // Trace-level identity on a representative point.
+    let k = kernels::kernel_by_name("dot").unwrap();
+    let p = Params::new(256, 8).with_clusters(2);
+    let hashes = |pp: &Params| {
+        let (mut sys, _) = system::build_system(k, Variant::SsrFrep, pp).expect("build");
+        for cl in &mut sys.clusters {
+            cl.set_trace(TraceSink::unbounded());
+        }
+        sys.run(pp.max_cycles).expect("run");
+        sys.clusters.iter().map(|c| c.trace.event_hash()).collect::<Vec<_>>()
+    };
+    assert_eq!(hashes(&p), hashes(&p.with_tile_elems(1 << 20)), "per-cluster trace hashes");
+}
+
+/// PR 7 tentpole gate: forced multi-tile schedules compute the same
+/// answers as the full-problem reference while the DMA engines run
+/// concurrently with compute — every run reports hidden DMA cycles and
+/// a plausible overlap efficiency.
+#[test]
+fn multi_tile_runs_overlap_dma_with_compute_and_match_reference() {
+    for (name, v, n, tile) in [
+        ("dot", Variant::SsrFrep, 600usize, 64usize),
+        ("relu", Variant::SsrFrep, 600, 64),
+        ("axpy", Variant::Ssr, 600, 64),
+        ("dgemm", Variant::SsrFrep, 32, 8),
+    ] {
+        let k = kernels::kernel_by_name(name).unwrap();
+        for clusters in [1usize, 2] {
+            let p = Params::new(n, 8).with_clusters(clusters).with_tile_elems(tile);
+            let r = system::run_kernel_system(k, v, &p)
+                .unwrap_or_else(|e| panic!("{name} {clusters}cl tiled: {e}"));
+            let ctx = format!("{name} {clusters}cl tiled");
+            assert!(r.max_err < 1e-6, "{ctx}: max_err {}", r.max_err);
+            let s = r.system.expect("tiled runs carry a stage summary");
+            assert!(s.tiles as usize >= 2 * clusters, "{ctx}: multi-tile ({} tiles)", s.tiles);
+            assert!(s.dma_busy_cycles > 0, "{ctx}: DMA ran");
+            assert!(s.dma_hidden_cycles > 0, "{ctx}: DMA must hide behind compute");
+            assert!(s.dma_hidden_cycles <= s.dma_busy_cycles, "{ctx}: hidden ⊆ busy");
+            let eff = s.overlap_efficiency();
+            assert!(eff > 0.0 && eff <= 1.0, "{ctx}: overlap efficiency {eff}");
+            println!(
+                "[tiled] {name} n={n} {clusters}cl: {} tiles, overlap {:.2}, total {}",
+                s.tiles, eff, s.total_cycles
+            );
+        }
+    }
+}
+
+/// PR 7 lifted restriction #1: working sets larger than the TCDM tile
+/// automatically (no `tile_elems` forcing) and still validate. relu
+/// n=20000 needs ~470 KiB against the 128 KiB TCDM.
+#[test]
+fn tiled_pipeline_runs_problems_larger_than_tcdm() {
+    let relu = kernels::kernel_by_name("relu").unwrap();
+    let p = Params::new(20_000, 8).with_clusters(2);
+    let (sys, plan) = system::build_system(relu, Variant::SsrFrep, &p).expect("build");
+    assert!(sys.is_tiled(), "an over-TCDM working set must pick the tiled pipeline");
+    let system::SysPlan::Tiled(tp) = plan else { panic!("tiled plan expected") };
+    assert!(tp.clusters[0].tiles.len() > 1, "shard exceeds one tile buffer");
+    drop(sys);
+    let r = system::run_kernel_system(relu, Variant::SsrFrep, &p).expect("tiled run");
+    assert_eq!(r.max_err, 0.0, "relu is exact");
+    let s = r.system.unwrap();
+    assert!(s.tiles > 2);
+    assert!(s.dma_hidden_cycles > 0);
+}
+
+/// PR 7 lifted restriction #2: shapes that don't divide over
+/// clusters × cores run — ragged vectors through the remainder-aware
+/// staged split, ragged dgemm through the tiled pipeline.
+#[test]
+fn ragged_shapes_run_end_to_end() {
+    // dot n=1000 over 3 clusters × 8 cores: the old planner refusal.
+    let dot = kernels::kernel_by_name("dot").unwrap();
+    let r = kernels::run_kernel(dot, Variant::SsrFrep, &Params::new(1000, 8).with_clusters(3))
+        .expect("ragged dot");
+    assert!(r.max_err < 1e-9, "ragged dot max_err {}", r.max_err);
+    // dgemm n=24 over 2 clusters × 8 cores (24 % 16 ≠ 0): staged refuses
+    // (baked immediates), so build_system must route it to the tiles.
+    let dgemm = kernels::kernel_by_name("dgemm").unwrap();
+    let p = Params::new(24, 8).with_clusters(2);
+    let (sys, _) = system::build_system(dgemm, Variant::SsrFrep, &p).expect("build");
+    assert!(sys.is_tiled(), "ragged dgemm must run tiled");
+    drop(sys);
+    let r = kernels::run_kernel(dgemm, Variant::SsrFrep, &p).expect("ragged dgemm");
+    assert!(r.max_err < 1e-9, "ragged dgemm max_err {}", r.max_err);
+    assert!(r.system.unwrap().tiles >= 2, "one tile per cluster at least");
 }
 
 /// The cluster-scaling artifact renders through the typed evaluation

@@ -33,6 +33,7 @@ use snitch_sim::asm::assemble;
 use snitch_sim::cluster::{Cluster, ClusterStats};
 use snitch_sim::coordinator::{self, Experiment, Sweep, SweepOptions};
 use snitch_sim::kernels::{self, ClusterPool, KernelDef, Params, Variant};
+use snitch_sim::service;
 
 fn hotpath() {
     for (name, v, n, cores) in [
@@ -673,6 +674,136 @@ fn render_pr7_json(rows: &[ScaleRow]) -> String {
     s
 }
 
+// ---------------------------------------------------------------------
+// serving: the PR8 serving layer under open-loop Poisson load — the
+// `serving_throughput` artifact's sweep, timed, with the saturation
+// behavior asserted (the BENCH_PR8.json record).
+// ---------------------------------------------------------------------
+
+/// Drive the offered-load sweep the `serving_throughput` artifact runs
+/// (smoke: the reduced preset CI uses) and report per-point latency,
+/// occupancy and reject rate plus the wall-clock cost of serving it.
+/// Asserts the queueing physics on the way: latency grows with offered
+/// load, and only saturated points (ρ > 1) shed load.
+fn serving(smoke: bool) -> (service::ServingRun, service::ServingOptions, f64) {
+    let opts =
+        if smoke { service::ServingOptions::smoke() } else { service::ServingOptions::default() };
+    let t = Instant::now();
+    let run = service::serving_sweep(&opts).expect("serving sweep");
+    let wall_ms = t.elapsed().as_secs_f64() * 1e3;
+    println!(
+        "[bench] serving: probed mean service {:.0} cycles, capacity {:.1} req/Mcycle, \
+         {} requests/point, {wall_ms:.1} ms wall",
+        run.mean_service_cycles, run.capacity_per_mcycle, opts.requests,
+    );
+    for p in &run.points {
+        let s = &p.stats;
+        println!(
+            "[bench] serving/rho{:.2}: {} served / {} rejected ({:.1}%), {:.0} req/s @1GHz, \
+             p50 {} / p99 {} / p999 {} cycles, occupancy {:.1}%, {} dispatches \
+             ({} batched jobs)",
+            p.rho,
+            s.served,
+            s.rejected,
+            s.reject_rate() * 100.0,
+            s.requests_per_sec_at_1ghz(),
+            s.latency.p50,
+            s.latency.p99,
+            s.latency.p999,
+            s.occupancy() * 100.0,
+            s.batches,
+            s.batched_jobs,
+        );
+    }
+    // Queueing sanity gates (held in smoke mode too, so CI catches a
+    // scheduler drift): the saturated end of the sweep waits far longer
+    // than the under-driven end (each point has its own arrival stream,
+    // so only the endpoints compare robustly), and only saturated
+    // points shed load.
+    let (lo, hi) = (run.points.first().unwrap(), run.points.last().unwrap());
+    assert!(
+        hi.stats.latency.mean > lo.stats.latency.mean,
+        "serving: latency must grow from rho={} to rho={}",
+        lo.rho,
+        hi.rho
+    );
+    for p in &run.points {
+        if p.rho <= 0.5 {
+            assert_eq!(p.stats.rejected, 0, "serving: rho={} must not shed load", p.rho);
+        }
+        if p.rho >= 2.0 {
+            assert!(p.stats.rejected > 0, "serving: rho={} must saturate the queue", p.rho);
+        }
+    }
+    (run, opts, wall_ms)
+}
+
+/// Hand-rolled JSON for the serving record (`BENCH_PR8.json`): the
+/// capacity probe plus one row per offered-load point.
+fn render_pr8_json(
+    run: &service::ServingRun,
+    opts: &service::ServingOptions,
+    wall_ms: f64,
+) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"sim_hotpath/serving\",\n");
+    s.push_str("  \"regenerate\": \"cargo bench --bench sim_hotpath\",\n");
+    s.push_str(
+        "  \"baseline\": \"open-loop Poisson load (fixed seed) over the default serving \
+         config; rates normalized to the probed pool capacity in the same process\",\n",
+    );
+    s.push_str(&format!("  \"seed\": {},\n", opts.seed));
+    s.push_str(&format!("  \"requests_per_point\": {},\n", opts.requests));
+    s.push_str(&format!(
+        "  \"config\": {{\"slots\": {}, \"cores\": {}, \"queue_capacity\": {}, \
+         \"max_batch\": {}, \"dispatch_cycles\": {}}},\n",
+        opts.config.slots,
+        opts.config.cores,
+        opts.config.queue_capacity,
+        opts.config.max_batch,
+        opts.config.dispatch_cycles,
+    ));
+    s.push_str(&format!(
+        "  \"probe\": {{\"mean_service_cycles\": {:.1}, \"capacity_req_per_mcycle\": {:.3}}},\n",
+        run.mean_service_cycles, run.capacity_per_mcycle,
+    ));
+    s.push_str("  \"points\": [\n");
+    for (i, p) in run.points.iter().enumerate() {
+        let st = &p.stats;
+        s.push_str(&format!(
+            "    {{\"rho\": {:.2}, \"offered_req_per_mcycle\": {:.3}, \"served\": {}, \
+             \"rejected\": {}, \"reject_rate\": {:.4}, \"req_per_sec_at_1ghz\": {:.1}, \
+             \"latency_p50\": {}, \"latency_p99\": {}, \"latency_p999\": {}, \
+             \"mean_queue_wait\": {:.1}, \"occupancy\": {:.4}, \"batches\": {}, \
+             \"batched_jobs\": {}, \"pool_warm_hits\": {}, \"pool_cold_builds\": {}, \
+             \"cache_hits\": {}, \"cache_misses\": {}}}{}\n",
+            p.rho,
+            p.offered_per_mcycle,
+            st.served,
+            st.rejected,
+            st.reject_rate(),
+            st.requests_per_sec_at_1ghz(),
+            st.latency.p50,
+            st.latency.p99,
+            st.latency.p999,
+            st.queue_wait.mean,
+            st.occupancy(),
+            st.batches,
+            st.batched_jobs,
+            st.pool.warm_hits,
+            st.pool.cold_builds,
+            st.cache.hits,
+            st.cache.misses,
+            if i + 1 < run.points.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str(&format!("  \"total\": {{\"wall_ms\": {wall_ms:.3}}}\n"));
+    s.push_str("}\n");
+    s
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     let smoke = args.iter().any(|a| a == "--smoke");
@@ -689,11 +820,12 @@ fn main() {
     }
     if smoke {
         // CI bench-smoke: reduced sizes, single rep, no JSON — but the
-        // engine-vs-reference (fast-forward on *and* off) and
-        // System-vs-legacy assertions still gate, and the per-row
-        // fast-forward hit rates still print.
+        // engine-vs-reference (fast-forward on *and* off),
+        // System-vs-legacy and serving-saturation assertions still
+        // gate, and the per-row fast-forward hit rates still print.
         cycles_per_sec(true, None);
         cluster_scaling(true);
+        serving(true);
         return;
     }
     hotpath();
@@ -707,4 +839,8 @@ fn main() {
     let json = render_pr7_json(&rows);
     std::fs::write("BENCH_PR7.json", json).expect("write BENCH_PR7.json");
     println!("[bench] wrote BENCH_PR7.json");
+    let (run, opts, wall_ms) = serving(false);
+    let json = render_pr8_json(&run, &opts, wall_ms);
+    std::fs::write("BENCH_PR8.json", json).expect("write BENCH_PR8.json");
+    println!("[bench] wrote BENCH_PR8.json");
 }

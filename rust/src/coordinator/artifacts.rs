@@ -60,6 +60,7 @@ impl ArtifactOptions {
 type ExperimentsFn = fn(&ArtifactOptions) -> Vec<Experiment>;
 type RenderFn = fn(&[RunResult]) -> crate::Result<Table>;
 type PreflightFn = fn() -> crate::Result<()>;
+type BuildFn = fn(&Sweep, &ArtifactOptions) -> crate::Result<Table>;
 
 /// One registered evaluation artifact (a paper table or figure).
 pub struct Artifact {
@@ -73,6 +74,11 @@ pub struct Artifact {
     /// a missing prerequisite (the PJRT backend for `validate`) fails
     /// in milliseconds instead of after the whole sweep.
     pre: PreflightFn,
+    /// Custom build override for artifacts whose work is not an
+    /// [`Experiment`] list (the serving layer runs its own
+    /// discrete-event loop). `None` = the standard
+    /// experiments → sweep → render pipeline.
+    build_with: Option<BuildFn>,
 }
 
 const fn sweep_artifact(
@@ -81,7 +87,7 @@ const fn sweep_artifact(
     exps: ExperimentsFn,
     rend: RenderFn,
 ) -> Artifact {
-    Artifact { id, title, exps, rend, pre: no_preflight }
+    Artifact { id, title, exps, rend, pre: no_preflight, build_with: None }
 }
 
 fn no_preflight() -> crate::Result<()> {
@@ -119,9 +125,14 @@ impl Artifact {
         (self.pre)()
     }
 
-    /// Define, execute (on `sweep`) and render in one call.
+    /// Define, execute (on `sweep`) and render in one call. Artifacts
+    /// with a custom build path (the serving layer's event loop) run it
+    /// here, after the same preflight.
     pub fn build(&self, sweep: &Sweep, opts: &ArtifactOptions) -> crate::Result<Table> {
         self.preflight()?;
+        if let Some(build) = self.build_with {
+            return build(sweep, opts);
+        }
         let exps = self.experiments(opts);
         let runs = sweep.run(&exps)?;
         self.render(&runs)
@@ -144,7 +155,7 @@ const TITLE_VALIDATE: &str = "golden validation (simulated vs AOT JAX/Pallas via
 const TITLE_CLUSTER_SCALING: &str =
     "cluster scaling — sharded kernels across {1,2,4,8} clusters (8 cores each)";
 
-static REGISTRY: [Artifact; 14] = [
+static REGISTRY: [Artifact; 15] = [
     sweep_artifact("figure1", TITLE_FIGURE1, no_experiments, figure1_render),
     sweep_artifact("table1", TITLE_TABLE1, table1_experiments, table1_render),
     sweep_artifact("table2", TITLE_TABLE2, table2_experiments, table2_render),
@@ -164,13 +175,36 @@ static REGISTRY: [Artifact; 14] = [
         cluster_scaling_render,
     ),
     Artifact {
+        id: "serving_throughput",
+        title: crate::service::SERVING_TITLE,
+        exps: no_experiments,
+        rend: serving_render,
+        pre: no_preflight,
+        build_with: Some(serving_build),
+    },
+    Artifact {
         id: "validate",
         title: TITLE_VALIDATE,
         exps: validate_exps,
         rend: validate_render,
         pre: validate_preflight,
+        build_with: None,
     },
 ];
+
+/// Build the serving-throughput artifact: not an experiment sweep — the
+/// service layer runs its own discrete-event loop over warm cluster
+/// pools (see [`crate::service`]). `--size N` (any value) selects the
+/// smoke scale; the mix's problem sizes are already TCDM-small.
+fn serving_build(_sweep: &Sweep, opts: &ArtifactOptions) -> crate::Result<Table> {
+    crate::service::serving_table(&crate::service::ServingOptions::for_artifact(opts.size))
+}
+
+/// Render hook for registry uniformity: the serving artifact has no
+/// experiment results to render from, so this rebuilds at default scale.
+fn serving_render(_runs: &[RunResult]) -> crate::Result<Table> {
+    serving_build(&Sweep::new(), &ArtifactOptions::default())
+}
 
 /// All artifacts, in the paper's presentation order.
 pub fn all() -> &'static [Artifact] {

@@ -34,7 +34,10 @@ COMMANDS:
     artifact <ID>           define, sweep and render one artifact
                             (ids beyond the paper's tables/figures:
                             `cluster_scaling` shards dgemm/axpy/dot/relu
-                            across {1,2,4,8} clusters of a System)
+                            across {1,2,4,8} clusters of a System;
+                            `serving_throughput` drives the serving
+                            layer with open-loop Poisson load and
+                            reports latency/occupancy per load point)
     all                     regenerate every table and figure
     table <1|2|3|4>         regenerate a paper table
     figure <1|9|10|11|12|13|14|15|16>
@@ -466,7 +469,7 @@ mod tests {
         // Repeated flag: every occurrence is stripped, the last one wins.
         let (o, rest) = parse_flags(v(&["--jobs", "2", "--jobs=8", "table", "2"])).unwrap();
         assert_eq!((o.jobs, rest), (8, v(&["table", "2"])));
-        // Two parses never observe each other (no `set_jobs` global).
+        // Two parses never observe each other (no process-global width).
         let (a, _) = parse_flags(v(&["--jobs", "3"])).unwrap();
         let (b, _) = parse_flags(v(&["list"])).unwrap();
         assert_eq!(a.jobs, 3);

@@ -13,10 +13,9 @@
 //!   definitions and presentation are independently reusable.
 //! * [`Sweep`] / [`SweepOptions`] — an execution *session*: worker-pool
 //!   width, per-run cycle budget and an optional progress callback are
-//!   per-session state, not process globals. The old [`set_jobs`] /
-//!   [`jobs`] globals survive only as deprecated shims for legacy
-//!   library callers (auto-width sessions still honor them); the CLI
-//!   `--jobs` flag now configures its invocation's session directly.
+//!   per-session state, not process globals (auto-width sessions use
+//!   the machine parallelism); the CLI `--jobs` flag configures its
+//!   invocation's session directly.
 //!
 //! The legacy `table_*` / `figure_*` functions remain as thin wrappers
 //! (`registry lookup → default session → markdown`), so existing
@@ -189,37 +188,6 @@ impl Experiment {
     }
 }
 
-/// Legacy process-global pool-width override (0 = auto). Kept only as
-/// a shim for pre-session callers: sessions with
-/// `SweepOptions::jobs == 0` fall back to this, then to the machine
-/// parallelism.
-static JOBS: AtomicUsize = AtomicUsize::new(0);
-
-/// Set the process-global sweep worker-pool width. 0 restores the
-/// default (machine parallelism).
-#[deprecated(
-    since = "0.2.0",
-    note = "pool width is per-session now: pass `SweepOptions { jobs, .. }` to `Sweep`"
-)]
-pub fn set_jobs(n: usize) {
-    JOBS.store(n, Ordering::Relaxed);
-}
-
-/// Current process-global sweep worker-pool width.
-#[deprecated(since = "0.2.0", note = "use `Sweep::jobs` — the resolved per-session width")]
-pub fn jobs() -> usize {
-    default_jobs()
-}
-
-/// Session-default pool width: the global shim if set, else the
-/// machine parallelism.
-fn default_jobs() -> usize {
-    match JOBS.load(Ordering::Relaxed) {
-        0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
-        n => n,
-    }
-}
-
 /// The pool width a sweep actually uses for `experiments` when asked
 /// for `workers`: at least 1, at most one worker per experiment.
 pub fn effective_workers(experiments: &[Experiment], workers: usize) -> usize {
@@ -243,8 +211,7 @@ pub type ProgressFn = Box<dyn Fn(&SweepProgress) + Send + Sync>;
 
 /// Per-session sweep configuration.
 pub struct SweepOptions {
-    /// Worker-pool width; 0 = auto (the deprecated [`set_jobs`] global
-    /// if set, else the machine parallelism).
+    /// Worker-pool width; 0 = auto (the machine parallelism).
     pub jobs: usize,
     /// Per-run simulation budget ([`Params::max_cycles`]).
     pub max_cycles: u64,
@@ -287,8 +254,8 @@ impl SweepOptions {
 }
 
 /// A sweep **session**: owns its pool width, cycle budget and progress
-/// callback. Two sessions never interfere — unlike the old
-/// process-global `set_jobs` width (kept only as a deprecated shim).
+/// callback. Two sessions never interfere — there is no process-global
+/// width anywhere.
 ///
 /// ```no_run
 /// use snitch_sim::coordinator::{artifacts, ArtifactOptions, Sweep, SweepOptions};
@@ -322,7 +289,7 @@ impl Sweep {
     /// The resolved worker-pool width of this session.
     pub fn jobs(&self) -> usize {
         match self.opts.jobs {
-            0 => default_jobs(),
+            0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
             n => n,
         }
     }

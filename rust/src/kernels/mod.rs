@@ -233,6 +233,30 @@ struct ProgKey {
     cores: usize,
 }
 
+/// Cumulative hit/miss/eviction counters of one [`ProgramCache`]
+/// instance (observability for the serving layer; the process-global
+/// cache's counters are readable via [`program_cache_stats`]). Counters
+/// survive [`ProgramCache::clear`] — they describe the cache's whole
+/// lifetime, not its current contents.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups that found their program cached.
+    pub hits: u64,
+    /// Lookups that missed (each normally followed by one generate+insert).
+    pub misses: u64,
+    /// Entries dropped by LRU eviction at capacity.
+    pub evictions: u64,
+}
+
+impl CacheStats {
+    /// Accumulate another cache's counters into this one.
+    pub fn merge(&mut self, other: CacheStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.evictions += other.evictions;
+    }
+}
+
 /// Bounded, LRU-evicting program cache (the process-global instance
 /// behind [`cached_program`] is capped at [`PROGRAM_CACHE_CAP`] so
 /// sweeps over many distinct `n` no longer grow it without limit).
@@ -240,12 +264,13 @@ pub struct ProgramCache {
     map: HashMap<ProgKey, (Arc<Program>, u64)>,
     cap: usize,
     tick: u64,
+    stats: CacheStats,
 }
 
 impl ProgramCache {
     pub fn new(cap: usize) -> ProgramCache {
         assert!(cap >= 1, "cache capacity must be positive");
-        ProgramCache { map: HashMap::new(), cap, tick: 0 }
+        ProgramCache { map: HashMap::new(), cap, tick: 0, stats: CacheStats::default() }
     }
 
     fn stamp(&mut self) -> u64 {
@@ -256,10 +281,17 @@ impl ProgramCache {
     /// The cached program for `key`, freshening its recency.
     fn lookup(&mut self, key: &ProgKey) -> Option<Arc<Program>> {
         let tick = self.stamp();
-        self.map.get_mut(key).map(|e| {
-            e.1 = tick;
-            Arc::clone(&e.0)
-        })
+        match self.map.get_mut(key) {
+            Some(e) => {
+                e.1 = tick;
+                self.stats.hits += 1;
+                Some(Arc::clone(&e.0))
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
     }
 
     /// Insert (evicting the least-recently-used entry at capacity) and
@@ -276,10 +308,26 @@ impl ProgramCache {
             // (one per distinct configuration).
             if let Some(victim) = self.map.iter().min_by_key(|(_, e)| e.1).map(|(k, _)| *k) {
                 self.map.remove(&victim);
+                self.stats.evictions += 1;
             }
         }
         self.map.insert(key, (Arc::clone(&prog), tick));
         prog
+    }
+
+    /// The cached program for `(kernel, variant, n, cores)` from *this*
+    /// cache instance, generating (and inserting) on a miss. The serving
+    /// layer gives each [`crate::service::Service`] a private cache so
+    /// its hit/miss telemetry stays deterministic no matter what else
+    /// runs in the process; the process-global path is
+    /// [`cached_program`].
+    pub fn program_for(&mut self, k: &KernelDef, variant: Variant, p: &Params) -> Arc<Program> {
+        let key = ProgKey { kernel: k.name, variant, n: p.n, cores: p.cores };
+        if let Some(prog) = self.lookup(&key) {
+            return prog;
+        }
+        let prog = Arc::new((k.gen)(variant, p));
+        self.insert(key, prog)
     }
 
     pub fn len(&self) -> usize {
@@ -294,7 +342,13 @@ impl ProgramCache {
         self.cap
     }
 
-    /// Drop every cached program (capacity unchanged).
+    /// Lifetime hit/miss/eviction counters of this cache instance.
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    /// Drop every cached program (capacity unchanged; [`CacheStats`]
+    /// counters keep accumulating across the clear).
     pub fn clear(&mut self) {
         self.map.clear();
     }
@@ -339,6 +393,12 @@ pub fn program_cache_clear() {
     if let Some(c) = PROGRAM_CACHE.get() {
         c.lock().unwrap().clear();
     }
+}
+
+/// Lifetime hit/miss/eviction counters of the process-global program
+/// cache (diagnostics; zeroes before the cache's first use).
+pub fn program_cache_stats() -> CacheStats {
+    PROGRAM_CACHE.get().map_or(CacheStats::default(), |c| c.lock().unwrap().stats())
 }
 
 /// Outcome of a simulated kernel run.
@@ -440,6 +500,25 @@ pub fn run_kernel(
     Ok(result_from(k, variant, params, stats, max_err, cluster))
 }
 
+/// Warm-hit / cold-build counters of one [`ClusterPool`] (observability
+/// for the serving layer: a warm hit rewound an existing cluster via
+/// [`Cluster::reset`], a cold build allocated a fresh one).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Runs that reused (rewound) a warm cluster.
+    pub warm_hits: u64,
+    /// Runs that constructed a fresh cluster for a new shape.
+    pub cold_builds: u64,
+}
+
+impl PoolStats {
+    /// Accumulate another pool's counters into this one.
+    pub fn merge(&mut self, other: PoolStats) {
+        self.warm_hits += other.warm_hits;
+        self.cold_builds += other.cold_builds;
+    }
+}
+
 /// A pool of warm clusters, one per distinct
 /// [`crate::cluster::ClusterConfig`] shape,
 /// rewound by [`Cluster::reset`] between runs instead of reallocating
@@ -451,8 +530,7 @@ pub fn run_kernel(
 #[derive(Default)]
 pub struct ClusterPool {
     clusters: HashMap<crate::cluster::ClusterConfig, Cluster>,
-    /// Diagnostics: runs that reused a warm cluster.
-    pub reuses: u64,
+    stats: PoolStats,
 }
 
 impl ClusterPool {
@@ -467,6 +545,11 @@ impl ClusterPool {
 
     pub fn is_empty(&self) -> bool {
         self.clusters.is_empty()
+    }
+
+    /// Lifetime warm-hit / cold-build counters of this pool.
+    pub fn stats(&self) -> PoolStats {
+        self.stats
     }
 }
 
@@ -487,18 +570,50 @@ pub fn run_kernel_pooled(
         return run_kernel(k, variant, params);
     }
     let prog = cached_program(k, variant, params);
+    run_pooled_loaded(pool, prog, k, variant, params)
+}
+
+/// [`run_kernel_pooled`] with programs served from a caller-owned
+/// [`ProgramCache`] instead of the process-global one (what each
+/// [`crate::service::Service`] slot does, so per-service cache telemetry
+/// stays deterministic). Keep-cluster and multi-cluster requests fall
+/// back to [`run_kernel`] exactly like [`run_kernel_pooled`].
+pub fn run_kernel_pooled_with_cache(
+    pool: &mut ClusterPool,
+    cache: &mut ProgramCache,
+    k: &KernelDef,
+    variant: Variant,
+    params: &Params,
+) -> Result<RunResult, String> {
+    if params.keep_cluster || params.clusters > 1 {
+        return run_kernel(k, variant, params);
+    }
+    let prog = cache.program_for(k, variant, params);
+    run_pooled_loaded(pool, prog, k, variant, params)
+}
+
+/// The shared tail of the pooled paths: rewind-or-build the warm cluster
+/// for this configuration shape, then simulate.
+fn run_pooled_loaded(
+    pool: &mut ClusterPool,
+    prog: Arc<Program>,
+    k: &KernelDef,
+    variant: Variant,
+    params: &Params,
+) -> Result<RunResult, String> {
     let cfg = config_for(k, variant, params);
-    let ClusterPool { clusters, reuses } = pool;
+    let ClusterPool { clusters, stats } = pool;
     let cl = match clusters.entry(cfg) {
         std::collections::hash_map::Entry::Occupied(e) => {
             let cl = e.into_mut();
             cl.reset(&prog);
-            *reuses += 1;
+            stats.warm_hits += 1;
             cl
         }
         std::collections::hash_map::Entry::Vacant(e) => {
             let cl = e.insert(Cluster::new(cfg));
             cl.load(&prog);
+            stats.cold_builds += 1;
             cl
         }
     };
@@ -670,6 +785,7 @@ mod tests {
         };
         let mut c = ProgramCache::new(2);
         assert!(c.is_empty());
+        assert_eq!(c.stats(), CacheStats::default(), "fresh cache has zero counters");
         c.insert(mk(1), prog());
         c.insert(mk(2), prog());
         assert_eq!(c.len(), 2);
@@ -677,19 +793,24 @@ mod tests {
         assert!(c.lookup(&mk(1)).is_some());
         c.insert(mk(3), prog());
         assert_eq!(c.len(), 2, "capacity held");
+        assert_eq!(c.stats().evictions, 1, "one LRU eviction counted");
         assert!(c.lookup(&mk(2)).is_none(), "LRU entry evicted");
         assert!(c.lookup(&mk(1)).is_some(), "recently-used entry survives");
         assert!(c.lookup(&mk(3)).is_some());
+        assert_eq!(c.stats().hits, 3, "three lookups found their entry");
+        assert_eq!(c.stats().misses, 1, "the evicted key missed");
         // Re-inserting an existing key refreshes, never duplicates or
         // replaces the first-inserted program (racing-generator rule).
         let first = c.lookup(&mk(1)).unwrap();
         let again = c.insert(mk(1), prog());
         assert!(Arc::ptr_eq(&first, &again), "first insert wins");
         assert_eq!(c.len(), 2);
-        // Reuse after clear.
+        // Reuse after clear; counters keep accumulating across it.
+        let before_clear = c.stats();
         c.clear();
         assert_eq!(c.len(), 0);
         assert!(c.lookup(&mk(1)).is_none());
+        assert_eq!(c.stats().misses, before_clear.misses + 1, "counters survive clear");
         let fresh = prog();
         let got = c.insert(mk(1), Arc::clone(&fresh));
         assert!(Arc::ptr_eq(&got, &fresh), "cleared cache accepts fresh entries");
@@ -704,7 +825,7 @@ mod tests {
         let pool = ClusterPool::default();
         assert!(pool.is_empty());
         assert_eq!(pool.len(), 0);
-        assert_eq!(pool.reuses, 0);
+        assert_eq!(pool.stats(), PoolStats::default());
     }
 
     /// `max_cycles` bounds the run: an absurdly small budget errors out.
@@ -758,7 +879,8 @@ mod tests {
         // dot +SSR and dgemm/dot +SSR+FREP at one core share no FREP knob,
         // so the pool holds one cluster per distinct configuration.
         assert_eq!(pool.len(), 2, "one warm cluster per shape");
-        assert_eq!(pool.reuses, 1, "the dgemm run rewound the dot cluster");
+        assert_eq!(pool.stats().warm_hits, 1, "the dgemm run rewound the dot cluster");
+        assert_eq!(pool.stats().cold_builds, 2, "one fresh build per shape");
     }
 
     #[test]

@@ -54,6 +54,12 @@
 //!   (a 1-cluster system is bit-identical to a standalone cluster).
 //! * [`runtime`] — PJRT golden-model execution of the AOT-lowered JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) used to validate simulated results.
+//! * [`service`] — the serving layer: a long-lived job queue with
+//!   bounded admission ([`service::JobQueue`]), a virtual-time
+//!   scheduler batching compatible requests onto warm
+//!   [`kernels::ClusterPool`] slots, a seeded open-loop Poisson load
+//!   generator ([`service::LoadGen`]) and exact latency telemetry —
+//!   surfaced as the `serving_throughput` artifact.
 //! * [`coordinator`] — the typed evaluation API: an artifact registry
 //!   ([`coordinator::artifacts`]) declaring every table/figure of the
 //!   paper's evaluation as an experiment list + renderer, typed result
@@ -86,6 +92,7 @@ pub mod kernels;
 pub mod mem;
 pub mod muldiv;
 pub mod runtime;
+pub mod service;
 pub mod sim;
 pub mod ssr;
 pub mod system;

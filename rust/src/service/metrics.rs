@@ -1,0 +1,158 @@
+//! Latency accounting for served jobs — everything in *simulated*
+//! cycles (virtual time), never wall-clock, so a service run's
+//! telemetry is bit-reproducible for a fixed workload.
+
+use crate::kernels::{CacheStats, PoolStats};
+
+/// Order statistics over one latency population (cycles). Percentiles
+/// are exact nearest-rank values over the full sample set — no
+/// reservoirs or histogram buckets, so two runs of the same workload
+/// summarize byte-identically.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct LatencySummary {
+    pub count: u64,
+    /// Arithmetic mean (cycles).
+    pub mean: f64,
+    pub p50: u64,
+    pub p99: u64,
+    pub p999: u64,
+    pub max: u64,
+}
+
+/// Nearest-rank percentile of an ascending-sorted sample set.
+fn percentile(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = (q * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// Summarize a latency population (order of `samples` is irrelevant).
+pub fn summarize(mut samples: Vec<u64>) -> LatencySummary {
+    if samples.is_empty() {
+        return LatencySummary::default();
+    }
+    samples.sort_unstable();
+    let count = samples.len() as u64;
+    let sum: u128 = samples.iter().map(|&s| s as u128).sum();
+    LatencySummary {
+        count,
+        mean: sum as f64 / count as f64,
+        p50: percentile(&samples, 0.50),
+        p99: percentile(&samples, 0.99),
+        p999: percentile(&samples, 0.999),
+        max: *samples.last().expect("non-empty"),
+    }
+}
+
+/// Aggregate telemetry of one [`crate::service::Service`] run: demand
+/// (offered/served/rejected), batching, time accounting (makespan and
+/// per-slot busy cycles), the two latency populations, and the reuse
+/// counters of the layers underneath (warm cluster pools + the
+/// service-private program cache).
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct ServiceStats {
+    /// Requests submitted (served + rejected + still queued).
+    pub offered: u64,
+    pub served: u64,
+    pub rejected: u64,
+    /// Dispatches (a batch of n jobs counts once).
+    pub batches: u64,
+    /// Served jobs that shared their batch with at least one other job.
+    pub batched_jobs: u64,
+    /// Server slots (warm cluster hosts) in the pool.
+    pub slots: usize,
+    /// High-water mark of the admission queue depth.
+    pub queue_depth_peak: usize,
+    /// Last completion cycle over all served jobs (virtual time).
+    pub makespan_cycles: u64,
+    /// Busy cycles summed over all slots (kernel service + dispatch
+    /// overhead; ≤ `slots × makespan_cycles`).
+    pub busy_cycles: u64,
+    /// Queue wait: service start − arrival.
+    pub queue_wait: LatencySummary,
+    /// End-to-end latency: completion − arrival.
+    pub latency: LatencySummary,
+    /// Warm-hit / cold-build counters merged over every slot's pool.
+    pub pool: PoolStats,
+    /// The service-private program cache's hit/miss/eviction counters.
+    pub cache: CacheStats,
+}
+
+impl ServiceStats {
+    /// Rejected fraction of offered load (0 when nothing was offered).
+    pub fn reject_rate(&self) -> f64 {
+        if self.offered == 0 {
+            0.0
+        } else {
+            self.rejected as f64 / self.offered as f64
+        }
+    }
+
+    /// Mean fraction of slot-time spent serving (0 when nothing ran).
+    pub fn occupancy(&self) -> f64 {
+        let denom = self.slots as u64 * self.makespan_cycles;
+        if denom == 0 {
+            0.0
+        } else {
+            self.busy_cycles as f64 / denom as f64
+        }
+    }
+
+    /// Served requests per million simulated cycles.
+    pub fn served_per_mcycle(&self) -> f64 {
+        if self.makespan_cycles == 0 {
+            0.0
+        } else {
+            self.served as f64 * 1e6 / self.makespan_cycles as f64
+        }
+    }
+
+    /// Served requests per second at a 1 GHz cluster clock (the paper's
+    /// 22 nm operating point) — the headline "requests/s" figure.
+    pub fn requests_per_sec_at_1ghz(&self) -> f64 {
+        self.served_per_mcycle() * 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Nearest-rank percentiles on a known population, plus the empty
+    /// and single-sample edges.
+    #[test]
+    fn percentiles_are_exact_nearest_rank() {
+        let s = summarize((1..=1000).rev().collect());
+        assert_eq!(s.count, 1000);
+        assert_eq!(s.p50, 500);
+        assert_eq!(s.p99, 990);
+        assert_eq!(s.p999, 999);
+        assert_eq!(s.max, 1000);
+        assert!((s.mean - 500.5).abs() < 1e-9);
+
+        assert_eq!(summarize(Vec::new()), LatencySummary::default());
+
+        let one = summarize(vec![42]);
+        assert_eq!((one.p50, one.p99, one.p999, one.max), (42, 42, 42, 42));
+    }
+
+    /// Derived rates handle the zero denominators.
+    #[test]
+    fn derived_rates() {
+        let mut s = ServiceStats { slots: 4, ..ServiceStats::default() };
+        assert_eq!(s.reject_rate(), 0.0);
+        assert_eq!(s.occupancy(), 0.0);
+        assert_eq!(s.served_per_mcycle(), 0.0);
+        s.offered = 10;
+        s.rejected = 2;
+        s.served = 8;
+        s.makespan_cycles = 2_000_000;
+        s.busy_cycles = 4_000_000;
+        assert!((s.reject_rate() - 0.2).abs() < 1e-12);
+        assert!((s.occupancy() - 0.5).abs() < 1e-12);
+        assert!((s.served_per_mcycle() - 4.0).abs() < 1e-12);
+        assert!((s.requests_per_sec_at_1ghz() - 4000.0).abs() < 1e-9);
+    }
+}

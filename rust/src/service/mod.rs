@@ -1,0 +1,699 @@
+//! The serving layer: a long-lived job queue over warm cluster pools.
+//!
+//! Everything below runs in *virtual time* (simulated cycles): arrivals
+//! carry virtual timestamps from the open-loop [`LoadGen`], service
+//! times are the cycle counts of real cycle-accurate kernel runs, and
+//! queue wait / end-to-end latency are differences of those timestamps.
+//! No wall-clock enters the simulated path, so a whole serving run —
+//! admissions, rejections, per-job telemetry, the rendered
+//! `serving_throughput` table — is a pure function of the workload and
+//! bit-reproducible across runs and platforms.
+//!
+//! ## Anatomy
+//!
+//! * [`queue`] — typed [`JobRequest`]s, the bounded FIFO admission
+//!   queue, and typed [`RejectReason`]s (backpressure: open-loop load
+//!   cannot be flow-controlled, so a full queue *rejects*).
+//! * [`Service`] — the scheduler: a discrete-event loop over a fixed
+//!   set of server *slots*, each a warm [`crate::kernels::ClusterPool`]
+//!   host. Jobs dispatch strictly in arrival order; a dispatch may
+//!   *batch* the consecutive compatible prefix of the queue (same
+//!   kernel/variant/n/clusters — one program load, several payloads)
+//!   onto the slot, paying the dispatch overhead once.
+//! * [`loadgen`] — seeded Poisson arrivals over a weighted kernel mix.
+//! * [`metrics`] — exact order-statistics latency summaries and the
+//!   [`ServiceStats`] roll-up (occupancy, reject rate, reuse counters).
+//!
+//! Served results are bit-identical to [`crate::kernels::run_kernel`]
+//! for the same `(kernel, variant, n, clusters, seed)` — slots run the
+//! very same pooled path the sweep workers use (pinned by
+//! `tests/service.rs` and the determinism suite). Each service owns a
+//! private [`ProgramCache`], so its hit/miss telemetry is deterministic
+//! no matter what else shares the process.
+//!
+//! The [`serving_table`] entry point sweeps offered load (as a fraction
+//! ρ of the pool's probed capacity) and renders the
+//! `serving_throughput` artifact: requests/s, p50/p99/p999 latency,
+//! occupancy and reject rate per load point — reachable as
+//! `repro artifact serving_throughput` and benchmarked by the
+//! `serving` section of `benches/sim_hotpath.rs`.
+
+pub mod loadgen;
+pub mod metrics;
+pub mod queue;
+
+pub use loadgen::{LoadGen, MixEntry};
+pub use metrics::{summarize, LatencySummary, ServiceStats};
+pub use queue::{JobQueue, JobRequest, Pending, RejectReason, Rejection};
+
+use crate::coordinator::report::{Table, Value};
+use crate::kernels::{
+    self, kernel_by_name, CacheStats, ClusterPool, Params, PoolStats, ProgramCache,
+    DEFAULT_MAX_CYCLES, PROGRAM_CACHE_CAP,
+};
+
+/// Serving-side configuration: how the service runs jobs (the *what*
+/// lives in each [`JobRequest`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServiceConfig {
+    /// Server slots — warm cluster hosts served round-robin by
+    /// earliest-free. Each slot owns a private [`ClusterPool`].
+    pub slots: usize,
+    /// Cores per cluster for every served job.
+    pub cores: usize,
+    /// Admission queue capacity (jobs beyond this reject).
+    pub queue_capacity: usize,
+    /// Longest batch one dispatch may take from the queue head (1
+    /// disables batching).
+    pub max_batch: usize,
+    /// Cycles charged once per dispatch (program/configuration load on
+    /// the slot) — batched followers skip it, which is the point of
+    /// batching.
+    pub dispatch_cycles: u64,
+    /// Per-job simulation budget ([`Params::max_cycles`]).
+    pub max_cycles: u64,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> ServiceConfig {
+        ServiceConfig {
+            slots: 4,
+            cores: 8,
+            queue_capacity: 32,
+            max_batch: 4,
+            dispatch_cycles: 64,
+            max_cycles: DEFAULT_MAX_CYCLES,
+        }
+    }
+}
+
+/// Admission verdict for one submission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// Dispatched onto an idle slot immediately (zero queue wait).
+    Dispatched { id: u64 },
+    /// Admitted to the queue at the given depth (1 = head).
+    Queued { id: u64, depth: usize },
+    /// Turned away; the request was not enqueued.
+    Rejected(RejectReason),
+}
+
+/// One served job's record: identity, timing and the run's results.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Served {
+    pub id: u64,
+    pub request: JobRequest,
+    /// Arrival cycle (virtual time).
+    pub arrival: u64,
+    /// Cycle the job's kernel started on its slot (after any dispatch
+    /// overhead and batch predecessors).
+    pub start: u64,
+    /// Completion cycle.
+    pub finish: u64,
+    /// Slot index that served the job.
+    pub slot: usize,
+    /// Kernel busy cycles on the slot (whole run; for multi-cluster
+    /// requests the System's total cycles).
+    pub service_cycles: u64,
+    /// True for batch followers (served without a fresh dispatch).
+    pub batched: bool,
+    /// Measured-region cycles — equals [`crate::kernels::RunResult::cycles`]
+    /// of a `run_kernel` with this request's parameters.
+    pub cycles: u64,
+    /// Max |error| vs the host reference, bit-identical to the
+    /// corresponding `run_kernel`.
+    pub max_err: f64,
+}
+
+impl Served {
+    /// End-to-end latency: completion − arrival.
+    pub fn latency(&self) -> u64 {
+        self.finish - self.arrival
+    }
+
+    /// Queue wait: service start − arrival (includes this dispatch's
+    /// overhead and any batch predecessors).
+    pub fn queue_wait(&self) -> u64 {
+        self.start - self.arrival
+    }
+}
+
+/// One server slot: a warm cluster host with its own pool.
+#[derive(Default)]
+struct Slot {
+    pool: ClusterPool,
+    /// Cycle this slot finishes its current work (≤ now ⇒ idle).
+    free_at: u64,
+    /// Cycles spent serving (kernel + dispatch overhead).
+    busy_cycles: u64,
+}
+
+/// The long-lived serving loop (see the [module docs](self)).
+///
+/// Drive it by submitting arrivals in time order ([`Service::submit`])
+/// and finally draining the backlog ([`Service::drain`]); telemetry
+/// comes back per job ([`Service::served`]) and aggregated
+/// ([`Service::stats`]).
+pub struct Service {
+    cfg: ServiceConfig,
+    slots: Vec<Slot>,
+    queue: JobQueue,
+    /// Service-private program cache (deterministic telemetry).
+    cache: ProgramCache,
+    /// Latest arrival processed (submissions must not go backwards).
+    last_arrival: u64,
+    next_id: u64,
+    served: Vec<Served>,
+    rejections: Vec<Rejection>,
+    offered: u64,
+    batches: u64,
+    batched_jobs: u64,
+}
+
+impl Service {
+    pub fn new(cfg: ServiceConfig) -> Service {
+        assert!(cfg.slots >= 1, "at least one server slot");
+        Service {
+            cfg,
+            slots: (0..cfg.slots).map(|_| Slot::default()).collect(),
+            queue: JobQueue::new(cfg.queue_capacity),
+            cache: ProgramCache::new(PROGRAM_CACHE_CAP),
+            last_arrival: 0,
+            next_id: 0,
+            served: Vec::new(),
+            rejections: Vec::new(),
+            offered: 0,
+            batches: 0,
+            batched_jobs: 0,
+        }
+    }
+
+    pub fn config(&self) -> &ServiceConfig {
+        &self.cfg
+    }
+
+    /// Submit one arrival at virtual time `now` (arrivals must be
+    /// non-decreasing). Completions up to `now` are processed first, so
+    /// a slot freeing at exactly `now` is available to this request.
+    /// Errors are *simulation* failures; admission outcomes (including
+    /// rejection) come back as [`Admission`].
+    pub fn submit(&mut self, now: u64, request: JobRequest) -> crate::Result<Admission> {
+        assert!(now >= self.last_arrival, "arrivals must be submitted in time order");
+        self.last_arrival = now;
+        self.offered += 1;
+        self.dispatch_until(now)?;
+        // Typed admission checks before capacity: a malformed request is
+        // rejected even when the queue has room.
+        let reason = if kernel_by_name(request.kernel).is_none() {
+            Some(RejectReason::UnknownKernel)
+        } else if request.clusters > 1 && !kernels::shard::supports(request.kernel) {
+            Some(RejectReason::Unshardable)
+        } else {
+            None
+        };
+        if let Some(reason) = reason {
+            self.rejections.push(Rejection { at: now, request, reason });
+            return Ok(Admission::Rejected(reason));
+        }
+        // An idle slot serves the request immediately — the queue is
+        // empty here whenever a slot is idle (dispatch_until drained it).
+        if self.queue.is_empty() {
+            if let Some(slot) = self.idle_slot(now) {
+                let id = self.take_id();
+                self.run_batch(slot, now, vec![Pending { id, request, arrival: now }])?;
+                return Ok(Admission::Dispatched { id });
+            }
+        }
+        let id = self.take_id();
+        match self.queue.try_push(Pending { id, request, arrival: now }) {
+            Ok(()) => Ok(Admission::Queued { id, depth: self.queue.len() }),
+            Err(reason) => {
+                self.rejections.push(Rejection { at: now, request, reason });
+                Ok(Admission::Rejected(reason))
+            }
+        }
+    }
+
+    /// Serve the remaining backlog to completion.
+    pub fn drain(&mut self) -> crate::Result<()> {
+        self.dispatch_until(u64::MAX)
+    }
+
+    /// Submit a whole arrival schedule (time-ordered, e.g. from
+    /// [`LoadGen::take`]) and drain it.
+    pub fn run_workload(&mut self, arrivals: &[(u64, JobRequest)]) -> crate::Result<()> {
+        for &(at, request) in arrivals {
+            self.submit(at, request)?;
+        }
+        self.drain()
+    }
+
+    /// Every served job so far, in completion order per slot (ids are
+    /// globally arrival-ordered).
+    pub fn served(&self) -> &[Served] {
+        &self.served
+    }
+
+    /// Every rejection so far, in arrival order.
+    pub fn rejections(&self) -> &[Rejection] {
+        &self.rejections
+    }
+
+    /// Jobs currently waiting for a slot.
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Aggregate telemetry over everything served/rejected so far.
+    pub fn stats(&self) -> ServiceStats {
+        let makespan_cycles = self.served.iter().map(|s| s.finish).max().unwrap_or(0);
+        let mut pool = PoolStats::default();
+        for slot in &self.slots {
+            pool.merge(slot.pool.stats());
+        }
+        ServiceStats {
+            offered: self.offered,
+            served: self.served.len() as u64,
+            rejected: self.rejections.len() as u64,
+            batches: self.batches,
+            batched_jobs: self.batched_jobs,
+            slots: self.slots.len(),
+            queue_depth_peak: self.queue.peak_depth(),
+            makespan_cycles,
+            busy_cycles: self.slots.iter().map(|s| s.busy_cycles).sum(),
+            queue_wait: summarize(self.served.iter().map(Served::queue_wait).collect()),
+            latency: summarize(self.served.iter().map(Served::latency).collect()),
+            pool,
+            cache: self.cache.stats(),
+        }
+    }
+
+    fn take_id(&mut self) -> u64 {
+        self.next_id += 1;
+        self.next_id
+    }
+
+    /// Index of the earliest-free slot (ties break to the lowest index,
+    /// deterministically).
+    fn earliest_slot(&self) -> (usize, u64) {
+        self.slots
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (i, s.free_at))
+            .min_by_key(|&(i, free_at)| (free_at, i))
+            .expect("at least one slot")
+    }
+
+    /// A slot already idle at `now`, if any.
+    fn idle_slot(&self, now: u64) -> Option<usize> {
+        let (i, free_at) = self.earliest_slot();
+        (free_at <= now).then_some(i)
+    }
+
+    /// Event loop: while queued work exists and a slot frees at or
+    /// before `horizon`, dispatch the head batch onto it at its free
+    /// time. Queued jobs always arrived while every slot was busy, so
+    /// `free_at` is never before the batch head's arrival.
+    fn dispatch_until(&mut self, horizon: u64) -> crate::Result<()> {
+        while !self.queue.is_empty() {
+            let (slot, free_at) = self.earliest_slot();
+            if free_at > horizon {
+                break;
+            }
+            let batch = self.queue.pop_batch(self.cfg.max_batch);
+            self.run_batch(slot, free_at, batch)?;
+        }
+        Ok(())
+    }
+
+    /// Serve `batch` on `slot` starting at `start`: one dispatch
+    /// overhead, then each job's kernel back-to-back. Service times are
+    /// the actual cycle-accurate runs (through the slot's warm pool and
+    /// the service-private program cache), so every served result is
+    /// bit-identical to `run_kernel` with the same request parameters.
+    fn run_batch(&mut self, slot: usize, start: u64, batch: Vec<Pending>) -> crate::Result<()> {
+        debug_assert!(!batch.is_empty(), "never dispatch an empty batch");
+        self.batches += 1;
+        if batch.len() > 1 {
+            self.batched_jobs += batch.len() as u64;
+        }
+        let mut t = start + self.cfg.dispatch_cycles;
+        for (pos, job) in batch.into_iter().enumerate() {
+            debug_assert!(start >= job.arrival, "a queued job cannot start before it arrives");
+            let req = job.request;
+            let k = kernel_by_name(req.kernel).expect("admission checked the kernel");
+            let p = params_for(&req, &self.cfg);
+            let r = {
+                let Service { slots, cache, .. } = self;
+                let host = &mut slots[slot];
+                if req.clusters > 1 {
+                    // Multi-cluster requests build a per-run System —
+                    // nothing to pool (same rule as run_kernel_pooled).
+                    kernels::run_kernel(k, req.variant, &p)
+                } else {
+                    kernels::run_kernel_pooled_with_cache(
+                        &mut host.pool,
+                        cache,
+                        k,
+                        req.variant,
+                        &p,
+                    )
+                }
+            }
+            .map_err(|e| format!("service job #{}: {e}", job.id))?;
+            let service_cycles = r.system.as_ref().map_or(r.stats.cycles, |s| s.total_cycles);
+            let finish = t + service_cycles;
+            self.served.push(Served {
+                id: job.id,
+                request: req,
+                arrival: job.arrival,
+                start: t,
+                finish,
+                slot,
+                service_cycles,
+                batched: pos > 0,
+                cycles: r.cycles,
+                max_err: r.max_err,
+            });
+            self.slots[slot].busy_cycles += service_cycles;
+            t = finish;
+        }
+        let host = &mut self.slots[slot];
+        host.busy_cycles += self.cfg.dispatch_cycles;
+        host.free_at = t;
+        Ok(())
+    }
+}
+
+/// The [`Params`] a request runs with under `cfg` — shared by the
+/// service path and the equality checks in the test suites.
+pub fn params_for(req: &JobRequest, cfg: &ServiceConfig) -> Params {
+    let mut p = Params::new(req.n, cfg.cores)
+        .with_max_cycles(cfg.max_cycles)
+        .with_clusters(req.clusters);
+    p.seed = req.seed;
+    p
+}
+
+// ------------------------------------------------------- offered-load sweep
+
+/// Title of the `serving_throughput` artifact (shared with the
+/// registry entry in [`crate::coordinator::artifacts`]).
+pub const SERVING_TITLE: &str =
+    "serving throughput — open-loop Poisson load over warm cluster pools";
+
+/// The default request mix: the SSR paper's motivating kernels at
+/// TCDM-resident sizes, weighted towards the cheap vector ops the way
+/// a many-tenant fabric would see them.
+pub fn default_mix() -> Vec<MixEntry> {
+    use crate::kernels::Variant::{Ssr, SsrFrep};
+    vec![
+        MixEntry::new(4, "dot", SsrFrep, 256),
+        MixEntry::new(3, "axpy", Ssr, 256),
+        MixEntry::new(2, "relu", SsrFrep, 256),
+        MixEntry::new(1, "dgemm", SsrFrep, 16),
+    ]
+}
+
+/// Options of one [`serving_sweep`] / [`serving_table`] run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServingOptions {
+    /// Load-generator seed (the whole artifact is a pure function of
+    /// this plus the options).
+    pub seed: u64,
+    /// Requests offered per load point.
+    pub requests: usize,
+    /// Offered-load points as fractions ρ of the pool's probed capacity
+    /// (1.0 = arrivals match the service rate; >1 saturates).
+    pub rho: Vec<f64>,
+    pub config: ServiceConfig,
+    pub mix: Vec<MixEntry>,
+}
+
+impl Default for ServingOptions {
+    fn default() -> ServingOptions {
+        ServingOptions {
+            seed: 0x5EED_10AD,
+            requests: 160,
+            rho: vec![0.25, 0.5, 1.0, 2.0],
+            config: ServiceConfig::default(),
+            mix: default_mix(),
+        }
+    }
+}
+
+impl ServingOptions {
+    /// Reduced scale for smoke tests and CI: fewer requests and a
+    /// smaller queue (so the saturated point visibly rejects), same
+    /// kernel mix — the mix sizes are already TCDM-small.
+    pub fn smoke() -> ServingOptions {
+        ServingOptions {
+            requests: 32,
+            rho: vec![0.25, 1.0, 2.0],
+            config: ServiceConfig { queue_capacity: 8, ..ServiceConfig::default() },
+            ..ServingOptions::default()
+        }
+    }
+
+    /// The options the `serving_throughput` artifact builds with:
+    /// `--size N` (any N) selects the smoke scale — the mix's problem
+    /// sizes are already minimal, so "reduced" means fewer requests.
+    pub fn for_artifact(size: Option<usize>) -> ServingOptions {
+        if size.is_some() {
+            ServingOptions::smoke()
+        } else {
+            ServingOptions::default()
+        }
+    }
+}
+
+/// One load point's outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServingPoint {
+    /// Offered load as a fraction of probed capacity.
+    pub rho: f64,
+    /// Offered arrival rate, requests per million cycles.
+    pub offered_per_mcycle: f64,
+    pub stats: ServiceStats,
+}
+
+/// A full offered-load sweep: the capacity probe plus one
+/// [`ServingPoint`] per requested ρ.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServingRun {
+    /// Probed weighted-mean service cycles per request (incl. dispatch
+    /// overhead) — the basis of the ρ → arrival-rate mapping.
+    pub mean_service_cycles: f64,
+    /// Pool capacity in requests per million cycles (`slots / mean`).
+    pub capacity_per_mcycle: f64,
+    pub points: Vec<ServingPoint>,
+}
+
+/// Weighted mean service cycles of `mix` under `cfg` (one probe run per
+/// entry, through the ordinary `run_kernel` path and the process-global
+/// program cache — the service's own telemetry is untouched).
+pub fn probe_mean_service_cycles(mix: &[MixEntry], cfg: &ServiceConfig) -> crate::Result<f64> {
+    let mut weighted = 0.0;
+    let mut weight = 0.0;
+    for m in mix {
+        let k = kernel_by_name(m.kernel).ok_or_else(|| format!("unknown kernel {}", m.kernel))?;
+        let req = JobRequest::new(m.kernel, m.variant, m.n).with_clusters(m.clusters);
+        let r = kernels::run_kernel(k, m.variant, &params_for(&req, cfg))
+            .map_err(|e| format!("probing {}/{:?} n={}: {e}", m.kernel, m.variant, m.n))?;
+        let busy = r.system.as_ref().map_or(r.stats.cycles, |s| s.total_cycles);
+        weighted += m.weight as f64 * (busy + cfg.dispatch_cycles) as f64;
+        weight += m.weight as f64;
+    }
+    Ok(weighted / weight)
+}
+
+/// Run the offered-load sweep: probe capacity, then serve `requests`
+/// Poisson arrivals per ρ point on a fresh [`Service`] each.
+pub fn serving_sweep(opts: &ServingOptions) -> crate::Result<ServingRun> {
+    assert!(!opts.rho.is_empty(), "at least one load point");
+    assert!(opts.requests >= 1, "at least one request per point");
+    let mean_service_cycles = probe_mean_service_cycles(&opts.mix, &opts.config)?;
+    let capacity = opts.config.slots as f64 / mean_service_cycles; // requests/cycle
+    let mut points = Vec::with_capacity(opts.rho.len());
+    for (i, &rho) in opts.rho.iter().enumerate() {
+        assert!(rho > 0.0, "offered load must be positive");
+        let mean_gap = 1.0 / (capacity * rho);
+        // Decorrelate the points' arrival streams (splitmix-style odd
+        // multiplier), deterministically from the one seed.
+        let seed = opts.seed.wrapping_add((i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut lg = LoadGen::new(seed, mean_gap, opts.mix.clone());
+        let mut svc = Service::new(opts.config);
+        svc.run_workload(&lg.take(opts.requests))?;
+        points.push(ServingPoint {
+            rho,
+            offered_per_mcycle: capacity * rho * 1e6,
+            stats: svc.stats(),
+        });
+    }
+    Ok(ServingRun { mean_service_cycles, capacity_per_mcycle: capacity * 1e6, points })
+}
+
+/// Build the `serving_throughput` table: one row per offered-load
+/// point, with the reuse-layer counters (satellite observability) in
+/// the notes. Byte-identical across runs for fixed options.
+pub fn serving_table(opts: &ServingOptions) -> crate::Result<Table> {
+    let run = serving_sweep(opts)?;
+    let mut t = Table::new("serving_throughput", SERVING_TITLE).with_columns(&[
+        "offered ρ",
+        "offered req/Mcycle",
+        "served",
+        "rejected",
+        "reject %",
+        "req/s @1GHz",
+        "p50 lat",
+        "p99 lat",
+        "p999 lat",
+        "mean wait",
+        "occupancy %",
+    ]);
+    let mut pool = PoolStats::default();
+    let mut cache = CacheStats::default();
+    let (mut batches, mut batched_jobs) = (0u64, 0u64);
+    for p in &run.points {
+        let s = &p.stats;
+        t.push_row(vec![
+            Value::float(p.rho, 2),
+            Value::float(p.offered_per_mcycle, 1),
+            Value::int(s.served as i64),
+            Value::int(s.rejected as i64),
+            Value::float(s.reject_rate() * 100.0, 1),
+            Value::float(s.requests_per_sec_at_1ghz(), 0),
+            Value::int(s.latency.p50 as i64),
+            Value::int(s.latency.p99 as i64),
+            Value::int(s.latency.p999 as i64),
+            Value::float(s.queue_wait.mean, 1),
+            Value::float(s.occupancy() * 100.0, 1),
+        ]);
+        pool.merge(s.pool);
+        cache.merge(s.cache);
+        batches += s.batches;
+        batched_jobs += s.batched_jobs;
+    }
+    let cfg = &opts.config;
+    t = t.with_notes(format!(
+        "open-loop Poisson arrivals (seed {:#x}), {} requests/point over {} slots × {} cores; \
+         queue cap {}, max batch {}, dispatch {} cycles; probed mean service {:.0} cycles \
+         (capacity {:.1} req/Mcycle). latencies in cycles. \
+         pool: {} warm hits / {} cold builds; program cache: {} hits / {} misses / {} \
+         evictions; {} dispatches, {} batched jobs.",
+        opts.seed,
+        opts.requests,
+        cfg.slots,
+        cfg.cores,
+        cfg.queue_capacity,
+        cfg.max_batch,
+        cfg.dispatch_cycles,
+        run.mean_service_cycles,
+        run.capacity_per_mcycle,
+        pool.warm_hits,
+        pool.cold_builds,
+        cache.hits,
+        cache.misses,
+        cache.evictions,
+        batches,
+        batched_jobs,
+    ));
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::Variant;
+
+    fn tiny_cfg() -> ServiceConfig {
+        ServiceConfig { slots: 1, queue_capacity: 2, max_batch: 1, ..ServiceConfig::default() }
+    }
+
+    /// Immediate dispatch on an idle slot, queueing while busy, typed
+    /// rejection at capacity — the admission state machine end to end.
+    #[test]
+    fn admission_state_machine() {
+        let mut svc = Service::new(tiny_cfg());
+        let req = JobRequest::new("dot", Variant::SsrFrep, 256);
+        // Idle slot: dispatched, zero wait.
+        let a = svc.submit(0, req).unwrap();
+        assert!(matches!(a, Admission::Dispatched { .. }), "{a:?}");
+        // The slot is busy well past cycle 1: next two queue up.
+        assert!(matches!(svc.submit(1, req.with_seed(2)).unwrap(), Admission::Queued { .. }));
+        assert!(matches!(svc.submit(1, req.with_seed(3)).unwrap(), Admission::Queued { .. }));
+        // Queue (capacity 2) is full: typed rejection, nothing enqueued.
+        let r = svc.submit(1, req.with_seed(4)).unwrap();
+        assert_eq!(r, Admission::Rejected(RejectReason::QueueFull { capacity: 2 }));
+        assert_eq!(svc.queue_depth(), 2);
+        svc.drain().unwrap();
+        assert_eq!(svc.served().len(), 3);
+        assert_eq!(svc.rejections().len(), 1);
+        let s = svc.stats();
+        assert_eq!((s.offered, s.served, s.rejected), (4, 3, 1));
+        // Single slot: jobs ran strictly back to back.
+        let served = svc.served();
+        assert!(served.windows(2).all(|w| w[0].finish <= w[1].start));
+    }
+
+    /// Malformed requests reject with their typed reasons even when the
+    /// queue has room.
+    #[test]
+    fn typed_rejections_for_bad_requests() {
+        let mut svc = Service::new(ServiceConfig::default());
+        let bogus = JobRequest::new("nope", Variant::Ssr, 64);
+        assert_eq!(
+            svc.submit(0, bogus).unwrap(),
+            Admission::Rejected(RejectReason::UnknownKernel)
+        );
+        // fft has no shard plan: multi-cluster is unschedulable.
+        let unshardable = JobRequest::new("fft", Variant::Ssr, 64).with_clusters(2);
+        assert_eq!(
+            svc.submit(0, unshardable).unwrap(),
+            Admission::Rejected(RejectReason::Unshardable)
+        );
+        assert_eq!(svc.stats().rejected, 2);
+    }
+
+    /// Compatible back-to-back arrivals batch onto one dispatch; the
+    /// followers skip the dispatch overhead.
+    #[test]
+    fn batching_takes_the_compatible_prefix() {
+        let cfg = ServiceConfig {
+            slots: 1,
+            queue_capacity: 16,
+            max_batch: 4,
+            ..ServiceConfig::default()
+        };
+        let mut svc = Service::new(cfg);
+        let dot = JobRequest::new("dot", Variant::SsrFrep, 256);
+        // First job occupies the slot; three compatible jobs queue.
+        svc.submit(0, dot.with_seed(1)).unwrap();
+        for seed in 2..=4 {
+            svc.submit(1, dot.with_seed(seed)).unwrap();
+        }
+        svc.drain().unwrap();
+        let s = svc.stats();
+        assert_eq!(s.served, 4);
+        assert_eq!(s.batches, 2, "initial dispatch + one batched dispatch");
+        assert_eq!(s.batched_jobs, 3, "the queued trio shared one dispatch");
+        let followers: Vec<_> = svc.served().iter().filter(|j| j.batched).collect();
+        assert_eq!(followers.len(), 2);
+        // Followers start exactly at their predecessor's finish (no
+        // fresh dispatch overhead).
+        for w in svc.served().windows(2) {
+            if w[1].batched {
+                assert_eq!(w[1].start, w[0].finish);
+            }
+        }
+    }
+
+    /// The serving sweep is a pure function of its options.
+    #[test]
+    fn serving_sweep_is_deterministic() {
+        let opts = ServingOptions { requests: 12, rho: vec![0.5, 2.0], ..ServingOptions::smoke() };
+        let a = serving_sweep(&opts).unwrap();
+        let b = serving_sweep(&opts).unwrap();
+        assert_eq!(a, b);
+    }
+}

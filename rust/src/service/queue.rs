@@ -1,0 +1,219 @@
+//! Typed job requests and the bounded admission queue.
+//!
+//! A [`JobRequest`] names what to run — kernel, variant, problem size,
+//! cluster count and payload seed — never *how* (cores, cycle budget
+//! and batching policy are the serving [`crate::service::Service`]'s
+//! configuration). Admission control is a bounded FIFO: when the queue
+//! is at capacity a submission comes back as a typed [`RejectReason`]
+//! instead of growing the backlog without limit (open-loop load has no
+//! client-side flow control, so the queue *is* the backpressure).
+
+use std::collections::VecDeque;
+
+use crate::kernels::Variant;
+
+/// One typed kernel request, as a client would submit it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct JobRequest {
+    /// Registered kernel name (see [`crate::kernels::kernel_by_name`]).
+    pub kernel: &'static str,
+    pub variant: Variant,
+    /// Problem size (same meaning as [`crate::kernels::Params::n`]).
+    pub n: usize,
+    /// Clusters to shard across (1 = a single warm cluster; >1 runs a
+    /// per-request [`crate::system::System`], see
+    /// [`crate::kernels::Params::clusters`]).
+    pub clusters: usize,
+    /// Payload seed: the input data of the run, exactly
+    /// [`crate::kernels::Params::seed`] — a served job's result is
+    /// bit-identical to `run_kernel` with this seed.
+    pub seed: u64,
+}
+
+impl JobRequest {
+    /// A single-cluster request with the default payload seed (the same
+    /// default as [`crate::kernels::Params::new`]).
+    pub fn new(kernel: &'static str, variant: Variant, n: usize) -> JobRequest {
+        JobRequest { kernel, variant, n, clusters: 1, seed: 0x5EED_0001 }
+    }
+
+    /// Same request with an explicit payload seed.
+    pub fn with_seed(mut self, seed: u64) -> JobRequest {
+        self.seed = seed;
+        self
+    }
+
+    /// Same request sharded across `clusters` clusters.
+    pub fn with_clusters(mut self, clusters: usize) -> JobRequest {
+        assert!(clusters >= 1, "at least one cluster");
+        self.clusters = clusters;
+        self
+    }
+
+    /// The batch-compatibility shape: requests agreeing on all four run
+    /// the same program on the same cluster configuration, so the
+    /// scheduler may serve them back-to-back on one warm cluster
+    /// without a reload (payload seeds are free to differ).
+    pub fn shape(&self) -> (&'static str, Variant, usize, usize) {
+        (self.kernel, self.variant, self.n, self.clusters)
+    }
+}
+
+/// Why admission control turned a request away (typed, so clients can
+/// distinguish back-off-and-retry from fix-your-request).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The bounded queue is at capacity — back off and retry.
+    QueueFull {
+        /// The queue's configured capacity at rejection time.
+        capacity: usize,
+    },
+    /// The kernel name is not registered.
+    UnknownKernel,
+    /// `clusters > 1` was requested for a kernel without a shard plan
+    /// (see [`crate::kernels::shard::supports`]).
+    Unshardable,
+}
+
+/// One rejected submission: when, what, and why.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Rejection {
+    /// Arrival cycle of the rejected request.
+    pub at: u64,
+    pub request: JobRequest,
+    pub reason: RejectReason,
+}
+
+/// An admitted job waiting for a slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Pending {
+    /// Service-assigned job id (monotonic per service).
+    pub id: u64,
+    pub request: JobRequest,
+    /// Arrival cycle (virtual time).
+    pub arrival: u64,
+}
+
+/// Bounded FIFO admission queue. Jobs leave strictly in arrival order:
+/// [`JobQueue::pop_batch`] only extends a batch with the *consecutive*
+/// compatible prefix, so a compatible late arrival can never overtake
+/// an earlier incompatible one (FIFO fairness, pinned by
+/// `tests/service.rs`).
+#[derive(Debug, Default)]
+pub struct JobQueue {
+    q: VecDeque<Pending>,
+    capacity: usize,
+    peak_depth: usize,
+}
+
+impl JobQueue {
+    pub fn new(capacity: usize) -> JobQueue {
+        assert!(capacity >= 1, "queue capacity must be positive");
+        JobQueue { q: VecDeque::new(), capacity, peak_depth: 0 }
+    }
+
+    /// Admit `job`, or report [`RejectReason::QueueFull`] at capacity.
+    pub fn try_push(&mut self, job: Pending) -> Result<(), RejectReason> {
+        if self.q.len() >= self.capacity {
+            return Err(RejectReason::QueueFull { capacity: self.capacity });
+        }
+        self.q.push_back(job);
+        self.peak_depth = self.peak_depth.max(self.q.len());
+        Ok(())
+    }
+
+    /// Pop the head job plus the consecutive same-[`JobRequest::shape`]
+    /// prefix behind it, at most `max_batch` jobs total. Empty only
+    /// when the queue is empty.
+    pub fn pop_batch(&mut self, max_batch: usize) -> Vec<Pending> {
+        let mut batch = Vec::new();
+        let Some(head) = self.q.pop_front() else {
+            return batch;
+        };
+        let shape = head.request.shape();
+        batch.push(head);
+        while batch.len() < max_batch.max(1) {
+            match self.q.front() {
+                Some(next) if next.request.shape() == shape => {
+                    batch.push(self.q.pop_front().expect("front just checked"));
+                }
+                _ => break,
+            }
+        }
+        batch
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// High-water mark of the queue depth over this queue's lifetime.
+    pub fn peak_depth(&self) -> usize {
+        self.peak_depth
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(id: u64, kernel: &'static str, n: usize) -> Pending {
+        Pending { id, request: JobRequest::new(kernel, Variant::SsrFrep, n), arrival: id }
+    }
+
+    /// The queue admits up to capacity, then rejects with the typed
+    /// reason carrying that capacity.
+    #[test]
+    fn bounded_admission() {
+        let mut q = JobQueue::new(2);
+        assert!(q.try_push(job(1, "dot", 256)).is_ok());
+        assert!(q.try_push(job(2, "dot", 256)).is_ok());
+        assert_eq!(q.try_push(job(3, "dot", 256)), Err(RejectReason::QueueFull { capacity: 2 }));
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.peak_depth(), 2);
+        // Draining frees capacity again.
+        assert_eq!(q.pop_batch(1).len(), 1);
+        assert!(q.try_push(job(4, "dot", 256)).is_ok());
+    }
+
+    /// Batching takes only the consecutive compatible prefix: a
+    /// compatible job *behind* an incompatible one stays queued.
+    #[test]
+    fn batch_is_consecutive_prefix_only() {
+        let mut q = JobQueue::new(8);
+        q.try_push(job(1, "dot", 256)).unwrap();
+        q.try_push(job(2, "dot", 256)).unwrap();
+        q.try_push(job(3, "axpy", 256)).unwrap();
+        q.try_push(job(4, "dot", 256)).unwrap();
+        let batch = q.pop_batch(4);
+        assert_eq!(batch.iter().map(|j| j.id).collect::<Vec<_>>(), [1, 2]);
+        assert_eq!(q.pop_batch(4).iter().map(|j| j.id).collect::<Vec<_>>(), [3]);
+        assert_eq!(q.pop_batch(4).iter().map(|j| j.id).collect::<Vec<_>>(), [4]);
+        assert!(q.is_empty());
+    }
+
+    /// `max_batch` caps a compatible run; differing seeds don't break
+    /// compatibility (the shape ignores the payload).
+    #[test]
+    fn batch_respects_cap_and_ignores_seed() {
+        let mut q = JobQueue::new(8);
+        for id in 1..=5 {
+            let p = Pending {
+                id,
+                request: JobRequest::new("dot", Variant::SsrFrep, 256).with_seed(id),
+                arrival: id,
+            };
+            q.try_push(p).unwrap();
+        }
+        assert_eq!(q.pop_batch(3).len(), 3);
+        assert_eq!(q.pop_batch(3).len(), 2);
+    }
+}

@@ -632,3 +632,44 @@ fn table_rendering_byte_identical_across_jobs() {
     assert_eq!(serial, jobs2);
     assert_eq!(serial, jobs8);
 }
+
+// ---------------------------------------------------------------------
+// Serving layer (PR 8): served ≡ run_kernel, and a whole service run
+// is repeatable.
+// ---------------------------------------------------------------------
+
+/// A served job is the same simulation as a direct `run_kernel` with
+/// the request's parameters — warm slot pools and the service-private
+/// program cache must be bit-transparent — and re-serving the same
+/// arrival schedule reproduces every timestamp and statistic exactly.
+#[test]
+fn service_runs_are_bit_identical_to_run_kernel_and_repeatable() {
+    use snitch_sim::service::{params_for, JobRequest, Service, ServiceConfig};
+
+    let cfg = ServiceConfig { slots: 2, max_batch: 2, ..ServiceConfig::default() };
+    let arrivals: Vec<(u64, JobRequest)> = vec![
+        (0, JobRequest::new("dot", Variant::SsrFrep, 256).with_seed(11)),
+        (10, JobRequest::new("dot", Variant::SsrFrep, 256).with_seed(12)),
+        (20, JobRequest::new("axpy", Variant::Ssr, 256).with_seed(13)),
+        (30, JobRequest::new("relu", Variant::SsrFrep, 256).with_seed(14)),
+    ];
+
+    let serve = || {
+        let mut svc = Service::new(cfg);
+        svc.run_workload(&arrivals).expect("serve");
+        svc
+    };
+    let a = serve();
+    for j in a.served() {
+        let k = kernels::kernel_by_name(j.request.kernel).expect("registered kernel");
+        let fresh = kernels::run_kernel(k, j.request.variant, &params_for(&j.request, &cfg))
+            .expect("fresh run");
+        assert_eq!(j.cycles, fresh.cycles, "{:?}", j.request);
+        assert_eq!(j.max_err.to_bits(), fresh.max_err.to_bits(), "{:?}", j.request);
+    }
+
+    // Same schedule ⇒ identical per-job records and aggregate stats.
+    let b = serve();
+    assert_eq!(a.served(), b.served());
+    assert_eq!(a.stats(), b.stats());
+}

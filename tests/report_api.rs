@@ -9,8 +9,8 @@
 //! * **CSV/JSON well-formedness** — hand-rolled renderer output parses
 //!   with independent mini-parsers and round-trips the table structure.
 //! * **Session isolation** — two `Sweep` sessions with different `jobs`
-//!   never interfere (the old `set_jobs` global made every sweep in the
-//!   process share one width).
+//!   never interfere; width is per-session state with no process-global
+//!   fallback.
 //! * **Failure context** — a failing experiment reports its
 //!   (kernel, variant, n, cores) instead of panicking the pool.
 
@@ -24,7 +24,7 @@ use snitch_sim::kernels::{self, RunResult, Variant};
 use snitch_sim::vector;
 
 /// A session pinned to two workers: wide enough to exercise the pool,
-/// explicit so the global-shim test below cannot interfere.
+/// explicit so the machine's parallelism doesn't shape the test.
 fn sweep2() -> Sweep {
     Sweep::with_options(SweepOptions::new().jobs(2))
 }
@@ -643,25 +643,17 @@ fn csv_and_json_render_well_formed_and_round_trip() {
 // Session isolation, failure context, progress.
 // ---------------------------------------------------------------------
 
-#[allow(deprecated)]
-fn set_global_jobs(n: usize) {
-    snitch_sim::coordinator::set_jobs(n);
-}
-
 #[test]
 fn sweep_sessions_do_not_interfere() {
     let s1 = Sweep::with_options(SweepOptions::new().jobs(1));
     let s8 = Sweep::with_options(SweepOptions::new().jobs(8));
     assert_eq!(s1.jobs(), 1);
     assert_eq!(s8.jobs(), 8);
-    // The deprecated global shim feeds only auto-width (jobs: 0)
-    // sessions — explicit sessions are immune to it.
-    set_global_jobs(3);
-    assert_eq!(s1.jobs(), 1, "explicit width must ignore the global shim");
-    assert_eq!(s8.jobs(), 8, "explicit width must ignore the global shim");
-    assert_eq!(Sweep::new().jobs(), 3, "auto sessions inherit the CLI shim");
-    set_global_jobs(0);
+    // Auto-width (jobs: 0) resolves to the machine parallelism and
+    // never feeds back into explicit sessions.
     assert!(Sweep::new().jobs() >= 1);
+    assert_eq!(s1.jobs(), 1, "explicit width is per-session state");
+    assert_eq!(s8.jobs(), 8, "explicit width is per-session state");
     // Both sessions produce identical results on the same list.
     let exps = [
         Experiment::new("dot", Variant::Ssr, 256, 1),

@@ -1,0 +1,230 @@
+//! Serving-layer acceptance tests.
+//!
+//! * **Reproducibility** — the `serving_throughput` artifact is a pure
+//!   function of its options: two builds at a fixed seed render
+//!   byte-identical markdown and JSON; a different seed does not.
+//! * **Backpressure** — a saturated offered-load point (ρ > 1) against
+//!   a small bounded queue visibly rejects, with every rejection typed
+//!   `QueueFull` at the configured capacity, and offered load is
+//!   conserved (served + rejected + still-queued = offered).
+//! * **FIFO fairness** — admitted jobs start in arrival order even with
+//!   batching enabled; nothing starves (every admitted job completes).
+//! * **Result fidelity** — every served job's measured cycles and
+//!   `max_err` are bit-identical to a direct `run_kernel` with the same
+//!   `(kernel, variant, n, clusters, seed)`, including a multi-cluster
+//!   request through the System path.
+//! * **Registry integration** — `repro artifact serving_throughput`
+//!   resolves through `coordinator::artifacts` and builds the same
+//!   table the service module renders directly.
+
+use snitch_sim::coordinator::{artifacts, ArtifactOptions, Sweep};
+use snitch_sim::kernels::{self, kernel_by_name, Variant};
+use snitch_sim::service::{
+    params_for, serving_table, Admission, JobRequest, LoadGen, MixEntry, RejectReason, Service,
+    ServiceConfig, ServingOptions,
+};
+
+/// A small-but-real workload: 1 slot, tight queue, batching on.
+fn tight_cfg() -> ServiceConfig {
+    ServiceConfig { slots: 1, queue_capacity: 4, max_batch: 4, ..ServiceConfig::default() }
+}
+
+/// A cheap two-kernel mix for loadgen-driven tests.
+fn test_mix() -> Vec<MixEntry> {
+    vec![
+        MixEntry::new(3, "dot", Variant::SsrFrep, 256),
+        MixEntry::new(1, "axpy", Variant::Ssr, 256),
+    ]
+}
+
+// ---------------------------------------------------------------------
+// Reproducibility.
+// ---------------------------------------------------------------------
+
+/// Fixed seed ⇒ byte-identical serving table (markdown and JSON);
+/// different seed ⇒ different bytes. This is the artifact-level
+/// determinism contract of the whole serving stack: loadgen, admission,
+/// batching, the cycle-accurate service runs and the telemetry rollup.
+#[test]
+fn serving_table_is_byte_reproducible() {
+    let opts = ServingOptions { requests: 16, rho: vec![0.5, 2.0], ..ServingOptions::smoke() };
+    let a = serving_table(&opts).expect("serving sweep");
+    let b = serving_table(&opts).expect("serving sweep");
+    assert_eq!(a.to_markdown(), b.to_markdown(), "markdown must be byte-identical");
+    assert_eq!(a.to_json(), b.to_json(), "JSON must be byte-identical");
+
+    let reseeded = ServingOptions { seed: opts.seed ^ 1, ..opts };
+    let c = serving_table(&reseeded).expect("serving sweep");
+    assert_ne!(a.to_markdown(), c.to_markdown(), "the seed must actually steer the workload");
+}
+
+// ---------------------------------------------------------------------
+// Backpressure at saturation.
+// ---------------------------------------------------------------------
+
+/// Overdriving a single slot (ρ ≈ 4) against a 4-deep queue must
+/// reject, every rejection must be typed `QueueFull` at the configured
+/// capacity, and the demand ledger must balance.
+#[test]
+fn bounded_queue_rejects_at_saturation() {
+    let cfg = tight_cfg();
+    // Probe one service time, then offer ~4× the slot's capacity.
+    let probe = JobRequest::new("dot", Variant::SsrFrep, 256);
+    let k = kernel_by_name("dot").expect("registered kernel");
+    let service = kernels::run_kernel(k, probe.variant, &params_for(&probe, &cfg))
+        .expect("probe run")
+        .stats
+        .cycles as f64;
+    let mean_gap = service / 4.0;
+
+    let mut lg = LoadGen::new(0xBAC4, mean_gap, test_mix());
+    let mut svc = Service::new(cfg);
+    svc.run_workload(&lg.take(48)).expect("serve");
+
+    let s = svc.stats();
+    assert!(s.rejected > 0, "a 4x-overdriven slot must shed load: {s:?}");
+    assert!(s.served > 0, "admitted jobs still complete under overload");
+    assert_eq!(s.offered, s.served + s.rejected, "demand ledger must balance after drain");
+    assert_eq!(s.queue_depth_peak, cfg.queue_capacity, "overload fills the queue to its cap");
+    for r in svc.rejections() {
+        assert_eq!(
+            r.reason,
+            RejectReason::QueueFull { capacity: cfg.queue_capacity },
+            "saturation rejections are typed QueueFull: {r:?}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// FIFO fairness.
+// ---------------------------------------------------------------------
+
+/// Admitted jobs start in arrival order — batching may group a
+/// consecutive compatible prefix but never lets a late compatible job
+/// overtake an earlier incompatible one — and every admitted job is
+/// served (no starvation).
+#[test]
+fn fifo_order_and_no_starvation() {
+    let mut lg = LoadGen::new(0xF1F0, 50.0, test_mix());
+    let mut svc = Service::new(tight_cfg());
+    let arrivals = lg.take(24);
+    let mut admitted = Vec::new();
+    for &(at, req) in &arrivals {
+        match svc.submit(at, req).expect("submit") {
+            Admission::Dispatched { id } | Admission::Queued { id, .. } => admitted.push(id),
+            Admission::Rejected(_) => {}
+        }
+    }
+    svc.drain().expect("drain");
+
+    let served = svc.served();
+    assert_eq!(served.len(), admitted.len(), "every admitted job must be served");
+    let mut ids: Vec<u64> = served.iter().map(|j| j.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, admitted, "served exactly the admitted set");
+
+    // Ids are assigned in arrival order; on a single slot the start
+    // times must respect that order exactly.
+    for w in served.windows(2) {
+        assert!(
+            w[0].id < w[1].id && w[0].start <= w[1].start,
+            "FIFO violated: #{} (start {}) before #{} (start {})",
+            w[1].id,
+            w[1].start,
+            w[0].id,
+            w[0].start
+        );
+        assert!(w[0].finish <= w[1].start, "one slot serves strictly back to back");
+    }
+    // Sanity on the latency arithmetic.
+    for j in served {
+        assert!(j.start >= j.arrival, "{j:?}");
+        assert_eq!(j.latency(), j.queue_wait() + j.service_cycles, "{j:?}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Result fidelity.
+// ---------------------------------------------------------------------
+
+/// Every served job is bit-identical (measured cycles and max |error|)
+/// to a direct `run_kernel` with the same request parameters — warm
+/// pools and program caching must be performance-transparent.
+#[test]
+fn served_results_match_run_kernel_bitwise() {
+    let mut lg = LoadGen::new(0x51D5, 2000.0, test_mix());
+    let cfg = ServiceConfig { slots: 2, ..ServiceConfig::default() };
+    let mut svc = Service::new(cfg);
+    svc.run_workload(&lg.take(12)).expect("serve");
+    assert_eq!(svc.served().len(), 12);
+
+    for j in svc.served() {
+        let k = kernel_by_name(j.request.kernel).expect("registered kernel");
+        let fresh = kernels::run_kernel(k, j.request.variant, &params_for(&j.request, &cfg))
+            .expect("fresh run");
+        assert_eq!(j.cycles, fresh.cycles, "cycles must be bit-equal: {:?}", j.request);
+        assert_eq!(
+            j.max_err.to_bits(),
+            fresh.max_err.to_bits(),
+            "max_err must be bit-equal: {:?}",
+            j.request
+        );
+    }
+}
+
+/// A `clusters > 1` request runs through the System path and still
+/// matches `run_kernel` bit for bit; an unshardable kernel at
+/// `clusters > 1` is rejected before it can reach a slot.
+#[test]
+fn multi_cluster_requests_serve_through_the_system_path() {
+    let cfg = ServiceConfig { cores: 4, ..ServiceConfig::default() };
+    let mut svc = Service::new(cfg);
+    let sharded = JobRequest::new("axpy", Variant::Ssr, 256).with_clusters(2).with_seed(9);
+    assert!(matches!(
+        svc.submit(0, sharded).expect("submit"),
+        Admission::Dispatched { .. }
+    ));
+    svc.drain().expect("drain");
+
+    let j = &svc.served()[0];
+    assert_eq!(j.request.clusters, 2);
+    let k = kernel_by_name("axpy").expect("registered kernel");
+    let fresh =
+        kernels::run_kernel(k, Variant::Ssr, &params_for(&sharded, &cfg)).expect("fresh run");
+    assert_eq!(j.cycles, fresh.cycles);
+    assert_eq!(j.max_err.to_bits(), fresh.max_err.to_bits());
+    let sys = fresh.system.expect("clusters=2 runs the system layer");
+    assert_eq!(j.service_cycles, sys.total_cycles, "slot busy time is the System's whole run");
+
+    // Multi-cluster work builds per-run Systems: the warm pool and the
+    // service program cache must stay untouched.
+    let s = svc.stats();
+    assert_eq!(s.pool.warm_hits + s.pool.cold_builds, 0, "{s:?}");
+    assert_eq!(s.cache.hits + s.cache.misses, 0, "{s:?}");
+
+    // fft has no shard plan — typed rejection, not a scheduling error.
+    let r = svc.submit(1, JobRequest::new("fft", Variant::Ssr, 64).with_clusters(2));
+    assert_eq!(r.expect("submit"), Admission::Rejected(RejectReason::Unshardable));
+}
+
+// ---------------------------------------------------------------------
+// Registry integration.
+// ---------------------------------------------------------------------
+
+/// The artifact registry resolves `serving_throughput` and builds it
+/// through the standard `Artifact::build` path; `--size N` selects the
+/// smoke scale, and the build matches the module-level entry point
+/// byte for byte.
+#[test]
+fn serving_artifact_builds_through_the_registry() {
+    let a = artifacts::by_id("serving_throughput").expect("registered artifact");
+    assert!(a.experiments(&ArtifactOptions::default()).is_empty(), "no sweep experiments");
+    let opts = ArtifactOptions::default().with_size(16);
+    let table = a.build(&Sweep::new(), &opts).expect("registry build");
+    let direct = serving_table(&ServingOptions::smoke()).expect("direct build");
+    assert_eq!(table.to_markdown(), direct.to_markdown());
+    let md = table.to_markdown();
+    assert!(md.contains("serving throughput"), "{md}");
+    assert!(md.contains("offered ρ"), "{md}");
+    assert!(md.contains("warm hits") || md.contains("warm"), "{md}");
+}

@@ -804,6 +804,140 @@ fn render_pr8_json(
     s
 }
 
+// ---------------------------------------------------------------------
+// fault_resilience: the PR9 fault-injection grid — seeded faults at
+// every site (DMA stalls, interconnect starvation, barrier hangs, slot
+// failures) over the serving layer, degradation counters against the
+// clean baseline, every completed job verified bit-identical (the
+// BENCH_PR9.json record).
+// ---------------------------------------------------------------------
+
+/// Drive the fault grid the `fault_resilience` artifact runs (smoke:
+/// the reduced preset CI uses) and print per-cell degradation counters.
+/// Asserts the resilience physics on the way: demand is conserved at
+/// every cell, every completed job passed the bit-identity gate (the
+/// sweep itself errors otherwise), the clean baseline injects and
+/// quarantines nothing, and faulted cells that actually struck still
+/// serve work — degradation, not collapse.
+fn fault_resilience(smoke: bool) -> (service::FaultRun, service::FaultOptions, f64) {
+    let opts = if smoke {
+        service::FaultOptions::smoke()
+    } else {
+        service::FaultOptions::default()
+    };
+    let t = Instant::now();
+    let run = service::fault_sweep(&opts).expect("fault sweep");
+    let wall_ms = t.elapsed().as_secs_f64() * 1e3;
+    println!(
+        "[bench] faults: probed mean service {:.0} cycles, capacity {:.1} req/Mcycle, \
+         {} requests/cell, {wall_ms:.1} ms wall",
+        run.mean_service_cycles, run.capacity_per_mcycle, opts.requests,
+    );
+    for p in &run.points {
+        let s = &p.stats;
+        println!(
+            "[bench] faults/rate{:.2}%/rho{:.2}: {} served ({} verified) / {} rejected / \
+             {} missed / {} failed; {} retries, {} quarantines, {} faults injected \
+             ({} jobs survived one), p99 {} cycles",
+            f64::from(p.rate) * 100.0 / 65536.0,
+            p.rho,
+            s.served,
+            p.verified,
+            s.rejected,
+            s.deadline_misses,
+            s.failed,
+            s.retries,
+            s.quarantines,
+            s.faults_injected,
+            s.faults_survived,
+            s.latency.p99,
+        );
+        assert!(s.is_conserved(), "faults/rate{}/rho{}: demand conservation", p.rate, p.rho);
+        assert_eq!(p.verified, s.served, "faults/rate{}/rho{}: verified = served", p.rate, p.rho);
+        if p.rate == 0 {
+            assert_eq!(
+                s.faults_injected + s.quarantines + s.retries + s.failed,
+                0,
+                "faults: the clean baseline must not inject, quarantine, retry or fail"
+            );
+        } else if s.faults_injected > 0 {
+            assert!(s.served > 0, "faults: degradation must be graceful, not a collapse");
+        }
+    }
+    (run, opts, wall_ms)
+}
+
+/// Hand-rolled JSON for the fault-resilience record (`BENCH_PR9.json`):
+/// the capacity probe plus one row per (fault rate, ρ) grid cell with
+/// the degradation and verification counters.
+fn render_pr9_json(
+    run: &service::FaultRun,
+    opts: &service::FaultOptions,
+    wall_ms: f64,
+) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"sim_hotpath/fault_resilience\",\n");
+    s.push_str("  \"regenerate\": \"cargo bench --bench sim_hotpath\",\n");
+    s.push_str(
+        "  \"baseline\": \"the rate-0 cells: the same seeded Poisson workload over the same \
+         serving config with a fully disabled fault plan, same process; every served result \
+         (all cells) verified bit-identical to a clean run_kernel\",\n",
+    );
+    s.push_str(&format!("  \"seed\": {},\n", opts.seed));
+    s.push_str(&format!("  \"requests_per_cell\": {},\n", opts.requests));
+    let cfg = &opts.config;
+    s.push_str(&format!(
+        "  \"config\": {{\"slots\": {}, \"cores\": {}, \"queue_capacity\": {}, \
+         \"max_batch\": {}, \"deadline_cycles\": {}, \"max_retries\": {}, \
+         \"retry_backoff_cycles\": {}, \"backoff_cap_cycles\": {}, \"probe_cycles\": {}}},\n",
+        cfg.slots,
+        cfg.cores,
+        cfg.queue_capacity,
+        cfg.max_batch,
+        cfg.deadline_cycles.map_or("null".to_string(), |d| d.to_string()),
+        cfg.max_retries,
+        cfg.retry_backoff_cycles,
+        cfg.backoff_cap_cycles,
+        cfg.probe_cycles,
+    ));
+    s.push_str(&format!(
+        "  \"probe\": {{\"mean_service_cycles\": {:.1}, \"capacity_req_per_mcycle\": {:.3}}},\n",
+        run.mean_service_cycles, run.capacity_per_mcycle,
+    ));
+    s.push_str("  \"cells\": [\n");
+    for (i, p) in run.points.iter().enumerate() {
+        let st = &p.stats;
+        s.push_str(&format!(
+            "    {{\"rate_per_65536\": {}, \"rate_pct\": {:.3}, \"rho\": {:.2}, \
+             \"served\": {}, \"verified\": {}, \"rejected\": {}, \"deadline_misses\": {}, \
+             \"failed\": {}, \"retries\": {}, \"quarantines\": {}, \"faults_injected\": {}, \
+             \"faults_survived\": {}, \"latency_p50\": {}, \"latency_p99\": {}, \
+             \"occupancy\": {:.4}}}{}\n",
+            p.rate,
+            f64::from(p.rate) * 100.0 / 65536.0,
+            p.rho,
+            st.served,
+            p.verified,
+            st.rejected,
+            st.deadline_misses,
+            st.failed,
+            st.retries,
+            st.quarantines,
+            st.faults_injected,
+            st.faults_survived,
+            st.latency.p50,
+            st.latency.p99,
+            st.occupancy(),
+            if i + 1 < run.points.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str(&format!("  \"total\": {{\"wall_ms\": {wall_ms:.3}}}\n"));
+    s.push_str("}\n");
+    s
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     let smoke = args.iter().any(|a| a == "--smoke");
@@ -826,6 +960,7 @@ fn main() {
         cycles_per_sec(true, None);
         cluster_scaling(true);
         serving(true);
+        fault_resilience(true);
         return;
     }
     hotpath();
@@ -843,4 +978,8 @@ fn main() {
     let json = render_pr8_json(&run, &opts, wall_ms);
     std::fs::write("BENCH_PR8.json", json).expect("write BENCH_PR8.json");
     println!("[bench] wrote BENCH_PR8.json");
+    let (run, opts, wall_ms) = fault_resilience(false);
+    let json = render_pr9_json(&run, &opts, wall_ms);
+    std::fs::write("BENCH_PR9.json", json).expect("write BENCH_PR9.json");
+    println!("[bench] wrote BENCH_PR9.json");
 }

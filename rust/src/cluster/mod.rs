@@ -36,6 +36,7 @@ use crate::isa::Instr;
 use crate::mem::{ExtIf, ExtMemory, MemPort, Tcdm, IMEM_BASE, IMEM_SIZE, TCDM_BASE};
 use crate::muldiv::MulDivUnit;
 use crate::sim::engine::tick_all_active;
+use crate::sim::fault::{CoreHang, HangKind, HangReport};
 use crate::sim::{ClockDomain, Cycle, Tick};
 
 pub use cc::CoreComplex;
@@ -441,24 +442,86 @@ impl Cluster {
     }
 
     /// Run until completion or `max_cycles`. Returns the cycle count.
+    /// String-error convenience wrapper around [`Cluster::run_watchdog`].
     pub fn run(&mut self, max_cycles: u64) -> Result<u64, String> {
+        self.run_watchdog(max_cycles).map_err(|h| h.to_string())
+    }
+
+    /// Run until completion, budget expiry, or a detected barrier
+    /// deadlock, with a typed [`HangReport`] diagnosis on failure.
+    ///
+    /// The budget check runs first each iteration (before the deadlock
+    /// probe and the cycle), so expiry fires at the exact same `now` as
+    /// the pre-watchdog loop did — the determinism suite holds the
+    /// resulting diagnostics bit-identical across the direct / ff-off /
+    /// ff-on paths. The deadlock probe is O(1) (a flag and two counters)
+    /// and can only fire when fault injection wedged the barrier
+    /// ([`Peripherals::hang_barrier`]), so un-faulted runs take the exact
+    /// historical path.
+    pub fn run_watchdog(&mut self, max_cycles: u64) -> Result<u64, Box<HangReport>> {
         self.ff_max_cycles = max_cycles;
         while !self.done() {
             if self.now >= max_cycles {
-                let stuck: Vec<String> = self
-                    .ccs
-                    .iter()
-                    .filter(|cc| !cc.core.halted)
-                    .map(|cc| format!("core{} pc={:#x}", cc.core.hartid, cc.core.pc))
-                    .collect();
-                return Err(format!(
-                    "cluster did not finish within {max_cycles} cycles; running: {}",
-                    stuck.join(", ")
-                ));
+                return Err(Box::new(self.hang_report(HangKind::BudgetExpired, max_cycles)));
+            }
+            if self.barrier_deadlocked() {
+                return Err(Box::new(self.hang_report(HangKind::BarrierDeadlock, max_cycles)));
             }
             self.cycle();
         }
         Ok(self.now)
+    }
+
+    /// True when fault injection wedged the barrier release and every
+    /// live core is parked on it — the cluster can never make progress
+    /// again, so the watchdog may fire without burning the whole budget.
+    pub fn barrier_deadlocked(&self) -> bool {
+        if !self.periph.hang_barrier {
+            return false;
+        }
+        let active = self.ccs.iter().filter(|cc| !cc.core.halted).count();
+        active > 0 && self.periph.barrier_waiters == active
+    }
+
+    /// Snapshot the cluster's live state into a typed [`HangReport`]
+    /// (cluster scope; the `System` watchdog adds stage/cluster/DMA
+    /// context on top).
+    pub fn hang_report(&self, kind: HangKind, budget: u64) -> HangReport {
+        HangReport {
+            kind,
+            at: self.now,
+            budget,
+            stage: None,
+            cluster: None,
+            cores: self.core_hangs(),
+            barrier_waiters: self.periph.barrier_waiters,
+            tcdm_busy: self.tcdm.active(),
+            ext_pending: self.ext.active(),
+            dma_busy: None,
+        }
+    }
+
+    /// Per-core snapshots of every non-halted core, in hartid order:
+    /// pc, instret, FREP sequencer position, and what (if anything) the
+    /// core is parked on.
+    pub(crate) fn core_hangs(&self) -> Vec<CoreHang> {
+        self.ccs
+            .iter()
+            .filter(|cc| !cc.core.halted)
+            .map(|cc| CoreHang {
+                hartid: cc.core.hartid,
+                pc: cc.core.pc,
+                instret: cc.core.instret,
+                seq: if cc.seq.idle() { None } else { Some((cc.seq.inst_idx, cc.seq.iter)) },
+                waiting: if cc.barrier_wait.is_some() {
+                    "barrier"
+                } else if cc.tile_wait.is_some() {
+                    "tile"
+                } else {
+                    "running"
+                },
+            })
+            .collect()
     }
 
     /// True when at least one core is live and every live (non-halted)

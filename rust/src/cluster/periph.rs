@@ -20,11 +20,23 @@ pub struct Peripherals {
     pub barrier_waiters: usize,
     /// Two scratch registers (software use).
     pub scratch: [u32; 2],
+    /// Fault injection (`sim::fault`): when set, the barrier release in
+    /// [`settle`] is wedged — parked cores never return, modeling a
+    /// permanently hung cluster. Detected by `Cluster::barrier_deadlocked`
+    /// and reported as a typed `HangReport`. Cleared by `Peripherals::new`
+    /// (so `Cluster::reset` always recovers a quarantined slot's pool).
+    pub hang_barrier: bool,
 }
 
 impl Peripherals {
     pub fn new(num_cores: usize) -> Peripherals {
-        Peripherals { num_cores, pending_wake: 0, barrier_waiters: 0, scratch: [0; 2] }
+        Peripherals {
+            num_cores,
+            pending_wake: 0,
+            barrier_waiters: 0,
+            scratch: [0; 2],
+            hang_barrier: false,
+        }
     }
 
     /// True when [`settle`] could change any state this cycle (the
@@ -60,7 +72,7 @@ pub fn settle(cl: &mut Cluster) {
     let active = cl.ccs.iter().filter(|cc| !cc.core.halted).count();
     let waiting = cl.ccs.iter().filter(|cc| cc.barrier_wait.is_some()).count();
     debug_assert_eq!(waiting, cl.periph.barrier_waiters, "barrier waiter count out of sync");
-    if active > 0 && waiting == active {
+    if active > 0 && waiting == active && !cl.periph.hang_barrier {
         for cc in &mut cl.ccs {
             if let Some(rd) = cc.barrier_wait.take() {
                 cc.wb_queue.push_back((rd, 0));

@@ -155,7 +155,7 @@ const TITLE_VALIDATE: &str = "golden validation (simulated vs AOT JAX/Pallas via
 const TITLE_CLUSTER_SCALING: &str =
     "cluster scaling — sharded kernels across {1,2,4,8} clusters (8 cores each)";
 
-static REGISTRY: [Artifact; 15] = [
+static REGISTRY: [Artifact; 16] = [
     sweep_artifact("figure1", TITLE_FIGURE1, no_experiments, figure1_render),
     sweep_artifact("table1", TITLE_TABLE1, table1_experiments, table1_render),
     sweep_artifact("table2", TITLE_TABLE2, table2_experiments, table2_render),
@@ -183,6 +183,14 @@ static REGISTRY: [Artifact; 15] = [
         build_with: Some(serving_build),
     },
     Artifact {
+        id: "fault_resilience",
+        title: crate::service::FAULT_TITLE,
+        exps: no_experiments,
+        rend: fault_render,
+        pre: no_preflight,
+        build_with: Some(fault_build),
+    },
+    Artifact {
         id: "validate",
         title: TITLE_VALIDATE,
         exps: validate_exps,
@@ -204,6 +212,20 @@ fn serving_build(_sweep: &Sweep, opts: &ArtifactOptions) -> crate::Result<Table>
 /// experiment results to render from, so this rebuilds at default scale.
 fn serving_render(_runs: &[RunResult]) -> crate::Result<Table> {
     serving_build(&Sweep::new(), &ArtifactOptions::default())
+}
+
+/// Build the fault-resilience artifact: deterministic fault injection
+/// over the serving layer's event loop, with every completed job's
+/// result verified bit-identical to a clean `run_kernel` (see
+/// [`crate::service::resilience`]). `--size N` selects the smoke scale.
+fn fault_build(_sweep: &Sweep, opts: &ArtifactOptions) -> crate::Result<Table> {
+    crate::service::fault_table(&crate::service::FaultOptions::for_artifact(opts.size))
+}
+
+/// Render hook for registry uniformity (same shape as
+/// [`serving_render`]): rebuilds at default scale.
+fn fault_render(_runs: &[RunResult]) -> crate::Result<Table> {
+    fault_build(&Sweep::new(), &ArtifactOptions::default())
 }
 
 /// All artifacts, in the paper's presentation order.

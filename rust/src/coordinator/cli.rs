@@ -37,7 +37,13 @@ COMMANDS:
                             across {1,2,4,8} clusters of a System;
                             `serving_throughput` drives the serving
                             layer with open-loop Poisson load and
-                            reports latency/occupancy per load point)
+                            reports latency/occupancy per load point;
+                            `fault_resilience` injects seeded faults —
+                            DMA stalls, interconnect starvation, hangs,
+                            slot failures — and reports retries,
+                            quarantines and deadline misses, verifying
+                            every completed job bit-identical to a
+                            clean run_kernel)
     all                     regenerate every table and figure
     table <1|2|3|4>         regenerate a paper table
     figure <1|9|10|11|12|13|14|15|16>

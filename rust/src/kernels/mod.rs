@@ -66,6 +66,7 @@ use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::asm::Program;
 use crate::cluster::Cluster;
+use crate::sim::fault::{FaultPlan, HangReport};
 use crate::sim::proptest::Rng;
 
 /// Kernel variant (Table 1 / Figs. 9, 13 rows).
@@ -127,6 +128,14 @@ pub struct Params {
     /// problems — the benchmark and tests use it to exercise multi-tile
     /// schedules at small `n`. Ignored on single-cluster legacy runs.
     pub tile_elems: Option<usize>,
+    /// Deterministic fault injection ([`crate::sim::fault`]): DMA stalls
+    /// and interconnect starvation on System runs. Disabled by default;
+    /// a disabled plan is provably inert (zero RNG draws).
+    pub fault: FaultPlan,
+    /// Fault injection: wedge the hardware-barrier release for this run
+    /// (a modeled permanent cluster hang). The watchdog converts it into
+    /// a typed [`HangReport`] instead of burning the whole cycle budget.
+    pub inject_barrier_hang: bool,
 }
 
 impl Params {
@@ -140,6 +149,8 @@ impl Params {
             clusters: 1,
             fast_forward: true,
             tile_elems: None,
+            fault: FaultPlan::disabled(),
+            inject_barrier_hang: false,
         }
     }
 
@@ -176,7 +187,57 @@ impl Params {
         self.tile_elems = Some(tile_elems);
         self
     }
+
+    /// Same parameters with a fault-injection plan
+    /// ([`crate::sim::fault::FaultPlan`]) for the run.
+    pub fn with_faults(mut self, fault: FaultPlan) -> Params {
+        self.fault = fault;
+        self
+    }
+
+    /// Same parameters with the injected permanent barrier hang armed
+    /// (see [`Params::inject_barrier_hang`]).
+    pub fn with_barrier_hang(mut self, hang: bool) -> Params {
+        self.inject_barrier_hang = hang;
+        self
+    }
 }
+
+/// Typed outcome of a failed kernel run: a watchdog [`HangReport`] (the
+/// serving layer quarantines the slot and retries on these) or any other
+/// failure carried as the legacy error string. `Display` reproduces the
+/// exact strings [`run_kernel`] always returned, so string-matching
+/// callers are unaffected.
+#[derive(Debug)]
+pub enum RunError {
+    /// The run hung: `max_cycles` expired or an injected barrier
+    /// deadlock was detected. `context` is the usual
+    /// `"{kernel}/{variant} n={n}"` prefix.
+    Hang { context: String, report: Box<HangReport> },
+    /// Setup/plan/check failure (the legacy error string, verbatim).
+    Failed(String),
+}
+
+impl RunError {
+    /// The hang diagnosis, when this failure was a hang.
+    pub fn hang(&self) -> Option<&HangReport> {
+        match self {
+            RunError::Hang { report, .. } => Some(report),
+            RunError::Failed(_) => None,
+        }
+    }
+}
+
+impl std::fmt::Display for RunError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RunError::Hang { context, report } => write!(f, "{context}: {report}"),
+            RunError::Failed(s) => f.write_str(s),
+        }
+    }
+}
+
+impl std::error::Error for RunError {}
 
 /// Input/output arrays for golden-model validation.
 pub struct KernelIo {
@@ -446,17 +507,23 @@ pub fn config_for(
 }
 
 /// Simulate and check one kernel on an already-loaded cluster (the common
-/// tail of the fresh and pooled paths).
+/// tail of the fresh and pooled paths). A hang surfaces as the typed
+/// [`RunError::Hang`]; the wedged cluster is safe to pool — the next
+/// [`Cluster::reset`] rebuilds the peripherals, clearing the injected
+/// hang flag along with everything else.
 fn simulate(
     cl: &mut Cluster,
     k: &KernelDef,
     variant: Variant,
     params: &Params,
-) -> Result<(crate::cluster::ClusterStats, f64), String> {
+) -> Result<(crate::cluster::ClusterStats, f64), RunError> {
     (k.setup)(cl, params);
-    cl.run(params.max_cycles)
-        .map_err(|e| format!("{}/{:?} n={}: {e}", k.name, variant, params.n))?;
-    let max_err = (k.check)(cl, params)?;
+    cl.periph.hang_barrier = params.inject_barrier_hang;
+    cl.run_watchdog(params.max_cycles).map_err(|report| RunError::Hang {
+        context: format!("{}/{:?} n={}", k.name, variant, params.n),
+        report,
+    })?;
+    let max_err = (k.check)(cl, params).map_err(RunError::Failed)?;
     Ok((cl.stats(), max_err))
 }
 
@@ -489,8 +556,19 @@ pub fn run_kernel(
     variant: Variant,
     params: &Params,
 ) -> Result<RunResult, String> {
+    try_run_kernel(k, variant, params).map_err(|e| e.to_string())
+}
+
+/// [`run_kernel`] with the typed error: a watchdog trip comes back as
+/// [`RunError::Hang`] carrying the full [`HangReport`], which the serving
+/// layer uses to quarantine the slot instead of string-matching.
+pub fn try_run_kernel(
+    k: &KernelDef,
+    variant: Variant,
+    params: &Params,
+) -> Result<RunResult, RunError> {
     if params.clusters > 1 {
-        return crate::system::run_kernel_system(k, variant, params);
+        return crate::system::try_run_kernel_system(k, variant, params);
     }
     let prog = cached_program(k, variant, params);
     let mut cl = Cluster::new(config_for(k, variant, params));
@@ -570,7 +648,7 @@ pub fn run_kernel_pooled(
         return run_kernel(k, variant, params);
     }
     let prog = cached_program(k, variant, params);
-    run_pooled_loaded(pool, prog, k, variant, params)
+    run_pooled_loaded(pool, prog, k, variant, params).map_err(|e| e.to_string())
 }
 
 /// [`run_kernel_pooled`] with programs served from a caller-owned
@@ -585,8 +663,21 @@ pub fn run_kernel_pooled_with_cache(
     variant: Variant,
     params: &Params,
 ) -> Result<RunResult, String> {
+    try_run_kernel_pooled_with_cache(pool, cache, k, variant, params).map_err(|e| e.to_string())
+}
+
+/// [`run_kernel_pooled_with_cache`] with the typed error (the serving
+/// layer's dispatch path — it needs the [`HangReport`] to drive slot
+/// quarantine, not a rendered string).
+pub fn try_run_kernel_pooled_with_cache(
+    pool: &mut ClusterPool,
+    cache: &mut ProgramCache,
+    k: &KernelDef,
+    variant: Variant,
+    params: &Params,
+) -> Result<RunResult, RunError> {
     if params.keep_cluster || params.clusters > 1 {
-        return run_kernel(k, variant, params);
+        return try_run_kernel(k, variant, params);
     }
     let prog = cache.program_for(k, variant, params);
     run_pooled_loaded(pool, prog, k, variant, params)
@@ -600,7 +691,7 @@ fn run_pooled_loaded(
     k: &KernelDef,
     variant: Variant,
     params: &Params,
-) -> Result<RunResult, String> {
+) -> Result<RunResult, RunError> {
     let cfg = config_for(k, variant, params);
     let ClusterPool { clusters, stats } = pool;
     let cl = match clusters.entry(cfg) {
@@ -631,6 +722,22 @@ pub fn working_set_bytes(name: &str, n: usize) -> u32 {
         "knn" => 8 * 5 * n,
         "montecarlo" => 16 * n + 0x400,
         _ => 8 * 3 * n, // vectors
+    }
+}
+
+/// [`working_set_bytes`] with overflow-checked arithmetic in `u64` —
+/// `None` means the size does not even fit the estimate, which admission
+/// control treats as an oversized request rather than wrapping silently
+/// (the `u32` estimator above would).
+pub fn working_set_checked(name: &str, n: usize) -> Option<u64> {
+    let n = n as u64;
+    match name {
+        "dgemm" => n.checked_mul(n)?.checked_mul(24),
+        "conv2d" => n.checked_mul(n)?.checked_mul(16)?.checked_add(8 * 49),
+        "fft" => n.checked_mul(24),
+        "knn" => n.checked_mul(40),
+        "montecarlo" => n.checked_mul(16)?.checked_add(0x400),
+        _ => n.checked_mul(24), // vectors
     }
 }
 

@@ -129,7 +129,12 @@ pub fn plan(k: &KernelDef, p: &Params, clusters: usize) -> Result<ShardPlan, Str
             SUPPORTED.join(", ")
         ));
     }
-    assert!(clusters >= 1, "a plan needs at least one cluster");
+    if clusters == 0 || p.cores == 0 {
+        return Err(format!(
+            "a plan needs at least one cluster and one core (got clusters={clusters} cores={})",
+            p.cores
+        ));
+    }
     let n = p.n;
     let total_cores = clusters * p.cores;
     if n < total_cores {
@@ -291,7 +296,12 @@ pub fn plan_tiles(k: &KernelDef, p: &Params, clusters: usize) -> Result<TilePlan
             SUPPORTED.join(", ")
         ));
     }
-    assert!(clusters >= 1, "a plan needs at least one cluster");
+    if clusters == 0 || p.cores == 0 {
+        return Err(format!(
+            "a plan needs at least one cluster and one core (got clusters={clusters} cores={})",
+            p.cores
+        ));
+    }
     let n = p.n;
     let mut tcdm_size = crate::cluster::ClusterConfig::with_cores(p.cores).tcdm_size;
     if tile_capacity(k.name, n, tcdm_size) == 0 {

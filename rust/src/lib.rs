@@ -35,9 +35,12 @@
 //! * [`sim`] — the cycle engine ([`sim::Tick`] components scheduled by a
 //!   deterministic [`sim::ClockDomain`] phase pass, with per-phase
 //!   activity gates so quiescent phases are skipped — provably
-//!   unobservably; see `DESIGN.md` §"Performance") and the
+//!   unobservably; see `DESIGN.md` §"Performance"), the
 //!   instruction-level trace infrastructure ([`sim::TraceSink`]: off,
-//!   unbounded, or ring-buffered per experiment).
+//!   unbounded, or ring-buffered per experiment), and deterministic
+//!   fault injection ([`sim::FaultPlan`]: seeded DMA-stall /
+//!   interconnect-starvation / hang / slot-failure streams) with typed
+//!   watchdog diagnostics ([`sim::HangReport`]).
 //! * [`energy`] — calibrated event-energy, power, and kGE area models.
 //! * [`vector`] — an Ara-like vector-lane timing model (Table 3 comparator).
 //! * [`kernels`] — the paper's eight microkernels in three variants
@@ -59,7 +62,11 @@
 //!   scheduler batching compatible requests onto warm
 //!   [`kernels::ClusterPool`] slots, a seeded open-loop Poisson load
 //!   generator ([`service::LoadGen`]) and exact latency telemetry —
-//!   surfaced as the `serving_throughput` artifact.
+//!   surfaced as the `serving_throughput` artifact — plus the
+//!   resilience layer ([`service::resilience`]): per-job deadlines,
+//!   bounded retries, health-probe slot quarantine, and the
+//!   `fault_resilience` artifact verifying that injected faults delay
+//!   served work but never corrupt it.
 //! * [`coordinator`] — the typed evaluation API: an artifact registry
 //!   ([`coordinator::artifacts`]) declaring every table/figure of the
 //!   paper's evaluation as an experiment list + renderer, typed result

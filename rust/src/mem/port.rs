@@ -190,12 +190,30 @@ pub struct Interconnect {
     /// payload). `quiet()` — the O(1) half of the System's `xbar`
     /// activity gate — is `inflight == 0`.
     inflight: u64,
+    /// Fault injection (`sim::fault`): when present, each routing pass
+    /// may open a grant-starvation window (a drawn span of cycles in
+    /// which queued requests stay queued; responses still deliver).
+    /// `None` — the default and any disabled plan — leaves `route` on
+    /// the exact historical path with zero RNG draws.
+    pub fault: Option<crate::sim::fault::FaultStream>,
+    /// End of the current injected starvation window (exclusive).
+    starved_until: u64,
+    /// Injected starvation windows so far (telemetry).
+    pub starvations: u64,
 }
 
 impl Interconnect {
     pub fn new(grants_per_cycle: usize) -> Interconnect {
         assert!(grants_per_cycle >= 1);
-        Interconnect { rr: 0, grants_per_cycle, grants: 0, inflight: 0 }
+        Interconnect {
+            rr: 0,
+            grants_per_cycle,
+            grants: 0,
+            inflight: 0,
+            fault: None,
+            starved_until: 0,
+            starvations: 0,
+        }
     }
 
     /// No granted request is awaiting delivery. A routing pass can still
@@ -239,6 +257,20 @@ impl Interconnect {
                 }
             }
         }
+        // Fault injection: inside a starvation window queued requests
+        // stay queued (responses above still delivered — the window
+        // models a wedged grant channel, not a dead link). One draw per
+        // routing pass opens a new window.
+        if let Some(f) = self.fault.as_mut() {
+            if now >= self.starved_until && f.strike() {
+                self.starvations += 1;
+                self.starved_until = now + f.span().max(1);
+            }
+            if now < self.starved_until {
+                self.rr = (self.rr + 1) % n;
+                return;
+            }
+        }
         let mut granted = 0usize;
         for off in 0..n {
             if granted >= self.grants_per_cycle {
@@ -266,6 +298,9 @@ impl Interconnect {
         self.rr = 0;
         self.grants = 0;
         self.inflight = 0;
+        self.fault = None;
+        self.starved_until = 0;
+        self.starvations = 0;
     }
 }
 

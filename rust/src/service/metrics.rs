@@ -78,9 +78,34 @@ pub struct ServiceStats {
     pub pool: PoolStats,
     /// The service-private program cache's hit/miss/eviction counters.
     pub cache: CacheStats,
+    /// Retry dispatches scheduled after failed attempts (each job gets
+    /// at most [`crate::service::ServiceConfig::max_retries`]).
+    pub retries: u64,
+    /// Jobs dropped because their dispatch would have started past the
+    /// per-job deadline — never run, the degradation is graceful (see
+    /// [`crate::service::ServiceConfig::deadline_cycles`]).
+    pub deadline_misses: u64,
+    /// Jobs that exhausted their retries and permanently failed.
+    pub failed: u64,
+    /// Slot quarantines entered (a hang on the slot or an injected slot
+    /// failure; the slot re-admits after its health-probe window).
+    pub quarantines: u64,
+    /// Service-level faults injected this run (hang coins and
+    /// slot-failure coins that struck; DMA / interconnect faults are
+    /// counted inside the engines they perturb).
+    pub faults_injected: u64,
+    /// Jobs served successfully after at least one failed attempt.
+    pub faults_survived: u64,
 }
 
 impl ServiceStats {
+    /// Demand conservation after a drain: everything offered is either
+    /// served, rejected, deadline-missed or permanently failed. (Mid-run
+    /// this under-counts by the jobs still queued or retrying.)
+    pub fn is_conserved(&self) -> bool {
+        self.offered == self.served + self.rejected + self.deadline_misses + self.failed
+    }
+
     /// Rejected fraction of offered load (0 when nothing was offered).
     pub fn reject_rate(&self) -> f64 {
         if self.offered == 0 {

@@ -23,6 +23,12 @@
 //! * [`loadgen`] — seeded Poisson arrivals over a weighted kernel mix.
 //! * [`metrics`] — exact order-statistics latency summaries and the
 //!   [`ServiceStats`] roll-up (occupancy, reject rate, reuse counters).
+//! * [`resilience`] — the `fault_resilience` sweep: deterministic fault
+//!   injection ([`crate::sim::fault::FaultPlan`]) over the serving
+//!   layer, with per-job deadlines, bounded exponential-backoff
+//!   retries, and health-probe slot quarantine providing graceful
+//!   degradation (every completed job still bit-identical to a clean
+//!   `run_kernel`).
 //!
 //! Served results are bit-identical to [`crate::kernels::run_kernel`]
 //! for the same `(kernel, variant, n, clusters, seed)` — slots run the
@@ -46,11 +52,20 @@ pub use loadgen::{LoadGen, MixEntry};
 pub use metrics::{summarize, LatencySummary, ServiceStats};
 pub use queue::{JobQueue, JobRequest, Pending, RejectReason, Rejection};
 
+pub mod resilience;
+
+pub use resilience::{
+    fault_mix, fault_sweep, fault_table, FaultOptions, FaultPoint, FaultRun, FAULT_TITLE,
+};
+
+use std::collections::VecDeque;
+
 use crate::coordinator::report::{Table, Value};
 use crate::kernels::{
-    self, kernel_by_name, CacheStats, ClusterPool, Params, PoolStats, ProgramCache,
+    self, kernel_by_name, CacheStats, ClusterPool, Params, PoolStats, ProgramCache, RunError,
     DEFAULT_MAX_CYCLES, PROGRAM_CACHE_CAP,
 };
+use crate::sim::fault::{FaultPlan, FaultStream};
 
 /// Serving-side configuration: how the service runs jobs (the *what*
 /// lives in each [`JobRequest`]).
@@ -72,6 +87,28 @@ pub struct ServiceConfig {
     pub dispatch_cycles: u64,
     /// Per-job simulation budget ([`Params::max_cycles`]).
     pub max_cycles: u64,
+    /// Per-job virtual-time deadline measured from arrival: a job whose
+    /// dispatch would *start* later than `arrival + deadline` is
+    /// dropped as a deadline miss instead of running uselessly late.
+    /// `None` (the default) disables deadlines.
+    pub deadline_cycles: Option<u64>,
+    /// Failed attempts a job may retry before it permanently fails.
+    pub max_retries: u32,
+    /// Base retry backoff: attempt `k` waits `retry_backoff_cycles·2ᵏ`
+    /// cycles (capped by [`ServiceConfig::backoff_cap_cycles`]) before
+    /// it is eligible to dispatch again.
+    pub retry_backoff_cycles: u64,
+    /// Upper bound of the exponential retry backoff.
+    pub backoff_cap_cycles: u64,
+    /// Health-probe window of a quarantined slot: after a hang (or an
+    /// injected slot failure) the slot serves nothing for this many
+    /// cycles, then re-admits — its next dispatch rewinds the warm pool
+    /// via [`crate::cluster::Cluster::reset`], which rebuilds the
+    /// peripherals and clears any injected hang with them.
+    pub probe_cycles: u64,
+    /// Deterministic fault plan (see [`FaultPlan`]); the disabled
+    /// default draws nothing and leaves every run bit-identical.
+    pub fault: FaultPlan,
 }
 
 impl Default for ServiceConfig {
@@ -83,6 +120,12 @@ impl Default for ServiceConfig {
             max_batch: 4,
             dispatch_cycles: 64,
             max_cycles: DEFAULT_MAX_CYCLES,
+            deadline_cycles: None,
+            max_retries: 2,
+            retry_backoff_cycles: 256,
+            backoff_cap_cycles: 4096,
+            probe_cycles: 8192,
+            fault: FaultPlan::disabled(),
         }
     }
 }
@@ -138,6 +181,31 @@ impl Served {
     }
 }
 
+/// One permanently failed job: its retries are exhausted (see
+/// [`ServiceConfig::max_retries`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Failed {
+    pub id: u64,
+    pub request: JobRequest,
+    /// Arrival cycle (virtual time).
+    pub arrival: u64,
+    /// Virtual time the final attempt gave up.
+    pub at: u64,
+    /// Rendered error of the final attempt.
+    pub error: String,
+}
+
+/// One admitted job's dispatch state: the pending job plus how many
+/// attempts it has burned and when its backoff allows the next one.
+#[derive(Debug, Clone, Copy)]
+struct Attempt {
+    job: Pending,
+    /// Failed attempts so far (0 = fresh).
+    tries: u32,
+    /// Earliest cycle this attempt may dispatch (retry backoff).
+    ready_at: u64,
+}
+
 /// One server slot: a warm cluster host with its own pool.
 #[derive(Default)]
 struct Slot {
@@ -165,9 +233,21 @@ pub struct Service {
     next_id: u64,
     served: Vec<Served>,
     rejections: Vec<Rejection>,
+    failed: Vec<Failed>,
+    /// Jobs waiting out their retry backoff (FIFO by failure time).
+    retry_q: VecDeque<Attempt>,
+    /// Service-level fault coins from [`ServiceConfig::fault`] (`None`
+    /// when the respective rate is zero — provably inert).
+    hang_fault: Option<FaultStream>,
+    slot_fault: Option<FaultStream>,
     offered: u64,
     batches: u64,
     batched_jobs: u64,
+    retries: u64,
+    deadline_misses: u64,
+    quarantines: u64,
+    faults_injected: u64,
+    faults_survived: u64,
 }
 
 impl Service {
@@ -182,9 +262,18 @@ impl Service {
             next_id: 0,
             served: Vec::new(),
             rejections: Vec::new(),
+            failed: Vec::new(),
+            retry_q: VecDeque::new(),
+            hang_fault: cfg.fault.hang_stream(),
+            slot_fault: cfg.fault.slot_stream(),
             offered: 0,
             batches: 0,
             batched_jobs: 0,
+            retries: 0,
+            deadline_misses: 0,
+            quarantines: 0,
+            faults_injected: 0,
+            faults_survived: 0,
         }
     }
 
@@ -201,26 +290,22 @@ impl Service {
         assert!(now >= self.last_arrival, "arrivals must be submitted in time order");
         self.last_arrival = now;
         self.offered += 1;
-        self.dispatch_until(now)?;
+        self.dispatch_until(now);
         // Typed admission checks before capacity: a malformed request is
         // rejected even when the queue has room.
-        let reason = if kernel_by_name(request.kernel).is_none() {
-            Some(RejectReason::UnknownKernel)
-        } else if request.clusters > 1 && !kernels::shard::supports(request.kernel) {
-            Some(RejectReason::Unshardable)
-        } else {
-            None
-        };
-        if let Some(reason) = reason {
+        if let Some(reason) = admission_reason(&request) {
             self.rejections.push(Rejection { at: now, request, reason });
             return Ok(Admission::Rejected(reason));
         }
         // An idle slot serves the request immediately — the queue is
-        // empty here whenever a slot is idle (dispatch_until drained it).
+        // empty here whenever a slot is idle (dispatch_until drained it;
+        // a job still backing off in the retry queue does not block a
+        // fresh arrival).
         if self.queue.is_empty() {
             if let Some(slot) = self.idle_slot(now) {
                 let id = self.take_id();
-                self.run_batch(slot, now, vec![Pending { id, request, arrival: now }])?;
+                let job = Pending { id, request, arrival: now };
+                self.run_batch(slot, now, vec![Attempt { job, tries: 0, ready_at: now }]);
                 return Ok(Admission::Dispatched { id });
             }
         }
@@ -234,9 +319,11 @@ impl Service {
         }
     }
 
-    /// Serve the remaining backlog to completion.
+    /// Serve the remaining backlog (including retries still backing
+    /// off) to completion.
     pub fn drain(&mut self) -> crate::Result<()> {
-        self.dispatch_until(u64::MAX)
+        self.dispatch_until(u64::MAX);
+        Ok(())
     }
 
     /// Submit a whole arrival schedule (time-ordered, e.g. from
@@ -257,6 +344,12 @@ impl Service {
     /// Every rejection so far, in arrival order.
     pub fn rejections(&self) -> &[Rejection] {
         &self.rejections
+    }
+
+    /// Every permanently failed job so far (retries exhausted), in
+    /// failure order.
+    pub fn failed(&self) -> &[Failed] {
+        &self.failed
     }
 
     /// Jobs currently waiting for a slot.
@@ -285,6 +378,12 @@ impl Service {
             latency: summarize(self.served.iter().map(Served::latency).collect()),
             pool,
             cache: self.cache.stats(),
+            retries: self.retries,
+            deadline_misses: self.deadline_misses,
+            failed: self.failed.len() as u64,
+            quarantines: self.quarantines,
+            faults_injected: self.faults_injected,
+            faults_survived: self.faults_survived,
         }
     }
 
@@ -310,20 +409,43 @@ impl Service {
         (free_at <= now).then_some(i)
     }
 
-    /// Event loop: while queued work exists and a slot frees at or
-    /// before `horizon`, dispatch the head batch onto it at its free
-    /// time. Queued jobs always arrived while every slot was busy, so
-    /// `free_at` is never before the batch head's arrival.
-    fn dispatch_until(&mut self, horizon: u64) -> crate::Result<()> {
-        while !self.queue.is_empty() {
+    /// Event loop: while dispatchable work exists and a slot frees at
+    /// or before `horizon`, dispatch onto it at its free time. Ready
+    /// retries go first (they are the oldest work), then the head batch
+    /// of the admission queue; when only backing-off retries remain,
+    /// virtual time advances to the earliest `ready_at`. Queued jobs
+    /// always arrived while every slot was busy, so `free_at` is never
+    /// before the batch head's arrival.
+    fn dispatch_until(&mut self, horizon: u64) {
+        loop {
             let (slot, free_at) = self.earliest_slot();
             if free_at > horizon {
                 break;
             }
-            let batch = self.queue.pop_batch(self.cfg.max_batch);
-            self.run_batch(slot, free_at, batch)?;
+            if let Some(i) = self.retry_q.iter().position(|a| a.ready_at <= free_at) {
+                let a = self.retry_q.remove(i).expect("position just found");
+                self.run_batch(slot, free_at, vec![a]);
+                continue;
+            }
+            if !self.queue.is_empty() {
+                let batch = self
+                    .queue
+                    .pop_batch(self.cfg.max_batch)
+                    .into_iter()
+                    .map(|job| Attempt { job, tries: 0, ready_at: free_at })
+                    .collect();
+                self.run_batch(slot, free_at, batch);
+                continue;
+            }
+            // Only backing-off retries left: jump to the earliest one.
+            let Some(next) = self.retry_q.iter().map(|a| a.ready_at).min() else { break };
+            if next > horizon {
+                break;
+            }
+            let i = self.retry_q.iter().position(|a| a.ready_at == next).expect("min just found");
+            let a = self.retry_q.remove(i).expect("position just found");
+            self.run_batch(slot, free_at.max(next), vec![a]);
         }
-        Ok(())
     }
 
     /// Serve `batch` on `slot` starting at `start`: one dispatch
@@ -331,27 +453,65 @@ impl Service {
     /// the actual cycle-accurate runs (through the slot's warm pool and
     /// the service-private program cache), so every served result is
     /// bit-identical to `run_kernel` with the same request parameters.
-    fn run_batch(&mut self, slot: usize, start: u64, batch: Vec<Pending>) -> crate::Result<()> {
+    ///
+    /// Resilience lives here: jobs past their deadline are dropped
+    /// before running; an injected slot failure bounces the whole
+    /// dispatch into retries and quarantines the slot; a hang (typed
+    /// [`RunError::Hang`]) charges the burned cycles, quarantines the
+    /// slot and bounces the rest of the batch; a plain failure retries
+    /// just that job. Never aborts the service — every job ends up
+    /// served, deadline-missed, or (retries exhausted) failed.
+    fn run_batch(&mut self, slot: usize, start: u64, batch: Vec<Attempt>) {
         debug_assert!(!batch.is_empty(), "never dispatch an empty batch");
+        let mut live = Vec::with_capacity(batch.len());
+        for a in batch {
+            debug_assert!(start >= a.job.arrival, "a queued job cannot start before it arrives");
+            let missed =
+                self.cfg.deadline_cycles.is_some_and(|d| start > a.job.arrival.saturating_add(d));
+            if missed {
+                self.deadline_misses += 1;
+            } else {
+                live.push(a);
+            }
+        }
+        if live.is_empty() {
+            return;
+        }
+        // Injected slot failure: the dispatch itself bounces — nothing
+        // runs, the slot goes into quarantine, every job retries.
+        if self.slot_fault.as_mut().is_some_and(FaultStream::strike) {
+            self.faults_injected += 1;
+            self.quarantine(slot, start);
+            for a in live {
+                self.retry_or_fail(a, start, "injected slot failure".to_string());
+            }
+            return;
+        }
         self.batches += 1;
-        if batch.len() > 1 {
-            self.batched_jobs += batch.len() as u64;
+        if live.len() > 1 {
+            self.batched_jobs += live.len() as u64;
         }
         let mut t = start + self.cfg.dispatch_cycles;
-        for (pos, job) in batch.into_iter().enumerate() {
-            debug_assert!(start >= job.arrival, "a queued job cannot start before it arrives");
-            let req = job.request;
+        let mut quarantined = false;
+        let mut pos = 0usize;
+        let mut jobs = live.into_iter();
+        while let Some(a) = jobs.next() {
+            let req = a.job.request;
             let k = kernel_by_name(req.kernel).expect("admission checked the kernel");
-            let p = params_for(&req, &self.cfg);
+            let mut p = params_for(&req, &self.cfg).with_faults(self.cfg.fault);
+            if self.hang_fault.as_mut().is_some_and(FaultStream::strike) {
+                self.faults_injected += 1;
+                p = p.with_barrier_hang(true);
+            }
             let r = {
                 let Service { slots, cache, .. } = self;
                 let host = &mut slots[slot];
                 if req.clusters > 1 {
                     // Multi-cluster requests build a per-run System —
                     // nothing to pool (same rule as run_kernel_pooled).
-                    kernels::run_kernel(k, req.variant, &p)
+                    kernels::try_run_kernel(k, req.variant, &p)
                 } else {
-                    kernels::run_kernel_pooled_with_cache(
+                    kernels::try_run_kernel_pooled_with_cache(
                         &mut host.pool,
                         cache,
                         k,
@@ -359,29 +519,122 @@ impl Service {
                         &p,
                     )
                 }
+            };
+            match r {
+                Ok(r) => {
+                    let service_cycles =
+                        r.system.as_ref().map_or(r.stats.cycles, |s| s.total_cycles);
+                    let finish = t + service_cycles;
+                    if a.tries > 0 {
+                        self.faults_survived += 1;
+                    }
+                    self.served.push(Served {
+                        id: a.job.id,
+                        request: req,
+                        arrival: a.job.arrival,
+                        start: t,
+                        finish,
+                        slot,
+                        service_cycles,
+                        batched: pos > 0,
+                        cycles: r.cycles,
+                        max_err: r.max_err,
+                    });
+                    self.slots[slot].busy_cycles += service_cycles;
+                    t = finish;
+                }
+                Err(RunError::Hang { context, report }) => {
+                    // The slot burned cycles up to the watchdog's
+                    // detection point; charge them, quarantine the slot
+                    // and bounce this job plus the rest of the batch.
+                    self.slots[slot].busy_cycles += report.at;
+                    t += report.at;
+                    self.retry_or_fail(a, t, format!("{context}: {report}"));
+                    for rest in jobs.by_ref() {
+                        self.retry_or_fail(rest, t, "slot quarantined mid-batch".to_string());
+                    }
+                    self.quarantine(slot, t);
+                    quarantined = true;
+                }
+                Err(RunError::Failed(e)) => {
+                    // A per-job failure (plan/check), not the slot's
+                    // fault: retry just this job, keep the batch going.
+                    self.retry_or_fail(a, t, e);
+                }
             }
-            .map_err(|e| format!("service job #{}: {e}", job.id))?;
-            let service_cycles = r.system.as_ref().map_or(r.stats.cycles, |s| s.total_cycles);
-            let finish = t + service_cycles;
-            self.served.push(Served {
-                id: job.id,
-                request: req,
-                arrival: job.arrival,
-                start: t,
-                finish,
-                slot,
-                service_cycles,
-                batched: pos > 0,
-                cycles: r.cycles,
-                max_err: r.max_err,
-            });
-            self.slots[slot].busy_cycles += service_cycles;
-            t = finish;
+            pos += 1;
         }
         let host = &mut self.slots[slot];
         host.busy_cycles += self.cfg.dispatch_cycles;
-        host.free_at = t;
-        Ok(())
+        if !quarantined {
+            host.free_at = t;
+        }
+    }
+
+    /// Requeue `a` with exponential backoff, or — retries exhausted —
+    /// record it as permanently failed.
+    fn retry_or_fail(&mut self, a: Attempt, now: u64, error: String) {
+        if a.tries < self.cfg.max_retries {
+            let backoff = self
+                .cfg
+                .retry_backoff_cycles
+                .checked_shl(a.tries)
+                .unwrap_or(u64::MAX)
+                .min(self.cfg.backoff_cap_cycles);
+            self.retries += 1;
+            self.retry_q.push_back(Attempt {
+                job: a.job,
+                tries: a.tries + 1,
+                ready_at: now.saturating_add(backoff.max(1)),
+            });
+        } else {
+            self.failed.push(Failed {
+                id: a.job.id,
+                request: a.job.request,
+                arrival: a.job.arrival,
+                at: now,
+                error,
+            });
+        }
+    }
+
+    /// Take `slot` out of rotation for the health-probe window: it
+    /// serves nothing until `at + probe_cycles`. Its next dispatch
+    /// rewinds the warm pool ([`crate::cluster::Cluster::reset`]
+    /// rebuilds the peripherals), so passing the probe re-admits a
+    /// clean slot.
+    fn quarantine(&mut self, slot: usize, at: u64) {
+        self.quarantines += 1;
+        self.slots[slot].free_at = at.saturating_add(self.cfg.probe_cycles.max(1));
+    }
+}
+
+/// Typed admission verdict for a request's *content* (queue capacity is
+/// checked separately): every adversarial shape — unknown kernel,
+/// unsupported variant, degenerate or absurd sizes — maps to a
+/// [`RejectReason`], so submission is total and never panics.
+fn admission_reason(request: &JobRequest) -> Option<RejectReason> {
+    if request.n == 0 {
+        return Some(RejectReason::Invalid("n must be at least 1"));
+    }
+    if request.clusters == 0 {
+        return Some(RejectReason::Invalid("clusters must be at least 1"));
+    }
+    let Some(k) = kernel_by_name(request.kernel) else {
+        return Some(RejectReason::UnknownKernel);
+    };
+    if !k.variants.contains(&request.variant) {
+        return Some(RejectReason::UnsupportedVariant);
+    }
+    if request.clusters > 1 && !kernels::shard::supports(request.kernel) {
+        return Some(RejectReason::Unshardable);
+    }
+    match kernels::working_set_checked(request.kernel, request.n) {
+        None => Some(RejectReason::Invalid("working set overflows the size arithmetic")),
+        Some(ws) if ws.saturating_add(0x1000) > u64::from(u32::MAX / 2) => {
+            Some(RejectReason::Invalid("working set exceeds the largest supported TCDM"))
+        }
+        Some(_) => None,
     }
 }
 
@@ -695,5 +948,99 @@ mod tests {
         let a = serving_sweep(&opts).unwrap();
         let b = serving_sweep(&opts).unwrap();
         assert_eq!(a, b);
+    }
+
+    /// Adversarial request shapes reject with typed reasons — admission
+    /// is total, nothing panics downstream.
+    #[test]
+    fn degenerate_requests_reject_typed() {
+        let mut svc = Service::new(ServiceConfig::default());
+        let zero_n = JobRequest::new("dot", Variant::Ssr, 0);
+        assert_eq!(
+            svc.submit(0, zero_n).unwrap(),
+            Admission::Rejected(RejectReason::Invalid("n must be at least 1"))
+        );
+        let zero_clusters = JobRequest::new("dot", Variant::Ssr, 64).with_clusters(0);
+        assert_eq!(
+            svc.submit(0, zero_clusters).unwrap(),
+            Admission::Rejected(RejectReason::Invalid("clusters must be at least 1"))
+        );
+        // axpy implements Baseline and Ssr only.
+        let bad_variant = JobRequest::new("axpy", Variant::SsrFrep, 64);
+        assert_eq!(
+            svc.submit(0, bad_variant).unwrap(),
+            Admission::Rejected(RejectReason::UnsupportedVariant)
+        );
+        // dgemm's n²·24 working set overflows the size arithmetic.
+        let absurd = JobRequest::new("dgemm", Variant::SsrFrep, usize::MAX / 2);
+        assert!(matches!(
+            svc.submit(0, absurd).unwrap(),
+            Admission::Rejected(RejectReason::Invalid(_))
+        ));
+        assert_eq!(svc.stats().rejected, 4);
+        assert_eq!(svc.served().len(), 0);
+    }
+
+    /// A per-job deadline drops jobs whose dispatch would start too
+    /// late — they never run, and the books still balance.
+    #[test]
+    fn deadline_misses_drop_late_jobs() {
+        let cfg = ServiceConfig {
+            slots: 1,
+            deadline_cycles: Some(16),
+            ..ServiceConfig::default()
+        };
+        let mut svc = Service::new(cfg);
+        let req = JobRequest::new("dot", Variant::SsrFrep, 256);
+        // First job dispatches at arrival (zero wait — no miss); the
+        // next two queue behind a run that takes far longer than 16
+        // cycles, so their dispatch starts past arrival + deadline.
+        svc.submit(0, req.with_seed(1)).unwrap();
+        svc.submit(1, req.with_seed(2)).unwrap();
+        svc.submit(1, req.with_seed(3)).unwrap();
+        svc.drain().unwrap();
+        let s = svc.stats();
+        assert_eq!(s.served, 1);
+        assert_eq!(s.deadline_misses, 2);
+        assert!(s.is_conserved(), "{s:?}");
+    }
+
+    /// A certain injected hang: every attempt deadlocks at the barrier,
+    /// the watchdog types it, the slot quarantines, retries burn out —
+    /// and the scheduler still completes with the books balanced.
+    #[test]
+    fn injected_hang_quarantines_and_completes() {
+        let fault = FaultPlan { seed: 9, hang_rate: 0xFFFF, ..FaultPlan::disabled() };
+        let cfg = ServiceConfig { slots: 1, max_retries: 1, fault, ..ServiceConfig::default() };
+        let mut svc = Service::new(cfg);
+        let req = JobRequest::new("dot", Variant::SsrFrep, 256);
+        svc.submit(0, req.with_seed(1)).unwrap();
+        svc.submit(1, req.with_seed(2)).unwrap();
+        svc.drain().unwrap();
+        let s = svc.stats();
+        assert_eq!(s.served, 0, "every attempt hangs");
+        assert_eq!(s.failed, 2);
+        assert_eq!(s.retries, 2, "one retry each before giving up");
+        assert!(s.quarantines >= 2, "each hang quarantines the slot: {s:?}");
+        assert_eq!(s.faults_injected, 4, "one hang coin per attempt");
+        assert!(s.is_conserved(), "{s:?}");
+        let f = &svc.failed()[0];
+        assert!(f.error.contains("barrier deadlock"), "{}", f.error);
+    }
+
+    /// A fault plan whose rates are all zero is inert even with a
+    /// nonzero seed: bit-identical serving to the default config.
+    #[test]
+    fn zero_rate_fault_plan_is_inert() {
+        let mix = default_mix();
+        let arrivals = LoadGen::new(11, 400.0, mix).take(16);
+        let mut clean = Service::new(ServiceConfig::default());
+        clean.run_workload(&arrivals).unwrap();
+        let zeroed = FaultPlan { seed: 0xDEAD_BEEF, ..FaultPlan::disabled() };
+        let cfg = ServiceConfig { fault: zeroed, ..ServiceConfig::default() };
+        let mut seeded = Service::new(cfg);
+        seeded.run_workload(&arrivals).unwrap();
+        assert_eq!(clean.served(), seeded.served());
+        assert_eq!(clean.stats(), seeded.stats());
     }
 }

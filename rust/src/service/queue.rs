@@ -43,9 +43,11 @@ impl JobRequest {
         self
     }
 
-    /// Same request sharded across `clusters` clusters.
+    /// Same request sharded across `clusters` clusters. Zero is
+    /// representable: admission control rejects it with a typed
+    /// [`RejectReason::Invalid`] instead of panicking here — requests
+    /// are untrusted input, and submission must be total.
     pub fn with_clusters(mut self, clusters: usize) -> JobRequest {
-        assert!(clusters >= 1, "at least one cluster");
         self.clusters = clusters;
         self
     }
@@ -73,6 +75,13 @@ pub enum RejectReason {
     /// `clusters > 1` was requested for a kernel without a shard plan
     /// (see [`crate::kernels::shard::supports`]).
     Unshardable,
+    /// The kernel exists but does not implement the requested variant.
+    UnsupportedVariant,
+    /// Degenerate or unschedulable request parameters — the message
+    /// says which (n = 0, clusters = 0, a working set whose size
+    /// arithmetic overflows, …). Admission is total: adversarial shapes
+    /// come back typed instead of panicking downstream.
+    Invalid(&'static str),
 }
 
 /// One rejected submission: when, what, and why.

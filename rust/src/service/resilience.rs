@@ -1,0 +1,315 @@
+//! The fault-resilience sweep behind the `fault_resilience` artifact:
+//! inject deterministic faults ([`FaultPlan`]) into the serving layer at
+//! a grid of fault rate × offered load ρ, and measure how gracefully the
+//! service degrades — retries, deadline misses, slot quarantines,
+//! permanent failures — against the clean baseline (rate 0).
+//!
+//! The sweep doubles as a correctness gate: faults may *delay* work
+//! (DMA stalls, interconnect starvation, hangs caught by the watchdog)
+//! but must never *corrupt* it, so every job the faulted service
+//! completes is re-run through the ordinary
+//! [`crate::kernels::run_kernel`] path and its result checked
+//! bit-identical ([`f64::to_bits`] on the max |error|; cycle counts too
+//! for single-cluster requests, whose cluster-level execution sees no
+//! engine faults at all). Everything is seeded virtual time — the whole
+//! table is byte-reproducible for fixed options.
+
+use std::collections::HashMap;
+
+use crate::coordinator::report::{Table, Value};
+use crate::kernels::{self, kernel_by_name, Variant};
+use crate::sim::fault::FaultPlan;
+
+use super::loadgen::{LoadGen, MixEntry};
+use super::{
+    default_mix, params_for, probe_mean_service_cycles, Service, ServiceConfig, ServiceStats,
+};
+
+/// Title of the `fault_resilience` artifact (shared with the registry
+/// entry in [`crate::coordinator::artifacts`]).
+pub const FAULT_TITLE: &str =
+    "fault resilience — deterministic fault injection over the serving layer";
+
+/// The request mix of the fault sweep: the serving mix plus one
+/// shard-aware multi-cluster entry, so the DMA and interconnect fault
+/// sites actually see traffic (single-cluster jobs never touch them).
+pub fn fault_mix() -> Vec<MixEntry> {
+    let mut mix = default_mix();
+    mix.push(MixEntry { weight: 1, kernel: "axpy", variant: Variant::Ssr, n: 1024, clusters: 2 });
+    mix
+}
+
+/// Options of one [`fault_sweep`] / [`fault_table`] run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultOptions {
+    /// Sweep seed: fault plans and arrival schedules derive from it.
+    pub seed: u64,
+    /// Requests offered per grid point.
+    pub requests: usize,
+    /// Injection rates in parts per 65536, applied to every fault site
+    /// (DMA stall, interconnect starvation, hang, slot failure). Rate 0
+    /// is the clean baseline — a fully disabled plan.
+    pub rates: Vec<u32>,
+    /// Offered-load points as fractions ρ of probed capacity.
+    pub rho: Vec<f64>,
+    /// Service configuration; its `fault` field is overwritten per grid
+    /// point, everything else (deadline, retries, quarantine window)
+    /// applies as given.
+    pub config: ServiceConfig,
+    pub mix: Vec<MixEntry>,
+}
+
+impl Default for FaultOptions {
+    fn default() -> FaultOptions {
+        FaultOptions {
+            seed: 0xFA_017_5EED,
+            requests: 96,
+            rates: vec![0, 1024, 4096],
+            rho: vec![0.5, 1.0],
+            config: ServiceConfig {
+                deadline_cycles: Some(250_000),
+                ..ServiceConfig::default()
+            },
+            mix: fault_mix(),
+        }
+    }
+}
+
+impl FaultOptions {
+    /// Reduced scale for smoke tests and CI: fewer requests, one load
+    /// point, baseline + one aggressive fault rate.
+    pub fn smoke() -> FaultOptions {
+        FaultOptions {
+            requests: 24,
+            rates: vec![0, 4096],
+            rho: vec![1.0],
+            ..FaultOptions::default()
+        }
+    }
+
+    /// The options the `fault_resilience` artifact builds with:
+    /// `--size N` (any N) selects the smoke scale.
+    pub fn for_artifact(size: Option<usize>) -> FaultOptions {
+        if size.is_some() {
+            FaultOptions::smoke()
+        } else {
+            FaultOptions::default()
+        }
+    }
+}
+
+/// One grid point's outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPoint {
+    /// Injection rate (parts per 65536) at every fault site.
+    pub rate: u32,
+    /// Offered load as a fraction of probed capacity.
+    pub rho: f64,
+    pub stats: ServiceStats,
+    /// Served jobs whose results passed the bit-identity check against
+    /// a clean `run_kernel` (always equals `stats.served` — a mismatch
+    /// fails the sweep).
+    pub verified: u64,
+}
+
+/// A full fault sweep: the capacity probe plus one [`FaultPoint`] per
+/// (rate, ρ) grid cell.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultRun {
+    /// Probed weighted-mean service cycles per request (clean).
+    pub mean_service_cycles: f64,
+    /// Pool capacity in requests per million cycles.
+    pub capacity_per_mcycle: f64,
+    pub points: Vec<FaultPoint>,
+}
+
+/// The [`FaultPlan`] one grid point injects with: `rate` at every site,
+/// short DMA/interconnect outages (so faults perturb timing without
+/// starving the budget), streams seeded per point.
+fn plan_for(rate: u32, seed: u64) -> FaultPlan {
+    if rate == 0 {
+        return FaultPlan::disabled();
+    }
+    FaultPlan {
+        seed,
+        dma_stall_rate: rate,
+        dma_stall_min: 8,
+        dma_stall_max: 64,
+        xbar_starve_rate: rate,
+        xbar_starve_min: 4,
+        xbar_starve_max: 32,
+        hang_rate: rate,
+        slot_fail_rate: rate,
+    }
+}
+
+/// Run the fault grid: probe clean capacity once, then serve
+/// `opts.requests` Poisson arrivals per (rate, ρ) cell on a fresh
+/// [`Service`] with that cell's [`FaultPlan`], verifying every
+/// completed job against a clean `run_kernel` and conservation of the
+/// offered demand.
+pub fn fault_sweep(opts: &FaultOptions) -> crate::Result<FaultRun> {
+    assert!(!opts.rates.is_empty(), "at least one fault rate");
+    assert!(!opts.rho.is_empty(), "at least one load point");
+    assert!(opts.requests >= 1, "at least one request per point");
+    let mean_service_cycles = probe_mean_service_cycles(&opts.mix, &opts.config)?;
+    let capacity = opts.config.slots as f64 / mean_service_cycles; // requests/cycle
+    let mut points = Vec::with_capacity(opts.rates.len() * opts.rho.len());
+    for (i, &rate) in opts.rates.iter().enumerate() {
+        for (j, &rho) in opts.rho.iter().enumerate() {
+            assert!(rho > 0.0, "offered load must be positive");
+            // Decorrelate the cells deterministically from the one seed
+            // (splitmix-style odd multiplier).
+            let idx = (i * opts.rho.len() + j) as u64;
+            let seed = opts.seed.wrapping_add(idx.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            let cfg = ServiceConfig { fault: plan_for(rate, seed), ..opts.config };
+            let mean_gap = 1.0 / (capacity * rho);
+            let mut lg = LoadGen::new(seed, mean_gap, opts.mix.clone());
+            let mut svc = Service::new(cfg);
+            svc.run_workload(&lg.take(opts.requests))?;
+            let verified = verify_served(&svc, &opts.config)?;
+            let stats = svc.stats();
+            if !stats.is_conserved() {
+                return Err(format!(
+                    "demand not conserved at rate {rate} ρ {rho}: offered {} vs served {} + \
+                     rejected {} + deadline-missed {} + failed {}",
+                    stats.offered,
+                    stats.served,
+                    stats.rejected,
+                    stats.deadline_misses,
+                    stats.failed
+                )
+                .into());
+            }
+            points.push(FaultPoint { rate, rho, stats, verified });
+        }
+    }
+    Ok(FaultRun { mean_service_cycles, capacity_per_mcycle: capacity * 1e6, points })
+}
+
+/// The correctness gate: every served job's result must be bit-identical
+/// to a clean [`crate::kernels::run_kernel`] of the same request —
+/// injected faults may delay completions, never change them. References
+/// are memoized per request shape+seed, so batched repeats don't re-run.
+fn verify_served(svc: &Service, clean: &ServiceConfig) -> crate::Result<u64> {
+    let mut refs: HashMap<(&'static str, Variant, usize, usize, u64), (u64, u64)> = HashMap::new();
+    let mut verified = 0u64;
+    for s in svc.served() {
+        let req = s.request;
+        let key = (req.kernel, req.variant, req.n, req.clusters, req.seed);
+        let (ref_cycles, ref_err_bits) = match refs.get(&key) {
+            Some(&v) => v,
+            None => {
+                let k = kernel_by_name(req.kernel).expect("served implies a known kernel");
+                let r = kernels::run_kernel(k, req.variant, &params_for(&req, clean))
+                    .map_err(|e| format!("clean reference for job #{}: {e}", s.id))?;
+                let v = (r.cycles, r.max_err.to_bits());
+                refs.insert(key, v);
+                v
+            }
+        };
+        if s.max_err.to_bits() != ref_err_bits {
+            return Err(format!(
+                "job #{} ({}/{:?} n={}): served max_err {:?} != clean run_kernel {:?}",
+                s.id,
+                req.kernel,
+                req.variant,
+                req.n,
+                s.max_err,
+                f64::from_bits(ref_err_bits)
+            )
+            .into());
+        }
+        // Single-cluster requests run entirely inside a cluster no fault
+        // site touches, so even their cycle counts must match exactly.
+        if req.clusters == 1 && s.cycles != ref_cycles {
+            return Err(format!(
+                "job #{} ({}/{:?} n={}): served cycles {} != clean run_kernel {}",
+                s.id, req.kernel, req.variant, req.n, s.cycles, ref_cycles
+            )
+            .into());
+        }
+        verified += 1;
+    }
+    Ok(verified)
+}
+
+/// Build the `fault_resilience` table: one row per (rate, ρ) grid cell
+/// with the degradation and resilience counters. Byte-identical across
+/// runs for fixed options; errors if any completed job's result differs
+/// from its clean reference.
+pub fn fault_table(opts: &FaultOptions) -> crate::Result<Table> {
+    let run = fault_sweep(opts)?;
+    let mut t = Table::new("fault_resilience", FAULT_TITLE).with_columns(&[
+        "fault rate %",
+        "offered ρ",
+        "served",
+        "rejected",
+        "deadline miss",
+        "failed",
+        "retries",
+        "quarantines",
+        "faults inj",
+        "survived",
+        "verified",
+        "p99 lat",
+    ]);
+    for p in &run.points {
+        let s = &p.stats;
+        t.push_row(vec![
+            Value::float(f64::from(p.rate) * 100.0 / 65536.0, 2),
+            Value::float(p.rho, 2),
+            Value::int(s.served as i64),
+            Value::int(s.rejected as i64),
+            Value::int(s.deadline_misses as i64),
+            Value::int(s.failed as i64),
+            Value::int(s.retries as i64),
+            Value::int(s.quarantines as i64),
+            Value::int(s.faults_injected as i64),
+            Value::int(s.faults_survived as i64),
+            Value::int(p.verified as i64),
+            Value::int(s.latency.p99 as i64),
+        ]);
+    }
+    let cfg = &opts.config;
+    t = t.with_notes(format!(
+        "seeded fault injection (seed {:#x}) at every site — DMA stalls, interconnect \
+         starvation, barrier hangs, slot failures — rate in % of dispatch coins; {} Poisson \
+         requests/cell over {} slots × {} cores; deadline {} cycles, {} retries (backoff \
+         {}–{} cycles), quarantine probe {} cycles; probed mean service {:.0} cycles \
+         (capacity {:.1} req/Mcycle). every served result verified bit-identical to a clean \
+         run_kernel (column `verified`); latencies in cycles.",
+        opts.seed,
+        opts.requests,
+        cfg.slots,
+        cfg.cores,
+        cfg.deadline_cycles.map_or("∞".to_string(), |d| d.to_string()),
+        cfg.max_retries,
+        cfg.retry_backoff_cycles,
+        cfg.backoff_cap_cycles,
+        cfg.probe_cycles,
+        run.mean_service_cycles,
+        run.capacity_per_mcycle,
+    ));
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The fault sweep is a pure function of its options, and the
+    /// baseline (rate 0) cell injects nothing.
+    #[test]
+    fn fault_sweep_is_deterministic_and_baseline_is_clean() {
+        let opts = FaultOptions { requests: 10, ..FaultOptions::smoke() };
+        let a = fault_sweep(&opts).unwrap();
+        let b = fault_sweep(&opts).unwrap();
+        assert_eq!(a, b);
+        let baseline = &a.points[0];
+        assert_eq!(baseline.rate, 0);
+        assert_eq!(baseline.stats.faults_injected, 0);
+        assert_eq!(baseline.stats.quarantines, 0);
+        assert_eq!(baseline.verified, baseline.stats.served);
+    }
+}

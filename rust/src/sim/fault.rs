@@ -1,0 +1,382 @@
+//! Deterministic fault injection and typed hang diagnostics.
+//!
+//! A [`FaultPlan`] is a tiny, `Copy`-able description of *where* and *how
+//! often* to inject faults: DMA transfer stalls ([`crate::system::dma`]),
+//! interconnect grant starvation ([`crate::mem::port`]), cluster hangs (a
+//! core that never leaves the hardware barrier), and slot failures in the
+//! serving layer ([`crate::service`]). Every injection site draws from its
+//! own [`FaultStream`] — an xoshiro128++ stream seeded from
+//! `plan.seed ^ site_salt ^ f(instance)` — so runs are byte-reproducible
+//! for a fixed seed, independent of wall clock, thread count, or the
+//! presence of other sites.
+//!
+//! **Determinism contract:** a disabled plan (any rate == 0 at a site)
+//! yields `None` from the site's `*_stream()` constructor, so the
+//! simulator takes *zero* RNG draws and executes the exact same
+//! instruction path as a build without the fault layer. The determinism
+//! suite pins this: every existing run is bit-identical with the fault
+//! layer compiled in and disabled.
+//!
+//! Rates are integers in parts-per-65536 (so [`FaultPlan`] stays `Eq` and
+//! can live inside `Copy + Eq` configuration structs); a draw strikes when
+//! `next_u32() & 0xFFFF < rate`.
+
+use super::proptest::Rng;
+
+/// Site salts: one per injection surface, XORed into the stream seed so
+/// streams at different sites are decorrelated even for `seed = 0`.
+pub const SITE_DMA: u64 = 0xD1A_57A11;
+/// Interconnect grant starvation site.
+pub const SITE_XBAR: u64 = 0x8A2_57A2E;
+/// Cluster-hang (barrier deadlock) site, drawn per job in the service.
+pub const SITE_HANG: u64 = 0xBA2_DEAD;
+/// Serving-slot failure site, drawn per dispatch.
+pub const SITE_SLOT: u64 = 0x510_7FA11;
+
+/// A seeded, byte-reproducible fault-injection plan. All rates are in
+/// parts-per-65536; a rate of 0 disables that site entirely (no RNG
+/// stream is even constructed). `Default` is the fully disabled plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Base seed; each site derives its own stream from it.
+    pub seed: u64,
+    /// Probability (per issued DMA chunk) of a transfer stall, /65536.
+    pub dma_stall_rate: u32,
+    /// Stall span bounds (cycles, inclusive) drawn per injected stall.
+    pub dma_stall_min: u64,
+    pub dma_stall_max: u64,
+    /// Probability (per interconnect cycle) of grant starvation, /65536.
+    pub xbar_starve_rate: u32,
+    /// Starvation window bounds (cycles, inclusive).
+    pub xbar_starve_min: u64,
+    pub xbar_starve_max: u64,
+    /// Probability (per served job) of a permanent cluster hang, /65536.
+    pub hang_rate: u32,
+    /// Probability (per slot dispatch) of a transient slot failure, /65536.
+    pub slot_fail_rate: u32,
+}
+
+impl FaultPlan {
+    /// The fully disabled plan: provably inert (no site constructs a
+    /// stream, no RNG draw ever happens).
+    pub const fn disabled() -> FaultPlan {
+        FaultPlan {
+            seed: 0,
+            dma_stall_rate: 0,
+            dma_stall_min: 0,
+            dma_stall_max: 0,
+            xbar_starve_rate: 0,
+            xbar_starve_min: 0,
+            xbar_starve_max: 0,
+            hang_rate: 0,
+            slot_fail_rate: 0,
+        }
+    }
+
+    /// True when any site can fire.
+    pub fn enabled(&self) -> bool {
+        self.dma_stall_rate != 0
+            || self.xbar_starve_rate != 0
+            || self.hang_rate != 0
+            || self.slot_fail_rate != 0
+    }
+
+    fn stream(
+        rate: u32,
+        lo: u64,
+        hi: u64,
+        seed: u64,
+        salt: u64,
+        instance: u64,
+    ) -> Option<FaultStream> {
+        if rate == 0 {
+            return None;
+        }
+        let s = seed ^ salt ^ instance.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        Some(FaultStream { rng: Rng::new(s), rate, lo, hi, injected: 0 })
+    }
+
+    /// Per-DMA-engine stall stream (`instance` = engine index).
+    pub fn dma_stream(&self, instance: u64) -> Option<FaultStream> {
+        Self::stream(
+            self.dma_stall_rate,
+            self.dma_stall_min,
+            self.dma_stall_max,
+            self.seed,
+            SITE_DMA,
+            instance,
+        )
+    }
+
+    /// Per-interconnect grant-starvation stream.
+    pub fn xbar_stream(&self, instance: u64) -> Option<FaultStream> {
+        Self::stream(
+            self.xbar_starve_rate,
+            self.xbar_starve_min,
+            self.xbar_starve_max,
+            self.seed,
+            SITE_XBAR,
+            instance,
+        )
+    }
+
+    /// Per-service cluster-hang stream (drawn once per served job).
+    pub fn hang_stream(&self) -> Option<FaultStream> {
+        Self::stream(self.hang_rate, 0, 0, self.seed, SITE_HANG, 0)
+    }
+
+    /// Per-service slot-failure stream (drawn once per dispatch).
+    pub fn slot_stream(&self) -> Option<FaultStream> {
+        Self::stream(self.slot_fail_rate, 0, 0, self.seed, SITE_SLOT, 0)
+    }
+}
+
+impl Default for FaultPlan {
+    fn default() -> FaultPlan {
+        FaultPlan::disabled()
+    }
+}
+
+/// One site's private RNG stream. `strike()` advances one draw per call;
+/// `span()` draws a duration in `[lo, hi]`. The stream records how many
+/// faults it injected so callers can surface the count in stats.
+#[derive(Debug, Clone)]
+pub struct FaultStream {
+    rng: Rng,
+    rate: u32,
+    lo: u64,
+    hi: u64,
+    /// Faults injected by this stream so far.
+    pub injected: u64,
+}
+
+impl FaultStream {
+    /// One Bernoulli draw at the stream's rate; counts hits.
+    pub fn strike(&mut self) -> bool {
+        let hit = (self.rng.next_u32() & 0xFFFF) < self.rate;
+        if hit {
+            self.injected += 1;
+        }
+        hit
+    }
+
+    /// Draw a fault duration in `[lo, hi]` cycles (inclusive).
+    pub fn span(&mut self) -> u64 {
+        if self.hi <= self.lo {
+            return self.lo;
+        }
+        let w = (self.hi - self.lo + 1).min(u64::from(u32::MAX)) as u32;
+        self.lo + u64::from(self.rng.below(w))
+    }
+}
+
+/// Why the watchdog fired.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HangKind {
+    /// The run's `max_cycles` budget expired with work still in flight.
+    BudgetExpired,
+    /// Every live core is parked on the hardware barrier and the release
+    /// is wedged — the cluster can never make progress again.
+    BarrierDeadlock,
+}
+
+/// Per-core snapshot inside a [`HangReport`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CoreHang {
+    pub hartid: u32,
+    pub pc: u32,
+    pub instret: u64,
+    /// FREP sequencer position while mid-loop: (instruction index,
+    /// completed iterations). `None` when the sequencer is idle.
+    pub seq: Option<(usize, u32)>,
+    /// What the core is blocked on: `"barrier"`, `"tile"`, or `"running"`.
+    pub waiting: &'static str,
+}
+
+/// Typed diagnosis of a run that did not finish: which cores were live,
+/// where they were, and what machinery still had work in flight. Replaces
+/// the bare budget-expiry error string (whose shape its `Display` keeps,
+/// including the `"did not finish"` marker existing callers grep for).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HangReport {
+    pub kind: HangKind,
+    /// Cycle the watchdog fired at.
+    pub at: u64,
+    /// The run's cycle budget.
+    pub budget: u64,
+    /// System pipeline stage in flight, when observed at System scope.
+    pub stage: Option<String>,
+    /// Index of the cluster in flight (System scope).
+    pub cluster: Option<usize>,
+    /// Non-halted cores, in hartid order.
+    pub cores: Vec<CoreHang>,
+    /// Cores parked on the hardware barrier.
+    pub barrier_waiters: usize,
+    /// TCDM still had requests in flight.
+    pub tcdm_busy: bool,
+    /// External-memory port still had pending requests.
+    pub ext_pending: bool,
+    /// Any DMA engine still busy (System scope only).
+    pub dma_busy: Option<bool>,
+}
+
+impl std::fmt::Display for HangReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let scope = if self.stage.is_some() { "system" } else { "cluster" };
+        match self.kind {
+            HangKind::BudgetExpired => {
+                write!(f, "{scope} did not finish within {} cycles", self.budget)?;
+            }
+            HangKind::BarrierDeadlock => {
+                write!(
+                    f,
+                    "{scope} did not finish: barrier deadlock at cycle {} (budget {})",
+                    self.at, self.budget
+                )?;
+            }
+        }
+        if let Some(stage) = &self.stage {
+            write!(f, " (stage {stage})")?;
+        }
+        if let Some(c) = self.cluster {
+            write!(f, "; cluster {c}")?;
+        }
+        if !self.cores.is_empty() {
+            let cores: Vec<String> = self
+                .cores
+                .iter()
+                .map(|c| {
+                    let mut s = format!("core{} pc={:#x} instret={}", c.hartid, c.pc, c.instret);
+                    if let Some((idx, iter)) = c.seq {
+                        s.push_str(&format!(" seq={idx}@{iter}"));
+                    }
+                    if c.waiting != "running" {
+                        s.push_str(&format!(" [{}]", c.waiting));
+                    }
+                    s
+                })
+                .collect();
+            write!(f, "; running: {}", cores.join(", "))?;
+        }
+        write!(
+            f,
+            "; barrier_waiters={} tcdm={} ext={}",
+            self.barrier_waiters,
+            if self.tcdm_busy { "busy" } else { "idle" },
+            if self.ext_pending { "pending" } else { "quiet" },
+        )?;
+        if let Some(d) = self.dma_busy {
+            write!(f, " dma={}", if d { "busy" } else { "idle" })?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for HangReport {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_plan_constructs_no_streams() {
+        let p = FaultPlan::disabled();
+        assert!(!p.enabled());
+        assert!(p.dma_stream(0).is_none());
+        assert!(p.xbar_stream(0).is_none());
+        assert!(p.hang_stream().is_none());
+        assert!(p.slot_stream().is_none());
+    }
+
+    #[test]
+    fn streams_are_reproducible_and_site_decorrelated() {
+        let plan = FaultPlan {
+            seed: 42,
+            dma_stall_rate: 0x4000, // 25 %
+            dma_stall_min: 3,
+            dma_stall_max: 9,
+            xbar_starve_rate: 0x4000,
+            xbar_starve_min: 1,
+            xbar_starve_max: 1,
+            ..FaultPlan::disabled()
+        };
+        let mut a = plan.dma_stream(0).unwrap();
+        let mut b = plan.dma_stream(0).unwrap();
+        let hits_a: Vec<bool> = (0..256).map(|_| a.strike()).collect();
+        let hits_b: Vec<bool> = (0..256).map(|_| b.strike()).collect();
+        assert_eq!(hits_a, hits_b, "same site+instance ⇒ identical stream");
+        assert_eq!(a.injected, b.injected);
+        assert!(a.injected > 0, "25 % over 256 draws must fire");
+
+        let mut c = plan.dma_stream(1).unwrap();
+        let hits_c: Vec<bool> = (0..256).map(|_| c.strike()).collect();
+        assert_ne!(hits_a, hits_c, "instances get distinct streams");
+
+        let mut x = plan.xbar_stream(0).unwrap();
+        let hits_x: Vec<bool> = (0..256).map(|_| x.strike()).collect();
+        assert_ne!(hits_a, hits_x, "sites get distinct streams");
+    }
+
+    #[test]
+    fn span_respects_bounds() {
+        let plan = FaultPlan {
+            seed: 7,
+            dma_stall_rate: 0xFFFF,
+            dma_stall_min: 5,
+            dma_stall_max: 11,
+            ..FaultPlan::disabled()
+        };
+        let mut s = plan.dma_stream(0).unwrap();
+        for _ in 0..1000 {
+            let v = s.span();
+            assert!((5..=11).contains(&v), "span {v} out of [5, 11]");
+        }
+        // Degenerate bounds collapse to the low edge.
+        let plan2 = FaultPlan { dma_stall_min: 4, dma_stall_max: 4, ..plan };
+        let mut s2 = plan2.dma_stream(0).unwrap();
+        assert_eq!(s2.span(), 4);
+    }
+
+    #[test]
+    fn hang_report_display_keeps_the_did_not_finish_marker() {
+        let r = HangReport {
+            kind: HangKind::BudgetExpired,
+            at: 1000,
+            budget: 1000,
+            stage: None,
+            cluster: None,
+            cores: vec![CoreHang {
+                hartid: 0,
+                pc: 0x80,
+                instret: 42,
+                seq: None,
+                waiting: "running",
+            }],
+            barrier_waiters: 0,
+            tcdm_busy: false,
+            ext_pending: false,
+            dma_busy: None,
+        };
+        let s = r.to_string();
+        assert!(s.contains("did not finish"), "{s}");
+        assert!(s.contains("cluster did not finish within 1000 cycles"), "{s}");
+        assert!(s.contains("core0 pc=0x80"), "{s}");
+
+        let sys = HangReport {
+            stage: Some("Compute".into()),
+            cluster: Some(2),
+            dma_busy: Some(true),
+            kind: HangKind::BudgetExpired,
+            ..r.clone()
+        };
+        let t = sys.to_string();
+        assert!(t.contains("system did not finish within 1000 cycles (stage Compute)"), "{t}");
+        assert!(t.contains("cluster 2"), "{t}");
+        assert!(t.contains("dma=busy"), "{t}");
+
+        let dead = HangReport { kind: HangKind::BarrierDeadlock, at: 137, ..r };
+        let d = dead.to_string();
+        assert!(d.contains("did not finish"), "{d}");
+        assert!(d.contains("barrier deadlock at cycle 137"), "{d}");
+    }
+}

@@ -1,5 +1,6 @@
 //! The simulation engine: cycle scheduling ([`engine`]), instruction-level
-//! trace infrastructure ([`trace`]), and in-tree randomized-test utilities
+//! trace infrastructure ([`trace`]), deterministic fault injection and
+//! hang diagnostics ([`fault`]), and in-tree randomized-test utilities
 //! ([`proptest`]).
 //!
 //! Every clocked component implements [`engine::Tick`]; the cluster's
@@ -8,8 +9,10 @@
 //! ordering contract).
 
 pub mod engine;
+pub mod fault;
 pub mod proptest;
 pub mod trace;
 
 pub use engine::{Cycle, ClockDomain, Phase, PhaseActivity, Tick};
+pub use fault::{FaultPlan, FaultStream, HangKind, HangReport};
 pub use trace::{TraceEvent, TraceMode, TraceSink, TraceUnit};

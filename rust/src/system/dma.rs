@@ -23,6 +23,7 @@
 use std::collections::VecDeque;
 
 use crate::mem::{MemPort, Tcdm};
+use crate::sim::fault::FaultStream;
 
 /// Longest single burst a DMA engine issues, in bytes (longer rows are
 /// split into back-to-back bursts).
@@ -104,6 +105,16 @@ pub struct DmaEngine {
     pub transfers: u64,
     /// Cycles with a transfer in progress.
     pub busy_cycles: u64,
+    /// Fault injection (`sim::fault`): when present, each chunk-issue
+    /// attempt draws from this stream and a strike stalls the engine for
+    /// a drawn span of cycles (a modeled transfer stall / latency
+    /// spike). `None` (the default, and any disabled plan) leaves `step`
+    /// on the exact historical path with zero RNG draws.
+    pub fault: Option<FaultStream>,
+    /// Remaining cycles of an injected stall.
+    stall_cycles: u64,
+    /// Injected stalls so far (telemetry).
+    pub stalls: u64,
 }
 
 impl Default for DmaEngine {
@@ -122,6 +133,9 @@ impl DmaEngine {
             bytes_out: 0,
             transfers: 0,
             busy_cycles: 0,
+            fault: None,
+            stall_cycles: 0,
+            stalls: 0,
         }
     }
 
@@ -142,7 +156,18 @@ impl DmaEngine {
     /// then issue the next chunk. Called from the system's `dma` phase
     /// with this engine's cluster TCDM.
     pub fn step(&mut self, tcdm: &mut Tcdm, _now: u64) {
-        let DmaEngine { port, queue, cur, bytes_in, bytes_out, transfers, busy_cycles } = self;
+        let DmaEngine {
+            port,
+            queue,
+            cur,
+            bytes_in,
+            bytes_out,
+            transfers,
+            busy_cycles,
+            fault,
+            stall_cycles,
+            stalls,
+        } = self;
         if cur.is_none() {
             match queue.pop_front() {
                 Some(x) => *cur = Some(Active { x, row: 0, off: 0, awaiting: None }),
@@ -150,6 +175,12 @@ impl DmaEngine {
             }
         }
         *busy_cycles += 1;
+        // Injected transfer stall: burn the drawn span before touching the
+        // port again (the transfer stays "in progress" for busy accounting).
+        if *stall_cycles > 0 {
+            *stall_cycles -= 1;
+            return;
+        }
         let finished = {
             let a = cur.as_mut().expect("transfer just ensured");
             if let Some(len) = a.awaiting {
@@ -186,6 +217,16 @@ impl DmaEngine {
             return; // next transfer starts next cycle
         }
         let a = cur.as_mut().expect("transfer still active");
+        // Fault injection: one Bernoulli draw per chunk-issue attempt; a
+        // strike delays the issue by a drawn span (re-drawn when the stall
+        // expires, so back-to-back spikes compound geometrically).
+        if let Some(f) = fault.as_mut() {
+            if f.strike() {
+                *stalls += 1;
+                *stall_cycles = f.span().max(1) - 1;
+                return;
+            }
+        }
         let len = (a.x.row_bytes - a.off).min(DMA_MAX_BURST);
         let ext = a.x.ext_addr + a.row * a.x.ext_stride + a.off;
         if a.x.to_tcdm {
@@ -206,6 +247,9 @@ impl DmaEngine {
         self.bytes_out = 0;
         self.transfers = 0;
         self.busy_cycles = 0;
+        self.fault = None;
+        self.stall_cycles = 0;
+        self.stalls = 0;
     }
 }
 

@@ -81,8 +81,9 @@
 pub mod dma;
 
 use crate::cluster::{Cluster, ClusterConfig};
-use crate::kernels::{self, shard, tile, KernelDef, Params, RunResult, Variant};
+use crate::kernels::{self, shard, tile, KernelDef, Params, RunError, RunResult, Variant};
 use crate::mem::{ExtMemory, Interconnect, MemPort};
+use crate::sim::fault::{FaultPlan, HangKind, HangReport};
 use crate::sim::{ClockDomain, Cycle, Tick};
 
 pub use dma::{DmaEngine, DmaXfer, DMA_MAX_BURST};
@@ -546,22 +547,87 @@ impl System {
     }
 
     /// Run all stages to completion or `max_cycles`. Returns the total
-    /// system cycle count.
+    /// system cycle count. String-error convenience wrapper around
+    /// [`System::run_watchdog`].
     pub fn run(&mut self, max_cycles: u64) -> Result<u64, String> {
+        self.run_watchdog(max_cycles).map_err(|h| h.to_string())
+    }
+
+    /// Run with a typed [`HangReport`] diagnosis on failure: budget
+    /// expiry reports which stage and cluster were in flight (per-core
+    /// pc/instret, DMA state); an injected barrier deadlock in any
+    /// cluster fires without burning the rest of the budget.
+    pub fn run_watchdog(&mut self, max_cycles: u64) -> Result<u64, Box<HangReport>> {
         for cl in &mut self.clusters {
             // Bound the fast-forward tier like `Cluster::run` does.
             cl.ff_max_cycles = max_cycles;
         }
         while !self.done() {
             if self.now >= max_cycles {
-                return Err(format!(
-                    "system did not finish within {max_cycles} cycles (stage {:?})",
-                    self.stage
-                ));
+                return Err(Box::new(self.hang_report(HangKind::BudgetExpired, max_cycles)));
+            }
+            if self.clusters.iter().any(Cluster::barrier_deadlocked) {
+                return Err(Box::new(self.hang_report(HangKind::BarrierDeadlock, max_cycles)));
             }
             self.cycle();
         }
         Ok(self.now)
+    }
+
+    /// Snapshot the system's live state into a typed [`HangReport`]: the
+    /// in-flight stage, the first deadlocked (else first unfinished)
+    /// cluster's per-core detail, and whether any DMA engine still has
+    /// work queued.
+    pub fn hang_report(&self, kind: HangKind, budget: u64) -> HangReport {
+        let culprit = self
+            .clusters
+            .iter()
+            .position(Cluster::barrier_deadlocked)
+            .or_else(|| self.clusters.iter().position(|cl| !cl.done()));
+        let mut r = match culprit {
+            Some(c) => self.clusters[c].hang_report(kind, budget),
+            None => HangReport {
+                kind,
+                at: 0,
+                budget,
+                stage: None,
+                cluster: None,
+                cores: Vec::new(),
+                barrier_waiters: 0,
+                tcdm_busy: false,
+                ext_pending: false,
+                dma_busy: None,
+            },
+        };
+        r.at = self.now;
+        r.stage = Some(format!("{:?}", self.stage));
+        r.cluster = culprit;
+        r.dma_busy = Some(self.dmas.iter().any(DmaEngine::busy));
+        r
+    }
+
+    /// Wire a fault plan's DMA-stall and interconnect-starvation streams
+    /// into this system (per-engine instances keep multi-cluster runs
+    /// order-independent). A disabled plan installs nothing.
+    pub fn install_faults(&mut self, plan: &FaultPlan) {
+        self.xbar.fault = plan.xbar_stream(0);
+        for (i, d) in self.dmas.iter_mut().enumerate() {
+            d.fault = plan.dma_stream(i as u64);
+        }
+    }
+
+    /// Apply the fault-injection knobs a [`Params`] carries: install the
+    /// plan's streams and, when requested, wedge every cluster's barrier
+    /// (the injected permanent-hang fault).
+    fn apply_params_faults(&mut self, p: &Params) {
+        if p.fault.enabled() {
+            self.install_faults(&p.fault);
+        }
+        if p.inject_barrier_hang {
+            for cl in &mut self.clusters {
+                cl.periph.hang_barrier = true;
+            }
+        }
     }
 
     /// The per-stage cycle split and DMA traffic (valid once
@@ -609,13 +675,19 @@ pub fn build_system(
 ) -> Result<(System, SysPlan), String> {
     let clusters = p.clusters.max(1);
     let base_tcdm = ClusterConfig::with_cores(p.cores).tcdm_size;
-    let fits = kernels::working_set_bytes(k.name, p.n) + 0x1000 <= base_tcdm;
-    let staged_ok = fits && (k.name != "dgemm" || p.n % (clusters * p.cores) == 0);
+    // Checked working-set arithmetic: an adversarial `n` must select the
+    // tiled path (whose planner rejects it with a typed error), not wrap
+    // u32 and masquerade as "fits".
+    let fits = kernels::working_set_checked(k.name, p.n)
+        .is_some_and(|ws| ws.saturating_add(0x1000) <= u64::from(base_tcdm));
+    let staged_ok =
+        fits && (k.name != "dgemm" || (clusters * p.cores != 0 && p.n % (clusters * p.cores) == 0));
     if p.tile_elems.is_some() || !staged_ok {
         let plan = shard::plan_tiles(k, p, clusters)?;
         let single_tile = plan.clusters.iter().all(|ct| ct.tiles.len() <= 1);
         if !(single_tile && staged_ok) {
-            let sys = build_tiled(k, variant, p, &plan, clusters);
+            let mut sys = build_tiled(k, variant, p, &plan, clusters);
+            sys.apply_params_faults(p);
             return Ok((sys, SysPlan::Tiled(plan)));
         }
         // Degenerate schedule: fall through to the staged machine.
@@ -623,6 +695,7 @@ pub fn build_system(
     let plan = shard::plan(k, p, clusters)?;
     let cfg = kernels::config_for(k, variant, p);
     let mut sys = System::new(cfg, clusters);
+    sys.apply_params_faults(p);
     shard::write_ext_inputs(&mut sys.ext, k, p);
     let prog = kernels::cached_program(k, variant, &plan.prog_params);
     for (c, sh) in plan.shards.iter().enumerate() {
@@ -668,25 +741,39 @@ pub fn run_kernel_system(
     variant: Variant,
     p: &Params,
 ) -> Result<RunResult, String> {
+    try_run_kernel_system(k, variant, p).map_err(|e| e.to_string())
+}
+
+/// [`run_kernel_system`] with the typed error: a watchdog trip (budget
+/// expiry or injected barrier deadlock) comes back as [`RunError::Hang`]
+/// carrying the [`HangReport`] — which names the in-flight stage and the
+/// culprit cluster — instead of a flattened string.
+pub fn try_run_kernel_system(
+    k: &KernelDef,
+    variant: Variant,
+    p: &Params,
+) -> Result<RunResult, RunError> {
     let clusters = p.clusters.max(1);
-    let ctx = |e: String| format!("{}/{:?} n={} clusters={}: {e}", k.name, variant, p.n, clusters);
+    let ctx = || format!("{}/{:?} n={} clusters={}", k.name, variant, p.n, clusters);
     if !shard::supports(k.name) {
         if clusters > 1 {
-            return Err(ctx(format!(
-                "kernel does not shard across clusters (shard-aware: {})",
+            return Err(RunError::Failed(format!(
+                "{}: kernel does not shard across clusters (shard-aware: {})",
+                ctx(),
                 shard::SUPPORTED.join(", ")
             )));
         }
         return run_unsharded_single(k, variant, p);
     }
-    let (mut sys, plan) = build_system(k, variant, p)?;
-    sys.run(p.max_cycles).map_err(&ctx)?;
+    let (mut sys, plan) = build_system(k, variant, p).map_err(RunError::Failed)?;
+    sys.run_watchdog(p.max_cycles)
+        .map_err(|report| RunError::Hang { context: ctx(), report })?;
     let max_err = match &plan {
         SysPlan::Staged(pl) => shard::check(&sys, k, p, pl),
         SysPlan::Tiled(_) => shard::check_outputs(&sys, k, p, clusters),
     }
-    .map_err(&ctx)?;
-    finish(sys, k, variant, p, max_err)
+    .map_err(|e| RunError::Failed(format!("{}: {e}", ctx())))?;
+    Ok(finish(sys, k, variant, p, max_err))
 }
 
 /// The 1-cluster fallback for kernels without a shard plan: host-side
@@ -696,35 +783,31 @@ fn run_unsharded_single(
     k: &KernelDef,
     variant: Variant,
     p: &Params,
-) -> Result<RunResult, String> {
+) -> Result<RunResult, RunError> {
+    let ctx = || format!("{}/{:?} n={} (system)", k.name, variant, p.n);
     let prog = kernels::cached_program(k, variant, p);
     let mut sys = System::new(kernels::config_for(k, variant, p), 1);
+    sys.apply_params_faults(p);
     sys.clusters[0].load(&prog);
     (k.setup)(&mut sys.clusters[0], p);
-    sys.run(p.max_cycles)
-        .map_err(|e| format!("{}/{:?} n={} (system): {e}", k.name, variant, p.n))?;
-    let max_err = (k.check)(&sys.clusters[0], p)?;
-    finish(sys, k, variant, p, max_err)
+    sys.run_watchdog(p.max_cycles)
+        .map_err(|report| RunError::Hang { context: ctx(), report })?;
+    let max_err = (k.check)(&sys.clusters[0], p).map_err(RunError::Failed)?;
+    Ok(finish(sys, k, variant, p, max_err))
 }
 
 /// Package a finished system run: the reported `cycles` is the compute
 /// makespan (slowest cluster's measured region); `stats` is cluster 0's
 /// bundle (identical across clusters only in shape, not content);
 /// [`RunResult::system`] carries the stage split and overlap counters.
-fn finish(
-    mut sys: System,
-    k: &KernelDef,
-    variant: Variant,
-    p: &Params,
-    max_err: f64,
-) -> Result<RunResult, String> {
+fn finish(mut sys: System, k: &KernelDef, variant: Variant, p: &Params, max_err: f64) -> RunResult {
     let all_stats: Vec<crate::cluster::ClusterStats> =
         sys.clusters.iter().map(Cluster::stats).collect();
     let cycles = all_stats.iter().map(|s| s.cluster_region_cycles()).max().unwrap_or(0);
     let summary = sys.stats_summary();
     let stats = all_stats.into_iter().next().expect("at least one cluster");
     let cluster = p.keep_cluster.then(|| Box::new(sys.clusters.swap_remove(0)));
-    Ok(RunResult {
+    RunResult {
         kernel: k.name,
         variant,
         params: *p,
@@ -733,7 +816,7 @@ fn finish(
         max_err,
         cluster,
         system: Some(summary),
-    })
+    }
 }
 
 #[cfg(test)]

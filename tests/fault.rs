@@ -1,0 +1,275 @@
+//! Fault-injection, watchdog, and serving-resilience suite (the PR 9
+//! gates): a disabled/zero-rate [`FaultPlan`] is provably inert (bit
+//! identity against the un-faulted paths), the watchdog reports typed
+//! [`HangReport`]s at exact cycles for both budget expiry and injected
+//! barrier deadlocks (cluster and System scope), injected faults delay
+//! but never corrupt results, warm pooled slots recover from wedged
+//! hangs, and the service survives a 10k-request adversarial firehose
+//! with demand conserved and FIFO fairness intact.
+
+use snitch_sim::kernels::{self, kernel_by_name, ClusterPool, Params, Variant};
+use snitch_sim::service::{fault_sweep, FaultOptions, JobRequest, Service, ServiceConfig};
+use snitch_sim::sim::fault::{FaultPlan, HangKind};
+use snitch_sim::sim::proptest::Rng;
+
+// ------------------------------------------------------------ inertness
+
+/// A zero-rate fault plan (even with a non-zero seed) draws nothing and
+/// leaves runs bit-identical to the default fault-free `Params`, on both
+/// the single-cluster and the multi-cluster `System` path. This is the
+/// tentpole's "disabled plan changes nothing" gate.
+#[test]
+fn zero_rate_fault_plan_is_bit_inert() {
+    let k = kernel_by_name("dot").expect("dot is registered");
+    let seeded = FaultPlan { seed: 0xFEED_FACE, ..FaultPlan::disabled() };
+
+    // Cluster path.
+    let base = Params::new(256, 8);
+    let plain = kernels::run_kernel(k, Variant::SsrFrep, &base).unwrap();
+    let inert = kernels::run_kernel(k, Variant::SsrFrep, &base.with_faults(seeded)).unwrap();
+    assert_eq!(plain.cycles, inert.cycles);
+    assert_eq!(plain.stats, inert.stats);
+    assert_eq!(plain.max_err.to_bits(), inert.max_err.to_bits());
+
+    // System path (clusters > 1 exercises the DMA + interconnect sites).
+    let sys = Params::new(512, 8).with_clusters(2);
+    let a = kernels::run_kernel(k, Variant::SsrFrep, &sys).unwrap();
+    let b = kernels::run_kernel(k, Variant::SsrFrep, &sys.with_faults(seeded)).unwrap();
+    assert_eq!(a.cycles, b.cycles);
+    assert_eq!(a.system, b.system);
+    assert_eq!(a.max_err.to_bits(), b.max_err.to_bits());
+}
+
+// ------------------------------------------------------------- watchdog
+
+/// Budget expiry comes back as a typed `BudgetExpired` report firing at
+/// *exactly* the budget cycle, with per-core state attached, and the
+/// rendered error keeps the legacy "did not finish" marker.
+#[test]
+fn budget_expiry_reports_typed_hang_at_the_exact_cycle() {
+    let k = kernel_by_name("dot").expect("dot is registered");
+    let p = Params::new(256, 8).with_max_cycles(100);
+    let err = kernels::try_run_kernel(k, Variant::SsrFrep, &p).unwrap_err();
+    let report = err.hang().expect("a budget trip is a typed hang");
+    assert_eq!(report.kind, HangKind::BudgetExpired);
+    assert_eq!(report.at, 100, "the watchdog fires exactly at the budget");
+    assert_eq!(report.budget, 100);
+    assert!(!report.cores.is_empty(), "per-core diagnostics attached");
+    let msg = err.to_string();
+    assert!(msg.contains("did not finish"), "legacy marker kept: {msg}");
+    assert!(msg.contains("dot/SsrFrep n=256"), "context prefix kept: {msg}");
+}
+
+/// An injected barrier hang is detected as a `BarrierDeadlock` long
+/// before the budget burns, with every live core reported parked on the
+/// barrier.
+#[test]
+fn injected_barrier_hang_yields_typed_deadlock() {
+    let k = kernel_by_name("dot").expect("dot is registered");
+    let p = Params::new(256, 8).with_barrier_hang(true);
+    let err = kernels::try_run_kernel(k, Variant::SsrFrep, &p).unwrap_err();
+    let report = err.hang().expect("a wedged barrier is a typed hang");
+    assert_eq!(report.kind, HangKind::BarrierDeadlock);
+    assert!(
+        report.at < p.max_cycles,
+        "deadlock detected at cycle {} without burning the {}-cycle budget",
+        report.at,
+        p.max_cycles
+    );
+    assert_eq!(report.barrier_waiters, 8, "all cores parked");
+    assert!(report.cores.iter().all(|c| c.waiting == "barrier"), "{:?}", report.cores);
+    assert!(err.to_string().contains("barrier deadlock"), "{err}");
+}
+
+/// A hang inside a `System` run names the pipeline stage in flight and
+/// the culprit cluster (satellite 2: "which cluster/stage was in
+/// flight"), plus the DMA engine's busy state.
+#[test]
+fn system_hang_report_names_stage_and_cluster() {
+    let k = kernel_by_name("dot").expect("dot is registered");
+    let p = Params::new(512, 8).with_clusters(2).with_barrier_hang(true);
+    let err = kernels::try_run_kernel(k, Variant::SsrFrep, &p).unwrap_err();
+    let report = err.hang().expect("typed hang at system scope");
+    assert_eq!(report.kind, HangKind::BarrierDeadlock);
+    assert!(report.stage.is_some(), "system scope reports the stage in flight");
+    assert!(report.cluster.is_some(), "and the culprit cluster");
+    assert!(report.dma_busy.is_some(), "and the DMA engine state");
+    let msg = err.to_string();
+    assert!(msg.contains("did not finish"), "legacy marker kept: {msg}");
+    assert!(msg.contains("clusters=2"), "system context kept: {msg}");
+}
+
+// ------------------------------------------- faults delay, never corrupt
+
+/// DMA stalls and interconnect starvation slow a System run down but
+/// leave its numerical result bit-identical; the same plan replays
+/// byte-identically.
+#[test]
+fn engine_faults_delay_but_never_corrupt() {
+    let k = kernel_by_name("axpy").expect("axpy is registered");
+    let base = Params::new(1024, 8).with_clusters(2);
+    let clean = kernels::run_kernel(k, Variant::Ssr, &base).unwrap();
+    let plan = FaultPlan {
+        seed: 5,
+        dma_stall_rate: 8192,
+        dma_stall_min: 8,
+        dma_stall_max: 32,
+        xbar_starve_rate: 4096,
+        xbar_starve_min: 2,
+        xbar_starve_max: 8,
+        ..FaultPlan::disabled()
+    };
+    let faulted = kernels::run_kernel(k, Variant::Ssr, &base.with_faults(plan)).unwrap();
+    assert_eq!(
+        clean.max_err.to_bits(),
+        faulted.max_err.to_bits(),
+        "faults may delay work, never change it"
+    );
+    let (c, f) = (clean.system.unwrap(), faulted.system.unwrap());
+    assert!(
+        f.total_cycles > c.total_cycles,
+        "injected outages cost cycles: {} faulted vs {} clean",
+        f.total_cycles,
+        c.total_cycles
+    );
+    let again = kernels::run_kernel(k, Variant::Ssr, &base.with_faults(plan)).unwrap();
+    assert_eq!(faulted.cycles, again.cycles, "same plan, same seed, same run");
+    assert_eq!(f.total_cycles, again.system.unwrap().total_cycles);
+}
+
+/// A warm pooled cluster wedged by an injected hang recovers on its next
+/// dispatch (`Cluster::reset` rebuilds the peripherals), serving results
+/// bit-identical to a fresh run — the mechanism slot quarantine relies
+/// on.
+#[test]
+fn pooled_cluster_recovers_after_injected_hang() {
+    let k = kernel_by_name("dot").expect("dot is registered");
+    let mut pool = ClusterPool::new();
+    let clean = Params::new(256, 8);
+    let want = kernels::run_kernel(k, Variant::SsrFrep, &clean).unwrap();
+
+    let err =
+        kernels::run_kernel_pooled(&mut pool, k, Variant::SsrFrep, &clean.with_barrier_hang(true))
+            .unwrap_err();
+    assert!(err.contains("barrier deadlock"), "{err}");
+
+    // Same shape ⇒ same (wedged) warm cluster, rewound on reuse.
+    let again = kernels::run_kernel_pooled(&mut pool, k, Variant::SsrFrep, &clean).unwrap();
+    assert_eq!(pool.stats().warm_hits, 1, "the retry reused the wedged cluster");
+    assert_eq!(again.cycles, want.cycles);
+    assert_eq!(again.max_err.to_bits(), want.max_err.to_bits());
+}
+
+// ------------------------------------------------- serving under faults
+
+/// The fault sweep's aggressive cell still serves work, every completed
+/// job passes the bit-identity gate, and demand is conserved (the sweep
+/// itself errors on either violation — this pins the counters on top).
+#[test]
+fn faulted_service_serves_verified_results() {
+    let opts = FaultOptions { rates: vec![16_384], ..FaultOptions::smoke() };
+    let run = fault_sweep(&opts).unwrap();
+    assert_eq!(run.points.len(), 1);
+    let p = &run.points[0];
+    assert!(p.stats.faults_injected > 0, "a 25% coin over a whole workload strikes: {:?}", p.stats);
+    assert!(p.stats.served > 0, "the service degrades gracefully, it does not collapse");
+    assert_eq!(p.verified, p.stats.served, "every completed job verified bit-identical");
+    assert!(p.stats.is_conserved(), "{:?}", p.stats);
+}
+
+/// Satellite 3: stream ~10k seeded-random requests — degenerate shapes
+/// included (n = 0, clusters = 0, unknown/empty kernels, unsupported
+/// variants, working-set overflows) — through a small faulted service
+/// with a tight deadline. Submission is total (no panic anywhere), and
+/// after the drain every offered request is accounted for exactly once.
+#[test]
+fn fuzzed_request_firehose_never_panics_and_conserves_demand() {
+    let kernels_pool: [&str; 5] = ["dot", "axpy", "relu", "nope", ""];
+    let variants = [Variant::Baseline, Variant::Ssr, Variant::SsrFrep];
+    let sizes: [usize; 5] = [0, 16, 64, 256, usize::MAX / 3];
+    let fault = FaultPlan {
+        seed: 0xF417,
+        dma_stall_rate: 1024,
+        dma_stall_min: 4,
+        dma_stall_max: 16,
+        xbar_starve_rate: 512,
+        xbar_starve_min: 2,
+        xbar_starve_max: 8,
+        hang_rate: 2048,
+        slot_fail_rate: 2048,
+    };
+    let cfg = ServiceConfig {
+        slots: 2,
+        cores: 2,
+        queue_capacity: 4,
+        deadline_cycles: Some(4096),
+        max_retries: 1,
+        retry_backoff_cycles: 64,
+        probe_cycles: 512,
+        fault,
+        ..ServiceConfig::default()
+    };
+    let mut svc = Service::new(cfg);
+    let mut rng = Rng::new(0xF422_F422);
+    let mut now = 0u64;
+    for _ in 0..10_000 {
+        now += u64::from(rng.below(9));
+        let req = JobRequest {
+            kernel: kernels_pool[rng.below(kernels_pool.len() as u32) as usize],
+            variant: variants[rng.below(3) as usize],
+            n: sizes[rng.below(sizes.len() as u32) as usize],
+            // 0..=3: zero must come back as a typed rejection, not a panic.
+            clusters: rng.below(4) as usize,
+            seed: rng.next_u64(),
+        };
+        svc.submit(now, req).expect("submission is total on adversarial input");
+    }
+    svc.drain().expect("drain");
+    let s = svc.stats();
+    assert_eq!(s.offered, 10_000);
+    assert!(
+        s.is_conserved(),
+        "offered {} = served {} + rejected {} + deadline-missed {} + failed {}",
+        s.offered,
+        s.served,
+        s.rejected,
+        s.deadline_misses,
+        s.failed
+    );
+    assert!(s.served > 0, "valid requests got through: {s:?}");
+    assert!(s.rejected > 0, "degenerate requests were turned away: {s:?}");
+}
+
+/// Without faults or deadlines nothing retries or fails, and dispatch
+/// order follows arrival order: among served jobs, ascending ids start
+/// in non-decreasing cycles (FIFO fairness among survivors).
+#[test]
+fn fifo_among_survivors_without_faults() {
+    let cfg = ServiceConfig { slots: 2, cores: 2, queue_capacity: 8, ..ServiceConfig::default() };
+    let mut svc = Service::new(cfg);
+    let mut rng = Rng::new(77);
+    let mut now = 0u64;
+    for i in 0..200u64 {
+        now += u64::from(rng.below(300));
+        let kernel = ["dot", "relu"][rng.below(2) as usize];
+        let n = [64usize, 128, 256][rng.below(3) as usize];
+        let _ = svc.submit(now, JobRequest::new(kernel, Variant::SsrFrep, n).with_seed(i)).unwrap();
+    }
+    svc.drain().unwrap();
+    let s = svc.stats();
+    assert!(s.is_conserved());
+    assert_eq!(s.failed + s.deadline_misses + s.retries + s.quarantines, 0, "{s:?}");
+
+    let mut served = svc.served().to_vec();
+    served.sort_by_key(|j| j.id);
+    for w in served.windows(2) {
+        assert!(
+            w[0].start <= w[1].start,
+            "FIFO violated: job #{} starts at {} but earlier #{} at {}",
+            w[1].id,
+            w[1].start,
+            w[0].id,
+            w[0].start
+        );
+    }
+}

@@ -19,12 +19,19 @@
 //! `BENCH_PR4.json` (direct vs gated engine) and `BENCH_PR6.json`
 //! (gated engine vs fast-forward) speedup records.
 //!
+//! The `hier_scaling` section sweeps the grouped two-level hierarchy
+//! ({16..1024} clusters behind a grant-capped L2 link), ticking every
+//! point sequentially and with parallel host cluster-phase threads
+//! (`-- --threads N`, 0 = auto), asserts the two bit-identical, and
+//! writes the `BENCH_PR10.json` host-speedup record.
+//!
 //! `-- --smoke` runs a reduced-size single-rep matrix, skips the JSONs,
 //! and still fails on any cross-path disagreement (the CI `bench-smoke`
 //! job). `-- --filter <substr>` re-runs only the matrix rows whose
 //! label contains the substring (e.g. `dot/+SSR+FREP/n1024/1c`) and
 //! never writes the JSONs — for regenerating or investigating a single
-//! row without paying for the whole matrix.
+//! row without paying for the whole matrix; `-- --filter hier` runs
+//! the hierarchy section alone.
 
 use std::hint::black_box;
 use std::time::Instant;
@@ -938,6 +945,146 @@ fn render_pr9_json(
     s
 }
 
+// ---------------------------------------------------------------------
+// hier_scaling: the PR10 grouped hierarchy at Manticore scale — model
+// cycles through a grant-capped L2 link plus host wall-clock with
+// sequential vs parallel cluster-phase ticking, asserted bit-identical
+// (the BENCH_PR10.json record).
+// ---------------------------------------------------------------------
+
+struct HierRow {
+    label: String,
+    clusters: usize,
+    groups: usize,
+    /// Host cluster-phase threads of the parallel run (resolved).
+    threads: usize,
+    cycles: u64,
+    l2_saturation: f64,
+    seq_ms: f64,
+    par_ms: f64,
+}
+
+impl HierRow {
+    /// Host wall-clock gain of parallel over sequential ticking.
+    fn gain(&self) -> f64 {
+        self.seq_ms / self.par_ms.max(1e-9)
+    }
+
+    fn seq_cps(&self) -> f64 {
+        self.cycles as f64 / (self.seq_ms / 1e3)
+    }
+
+    fn par_cps(&self) -> f64 {
+        self.cycles as f64 / (self.par_ms / 1e3)
+    }
+}
+
+/// One grouped-hierarchy System run per (kernel, cluster-count) point,
+/// ticked twice: sequentially (`sim_threads = 1`) and with the
+/// requested host thread budget (`--threads N`, 0 = auto) — asserting
+/// the parallel run bit-identical (cycle count, stats bundle, system
+/// summary, result bits) before reading either wall. Groups =
+/// clusters / 4 (the Manticore quadrant granularity) behind the
+/// grant-capped second-level interconnect into shared external memory.
+fn hier_scaling(smoke: bool, threads: usize) -> Vec<HierRow> {
+    let cases = [
+        ("dgemm", Variant::SsrFrep, if smoke { 16usize } else { 64 }),
+        ("dot", Variant::SsrFrep, if smoke { 256 } else { 4096 }),
+    ];
+    let counts: &[usize] = if smoke { &[16, 64] } else { &[16, 64, 256, 1024] };
+    let mut rows = Vec::new();
+    for (name, v, n) in cases {
+        let k = kernels::kernel_by_name(name).unwrap();
+        for &clusters in counts {
+            let p = Params::new(n, 8).with_clusters(clusters).with_groups(clusters / 4);
+            let resolved = snitch_sim::system::resolve_sim_threads(threads, clusters);
+            let ctx = format!("hier/{name}/n{n}/{clusters}cl");
+            let t = Instant::now();
+            let seq = snitch_sim::system::run_kernel_system(k, v, &p.with_sim_threads(1))
+                .unwrap_or_else(|e| panic!("{ctx}: {e}"));
+            let seq_ms = t.elapsed().as_secs_f64() * 1e3;
+            let t = Instant::now();
+            let par = snitch_sim::system::run_kernel_system(k, v, &p.with_sim_threads(threads))
+                .unwrap_or_else(|e| panic!("{ctx}: {e}"));
+            let par_ms = t.elapsed().as_secs_f64() * 1e3;
+            assert_eq!(seq.cycles, par.cycles, "{ctx}: parallel vs sequential cycle count");
+            assert_eq!(seq.stats, par.stats, "{ctx}: parallel vs sequential stats bundle");
+            assert_eq!(seq.system, par.system, "{ctx}: parallel vs sequential system summary");
+            assert_eq!(
+                seq.max_err.to_bits(),
+                par.max_err.to_bits(),
+                "{ctx}: parallel vs sequential result bits"
+            );
+            let s = seq.system.expect("system summary");
+            let row = HierRow {
+                label: ctx,
+                clusters,
+                groups: s.groups,
+                threads: resolved,
+                cycles: seq.cycles,
+                l2_saturation: s.l2_saturation(),
+                seq_ms,
+                par_ms,
+            };
+            println!(
+                "[bench] {}: {} groups, {} compute cycles, L2 sat {:.3}, seq {:.1} ms \
+                 ({:.2} Mc/s), par {:.1} ms ({:.2} Mc/s, {} threads, {:.2}x)",
+                row.label,
+                row.groups,
+                row.cycles,
+                row.l2_saturation,
+                row.seq_ms,
+                row.seq_cps() / 1e6,
+                row.par_ms,
+                row.par_cps() / 1e6,
+                row.threads,
+                row.gain(),
+            );
+            rows.push(row);
+        }
+    }
+    rows
+}
+
+/// Hand-rolled JSON for the hierarchy record (`BENCH_PR10.json`): one
+/// row per (kernel, cluster-count) point with the model columns and
+/// the measured sequential vs parallel host walls.
+fn render_pr10_json(rows: &[HierRow]) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"sim_hotpath/hier_scaling\",\n");
+    s.push_str("  \"regenerate\": \"cargo bench --bench sim_hotpath -- --threads 0\",\n");
+    s.push_str(
+        "  \"baseline\": \"sequential host ticking (sim_threads = 1) of the same grouped \
+         System in the same process; every parallel row asserted bit-identical (cycles, \
+         stats bundle, system summary, result bits) before timing\",\n",
+    );
+    s.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"case\": \"{}\", \"clusters\": {}, \"groups\": {}, \"threads\": {}, \
+             \"cycles\": {}, \"l2_saturation\": {:.4}, \"seq_wall_ms\": {:.3}, \
+             \"par_wall_ms\": {:.3}, \"seq_cycles_per_sec\": {:.0}, \
+             \"par_cycles_per_sec\": {:.0}, \"host_speedup\": {:.3}}}{}\n",
+            r.label,
+            r.clusters,
+            r.groups,
+            r.threads,
+            r.cycles,
+            r.l2_saturation,
+            r.seq_ms,
+            r.par_ms,
+            r.seq_cps(),
+            r.par_cps(),
+            r.gain(),
+            if i + 1 < rows.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("  ]\n");
+    s.push_str("}\n");
+    s
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     let smoke = args.iter().any(|a| a == "--smoke");
@@ -945,7 +1092,19 @@ fn main() {
         .iter()
         .position(|a| a == "--filter")
         .map(|i| args.get(i + 1).expect("--filter needs a substring argument").clone());
+    let threads: usize = args.iter().position(|a| a == "--threads").map_or(0, |i| {
+        args.get(i + 1)
+            .expect("--threads needs a count argument")
+            .parse()
+            .expect("--threads count must be an integer (0 = auto)")
+    });
     if let Some(f) = &filter {
+        if f == "hier" {
+            // Focused hierarchy run: the full seq-vs-parallel
+            // bit-identity gate and the per-point prints, no JSON.
+            hier_scaling(smoke, threads);
+            return;
+        }
         // Focused re-run of the matching matrix row(s): the full triple
         // with all bit-identity asserts and the hit-rate print, but no
         // JSON rewrite and none of the unrelated sections.
@@ -955,12 +1114,14 @@ fn main() {
     if smoke {
         // CI bench-smoke: reduced sizes, single rep, no JSON — but the
         // engine-vs-reference (fast-forward on *and* off),
-        // System-vs-legacy and serving-saturation assertions still
-        // gate, and the per-row fast-forward hit rates still print.
+        // System-vs-legacy, serving-saturation and hierarchy
+        // seq-vs-parallel assertions still gate, and the per-row
+        // fast-forward hit rates still print.
         cycles_per_sec(true, None);
         cluster_scaling(true);
         serving(true);
         fault_resilience(true);
+        hier_scaling(true, threads);
         return;
     }
     hotpath();
@@ -982,4 +1143,8 @@ fn main() {
     let json = render_pr9_json(&run, &opts, wall_ms);
     std::fs::write("BENCH_PR9.json", json).expect("write BENCH_PR9.json");
     println!("[bench] wrote BENCH_PR9.json");
+    let rows = hier_scaling(false, threads);
+    let json = render_pr10_json(&rows);
+    std::fs::write("BENCH_PR10.json", json).expect("write BENCH_PR10.json");
+    println!("[bench] wrote BENCH_PR10.json");
 }

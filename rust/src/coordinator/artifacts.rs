@@ -154,8 +154,10 @@ const TITLE_FIGURE15_16: &str = "Fig. 15/16 — power and energy efficiency (8 c
 const TITLE_VALIDATE: &str = "golden validation (simulated vs AOT JAX/Pallas via PJRT)";
 const TITLE_CLUSTER_SCALING: &str =
     "cluster scaling — sharded kernels across {1,2,4,8} clusters (8 cores each)";
+const TITLE_HIER_SCALING: &str =
+    "hierarchy scaling — grouped clusters behind a capped L2 link, {16,64,256,1024} clusters";
 
-static REGISTRY: [Artifact; 16] = [
+static REGISTRY: [Artifact; 17] = [
     sweep_artifact("figure1", TITLE_FIGURE1, no_experiments, figure1_render),
     sweep_artifact("table1", TITLE_TABLE1, table1_experiments, table1_render),
     sweep_artifact("table2", TITLE_TABLE2, table2_experiments, table2_render),
@@ -174,6 +176,14 @@ static REGISTRY: [Artifact; 16] = [
         cluster_scaling_experiments,
         cluster_scaling_render,
     ),
+    Artifact {
+        id: "hier_scaling",
+        title: TITLE_HIER_SCALING,
+        exps: no_experiments,
+        rend: hier_render,
+        pre: no_preflight,
+        build_with: Some(hier_build),
+    },
     Artifact {
         id: "serving_throughput",
         title: crate::service::SERVING_TITLE,
@@ -846,6 +856,131 @@ fn cluster_scaling_render(runs: &[RunResult]) -> crate::Result<Table> {
          shared-memory preload through the round-robin interconnect (tiled: cycles to the \
          first tile release).",
     ))
+}
+
+// --------------------------------------------------------- hier scaling
+
+/// Cluster counts of the hierarchy artifact — the Manticore sweep, up
+/// to the full 1024-cluster machine.
+const HIER_CLUSTERS: [usize; 4] = [16, 64, 256, 1024];
+/// Clusters per group (Manticore's quadrant granularity): every point
+/// runs grouped, `clusters / 4` groups behind the capped L2 link.
+const HIER_GROUP_CLUSTERS: usize = 4;
+
+/// The shard-aware kernels at their hierarchy-sweep sizes and best
+/// variants. Vectors run at 4096 so the mid-range points stay staged
+/// while 1024 clusters (8192 cores) exercises the tiled zero-work path.
+fn hier_kernels() -> [(&'static str, usize, Variant); 4] {
+    [
+        ("dgemm", 64, Variant::SsrFrep),
+        ("dot", 4096, Variant::SsrFrep),
+        ("axpy", 4096, Variant::Ssr),
+        ("relu", 4096, Variant::SsrFrep),
+    ]
+}
+
+/// Cluster counts per kernel under `opts`: the full sweep, or the CI
+/// preset (`--size`) — {16, 64} everywhere plus the Manticore-scale
+/// 1024-cluster point for dgemm, so the reduced run still renders an
+/// L2-saturated full-machine row.
+fn hier_points(kernel: &str, opts: &ArtifactOptions) -> Vec<usize> {
+    if opts.size.is_none() {
+        return HIER_CLUSTERS.to_vec();
+    }
+    let mut pts = vec![16, 64];
+    if kernel == "dgemm" {
+        pts.push(1024);
+    }
+    pts
+}
+
+/// Build the hierarchy-scaling artifact. Not an experiment sweep: each
+/// point runs [`crate::system::run_kernel_system`] directly, **twice**
+/// — sequential (`sim_threads = 1`) and auto-parallel host ticking —
+/// timing both walls and verifying the results are bit-identical (the
+/// determinism invariant, enforced here on every render as well as in
+/// the test suite). Model columns come from the sequential run.
+fn hier_build(_sweep: &Sweep, opts: &ArtifactOptions) -> crate::Result<Table> {
+    let mut t = Table::new("hier_scaling", TITLE_HIER_SCALING).with_columns(&[
+        "kernel",
+        "variant",
+        "n",
+        "clusters",
+        "groups",
+        "cycles",
+        "speedup",
+        "L2 sat",
+        "threads",
+        "host 1T",
+        "host NT",
+        "host gain",
+    ]);
+    for (kernel, full, v) in hier_kernels() {
+        let k = kernels::kernel_by_name(kernel).expect("registered kernel");
+        let n = reduced_size(kernel, full, opts);
+        let mut base = 0u64;
+        for clusters in hier_points(kernel, opts) {
+            let p = kernels::Params::new(n, SCALING_CORES)
+                .with_clusters(clusters)
+                .with_groups(clusters / HIER_GROUP_CLUSTERS);
+            let t1 = std::time::Instant::now();
+            let seq = crate::system::run_kernel_system(k, v, &p.with_sim_threads(1))?;
+            let wall_1t = t1.elapsed().as_secs_f64();
+            let tn = std::time::Instant::now();
+            let par = crate::system::run_kernel_system(k, v, &p.with_sim_threads(0))?;
+            let wall_nt = tn.elapsed().as_secs_f64();
+            if par.cycles != seq.cycles
+                || par.stats != seq.stats
+                || par.system != seq.system
+                || par.max_err.to_bits() != seq.max_err.to_bits()
+            {
+                return Err(format!(
+                    "hier_scaling: parallel host ticking diverged from sequential for \
+                     {kernel} n={n} clusters={clusters} ({} vs {} cycles)",
+                    par.cycles, seq.cycles
+                )
+                .into());
+            }
+            let s = seq.system.expect("system summary");
+            if base == 0 {
+                base = seq.cycles.max(1);
+            }
+            let label = if s.tiles > 0 {
+                format!("{kernel} (tiled)")
+            } else {
+                kernel.to_string()
+            };
+            t.push_row(vec![
+                Value::str(label),
+                Value::str(v.label()),
+                Value::int(n as i64),
+                Value::int(clusters as i64),
+                Value::int(s.groups as i64),
+                Value::int(seq.cycles as i64),
+                Value::float_fmt(base as f64 / seq.cycles.max(1) as f64, 2, 0, "×"),
+                Value::float_fmt(s.l2_saturation(), 3, 0, ""),
+                Value::int(crate::system::resolve_sim_threads(0, clusters) as i64),
+                Value::float_fmt(wall_1t * 1e3, 1, 0, " ms"),
+                Value::float_fmt(wall_nt * 1e3, 1, 0, " ms"),
+                Value::float_fmt(wall_1t / wall_nt.max(1e-9), 2, 0, "×"),
+            ]);
+        }
+    }
+    Ok(t.with_notes(
+        "model columns are host-independent: cycles is the compute-region makespan, speedup \
+         is vs that kernel's first (16-cluster) point, L2 sat is second-level grants over \
+         grant capacity (values near 1.0 mean the shared HBM-like link is the bottleneck), \
+         groups = clusters/4. Host columns are measured on the rendering machine: wall-clock \
+         of the same bit-identical run with 1 vs auto (threads column) cluster-phase host \
+         threads — see benches/sim_hotpath.rs --filter hier / BENCH_PR10.json for the \
+         pinned-thread reproducible form.",
+    ))
+}
+
+/// Render hook for registry uniformity (same shape as
+/// [`serving_render`]): rebuilds at default scale.
+fn hier_render(_runs: &[RunResult]) -> crate::Result<Table> {
+    hier_build(&Sweep::new(), &ArtifactOptions::default())
 }
 
 // ------------------------------------------------------ golden validation

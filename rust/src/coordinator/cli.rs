@@ -35,6 +35,10 @@ COMMANDS:
                             (ids beyond the paper's tables/figures:
                             `cluster_scaling` shards dgemm/axpy/dot/relu
                             across {1,2,4,8} clusters of a System;
+                            `hier_scaling` sweeps grouped clusters
+                            behind a grant-capped L2 link to the full
+                            1024-cluster machine, verifying parallel
+                            host ticking bit-identical to sequential;
                             `serving_throughput` drives the serving
                             layer with open-loop Poisson load and
                             reports latency/occupancy per load point;

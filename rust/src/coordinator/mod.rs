@@ -159,15 +159,35 @@ impl Experiment {
     /// [`kernels::ClusterPool`]: the cluster for this experiment's
     /// configuration shape is rewound and reused instead of reallocated
     /// (what [`Sweep::run`] workers do — results are identical either
-    /// way, see `tests/determinism.rs`).
+    /// way, see `tests/determinism.rs`). Standalone callers get the
+    /// whole machine as the simulation-thread budget.
     pub fn try_run_pooled(
         &self,
         pool: &mut kernels::ClusterPool,
         max_cycles: u64,
     ) -> crate::Result<RunResult> {
+        self.try_run_pooled_budgeted(pool, max_cycles, crate::system::machine_parallelism())
+    }
+
+    /// [`Experiment::try_run_pooled`] under an explicit simulation-thread
+    /// budget: when [`Params::sim_threads`] is auto (0), multi-cluster
+    /// `System` runs resolve their cluster-phase thread count against
+    /// `sim_budget` instead of the whole machine — [`Sweep::run`] passes
+    /// `machine / workers`, so `jobs × sim_threads` never oversubscribes
+    /// the host. The choice only moves wall-clock, never results
+    /// (`tests/determinism.rs`).
+    pub fn try_run_pooled_budgeted(
+        &self,
+        pool: &mut kernels::ClusterPool,
+        max_cycles: u64,
+        sim_budget: usize,
+    ) -> crate::Result<RunResult> {
         let k = kernels::kernel_by_name(self.kernel)
             .ok_or_else(|| format!("unknown kernel {}", self.kernel))?;
-        let p = self.params().with_max_cycles(max_cycles);
+        let mut p = self.params().with_max_cycles(max_cycles);
+        if p.sim_threads == 0 {
+            p.sim_threads = crate::system::auto_sim_threads(p.clusters.max(1), sim_budget.max(1));
+        }
         kernels::run_kernel_pooled(pool, k, self.variant, &p).map_err(|e| self.context(&e))
     }
 
@@ -308,6 +328,11 @@ impl Sweep {
     /// `(kernel, variant, n, cores)` context.
     pub fn run(&self, experiments: &[Experiment]) -> crate::Result<Vec<RunResult>> {
         let workers = effective_workers(experiments, self.jobs());
+        // One machine-wide thread budget shared between this pool and
+        // any worker's multi-cluster System: each worker's runs resolve
+        // their auto `sim_threads` against `machine / workers`, keeping
+        // `jobs × sim_threads` within the machine parallelism.
+        let sim_budget = (crate::system::machine_parallelism() / workers).max(1);
         let next = AtomicUsize::new(0);
         let completed = AtomicUsize::new(0);
         let slots: Vec<Mutex<Option<crate::Result<RunResult>>>> =
@@ -325,7 +350,11 @@ impl Sweep {
                         if i >= experiments.len() {
                             break;
                         }
-                        let r = experiments[i].try_run_pooled(&mut pool, opts.max_cycles);
+                        let r = experiments[i].try_run_pooled_budgeted(
+                            &mut pool,
+                            opts.max_cycles,
+                            sim_budget,
+                        );
                         *slots[i].lock().unwrap() = Some(r);
                         let done = completed.fetch_add(1, Ordering::Relaxed) + 1;
                         if let Some(cb) = &opts.on_progress {

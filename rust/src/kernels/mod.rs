@@ -136,6 +136,24 @@ pub struct Params {
     /// (a modeled permanent cluster hang). The watchdog converts it into
     /// a typed [`HangReport`] instead of burning the whole cycle budget.
     pub inject_barrier_hang: bool,
+    /// Cluster groups (the Manticore-direction hierarchy axis): `0` (the
+    /// default) keeps the flat single-level interconnect; `g > 1`
+    /// partitions the clusters into `g` groups, each behind its own
+    /// first-level round-robin interconnect, with a bandwidth-capped
+    /// second-level interconnect into the shared HBM-like external
+    /// memory (see [`crate::system::group`]). Requires
+    /// `clusters % groups == 0`.
+    pub groups: usize,
+    /// Host-side simulation threads for the System's per-cycle cluster
+    /// phase: `0` (the default) resolves automatically from the cluster
+    /// count and machine parallelism; `1` pins the sequential path;
+    /// `t > 1` ticks clusters on a scoped pool of `t` threads (clamped
+    /// to the cluster count). Results are bit-identical for every value
+    /// — clusters only interact through `mem::port` at phase boundaries
+    /// — enforced by the determinism suite. [`crate::coordinator::Sweep`]
+    /// budgets this against its own worker pool so `jobs × sim_threads`
+    /// never oversubscribes the machine.
+    pub sim_threads: usize,
 }
 
 impl Params {
@@ -151,6 +169,8 @@ impl Params {
             tile_elems: None,
             fault: FaultPlan::disabled(),
             inject_barrier_hang: false,
+            groups: 0,
+            sim_threads: 0,
         }
     }
 
@@ -199,6 +219,22 @@ impl Params {
     /// (see [`Params::inject_barrier_hang`]).
     pub fn with_barrier_hang(mut self, hang: bool) -> Params {
         self.inject_barrier_hang = hang;
+        self
+    }
+
+    /// Same parameters with the clusters partitioned into `groups`
+    /// groups behind a two-level interconnect hierarchy (see
+    /// [`Params::groups`]; `0` or `1` keep the flat interconnect).
+    pub fn with_groups(mut self, groups: usize) -> Params {
+        self.groups = groups;
+        self
+    }
+
+    /// Same parameters with an explicit host-side simulation thread
+    /// count for the System's cluster phase (see
+    /// [`Params::sim_threads`]; `0` = auto).
+    pub fn with_sim_threads(mut self, sim_threads: usize) -> Params {
+        self.sim_threads = sim_threads;
         self
     }
 }

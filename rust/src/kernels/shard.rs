@@ -35,6 +35,16 @@
 //! * everything else (fft, knn, montecarlo, conv2d) — **opted out**:
 //!   [`plan`] refuses, and `System` runs them single-cluster only.
 //!
+//! With a group hierarchy ([`Params::groups`]` > 1`, see
+//! [`crate::system::group`]) ownership goes **two-level**: the problem
+//! splits over groups first, then each group's contiguous share over its
+//! clusters (then cores as usual) — group × cluster × core. Each group
+//! owns a contiguous global range, so its clusters' traffic shares the
+//! same second-level locality the interconnect topology has. Both levels
+//! are remainder-aware; the flat path (`groups ≤ 1`) keeps the exact
+//! single-level arithmetic, and even shapes make the two splits
+//! coincide.
+//!
 //! ## Shared-memory layout
 //!
 //! The full-problem TCDM image is mirrored into the shared memory at
@@ -120,6 +130,35 @@ fn split(total: usize, parts: usize) -> Vec<(usize, usize)> {
     out
 }
 
+/// Two-level split: `total` over `groups`, then each group's contiguous
+/// share over its `per_group` clusters, flattened to cluster index
+/// order (the module doc's two-level ownership). Coincides with
+/// `split(total, groups × per_group)` when both levels divide evenly.
+fn split2(total: usize, groups: usize, per_group: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::with_capacity(groups * per_group);
+    for &(glo, gcnt) in &split(total, groups) {
+        for (l, cnt) in split(gcnt, per_group) {
+            out.push((glo + l, cnt));
+        }
+    }
+    out
+}
+
+/// Per-cluster ownership ranges: the flat even split, or the two-level
+/// group × cluster split ([`split2`]) when `groups > 1`.
+fn cluster_ranges(n: usize, clusters: usize, groups: usize) -> Result<Vec<(usize, usize)>, String> {
+    if groups > 1 {
+        if clusters % groups != 0 {
+            return Err(format!(
+                "clusters must partition evenly into groups: {clusters} % {groups} != 0"
+            ));
+        }
+        Ok(split2(n, groups, clusters / groups))
+    } else {
+        Ok(split(n, clusters))
+    }
+}
+
 /// Shard `k`'s problem across `clusters` clusters of `p.cores` cores.
 pub fn plan(k: &KernelDef, p: &Params, clusters: usize) -> Result<ShardPlan, String> {
     if !supports(k.name) {
@@ -152,11 +191,31 @@ pub fn plan(k: &KernelDef, p: &Params, clusters: usize) -> Result<ShardPlan, Str
              ({total_cores}); ragged shapes run tiled (plan_tiles)"
         ));
     }
-    let gbounds = split(n, total_cores);
+    // Per-cluster core bounds: the flat path keeps the exact one-level
+    // split over all cores; the grouped path subdivides each cluster's
+    // two-level range, refusing shapes that would leave a core empty
+    // (tiled runs tolerate those).
+    let per_cluster: Vec<Vec<(usize, usize)>> = if p.groups > 1 {
+        let ranges = cluster_ranges(n, clusters, p.groups)?;
+        let mut out = Vec::with_capacity(clusters);
+        for &(clo, ccnt) in &ranges {
+            if ccnt < p.cores {
+                return Err(format!(
+                    "{} grouped sharding left a cluster only {ccnt} elements for {} cores \
+                     (n={n}, clusters={clusters}, groups={}); such shapes run tiled",
+                    k.name, p.cores, p.groups
+                ));
+            }
+            out.push(split(ccnt, p.cores).into_iter().map(|(l, c)| (clo + l, c)).collect());
+        }
+        out
+    } else {
+        let gbounds = split(n, total_cores);
+        (0..clusters).map(|c| gbounds[c * p.cores..(c + 1) * p.cores].to_vec()).collect()
+    };
     let rowb = 8 * n as u32; // dgemm row stride in bytes
     let mut shards = Vec::with_capacity(clusters);
-    for c in 0..clusters {
-        let bounds = gbounds[c * p.cores..(c + 1) * p.cores].to_vec();
+    for (c, bounds) in per_cluster.into_iter().enumerate() {
         let lo = bounds[0].0;
         let cnt: usize = bounds.iter().map(|&(_, bc)| bc).sum();
         let off = 8 * lo as u32;
@@ -320,7 +379,7 @@ pub fn plan_tiles(k: &KernelDef, p: &Params, clusters: usize) -> Result<TilePlan
     let rowb_full = 8 * n as u32; // full-layout dgemm row stride
     let rowb_buf = 8 * nbuf as u32; // tiled dgemm buffer row stride
     let mut out = Vec::with_capacity(clusters);
-    for (c, &(clo, ccnt)) in split(n, clusters).iter().enumerate() {
+    for (c, &(clo, ccnt)) in cluster_ranges(n, clusters, p.groups)?.iter().enumerate() {
         let mut preload = Vec::new();
         let mut final_out = Vec::new();
         match k.name {
@@ -681,6 +740,55 @@ mod tests {
             .expect("auto plan");
         assert_eq!(auto.cap, tile_capacity("relu", 100_000, auto.tcdm_size));
         assert!(auto.clusters[0].tiles.len() > 1, "big vectors really tile");
+    }
+
+    /// Two-level split: contiguous group shares subdivided per cluster,
+    /// coinciding with the flat split on even shapes.
+    #[test]
+    fn split2_groups_then_clusters_and_degenerates_evenly() {
+        assert_eq!(split2(64, 2, 4), split(64, 8), "even shapes coincide");
+        let two = split2(100, 3, 2);
+        assert_eq!(two.len(), 6);
+        let mut next = 0usize;
+        for &(lo, cnt) in &two {
+            assert_eq!(lo, next, "cluster ranges stay contiguous");
+            next += cnt;
+        }
+        assert_eq!(next, 100);
+        // Group boundaries follow split(100, 3) = 34/33/33.
+        assert_eq!(two[0].1 + two[1].1, 34);
+        assert_eq!(two[2].1 + two[3].1, 33);
+        assert_eq!(two[4].1 + two[5].1, 33);
+    }
+
+    /// Grouped plans (groups > 1) keep per-cluster ownership contiguous
+    /// and every core non-empty; non-partitioning group counts and
+    /// too-small grouped shares are refused (the tiled planner tolerates
+    /// the latter, zero-work clusters included).
+    #[test]
+    fn grouped_plan_subdivides_group_shares() {
+        let dot = kernel_by_name("dot").unwrap();
+        let pl = plan(dot, &Params::new(1000, 8).with_groups(4), 8).expect("grouped plan");
+        assert_eq!(pl.shards.len(), 8);
+        let mut next = 0usize;
+        for sh in &pl.shards {
+            assert_eq!(sh.lo, next);
+            assert!(sh.bounds.iter().all(|&(_, c)| c >= 1), "every core non-empty");
+            next += sh.cnt;
+        }
+        assert_eq!(next, 1000);
+        // Group shares are split(1000, 4) = 250 each; the two clusters
+        // of a group subdivide their group's 250.
+        assert_eq!(pl.shards[0].cnt + pl.shards[1].cnt, 250);
+        assert!(plan(dot, &Params::new(1000, 8).with_groups(3), 8).is_err(), "8 % 3 != 0");
+        // 4 groups × 2 clusters over n=40: 5 elements per cluster can't
+        // feed 8 do-while cores — refused staged, planned tiled.
+        let small = Params::new(40, 8).with_groups(4);
+        let e = plan(dot, &small, 8).unwrap_err();
+        assert!(e.contains("run tiled"), "{e}");
+        let tp = plan_tiles(dot, &small.with_tile_elems(4), 8).expect("tiled tolerates");
+        let covered: usize = tp.clusters.iter().map(|ct| ct.cnt).sum();
+        assert_eq!(covered, 40);
     }
 
     #[test]

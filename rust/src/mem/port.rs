@@ -25,6 +25,14 @@
 //! shared memory by a `System`. Request/response timing through an
 //! uncontended interconnect adds one arbitration cycle; contended clients
 //! serialize in round-robin order.
+//!
+//! [`MemPort`] also implements [`MemDevice`] itself: a port *is* a valid
+//! device endpoint, which is how interconnects compose into a hierarchy —
+//! a group-level arbiter routes its clusters' ports into one "up" port,
+//! and a second-level arbiter routes the up ports into the real memory
+//! (see [`crate::system::group`]). Backpressure composes too: an occupied
+//! up-port slot simply withholds `take_response`, exactly like a busy
+//! device port.
 
 use std::collections::VecDeque;
 
@@ -69,6 +77,33 @@ impl MemDevice for ExtMemory {
 
     fn take_burst(&mut self, port: usize) -> Option<Vec<u8>> {
         ExtMemory::take_burst(self, port)
+    }
+}
+
+/// A [`MemPort`] is itself a valid [`MemDevice`]: submissions queue as
+/// pending requests (for an upstream arbiter to grant onward) and the
+/// per-subport response slots serve as the device-side response surface.
+/// The `now` stamps are ignored — latency accrues in the real backing
+/// device once the upstream arbiter grants the forwarded request.
+impl MemDevice for MemPort {
+    fn submit(&mut self, port: usize, addr: u32, op: MemOp, _now: u64) {
+        MemPort::submit(self, port, addr, op);
+    }
+
+    fn submit_burst(&mut self, port: usize, addr: u32, len: u32, _now: u64) {
+        MemPort::submit_burst(self, port, addr, len);
+    }
+
+    fn submit_burst_write(&mut self, port: usize, addr: u32, bytes: Vec<u8>, _now: u64) {
+        MemPort::submit_burst_write(self, port, addr, bytes);
+    }
+
+    fn take_response(&mut self, port: usize) -> Option<TcdmResponse> {
+        MemPort::take_response(self, port)
+    }
+
+    fn take_burst(&mut self, port: usize) -> Option<Vec<u8>> {
+        MemPort::take_burst(self, port)
     }
 }
 
@@ -492,6 +527,48 @@ mod tests {
         for (i, want) in payload.iter().enumerate() {
             assert_eq!(dev.read(EXT_BASE + 256 + i as u32, 1), u64::from(*want));
         }
+    }
+
+    /// Two-level composition: client ports → L1 arbiter → an "up"
+    /// [`MemPort`] used as the device → L2 arbiter → the real memory.
+    /// Each request pays exactly one extra grant cycle vs the flat path;
+    /// responses flow back through both delivery loops in one cycle.
+    #[test]
+    fn memport_as_device_composes_two_interconnect_levels() {
+        let mut dev = ExtMemory::new(2);
+        dev.write(EXT_BASE + 8, 0x11, 8);
+        dev.write(EXT_BASE + 4096, 0x22, 8);
+        let mut l2 = Interconnect::new(1);
+        let mut l1 = Interconnect::new(1);
+        let mut up = MemPort::new(2);
+        let mut a = MemPort::new(1);
+        let mut b = MemPort::new(1);
+        a.submit(0, EXT_BASE + 8, MemOp::Read { size: 8 });
+        b.submit(0, EXT_BASE + 4096, MemOp::Read { size: 8 });
+        let mut got = [None::<(u64, u64)>; 2];
+        for now in 0..256u64 {
+            dev.tick(now);
+            l2.route(&mut [&mut up], &mut dev, now);
+            l1.route(&mut [&mut a, &mut b], &mut up, now);
+            if let Some(r) = a.take_response(0) {
+                got[0].get_or_insert((now, r.data));
+            }
+            if let Some(r) = b.take_response(0) {
+                got[1].get_or_insert((now, r.data));
+            }
+            if got.iter().all(Option::is_some) {
+                break;
+            }
+        }
+        let (a_cycle, a_data) = got[0].expect("client a served");
+        let (b_cycle, b_data) = got[1].expect("client b served");
+        assert_eq!((a_data, b_data), (0x11, 0x22));
+        // a: L1 grant at 0, L2 grant at 1, device latency from there —
+        // one cycle later than the flat single-level round trip.
+        assert_eq!(a_cycle, crate::mem::ext::EXT_LATENCY + 1);
+        // b serializes behind a at L1 (one grant per cycle).
+        assert!(b_cycle > a_cycle);
+        assert!(up.quiet() && l1.quiet() && l2.quiet(), "all levels drained");
     }
 
     #[test]

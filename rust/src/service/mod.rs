@@ -109,6 +109,13 @@ pub struct ServiceConfig {
     /// Deterministic fault plan (see [`FaultPlan`]); the disabled
     /// default draws nothing and leaves every run bit-identical.
     pub fault: FaultPlan,
+    /// Host-simulation thread budget for `clusters > 1` jobs: forwarded
+    /// to [`Params::sim_threads`] so every System the service builds
+    /// resolves its cluster-phase threads against one shared budget
+    /// instead of constructing ad-hoc per-run parallelism. `0` (the
+    /// default) resolves automatically; the choice never affects
+    /// results, only wall-clock.
+    pub sim_threads: usize,
 }
 
 impl Default for ServiceConfig {
@@ -126,6 +133,7 @@ impl Default for ServiceConfig {
             backoff_cap_cycles: 4096,
             probe_cycles: 8192,
             fault: FaultPlan::disabled(),
+            sim_threads: 0,
         }
     }
 }
@@ -508,7 +516,11 @@ impl Service {
                 let host = &mut slots[slot];
                 if req.clusters > 1 {
                     // Multi-cluster requests build a per-run System —
-                    // nothing to pool (same rule as run_kernel_pooled).
+                    // nothing to pool (same rule as run_kernel_pooled),
+                    // but its cluster-phase threads ride the service's
+                    // shared budget ([`ServiceConfig::sim_threads`],
+                    // via `params_for`) rather than ad-hoc per-run
+                    // parallelism.
                     kernels::try_run_kernel(k, req.variant, &p)
                 } else {
                     kernels::try_run_kernel_pooled_with_cache(
@@ -643,7 +655,8 @@ fn admission_reason(request: &JobRequest) -> Option<RejectReason> {
 pub fn params_for(req: &JobRequest, cfg: &ServiceConfig) -> Params {
     let mut p = Params::new(req.n, cfg.cores)
         .with_max_cycles(cfg.max_cycles)
-        .with_clusters(req.clusters);
+        .with_clusters(req.clusters)
+        .with_sim_threads(cfg.sim_threads);
     p.seed = req.seed;
     p
 }

@@ -1,0 +1,238 @@
+//! The group-level interconnect hierarchy (the Manticore direction):
+//! clusters partitioned into groups, each group behind its own
+//! first-level round-robin interconnect, with a bandwidth-capped
+//! second-level interconnect into the shared HBM-like [`ExtMemory`].
+//!
+//! Manticore (Zaruba et al., PAPERS.md) replicates the Snitch cluster
+//! 1024× as 4-cluster *groups* under a two-level AXI hierarchy into
+//! HBM; this module reproduces that topology with the existing
+//! [`MemDevice`]/[`MemPort`] contract and nothing else. The key move is
+//! that [`MemPort`] itself implements [`MemDevice`] (see
+//! [`crate::mem::port`]): a group's "up" port is simultaneously the
+//! *device* its first-level interconnect routes into and a *client* of
+//! the second-level interconnect — requests forward upward through the
+//! port's pending queue, responses flow back down through its per-subport
+//! slots, and head-of-line backpressure composes across levels for free.
+//!
+//! ## Timing contract
+//!
+//! Each cycle [`Hier::route`] runs **one pass per level, second level
+//! first**:
+//!
+//! 1. `l2.route(ups, ext)` — deliver matured external-memory responses
+//!    into the up-port slots, then grant queued up-port requests (up to
+//!    [`Hier::l2`]'s `grants_per_cycle` — the HBM link width);
+//! 2. per group, `l1.route(clients, up)` — deliver up-port responses to
+//!    the group's cluster/DMA ports, then grant their queued requests
+//!    into the up port (one grant per cycle per group, like the flat
+//!    system's crossbar).
+//!
+//! So relative to the flat single-level system each request pays **+1
+//! cycle** (L1 grant at cycle `t` queues the request in the up port; the
+//! L2 grant that starts the device latency lands at `t + 1`) and each
+//! response pays **+0 cycles** (the L2 pass pulls it into the up port
+//! and the same cycle's L1 pass hands it to the client) — an uncontended
+//! single-beat access round-trips in exactly
+//! [`crate::mem::ext::EXT_LATENCY`]` + 1` cycles, pinned by a unit test
+//! in `mem::port`. Contention adds queueing at either level: the
+//! per-group L1 serializes a group's clusters, the L2 grant cap models
+//! the shared HBM bandwidth ceiling
+//! ([`crate::system::SystemStats::l2_saturation`] reports how hard it
+//! was driven).
+//!
+//! ## Determinism
+//!
+//! The route order is a pure function of structure — L2 first, then
+//! groups in index order, each group's clients enumerated clusters-then-
+//! DMA-engines in cluster index order — so hierarchical runs are exactly
+//! as deterministic as flat ones, and the parallel cluster-phase refactor
+//! (see [`crate::system`], "parallel ticking") never touches any of this:
+//! all interconnect traffic merges in this single-threaded phase.
+
+use crate::cluster::Cluster;
+use crate::mem::{ExtMemory, Interconnect, MemPort};
+use crate::system::dma::DmaEngine;
+
+/// Default second-level grant cap (requests per cycle the shared
+/// HBM-like link accepts). Wider than the per-group L1s' single grant —
+/// the second level aggregates whole groups, like Manticore's wide HBM
+/// channels vs. the narrow per-group crossbars.
+pub const DEFAULT_L2_GRANTS: usize = 8;
+
+/// The two-level interconnect state a [`crate::system::System`] installs
+/// when [`crate::kernels::Params::groups`] `> 1`: one first-level
+/// arbiter + one up port per group, and the shared second-level arbiter.
+pub struct Hier {
+    /// Clusters per group (`clusters / groups`, validated to divide).
+    pub per_group: usize,
+    /// First-level arbiters, one per group (single grant per cycle, like
+    /// the flat system's crossbar).
+    pub l1s: Vec<Interconnect>,
+    /// Per-group up ports: the device endpoint of the group's L1 and a
+    /// client of the L2. Sized `per_group × cores + per_group` subports
+    /// (the group's core ports, then its DMA ports), so the up ports
+    /// together tile the external memory's port space exactly like the
+    /// flat client list does.
+    pub ups: Vec<MemPort>,
+    /// The second-level arbiter into the shared external memory; its
+    /// `grants_per_cycle` is the modeled HBM bandwidth cap.
+    pub l2: Interconnect,
+}
+
+impl Hier {
+    /// A hierarchy of `groups` groups over `clusters` clusters of
+    /// `cores` cores each. Errors when the clusters don't partition
+    /// (`clusters % groups != 0`) or fewer than two groups are asked for
+    /// (one group is just the flat system with an extra hop — keep
+    /// [`crate::kernels::Params::groups`] at 0 instead).
+    pub fn new(
+        clusters: usize,
+        cores: usize,
+        groups: usize,
+        l2_grants: usize,
+    ) -> Result<Hier, String> {
+        if groups < 2 {
+            return Err(format!("a hierarchy needs at least 2 groups (got {groups})"));
+        }
+        if clusters % groups != 0 {
+            return Err(format!(
+                "clusters must partition evenly into groups: {clusters} % {groups} != 0"
+            ));
+        }
+        let per_group = clusters / groups;
+        let subports = per_group * cores + per_group;
+        Ok(Hier {
+            per_group,
+            l1s: (0..groups).map(|_| Interconnect::new(1)).collect(),
+            ups: (0..groups).map(|_| MemPort::new(subports)).collect(),
+            l2: Interconnect::new(l2_grants),
+        })
+    }
+
+    pub fn groups(&self) -> usize {
+        self.l1s.len()
+    }
+
+    /// One hierarchical routing pass (module docs, "Timing contract"):
+    /// the L2 level first so responses matured in the external memory
+    /// reach client ports within the same phase, then every group's L1
+    /// in index order. Client order inside a group mirrors the flat
+    /// system — the group's clusters' external ports, then its DMA
+    /// engines' ports.
+    pub fn route(
+        &mut self,
+        clusters: &mut [Cluster],
+        dmas: &mut [DmaEngine],
+        ext: &mut ExtMemory,
+        now: u64,
+    ) {
+        let pg = self.per_group;
+        debug_assert_eq!(clusters.len(), pg * self.l1s.len(), "hierarchy covers all clusters");
+        {
+            let mut ups: Vec<&mut MemPort> = self.ups.iter_mut().collect();
+            self.l2.route(&mut ups, ext, now);
+        }
+        for (g, (l1, up)) in self.l1s.iter_mut().zip(self.ups.iter_mut()).enumerate() {
+            let cls = &mut clusters[g * pg..(g + 1) * pg];
+            let ds = &mut dmas[g * pg..(g + 1) * pg];
+            let mut clients: Vec<&mut MemPort> = Vec::with_capacity(2 * pg);
+            for cl in cls.iter_mut() {
+                clients.push(cl.ext.as_port_mut().expect("system clusters use ext ports"));
+            }
+            for d in ds.iter_mut() {
+                clients.push(&mut d.port);
+            }
+            l1.route(&mut clients, up, now);
+        }
+    }
+
+    /// Whether any level still carries traffic: a granted request or
+    /// response in flight at either level, or a forwarded request parked
+    /// in an up port awaiting its L2 grant. The hierarchy half of the
+    /// system's `xbar` activity gate (client-side pending queues are the
+    /// gate's other half, same as the flat system).
+    pub fn active(&self) -> bool {
+        !self.l2.quiet()
+            || self.l1s.iter().any(|x| !x.quiet())
+            || self.ups.iter().any(|u| u.pending_len() > 0)
+    }
+
+    /// Requests forwarded through the up ports so far (the second-level
+    /// traffic counter — each client request granted by an L1 bumps its
+    /// group's up-port access count).
+    pub fn forwarded(&self) -> u64 {
+        self.ups.iter().map(|u| u.accesses).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterConfig;
+    use crate::mem::map::EXT_BASE;
+    use crate::mem::MemOp;
+    use crate::sim::Tick;
+
+    #[test]
+    fn hier_new_validates_the_partition() {
+        assert!(Hier::new(8, 8, 3, DEFAULT_L2_GRANTS).is_err(), "8 % 3 != 0");
+        assert!(Hier::new(8, 8, 1, DEFAULT_L2_GRANTS).is_err(), "one group is flat");
+        assert!(Hier::new(12, 8, 16, DEFAULT_L2_GRANTS).is_err(), "more groups than clusters");
+        let h = Hier::new(8, 8, 4, DEFAULT_L2_GRANTS).expect("4 groups of 2");
+        assert_eq!(h.groups(), 4);
+        assert_eq!(h.per_group, 2);
+        // 2 clusters × 8 cores + 2 DMA ports per group.
+        assert_eq!(h.ups[0].num_subports(), 18);
+        assert_eq!(h.l2.grants_per_cycle, DEFAULT_L2_GRANTS);
+        assert_eq!(h.l1s[0].grants_per_cycle, 1);
+        assert!(!h.active());
+    }
+
+    /// A core-side load issued through a cluster's external port
+    /// round-trips the full two-level hierarchy: L1 grant → up port →
+    /// L2 grant → external memory → up-port slot → client slot. Both
+    /// groups' traffic lands at distinct device ports and every level
+    /// drains back to quiet.
+    #[test]
+    fn hier_routes_cluster_ports_through_two_levels() {
+        let cfg = ClusterConfig::with_cores(1);
+        let n = 4usize;
+        let mut clusters: Vec<Cluster> = (0..n)
+            .map(|_| {
+                let mut cl = Cluster::new(cfg);
+                cl.use_ext_port();
+                cl
+            })
+            .collect();
+        let mut dmas: Vec<DmaEngine> = (0..n).map(|_| DmaEngine::new()).collect();
+        let mut ext = ExtMemory::new(n * cfg.num_cores() + n);
+        let mut h = Hier::new(n, cfg.num_cores(), 2, DEFAULT_L2_GRANTS).expect("hier");
+
+        // One read per cluster, each of a distinct preloaded word,
+        // submitted straight into the clusters' external ports.
+        for (c, cl) in clusters.iter_mut().enumerate() {
+            ext.write(EXT_BASE + 0x40 * c as u32, 0xA0 + c as u64, 4);
+            let port = cl.ext.as_port_mut().expect("port");
+            port.submit(0, EXT_BASE + 0x40 * c as u32, MemOp::Read { size: 4 });
+        }
+        let mut got: Vec<Option<u64>> = vec![None; n];
+        for now in 0..200u64 {
+            ext.tick(now);
+            h.route(&mut clusters, &mut dmas, &mut ext, now);
+            for (c, cl) in clusters.iter_mut().enumerate() {
+                if got[c].is_none() {
+                    if let Some(r) = cl.ext.as_port_mut().expect("port").take_response(0) {
+                        got[c] = Some(r.data);
+                    }
+                }
+            }
+        }
+        for (c, g) in got.iter().enumerate() {
+            assert_eq!(*g, Some(0xA0 + c as u64), "cluster {c} round-tripped");
+        }
+        assert_eq!(h.forwarded(), n as u64, "every request crossed the up ports");
+        assert_eq!(h.l2.grants, n as u64);
+        assert_eq!(h.l1s[0].grants + h.l1s[1].grants, n as u64);
+        assert!(!h.active(), "hierarchy drained");
+    }
+}

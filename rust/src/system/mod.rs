@@ -77,8 +77,38 @@
 //! [`crate::kernels::Params::tile_elems`] forces it. Kernels without a
 //! shard plan run unsharded on a 1-cluster system (and refuse
 //! `clusters > 1`).
+//!
+//! ## Hierarchy (groups)
+//!
+//! [`crate::kernels::Params::groups`]` > 1` installs a [`group::Hier`]:
+//! the clusters partition into groups, each behind its own first-level
+//! round-robin interconnect, forwarding through a per-group "up"
+//! [`MemPort`] into a grant-capped second-level interconnect that fronts
+//! the shared memory — the Manticore topology, built entirely from the
+//! existing [`crate::mem::MemDevice`]/[`MemPort`] contract. The `xbar`
+//! phase routes the whole hierarchy (second level first, so responses
+//! reach clients in the same phase); everything else — stage machine,
+//! tile scheduler, DMA engines, stats — is oblivious to it. See
+//! [`group`] for the timing contract.
+//!
+//! ## Parallel ticking
+//!
+//! The `clusters` phase is index-disjoint: iteration `c` touches only
+//! `clusters[c]` and its skip-debt slot, and reads a DMA-idle flag
+//! precomputed before the loop — clusters interact *only* through
+//! `mem::port` traffic, which the single-threaded `xbar` phase merges in
+//! fixed client order. So with [`System::sim_threads`]` > 1` the phase
+//! fans the per-cluster ticks out over a scoped thread pool (the phase
+//! boundary is the barrier) and results stay **bit-identical** to the
+//! sequential order for every thread count — cycles, stats bundles,
+//! trace hashes — enforced by the determinism suite.
+//! [`resolve_sim_threads`] maps [`crate::kernels::Params::sim_threads`]
+//! (0 = auto) to an explicit count; [`crate::coordinator::Sweep`]
+//! budgets it against its own worker pool so `jobs × sim_threads` never
+//! oversubscribes the machine.
 
 pub mod dma;
+pub mod group;
 
 use crate::cluster::{Cluster, ClusterConfig};
 use crate::kernels::{self, shard, tile, KernelDef, Params, RunError, RunResult, Variant};
@@ -131,6 +161,15 @@ pub struct SystemStats {
     pub dma_hidden_cycles: u64,
     /// Tiles scheduled across all clusters (0 for staged runs).
     pub tiles: u64,
+    /// Cluster groups behind the two-level interconnect (0 = flat
+    /// single-level crossbar, the default).
+    pub groups: usize,
+    /// Requests the second-level interconnect granted toward the shared
+    /// memory (0 when flat).
+    pub l2_grants: u64,
+    /// The second-level grant cap per cycle — the modeled HBM link
+    /// width (0 when flat).
+    pub l2_grants_per_cycle: u64,
 }
 
 impl SystemStats {
@@ -143,6 +182,20 @@ impl SystemStats {
             0.0
         } else {
             self.dma_hidden_cycles as f64 / self.dma_busy_cycles as f64
+        }
+    }
+
+    /// Fraction of the second-level link's grant capacity the run
+    /// actually used — `l2_grants / (total_cycles × l2_grants_per_cycle)`,
+    /// 0 for flat runs. The L2-bandwidth saturation column of the
+    /// `hier_scaling` artifact: values near 1.0 mean the shared HBM-like
+    /// link is the bottleneck at that cluster count.
+    pub fn l2_saturation(&self) -> f64 {
+        let cap = self.total_cycles.saturating_mul(self.l2_grants_per_cycle);
+        if cap == 0 {
+            0.0
+        } else {
+            self.l2_grants as f64 / cap as f64
         }
     }
 }
@@ -177,6 +230,14 @@ pub struct System {
     /// The shared external memory (all clusters, all DMA engines).
     pub ext: ExtMemory,
     pub xbar: Interconnect,
+    /// The two-level group hierarchy when [`Params::groups`] asked for
+    /// one; `None` routes the flat single-level `xbar` (the default).
+    pub hier: Option<group::Hier>,
+    /// Host threads for the `clusters` phase (1 = sequential, the
+    /// default for direct construction; [`build_system`] resolves it
+    /// from [`Params::sim_threads`]). Results are bit-identical for
+    /// every value — see the module docs, "Parallel ticking".
+    pub sim_threads: usize,
     /// The system-level cycle engine (stage phases; cluster-internal
     /// phases run nested inside the `clusters` phase).
     pub engine: ClockDomain<System>,
@@ -217,7 +278,10 @@ fn gate_ext(sys: &System) -> bool {
 }
 
 fn phase_xbar(sys: &mut System, now: Cycle) {
-    let System { clusters, dmas, ext, xbar, .. } = sys;
+    let System { clusters, dmas, ext, xbar, hier, .. } = sys;
+    if let Some(h) = hier {
+        return h.route(clusters, dmas, ext, now);
+    }
     let mut clients: Vec<&mut MemPort> = Vec::with_capacity(clusters.len() + dmas.len());
     for cl in clusters.iter_mut() {
         clients.push(cl.ext.as_port_mut().expect("system clusters use ext ports"));
@@ -234,7 +298,11 @@ fn phase_xbar(sys: &mut System, now: Cycle) {
 /// kernels issue no external traffic while computing — skip the phase
 /// and its per-cycle client-list allocation entirely.
 fn gate_xbar(sys: &System) -> bool {
-    !sys.xbar.quiet()
+    let levels_busy = match &sys.hier {
+        Some(h) => h.active(),
+        None => !sys.xbar.quiet(),
+    };
+    levels_busy
         || sys.ext.active()
         || sys.clusters.iter().any(|cl| cl.ext.has_pending())
         || sys.dmas.iter().any(|d| d.port.pending_len() > 0)
@@ -265,24 +333,55 @@ fn gate_dma(sys: &System) -> bool {
 /// cycles as `skip` debt, so system-cycle totals stay bit-identical with
 /// fast-forward on or off.
 fn phase_clusters(sys: &mut System, _now: Cycle) {
-    let System { clusters, dmas, skip, tiled, stage, .. } = sys;
-    if tiled.is_none() && *stage != Stage::Compute {
+    let tiled = sys.tiled.is_some();
+    if !tiled && sys.stage != Stage::Compute {
         return;
     }
-    for (c, cl) in clusters.iter_mut().enumerate() {
-        if cl.done() {
-            continue;
+    let threads = sys.sim_threads.min(sys.clusters.len());
+    let System { clusters, dmas, skip, .. } = sys;
+    if threads > 1 {
+        // Parallel fan-out (module docs, "Parallel ticking"): each chunk
+        // owns a disjoint clusters/skip slice, the DMA-idle flags are
+        // snapshot up front (nothing in this phase mutates the engines),
+        // and the scope join is the phase barrier. Chunking never
+        // affects results — ticks are independent within a cycle.
+        let idle: Vec<bool> = dmas.iter().map(DmaEngine::idle).collect();
+        let chunk = clusters.len().div_ceil(threads);
+        std::thread::scope(|scope| {
+            for ((cls, sks), idl) in
+                clusters.chunks_mut(chunk).zip(skip.chunks_mut(chunk)).zip(idle.chunks(chunk))
+            {
+                scope.spawn(move || {
+                    for ((cl, sk), &dma_idle) in cls.iter_mut().zip(sks.iter_mut()).zip(idl) {
+                        tick_cluster(cl, sk, dma_idle, tiled);
+                    }
+                });
+            }
+        });
+    } else {
+        for ((cl, sk), d) in clusters.iter_mut().zip(skip.iter_mut()).zip(dmas.iter()) {
+            tick_cluster(cl, sk, d.idle(), tiled);
         }
-        if skip[c] > 0 {
-            skip[c] -= 1;
-            continue;
-        }
-        cl.ff_port_ok = if tiled.is_some() { true } else { dmas[c].idle() };
-        let before = cl.now;
-        cl.cycle();
-        cl.ff_port_ok = false;
-        skip[c] = cl.now - before - 1;
     }
+}
+
+/// One cluster's share of the `clusters` phase — exactly the sequential
+/// loop body, factored out so the parallel and sequential paths cannot
+/// drift: done-check, skip-debt repayment, fast-forward vouching, one
+/// cluster cycle, new debt.
+fn tick_cluster(cl: &mut Cluster, sk: &mut u64, dma_idle: bool, tiled: bool) {
+    if cl.done() {
+        return;
+    }
+    if *sk > 0 {
+        *sk -= 1;
+        return;
+    }
+    cl.ff_port_ok = if tiled { true } else { dma_idle };
+    let before = cl.now;
+    cl.cycle();
+    cl.ff_port_ok = false;
+    *sk = cl.now - before - 1;
 }
 
 fn gate_clusters(sys: &System) -> bool {
@@ -441,6 +540,8 @@ impl System {
             // engine (the interconnect flattens clients in that order).
             ext: ExtMemory::new(num_clusters * cores + num_clusters),
             xbar: Interconnect::new(1),
+            hier: None,
+            sim_threads: 1,
             engine: System::default_schedule(),
             now: 0,
             stage: Stage::DmaIn,
@@ -606,11 +707,29 @@ impl System {
         r
     }
 
+    /// Install the two-level group hierarchy (see [`group`]): subsequent
+    /// `xbar` phases route per-group first-level arbiters and the
+    /// grant-capped second-level link instead of the flat crossbar.
+    /// Install before any traffic flows (and before [`install_faults`],
+    /// whose interconnect stream targets the active topology).
+    ///
+    /// [`install_faults`]: System::install_faults
+    pub fn install_hier(&mut self, groups: usize, l2_grants: usize) -> Result<(), String> {
+        let h = group::Hier::new(self.clusters.len(), self.cfg.num_cores(), groups, l2_grants)?;
+        self.hier = Some(h);
+        Ok(())
+    }
+
     /// Wire a fault plan's DMA-stall and interconnect-starvation streams
     /// into this system (per-engine instances keep multi-cluster runs
-    /// order-independent). A disabled plan installs nothing.
+    /// order-independent). A disabled plan installs nothing. With a
+    /// hierarchy installed the interconnect stream starves the shared
+    /// second-level link — the hop every cluster depends on.
     pub fn install_faults(&mut self, plan: &FaultPlan) {
-        self.xbar.fault = plan.xbar_stream(0);
+        match &mut self.hier {
+            Some(h) => h.l2.fault = plan.xbar_stream(0),
+            None => self.xbar.fault = plan.xbar_stream(0),
+        }
         for (i, d) in self.dmas.iter_mut().enumerate() {
             d.fault = plan.dma_stream(i as u64);
         }
@@ -645,6 +764,9 @@ impl System {
             dma_busy_cycles: self.dmas.iter().map(|d| d.busy_cycles).sum(),
             dma_hidden_cycles: self.dma_hidden_cycles,
             tiles: self.tiles_total,
+            groups: self.hier.as_ref().map_or(0, group::Hier::groups),
+            l2_grants: self.hier.as_ref().map_or(0, |h| h.l2.grants),
+            l2_grants_per_cycle: self.hier.as_ref().map_or(0, |h| h.l2.grants_per_cycle as u64),
         }
     }
 }
@@ -654,6 +776,60 @@ impl System {
 pub enum SysPlan {
     Staged(shard::ShardPlan),
     Tiled(shard::TilePlan),
+}
+
+/// Below this cluster count auto thread resolution stays sequential:
+/// the per-cycle scoped-spawn overhead of the parallel `clusters` phase
+/// only pays for itself once a cycle carries enough cluster work.
+pub const PAR_MIN_CLUSTERS: usize = 16;
+
+/// Clusters per host thread the auto resolution aims for — coarse
+/// chunks keep the spawn/join cost per cycle small relative to the
+/// ticking work each thread owns.
+pub const CLUSTERS_PER_THREAD: usize = 4;
+
+/// The host machine's available parallelism (1 when undetectable).
+pub fn machine_parallelism() -> usize {
+    std::thread::available_parallelism().map(std::num::NonZeroUsize::get).unwrap_or(1)
+}
+
+/// The automatic `sim_threads` choice for a system of `clusters`
+/// clusters under a thread budget `cap`: sequential below
+/// [`PAR_MIN_CLUSTERS`], otherwise one thread per
+/// [`CLUSTERS_PER_THREAD`] clusters, clamped to the cap. Never affects
+/// results — only wall-clock (see the module docs, "Parallel ticking").
+pub fn auto_sim_threads(clusters: usize, cap: usize) -> usize {
+    if clusters < PAR_MIN_CLUSTERS {
+        1
+    } else {
+        cap.clamp(1, clusters / CLUSTERS_PER_THREAD)
+    }
+}
+
+/// Resolve [`Params::sim_threads`] to an explicit thread count: an
+/// explicit request is honored exactly (clamped to the cluster count —
+/// more threads than clusters is pure overhead), `0` delegates to
+/// [`auto_sim_threads`] with the whole machine as the budget. Callers
+/// sharing the machine with their own worker pool
+/// ([`crate::coordinator::Sweep`]) pass a divided budget instead.
+pub fn resolve_sim_threads(requested: usize, clusters: usize) -> usize {
+    if requested > 0 {
+        requested.clamp(1, clusters.max(1))
+    } else {
+        auto_sim_threads(clusters, machine_parallelism())
+    }
+}
+
+/// Apply the host-simulation knobs a [`Params`] carries: resolve the
+/// cluster-phase thread count and install the group hierarchy when one
+/// was requested. Runs before fault installation (the interconnect
+/// fault stream targets the active topology).
+fn configure_host(sys: &mut System, p: &Params) -> Result<(), String> {
+    sys.sim_threads = resolve_sim_threads(p.sim_threads, sys.clusters.len());
+    if p.groups > 1 {
+        sys.install_hier(p.groups, group::DEFAULT_L2_GRANTS)?;
+    }
+    Ok(())
 }
 
 /// Build a ready-to-run system for a shard-aware kernel: clusters
@@ -680,13 +856,18 @@ pub fn build_system(
     // u32 and masquerade as "fits".
     let fits = kernels::working_set_checked(k.name, p.n)
         .is_some_and(|ws| ws.saturating_add(0x1000) <= u64::from(base_tcdm));
-    let staged_ok =
-        fits && (k.name != "dgemm" || (clusters * p.cores != 0 && p.n % (clusters * p.cores) == 0));
+    // Staged needs every core to own a non-empty share (`shard::plan`'s
+    // contract); at high cluster counts small problems go tiled, whose
+    // planner tolerates zero-work clusters.
+    let staged_ok = fits
+        && p.n >= clusters * p.cores
+        && (k.name != "dgemm" || (clusters * p.cores != 0 && p.n % (clusters * p.cores) == 0));
     if p.tile_elems.is_some() || !staged_ok {
         let plan = shard::plan_tiles(k, p, clusters)?;
         let single_tile = plan.clusters.iter().all(|ct| ct.tiles.len() <= 1);
         if !(single_tile && staged_ok) {
             let mut sys = build_tiled(k, variant, p, &plan, clusters);
+            configure_host(&mut sys, p)?;
             sys.apply_params_faults(p);
             return Ok((sys, SysPlan::Tiled(plan)));
         }
@@ -695,6 +876,7 @@ pub fn build_system(
     let plan = shard::plan(k, p, clusters)?;
     let cfg = kernels::config_for(k, variant, p);
     let mut sys = System::new(cfg, clusters);
+    configure_host(&mut sys, p)?;
     sys.apply_params_faults(p);
     shard::write_ext_inputs(&mut sys.ext, k, p);
     let prog = kernels::cached_program(k, variant, &plan.prog_params);
@@ -787,6 +969,7 @@ fn run_unsharded_single(
     let ctx = || format!("{}/{:?} n={} (system)", k.name, variant, p.n);
     let prog = kernels::cached_program(k, variant, p);
     let mut sys = System::new(kernels::config_for(k, variant, p), 1);
+    configure_host(&mut sys, p).map_err(RunError::Failed)?;
     sys.apply_params_faults(p);
     sys.clusters[0].load(&prog);
     (k.setup)(&mut sys.clusters[0], p);

@@ -17,6 +17,12 @@
 //! Compute stage (staged: only while the cluster's DMA engine is idle;
 //! tiled: throughout, the DMA only ever touches the inactive buffer).
 //!
+//! PR 10 adds the parallel-host-ticking legs: a `System` whose cluster
+//! phase runs on a scoped thread pool (`Params::with_sim_threads`) is
+//! bit-identical — cycles, stats bundles, stage summaries, error bits,
+//! per-cluster trace hashes — to the sequential order, for every
+//! shard-aware kernel × variant × {staged, tiled} × {2, 4} clusters.
+//!
 //! The fast-forward tier gets its own fallback section at the bottom:
 //! each perturbing event (barrier waits, foreign TCDM traffic, a
 //! simulation budget expiring inside the fast-forwarded region) must
@@ -303,6 +309,89 @@ fn tiled_system_matches_with_fast_forward_on_and_off() {
         assert_eq!(on.max_err.to_bits(), off.max_err.to_bits(), "{ctx}: max_err");
         assert_eq!(on.system, off.system, "{ctx}: stage summary incl. overlap accounting");
         assert_eq!(off.stats.ff_engagements, 0, "{ctx}: ff-off never engages");
+    }
+}
+
+/// PR 10 tentpole gate: ticking the cluster phase on a scoped host
+/// thread pool (`Params::with_sim_threads`) is bit-identical to the
+/// sequential order — region cycles, whole stats bundles, system stage
+/// summaries, validated error bits — for every shard-aware kernel ×
+/// variant × {staged, tiled} × {2, 4} clusters × {2, 4} host threads.
+/// Clusters only interact through the interconnect at phase
+/// boundaries, and the thread scope's join is that barrier; chunking
+/// must never reorder anything observable. (Trace-level identity is
+/// pinned by `parallel_host_ticking_preserves_trace_hashes` below.)
+#[test]
+fn parallel_host_ticking_is_bit_identical_to_sequential() {
+    for (name, staged_n, tiled_n, tile) in [
+        ("dgemm", 32usize, 32usize, 8usize),
+        ("dot", 256, 600, 64),
+        ("axpy", 256, 600, 64),
+        ("relu", 256, 600, 64),
+    ] {
+        let k = kernels::kernel_by_name(name).unwrap();
+        for &v in k.variants {
+            for clusters in [2usize, 4] {
+                for tiled in [false, true] {
+                    let p = if tiled {
+                        Params::new(tiled_n, 8).with_clusters(clusters).with_tile_elems(tile)
+                    } else {
+                        Params::new(staged_n, 8).with_clusters(clusters)
+                    };
+                    let seq = snitch_sim::system::run_kernel_system(k, v, &p.with_sim_threads(1))
+                        .unwrap_or_else(|e| panic!("{name} {v:?} seq: {e}"));
+                    for threads in [2usize, 4] {
+                        let par = snitch_sim::system::run_kernel_system(
+                            k,
+                            v,
+                            &p.with_sim_threads(threads),
+                        )
+                        .unwrap_or_else(|e| panic!("{name} {v:?} {threads}t: {e}"));
+                        let mode = if tiled { "tiled" } else { "staged" };
+                        let ctx = format!("{name} {v:?} {clusters}cl {mode} {threads}t");
+                        assert_eq!(seq.cycles, par.cycles, "{ctx}: region cycles");
+                        assert_eq!(seq.stats, par.stats, "{ctx}: stats bundle");
+                        assert_eq!(seq.system, par.system, "{ctx}: system stage summary");
+                        assert_eq!(
+                            seq.max_err.to_bits(),
+                            par.max_err.to_bits(),
+                            "{ctx}: max_err bits"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Trace-level companion to the parallel-ticking gate: per-cluster
+/// trace-event hashes are unchanged by the host thread count on
+/// representative staged and tiled points.
+#[test]
+fn parallel_host_ticking_preserves_trace_hashes() {
+    for (name, n, tile) in [("dot", 256usize, 0usize), ("relu", 600, 64)] {
+        let k = kernels::kernel_by_name(name).unwrap();
+        let mut p = Params::new(n, 8).with_clusters(4);
+        if tile > 0 {
+            p = p.with_tile_elems(tile);
+        }
+        let hashes = |threads: usize| {
+            let (mut sys, _) = snitch_sim::system::build_system(
+                k,
+                Variant::SsrFrep,
+                &p.with_sim_threads(threads),
+            )
+            .expect("build");
+            for cl in &mut sys.clusters {
+                cl.set_trace(TraceSink::unbounded());
+            }
+            sys.run(p.max_cycles).expect("run");
+            sys.clusters.iter().map(|c| c.trace.event_hash()).collect::<Vec<_>>()
+        };
+        let seq = hashes(1);
+        assert_eq!(seq.len(), 4, "{name}: one hash per cluster");
+        assert_eq!(seq, hashes(2), "{name}: 2-thread trace hashes");
+        assert_eq!(seq, hashes(4), "{name}: 4-thread trace hashes");
     }
 }
 

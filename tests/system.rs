@@ -15,6 +15,11 @@
 //! machine, multi-tile schedules hide DMA behind compute and match the
 //! full-problem reference, over-TCDM working sets auto-tile, and ragged
 //! shapes (n not divisible by clusters × cores) run end to end.
+//!
+//! PR 10 adds the grouped-hierarchy gate: a 64-cluster System behind
+//! the two-level interconnect (16 groups × 4 clusters, grant-capped L2)
+//! matches the flat machine's values and reports the hierarchy in its
+//! stage summary.
 
 use snitch_sim::cluster::Cluster;
 use snitch_sim::coordinator::{artifacts, ArtifactOptions, Sweep, SweepOptions};
@@ -282,6 +287,38 @@ fn ragged_shapes_run_end_to_end() {
     let r = kernels::run_kernel(dgemm, Variant::SsrFrep, &p).expect("ragged dgemm");
     assert!(r.max_err < 1e-9, "ragged dgemm max_err {}", r.max_err);
     assert!(r.system.unwrap().tiles >= 2, "one tile per cluster at least");
+}
+
+/// PR 10: a 64-cluster grouped System (16 groups of 4 clusters behind
+/// the grant-capped second-level interconnect into shared external
+/// memory) computes the same answers as the flat 64-cluster machine,
+/// populates the hierarchy fields of the stage summary, and the L2
+/// link actually carried traffic within its grant budget.
+#[test]
+fn grouped_hierarchy_64_clusters_matches_reference() {
+    for (name, v, n) in [("dot", Variant::SsrFrep, 4096usize), ("dgemm", Variant::SsrFrep, 32)] {
+        let k = kernels::kernel_by_name(name).unwrap();
+        let p = Params::new(n, 8).with_clusters(64).with_groups(16);
+        let r = system::run_kernel_system(k, v, &p)
+            .unwrap_or_else(|e| panic!("{name} 64cl grouped: {e}"));
+        assert!(r.max_err < 1e-6, "{name}: max_err {}", r.max_err);
+        let s = r.system.expect("stage summary");
+        assert_eq!(s.clusters, 64, "{name}");
+        assert_eq!(s.groups, 16, "{name}: hierarchy summary populated");
+        assert!(s.l2_grants > 0, "{name}: the L2 link carried traffic");
+        assert!(s.l2_grants_per_cycle > 0, "{name}: the grant cap is reported");
+        let sat = s.l2_saturation();
+        assert!(sat > 0.0 && sat <= 1.0, "{name}: L2 saturation {sat}");
+        // The same point flat (no hierarchy): the grouped L2 link
+        // changes timing, never values — and flat runs report no
+        // hierarchy in the summary.
+        let flat = system::run_kernel_system(k, v, &Params::new(n, 8).with_clusters(64))
+            .unwrap_or_else(|e| panic!("{name} 64cl flat: {e}"));
+        assert_eq!(flat.max_err.to_bits(), r.max_err.to_bits(), "{name}: value identity");
+        let fs = flat.system.expect("stage summary");
+        assert_eq!(fs.groups, 0, "{name}: flat runs report no groups");
+        assert_eq!(fs.l2_grants, 0, "{name}: flat runs have no L2 link");
+    }
 }
 
 /// The cluster-scaling artifact renders through the typed evaluation
